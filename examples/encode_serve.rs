@@ -1,0 +1,113 @@
+//! Serving example: start the encoder engine + TCP server, drive it with a
+//! multi-threaded client load generator, and report latency/throughput.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example encode_serve -- \
+//!     [--requests 200] [--clients 4] [--variant sqa]
+//! ```
+//!
+//! This is the paper's "prompt processing / encoder" scenario as a real
+//! deployment: dynamic batching, length-bucket routing, backpressure, and
+//! metrics — with the SQA forward pass doing the compute.
+
+use anyhow::Result;
+use sqa::config::ServeConfig;
+use sqa::coordinator::Engine;
+use sqa::server::{Client, Server};
+use sqa::util::cli::Args;
+use sqa::util::rng::Pcg64;
+use sqa::util::stats::Summary;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+fn main() -> Result<()> {
+    sqa::util::logging::init();
+    let mut args = Args::from_env()?;
+    let n_requests = args.usize("requests", 200)?;
+    let n_clients = args.usize("clients", 4)?;
+    let variant = args.str("variant", "sqa");
+    args.finish()?;
+
+    let rt = sqa::runtime::Runtime::new("artifacts")?;
+    let cfg = ServeConfig {
+        family: "tiny".into(),
+        variant,
+        addr: "127.0.0.1:0".into(), // ephemeral port
+        max_batch: 8,
+        max_wait_ms: 4,
+        workers: 2,
+        queue_capacity: 128,
+    };
+    let engine = Engine::start(&rt, &cfg, None)?;
+    println!(
+        "engine up: buckets {:?}, batch dim {}, {} workers",
+        engine.buckets(),
+        engine.batch_dim,
+        cfg.workers
+    );
+    let server = Server::bind(&cfg.addr, engine)?;
+    let addr = server.local_addr()?.to_string();
+    let (stop, server_thread) = server.serve_background();
+
+    // ---- load generation ---------------------------------------------------
+    let vocab = rt.manifest().family("tiny")?.dims.vocab as u64;
+    let done = Arc::new(AtomicU64::new(0));
+    let shed = Arc::new(AtomicU64::new(0));
+    let t0 = std::time::Instant::now();
+    let mut handles = Vec::new();
+    let per_client = n_requests / n_clients.max(1);
+    for c in 0..n_clients {
+        let addr = addr.clone();
+        let done = Arc::clone(&done);
+        let shed = Arc::clone(&shed);
+        handles.push(std::thread::spawn(move || -> Result<Vec<f64>> {
+            let mut client = Client::connect(&addr)?;
+            let mut rng = Pcg64::new_stream(99, c as u64);
+            let mut lat = Vec::new();
+            for _ in 0..per_client {
+                let len = rng.range_usize(8, 250);
+                let tokens: Vec<u32> =
+                    (0..len).map(|_| 4 + rng.below(vocab - 4) as u32).collect();
+                let t = std::time::Instant::now();
+                let resp = client.encode_tokens(&tokens)?;
+                if resp.get("ok").and_then(|o| o.as_bool()) == Some(true) {
+                    lat.push(t.elapsed().as_secs_f64() * 1e3);
+                    done.fetch_add(1, Ordering::Relaxed);
+                } else {
+                    shed.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            Ok(lat)
+        }));
+    }
+    let mut all = Summary::new();
+    for h in handles {
+        for l in h.join().expect("client thread")? {
+            all.add(l);
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let ok = done.load(Ordering::Relaxed);
+    println!(
+        "client latency: p50 {:.1}ms p99 {:.1}ms mean {:.1}ms (n={})",
+        all.p50(),
+        all.p99(),
+        all.mean(),
+        all.len()
+    );
+
+    // Pull authoritative latency stats from the server's own metrics.
+    let mut client = Client::connect(&addr)?;
+    let metrics = client.metrics()?;
+    println!("\nserver metrics: {}", metrics.get("metrics").unwrap());
+    println!(
+        "\nclient side: {ok} ok / {} shed in {wall:.2}s -> {:.1} req/s",
+        shed.load(Ordering::Relaxed),
+        ok as f64 / wall
+    );
+
+    stop.store(true, Ordering::Relaxed);
+    let _ = server_thread.join();
+    anyhow::ensure!(ok > 0, "no successful requests");
+    Ok(())
+}

@@ -1,0 +1,45 @@
+//! Long-context forward sweep — a compact, runnable slice of Table 3.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example long_context_sweep -- \
+//!     [--variants xsqa,sqa,mha] [--max-seq 4096]
+//! ```
+//!
+//! Measures fwd time/step for the chosen variants across the compiled
+//! sequence buckets, prints the paper-style table plus the measured-vs-
+//! predicted speed-up at the longest sequence. The headline check: SQA
+//! variants beat MHA by ≈ H/Hq while MQA/GQA sit at ≈1x (they do not
+//! reduce attention FLOPs — the paper's central observation).
+
+use anyhow::Result;
+use sqa::bench_harness;
+use sqa::util::cli::Args;
+
+fn main() -> Result<()> {
+    sqa::util::logging::init();
+    let mut args = Args::from_env()?;
+    let variants = args.list("variants", &["xsqa", "sqa", "ssqa", "mqa", "gqa", "mha"]);
+    let max_seq = args.usize("max-seq", 4096)?;
+    args.finish()?;
+
+    let rt = sqa::runtime::Runtime::new("artifacts")?;
+    let refs: Vec<&str> = variants.iter().map(|s| s.as_str()).collect();
+    let (table, cells) = bench_harness::table3(&rt, &refs, max_seq, true)?;
+    println!("\n{table}");
+
+    // Measured vs predicted at the longest common sequence.
+    let top = cells.iter().map(|c| c.seq).max().unwrap_or(0);
+    if let Some(mha) = cells.iter().find(|c| c.variant == "mha" && c.seq == top) {
+        println!("at seq {top}: measured (predicted) speed-up vs MHA");
+        for v in &refs {
+            if let Some(c) = cells.iter().find(|c| &c.variant == v && c.seq == top) {
+                println!(
+                    "  {v:6} {:.2}x ({:.2}x)",
+                    mha.secs / c.secs,
+                    1.0 / c.predicted_vs_mha
+                );
+            }
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,59 @@
+//! Quickstart: load an AOT artifact, run a forward pass, inspect the model.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+//!
+//! Demonstrates the minimal public-API path: manifest → runtime → params →
+//! forward execution → logits, plus the analytic FLOPs model for the same
+//! configuration.
+
+use anyhow::{Context, Result};
+use sqa::flops;
+use sqa::runtime::{Kind, ModelState, Runtime};
+
+fn main() -> Result<()> {
+    sqa::util::logging::init();
+    let rt = Runtime::new("artifacts")?;
+
+    let (family, variant) = ("tiny", "sqa");
+    let fam = rt.manifest().family(family)?.clone();
+    let var = rt.manifest().variant(family, variant)?.clone();
+    println!(
+        "model {family}/{variant}: d_model={} layers={} Hq={} Hkv={} ({} params)",
+        fam.dims.d_model, fam.dims.n_layers, var.cfg.hq, var.cfg.hkv, var.n_params
+    );
+
+    // 1. Initialize parameters on device from a seed (the init artifact).
+    let state = ModelState::init(&rt, family, variant, 42)?;
+
+    // 2. Pick a fwd artifact (batch 8, seq 128) and run a batch of tokens.
+    let artifact = rt
+        .manifest()
+        .find(family, variant, Kind::Fwd, Some(128), None)?;
+    let exe = rt.compile_artifact(artifact)?;
+    let (batch, seq) = (
+        artifact.batch.context("batch")?,
+        artifact.seq.context("seq")?,
+    );
+    let tokens: Vec<i32> = (0..batch * seq).map(|i| (i % fam.dims.vocab) as i32).collect();
+    let token_buf = rt.buf_i32(&tokens, &[batch, seq])?;
+    let logits = rt.execute1(&exe, &[&state.params, &token_buf])?;
+    let host = rt.to_vec_f32(&logits)?;
+    println!(
+        "forward OK: logits [{batch}, {seq}, {}] -> {} floats, first row max {:.3}",
+        fam.dims.vocab,
+        host.len(),
+        host[..fam.dims.vocab].iter().cloned().fold(f32::MIN, f32::max)
+    );
+
+    // 3. The paper's complexity model for this variant (§3.2.1).
+    let b = flops::forward_flops(&fam.dims, &var.cfg, batch as u64, seq as u64);
+    println!(
+        "analytic fwd FLOPs: {:.2} G (attention core {:.1}%), eq.(9) speed-up vs MHA: {:.1}x",
+        b.total() as f64 / 1e9,
+        100.0 * b.attn_fraction(),
+        flops::theoretical_speedup(fam.dims.h_total, var.cfg.hq),
+    );
+    Ok(())
+}

@@ -1,0 +1,379 @@
+"""AOT pipeline: lower every (family, variant, kind) to HLO text + manifest.
+
+Build-time only — Python never runs on the Rust request path. For each model
+family and attention variant this emits:
+
+  <family>_<variant>[_<impl>]_init.hlo.txt
+      (seed i32[]) -> flat_params f32[P]
+  <family>_<variant>[_<impl>]_train.hlo.txt
+      (state f32[3P+2], step i32[], lr f32[], tokens i32[B,S],
+       targets i32[B,S]) -> state' f32[3P+2]
+      where state = concat(params, adam_m, adam_v, [loss, acc])
+  <family>_<variant>[_<impl>]_eval.hlo.txt
+      (flat_p f32[P], tokens, targets) -> f32[2]  (loss, acc)
+  <family>_<variant>[_<impl>]_fwd_b<B>_s<S>.hlo.txt
+      (flat_p, tokens) -> logits f32[B,S,V]
+
+**Every artifact takes and returns plain arrays — never tuples.** The PJRT
+C-API wrapper in this image flattens tuple *parameters* into per-leaf
+buffers but returns tuple *results* as one opaque tuple buffer, so a tuple
+output could never be fed back as an input. Fusing the whole AdamW state
+(params, moments, last-step loss/acc) into a single f32 vector keeps
+training state fully device-resident: Rust feeds the output buffer of step
+N directly into step N+1 and reads back only a 2-float metrics slice (via
+an XlaBuilder-built slicer, see rust/src/runtime/client.rs).
+`manifest.json` records each parameter's (name, shape, offset) within the
+flat params vector.
+
+Interchange format is **HLO text** (not serialized HloModuleProto): jax ≥0.5
+emits protos with 64-bit instruction ids that xla_extension 0.5.1 rejects;
+the text parser reassigns ids and round-trips cleanly.
+
+Incremental: existing .hlo.txt files are skipped unless --force; the
+manifest is always rewritten (derived, fast, must stay in sync).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import configs
+from .model import ModelConfig, OptConfig, forward, init_params, loss_and_acc, train_step
+
+jax.config.update("jax_platform_name", "cpu")
+
+# Training batch geometry per family (CPU-scaled; see DESIGN.md §3).
+TRAIN_GEOM = {  # family -> (batch, seq)
+    "tiny": (8, 128),
+    "dense_sm": (4, 256),
+    "moe_sm": (8, 256),
+}
+FWD_GEOM = {  # family -> (batch, [seqs])
+    "tiny": (8, configs.TINY_SEQS),
+    "bench": (1, configs.BENCH_SEQS),
+}
+# Pallas-kernel-impl artifacts (the kernel path must compose end-to-end).
+PALLAS_FWD = [("bench", "sqa", 1024), ("bench", "mha", 1024)]
+
+
+def dtype_str(dt) -> str:
+    return {"float32": "f32", "int32": "i32", "uint32": "u32"}[jnp.dtype(dt).name]
+
+
+def to_hlo_text(lowered) -> str:
+    # return_tuple=False: every artifact returns exactly one array, so the
+    # HLO root is that array — its output buffer feeds the next execution
+    # directly (PJRT tuple outputs are opaque to this wrapper; see module
+    # docstring).
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=False
+    )
+    return comp.as_hlo_text()
+
+
+def _prod(shape):
+    r = 1
+    for s in shape:
+        r *= s
+    return r
+
+
+class Packer:
+    """Pack/unpack a parameter pytree to/from one flat f32 vector."""
+
+    def __init__(self, cfg: ModelConfig):
+        shapes = jax.eval_shape(
+            lambda k: init_params(cfg, k), jax.ShapeDtypeStruct((2,), jnp.uint32)
+        )
+        self.leaves, self.treedef = jax.tree_util.tree_flatten(shapes)
+        named = jax.tree_util.tree_flatten_with_path(shapes)[0]
+        self.specs = []
+        offset = 0
+        for path, leaf in named:
+            name = (
+                jax.tree_util.keystr(path)
+                .replace("'", "")
+                .strip("[]")
+                .replace("][", ".")
+            )
+            size = _prod(leaf.shape)
+            self.specs.append(
+                {
+                    "name": name,
+                    "shape": list(leaf.shape),
+                    "dtype": dtype_str(leaf.dtype),
+                    "offset": offset,
+                }
+            )
+            offset += size
+        self.total = offset
+
+    def pack(self, tree):
+        return jnp.concatenate(
+            [jnp.ravel(x) for x in jax.tree_util.tree_leaves(tree)]
+        )
+
+    def unpack(self, vec):
+        parts = []
+        for spec, leaf in zip(self.specs, self.leaves):
+            o, n = spec["offset"], _prod(spec["shape"])
+            parts.append(vec[o : o + n].reshape(leaf.shape))
+        return jax.tree_util.tree_unflatten(self.treedef, parts)
+
+
+def sds(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+class Emitter:
+    def __init__(self, out_dir: str, force: bool):
+        self.out_dir = out_dir
+        self.force = force
+        self.artifacts = []
+        self.families: dict[str, dict] = {}
+
+    def family_entry(self, cfg: ModelConfig, variant: str, packer: Packer):
+        fam = self.families.setdefault(
+            cfg.name,
+            {
+                "vocab": cfg.vocab,
+                "d_model": cfg.d_model,
+                "n_layers": cfg.n_layers,
+                "h_total": cfg.h_total,
+                "d_head": cfg.d_head,
+                "d_ff": cfg.ff_dim(),
+                "n_experts": cfg.n_experts,
+                "moe_top_k": cfg.moe_top_k,
+                "causal": cfg.causal,
+                "variants": {},
+            },
+        )
+        if variant not in fam["variants"]:
+            fam["variants"][variant] = {
+                "hq": cfg.spec.hq,
+                "hkv": cfg.spec.hkv,
+                "window": cfg.spec.window,
+                "n_params": packer.total,
+                "params": packer.specs,
+            }
+        return fam
+
+    def emit(self, cfg, variant, kind, fn, in_specs, packer, entry_extra):
+        impl_tag = f"_{cfg.attn_impl}" if cfg.attn_impl != "xla" else ""
+        stem = f"{cfg.name}_{variant}{impl_tag}_{kind}"
+        if kind == "fwd":
+            stem += f"_b{entry_extra['batch']}_s{entry_extra['seq']}"
+        path = os.path.join(self.out_dir, stem + ".hlo.txt")
+        self.family_entry(cfg, variant, packer)
+
+        t0 = time.time()
+        lowered = jax.jit(fn).lower(*in_specs)
+        out_shapes = [
+            {"shape": list(o.shape), "dtype": dtype_str(o.dtype)}
+            for o in jax.tree_util.tree_leaves(lowered.out_info)
+        ]
+        if self.force or not os.path.exists(path):
+            text = to_hlo_text(lowered)
+            with open(path, "w") as f:
+                f.write(text)
+            status = f"wrote {len(text) // 1024}KiB"
+        else:
+            status = "kept"
+        self.artifacts.append(
+            {
+                "family": cfg.name,
+                "variant": variant,
+                "impl": cfg.attn_impl,
+                "kind": kind,
+                "path": os.path.basename(path),
+                "inputs": [
+                    {"shape": list(s.shape), "dtype": dtype_str(s.dtype)}
+                    for s in in_specs
+                ],
+                "outputs": out_shapes,
+                **entry_extra,
+            }
+        )
+        print(f"  [{time.time() - t0:6.1f}s] {stem}: {status}", flush=True)
+
+
+def emit_model(em, cfg, variant, kinds, train_geom=None, fwd_geom=None):
+    packer = Packer(cfg)
+    pvec = sds((packer.total,))
+    opt = OptConfig()
+
+    p = packer.total
+    state_len = 3 * p + 2
+    svec = sds((state_len,))
+
+    if "init" in kinds:
+
+        def init_fn(seed):
+            return packer.pack(init_params(cfg, jax.random.PRNGKey(seed)))
+
+        em.emit(cfg, variant, "init", init_fn, [sds((), jnp.int32)], packer, {})
+
+    if "train" in kinds:
+        b, s = train_geom
+
+        def train_fn(state, step, lr, tokens, targets):
+            p2, m2, v2, loss, acc = train_step(
+                packer.unpack(state[0:p]),
+                packer.unpack(state[p : 2 * p]),
+                packer.unpack(state[2 * p : 3 * p]),
+                step,
+                lr,
+                cfg,
+                opt,
+                tokens,
+                targets,
+            )
+            return jnp.concatenate(
+                [
+                    packer.pack(p2),
+                    packer.pack(m2),
+                    packer.pack(v2),
+                    jnp.stack([loss, acc]),
+                ]
+            )
+
+        in_specs = [
+            svec,
+            sds((), jnp.int32),
+            sds((), jnp.float32),
+            sds((b, s), jnp.int32),
+            sds((b, s), jnp.int32),
+        ]
+        em.emit(cfg, variant, "train", train_fn, in_specs, packer, {"batch": b, "seq": s})
+
+    if "eval" in kinds:
+        b, s = train_geom
+
+        def eval_fn(fp, tokens, targets):
+            loss, acc = loss_and_acc(packer.unpack(fp), cfg, tokens, targets)
+            return jnp.stack([loss, acc])
+
+        in_specs = [pvec, sds((b, s), jnp.int32), sds((b, s), jnp.int32)]
+        em.emit(cfg, variant, "eval", eval_fn, in_specs, packer, {"batch": b, "seq": s})
+
+    if "fwd" in kinds:
+        b, seqs = fwd_geom
+        for s in seqs:
+
+            def fwd_fn(fp, tokens):
+                return forward(packer.unpack(fp), cfg, tokens)
+
+            in_specs = [pvec, sds((b, s), jnp.int32)]
+            em.emit(cfg, variant, "fwd", fwd_fn, in_specs, packer, {"batch": b, "seq": s})
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument(
+        "--only",
+        default="",
+        help="comma-separated family filter (tiny,dense_sm,moe_sm,bench)",
+    )
+    ap.add_argument(
+        "--max-seq", type=int, default=0, help="cap fwd sequence buckets (0 = all)"
+    )
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+    os.makedirs(args.out_dir, exist_ok=True)
+    em = Emitter(args.out_dir, args.force)
+
+    def want(fam):
+        return only is None or fam in only
+
+    t0 = time.time()
+
+    if want("tiny"):
+        print("family tiny", flush=True)
+        for variant in ["mha", "sqa", "ssqa", "xsqa"]:
+            emit_model(
+                em,
+                configs.tiny(variant),
+                variant,
+                {"init", "train", "eval", "fwd"},
+                train_geom=TRAIN_GEOM["tiny"],
+                fwd_geom=FWD_GEOM["tiny"],
+            )
+        # The Pallas-kernel path must compose through fwd+bwd (tiny scale).
+        emit_model(
+            em,
+            configs.tiny("sqa", attn_impl="pallas"),
+            "sqa",
+            {"train", "init"},
+            train_geom=(2, 128),
+        )
+
+    if want("dense_sm"):
+        print("family dense_sm (Table 1)", flush=True)
+        for variant in configs.TABLE1_VARIANTS:
+            emit_model(
+                em,
+                configs.dense_sm(variant),
+                variant,
+                {"init", "train", "eval"},
+                train_geom=TRAIN_GEOM["dense_sm"],
+            )
+
+    if want("moe_sm"):
+        print("family moe_sm (Table 2)", flush=True)
+        for variant in configs.TABLE2_VARIANTS:
+            emit_model(
+                em,
+                configs.moe_sm(variant),
+                variant,
+                {"init", "train", "eval"},
+                train_geom=TRAIN_GEOM["moe_sm"],
+            )
+
+    if want("bench"):
+        print("family bench (Table 3)", flush=True)
+        b, seqs = FWD_GEOM["bench"]
+        if args.max_seq:
+            seqs = [s for s in seqs if s <= args.max_seq]
+        for variant in configs.TABLE3_VARIANTS:
+            emit_model(
+                em,
+                configs.bench(variant),
+                variant,
+                {"init", "fwd"},
+                fwd_geom=(b, seqs),
+            )
+        for _, variant, seq in PALLAS_FWD:
+            emit_model(
+                em,
+                configs.bench(variant, attn_impl="pallas"),
+                variant,
+                {"fwd"},
+                fwd_geom=(b, [seq]),
+            )
+
+    manifest = {
+        "version": 2,
+        "generated_by": "compile.aot",
+        "families": em.families,
+        "artifacts": em.artifacts,
+    }
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(
+        f"done: {len(em.artifacts)} artifacts in {time.time() - t0:.0f}s -> {args.out_dir}",
+        flush=True,
+    )
+
+
+if __name__ == "__main__":
+    main()

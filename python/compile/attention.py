@@ -1,0 +1,269 @@
+"""L2 attention layers: the paper's variant zoo over the L1 kernel.
+
+Two interchangeable implementations of the attention core:
+
+* ``impl="pallas"`` — the L1 tiled kernel (`kernels.sqa_kernel`). Forward is
+  the Pallas kernel; backward is a ``custom_vjp`` that differentiates the
+  pure-jnp oracle (mathematically identical, XLA-fused). This mirrors how
+  FlashAttention pairs a custom forward with an analytic backward.
+* ``impl="xla"`` — the pure-jnp oracle end to end, letting XLA fuse the
+  whole attention. On CPU this parallelizes across cores (the Pallas
+  interpreter's grid is sequential), so compute-bound *benchmarks* default
+  to it while the kernel path proves the TPU-shaped lowering composes.
+
+Either way the SQA structure is identical: Hq query heads, Hkv key/value
+heads, zero-copy head grouping, optional causal/sliding-window masks.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.ref import attention_ref
+from .kernels.sqa_kernel import sqa_attention
+
+
+# ---------------------------------------------------------------------------
+# Variant definitions (paper §3.3 + Table 1/2 configurations)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class AttentionSpec:
+    """One point in the (Hq, Hkv) design space of the paper."""
+
+    name: str
+    hq: int
+    hkv: int
+    window: int | None = None  # SWA / SW-SQA sliding window
+
+    def __post_init__(self):
+        if self.hq % self.hkv != 0:
+            raise ValueError(f"{self.name}: Hq={self.hq} not a multiple of Hkv={self.hkv}")
+
+    def flops_factor(self, h_total: int) -> float:
+        """Attention-core FLOPs relative to the MHA baseline (= Hq / H)."""
+        return self.hq / h_total
+
+    def kv_cache_factor(self, h_total: int) -> float:
+        """KV-cache bytes relative to the MHA baseline (= Hkv / H)."""
+        return self.hkv / h_total
+
+
+def variant_zoo(h_total: int, window: int = 128) -> dict[str, AttentionSpec]:
+    """The named variants of the paper for a given MHA head budget H.
+
+    Head counts follow Table 1 (H=16) / Table 2 (H=8) scaled by H:
+    GQA uses H/4 kv heads (min 1), SQA = (H/2, H/4), sSQA = (H/2, H/2),
+    xSQA = (H/4, H/4), xSMQA = (H/4, 1), SWA = MHA heads + window.
+    """
+    q = lambda f: max(h_total // f, 1)
+    zoo = {
+        "mha": AttentionSpec("mha", h_total, h_total),
+        "gqa": AttentionSpec("gqa", h_total, q(4)),
+        "mqa": AttentionSpec("mqa", h_total, 1),
+        "sqa": AttentionSpec("sqa", q(2), q(4)),
+        "ssqa": AttentionSpec("ssqa", q(2), q(2)),
+        "xsqa": AttentionSpec("xsqa", q(4), q(4)),
+        "xsmqa": AttentionSpec("xsmqa", q(4), 1),
+        "swa": AttentionSpec("swa", h_total, h_total, window=window),
+        "swsqa": AttentionSpec("swsqa", q(2), q(4), window=window),
+    }
+    # §6 future-work variants — analysis/extension points of the paper.
+    # Light SQA: modest 25% query reduction (Hq = 3H/4), aiming for a new
+    # sweet spot on the Pareto frontier. Requires 4 | H.
+    if h_total % 4 == 0 and (3 * h_total // 4) % q(4) == 0:
+        zoo["lsqa"] = AttentionSpec("lsqa", 3 * h_total // 4, q(4))
+    return zoo
+
+
+# ---------------------------------------------------------------------------
+# Differentiable kernel wrapper
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def _pallas_attention(q, k, v, causal, window):
+    return sqa_attention(q, k, v, causal=causal, window=window)
+
+
+def _pallas_attention_fwd(q, k, v, causal, window):
+    return sqa_attention(q, k, v, causal=causal, window=window), (q, k, v)
+
+
+def _pallas_attention_bwd(causal, window, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: attention_ref(q_, k_, v_, causal=causal, window=window),
+        q,
+        k,
+        v,
+    )
+    return vjp(g)
+
+
+_pallas_attention.defvjp(_pallas_attention_fwd, _pallas_attention_bwd)
+
+
+def grouped_attention(q, k, v, *, causal: bool = False):
+    """Full attention without materializing repeated K/V heads.
+
+    `repeat_kv` broadcasts K/V `G = Hq/Hkv` times before the einsum — on
+    CPU that's a G-fold memory blow-up that made MQA *slower* than MHA
+    (EXPERIMENTS.md §Perf iter 2). Grouping the query heads as
+    `[b, Hkv, G, s, d]` expresses the same math with K/V read in place.
+    """
+    b, hq, s, d = q.shape
+    _, hkv, sk, _ = k.shape
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, s, d)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, dtype=q.dtype))
+    scores = jnp.einsum("bkgqd,bkKd->bkgqK", qg, k) * scale
+    if causal:
+        qi = jnp.arange(s)[:, None]
+        kj = jnp.arange(sk)[None, :]
+        mask = (qi + (sk - s)) >= kj
+        scores = jnp.where(mask[None, None, None], scores, jnp.finfo(scores.dtype).min)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqK,bkKd->bkgqd", probs, v)
+    return out.reshape(b, hq, s, d)
+
+
+def windowed_attention(q, k, v, *, window: int, causal: bool = True):
+    """Block-local sliding-window attention in O(N·window) FLOPs.
+
+    The oracle masks a dense N x N score matrix, which can never beat full
+    attention in wall-clock — but the paper's SWA rows *do* win at long N
+    because real implementations restrict computation to the band. This is
+    the standard two-block trick: pad S to a multiple of `window`, let each
+    query block attend to (its own + the previous) key block, and mask to
+    the exact band `0 <= i - j < window`. Exactly equals the oracle's
+    causal sliding window (SWA and SW-SQA, §2.5/§3.4).
+    """
+    b, hq, s, d = q.shape
+    _, hkv, _, _ = k.shape
+    g = hq // hkv
+    w = window
+    pad = (-s) % w
+    sp = s + pad
+    nb = sp // w
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    qb = qp.reshape(b, hkv, g, nb, w, d)
+    kb = kp.reshape(b, hkv, nb, w, d)
+    vb = vp.reshape(b, hkv, nb, w, d)
+    # Previous block (zeros before block 0), concat on the key axis: [.., 2w, d]
+    prev = lambda x: jnp.concatenate([jnp.zeros_like(x[:, :, :1]), x[:, :, :-1]], axis=2)
+    k2 = jnp.concatenate([prev(kb), kb], axis=3)
+    v2 = jnp.concatenate([prev(vb), vb], axis=3)
+
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, dtype=q.dtype))
+    scores = jnp.einsum("bkgnad,bkncd->bkgnac", qb, k2) * scale  # [..,nb,w,2w]
+
+    # Band mask in global coordinates: qpos = n*w + a, kpos = (n-1)*w + c.
+    blk = jnp.arange(nb)[:, None, None]
+    a = jnp.arange(w)[None, :, None]
+    c = jnp.arange(2 * w)[None, None, :]
+    qpos = blk * w + a
+    kpos = (blk - 1) * w + c
+    rel = qpos - kpos
+    mask = (rel >= 0) & (rel < w) & (kpos >= 0) & (kpos < s) & (qpos < s)
+    neg = jnp.finfo(scores.dtype).min
+    scores = jnp.where(mask[None, None, None], scores, neg)
+    # Stable softmax that tolerates fully-masked (padding) rows.
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.exp(scores - jnp.maximum(m, neg / 2))
+    p = jnp.where(mask[None, None, None], p, 0.0)
+    denom = jnp.sum(p, axis=-1, keepdims=True)
+    p = p / jnp.maximum(denom, 1e-30)
+    out = jnp.einsum("bkgnac,bkncd->bkgnad", p, v2)
+    out = out.reshape(b, hq, sp, d)[:, :, :s, :]
+    _ = causal  # the band is inherently causal; flag kept for API symmetry
+    return out
+
+
+def attention_core(q, k, v, *, causal: bool, window: int | None, impl: str):
+    """Dispatch to the selected attention-core implementation."""
+    if impl == "pallas":
+        return _pallas_attention(q, k, v, causal, window)
+    if impl == "xla":
+        if window is not None:
+            return windowed_attention(q, k, v, window=window, causal=causal)
+        return grouped_attention(q, k, v, causal=causal)
+    if impl == "ref":
+        return attention_ref(q, k, v, causal=causal, window=window)
+    raise ValueError(f"unknown attention impl {impl!r}")
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_tables(seq: int, d_head: int, base: float = 10_000.0):
+    """cos/sin tables, shape [seq, d_head//2] each."""
+    half = d_head // 2
+    inv_freq = 1.0 / (base ** (jnp.arange(half, dtype=jnp.float32) / half))
+    t = jnp.arange(seq, dtype=jnp.float32)
+    ang = jnp.outer(t, inv_freq)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """x: [batch, heads, seq, d_head]; rotate pairs (x_even, x_odd)."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    c = cos[None, None, :, :]
+    s = sin[None, None, :, :]
+    return jnp.concatenate([x1 * c - x2 * s, x1 * s + x2 * c], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Full layer
+# ---------------------------------------------------------------------------
+
+
+def init_attention_params(key, d_model: int, d_head: int, spec: AttentionSpec):
+    """Xavier-ish init for the four projections of eqs. (4)-(6), (8)."""
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    dq = spec.hq * d_head
+    dkv = spec.hkv * d_head
+
+    def init(k, fan_in, fan_out):
+        std = (2.0 / (fan_in + fan_out)) ** 0.5
+        return std * jax.random.normal(k, (fan_in, fan_out), jnp.float32)
+
+    return {
+        "wq": init(kq, d_model, dq),
+        "wk": init(kk, d_model, dkv),
+        "wv": init(kv, d_model, dkv),
+        "wo": init(ko, dq, d_model),
+    }
+
+
+def attention_layer(
+    params,
+    x: jnp.ndarray,
+    spec: AttentionSpec,
+    d_head: int,
+    *,
+    causal: bool = True,
+    impl: str = "xla",
+    rope: tuple[jnp.ndarray, jnp.ndarray] | None = None,
+) -> jnp.ndarray:
+    """Apply one SQA-family layer to x: [batch, seq, d_model]."""
+    b, s, _ = x.shape
+    q = (x @ params["wq"]).reshape(b, s, spec.hq, d_head).transpose(0, 2, 1, 3)
+    k = (x @ params["wk"]).reshape(b, s, spec.hkv, d_head).transpose(0, 2, 1, 3)
+    v = (x @ params["wv"]).reshape(b, s, spec.hkv, d_head).transpose(0, 2, 1, 3)
+    if rope is not None:
+        cos, sin = rope
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    o = attention_core(q, k, v, causal=causal, window=spec.window, impl=impl)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, spec.hq * d_head)
+    return o @ params["wo"]

@@ -1,0 +1,110 @@
+"""Model-zoo presets: the paper's experimental configurations, CPU-scaled.
+
+Three families (see DESIGN.md §3 for the scaling substitutions):
+
+* ``tiny``    — integration/e2e driver model (fast on CPU, both attn impls).
+* ``dense_sm``— Table 1 stand-in: the paper's dense architecture
+                (hidden 256, 8 layers, H=16) with CPU-scaled context.
+* ``moe_sm``  — Table 2 stand-in: MoE architecture (hidden 128, 6 layers,
+                H=8, 4 experts).
+* ``bench``   — Table 3 stand-in: dense blocks used for the long-sequence
+                forward-pass sweep.
+
+Head counts per variant follow the paper exactly (Tables 1-3); only context
+length / training-step budget are scaled for the XLA-CPU substrate.
+"""
+
+from __future__ import annotations
+
+from dataclasses import replace
+
+from .attention import AttentionSpec, variant_zoo
+from .model import ModelConfig
+
+SWA_WINDOW = 128
+
+# Table 1 variant set (H = 16).
+TABLE1_VARIANTS = ["mha", "gqa", "mqa", "sqa", "ssqa", "xsqa", "xsmqa"]
+# Table 2 variant set (H = 8).
+TABLE2_VARIANTS = ["gqa", "mqa", "sqa", "ssqa", "xsqa"]
+# Table 3 variant set (column order of the paper's table).
+TABLE3_VARIANTS = ["xsqa", "sqa", "ssqa", "swa", "mqa", "gqa", "mha"]
+
+# Sequence-length buckets for fwd artifacts (Table 3 sweep + serving).
+BENCH_SEQS = [512, 1024, 2048, 4096, 8192]
+TINY_SEQS = [64, 128, 256]
+
+
+def _zoo(h_total: int) -> dict[str, AttentionSpec]:
+    return variant_zoo(h_total, window=SWA_WINDOW)
+
+
+def tiny(variant: str = "sqa", attn_impl: str = "xla") -> ModelConfig:
+    """~1.5M params; the e2e driver + integration-test model."""
+    return ModelConfig(
+        name="tiny",
+        vocab=2048,
+        d_model=128,
+        n_layers=2,
+        h_total=8,
+        spec=_zoo(8)[variant],
+        attn_impl=attn_impl,
+    )
+
+
+def dense_sm(variant: str = "sqa", attn_impl: str = "xla") -> ModelConfig:
+    """Table 1 architecture: hidden 256, 8 layers, H=16 (~7M params tied)."""
+    return ModelConfig(
+        name="dense_sm",
+        vocab=4096,
+        d_model=256,
+        n_layers=8,
+        h_total=16,
+        spec=_zoo(16)[variant],
+        attn_impl=attn_impl,
+    )
+
+
+def moe_sm(variant: str = "gqa", attn_impl: str = "xla") -> ModelConfig:
+    """Table 2 architecture: hidden 128, 6 layers, H=8, 4 experts, top-1."""
+    return ModelConfig(
+        name="moe_sm",
+        vocab=2048,
+        d_model=128,
+        n_layers=6,
+        h_total=8,
+        spec=_zoo(8)[variant],
+        attn_impl=attn_impl,
+        n_experts=4,
+        moe_top_k=1,
+    )
+
+
+def bench(variant: str = "mha", attn_impl: str = "xla") -> ModelConfig:
+    """Table 3 forward-sweep model: dense blocks, H=16, CPU-scaled depth."""
+    return ModelConfig(
+        name="bench",
+        vocab=1024,
+        d_model=256,
+        n_layers=4,
+        h_total=16,
+        spec=_zoo(16)[variant],
+        attn_impl=attn_impl,
+    )
+
+
+FAMILIES = {
+    "tiny": tiny,
+    "dense_sm": dense_sm,
+    "moe_sm": moe_sm,
+    "bench": bench,
+}
+
+
+def get(family: str, variant: str, attn_impl: str = "xla") -> ModelConfig:
+    cfg = FAMILIES[family](variant=variant, attn_impl=attn_impl)
+    return cfg
+
+
+def with_impl(cfg: ModelConfig, attn_impl: str) -> ModelConfig:
+    return replace(cfg, attn_impl=attn_impl)

@@ -1,0 +1,117 @@
+"""Pure-jnp reference attention — the correctness oracle for the Pallas kernels.
+
+Implements the unified attention family of the SQA paper (§3.2): the input
+is projected into ``Hq`` query heads and ``Hkv`` key/value heads; K/V heads
+are repeated ``G = Hq // Hkv`` times (eq. 7's ``K'``/``V'``) and scaled
+dot-product attention runs over the ``Hq`` heads. Every named variant
+(MHA, GQA, MQA, SQA, sSQA, xSQA, xSMQA) is a point in (Hq, Hkv) space;
+sliding-window attention (SWA / SW-SQA) adds a banded mask.
+
+This file must stay dependency-light and obviously-correct: it is the
+oracle that both the Pallas kernel (pytest) and the Rust native
+implementation (golden files) are validated against.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def repeat_kv(x: jnp.ndarray, n_rep: int) -> jnp.ndarray:
+    """Repeat K/V heads along the head axis (GQA-style broadcast).
+
+    x: [batch, Hkv, seq, d_head] -> [batch, Hkv * n_rep, seq, d_head]
+
+    Head ``h`` of the output reads from input head ``h // n_rep``.
+    """
+    if n_rep == 1:
+        return x
+    b, hkv, s, d = x.shape
+    x = jnp.broadcast_to(x[:, :, None, :, :], (b, hkv, n_rep, s, d))
+    return x.reshape(b, hkv * n_rep, s, d)
+
+
+def attention_ref(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = False,
+    window: int | None = None,
+) -> jnp.ndarray:
+    """Reference scaled-dot-product attention with K/V head repetition.
+
+    q: [batch, Hq,  Sq, d_head]
+    k: [batch, Hkv, Sk, d_head]
+    v: [batch, Hkv, Sk, d_head]
+    window: if set, token i attends only to j with i - window < j <= i
+        (causal sliding window, the SWA/SW-SQA pattern of §2.5/§3.4).
+    returns: [batch, Hq, Sq, d_head]
+    """
+    b, hq, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    assert hq % hkv == 0, f"Hq={hq} must be a multiple of Hkv={hkv}"
+    k = repeat_kv(k, hq // hkv)
+    v = repeat_kv(v, hq // hkv)
+
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, dtype=q.dtype))
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+
+    mask = None
+    qi = jnp.arange(sq)[:, None]
+    kj = jnp.arange(sk)[None, :]
+    if causal or window is not None:
+        # When Sq != Sk align the last query with the last key (decode-style).
+        offset = sk - sq
+        rel = (qi + offset) - kj  # >= 0 means key is at/before query
+        if causal:
+            mask = rel >= 0
+        if window is not None:
+            w = (rel >= 0) & (rel < window)
+            mask = w if mask is None else (mask & w)
+    if mask is not None:
+        scores = jnp.where(mask[None, None, :, :], scores, jnp.finfo(scores.dtype).min)
+
+    probs = jnp.exp(scores - jnp.max(scores, axis=-1, keepdims=True))
+    probs = probs / jnp.sum(probs, axis=-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+
+
+def sqa_layer_ref(
+    x: jnp.ndarray,
+    wq: jnp.ndarray,
+    wk: jnp.ndarray,
+    wv: jnp.ndarray,
+    wo: jnp.ndarray,
+    hq: int,
+    hkv: int,
+    *,
+    causal: bool = False,
+    window: int | None = None,
+) -> jnp.ndarray:
+    """Full SQA layer (paper eqs. 4-8): project, attend over Hq heads, merge.
+
+    x:  [batch, seq, d_model]
+    wq: [d_model, hq * d_head]     wk/wv: [d_model, hkv * d_head]
+    wo: [hq * d_head, d_model]
+    """
+    b, s, _ = x.shape
+    dh = wq.shape[1] // hq
+    q = (x @ wq).reshape(b, s, hq, dh).transpose(0, 2, 1, 3)
+    k = (x @ wk).reshape(b, s, hkv, dh).transpose(0, 2, 1, 3)
+    v = (x @ wv).reshape(b, s, hkv, dh).transpose(0, 2, 1, 3)
+    o = attention_ref(q, k, v, causal=causal, window=window)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, hq * dh)
+    return o @ wo
+
+
+def attention_flops(
+    batch: int, hq: int, sq: int, sk: int, d_head: int, window: int | None = None
+) -> int:
+    """Analytic FLOPs of the attention core (scores + aggregation), §3.2.1.
+
+    Two matmuls of [Sq, d] x [d, Sk] per head -> 2 * 2 * Sq * Sk * d each.
+    A sliding window limits Sk to min(Sk, window) per query row.
+    """
+    eff_k = sk if window is None else min(sk, window)
+    return batch * hq * (2 * 2 * sq * eff_k * d_head)

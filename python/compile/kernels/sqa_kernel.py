@@ -1,0 +1,213 @@
+"""Pallas SQA kernel: tiled flash-attention with query-head reduction.
+
+The SQA paper's contribution is *structural*: the attention core runs over
+``Hq < H`` query heads, cutting score/aggregation FLOPs by ``H/Hq`` (§3.2.1).
+In this kernel that shows up directly in the grid: the head axis has ``Hq``
+entries, so the number of MXU tile-matmuls launched falls by the same factor.
+
+Design (TPU-shaped, executed with ``interpret=True`` on CPU PJRT):
+
+* Grid ``(batch, Hq, num_q_blocks, num_k_blocks)`` — K-blocks innermost so a
+  query tile's online-softmax state lives in VMEM scratch across K steps.
+* BlockSpecs stage ``(block_q, d_head)`` Q tiles and ``(block_k, d_head)``
+  K/V tiles HBM->VMEM; the N x N score matrix never materializes.
+* GQA-style K/V sharing is an *index map*: query head ``h`` reads K/V head
+  ``h * Hkv // Hq`` — zero-copy, no repeated tensors (paper eq. 7's K'/V'
+  broadcast is free).
+* Online softmax: running row-max ``m``, normalizer ``l`` and un-normalized
+  accumulator ``acc`` carried in scratch; output written on the last K step.
+* Causal and sliding-window (SWA / SW-SQA, §3.4) masks are computed from
+  grid coordinates per tile.
+
+VMEM footprint per grid cell (f32):
+    q tile  block_q * d_head
+    k,v     2 * block_k * d_head
+    scratch block_q * (d_head + 2)
+which is independent of sequence length — the property FlashAttention gets
+from SRAM tiling and we get from BlockSpecs.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+
+NEG_INF = float("-inf")
+
+
+def _pick_block(n: int, preferred: int) -> int:
+    """Largest power-of-two block <= preferred that divides n."""
+    b = min(preferred, n)
+    while b > 1 and n % b != 0:
+        b //= 2
+    return max(b, 1)
+
+
+def _attn_kernel(
+    q_ref,
+    k_ref,
+    v_ref,
+    o_ref,
+    acc_ref,
+    m_ref,
+    l_ref,
+    *,
+    scale: float,
+    causal: bool,
+    window: int | None,
+    block_q: int,
+    block_k: int,
+    num_k_blocks: int,
+):
+    """One (batch, head, q-block, k-block) grid cell."""
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    # --- reset the online-softmax state at the first K block -------------
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0, :, :]  # [block_q, d]
+    k = k_ref[0, 0, :, :]  # [block_k, d]
+    v = v_ref[0, 0, :, :]  # [block_k, d]
+
+    # MXU tile-matmul: scores for this (q-block, k-block) pair.
+    s = jax.lax.dot_general(
+        q,
+        k,
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    s = s * scale  # [block_q, block_k]
+
+    # --- banded masking from global coordinates --------------------------
+    if causal or window is not None:
+        rows = iq * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        cols = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        rel = rows - cols
+        mask = jnp.ones_like(s, dtype=jnp.bool_)
+        if causal:
+            mask = mask & (rel >= 0)
+        if window is not None:
+            mask = mask & (rel >= 0) & (rel < window)
+        s = jnp.where(mask, s, NEG_INF)
+
+    # --- online softmax update -------------------------------------------
+    m_prev = m_ref[...]  # [block_q]
+    l_prev = l_ref[...]
+    m_cur = jnp.max(s, axis=-1)
+    m_new = jnp.maximum(m_prev, m_cur)
+    # A fully-masked row keeps m = -inf; guard exp(-inf - -inf) -> use 0.
+    safe_m = jnp.where(jnp.isneginf(m_new), 0.0, m_new)
+    alpha = jnp.where(jnp.isneginf(m_prev), 0.0, jnp.exp(m_prev - safe_m))
+    p = jnp.exp(s - safe_m[:, None])
+    p = jnp.where(jnp.isneginf(s), 0.0, p)
+
+    l_new = alpha * l_prev + jnp.sum(p, axis=-1)
+    pv = jax.lax.dot_general(
+        p.astype(v.dtype),
+        v,
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + pv
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    # --- finalize on the last K block -------------------------------------
+    @pl.when(ik == num_k_blocks - 1)
+    def _final():
+        l = l_ref[...]
+        denom = jnp.where(l == 0.0, 1.0, l)  # fully-masked rows -> 0 output
+        o_ref[0, 0, :, :] = (acc_ref[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+def sqa_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = False,
+    window: int | None = None,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Tiled SQA attention core.
+
+    q: [batch, Hq,  S, d_head]; k, v: [batch, Hkv, S, d_head], Hkv | Hq.
+    Returns [batch, Hq, S, d_head]. Matches ``ref.attention_ref``.
+    """
+    b, hq, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    if hq % hkv != 0:
+        raise ValueError(f"Hq={hq} must be a multiple of Hkv={hkv}")
+    if window is not None and window <= 0:
+        raise ValueError(f"window must be positive, got {window}")
+
+    bq = _pick_block(sq, block_q)
+    bk = _pick_block(sk, block_k)
+    nq = sq // bq
+    nk = sk // bk
+    group = hq // hkv  # query heads per kv head
+
+    kernel = functools.partial(
+        _attn_kernel,
+        scale=1.0 / math.sqrt(d),
+        causal=causal,
+        window=window,
+        block_q=bq,
+        block_k=bk,
+        num_k_blocks=nk,
+    )
+
+    grid = (b, hq, nq, nk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda ib, ih, iq, ik: (ib, ih, iq, 0)),
+            # SQA/GQA head sharing as an index map: query head ih reads
+            # kv head ih // group. This is where the repeated-K' of paper
+            # eq. (7) becomes zero-copy.
+            pl.BlockSpec((1, 1, bk, d), lambda ib, ih, iq, ik: (ib, ih // group, ik, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda ib, ih, iq, ik: (ib, ih // group, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d), lambda ib, ih, iq, ik: (ib, ih, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, d), jnp.float32),  # acc
+            pltpu.VMEM((bq,), jnp.float32),  # running max m
+            pltpu.VMEM((bq,), jnp.float32),  # normalizer l
+        ],
+        interpret=interpret,
+    )(q, k, v)
+
+
+def vmem_footprint_bytes(block_q: int, block_k: int, d_head: int, dtype_bytes: int = 4) -> int:
+    """Per-grid-cell VMEM bytes for the BlockSpecs above (perf model, §7)."""
+    q_tile = block_q * d_head
+    kv_tiles = 2 * block_k * d_head
+    scratch = block_q * d_head + 2 * block_q
+    out = block_q * d_head
+    return dtype_bytes * (q_tile + kv_tiles + scratch + out)
+
+
+def mxu_tile_matmuls(batch: int, hq: int, seq: int, block_q: int, block_k: int) -> int:
+    """Number of (block_q x d)@(d x block_k) tile matmuls the grid launches.
+
+    Proportional to Hq — the paper's H/Hq FLOP reduction, visible in the
+    launch geometry itself.
+    """
+    return batch * hq * (seq // block_q) * (seq // block_k) * 2  # QK^T and PV

@@ -1,0 +1,230 @@
+"""L2 model: transformer language model with a pluggable attention variant.
+
+Matches the paper's experimental architectures:
+  * dense (Table 1): RMSNorm pre-norm blocks, SQA-family attention, SwiGLU
+    MLP, RoPE positions, tied embedding/LM head.
+  * MoE  (Table 2): same skeleton with the MLP swapped for a top-1 routed
+    mixture of experts (see `moe.py`).
+
+Everything is pure-functional: parameters are a nested dict pytree whose
+flattening order (sorted keys, `jax.tree_util`) is the contract with the
+Rust runtime — `aot.py` records the order in `manifest.json`.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+from .attention import (
+    AttentionSpec,
+    attention_layer,
+    init_attention_params,
+    rope_tables,
+)
+from . import moe as moe_mod
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Hyper-parameters for one model (one row of Table 1/2)."""
+
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    h_total: int  # H of the MHA baseline; d_head = d_model / H
+    spec: AttentionSpec
+    d_ff: int = 0  # defaults to ~8/3 * d_model rounded to 32
+    causal: bool = True
+    attn_impl: str = "xla"  # "xla" | "pallas"
+    # MoE (Table 2): n_experts == 0 means dense SwiGLU MLP.
+    n_experts: int = 0
+    moe_top_k: int = 1
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.h_total == 0
+        return self.d_model // self.h_total
+
+    def ff_dim(self) -> int:
+        if self.d_ff:
+            return self.d_ff
+        return ((8 * self.d_model // 3) + 31) // 32 * 32
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def _init_linear(key, fan_in, fan_out):
+    std = (2.0 / (fan_in + fan_out)) ** 0.5
+    return std * jax.random.normal(key, (fan_in, fan_out), jnp.float32)
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    """Initialize the full parameter pytree from a PRNG key.
+
+    Per-layer parameters are **stacked on a leading layer axis** so the
+    forward pass can `lax.scan` over depth — one compiled block body
+    instead of `n_layers` unrolled copies (≈8x faster XLA compiles for the
+    dense_sm family; see EXPERIMENTS.md §Perf).
+    """
+    keys = jax.random.split(key, cfg.n_layers + 2)
+    ff = cfg.ff_dim()
+
+    def layer_init(k):
+        lk = jax.random.split(k, 6)
+        layer = {
+            "attn": init_attention_params(lk[0], cfg.d_model, cfg.d_head, cfg.spec),
+            "norm1": jnp.ones((cfg.d_model,), jnp.float32),
+            "norm2": jnp.ones((cfg.d_model,), jnp.float32),
+        }
+        if cfg.n_experts:
+            layer["moe"] = moe_mod.init_moe_params(
+                lk[1], cfg.d_model, ff, cfg.n_experts
+            )
+        else:
+            layer["mlp"] = {
+                "w_gate": _init_linear(lk[1], cfg.d_model, ff),
+                "w_up": _init_linear(lk[2], cfg.d_model, ff),
+                "w_down": _init_linear(lk[3], ff, cfg.d_model),
+            }
+        return layer
+
+    # vmap over the layer keys: one compiled init body for all layers
+    # (matches the scan-over-depth forward; EXPERIMENTS.md §Perf iter 3).
+    blocks = jax.vmap(layer_init)(keys[: cfg.n_layers])
+    return {
+        "embed": 0.02 * jax.random.normal(keys[-2], (cfg.vocab, cfg.d_model), jnp.float32),
+        "blocks": blocks,
+        "norm_f": jnp.ones((cfg.d_model,), jnp.float32),
+    }
+
+
+def param_count(params) -> int:
+    return sum(p.size for p in jax.tree_util.tree_leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, scale, eps: float = 1e-5):
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * scale
+
+
+def swiglu(p, x):
+    return (jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]
+
+
+def forward_with_aux(params, cfg: ModelConfig, tokens: jnp.ndarray):
+    """tokens: [batch, seq] int32 -> (logits [batch, seq, vocab], moe_aux).
+
+    Depth is a `lax.scan` over the stacked block parameters: XLA compiles
+    one block body regardless of `n_layers` (compile-time optimization;
+    runtime is unchanged since every layer executes the same program).
+    """
+    _, s = tokens.shape
+    x = params["embed"][tokens]
+    rope = rope_tables(s, cfg.d_head)
+
+    def body(x, blk):
+        h = rms_norm(x, blk["norm1"])
+        x = x + attention_layer(
+            blk["attn"],
+            h,
+            cfg.spec,
+            cfg.d_head,
+            causal=cfg.causal,
+            impl=cfg.attn_impl,
+            rope=rope,
+        )
+        h = rms_norm(x, blk["norm2"])
+        if cfg.n_experts:
+            out, aux = moe_mod.moe_layer(blk["moe"], h, top_k=cfg.moe_top_k)
+            return x + out, aux
+        return x + swiglu(blk["mlp"], h), jnp.float32(0.0)
+
+    x, auxs = jax.lax.scan(body, x, params["blocks"])
+    x = rms_norm(x, params["norm_f"])
+    logits = x @ params["embed"].T  # tied LM head
+    aux = jnp.mean(auxs) if cfg.n_experts else jnp.float32(0.0)
+    return logits, aux
+
+
+def forward(params, cfg: ModelConfig, tokens: jnp.ndarray) -> jnp.ndarray:
+    """tokens: [batch, seq] int32 -> logits [batch, seq, vocab]."""
+    return forward_with_aux(params, cfg, tokens)[0]
+
+
+# ---------------------------------------------------------------------------
+# Loss / metrics
+# ---------------------------------------------------------------------------
+
+MOE_AUX_WEIGHT = 0.01
+
+
+def loss_and_acc(params, cfg: ModelConfig, tokens, targets):
+    """Mean next-token cross-entropy + token accuracy.
+
+    tokens/targets: [batch, seq] int32; targets = tokens shifted by one
+    (prepared by the Rust data pipeline).
+    """
+    logits, aux = forward_with_aux(params, cfg, tokens)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    loss = jnp.mean(nll) + MOE_AUX_WEIGHT * aux
+    acc = jnp.mean((jnp.argmax(logits, axis=-1) == targets).astype(jnp.float32))
+    return loss, acc
+
+
+# ---------------------------------------------------------------------------
+# AdamW training step (fused into one XLA module for the Rust runtime)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+
+
+def train_step(params, m, v, step, lr, cfg: ModelConfig, opt: OptConfig, tokens, targets):
+    """One fused AdamW step.
+
+    step: int32 scalar (1-based); lr: f32 scalar (schedule computed by Rust).
+    Returns (params', m', v', loss, acc).
+    """
+    (loss, acc), grads = jax.value_and_grad(
+        lambda p: loss_and_acc(p, cfg, tokens, targets), has_aux=True
+    )(params)
+
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - opt.beta1**t
+    bc2 = 1.0 - opt.beta2**t
+
+    def upd(p, g, m_, v_):
+        m2 = opt.beta1 * m_ + (1.0 - opt.beta1) * g
+        v2 = opt.beta2 * v_ + (1.0 - opt.beta2) * jnp.square(g)
+        mhat = m2 / bc1
+        vhat = v2 / bc2
+        p2 = p - lr * (mhat / (jnp.sqrt(vhat) + opt.eps) + opt.weight_decay * p)
+        return p2, m2, v2
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    flat_m = jax.tree_util.tree_leaves(m)
+    flat_v = jax.tree_util.tree_leaves(v)
+    out = [upd(p, g, m_, v_) for p, g, m_, v_ in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree_util.tree_unflatten(treedef, [o[2] for o in out])
+    return new_p, new_m, new_v, loss, acc

@@ -1,0 +1,72 @@
+"""Mixture-of-Experts FFN layer for the Table 2 models (~8.5M MoE).
+
+Small-scale, dense-dispatch MoE: every expert computes on every token and a
+top-k routing mask weights the combination. At the paper's MoE scale
+(hidden 128, a handful of experts) dense dispatch is both simpler and
+faster under XLA-CPU than gather/scatter dispatch, and it is numerically
+identical to sparse dispatch for the same router.
+
+Includes the standard load-balancing auxiliary loss (Switch-style):
+    aux = n_experts * sum_e( frac_tokens_e * mean_router_prob_e )
+which is 1.0 under perfect balance.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_moe_params(key, d_model: int, d_ff: int, n_experts: int):
+    """Router + per-expert SwiGLU stacks (experts batched on axis 0)."""
+    kr, kg, ku, kd = jax.random.split(key, 4)
+
+    def init(k, *shape):
+        fan_in, fan_out = shape[-2], shape[-1]
+        std = (2.0 / (fan_in + fan_out)) ** 0.5
+        return std * jax.random.normal(k, shape, jnp.float32)
+
+    return {
+        "router": init(kr, d_model, n_experts),
+        "w_gate": init(kg, n_experts, d_model, d_ff),
+        "w_up": init(ku, n_experts, d_model, d_ff),
+        "w_down": init(kd, n_experts, d_ff, d_model),
+    }
+
+
+def moe_layer(params, x: jnp.ndarray, top_k: int = 1):
+    """x: [batch, seq, d_model] -> (out, aux_loss).
+
+    Routing: softmax over experts, keep top-k, renormalize kept weights.
+    """
+    n_experts = params["router"].shape[1]
+    logits = x @ params["router"]  # [b, s, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+
+    if top_k >= n_experts:
+        weights = probs
+    else:
+        # k-th largest via iterated masked max — avoids jnp.sort, whose
+        # batched-gather lowering the image's xla_client converter rejects
+        # (GatherDimensionNumbers.operand_batching_dims is post-0.5.1).
+        masked = probs
+        for _ in range(top_k - 1):
+            top = jnp.max(masked, axis=-1, keepdims=True)
+            masked = jnp.where(masked >= top, -jnp.inf, masked)
+        kth = jnp.max(masked, axis=-1, keepdims=True)
+        keep = probs >= kth
+        weights = jnp.where(keep, probs, 0.0)
+        weights = weights / (jnp.sum(weights, axis=-1, keepdims=True) + 1e-9)
+
+    # Dense dispatch: expert e output for all tokens, shape [E, b, s, d].
+    def expert(wg, wu, wd):
+        return (jax.nn.silu(x @ wg) * (x @ wu)) @ wd
+
+    expert_out = jax.vmap(expert)(params["w_gate"], params["w_up"], params["w_down"])
+    out = jnp.einsum("ebsd,bse->bsd", expert_out, weights)
+
+    # Load-balancing aux loss over the *kept* assignment distribution.
+    frac_tokens = jnp.mean((weights > 0).astype(jnp.float32), axis=(0, 1))  # [E]
+    mean_prob = jnp.mean(probs, axis=(0, 1))  # [E]
+    aux = n_experts * jnp.sum(frac_tokens * mean_prob) / max(top_k, 1)
+    return out, aux

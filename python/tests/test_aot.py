@@ -1,0 +1,108 @@
+"""AOT contract tests: packer round-trip, manifest schema, HLO emission."""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import configs
+from compile.aot import Packer, to_hlo_text
+from compile.model import forward, init_params, loss_and_acc
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_packer_roundtrip():
+    cfg = configs.tiny("sqa")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    packer = Packer(cfg)
+    vec = packer.pack(params)
+    assert vec.shape == (packer.total,)
+    back = packer.unpack(vec)
+    for a, b in zip(
+        jax.tree_util.tree_leaves(params), jax.tree_util.tree_leaves(back)
+    ):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_packer_offsets_are_disjoint_and_total():
+    packer = Packer(configs.tiny("xsqa"))
+    end = 0
+    for spec in packer.specs:
+        assert spec["offset"] == end
+        end += int(np.prod(spec["shape"])) if spec["shape"] else 1
+    assert end == packer.total
+
+
+def test_packed_forward_equals_unpacked():
+    cfg = configs.tiny("ssqa")
+    params = init_params(cfg, jax.random.PRNGKey(1))
+    packer = Packer(cfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(2), (2, 32), 0, cfg.vocab, jnp.int32)
+    a = forward(params, cfg, tokens)
+    b = forward(packer.unpack(packer.pack(params)), cfg, tokens)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=0)
+
+
+def test_hlo_text_emission_parses():
+    """The HLO text must start with a module header the Rust side can load."""
+    cfg = configs.tiny("sqa")
+    packer = Packer(cfg)
+
+    def fwd(fp, tokens):
+        return (forward(packer.unpack(fp), cfg, tokens),)
+
+    lowered = jax.jit(fwd).lower(
+        jax.ShapeDtypeStruct((packer.total,), jnp.float32),
+        jax.ShapeDtypeStruct((1, 16), jnp.int32),
+    )
+    text = to_hlo_text(lowered)
+    assert text.startswith("HloModule")
+    assert "parameter(0)" in text
+
+
+def test_manifest_schema():
+    """Validate the manifest the Rust runtime consumes (if generated)."""
+    path = os.path.join(os.path.dirname(__file__), "../../artifacts/manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built")
+    with open(path) as f:
+        m = json.load(f)
+    assert m["version"] == 2
+    assert "tiny" in m["families"]
+    fam = m["families"]["tiny"]
+    for key in ["vocab", "d_model", "n_layers", "h_total", "d_head", "variants"]:
+        assert key in fam
+    for vname, v in fam["variants"].items():
+        assert v["hq"] % v["hkv"] == 0, vname
+        assert v["n_params"] == sum(
+            int(np.prod(p["shape"])) if p["shape"] else 1 for p in v["params"]
+        )
+    kinds = {(a["family"], a["variant"], a["kind"]) for a in m["artifacts"]}
+    assert ("tiny", "sqa", "train") in kinds
+    for a in m["artifacts"]:
+        assert os.path.exists(os.path.join(os.path.dirname(path), a["path"])), a["path"]
+
+
+def test_eval_loss_matches_direct_computation():
+    """The lowered eval graph output == direct python computation."""
+    cfg = configs.tiny("sqa")
+    packer = Packer(cfg)
+    params = init_params(cfg, jax.random.PRNGKey(5))
+    tokens = jax.random.randint(jax.random.PRNGKey(6), (2, 32), 0, cfg.vocab, jnp.int32)
+    targets = jnp.roll(tokens, -1, axis=1)
+
+    def eval_fn(fp, t, g):
+        return loss_and_acc(packer.unpack(fp), cfg, t, g)
+
+    direct = loss_and_acc(params, cfg, tokens, targets)
+    via = jax.jit(eval_fn)(packer.pack(params), tokens, targets)
+    assert abs(float(direct[0]) - float(via[0])) < 1e-5
+    assert abs(float(direct[1]) - float(via[1])) < 1e-6

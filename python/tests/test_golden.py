@@ -1,0 +1,78 @@
+"""Generate cross-language golden files: JAX reference attention outputs.
+
+The Rust native oracle (`rust/src/attention/`) reads these in
+`rust/tests/golden.rs` and must match bit-for-bit-ish (<= 2e-5). This pins
+the *semantics* of the SQA family across the two independent
+implementations (jnp oracle that the Pallas kernel is tested against, and
+the pure-Rust oracle the coordinator properties are tested against).
+
+Golden files are regenerated on every pytest run (deterministic inputs) —
+they live under artifacts/golden/ and are gitignored like all artifacts.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile.kernels.ref import attention_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "../../artifacts/golden")
+
+CASES = [
+    # name, hq, hkv, seq, d, causal, window
+    ("mha", 4, 4, 24, 8, False, None),
+    ("gqa", 4, 2, 24, 8, False, None),
+    ("mqa", 4, 1, 16, 4, False, None),
+    ("sqa_causal", 4, 2, 32, 8, True, None),
+    ("xsqa", 2, 2, 16, 8, True, None),
+    ("swa", 2, 2, 40, 4, False, 8),
+    ("sw_sqa", 4, 2, 40, 4, True, 8),
+]
+
+
+def lcg(seed: int, n: int) -> np.ndarray:
+    """Tiny deterministic generator both languages can replay if needed."""
+    out = np.empty(n, dtype=np.float64)
+    state = np.uint64(seed * 2654435761 % (2**31) or 1)
+    a, c, m = np.uint64(1664525), np.uint64(1013904223), np.uint64(2**32)
+    for i in range(n):
+        state = (a * state + c) % m
+        out[i] = (int(state) / 2**32) * 2.0 - 1.0
+    return out.astype(np.float32)
+
+
+def test_write_goldens():
+    os.makedirs(GOLDEN_DIR, exist_ok=True)
+    for name, hq, hkv, s, d, causal, window in CASES:
+        b = 1
+        q = lcg(1, b * hq * s * d).reshape(b, hq, s, d)
+        k = lcg(2, b * hkv * s * d).reshape(b, hkv, s, d)
+        v = lcg(3, b * hkv * s * d).reshape(b, hkv, s, d)
+        out = attention_ref(
+            jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), causal=causal, window=window
+        )
+        out = np.asarray(out)
+        assert np.isfinite(out).all()
+        blob = {
+            "name": name,
+            "hq": hq,
+            "hkv": hkv,
+            "seq": s,
+            "d": d,
+            "causal": causal,
+            "window": window,
+            "q": q.reshape(-1).tolist(),
+            "k": k.reshape(-1).tolist(),
+            "v": v.reshape(-1).tolist(),
+            "out": out.reshape(-1).tolist(),
+        }
+        with open(os.path.join(GOLDEN_DIR, f"{name}.json"), "w") as f:
+            json.dump(blob, f)
+    assert len(os.listdir(GOLDEN_DIR)) >= len(CASES)

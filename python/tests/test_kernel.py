@@ -1,0 +1,231 @@
+"""L1 correctness: Pallas SQA kernel vs the pure-jnp oracle.
+
+This is the core correctness signal for the compiled artifacts: everything
+Rust executes lowers through these kernels. Coverage:
+  * every named paper variant (MHA/GQA/MQA/SQA/sSQA/xSQA/xSMQA) as (Hq,Hkv)
+  * causal, sliding-window (SWA) and combined SW-SQA masking
+  * hypothesis sweep over shapes, head ratios, block sizes, seeds
+  * analytic invariants (convex-combination bound, mask zeroing)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import attention_ref, attention_flops, repeat_kv
+from compile.kernels.sqa_kernel import (
+    mxu_tile_matmuls,
+    sqa_attention,
+    vmem_footprint_bytes,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+ATOL = 2e-5
+
+
+def rand(key, shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+def qkv(b, hq, hkv, s, d, seed=0):
+    return (
+        rand(seed, (b, hq, s, d)),
+        rand(seed + 1, (b, hkv, s, d)),
+        rand(seed + 2, (b, hkv, s, d)),
+    )
+
+
+# The paper's variant zoo with a 16-head MHA baseline (Table 1).
+VARIANTS_H16 = {
+    "mha": (16, 16),
+    "gqa": (16, 4),
+    "mqa": (16, 1),
+    "sqa": (8, 4),
+    "ssqa": (8, 8),
+    "xsqa": (4, 4),
+    "xsmqa": (4, 1),
+}
+
+
+@pytest.mark.parametrize("name,heads", VARIANTS_H16.items(), ids=VARIANTS_H16.keys())
+@pytest.mark.parametrize("causal", [False, True])
+def test_variants_match_ref(name, heads, causal):
+    hq, hkv = heads
+    q, k, v = qkv(2, hq, hkv, 128, 16)
+    out = sqa_attention(q, k, v, causal=causal, block_q=64, block_k=64)
+    ref = attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=ATOL)
+
+
+@pytest.mark.parametrize("window", [1, 16, 37, 128, 1000])
+def test_sliding_window(window):
+    q, k, v = qkv(1, 4, 2, 128, 8)
+    out = sqa_attention(q, k, v, window=window, block_q=32, block_k=32)
+    ref = attention_ref(q, k, v, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=ATOL)
+
+
+def test_sw_sqa_combined():
+    """SW-SQA hybrid (§3.4): reduced query heads + windowed scope."""
+    q, k, v = qkv(2, 4, 4, 256, 16)  # xSQA heads of an H=16 baseline
+    out = sqa_attention(q, k, v, causal=True, window=64)
+    ref = attention_ref(q, k, v, causal=True, window=64)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=ATOL)
+
+
+@pytest.mark.parametrize("bq,bk", [(8, 8), (16, 64), (64, 16), (128, 128), (256, 256)])
+def test_block_shape_independence(bq, bk):
+    """Output must not depend on the HBM<->VMEM schedule."""
+    q, k, v = qkv(1, 2, 1, 256, 8)
+    base = sqa_attention(q, k, v, causal=True, block_q=64, block_k=64)
+    out = sqa_attention(q, k, v, causal=True, block_q=bq, block_k=bk)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(base), atol=ATOL)
+
+
+def test_non_pow2_seq_falls_back_to_divisor_blocks():
+    q, k, v = qkv(1, 2, 2, 96, 8)  # 96 = 3 * 32
+    out = sqa_attention(q, k, v, block_q=128, block_k=128)
+    ref = attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=ATOL)
+
+
+def test_hq_equals_h_is_mha():
+    """SQA with Hq = H = Hkv degenerates to exact MHA (paper §3.3)."""
+    q, k, v = qkv(1, 8, 8, 64, 16)
+    out = sqa_attention(q, k, v)
+    ref = attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=ATOL)
+
+
+def test_repeat_kv_semantics():
+    """Output head h must read kv head h // group (repeat_interleave)."""
+    b, hkv, s, d = 1, 2, 4, 2
+    k = jnp.arange(b * hkv * s * d, dtype=jnp.float32).reshape(b, hkv, s, d)
+    r = repeat_kv(k, 3)
+    assert r.shape == (b, 6, s, d)
+    for h in range(6):
+        np.testing.assert_array_equal(np.asarray(r[0, h]), np.asarray(k[0, h // 3]))
+
+
+def test_kernel_uses_grouped_kv_not_first_head():
+    """Distinct K/V per group: zeroing kv head 1 must change only heads 2,3."""
+    q, k, v = qkv(1, 4, 2, 64, 8)
+    out0 = sqa_attention(q, k, v)
+    v2 = v.at[:, 1].set(0.0)
+    out1 = sqa_attention(q, k, v2)
+    same = np.asarray(out0[:, :2]) - np.asarray(out1[:, :2])
+    diff = np.asarray(out0[:, 2:]) - np.asarray(out1[:, 2:])
+    assert np.abs(same).max() < 1e-6
+    assert np.abs(diff).max() > 1e-3
+
+
+def test_causal_first_token_attends_only_itself():
+    q, k, v = qkv(1, 2, 2, 32, 8)
+    out = sqa_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(
+        np.asarray(out[:, :, 0, :]), np.asarray(v[:, :, 0, :]), atol=ATOL
+    )
+
+
+def test_window_one_is_identity_on_values():
+    """window=1 with causal geometry: each token sees only itself."""
+    q, k, v = qkv(1, 2, 1, 64, 8)
+    out = sqa_attention(q, k, v, window=1)
+    vr = repeat_kv(v, 2)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(vr), atol=ATOL)
+
+
+def test_output_within_value_hull():
+    """Softmax output is a convex combination of values (row-wise bound)."""
+    q, k, v = qkv(2, 4, 2, 128, 16, seed=7)
+    out = np.asarray(sqa_attention(q, k, v))
+    vr = np.asarray(repeat_kv(v, 2))
+    vmax = vr.max(axis=2, keepdims=True)
+    vmin = vr.min(axis=2, keepdims=True)
+    assert (out <= vmax + 1e-5).all() and (out >= vmin - 1e-5).all()
+
+
+def test_uniform_scores_average_values():
+    """Constant q,k -> uniform attention -> output == mean of values."""
+    b, hq, hkv, s, d = 1, 2, 2, 64, 8
+    q = jnp.ones((b, hq, s, d))
+    k = jnp.ones((b, hkv, s, d))
+    v = rand(3, (b, hkv, s, d))
+    out = sqa_attention(q, k, v)
+    ref = jnp.broadcast_to(v.mean(axis=2, keepdims=True), v.shape)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=ATOL)
+
+
+def test_rejects_bad_head_ratio():
+    q, k, v = qkv(1, 3, 2, 32, 8)
+    with pytest.raises(ValueError):
+        sqa_attention(q, k, v)
+
+
+def test_rejects_bad_window():
+    q, k, v = qkv(1, 2, 2, 32, 8)
+    with pytest.raises(ValueError):
+        sqa_attention(q, k, v, window=0)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 2),
+    group=st.integers(1, 4),
+    hkv=st.integers(1, 4),
+    logs=st.integers(4, 8),
+    d=st.sampled_from([4, 8, 16]),
+    causal=st.booleans(),
+    seed=st.integers(0, 10_000),
+)
+def test_hypothesis_matches_ref(b, group, hkv, logs, d, causal, seed):
+    hq = group * hkv
+    s = 2**logs
+    q, k, v = qkv(b, hq, hkv, s, d, seed=seed)
+    out = sqa_attention(q, k, v, causal=causal, block_q=64, block_k=64)
+    ref = attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=ATOL)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    window=st.integers(1, 300),
+    logs=st.integers(5, 8),
+    seed=st.integers(0, 1000),
+)
+def test_hypothesis_windows(window, logs, seed):
+    s = 2**logs
+    q, k, v = qkv(1, 2, 1, s, 8, seed=seed)
+    out = sqa_attention(q, k, v, window=window, block_q=32, block_k=32)
+    ref = attention_ref(q, k, v, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=ATOL)
+
+
+# ---------------------------------------------------------------------------
+# Structural perf model (the quantities DESIGN.md §7 tracks)
+# ---------------------------------------------------------------------------
+
+
+def test_flops_reduction_matches_paper():
+    """Paper eq. (9): speed-up = H / Hq, independent of N and d."""
+    h, n, d = 16, 4096, 64
+    full = attention_flops(1, h, n, n, d)
+    for hq in (8, 4, 2):
+        assert full / attention_flops(1, hq, n, n, d) == h / hq
+
+
+def test_mxu_tile_count_scales_with_hq():
+    base = mxu_tile_matmuls(1, 16, 4096, 128, 128)
+    half = mxu_tile_matmuls(1, 8, 4096, 128, 128)
+    assert base == 2 * half
+
+
+def test_vmem_footprint_independent_of_seq():
+    f = vmem_footprint_bytes(128, 128, 64)
+    assert f == vmem_footprint_bytes(128, 128, 64)
+    assert f < 16 * 1024 * 1024  # fits TPU VMEM with ample headroom

@@ -1,0 +1,61 @@
+//! Native-oracle attention bench: the pure-Rust implementation across the
+//! variant zoo. A second, XLA-free datapoint for the H/Hq scaling law —
+//! useful to show the FLOP argument is implementation-independent.
+
+use sqa::attention::{attention, tensor::Tensor, Spec};
+use sqa::util::bench::{markdown_table, Bench};
+use sqa::util::rng::Pcg64;
+
+fn randn(shape: &[usize], rng: &mut Pcg64) -> Tensor {
+    let n: usize = shape.iter().product();
+    Tensor::from_vec(shape, (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect()).unwrap()
+}
+
+fn main() {
+    let seq: usize = std::env::var("SQA_BENCH_NATIVE_SEQ")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1024);
+    let d = 16;
+    let variants = [
+        ("mha", 16, 16),
+        ("gqa", 16, 4),
+        ("mqa", 16, 1),
+        ("sqa", 8, 4),
+        ("ssqa", 8, 8),
+        ("xsqa", 4, 4),
+        ("xsmqa", 4, 1),
+    ];
+    let bench = Bench::quick();
+    let mut rows = Vec::new();
+    let mut mha_secs = 0.0;
+    println!("\n## Native attention oracle, seq {seq}, d_head {d}\n");
+    for (name, hq, hkv) in variants {
+        let mut rng = Pcg64::new(1);
+        let q = randn(&[1, hq, seq, d], &mut rng);
+        let k = randn(&[1, hkv, seq, d], &mut rng);
+        let v = randn(&[1, hkv, seq, d], &mut rng);
+        let r = bench.run(&format!("native/{name}"), None, || {
+            let _ = attention(&q, &k, &v, Spec::causal(hq, hkv)).unwrap();
+        });
+        if name == "mha" {
+            mha_secs = r.mean();
+        }
+        rows.push(vec![
+            name.to_string(),
+            format!("{hq}"),
+            format!("{hkv}"),
+            format!("{:.4}", r.mean()),
+            format!("{:.2}x", mha_secs / r.mean()),
+            format!("{:.2}x", 16.0 / hq as f64),
+        ]);
+    }
+    println!(
+        "\n{}",
+        markdown_table(
+            &["Variant".into(), "Hq".into(), "Hkv".into(), "secs".into(),
+              "speed-up".into(), "eq.(9) predicted".into()],
+            &rows
+        )
+    );
+}

@@ -1,0 +1,72 @@
+//! Serving-engine throughput/latency bench: the paper's prompt-processing
+//! scenario end-to-end (router + dynamic batcher + workers + PJRT fwd).
+//!
+//! Compares SQA vs MHA engines under the same offered load; reports req/s,
+//! latency percentiles, mean batch size, padding waste.
+
+use sqa::config::ServeConfig;
+use sqa::coordinator::Engine;
+use sqa::runtime::Runtime;
+use sqa::util::rng::Pcg64;
+use sqa::util::stats::Summary;
+use std::sync::Arc;
+
+fn bench_variant(rt: &Runtime, variant: &str, n_requests: usize) {
+    let cfg = ServeConfig {
+        family: "tiny".into(),
+        variant: variant.into(),
+        addr: String::new(),
+        max_batch: 8,
+        max_wait_ms: 4,
+        workers: 2,
+        queue_capacity: 256,
+    };
+    let engine = Arc::new(Engine::start(rt, &cfg, None).expect("engine"));
+    let t0 = std::time::Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..4u64 {
+        let e = Arc::clone(&engine);
+        let per = n_requests / 4;
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Pcg64::new_stream(7, c);
+            let mut lat = Vec::with_capacity(per);
+            for _ in 0..per {
+                let len = rng.range_usize(8, 250);
+                let tokens: Vec<u32> = (0..len).map(|_| 4 + rng.below(2000) as u32).collect();
+                let t = std::time::Instant::now();
+                if e.encode(tokens).is_ok() {
+                    lat.push(t.elapsed().as_secs_f64() * 1e3);
+                }
+            }
+            lat
+        }));
+    }
+    let mut lat = Summary::new();
+    for h in handles {
+        for l in h.join().unwrap() {
+            lat.add(l);
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    println!(
+        "{variant:6} {:6.1} req/s | p50 {:6.1}ms p99 {:6.1}ms | mean batch {:.2} | padding {:.0}%",
+        lat.len() as f64 / wall,
+        lat.p50(),
+        lat.p99(),
+        engine.metrics.mean_batch_size(),
+        engine.metrics.padding_fraction() * 100.0
+    );
+}
+
+fn main() {
+    sqa::util::logging::init();
+    let n: usize = std::env::var("SQA_BENCH_REQUESTS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(160);
+    let rt = Runtime::new("artifacts").expect("run `make artifacts` first");
+    println!("\n## Serving throughput ({n} requests, 4 clients, tiny family)\n");
+    for variant in ["sqa", "xsqa", "ssqa", "mha"] {
+        bench_variant(&rt, variant, n);
+    }
+}

@@ -1,0 +1,29 @@
+//! Regenerates **Table 1** of the paper: quality + training wall-clock of
+//! the seven dense ~10M-param variants (H=16) on identical data.
+//!
+//! Paper: val loss MHA 1.198 < sSQA 1.220 ~ GQA 1.218 < SQA 1.227 < xSQA
+//! 1.243 < MQA 1.250 < xSMQA 1.282; SQA-family trains ~10-13% faster.
+//! Reproduced shape: loss ordering (MHA best, xSMQA worst, sSQA ~ GQA) and
+//! the SQA variants' faster wall-clock.
+//!
+//! Env: SQA_BENCH_STEPS training steps per variant (default 30 — a smoke
+//! ranking; use 300+ for a cleaner separation).
+
+use sqa::bench_harness;
+use sqa::runtime::Runtime;
+
+fn main() {
+    sqa::util::logging::init();
+    let steps: usize = std::env::var("SQA_BENCH_STEPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(30);
+    let rt = Runtime::new("artifacts").expect("run `make artifacts` first");
+    let (table, reports) = bench_harness::table1(&rt, steps, 42).expect("table1");
+    println!("\n## Table 1 — dense model quality ({steps} steps, CPU-scaled)\n");
+    println!("{table}");
+    std::fs::create_dir_all("bench_out").ok();
+    let json = sqa::util::json::Json::arr(reports.iter().map(|r| r.to_json()));
+    std::fs::write("bench_out/table1.json", json.to_string()).unwrap();
+    println!("reports -> bench_out/table1.json");
+}

@@ -1,0 +1,31 @@
+//! Regenerates **Table 3** of the paper: forward time-per-step across the
+//! seven attention variants and the compiled sequence buckets.
+//!
+//! Paper (A100, 32k-200k ctx): xSQA up to 3.5x faster than MHA, SQA ~2x,
+//! MQA/GQA ~= MHA. This CPU-scaled sweep (512-8k ctx) must reproduce the
+//! *shape*: speed-up ordering and approximate factors at the longest bucket.
+//!
+//! Env: SQA_BENCH_MAX_SEQ caps the sweep (default 4096; set 8192 for full).
+
+use sqa::bench_harness::{self, TABLE3_VARIANTS};
+use sqa::runtime::Runtime;
+
+fn main() {
+    sqa::util::logging::init();
+    let max_seq: usize = std::env::var("SQA_BENCH_MAX_SEQ")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(4096);
+    let rt = Runtime::new("artifacts").expect("run `make artifacts` first");
+    let (table, cells) =
+        bench_harness::table3(&rt, TABLE3_VARIANTS, max_seq, true).expect("table3");
+    println!("\n## Table 3 — forward time per step (s), CPU-scaled\n");
+    println!("{table}");
+    std::fs::create_dir_all("bench_out").ok();
+    std::fs::write(
+        "bench_out/table3.json",
+        bench_harness::cells_to_json(&cells).to_string(),
+    )
+    .expect("write bench_out/table3.json");
+    println!("cells -> bench_out/table3.json");
+}

@@ -1,0 +1,136 @@
+//! Minimal dense f32 tensor for the native attention oracle.
+//!
+//! Row-major, shape-checked, no broadcasting cleverness — this exists to be
+//! *obviously correct* (it is the differential-testing oracle against the
+//! XLA artifacts) and fast enough for bench baselines.
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        Self {
+            shape: shape.to_vec(),
+            data: vec![0.0; n],
+        }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {:?} wants {} elems, got {}", shape, n, data.len());
+        }
+        Ok(Self {
+            shape: shape.to_vec(),
+            data,
+        })
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Flat index of a 4-d coordinate (the oracle's tensors are all 4-d).
+    #[inline]
+    pub fn idx4(&self, a: usize, b: usize, c: usize, d: usize) -> usize {
+        debug_assert_eq!(self.shape.len(), 4);
+        ((a * self.shape[1] + b) * self.shape[2] + c) * self.shape[3] + d
+    }
+
+    #[inline]
+    pub fn get4(&self, a: usize, b: usize, c: usize, d: usize) -> f32 {
+        self.data[self.idx4(a, b, c, d)]
+    }
+
+    #[inline]
+    pub fn set4(&mut self, a: usize, b: usize, c: usize, d: usize, v: f32) {
+        let i = self.idx4(a, b, c, d);
+        self.data[i] = v;
+    }
+
+    /// Contiguous row `[.., .., row, :]` of a 4-d tensor.
+    #[inline]
+    pub fn row4(&self, a: usize, b: usize, c: usize) -> &[f32] {
+        let d = self.shape[3];
+        let start = self.idx4(a, b, c, 0);
+        &self.data[start..start + d]
+    }
+
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+/// `out[m, n] += a[m, k] * b[n, k]` (b transposed) over contiguous slices.
+#[inline]
+pub fn matmul_nt(a: &[f32], b: &[f32], out: &mut [f32], m: usize, n: usize, k: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    debug_assert_eq!(out.len(), m * n);
+    for i in 0..m {
+        let ar = &a[i * k..(i + 1) * k];
+        for j in 0..n {
+            let br = &b[j * k..(j + 1) * k];
+            let mut acc = 0.0f32;
+            for p in 0..k {
+                acc += ar[p] * br[p];
+            }
+            out[i * n + j] = acc;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn indexing_round_trips() {
+        let mut t = Tensor::zeros(&[2, 3, 4, 5]);
+        t.set4(1, 2, 3, 4, 7.5);
+        assert_eq!(t.get4(1, 2, 3, 4), 7.5);
+        assert_eq!(t.data[t.len() - 1], 7.5);
+    }
+
+    #[test]
+    fn from_vec_validates() {
+        assert!(Tensor::from_vec(&[2, 2], vec![0.0; 3]).is_err());
+        assert!(Tensor::from_vec(&[2, 2], vec![0.0; 4]).is_ok());
+    }
+
+    #[test]
+    fn row4_is_contiguous() {
+        let t = Tensor::from_vec(&[1, 1, 2, 3], (0..6).map(|x| x as f32).collect()).unwrap();
+        assert_eq!(t.row4(0, 0, 1), &[3.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn matmul_nt_small() {
+        // a = [[1,2],[3,4]], b = [[5,6],[7,8]] (b rows are the transposed cols)
+        let a = [1.0, 2.0, 3.0, 4.0];
+        let b = [5.0, 6.0, 7.0, 8.0];
+        let mut out = [0.0; 4];
+        matmul_nt(&a, &b, &mut out, 2, 2, 2);
+        // out[i,j] = dot(a[i,:], b[j,:])
+        assert_eq!(out, [17.0, 23.0, 39.0, 53.0]);
+    }
+}

@@ -1,0 +1,296 @@
+//! Typed configuration: model dims, attention variants, training and
+//! serving settings; parsed from the artifact manifest and/or JSON files.
+//!
+//! The source of truth for model geometry is `artifacts/manifest.json`
+//! (emitted by `python -m compile.aot`) — Rust never re-derives shapes.
+//! Training/serving knobs can additionally be loaded from a JSON config
+//! file via [`TrainConfig::from_json`] / [`ServeConfig::from_json`].
+
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+
+/// Model geometry (family-level entry of the manifest).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ModelDims {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub h_total: usize,
+    pub d_head: usize,
+    pub d_ff: usize,
+    pub n_experts: usize,
+}
+
+/// One attention variant's head geometry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct VariantCfg {
+    pub hq: usize,
+    pub hkv: usize,
+    pub window: Option<usize>,
+}
+
+impl VariantCfg {
+    pub fn validate(&self) -> Result<()> {
+        if self.hq == 0 || self.hkv == 0 {
+            bail!("head counts must be positive");
+        }
+        if self.hq % self.hkv != 0 {
+            bail!("Hq={} must be a multiple of Hkv={}", self.hq, self.hkv);
+        }
+        Ok(())
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let cfg = Self {
+            hq: v.req("hq")?.as_usize().context("hq")?,
+            hkv: v.req("hkv")?.as_usize().context("hkv")?,
+            window: v.get("window").and_then(|w| w.as_usize()),
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+impl ModelDims {
+    pub fn from_json(v: &Json) -> Result<Self> {
+        Ok(Self {
+            vocab: v.req("vocab")?.as_usize().context("vocab")?,
+            d_model: v.req("d_model")?.as_usize().context("d_model")?,
+            n_layers: v.req("n_layers")?.as_usize().context("n_layers")?,
+            h_total: v.req("h_total")?.as_usize().context("h_total")?,
+            d_head: v.req("d_head")?.as_usize().context("d_head")?,
+            d_ff: v.req("d_ff")?.as_usize().context("d_ff")?,
+            n_experts: v.get("n_experts").and_then(|e| e.as_usize()).unwrap_or(0),
+        })
+    }
+}
+
+/// Learning-rate schedule: linear warmup then cosine decay to `min_ratio`.
+#[derive(Debug, Clone)]
+pub struct LrSchedule {
+    pub base_lr: f64,
+    pub warmup_steps: usize,
+    pub total_steps: usize,
+    pub min_ratio: f64,
+}
+
+impl LrSchedule {
+    pub fn lr_at(&self, step: usize) -> f64 {
+        if self.total_steps == 0 {
+            return self.base_lr;
+        }
+        if step < self.warmup_steps {
+            return self.base_lr * (step + 1) as f64 / self.warmup_steps.max(1) as f64;
+        }
+        let t = (step - self.warmup_steps) as f64
+            / (self.total_steps.saturating_sub(self.warmup_steps)).max(1) as f64;
+        let t = t.min(1.0);
+        let cos = 0.5 * (1.0 + (std::f64::consts::PI * t).cos());
+        self.base_lr * (self.min_ratio + (1.0 - self.min_ratio) * cos)
+    }
+}
+
+/// Training-run settings (the `train` subcommand / Table 1-2 benches).
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub family: String,
+    pub variant: String,
+    pub steps: usize,
+    pub eval_every: usize,
+    pub eval_batches: usize,
+    pub seed: u64,
+    pub schedule: LrSchedule,
+    pub checkpoint_dir: Option<String>,
+    pub checkpoint_every: usize,
+    pub log_every: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        Self {
+            family: "tiny".into(),
+            variant: "sqa".into(),
+            steps: 200,
+            eval_every: 50,
+            eval_batches: 4,
+            seed: 42,
+            schedule: LrSchedule {
+                base_lr: 3e-4,
+                warmup_steps: 20,
+                total_steps: 200,
+                min_ratio: 0.1,
+            },
+            checkpoint_dir: None,
+            checkpoint_every: 0,
+            log_every: 10,
+        }
+    }
+}
+
+impl TrainConfig {
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let mut c = Self::default();
+        if let Some(s) = v.get("family").and_then(|x| x.as_str()) {
+            c.family = s.to_string();
+        }
+        if let Some(s) = v.get("variant").and_then(|x| x.as_str()) {
+            c.variant = s.to_string();
+        }
+        if let Some(n) = v.get("steps").and_then(|x| x.as_usize()) {
+            c.steps = n;
+            c.schedule.total_steps = n;
+        }
+        if let Some(n) = v.get("eval_every").and_then(|x| x.as_usize()) {
+            c.eval_every = n;
+        }
+        if let Some(n) = v.get("seed").and_then(|x| x.as_i64()) {
+            c.seed = n as u64;
+        }
+        if let Some(f) = v.get("lr").and_then(|x| x.as_f64()) {
+            c.schedule.base_lr = f;
+        }
+        if let Some(n) = v.get("warmup_steps").and_then(|x| x.as_usize()) {
+            c.schedule.warmup_steps = n;
+        }
+        if let Some(s) = v.get("checkpoint_dir").and_then(|x| x.as_str()) {
+            c.checkpoint_dir = Some(s.to_string());
+        }
+        if let Some(n) = v.get("checkpoint_every").and_then(|x| x.as_usize()) {
+            c.checkpoint_every = n;
+        }
+        Ok(c)
+    }
+
+    pub fn load(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+}
+
+/// Serving settings (the `serve` subcommand / encoder engine).
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    pub family: String,
+    pub variant: String,
+    pub addr: String,
+    /// Max requests merged into one batch (bounded by artifact batch dim).
+    pub max_batch: usize,
+    /// How long the batcher waits to fill a batch before flushing.
+    pub max_wait_ms: u64,
+    pub workers: usize,
+    /// Queue capacity before requests are shed (backpressure).
+    pub queue_capacity: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            family: "tiny".into(),
+            variant: "sqa".into(),
+            addr: "127.0.0.1:7433".into(),
+            max_batch: 8,
+            max_wait_ms: 5,
+            workers: 2,
+            queue_capacity: 64,
+        }
+    }
+}
+
+impl ServeConfig {
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let mut c = Self::default();
+        if let Some(s) = v.get("family").and_then(|x| x.as_str()) {
+            c.family = s.to_string();
+        }
+        if let Some(s) = v.get("variant").and_then(|x| x.as_str()) {
+            c.variant = s.to_string();
+        }
+        if let Some(s) = v.get("addr").and_then(|x| x.as_str()) {
+            c.addr = s.to_string();
+        }
+        if let Some(n) = v.get("max_batch").and_then(|x| x.as_usize()) {
+            c.max_batch = n;
+        }
+        if let Some(n) = v.get("max_wait_ms").and_then(|x| x.as_usize()) {
+            c.max_wait_ms = n as u64;
+        }
+        if let Some(n) = v.get("workers").and_then(|x| x.as_usize()) {
+            c.workers = n;
+        }
+        if let Some(n) = v.get("queue_capacity").and_then(|x| x.as_usize()) {
+            c.queue_capacity = n;
+        }
+        Ok(c)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lr_schedule_shape() {
+        let s = LrSchedule {
+            base_lr: 1e-3,
+            warmup_steps: 10,
+            total_steps: 100,
+            min_ratio: 0.1,
+        };
+        assert!(s.lr_at(0) < s.lr_at(5));
+        assert!((s.lr_at(9) - 1e-3).abs() < 1e-9);
+        assert!(s.lr_at(50) < 1e-3);
+        assert!((s.lr_at(1000) - 1e-4).abs() < 1e-9); // floor = min_ratio
+    }
+
+    #[test]
+    fn variant_validation() {
+        assert!(VariantCfg {
+            hq: 8,
+            hkv: 3,
+            window: None
+        }
+        .validate()
+        .is_err());
+        assert!(VariantCfg {
+            hq: 8,
+            hkv: 4,
+            window: None
+        }
+        .validate()
+        .is_ok());
+    }
+
+    #[test]
+    fn train_config_from_json() {
+        let j = Json::parse(
+            r#"{"family":"dense_sm","variant":"xsqa","steps":50,"lr":0.001,"seed":7}"#,
+        )
+        .unwrap();
+        let c = TrainConfig::from_json(&j).unwrap();
+        assert_eq!(c.family, "dense_sm");
+        assert_eq!(c.variant, "xsqa");
+        assert_eq!(c.steps, 50);
+        assert_eq!(c.schedule.total_steps, 50);
+        assert_eq!(c.seed, 7);
+    }
+
+    #[test]
+    fn serve_config_defaults_and_overrides() {
+        let j = Json::parse(r#"{"max_batch":4,"workers":1}"#).unwrap();
+        let c = ServeConfig::from_json(&j).unwrap();
+        assert_eq!(c.max_batch, 4);
+        assert_eq!(c.workers, 1);
+        assert_eq!(c.family, "tiny");
+    }
+
+    #[test]
+    fn dims_from_json() {
+        let j = Json::parse(
+            r#"{"vocab":2048,"d_model":128,"n_layers":2,"h_total":8,"d_head":16,"d_ff":352}"#,
+        )
+        .unwrap();
+        let d = ModelDims::from_json(&j).unwrap();
+        assert_eq!(d.d_head, 16);
+        assert_eq!(d.n_experts, 0);
+    }
+}

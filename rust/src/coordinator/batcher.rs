@@ -1,0 +1,180 @@
+//! Dynamic batcher: merge queued requests per sequence bucket, flush when
+//! a batch fills or the oldest request exceeds its deadline.
+//!
+//! Pure data structure (no threads) so the policy is unit-testable; the
+//! engine drives it from its dispatcher loop. This is the standard
+//! continuous-batching trade-off: larger batches amortize executable
+//! launch overhead (throughput), the deadline caps queueing latency.
+
+use crate::coordinator::request::EncodeRequest;
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+/// A flushable group of requests for one bucket.
+#[derive(Debug)]
+pub struct PendingBatch {
+    pub bucket: usize,
+    pub requests: Vec<EncodeRequest>,
+}
+
+/// Per-bucket FIFO queues with a max-batch/deadline flush policy.
+#[derive(Debug)]
+pub struct DynamicBatcher {
+    queues: BTreeMap<usize, Vec<EncodeRequest>>,
+    max_batch: usize,
+    max_wait: Duration,
+}
+
+impl DynamicBatcher {
+    pub fn new(buckets: &[usize], max_batch: usize, max_wait: Duration) -> Self {
+        assert!(max_batch > 0);
+        Self {
+            queues: buckets.iter().map(|&b| (b, Vec::new())).collect(),
+            max_batch,
+            max_wait,
+        }
+    }
+
+    pub fn push(&mut self, bucket: usize, req: EncodeRequest) {
+        self.queues
+            .get_mut(&bucket)
+            .expect("unknown bucket")
+            .push(req);
+    }
+
+    pub fn queued(&self) -> usize {
+        self.queues.values().map(|q| q.len()).sum()
+    }
+
+    /// Batches that are ready at `now`: full, or oldest entry past deadline.
+    /// `drain_all` flushes everything regardless (shutdown path).
+    pub fn ready(&mut self, now: Instant, drain_all: bool) -> Vec<PendingBatch> {
+        let mut out = Vec::new();
+        for (&bucket, queue) in self.queues.iter_mut() {
+            loop {
+                let flush = if queue.is_empty() {
+                    false
+                } else if queue.len() >= self.max_batch || drain_all {
+                    true
+                } else {
+                    now.duration_since(queue[0].submitted) >= self.max_wait
+                };
+                if !flush {
+                    break;
+                }
+                let take = queue.len().min(self.max_batch);
+                let requests: Vec<EncodeRequest> = queue.drain(..take).collect();
+                out.push(PendingBatch { bucket, requests });
+            }
+        }
+        out
+    }
+
+    /// Earliest deadline across queues — how long the dispatcher may sleep.
+    pub fn next_deadline(&self, now: Instant) -> Option<Duration> {
+        self.queues
+            .values()
+            .filter_map(|q| q.first())
+            .map(|r| {
+                let elapsed = now.duration_since(r.submitted);
+                self.max_wait.saturating_sub(elapsed)
+            })
+            .min()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, at: Instant) -> EncodeRequest {
+        EncodeRequest {
+            id,
+            tokens: vec![1, 2, 3],
+            submitted: at,
+        }
+    }
+
+    #[test]
+    fn flushes_full_batches_immediately() {
+        let now = Instant::now();
+        let mut b = DynamicBatcher::new(&[64], 2, Duration::from_secs(10));
+        b.push(64, req(1, now));
+        assert!(b.ready(now, false).is_empty());
+        b.push(64, req(2, now));
+        let batches = b.ready(now, false);
+        assert_eq!(batches.len(), 1);
+        assert_eq!(batches[0].requests.len(), 2);
+        assert_eq!(b.queued(), 0);
+    }
+
+    #[test]
+    fn deadline_flushes_partial_batch() {
+        let t0 = Instant::now();
+        let mut b = DynamicBatcher::new(&[64], 8, Duration::from_millis(5));
+        b.push(64, req(1, t0));
+        assert!(b.ready(t0, false).is_empty());
+        let later = t0 + Duration::from_millis(6);
+        let batches = b.ready(later, false);
+        assert_eq!(batches.len(), 1);
+        assert_eq!(batches[0].requests.len(), 1);
+    }
+
+    #[test]
+    fn oversized_queue_splits_into_batches() {
+        let now = Instant::now();
+        let mut b = DynamicBatcher::new(&[64], 2, Duration::ZERO);
+        for i in 0..5 {
+            b.push(64, req(i, now));
+        }
+        let batches = b.ready(now, false);
+        assert_eq!(batches.len(), 3);
+        assert_eq!(batches[2].requests.len(), 1);
+    }
+
+    #[test]
+    fn buckets_batch_independently() {
+        let now = Instant::now();
+        let mut b = DynamicBatcher::new(&[64, 128], 2, Duration::from_secs(10));
+        b.push(64, req(1, now));
+        b.push(128, req(2, now));
+        assert!(b.ready(now, false).is_empty(), "no bucket is full yet");
+        b.push(64, req(3, now));
+        let batches = b.ready(now, false);
+        assert_eq!(batches.len(), 1);
+        assert_eq!(batches[0].bucket, 64);
+    }
+
+    #[test]
+    fn drain_all_flushes_everything() {
+        let now = Instant::now();
+        let mut b = DynamicBatcher::new(&[64, 128], 4, Duration::from_secs(10));
+        b.push(64, req(1, now));
+        b.push(128, req(2, now));
+        let batches = b.ready(now, true);
+        assert_eq!(batches.len(), 2);
+        assert_eq!(b.queued(), 0);
+    }
+
+    #[test]
+    fn next_deadline_tracks_oldest() {
+        let t0 = Instant::now();
+        let mut b = DynamicBatcher::new(&[64], 4, Duration::from_millis(10));
+        assert_eq!(b.next_deadline(t0), None);
+        b.push(64, req(1, t0));
+        let d = b.next_deadline(t0 + Duration::from_millis(4)).unwrap();
+        assert!(d <= Duration::from_millis(6));
+    }
+
+    #[test]
+    fn fifo_order_preserved() {
+        let now = Instant::now();
+        let mut b = DynamicBatcher::new(&[64], 3, Duration::ZERO);
+        for i in 0..3 {
+            b.push(64, req(i, now));
+        }
+        let batches = b.ready(now, false);
+        let ids: Vec<u64> = batches[0].requests.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![0, 1, 2]);
+    }
+}

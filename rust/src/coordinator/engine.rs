@@ -1,0 +1,419 @@
+//! The serving engine: dispatcher + worker pool over compiled fwd artifacts.
+//!
+//! Topology (all std threads; Python is long gone by now):
+//!
+//! ```text
+//!   clients ──encode()──► bounded channel ──► dispatcher thread
+//!                                               │  DynamicBatcher
+//!                                               ▼  (bucket, ≤max_batch)
+//!                                          job queue ──► N workers
+//!                                                        (own params buf +
+//!                                                         compiled exes)
+//! ```
+//!
+//! * Backpressure: the ingress channel is bounded; when full, `encode`
+//!   returns [`Reject::Overloaded`] instead of queueing unboundedly.
+//! * Each worker holds its **own** device copy of the parameters (PJRT
+//!   buffers are single-threaded objects); executables come from the shared
+//!   compile cache.
+//! * Fixed-shape artifacts: requests are padded to the bucket length and
+//!   the batch is padded to the artifact batch dim; the padding waste is
+//!   tracked in [`Metrics`] (see `router.rs` for why SQA cares less).
+
+use crate::config::ServeConfig;
+use crate::coordinator::batcher::{DynamicBatcher, PendingBatch};
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::request::{EncodeRequest, EncodeResponse, Reject, TOP_K};
+use crate::coordinator::router::Router;
+use crate::data::pad_to;
+use crate::runtime::{Kind, ModelState, Runtime};
+use anyhow::{Context, Result};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+type Reply = mpsc::Sender<Result<EncodeResponse, Reject>>;
+
+struct Job {
+    batch: PendingBatch,
+    replies: Vec<Reply>,
+}
+
+struct JobQueue {
+    jobs: Mutex<VecDeque<Option<Job>>>,
+    cv: Condvar,
+}
+
+impl JobQueue {
+    fn push(&self, job: Option<Job>) {
+        self.jobs.lock().unwrap().push_back(job);
+        self.cv.notify_one();
+    }
+
+    fn pop(&self) -> Option<Job> {
+        let mut q = self.jobs.lock().unwrap();
+        loop {
+            if let Some(job) = q.pop_front() {
+                return job; // None = shutdown sentinel
+            }
+            q = self.cv.wait(q).unwrap();
+        }
+    }
+}
+
+/// Public handle; cheap to clone, shuts the engine down when the last
+/// handle drops.
+pub struct Engine {
+    ingress: mpsc::SyncSender<(EncodeRequest, Reply)>,
+    router: Router,
+    pub metrics: Arc<Metrics>,
+    next_id: AtomicU64,
+    shutdown: Arc<AtomicBool>,
+    threads: Vec<std::thread::JoinHandle<()>>,
+    jobq: Arc<JobQueue>,
+    pub batch_dim: usize,
+}
+
+impl Engine {
+    /// Build the engine: compile fwd artifacts for every bucket, spawn
+    /// dispatcher + workers, initialize per-worker parameter buffers from
+    /// `seed` (or a caller-trained parameter vector).
+    pub fn start(rt: &Runtime, cfg: &ServeConfig, params_host: Option<Vec<f32>>) -> Result<Self> {
+        let manifest = rt.manifest();
+        let buckets = manifest.fwd_seqs(&cfg.family, &cfg.variant, "xla");
+        anyhow::ensure!(
+            !buckets.is_empty(),
+            "no fwd artifacts for {}/{} — run `make artifacts`",
+            cfg.family,
+            cfg.variant
+        );
+        let router = Router::new(buckets.clone());
+        let entry = manifest.variant(&cfg.family, &cfg.variant)?;
+        let dims = manifest.family(&cfg.family)?.dims.clone();
+
+        // Resolve parameters on host once; each worker uploads its own copy.
+        let params_host = match params_host {
+            Some(p) => {
+                anyhow::ensure!(p.len() == entry.n_params, "param size mismatch");
+                p
+            }
+            None => {
+                let state = ModelState::init(rt, &cfg.family, &cfg.variant, 7)?;
+                state.to_host(rt)?
+            }
+        };
+
+        // Compile per-bucket artifacts up front (cache is shared).
+        let mut artifacts = Vec::new();
+        let mut batch_dim = 0;
+        for &b in &buckets {
+            let a = manifest.find(&cfg.family, &cfg.variant, Kind::Fwd, Some(b), None)?;
+            batch_dim = a.batch.context("fwd artifact missing batch")?;
+            rt.compile_artifact(a)?;
+            artifacts.push((b, a.clone()));
+        }
+
+        let metrics = Arc::new(Metrics::new());
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let jobq = Arc::new(JobQueue {
+            jobs: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+        });
+        let (ingress_tx, ingress_rx) = mpsc::sync_channel(cfg.queue_capacity);
+
+        let mut threads = Vec::new();
+
+        // Dispatcher.
+        {
+            let jobq = Arc::clone(&jobq);
+            let shutdown = Arc::clone(&shutdown);
+            let max_wait = Duration::from_millis(cfg.max_wait_ms);
+            let max_batch = cfg.max_batch.min(batch_dim);
+            let bucket_list = buckets.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name("dispatcher".into())
+                    .spawn(move || {
+                        dispatcher_loop(
+                            ingress_rx,
+                            jobq,
+                            shutdown,
+                            &bucket_list,
+                            max_batch,
+                            max_wait,
+                        )
+                    })?,
+            );
+        }
+
+        // Workers.
+        for w in 0..cfg.workers.max(1) {
+            let rt = rt.clone();
+            let jobq = Arc::clone(&jobq);
+            let metrics = Arc::clone(&metrics);
+            let params_host = params_host.clone();
+            let artifacts = artifacts.clone();
+            let n_params = entry.n_params;
+            let vocab = dims.vocab;
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("worker-{w}"))
+                    .spawn(move || {
+                        if let Err(e) =
+                            worker_loop(rt, jobq, metrics, params_host, n_params, vocab, artifacts)
+                        {
+                            log::error!("worker-{w} died: {e:#}");
+                        }
+                    })?,
+            );
+        }
+
+        Ok(Self {
+            ingress: ingress_tx,
+            router,
+            metrics,
+            next_id: AtomicU64::new(1),
+            shutdown,
+            threads,
+            jobq,
+            batch_dim,
+        })
+    }
+
+    pub fn buckets(&self) -> &[usize] {
+        self.router.buckets()
+    }
+
+    /// Blocking encode. Returns backpressure/too-long rejections directly.
+    pub fn encode(&self, tokens: Vec<u32>) -> Result<EncodeResponse, Reject> {
+        self.metrics.requests.fetch_add(1, Ordering::Relaxed);
+        if self.shutdown.load(Ordering::Relaxed) {
+            return Err(Reject::Shutdown);
+        }
+        if let Err(r) = self.router.route(tokens.len()) {
+            self.metrics.too_long.fetch_add(1, Ordering::Relaxed);
+            return Err(r);
+        }
+        let req = EncodeRequest {
+            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            tokens,
+            submitted: Instant::now(),
+        };
+        let (tx, rx) = mpsc::channel();
+        match self.ingress.try_send((req, tx)) {
+            Ok(()) => {}
+            Err(mpsc::TrySendError::Full(_)) => {
+                self.metrics.shed.fetch_add(1, Ordering::Relaxed);
+                return Err(Reject::Overloaded);
+            }
+            Err(mpsc::TrySendError::Disconnected(_)) => return Err(Reject::Shutdown),
+        }
+        let resp = rx.recv().map_err(|_| Reject::Shutdown)??;
+        self.metrics.responses.fetch_add(1, Ordering::Relaxed);
+        self.metrics
+            .record_latency(resp.total_ms, resp.queue_ms);
+        Ok(resp)
+    }
+
+    pub fn shutdown(mut self) {
+        self.do_shutdown();
+    }
+
+    fn do_shutdown(&mut self) {
+        if self.shutdown.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        // Closing ingress ends the dispatcher; it pushes worker sentinels.
+        let (closed_tx, _) = mpsc::sync_channel(1);
+        let _ = std::mem::replace(&mut self.ingress, closed_tx);
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+        // Safety net: make sure any stragglers see sentinels.
+        self.jobq.push(None);
+    }
+}
+
+impl Drop for Engine {
+    fn drop(&mut self) {
+        self.do_shutdown();
+    }
+}
+
+fn dispatcher_loop(
+    ingress: mpsc::Receiver<(EncodeRequest, Reply)>,
+    jobq: Arc<JobQueue>,
+    shutdown: Arc<AtomicBool>,
+    buckets: &[usize],
+    max_batch: usize,
+    max_wait: Duration,
+) {
+    let router = Router::new(buckets.to_vec());
+    let mut batcher = DynamicBatcher::new(buckets, max_batch, max_wait);
+    let mut replies: std::collections::HashMap<u64, Reply> = std::collections::HashMap::new();
+    loop {
+        let now = Instant::now();
+        let timeout = batcher.next_deadline(now).unwrap_or(Duration::from_millis(50));
+        match ingress.recv_timeout(timeout) {
+            Ok((req, reply)) => {
+                // Routing was validated client-side; re-route for the bucket.
+                if let Ok(bucket) = router.route(req.tokens.len()) {
+                    replies.insert(req.id, reply);
+                    batcher.push(bucket, req);
+                } else {
+                    let _ = reply.send(Err(Reject::TooLong {
+                        max: router.max_len(),
+                    }));
+                }
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {}
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                // Drain and stop.
+                for b in batcher.ready(Instant::now(), true) {
+                    let r: Vec<Reply> = b
+                        .requests
+                        .iter()
+                        .filter_map(|rq| replies.remove(&rq.id))
+                        .collect();
+                    jobq.push(Some(Job { batch: b, replies: r }));
+                }
+                shutdown.store(true, Ordering::SeqCst);
+                // One sentinel per possible worker (generous).
+                for _ in 0..64 {
+                    jobq.push(None);
+                }
+                return;
+            }
+        }
+        for b in batcher.ready(Instant::now(), false) {
+            let r: Vec<Reply> = b
+                .requests
+                .iter()
+                .filter_map(|rq| replies.remove(&rq.id))
+                .collect();
+            jobq.push(Some(Job { batch: b, replies: r }));
+        }
+    }
+}
+
+fn worker_loop(
+    rt: Runtime,
+    jobq: Arc<JobQueue>,
+    metrics: Arc<Metrics>,
+    params_host: Vec<f32>,
+    n_params: usize,
+    vocab: usize,
+    artifacts: Vec<(usize, crate::runtime::Artifact)>,
+) -> Result<()> {
+    // Per-worker device parameters + executables.
+    let params = rt.buf_f32(&params_host, &[n_params])?;
+    drop(params_host);
+    let mut exes = std::collections::HashMap::new();
+    let mut batch_dims = std::collections::HashMap::new();
+    for (bucket, a) in &artifacts {
+        exes.insert(*bucket, rt.compile_artifact(a)?);
+        batch_dims.insert(*bucket, a.batch.context("batch")?);
+    }
+
+    while let Some(job) = jobq.pop() {
+        let bucket = job.batch.bucket;
+        let bdim = batch_dims[&bucket];
+        let exe = &exes[&bucket];
+        let t_exec = Instant::now();
+
+        // Assemble the padded [bdim, bucket] token matrix.
+        let mut tokens = vec![0i32; bdim * bucket];
+        let mut lens = Vec::with_capacity(job.batch.requests.len());
+        for (row, req) in job.batch.requests.iter().enumerate() {
+            let (padded, n) = pad_to(&req.tokens, bucket, 0);
+            tokens[row * bucket..(row + 1) * bucket].copy_from_slice(&padded);
+            lens.push(n);
+        }
+        let token_buf = rt.buf_i32(&tokens, &[bdim, bucket])?;
+        let out = rt
+            .execute1(exe, &[&params, &token_buf])
+            .context("fwd execution")?;
+        let logits = rt.to_vec_f32(&out)?; // [bdim, bucket, vocab]
+
+        let exec_ms = t_exec.elapsed().as_secs_f64() * 1e3;
+        let n_reqs = job.batch.requests.len();
+        metrics.batches.fetch_add(1, Ordering::Relaxed);
+        metrics
+            .batched_requests
+            .fetch_add(n_reqs as u64, Ordering::Relaxed);
+        metrics
+            .tokens_processed
+            .fetch_add((bdim * bucket) as u64, Ordering::Relaxed);
+        let real: usize = lens.iter().sum();
+        metrics
+            .padded_tokens
+            .fetch_add((bdim * bucket - real) as u64, Ordering::Relaxed);
+
+        for (row, (req, reply)) in job
+            .batch
+            .requests
+            .iter()
+            .zip(job.replies.iter())
+            .enumerate()
+        {
+            let last = lens[row].saturating_sub(1);
+            let base = (row * bucket + last) * vocab;
+            let row_logits = &logits[base..base + vocab];
+            let top = top_k(row_logits, TOP_K);
+            let queue_ms =
+                (t_exec.duration_since(req.submitted)).as_secs_f64() * 1e3;
+            let _ = reply.send(Ok(EncodeResponse {
+                id: req.id,
+                bucket,
+                batch_size: n_reqs,
+                top,
+                queue_ms,
+                total_ms: queue_ms + exec_ms,
+            }));
+        }
+    }
+    Ok(())
+}
+
+/// Indices+values of the k largest entries (k small — selection by scan).
+pub fn top_k(xs: &[f32], k: usize) -> Vec<(i32, f32)> {
+    let mut top: Vec<(i32, f32)> = Vec::with_capacity(k + 1);
+    for (i, &x) in xs.iter().enumerate() {
+        if top.len() < k || x > top.last().unwrap().1 {
+            let pos = top
+                .iter()
+                .position(|&(_, v)| x > v)
+                .unwrap_or(top.len());
+            top.insert(pos, (i as i32, x));
+            top.truncate(k);
+        }
+    }
+    top
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn top_k_orders_descending() {
+        let xs = [0.1, 5.0, -2.0, 3.0, 4.0];
+        let t = top_k(&xs, 3);
+        assert_eq!(t, vec![(1, 5.0), (4, 4.0), (3, 3.0)]);
+    }
+
+    #[test]
+    fn top_k_handles_short_input() {
+        let t = top_k(&[1.0, 2.0], 5);
+        assert_eq!(t.len(), 2);
+        assert_eq!(t[0], (1, 2.0));
+    }
+
+    #[test]
+    fn top_k_ties_keep_first() {
+        let t = top_k(&[1.0, 1.0, 1.0], 2);
+        assert_eq!(t, vec![(0, 1.0), (1, 1.0)]);
+    }
+}

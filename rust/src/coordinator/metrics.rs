@@ -1,0 +1,101 @@
+//! Serving metrics: atomic counters + latency summaries.
+
+use crate::util::json::Json;
+use crate::util::stats::Summary;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub responses: AtomicU64,
+    pub shed: AtomicU64,
+    pub too_long: AtomicU64,
+    pub batches: AtomicU64,
+    pub batched_requests: AtomicU64,
+    pub tokens_processed: AtomicU64,
+    pub padded_tokens: AtomicU64,
+    latency_ms: Mutex<Summary>,
+    queue_ms: Mutex<Summary>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_latency(&self, total_ms: f64, queue_ms: f64) {
+        self.latency_ms.lock().unwrap().add(total_ms);
+        self.queue_ms.lock().unwrap().add(queue_ms);
+    }
+
+    pub fn mean_batch_size(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            return 0.0;
+        }
+        self.batched_requests.load(Ordering::Relaxed) as f64 / b as f64
+    }
+
+    /// Fraction of processed tokens that were padding.
+    pub fn padding_fraction(&self) -> f64 {
+        let total = self.tokens_processed.load(Ordering::Relaxed);
+        if total == 0 {
+            return 0.0;
+        }
+        self.padded_tokens.load(Ordering::Relaxed) as f64 / total as f64
+    }
+
+    pub fn snapshot(&self) -> Json {
+        let lat = self.latency_ms.lock().unwrap();
+        let q = self.queue_ms.lock().unwrap();
+        Json::obj(vec![
+            ("requests", Json::num(self.requests.load(Ordering::Relaxed) as f64)),
+            ("responses", Json::num(self.responses.load(Ordering::Relaxed) as f64)),
+            ("shed", Json::num(self.shed.load(Ordering::Relaxed) as f64)),
+            ("too_long", Json::num(self.too_long.load(Ordering::Relaxed) as f64)),
+            ("batches", Json::num(self.batches.load(Ordering::Relaxed) as f64)),
+            ("mean_batch_size", Json::num(self.mean_batch_size())),
+            ("padding_fraction", Json::num(self.padding_fraction())),
+            ("latency_p50_ms", Json::num(lat.p50())),
+            ("latency_p99_ms", Json::num(lat.p99())),
+            ("queue_p50_ms", Json::num(q.p50())),
+            (
+                "tokens_processed",
+                Json::num(self.tokens_processed.load(Ordering::Relaxed) as f64),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_size_and_padding() {
+        let m = Metrics::new();
+        m.batches.store(2, Ordering::Relaxed);
+        m.batched_requests.store(6, Ordering::Relaxed);
+        m.tokens_processed.store(100, Ordering::Relaxed);
+        m.padded_tokens.store(25, Ordering::Relaxed);
+        assert_eq!(m.mean_batch_size(), 3.0);
+        assert_eq!(m.padding_fraction(), 0.25);
+    }
+
+    #[test]
+    fn snapshot_is_valid_json() {
+        let m = Metrics::new();
+        m.record_latency(12.0, 3.0);
+        let s = m.snapshot().to_string();
+        let parsed = crate::util::json::Json::parse(&s).unwrap();
+        assert_eq!(parsed.get("latency_p50_ms").unwrap().as_f64(), Some(12.0));
+    }
+
+    #[test]
+    fn empty_metrics_dont_divide_by_zero() {
+        let m = Metrics::new();
+        assert_eq!(m.mean_batch_size(), 0.0);
+        assert_eq!(m.padding_fraction(), 0.0);
+    }
+}

@@ -1,0 +1,21 @@
+//! Encoder-serving coordinator — the paper's "prompt processing / encoder"
+//! compute-bound scenario as a real serving engine.
+//!
+//! Pieces (each unit-tested in isolation):
+//!   * [`request`] — wire types and rejection reasons;
+//!   * [`router`]  — length-bucket routing over fixed-shape artifacts;
+//!   * [`batcher`] — dynamic batching policy (max-batch / deadline);
+//!   * [`engine`]  — dispatcher + worker pool + device execution;
+//!   * [`metrics`] — counters, latency percentiles, padding accounting.
+
+pub mod batcher;
+pub mod engine;
+pub mod metrics;
+pub mod request;
+pub mod router;
+
+pub use batcher::{DynamicBatcher, PendingBatch};
+pub use engine::Engine;
+pub use metrics::Metrics;
+pub use request::{EncodeRequest, EncodeResponse, Reject};
+pub use router::Router;

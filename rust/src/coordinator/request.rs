@@ -1,0 +1,50 @@
+//! Request/response types of the encoder-serving engine.
+
+use std::time::Instant;
+
+/// Number of top-logit entries returned per request.
+pub const TOP_K: usize = 5;
+
+/// A batched-encode request: classify/score a token sequence.
+#[derive(Debug, Clone)]
+pub struct EncodeRequest {
+    pub id: u64,
+    pub tokens: Vec<u32>,
+    pub submitted: Instant,
+}
+
+/// Response: top-k next-token logits at the last real (non-pad) position —
+/// a compact proxy for "the encoder ran over the full sequence" that keeps
+/// the wire payload small.
+#[derive(Debug, Clone)]
+pub struct EncodeResponse {
+    pub id: u64,
+    /// Sequence bucket the request was routed to.
+    pub bucket: usize,
+    /// Requests merged into the same executable call.
+    pub batch_size: usize,
+    pub top: Vec<(i32, f32)>,
+    pub queue_ms: f64,
+    pub total_ms: f64,
+}
+
+/// Why a request was rejected.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Reject {
+    /// Queue full — backpressure (client should retry with backoff).
+    Overloaded,
+    /// Longer than the largest compiled sequence bucket.
+    TooLong { max: usize },
+    /// Engine is shutting down.
+    Shutdown,
+}
+
+impl std::fmt::Display for Reject {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Reject::Overloaded => write!(f, "overloaded"),
+            Reject::TooLong { max } => write!(f, "sequence too long (max {max})"),
+            Reject::Shutdown => write!(f, "shutting down"),
+        }
+    }
+}

@@ -1,0 +1,84 @@
+//! Length-bucket router: pick the smallest compiled sequence bucket that
+//! fits a request (artifacts are fixed-shape; shorter requests are padded).
+//!
+//! This is the serving-side face of the paper's compute argument: padding
+//! a request up to bucket `S` costs `O(Hq · S²)` attention FLOPs, so tight
+//! buckets matter *more* for MHA-like variants than for SQA — the router
+//! records the padding waste so benches can report it.
+
+use crate::coordinator::request::Reject;
+
+/// Immutable bucket table (sorted ascending).
+#[derive(Debug, Clone)]
+pub struct Router {
+    buckets: Vec<usize>,
+}
+
+impl Router {
+    pub fn new(mut buckets: Vec<usize>) -> Self {
+        assert!(!buckets.is_empty(), "need at least one sequence bucket");
+        buckets.sort_unstable();
+        buckets.dedup();
+        Self { buckets }
+    }
+
+    pub fn buckets(&self) -> &[usize] {
+        &self.buckets
+    }
+
+    pub fn max_len(&self) -> usize {
+        *self.buckets.last().unwrap()
+    }
+
+    /// Smallest bucket with `bucket >= len`.
+    pub fn route(&self, len: usize) -> Result<usize, Reject> {
+        self.buckets
+            .iter()
+            .copied()
+            .find(|&b| b >= len)
+            .ok_or(Reject::TooLong {
+                max: self.max_len(),
+            })
+    }
+
+    /// Fraction of the bucket wasted on padding for a request of `len`.
+    pub fn padding_waste(&self, len: usize) -> f64 {
+        match self.route(len) {
+            Ok(b) => 1.0 - len as f64 / b as f64,
+            Err(_) => 0.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn routes_to_smallest_fitting() {
+        let r = Router::new(vec![256, 64, 128]);
+        assert_eq!(r.route(1).unwrap(), 64);
+        assert_eq!(r.route(64).unwrap(), 64);
+        assert_eq!(r.route(65).unwrap(), 128);
+        assert_eq!(r.route(256).unwrap(), 256);
+    }
+
+    #[test]
+    fn too_long_is_rejected() {
+        let r = Router::new(vec![64, 128]);
+        assert_eq!(r.route(129), Err(Reject::TooLong { max: 128 }));
+    }
+
+    #[test]
+    fn padding_waste() {
+        let r = Router::new(vec![100]);
+        assert!((r.padding_waste(75) - 0.25).abs() < 1e-9);
+        assert_eq!(r.padding_waste(100), 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one")]
+    fn empty_buckets_panic() {
+        Router::new(vec![]);
+    }
+}

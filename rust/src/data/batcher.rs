@@ -1,0 +1,173 @@
+//! Batching: turn a token stream into fixed-shape (tokens, targets) pairs.
+//!
+//! Deterministic train/val split: the stream is cut into contiguous
+//! `seq+1`-token windows; every `val_every`-th window goes to the val
+//! split. Targets are tokens shifted left by one (next-token prediction),
+//! matching the L2 loss (`python/compile/model.py::loss_and_acc`).
+
+/// One batch in the artifact's expected layout.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Batch {
+    pub batch: usize,
+    pub seq: usize,
+    /// [batch * seq] row-major i32.
+    pub tokens: Vec<i32>,
+    pub targets: Vec<i32>,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Split {
+    Train,
+    Val,
+}
+
+/// Iterator of batches over a finite token buffer (epochs wrap around).
+pub struct Batcher {
+    data: Vec<u32>,
+    batch: usize,
+    seq: usize,
+    split: Split,
+    val_every: usize,
+    /// Next window index (pre-split-filter).
+    cursor: usize,
+}
+
+impl Batcher {
+    pub fn new(data: Vec<u32>, batch: usize, seq: usize, split: Split) -> Self {
+        assert!(data.len() >= (seq + 1) * batch, "token buffer too small");
+        Self {
+            data,
+            batch,
+            seq,
+            split,
+            val_every: 10,
+            cursor: 0,
+        }
+    }
+
+    fn n_windows(&self) -> usize {
+        self.data.len() / (self.seq + 1)
+    }
+
+    fn window_in_split(&self, w: usize) -> bool {
+        let is_val = w % self.val_every == self.val_every - 1;
+        match self.split {
+            Split::Val => is_val,
+            Split::Train => !is_val,
+        }
+    }
+
+    fn next_window(&mut self) -> usize {
+        loop {
+            let w = self.cursor % self.n_windows();
+            self.cursor += 1;
+            if self.window_in_split(w) {
+                return w;
+            }
+        }
+    }
+
+    /// Produce the next batch (wraps around the buffer indefinitely).
+    pub fn next_batch(&mut self) -> Batch {
+        let mut tokens = Vec::with_capacity(self.batch * self.seq);
+        let mut targets = Vec::with_capacity(self.batch * self.seq);
+        for _ in 0..self.batch {
+            let w = self.next_window();
+            let start = w * (self.seq + 1);
+            let window = &self.data[start..start + self.seq + 1];
+            tokens.extend(window[..self.seq].iter().map(|&t| t as i32));
+            targets.extend(window[1..].iter().map(|&t| t as i32));
+        }
+        Batch {
+            batch: self.batch,
+            seq: self.seq,
+            tokens,
+            targets,
+        }
+    }
+}
+
+/// Right-pad (or truncate) a token sequence to `seq`, returning the padded
+/// vector and the original length — used by the serving router.
+pub fn pad_to(tokens: &[u32], seq: usize, pad_id: u32) -> (Vec<i32>, usize) {
+    let n = tokens.len().min(seq);
+    let mut out = Vec::with_capacity(seq);
+    out.extend(tokens[..n].iter().map(|&t| t as i32));
+    out.resize(seq, pad_id as i32);
+    (out, n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stream(n: usize) -> Vec<u32> {
+        (0..n as u32).collect()
+    }
+
+    #[test]
+    fn targets_are_shifted_tokens() {
+        let mut b = Batcher::new(stream(1000), 2, 8, Split::Train);
+        let batch = b.next_batch();
+        for row in 0..2 {
+            for i in 0..7 {
+                assert_eq!(
+                    batch.targets[row * 8 + i],
+                    batch.tokens[row * 8 + i + 1]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn train_and_val_windows_disjoint() {
+        let data = stream(11 * 9); // 11 windows of seq+1=9
+        let mut tr = Batcher::new(data.clone(), 1, 8, Split::Train);
+        let mut va = Batcher::new(data, 1, 8, Split::Val);
+        let mut train_starts = std::collections::HashSet::new();
+        for _ in 0..30 {
+            train_starts.insert(tr.next_batch().tokens[0]);
+        }
+        for _ in 0..5 {
+            let v = va.next_batch().tokens[0];
+            assert!(!train_starts.contains(&v), "val window leaked into train");
+        }
+    }
+
+    #[test]
+    fn wraps_around() {
+        let mut b = Batcher::new(stream(64), 2, 7, Split::Train);
+        let first = b.next_batch();
+        for _ in 0..20 {
+            b.next_batch();
+        }
+        // Still produces valid batches after wrapping.
+        let later = b.next_batch();
+        assert_eq!(later.tokens.len(), first.tokens.len());
+    }
+
+    #[test]
+    fn deterministic() {
+        let mk = || {
+            let mut b = Batcher::new(stream(500), 2, 8, Split::Train);
+            (0..5).map(|_| b.next_batch()).collect::<Vec<_>>()
+        };
+        assert_eq!(mk(), mk());
+    }
+
+    #[test]
+    fn pad_to_works() {
+        let (p, n) = pad_to(&[5, 6, 7], 6, 0);
+        assert_eq!(p, vec![5, 6, 7, 0, 0, 0]);
+        assert_eq!(n, 3);
+        let (p, n) = pad_to(&[1, 2, 3, 4], 2, 0);
+        assert_eq!(p, vec![1, 2]);
+        assert_eq!(n, 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "too small")]
+    fn rejects_tiny_buffer() {
+        Batcher::new(stream(10), 4, 8, Split::Train);
+    }
+}

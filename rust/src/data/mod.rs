@@ -1,0 +1,68 @@
+//! Synthetic-data pipeline: corpora, tokenizer, batching.
+//!
+//! Substitutions for the paper's datasets (DESIGN.md §3):
+//!   * [`corpus`] — Zipf/Markov token stream ↔ wikimedia/wikipedia subset
+//!     (Table 1 dense models);
+//!   * [`stories`] — procedural story grammar ↔ roneneldan/TinyStories
+//!     (Table 2 MoE models);
+//!   * [`tokenizer`] — word-level vocab with pad/bos/eos/unk specials;
+//!   * [`batcher`] — fixed-shape next-token batches + train/val split.
+
+pub mod batcher;
+pub mod corpus;
+pub mod stories;
+pub mod tokenizer;
+
+pub use batcher::{pad_to, Batch, Batcher, Split};
+pub use corpus::{CorpusConfig, ZipfCorpus};
+pub use stories::StoryGen;
+pub use tokenizer::Tokenizer;
+
+/// Build the training token stream for a model family.
+///
+/// * dense families draw from the Zipf/Markov corpus clamped to `vocab`;
+/// * MoE families tokenize the story grammar (its lexicon is far smaller
+///   than the model vocab — the rest of the ids stay unused, as with any
+///   tokenizer whose vocab exceeds a small dataset's support).
+pub fn tokens_for_family(
+    family: &str,
+    vocab: usize,
+    n_tokens: usize,
+    seed: u64,
+) -> Vec<u32> {
+    if family.starts_with("moe") {
+        let tok = Tokenizer::for_stories();
+        assert!(tok.vocab_size() <= vocab, "story lexicon exceeds model vocab");
+        let mut sg = StoryGen::new(seed);
+        let words = sg.words(n_tokens);
+        words.iter().map(|w| tok.encode_word(w)).collect()
+    } else {
+        let cfg = CorpusConfig {
+            vocab,
+            ..CorpusConfig::default()
+        };
+        ZipfCorpus::new(cfg, seed).tokens(n_tokens)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn family_streams_fit_vocab() {
+        for (fam, vocab) in [("dense_sm", 4096), ("moe_sm", 2048), ("tiny", 2048)] {
+            let toks = tokens_for_family(fam, vocab, 2000, 1);
+            assert_eq!(toks.len(), 2000);
+            assert!(toks.iter().all(|&t| (t as usize) < vocab), "{fam}");
+        }
+    }
+
+    #[test]
+    fn moe_stream_uses_story_tokens() {
+        let toks = tokens_for_family("moe_sm", 2048, 1000, 2);
+        let tok = Tokenizer::for_stories();
+        // All ids fall inside the story vocab.
+        assert!(toks.iter().all(|&t| (t as usize) < tok.vocab_size()));
+    }
+}

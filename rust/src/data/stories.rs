@@ -1,0 +1,193 @@
+//! Procedural story generator — the TinyStories stand-in (Table 2).
+//!
+//! TinyStories (Eldan & Li, 2023) is low-entropy, template-heavy children's
+//! prose; small models learn it quickly. This generator produces the same
+//! *statistical* character with a context-free grammar over a small
+//! lexicon: simple SVO sentences, recurring characters, connective tissue,
+//! and a closing moral. Deterministic per seed.
+
+use crate::util::rng::Pcg64;
+
+const NAMES: &[&str] = &[
+    "tom", "lily", "max", "anna", "ben", "mia", "sam", "zoe",
+];
+const ANIMALS: &[&str] = &[
+    "cat", "dog", "bird", "bunny", "fox", "frog", "duck", "bear",
+];
+const OBJECTS: &[&str] = &[
+    "ball", "kite", "book", "cake", "hat", "boat", "star", "drum", "apple", "box",
+];
+const ADJS: &[&str] = &[
+    "big", "small", "red", "happy", "shiny", "soft", "funny", "brave", "little", "kind",
+];
+const VERBS_T: &[&str] = &[
+    "found", "saw", "liked", "made", "took", "gave", "lost", "hid", "shared", "painted",
+];
+const VERBS_I: &[&str] = &[
+    "smiled", "laughed", "jumped", "ran", "sang", "danced", "slept", "played",
+];
+const PLACES: &[&str] = &[
+    "park", "garden", "house", "forest", "beach", "hill", "room", "yard",
+];
+const CONNECT: &[&str] = &["then", "so", "but", "and"];
+const MORALS: &[&str] = &[
+    "they were happy",
+    "it was a good day",
+    "they became friends",
+    "everyone smiled",
+];
+
+/// Full lexicon (for vocabulary construction) — every word the grammar emits.
+pub fn lexicon() -> Vec<&'static str> {
+    let mut v = Vec::new();
+    v.extend_from_slice(NAMES);
+    v.extend_from_slice(ANIMALS);
+    v.extend_from_slice(OBJECTS);
+    v.extend_from_slice(ADJS);
+    v.extend_from_slice(VERBS_T);
+    v.extend_from_slice(VERBS_I);
+    v.extend_from_slice(PLACES);
+    v.extend_from_slice(CONNECT);
+    for m in MORALS {
+        v.extend(m.split(' '));
+    }
+    v.extend_from_slice(&[
+        "a", "the", "in", "one", "day", "was", "there", "with", "it", "very", ".", ",",
+    ]);
+    v.sort_unstable();
+    v.dedup();
+    v
+}
+
+/// Generates stories as whitespace-separated word streams.
+pub struct StoryGen {
+    rng: Pcg64,
+}
+
+impl StoryGen {
+    pub fn new(seed: u64) -> Self {
+        Self {
+            rng: Pcg64::new_stream(seed, 0x57012),
+        }
+    }
+
+    fn sentence(&mut self, hero: &str, words: &mut Vec<String>) {
+        let r = &mut self.rng;
+        match r.below(4) {
+            0 => {
+                // hero found a adj object .
+                for w in [
+                    hero,
+                    *r.choice(VERBS_T),
+                    "a",
+                    *r.choice(ADJS),
+                    *r.choice(OBJECTS),
+                    ".",
+                ] {
+                    words.push(w.to_string());
+                }
+            }
+            1 => {
+                // the animal verb_i in the place .
+                for w in [
+                    "the",
+                    *r.choice(ANIMALS),
+                    *r.choice(VERBS_I),
+                    "in",
+                    "the",
+                    *r.choice(PLACES),
+                    ".",
+                ] {
+                    words.push(w.to_string());
+                }
+            }
+            2 => {
+                // connective hero verb_i with the animal .
+                for w in [
+                    *r.choice(CONNECT),
+                    hero,
+                    *r.choice(VERBS_I),
+                    "with",
+                    "the",
+                    *r.choice(ANIMALS),
+                    ".",
+                ] {
+                    words.push(w.to_string());
+                }
+            }
+            _ => {
+                // it was very adj .
+                for w in ["it", "was", "very", *r.choice(ADJS), "."] {
+                    words.push(w.to_string());
+                }
+            }
+        }
+    }
+
+    /// One story of `n_sentences`, as a flat word vector.
+    pub fn story(&mut self, n_sentences: usize) -> Vec<String> {
+        let hero = *self.rng.choice(NAMES);
+        let mut words = Vec::new();
+        // "one day there was a adj name ."
+        for w in ["one", "day", "there", "was", "a"] {
+            words.push(w.to_string());
+        }
+        words.push(self.rng.choice(ADJS).to_string());
+        words.push(hero.to_string());
+        words.push(".".to_string());
+        for _ in 0..n_sentences {
+            self.sentence(hero, &mut words);
+        }
+        for w in MORALS[self.rng.below(MORALS.len() as u64) as usize].split(' ') {
+            words.push(w.to_string());
+        }
+        words.push(".".to_string());
+        words
+    }
+
+    /// Stream `n_words` of story text (stories concatenated).
+    pub fn words(&mut self, n_words: usize) -> Vec<String> {
+        let mut out = Vec::with_capacity(n_words);
+        while out.len() < n_words {
+            let n = self.rng.range_usize(3, 8);
+            out.extend(self.story(n));
+        }
+        out.truncate(n_words);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        assert_eq!(StoryGen::new(1).words(200), StoryGen::new(1).words(200));
+        assert_ne!(StoryGen::new(1).words(200), StoryGen::new(2).words(200));
+    }
+
+    #[test]
+    fn all_words_in_lexicon() {
+        let lex: std::collections::HashSet<_> = lexicon().into_iter().collect();
+        for w in StoryGen::new(3).words(5000) {
+            assert!(lex.contains(w.as_str()), "{w} not in lexicon");
+        }
+    }
+
+    #[test]
+    fn stories_have_structure() {
+        let words = StoryGen::new(4).words(10_000);
+        let periods = words.iter().filter(|w| *w == ".").count();
+        // Sentences average ~6 words.
+        assert!(periods > 1000, "{periods}");
+        assert!(words.iter().any(|w| w == "one"));
+    }
+
+    #[test]
+    fn lexicon_is_small_and_stable() {
+        let lex = lexicon();
+        assert!(lex.len() < 120, "{}", lex.len());
+        assert_eq!(lex, lexicon());
+    }
+}

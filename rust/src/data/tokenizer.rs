@@ -1,0 +1,137 @@
+//! Word-level tokenizer with reserved specials and byte-ish fallback.
+//!
+//! Used by the story pipeline (Table 2) and the serving example (text in,
+//! embeddings/logits out). Vocabulary is fixed at construction —
+//! deterministic, no training pass needed — with specials:
+//!   0 = <pad>, 1 = <bos>, 2 = <eos>, 3 = <unk>.
+
+use std::collections::HashMap;
+
+pub const PAD: u32 = 0;
+pub const BOS: u32 = 1;
+pub const EOS: u32 = 2;
+pub const UNK: u32 = 3;
+pub const N_SPECIALS: u32 = 4;
+
+#[derive(Debug, Clone)]
+pub struct Tokenizer {
+    word_to_id: HashMap<String, u32>,
+    id_to_word: Vec<String>,
+}
+
+impl Tokenizer {
+    /// Build from a word list; ids are assigned in the given order after
+    /// the specials.
+    pub fn from_words<I: IntoIterator<Item = String>>(words: I) -> Self {
+        let mut id_to_word = vec![
+            "<pad>".to_string(),
+            "<bos>".to_string(),
+            "<eos>".to_string(),
+            "<unk>".to_string(),
+        ];
+        let mut word_to_id = HashMap::new();
+        for w in words {
+            if !word_to_id.contains_key(&w) {
+                word_to_id.insert(w.clone(), id_to_word.len() as u32);
+                id_to_word.push(w);
+            }
+        }
+        Self {
+            word_to_id,
+            id_to_word,
+        }
+    }
+
+    /// The Table-2 tokenizer: story lexicon vocabulary.
+    pub fn for_stories() -> Self {
+        Self::from_words(
+            crate::data::stories::lexicon()
+                .into_iter()
+                .map(String::from),
+        )
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        self.id_to_word.len()
+    }
+
+    pub fn encode_word(&self, w: &str) -> u32 {
+        self.word_to_id.get(w).copied().unwrap_or(UNK)
+    }
+
+    /// Whitespace-split encode, no specials added.
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        text.split_whitespace()
+            .map(|w| self.encode_word(&w.to_lowercase()))
+            .collect()
+    }
+
+    /// Encode with `<bos>`/`<eos>` wrapping.
+    pub fn encode_wrapped(&self, text: &str) -> Vec<u32> {
+        let mut v = vec![BOS];
+        v.extend(self.encode(text));
+        v.push(EOS);
+        v
+    }
+
+    pub fn decode(&self, ids: &[u32]) -> String {
+        ids.iter()
+            .map(|&i| {
+                self.id_to_word
+                    .get(i as usize)
+                    .map(|s| s.as_str())
+                    .unwrap_or("<oov>")
+            })
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_known_words() {
+        let t = Tokenizer::for_stories();
+        let ids = t.encode("tom found a red ball .");
+        assert!(ids.iter().all(|&i| i != UNK));
+        assert_eq!(t.decode(&ids), "tom found a red ball .");
+    }
+
+    #[test]
+    fn unknown_maps_to_unk() {
+        let t = Tokenizer::for_stories();
+        assert_eq!(t.encode("xylophone")[0], UNK);
+    }
+
+    #[test]
+    fn wrapped_has_bos_eos() {
+        let t = Tokenizer::for_stories();
+        let ids = t.encode_wrapped("lily smiled");
+        assert_eq!(ids[0], BOS);
+        assert_eq!(*ids.last().unwrap(), EOS);
+    }
+
+    #[test]
+    fn specials_reserved() {
+        let t = Tokenizer::for_stories();
+        assert_eq!(t.decode(&[PAD, BOS, EOS, UNK]), "<pad> <bos> <eos> <unk>");
+        // No lexicon word maps onto a special id.
+        for w in crate::data::stories::lexicon() {
+            assert!(t.encode_word(w) >= N_SPECIALS);
+        }
+    }
+
+    #[test]
+    fn dedup_in_construction() {
+        let t = Tokenizer::from_words(vec!["a".into(), "b".into(), "a".into()]);
+        assert_eq!(t.vocab_size(), 6); // 4 specials + a + b
+    }
+
+    #[test]
+    fn case_insensitive_encode() {
+        let t = Tokenizer::for_stories();
+        assert_eq!(t.encode("TOM"), t.encode("tom"));
+    }
+}

@@ -1,0 +1,237 @@
+//! Autoregressive-decode model — the paper's *other* bottleneck (§2.2, §5).
+//!
+//! Token-by-token generation is memory-bandwidth bound: each step must
+//! stream the whole KV cache from HBM. SQA does not help here (its win is
+//! compute), and the paper is explicit about the trade-off (§5.1–5.2):
+//!
+//!   * sSQA (Hkv = H/2) carries a *larger* KV cache than GQA (Hkv = H/4) —
+//!     slower decode, a deliberate quality choice;
+//!   * xSQA (Hq = Hkv = H/4) matches GQA's cache exactly — identical
+//!     decode, while still 4x cheaper in prefill compute.
+//!
+//! This module is a roofline-style simulator of one decode step: time =
+//! max(bytes_moved / bandwidth, flops / compute). It reproduces the
+//! paper's §5.2 comparisons quantitatively and powers
+//! `sqa flops --decode` and the decode unit tests.
+
+use crate::config::{ModelDims, VariantCfg};
+
+/// Hardware envelope for the roofline (defaults ≈ one A100-40GB,
+/// the paper's benchmark card).
+#[derive(Debug, Clone, Copy)]
+pub struct Hardware {
+    pub hbm_bytes_per_s: f64,
+    pub flops_per_s: f64,
+}
+
+impl Default for Hardware {
+    fn default() -> Self {
+        Self {
+            hbm_bytes_per_s: 1.555e12, // A100 40GB HBM2e
+            flops_per_s: 19.5e12,      // A100 f32 tensor-core sustained
+        }
+    }
+}
+
+/// Breakdown of one decode step at context length `s`.
+#[derive(Debug, Clone, Copy)]
+pub struct DecodeStep {
+    /// Bytes streamed from HBM: KV cache + parameters.
+    pub kv_bytes: u64,
+    pub param_bytes: u64,
+    /// FLOPs of the step (attention over cache + projections/MLP).
+    pub flops: u64,
+    /// Roofline times (seconds).
+    pub mem_time: f64,
+    pub compute_time: f64,
+}
+
+impl DecodeStep {
+    pub fn time(&self) -> f64 {
+        self.mem_time.max(self.compute_time)
+    }
+
+    /// True when the step is memory-bandwidth bound (the paper's premise
+    /// for long contexts).
+    pub fn memory_bound(&self) -> bool {
+        self.mem_time >= self.compute_time
+    }
+}
+
+/// Model one autoregressive decode step at context length `s`.
+///
+/// Parameter count is approximated from dims (tied embeddings); f32 cache.
+pub fn decode_step(dims: &ModelDims, var: &VariantCfg, s: u64, hw: Hardware) -> DecodeStep {
+    let d = dims.d_model as u64;
+    let dh = dims.d_head as u64;
+    let layers = dims.n_layers as u64;
+    let ff = dims.d_ff as u64;
+
+    // KV cache streamed once per step (window caps the live cache).
+    let eff_s = match var.window {
+        Some(w) => s.min(w as u64),
+        None => s,
+    };
+    let kv_bytes = 2 * eff_s * var.hkv as u64 * dh * 4 * layers;
+
+    // Parameters streamed once per step (batch 1: no amortization).
+    let attn_params = layers * d * dh * (2 * var.hq as u64 + 2 * var.hkv as u64);
+    let mlp_params = layers * 3 * d * ff * if dims.n_experts > 0 { dims.n_experts as u64 } else { 1 };
+    let embed_params = dims.vocab as u64 * d;
+    let param_bytes = (attn_params + mlp_params + embed_params) * 4;
+
+    // FLOPs: attention over the cache (Hq heads x eff_s keys, scores+agg)
+    // plus the dense projections/MLP/LM-head for one token.
+    let attn_flops = layers * var.hq as u64 * 2 * 2 * eff_s * dh;
+    let dense_flops = 2 * (attn_params + mlp_params + embed_params);
+    let flops = attn_flops + dense_flops;
+
+    let bytes = kv_bytes + param_bytes;
+    DecodeStep {
+        kv_bytes,
+        param_bytes,
+        flops,
+        mem_time: bytes as f64 / hw.hbm_bytes_per_s,
+        compute_time: flops as f64 / hw.flops_per_s,
+    }
+}
+
+/// Decode-throughput comparison row (tokens/second at context `s`).
+#[derive(Debug, Clone)]
+pub struct DecodeRow {
+    pub variant: String,
+    pub hq: usize,
+    pub hkv: usize,
+    pub kv_mib: f64,
+    pub tok_per_s: f64,
+    pub vs_first: f64,
+}
+
+/// Build the §5.2 decode comparison across a variant set.
+pub fn decode_table(
+    dims: &ModelDims,
+    variants: &[(String, VariantCfg)],
+    s: u64,
+    hw: Hardware,
+) -> Vec<DecodeRow> {
+    let mut rows: Vec<DecodeRow> = Vec::new();
+    let mut first_tps = None;
+    for (name, v) in variants {
+        let step = decode_step(dims, v, s, hw);
+        let tps = 1.0 / step.time();
+        let base = *first_tps.get_or_insert(tps);
+        rows.push(DecodeRow {
+            variant: name.clone(),
+            hq: v.hq,
+            hkv: v.hkv,
+            kv_mib: step.kv_bytes as f64 / (1 << 20) as f64,
+            tok_per_s: tps,
+            vs_first: tps / base,
+        });
+    }
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dims() -> ModelDims {
+        // Llama-7B-ish so the memory-bound regime is realistic.
+        ModelDims {
+            vocab: 32000,
+            d_model: 4096,
+            n_layers: 32,
+            h_total: 32,
+            d_head: 128,
+            d_ff: 11008,
+            n_experts: 0,
+        }
+    }
+
+    fn var(hq: usize, hkv: usize) -> VariantCfg {
+        VariantCfg { hq, hkv, window: None }
+    }
+
+    #[test]
+    fn long_context_decode_is_memory_bound() {
+        let step = decode_step(&dims(), &var(32, 32), 32_768, Hardware::default());
+        assert!(step.memory_bound());
+        // MHA cache at 32k: 2*32768*32*128*4*32 = 32 GiB-ish/4 … sanity > params
+        assert!(step.kv_bytes > step.param_bytes);
+    }
+
+    #[test]
+    fn xsqa_matches_gqa_decode_exactly() {
+        // §5.2: xSQA(8,8) has the same cache as GQA(32,8) -> same decode
+        // time in the memory-bound regime (flops differ but don't matter).
+        let hw = Hardware::default();
+        let gqa = decode_step(&dims(), &var(32, 8), 262_144, hw);
+        let xsqa = decode_step(&dims(), &var(8, 8), 262_144, hw);
+        assert_eq!(gqa.kv_bytes, xsqa.kv_bytes);
+        // Deep in the cache-bound regime the times converge (xSQA also
+        // carries slightly fewer attention weights, so it is never slower).
+        assert!(xsqa.time() <= gqa.time());
+        assert!((gqa.time() - xsqa.time()) / gqa.time() < 0.05);
+    }
+
+    #[test]
+    fn ssqa_decodes_slower_than_gqa() {
+        // §5.1: sSQA(16,16) carries 2x GQA(32,8)'s cache -> slower decode.
+        let hw = Hardware::default();
+        let gqa = decode_step(&dims(), &var(32, 8), 65_536, hw);
+        let ssqa = decode_step(&dims(), &var(16, 16), 65_536, hw);
+        assert_eq!(ssqa.kv_bytes, 2 * gqa.kv_bytes);
+        assert!(ssqa.time() > gqa.time());
+    }
+
+    #[test]
+    fn mqa_is_fastest_decoder() {
+        let hw = Hardware::default();
+        let rows = decode_table(
+            &dims(),
+            &[
+                ("mha".into(), var(32, 32)),
+                ("gqa".into(), var(32, 8)),
+                ("mqa".into(), var(32, 1)),
+                ("ssqa".into(), var(16, 16)),
+            ],
+            131_072,
+            hw,
+        );
+        let tps: std::collections::HashMap<_, _> =
+            rows.iter().map(|r| (r.variant.clone(), r.tok_per_s)).collect();
+        assert!(tps["mqa"] > tps["gqa"]);
+        assert!(tps["gqa"] > tps["ssqa"]);
+        assert!(tps["ssqa"] > tps["mha"]);
+    }
+
+    #[test]
+    fn window_caps_cache_growth() {
+        let hw = Hardware::default();
+        let swa = VariantCfg {
+            hq: 32,
+            hkv: 32,
+            window: Some(4096),
+        };
+        let short = decode_step(&dims(), &swa, 8_192, hw);
+        let long = decode_step(&dims(), &swa, 1_000_000, hw);
+        assert_eq!(short.kv_bytes, long.kv_bytes);
+    }
+
+    #[test]
+    fn short_context_decode_is_param_bound() {
+        // At tiny context the weights dominate the traffic (the paper's
+        // "SQA is about prefill" — decode differences shrink to the small
+        // attention-weight delta, not the cache).
+        let hw = Hardware::default();
+        let a = decode_step(&dims(), &var(32, 32), 128, hw);
+        let b = decode_step(&dims(), &var(8, 8), 128, hw);
+        assert!(a.param_bytes > a.kv_bytes);
+        assert!(b.param_bytes > b.kv_bytes);
+        // xSQA streams fewer attention weights, so it is (mildly) faster
+        // even here — but far less than its 4x prefill advantage.
+        assert!(b.time() <= a.time());
+        assert!(a.time() / b.time() < 1.5);
+    }
+}

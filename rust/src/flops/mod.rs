@@ -1,0 +1,246 @@
+//! Analytic complexity model — the paper's §3.2.1, §2.2 and §5.2 math.
+//!
+//! Computes, for any (variant, model, sequence) combination:
+//!   * attention-core FLOPs (scores `QKᵀ` + aggregation `PV`),
+//!   * projection FLOPs (Wq/Wk/Wv/Wo, which *shrink* with Hq/Hkv),
+//!   * MLP/MoE and LM-head FLOPs (variant-independent),
+//!   * KV-cache bytes (the MQA/GQA memory-bandwidth axis),
+//!   * the theoretical speed-up `H/Hq` of eq. (9),
+//! and renders the comparative table of DESIGN.md §6. The bench harness
+//! prints model-predicted ratios next to measured ones so the "shape"
+//! claim (who wins, by what factor) is checkable at a glance.
+
+pub mod decode;
+
+use crate::config::{ModelDims, VariantCfg};
+
+/// FLOPs breakdown of one forward pass.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FlopsBreakdown {
+    pub attn_core: u64,
+    pub attn_proj: u64,
+    pub mlp: u64,
+    pub lm_head: u64,
+}
+
+impl FlopsBreakdown {
+    pub fn total(&self) -> u64 {
+        self.attn_core + self.attn_proj + self.mlp + self.lm_head
+    }
+
+    /// Fraction of total FLOPs spent in the attention core — the regime
+    /// indicator: Table 3's speed-ups appear once this dominates.
+    pub fn attn_fraction(&self) -> f64 {
+        self.attn_core as f64 / self.total() as f64
+    }
+}
+
+/// Forward-pass FLOPs for a full model at batch `b`, sequence `s`.
+///
+/// Matmul of [m,k]x[k,n] counts 2*m*k*n FLOPs.
+pub fn forward_flops(dims: &ModelDims, var: &VariantCfg, b: u64, s: u64) -> FlopsBreakdown {
+    let d = dims.d_model as u64;
+    let dh = dims.d_head as u64;
+    let hq = var.hq as u64;
+    let hkv = var.hkv as u64;
+    let layers = dims.n_layers as u64;
+    let ff = dims.d_ff as u64;
+    let vocab = dims.vocab as u64;
+
+    // Attention core per layer: Hq heads, scores + aggregation.
+    // A sliding window caps the effective key count per query.
+    let eff_k = match var.window {
+        Some(w) => s.min(w as u64),
+        None => s,
+    };
+    let attn_core = layers * b * hq * (2 * s * eff_k * dh) * 2;
+
+    // Projections: Wq [d, hq*dh], Wk/Wv [d, hkv*dh], Wo [hq*dh, d].
+    let proj_cols = (hq * dh) + 2 * (hkv * dh) + (hq * dh);
+    let attn_proj = layers * b * s * 2 * d * proj_cols;
+
+    // SwiGLU: gate + up [d, ff] and down [ff, d] = 3 matmuls. MoE (top-k
+    // routed, dense-dispatch at our scale) multiplies by active experts.
+    let mlp_mults = if dims.n_experts > 0 {
+        dims.n_experts as u64 // dense dispatch computes all experts
+    } else {
+        1
+    };
+    let mlp = layers * b * s * 2 * (3 * d * ff) * mlp_mults;
+
+    let lm_head = b * s * 2 * d * vocab;
+
+    FlopsBreakdown {
+        attn_core,
+        attn_proj,
+        mlp,
+        lm_head,
+    }
+}
+
+/// Training-step FLOPs ≈ 3x forward (fwd + bwd-activations + bwd-weights).
+pub fn train_flops(dims: &ModelDims, var: &VariantCfg, b: u64, s: u64) -> u64 {
+    3 * forward_flops(dims, var, b, s).total()
+}
+
+/// KV-cache bytes for autoregressive decoding (§2.2): 2 * S * Hkv * dh * 4.
+pub fn kv_cache_bytes(dims: &ModelDims, var: &VariantCfg, s: u64) -> u64 {
+    2 * s * var.hkv as u64 * dims.d_head as u64 * 4 * dims.n_layers as u64
+}
+
+/// Paper eq. (9): theoretical attention-core speed-up over the MHA baseline.
+pub fn theoretical_speedup(h_total: usize, hq: usize) -> f64 {
+    h_total as f64 / hq as f64
+}
+
+/// One row of the comparative table (DESIGN.md §6).
+#[derive(Debug, Clone)]
+pub struct ComplexityRow {
+    pub variant: String,
+    pub hq: usize,
+    pub hkv: usize,
+    pub attn_flops_factor: f64,
+    pub kv_cache_factor: f64,
+    pub theoretical_speedup: f64,
+}
+
+/// Build the complexity-comparison table for a variant set.
+pub fn complexity_table(
+    dims: &ModelDims,
+    variants: &[(String, VariantCfg)],
+    s: u64,
+) -> Vec<ComplexityRow> {
+    let mha = VariantCfg {
+        hq: dims.h_total,
+        hkv: dims.h_total,
+        window: None,
+    };
+    let base_core = forward_flops(dims, &mha, 1, s).attn_core as f64;
+    let base_kv = kv_cache_bytes(dims, &mha, s) as f64;
+    variants
+        .iter()
+        .map(|(name, v)| ComplexityRow {
+            variant: name.clone(),
+            hq: v.hq,
+            hkv: v.hkv,
+            attn_flops_factor: forward_flops(dims, v, 1, s).attn_core as f64 / base_core,
+            kv_cache_factor: kv_cache_bytes(dims, v, s) as f64 / base_kv,
+            theoretical_speedup: theoretical_speedup(dims.h_total, v.hq),
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dims() -> ModelDims {
+        ModelDims {
+            vocab: 4096,
+            d_model: 256,
+            n_layers: 8,
+            h_total: 16,
+            d_head: 16,
+            d_ff: 683,
+            n_experts: 0,
+        }
+    }
+
+    fn var(hq: usize, hkv: usize) -> VariantCfg {
+        VariantCfg {
+            hq,
+            hkv,
+            window: None,
+        }
+    }
+
+    #[test]
+    fn eq9_speedup_is_h_over_hq() {
+        let d = dims();
+        let base = forward_flops(&d, &var(16, 16), 1, 4096).attn_core;
+        assert_eq!(base / forward_flops(&d, &var(8, 4), 1, 4096).attn_core, 2);
+        assert_eq!(base / forward_flops(&d, &var(4, 4), 1, 4096).attn_core, 4);
+        assert_eq!(theoretical_speedup(16, 4), 4.0);
+    }
+
+    #[test]
+    fn gqa_mqa_do_not_reduce_core_flops() {
+        // The paper's central observation (§1.3): KV-head reduction leaves
+        // the attention-core FLOPs unchanged.
+        let d = dims();
+        let mha = forward_flops(&d, &var(16, 16), 1, 2048).attn_core;
+        let gqa = forward_flops(&d, &var(16, 4), 1, 2048).attn_core;
+        let mqa = forward_flops(&d, &var(16, 1), 1, 2048).attn_core;
+        assert_eq!(mha, gqa);
+        assert_eq!(mha, mqa);
+    }
+
+    #[test]
+    fn gqa_mqa_do_reduce_kv_cache() {
+        let d = dims();
+        let mha = kv_cache_bytes(&d, &var(16, 16), 2048);
+        assert_eq!(mha / kv_cache_bytes(&d, &var(16, 4), 2048), 4);
+        assert_eq!(mha / kv_cache_bytes(&d, &var(16, 1), 2048), 16);
+    }
+
+    #[test]
+    fn xsqa_matches_gqa_memory_at_quarter_flops() {
+        // §5.2: xSQA(Hq=4, Hkv=4) matches GQA(16,4) KV cache but 4x fewer
+        // core FLOPs.
+        let d = dims();
+        assert_eq!(
+            kv_cache_bytes(&d, &var(4, 4), 1024),
+            kv_cache_bytes(&d, &var(16, 4), 1024)
+        );
+        let gqa = forward_flops(&d, &var(16, 4), 1, 1024).attn_core;
+        let xsqa = forward_flops(&d, &var(4, 4), 1, 1024).attn_core;
+        assert_eq!(gqa / xsqa, 4);
+    }
+
+    #[test]
+    fn window_caps_core_flops() {
+        let d = dims();
+        let swa = VariantCfg {
+            hq: 16,
+            hkv: 16,
+            window: Some(128),
+        };
+        let full = forward_flops(&d, &var(16, 16), 1, 4096).attn_core;
+        let windowed = forward_flops(&d, &swa, 1, 4096).attn_core;
+        assert_eq!(full / windowed, 4096 / 128);
+        // Window larger than seq = no-op.
+        let big = VariantCfg {
+            hq: 16,
+            hkv: 16,
+            window: Some(100_000),
+        };
+        assert_eq!(forward_flops(&d, &big, 1, 512).attn_core, forward_flops(&d, &var(16, 16), 1, 512).attn_core);
+    }
+
+    #[test]
+    fn attn_fraction_grows_with_seq() {
+        let d = dims();
+        let short = forward_flops(&d, &var(16, 16), 1, 256).attn_fraction();
+        let long = forward_flops(&d, &var(16, 16), 1, 8192).attn_fraction();
+        assert!(long > short);
+        assert!(long > 0.8, "N^2 term must dominate at 8k: {long}");
+    }
+
+    #[test]
+    fn complexity_table_factors() {
+        let d = dims();
+        let rows = complexity_table(
+            &d,
+            &[
+                ("mha".into(), var(16, 16)),
+                ("ssqa".into(), var(8, 8)),
+                ("xsqa".into(), var(4, 4)),
+            ],
+            4096,
+        );
+        assert_eq!(rows[0].attn_flops_factor, 1.0);
+        assert_eq!(rows[1].attn_flops_factor, 0.5);
+        assert_eq!(rows[2].attn_flops_factor, 0.25);
+        assert_eq!(rows[2].kv_cache_factor, 0.25);
+    }
+}

@@ -1,0 +1,41 @@
+//! # SQA — Sparse Query Attention, a three-layer reproduction
+//!
+//! This crate is the Layer-3 (runtime) half of the reproduction of
+//! *"Sparse Query Attention (SQA): A Computationally Efficient Attention
+//! Mechanism with Query Heads Reduction"* (Filipek, 2025).
+//!
+//! Layer 1 (Pallas kernels) and Layer 2 (JAX models) live under `python/`
+//! and run **only at build time**: `make artifacts` lowers every
+//! (model-family, attention-variant, entry-point) to HLO text under
+//! `artifacts/`. This crate loads those artifacts through the PJRT C API
+//! (`xla` crate) and owns everything at runtime:
+//!
+//! * [`runtime`] — PJRT client, manifest parsing, executable cache,
+//!   device-resident tensor state.
+//! * [`train`] — the training coordinator (the paper's compute-bound
+//!   pre-training scenario): AdamW steps fully fused in XLA, LR schedule,
+//!   checkpointing, loss curves.
+//! * [`coordinator`] + [`server`] — the encoder-serving engine (the paper's
+//!   prompt-processing scenario): length-bucket router, dynamic batcher,
+//!   worker pool, backpressure.
+//! * [`data`] — deterministic synthetic corpora + tokenizer + batcher.
+//! * [`attention`] — a pure-Rust attention oracle (second implementation
+//!   for differential testing) covering the whole variant zoo.
+//! * [`flops`] — the paper's §3.2.1 analytic complexity model.
+//! * [`bench_harness`] — regenerates every table of the paper's evaluation.
+//! * [`util`] — substrates the offline image lacks crates for: JSON,
+//!   CLI parsing, RNG, thread pool, stats, property testing, bench timing.
+
+pub mod attention;
+pub mod bench_harness;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod flops;
+pub mod runtime;
+pub mod server;
+pub mod train;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

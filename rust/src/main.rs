@@ -1,0 +1,372 @@
+//! `sqa` — CLI launcher for the SQA reproduction.
+//!
+//! Subcommands:
+//!   train       train a (family, variant) from Rust, device-resident state
+//!   serve       start the encoder-serving engine (TCP, JSON lines)
+//!   encode      one-shot client call against a running server
+//!   bench       regenerate paper tables: table1 | table2 | table3 |
+//!               complexity | ablation | all
+//!   flops       analytic FLOPs/KV-cache model for a (family, variant, seq)
+//!   diagram     ASCII head-wiring diagram (paper figures 2-6)
+//!   inspect     list manifest artifacts and parameter layouts
+//!
+//! Run `sqa <cmd> --help-flags` for the flags each command reads.
+
+use anyhow::{bail, Context, Result};
+use sqa::bench_harness;
+use sqa::config::{ServeConfig, TrainConfig};
+use sqa::coordinator::Engine;
+use sqa::flops;
+use sqa::runtime::Runtime;
+use sqa::server::{Client, Server};
+use sqa::train::Trainer;
+use sqa::util::cli::Args;
+
+fn main() {
+    sqa::util::logging::init();
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn artifacts_dir(args: &mut Args) -> String {
+    args.str("artifacts", "artifacts")
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env()?;
+    let cmd = args.command.clone().unwrap_or_else(|| "help".to_string());
+    match cmd.as_str() {
+        "train" => cmd_train(args),
+        "serve" => cmd_serve(args),
+        "encode" => cmd_encode(args),
+        "bench" => cmd_bench(args),
+        "flops" => cmd_flops(args),
+        "diagram" => cmd_diagram(args),
+        "inspect" => cmd_inspect(args),
+        "help" | "--help" | "-h" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}; try `sqa help`"),
+    }
+}
+
+const HELP: &str = "\
+sqa — Sparse Query Attention reproduction (rust + JAX + Pallas, AOT/PJRT)
+
+USAGE: sqa <command> [--flags]
+
+COMMANDS
+  train     --family tiny --variant sqa --steps 200 --lr 3e-4 --seed 42
+            [--checkpoint-dir DIR --checkpoint-every N --report OUT.json]
+  serve     --family tiny --variant sqa --addr 127.0.0.1:7433
+            [--max-batch 8 --max-wait-ms 5 --workers 2]
+  encode    --addr 127.0.0.1:7433 (--text \"...\" | --tokens 1,2,3 | --metrics)
+  bench     table1|table2|table3|complexity|ablation|all
+            [--steps N --max-seq S --quick --out FILE.md]
+  flops     --family bench --variant sqa --seq 8192 [--batch 1]
+  diagram   --variant sqa --h-total 16   (or --hq 8 --hkv 4)
+  inspect   [--family F]
+";
+
+fn cmd_train(mut args: Args) -> Result<()> {
+    let dir = artifacts_dir(&mut args);
+    let mut cfg = TrainConfig {
+        family: args.str("family", "tiny"),
+        variant: args.str("variant", "sqa"),
+        steps: args.usize("steps", 200)?,
+        eval_every: args.usize("eval-every", 50)?,
+        eval_batches: args.usize("eval-batches", 4)?,
+        seed: args.usize("seed", 42)? as u64,
+        checkpoint_every: args.usize("checkpoint-every", 0)?,
+        log_every: args.usize("log-every", 10)?,
+        ..TrainConfig::default()
+    };
+    cfg.schedule.base_lr = args.f64("lr", 3e-4)?;
+    cfg.schedule.total_steps = cfg.steps;
+    cfg.schedule.warmup_steps = args.usize("warmup", cfg.steps / 10)?;
+    if let Some(d) = args.str_opt("checkpoint-dir") {
+        cfg.checkpoint_dir = Some(d);
+    }
+    let report_path = args.str_opt("report");
+    if let Some(cfg_path) = args.str_opt("config") {
+        cfg = TrainConfig::load(&cfg_path)?;
+    }
+    args.finish()?;
+
+    let rt = Runtime::new(&dir)?;
+    let mut trainer = Trainer::new(&rt, cfg)?;
+    let report = trainer.run()?;
+    println!(
+        "{}/{}: {} steps in {:.1}s | val_loss {:.4} ppl {:.3} acc {:.2}%",
+        report.family,
+        report.variant,
+        report.steps,
+        report.train_secs,
+        report.val_loss,
+        report.val_ppl,
+        report.val_acc * 100.0
+    );
+    if let Some(p) = report_path {
+        std::fs::write(&p, report.to_json().to_string())?;
+        println!("report -> {p}");
+    }
+    Ok(())
+}
+
+fn cmd_serve(mut args: Args) -> Result<()> {
+    let dir = artifacts_dir(&mut args);
+    let cfg = ServeConfig {
+        family: args.str("family", "tiny"),
+        variant: args.str("variant", "sqa"),
+        addr: args.str("addr", "127.0.0.1:7433"),
+        max_batch: args.usize("max-batch", 8)?,
+        max_wait_ms: args.usize("max-wait-ms", 5)? as u64,
+        workers: args.usize("workers", 2)?,
+        queue_capacity: args.usize("queue", 64)?,
+    };
+    let ckpt = args.str_opt("checkpoint");
+    args.finish()?;
+
+    let rt = Runtime::new(&dir)?;
+    let params = match ckpt {
+        Some(p) => {
+            let (state, step) = sqa::runtime::ModelState::load(
+                &rt,
+                &cfg.family,
+                &cfg.variant,
+                std::path::Path::new(&p),
+            )?;
+            log::info!("loaded checkpoint {p} (step {step})");
+            Some(state.to_host(&rt)?)
+        }
+        None => None,
+    };
+    let engine = Engine::start(&rt, &cfg, params)?;
+    println!(
+        "serving {}/{} buckets={:?} on {}",
+        cfg.family,
+        cfg.variant,
+        engine.buckets(),
+        cfg.addr
+    );
+    Server::bind(&cfg.addr, engine)?.serve()
+}
+
+fn cmd_encode(mut args: Args) -> Result<()> {
+    let addr = args.str("addr", "127.0.0.1:7433");
+    let text = args.str_opt("text");
+    let tokens = args.str_opt("tokens");
+    let metrics = args.bool("metrics");
+    args.finish()?;
+    let mut client = Client::connect(&addr)?;
+    let resp = if metrics {
+        client.metrics()?
+    } else if let Some(t) = text {
+        client.encode_text(&t)?
+    } else if let Some(t) = tokens {
+        let toks: Vec<u32> = t
+            .split(',')
+            .map(|s| s.trim().parse().context("parsing --tokens"))
+            .collect::<Result<_>>()?;
+        client.encode_tokens(&toks)?
+    } else {
+        bail!("need --text, --tokens or --metrics");
+    };
+    println!("{resp}");
+    Ok(())
+}
+
+fn cmd_bench(mut args: Args) -> Result<()> {
+    let dir = artifacts_dir(&mut args);
+    let which = args.positional.first().cloned().unwrap_or_else(|| "all".into());
+    let steps = args.usize("steps", 60)?;
+    let max_seq = args.usize("max-seq", 0)?;
+    let quick = args.bool("quick");
+    let seed = args.usize("seed", 42)? as u64;
+    let out = args.str_opt("out");
+    args.finish()?;
+    let rt = Runtime::new(&dir)?;
+    let mut output = String::new();
+
+    let run_one = |name: &str, rt: &Runtime, output: &mut String| -> Result<()> {
+        match name {
+            "table1" => {
+                let (md, _) = bench_harness::table1(rt, steps, seed)?;
+                output.push_str(&format!("\n## Table 1 — dense quality ({steps} steps)\n\n{md}"));
+            }
+            "table2" => {
+                let (md, _) = bench_harness::table2(rt, steps, seed)?;
+                output.push_str(&format!("\n## Table 2 — MoE quality ({steps} steps)\n\n{md}"));
+            }
+            "table3" => {
+                let (md, cells) =
+                    bench_harness::table3(rt, bench_harness::TABLE3_VARIANTS, max_seq, quick)?;
+                output.push_str(&format!("\n## Table 3 — fwd time per step (s)\n\n{md}"));
+                std::fs::write(
+                    "bench_table3.json",
+                    bench_harness::cells_to_json(&cells).to_string(),
+                )?;
+            }
+            "complexity" => {
+                let md = bench_harness::complexity(rt, "dense_sm", 32768)
+                    .or_else(|_| bench_harness::complexity(rt, "tiny", 32768))?;
+                output.push_str(&format!("\n## Complexity (§3.2.1, N=32768)\n\n{md}"));
+            }
+            "ablation" => {
+                let md = bench_harness::ablation_impl(rt, 1024)?;
+                output.push_str(&format!("\n## Ablation — Pallas kernel vs XLA attention\n\n{md}"));
+            }
+            other => bail!("unknown bench {other:?}"),
+        }
+        Ok(())
+    };
+
+    if which == "all" {
+        for name in ["complexity", "table3", "ablation", "table2", "table1"] {
+            run_one(name, &rt, &mut output)?;
+        }
+    } else {
+        run_one(&which, &rt, &mut output)?;
+    }
+    println!("{output}");
+    if let Some(p) = out {
+        std::fs::write(&p, &output)?;
+        println!("written -> {p}");
+    }
+    Ok(())
+}
+
+fn cmd_flops(mut args: Args) -> Result<()> {
+    let dir = artifacts_dir(&mut args);
+    let family = args.str("family", "bench");
+    let variant = args.str("variant", "sqa");
+    let seq = args.usize("seq", 8192)? as u64;
+    let batch = args.usize("batch", 1)? as u64;
+    let decode = args.bool("decode");
+    args.finish()?;
+    let rt = Runtime::new(&dir)?;
+    if decode {
+        // §5 decode-phase roofline across the family's variant zoo.
+        let fam = rt.manifest().family(&family)?;
+        let variants: Vec<(String, sqa::config::VariantCfg)> = fam
+            .variants
+            .iter()
+            .map(|(n, v)| (n.clone(), v.cfg))
+            .collect();
+        let rows =
+            flops::decode::decode_table(&fam.dims, &variants, seq, flops::decode::Hardware::default());
+        println!("decode roofline (A100-like envelope), {family} @ ctx {seq}:");
+        println!("{:8} {:>3} {:>4} {:>10} {:>12} {:>8}", "variant", "Hq", "Hkv", "KV MiB", "tok/s", "vs first");
+        for r in rows {
+            println!(
+                "{:8} {:>3} {:>4} {:>10.1} {:>12.1} {:>7.2}x",
+                r.variant, r.hq, r.hkv, r.kv_mib, r.tok_per_s, r.vs_first
+            );
+        }
+        return Ok(());
+    }
+    let fam = rt.manifest().family(&family)?;
+    let var = rt.manifest().variant(&family, &variant)?;
+    let b = flops::forward_flops(&fam.dims, &var.cfg, batch, seq);
+    println!("forward FLOPs for {family}/{variant} @ batch={batch} seq={seq}:");
+    println!("  attention core : {:>16}  ({:.1}% of total)", b.attn_core, 100.0 * b.attn_fraction());
+    println!("  attention proj : {:>16}", b.attn_proj);
+    println!("  mlp/moe        : {:>16}", b.mlp);
+    println!("  lm head        : {:>16}", b.lm_head);
+    println!("  total          : {:>16}", b.total());
+    println!(
+        "  train step     : {:>16}  (~3x fwd)",
+        flops::train_flops(&fam.dims, &var.cfg, batch, seq)
+    );
+    println!(
+        "  KV cache       : {:>16} bytes ({:.2} MiB)",
+        flops::kv_cache_bytes(&fam.dims, &var.cfg, seq),
+        flops::kv_cache_bytes(&fam.dims, &var.cfg, seq) as f64 / (1 << 20) as f64
+    );
+    println!(
+        "  eq.(9) speedup : {:.2}x vs MHA",
+        flops::theoretical_speedup(fam.dims.h_total, var.cfg.hq)
+    );
+    Ok(())
+}
+
+fn cmd_diagram(mut args: Args) -> Result<()> {
+    let h_total = args.usize("h-total", 16)?;
+    let variant = args.str_opt("variant");
+    let (hq, hkv) = if let Some(v) = &variant {
+        match v.as_str() {
+            "mha" => (h_total, h_total),
+            "gqa" => (h_total, (h_total / 4).max(1)),
+            "mqa" => (h_total, 1),
+            "sqa" => (h_total / 2, (h_total / 4).max(1)),
+            "ssqa" => (h_total / 2, h_total / 2),
+            "xsqa" => ((h_total / 4).max(1), (h_total / 4).max(1)),
+            "xsmqa" => ((h_total / 4).max(1), 1),
+            other => bail!("unknown variant {other:?}"),
+        }
+    } else {
+        (args.usize("hq", 8)?, args.usize("hkv", 4)?)
+    };
+    args.finish()?;
+    print!("{}", bench_harness::diagram(h_total, hq, hkv));
+    Ok(())
+}
+
+fn cmd_inspect(mut args: Args) -> Result<()> {
+    let dir = artifacts_dir(&mut args);
+    let family = args.str_opt("family");
+    args.finish()?;
+    let rt = Runtime::new(&dir)?;
+    let m = rt.manifest();
+    for (fname, fam) in &m.families {
+        if let Some(f) = &family {
+            if f != fname {
+                continue;
+            }
+        }
+        println!(
+            "family {fname}: d_model={} layers={} H={} d_head={} vocab={}{}",
+            fam.dims.d_model,
+            fam.dims.n_layers,
+            fam.dims.h_total,
+            fam.dims.d_head,
+            fam.dims.vocab,
+            if fam.dims.n_experts > 0 {
+                format!(" experts={}", fam.dims.n_experts)
+            } else {
+                String::new()
+            }
+        );
+        for (vname, v) in &fam.variants {
+            println!(
+                "  {vname:6} Hq={:<2} Hkv={:<2} window={:<6} params={}",
+                v.cfg.hq,
+                v.cfg.hkv,
+                v.cfg
+                    .window
+                    .map(|w| w.to_string())
+                    .unwrap_or_else(|| "-".into()),
+                v.n_params
+            );
+        }
+    }
+    println!("\nartifacts:");
+    for a in &m.artifacts {
+        let count = 1;
+        let _ = count;
+        println!(
+            "  {:10} {:7} {:6} {:4} batch={:?} seq={:?} {}",
+            a.family,
+            a.variant,
+            a.impl_,
+            a.kind.as_str(),
+            a.batch,
+            a.seq,
+            a.path.file_name().unwrap_or_default().to_string_lossy()
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,206 @@
+//! PJRT runtime: compile HLO-text artifacts once, execute many times.
+//!
+//! Wraps the `xla` crate's CPU PJRT client with:
+//!   * an executable cache (HLO parse + compile happen once per artifact),
+//!   * device-resident buffer helpers (`f32`/`i32` host→device, device→host),
+//!   * **on-device slicing**: artifacts return exactly one array (the AOT
+//!     contract bans tuples — this PJRT wrapper can't feed a tuple output
+//!     back as an input), so training state is one fused f32 vector; small
+//!     XlaBuilder-compiled slicer executables (cached per signature) read
+//!     the metrics tail / params prefix without copying the whole state to
+//!     the host.
+
+use crate::runtime::manifest::{Artifact, Manifest};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+/// Shared handle to the PJRT client + caches. Cheap to clone.
+#[derive(Clone)]
+pub struct Runtime {
+    inner: Arc<Inner>,
+}
+
+struct Inner {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    exe_cache: Mutex<HashMap<PathBuf, Arc<xla::PjRtLoadedExecutable>>>,
+    /// (vector length, start, stop) -> slicer executable.
+    slicer_cache: Mutex<HashMap<(usize, usize, usize), Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+// The PJRT CPU client is internally synchronized; executions from multiple
+// threads are safe (each call owns its inputs/outputs).
+unsafe impl Send for Inner {}
+unsafe impl Sync for Inner {}
+
+impl Runtime {
+    /// Create a CPU PJRT client and load the artifact manifest.
+    pub fn new(artifact_dir: impl AsRef<Path>) -> Result<Self> {
+        let manifest = Manifest::load(&artifact_dir)?;
+        let client = xla::PjRtClient::cpu().map_err(wrap_xla)?;
+        log::info!(
+            "PJRT client: platform={} devices={}",
+            client.platform_name(),
+            client.device_count()
+        );
+        Ok(Self {
+            inner: Arc::new(Inner {
+                client,
+                manifest,
+                exe_cache: Mutex::new(HashMap::new()),
+                slicer_cache: Mutex::new(HashMap::new()),
+            }),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.inner.manifest
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.inner.client
+    }
+
+    /// Compile (or fetch from cache) the executable for an artifact path.
+    pub fn compile(&self, path: &Path) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.inner.exe_cache.lock().unwrap().get(path) {
+            return Ok(Arc::clone(exe));
+        }
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .map_err(wrap_xla)
+        .with_context(|| format!("parsing {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Arc::new(
+            self.inner
+                .client
+                .compile(&comp)
+                .map_err(wrap_xla)
+                .with_context(|| format!("compiling {}", path.display()))?,
+        );
+        log::debug!(
+            "compiled {} in {:.2}s",
+            path.file_name().unwrap_or_default().to_string_lossy(),
+            t0.elapsed().as_secs_f64()
+        );
+        self.inner
+            .exe_cache
+            .lock()
+            .unwrap()
+            .insert(path.to_path_buf(), Arc::clone(&exe));
+        Ok(exe)
+    }
+
+    pub fn compile_artifact(&self, a: &Artifact) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        self.compile(&a.path)
+    }
+
+    // ---- host <-> device -------------------------------------------------
+
+    pub fn buf_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.inner
+            .client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(wrap_xla)
+    }
+
+    pub fn buf_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.inner
+            .client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(wrap_xla)
+    }
+
+    pub fn buf_scalar_i32(&self, v: i32) -> Result<xla::PjRtBuffer> {
+        self.buf_i32(&[v], &[])
+    }
+
+    pub fn buf_scalar_f32(&self, v: f32) -> Result<xla::PjRtBuffer> {
+        self.buf_f32(&[v], &[])
+    }
+
+    pub fn to_vec_f32(&self, buf: &xla::PjRtBuffer) -> Result<Vec<f32>> {
+        let lit = buf.to_literal_sync().map_err(wrap_xla)?;
+        lit.to_vec::<f32>().map_err(wrap_xla)
+    }
+
+    pub fn scalar_f32(&self, buf: &xla::PjRtBuffer) -> Result<f32> {
+        let lit = buf.to_literal_sync().map_err(wrap_xla)?;
+        lit.get_first_element::<f32>().map_err(wrap_xla)
+    }
+
+    // ---- execution ---------------------------------------------------------
+
+    /// Execute with device-resident inputs; returns the single output array
+    /// (the AOT contract: every artifact returns exactly one array).
+    pub fn execute1(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        args: &[&xla::PjRtBuffer],
+    ) -> Result<xla::PjRtBuffer> {
+        let mut out = exe.execute_b(args).map_err(wrap_xla)?;
+        let replica = out
+            .pop()
+            .ok_or_else(|| anyhow!("execution returned no replicas"))?;
+        let mut iter = replica.into_iter();
+        let buf = iter
+            .next()
+            .ok_or_else(|| anyhow!("execution returned no outputs"))?;
+        if iter.next().is_some() {
+            bail!("artifact returned multiple outputs; the AOT contract is one array");
+        }
+        Ok(buf)
+    }
+
+    /// Device-side `vec[start..stop]` via a cached slicer executable —
+    /// reads small slices (metrics tail, params prefix) of the fused state
+    /// vector without copying the whole buffer to the host.
+    pub fn slice_f32(
+        &self,
+        vec: &xla::PjRtBuffer,
+        len: usize,
+        start: usize,
+        stop: usize,
+    ) -> Result<xla::PjRtBuffer> {
+        anyhow::ensure!(start < stop && stop <= len, "bad slice [{start}, {stop}) of {len}");
+        let exe = self.slicer(len, start, stop)?;
+        self.execute1(&exe, &[vec])
+    }
+
+    fn slicer(
+        &self,
+        len: usize,
+        start: usize,
+        stop: usize,
+    ) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        let key = (len, start, stop);
+        if let Some(exe) = self.inner.slicer_cache.lock().unwrap().get(&key) {
+            return Ok(Arc::clone(exe));
+        }
+        let builder = xla::XlaBuilder::new(&format!("slice_{start}_{stop}"));
+        let param = builder
+            .parameter(0, <f32 as xla::ArrayElement>::TY, &[len as i64], "v")
+            .map_err(wrap_xla)?;
+        let comp = param
+            .slice_in_dim1(start as i64, stop as i64, 0)
+            .map_err(wrap_xla)?
+            .build()
+            .map_err(wrap_xla)?;
+        let exe = Arc::new(self.inner.client.compile(&comp).map_err(wrap_xla)?);
+        self.inner
+            .slicer_cache
+            .lock()
+            .unwrap()
+            .insert(key, Arc::clone(&exe));
+        Ok(exe)
+    }
+}
+
+/// The xla crate has its own error type; adapt it to anyhow.
+pub fn wrap_xla(e: xla::Error) -> anyhow::Error {
+    anyhow!("xla: {e}")
+}

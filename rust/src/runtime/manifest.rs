@@ -1,0 +1,332 @@
+//! Parse `artifacts/manifest.json` — the contract between the build-time
+//! Python AOT pipeline and this runtime.
+//!
+//! See `python/compile/aot.py` for the emitting side. The key invariant:
+//! model parameters travel as **one flat f32 vector**; the manifest records
+//! every parameter's (name, shape, offset) inside that vector so tooling
+//! (checkpoint inspection, per-tensor stats) can interpret it.
+
+use crate::config::{ModelDims, VariantCfg};
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One named parameter inside the flat vector.
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+}
+
+impl ParamSpec {
+    pub fn size(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+/// A (family, variant) model: geometry + parameter layout.
+#[derive(Debug, Clone)]
+pub struct VariantEntry {
+    pub cfg: VariantCfg,
+    pub n_params: usize,
+    pub params: Vec<ParamSpec>,
+}
+
+#[derive(Debug, Clone)]
+pub struct FamilyEntry {
+    pub dims: ModelDims,
+    pub causal: bool,
+    pub variants: BTreeMap<String, VariantEntry>,
+}
+
+/// Kind of compiled entry point.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Kind {
+    Init,
+    Train,
+    Eval,
+    Fwd,
+}
+
+impl Kind {
+    fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "init" => Kind::Init,
+            "train" => Kind::Train,
+            "eval" => Kind::Eval,
+            "fwd" => Kind::Fwd,
+            other => bail!("unknown artifact kind {other:?}"),
+        })
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Kind::Init => "init",
+            Kind::Train => "train",
+            Kind::Eval => "eval",
+            Kind::Fwd => "fwd",
+        }
+    }
+}
+
+/// Tensor shape+dtype of one artifact input/output.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct IoSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+/// One HLO artifact on disk.
+#[derive(Debug, Clone)]
+pub struct Artifact {
+    pub family: String,
+    pub variant: String,
+    pub impl_: String,
+    pub kind: Kind,
+    pub path: PathBuf,
+    pub batch: Option<usize>,
+    pub seq: Option<usize>,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+/// The whole manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub families: BTreeMap<String, FamilyEntry>,
+    pub artifacts: Vec<Artifact>,
+}
+
+fn io_specs(v: &Json) -> Result<Vec<IoSpec>> {
+    v.as_arr()
+        .context("expected array of io specs")?
+        .iter()
+        .map(|s| {
+            Ok(IoSpec {
+                shape: s
+                    .req("shape")?
+                    .as_arr()
+                    .context("shape")?
+                    .iter()
+                    .map(|d| d.as_usize().context("dim"))
+                    .collect::<Result<_>>()?,
+                dtype: s.req("dtype")?.as_str().context("dtype")?.to_string(),
+            })
+        })
+        .collect()
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        let root = Json::parse(&text).context("parsing manifest.json")?;
+        let version = root.req("version")?.as_i64().context("version")?;
+        if version != 2 {
+            bail!("manifest version {version} unsupported (want 2)");
+        }
+
+        let mut families = BTreeMap::new();
+        for (fname, fval) in root.req("families")?.as_obj().context("families")? {
+            let dims = ModelDims::from_json(fval)?;
+            let causal = fval.get("causal").and_then(|c| c.as_bool()).unwrap_or(true);
+            let mut variants = BTreeMap::new();
+            for (vname, vval) in fval.req("variants")?.as_obj().context("variants")? {
+                let cfg = VariantCfg::from_json(vval)?;
+                let params = vval
+                    .req("params")?
+                    .as_arr()
+                    .context("params")?
+                    .iter()
+                    .map(|p| {
+                        Ok(ParamSpec {
+                            name: p.req("name")?.as_str().context("name")?.to_string(),
+                            shape: p
+                                .req("shape")?
+                                .as_arr()
+                                .context("shape")?
+                                .iter()
+                                .map(|d| d.as_usize().context("dim"))
+                                .collect::<Result<_>>()?,
+                            offset: p.req("offset")?.as_usize().context("offset")?,
+                        })
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                let n_params = vval.req("n_params")?.as_usize().context("n_params")?;
+                let sum: usize = params.iter().map(|p| p.size()).sum();
+                if sum != n_params {
+                    bail!("{fname}/{vname}: param sizes sum {sum} != n_params {n_params}");
+                }
+                variants.insert(
+                    vname.clone(),
+                    VariantEntry {
+                        cfg,
+                        n_params,
+                        params,
+                    },
+                );
+            }
+            families.insert(
+                fname.clone(),
+                FamilyEntry {
+                    dims,
+                    causal,
+                    variants,
+                },
+            );
+        }
+
+        let mut artifacts = Vec::new();
+        for a in root.req("artifacts")?.as_arr().context("artifacts")? {
+            artifacts.push(Artifact {
+                family: a.req("family")?.as_str().context("family")?.to_string(),
+                variant: a.req("variant")?.as_str().context("variant")?.to_string(),
+                impl_: a
+                    .get("impl")
+                    .and_then(|i| i.as_str())
+                    .unwrap_or("xla")
+                    .to_string(),
+                kind: Kind::parse(a.req("kind")?.as_str().context("kind")?)?,
+                path: dir.join(a.req("path")?.as_str().context("path")?),
+                batch: a.get("batch").and_then(|b| b.as_usize()),
+                seq: a.get("seq").and_then(|s| s.as_usize()),
+                inputs: io_specs(a.req("inputs")?)?,
+                outputs: io_specs(a.req("outputs")?)?,
+            });
+        }
+
+        Ok(Self {
+            dir,
+            families,
+            artifacts,
+        })
+    }
+
+    pub fn family(&self, name: &str) -> Result<&FamilyEntry> {
+        self.families
+            .get(name)
+            .with_context(|| format!("family {name:?} not in manifest (have: {:?})", self.families.keys().collect::<Vec<_>>()))
+    }
+
+    pub fn variant(&self, family: &str, variant: &str) -> Result<&VariantEntry> {
+        self.family(family)?.variants.get(variant).with_context(|| {
+            format!("variant {variant:?} not in family {family:?}")
+        })
+    }
+
+    /// Find one artifact; `impl_` of `None` prefers "xla".
+    pub fn find(
+        &self,
+        family: &str,
+        variant: &str,
+        kind: Kind,
+        seq: Option<usize>,
+        impl_: Option<&str>,
+    ) -> Result<&Artifact> {
+        let want_impl = impl_.unwrap_or("xla");
+        self.artifacts
+            .iter()
+            .find(|a| {
+                a.family == family
+                    && a.variant == variant
+                    && a.kind == kind
+                    && a.impl_ == want_impl
+                    && (seq.is_none() || a.seq == seq)
+            })
+            .with_context(|| {
+                format!(
+                    "no artifact {family}/{variant}/{}/seq={seq:?}/impl={want_impl}",
+                    kind.as_str()
+                )
+            })
+    }
+
+    /// All fwd sequence buckets available for (family, variant, impl).
+    pub fn fwd_seqs(&self, family: &str, variant: &str, impl_: &str) -> Vec<usize> {
+        let mut seqs: Vec<usize> = self
+            .artifacts
+            .iter()
+            .filter(|a| {
+                a.family == family
+                    && a.variant == variant
+                    && a.kind == Kind::Fwd
+                    && a.impl_ == impl_
+            })
+            .filter_map(|a| a.seq)
+            .collect();
+        seqs.sort_unstable();
+        seqs.dedup();
+        seqs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_manifest(dir: &Path) {
+        let text = r#"{
+ "version": 2,
+ "families": {
+  "tiny": {
+   "vocab": 64, "d_model": 8, "n_layers": 1, "h_total": 2, "d_head": 4,
+   "d_ff": 16, "n_experts": 0, "moe_top_k": 1, "causal": true,
+   "variants": {
+    "sqa": {
+     "hq": 1, "hkv": 1, "window": null, "n_params": 520,
+     "params": [
+      {"name": "embed", "shape": [64, 8], "dtype": "f32", "offset": 0},
+      {"name": "norm_f", "shape": [8], "dtype": "f32", "offset": 512}
+     ]
+    }
+   }
+  }
+ },
+ "artifacts": [
+  {"family": "tiny", "variant": "sqa", "impl": "xla", "kind": "fwd",
+   "path": "x.hlo.txt", "batch": 2, "seq": 16,
+   "inputs": [{"shape": [520], "dtype": "f32"}, {"shape": [2,16], "dtype": "i32"}],
+   "outputs": [{"shape": [2,16,64], "dtype": "f32"}]}
+ ]
+}"#;
+        std::fs::write(dir.join("manifest.json"), text).unwrap();
+    }
+
+    #[test]
+    fn parses_and_validates() {
+        let dir = std::env::temp_dir().join(format!("sqa_manifest_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        fake_manifest(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        let v = m.variant("tiny", "sqa").unwrap();
+        assert_eq!(v.n_params, 520);
+        assert_eq!(v.params[1].offset, 512);
+        let a = m
+            .find("tiny", "sqa", Kind::Fwd, Some(16), None)
+            .unwrap();
+        assert_eq!(a.batch, Some(2));
+        assert_eq!(m.fwd_seqs("tiny", "sqa", "xla"), vec![16]);
+        assert!(m.find("tiny", "sqa", Kind::Train, None, None).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_bad_param_sum() {
+        let dir = std::env::temp_dir().join(format!("sqa_manifest_bad_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let text = r#"{"version":2,"families":{"f":{"vocab":1,"d_model":1,"n_layers":1,
+            "h_total":1,"d_head":1,"d_ff":1,"causal":true,
+            "variants":{"v":{"hq":1,"hkv":1,"n_params":99,
+            "params":[{"name":"a","shape":[2],"dtype":"f32","offset":0}]}}}},
+            "artifacts":[]}"#;
+        std::fs::write(dir.join("manifest.json"), text).unwrap();
+        assert!(Manifest::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

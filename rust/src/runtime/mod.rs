@@ -1,0 +1,14 @@
+//! L3 runtime: PJRT client wrapper, artifact manifest, device-resident state.
+//!
+//! The contract with the build-time Python layers (L1 Pallas kernels, L2 JAX
+//! models) is `artifacts/manifest.json` + HLO-text files; see
+//! `python/compile/aot.py`. Python never runs at request time — after
+//! `make artifacts` the Rust binary is self-contained.
+
+pub mod client;
+pub mod manifest;
+pub mod state;
+
+pub use client::Runtime;
+pub use manifest::{Artifact, FamilyEntry, Kind, Manifest, ParamSpec, VariantEntry};
+pub use state::ModelState;

@@ -1,0 +1,138 @@
+//! Device-resident model state: the flat parameter vector (+ optimizer
+//! moments during training) kept as PJRT buffers across steps.
+//!
+//! Checkpoints are written as raw little-endian f32 with a JSON sidecar
+//! (`<stem>.meta.json`) recording family/variant/step and the parameter
+//! layout digest, so restores are validated against the manifest.
+
+use crate::runtime::client::Runtime;
+use crate::runtime::manifest::{Kind, VariantEntry};
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+/// Flat-parameter model state on device.
+pub struct ModelState {
+    pub family: String,
+    pub variant: String,
+    pub n_params: usize,
+    pub params: xla::PjRtBuffer,
+}
+
+impl ModelState {
+    /// Initialize parameters by running the `init` artifact with `seed`.
+    pub fn init(rt: &Runtime, family: &str, variant: &str, seed: i32) -> Result<Self> {
+        let entry = rt.manifest().variant(family, variant)?;
+        let artifact = rt
+            .manifest()
+            .find(family, variant, Kind::Init, None, None)?;
+        let exe = rt.compile_artifact(artifact)?;
+        let seed_buf = rt.buf_scalar_i32(seed)?;
+        let params = rt.execute1(&exe, &[&seed_buf])?;
+        Ok(Self {
+            family: family.to_string(),
+            variant: variant.to_string(),
+            n_params: entry.n_params,
+            params,
+        })
+    }
+
+    /// Wrap an existing device buffer (e.g. after a train step).
+    pub fn from_buffer(
+        family: &str,
+        variant: &str,
+        n_params: usize,
+        params: xla::PjRtBuffer,
+    ) -> Self {
+        Self {
+            family: family.to_string(),
+            variant: variant.to_string(),
+            n_params,
+            params,
+        }
+    }
+
+    /// Copy parameters to the host.
+    pub fn to_host(&self, rt: &Runtime) -> Result<Vec<f32>> {
+        let v = rt.to_vec_f32(&self.params)?;
+        if v.len() != self.n_params {
+            bail!("param buffer has {} floats, expected {}", v.len(), self.n_params);
+        }
+        Ok(v)
+    }
+
+    /// Extract one named parameter tensor (host copy) for inspection.
+    pub fn get_param(
+        &self,
+        rt: &Runtime,
+        entry: &VariantEntry,
+        name: &str,
+    ) -> Result<(Vec<usize>, Vec<f32>)> {
+        let spec = entry
+            .params
+            .iter()
+            .find(|p| p.name == name)
+            .with_context(|| format!("no parameter named {name:?}"))?;
+        let host = self.to_host(rt)?;
+        let data = host[spec.offset..spec.offset + spec.size()].to_vec();
+        Ok((spec.shape.clone(), data))
+    }
+
+    /// Write a checkpoint: raw f32 LE + JSON sidecar.
+    pub fn save(&self, rt: &Runtime, path: &Path, step: usize) -> Result<()> {
+        let host = self.to_host(rt)?;
+        let mut f = std::fs::File::create(path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        let bytes: Vec<u8> = host.iter().flat_map(|x| x.to_le_bytes()).collect();
+        f.write_all(&bytes)?;
+        let meta = crate::util::json::Json::obj(vec![
+            ("family", crate::util::json::Json::str(&self.family)),
+            ("variant", crate::util::json::Json::str(&self.variant)),
+            ("n_params", crate::util::json::Json::num(self.n_params as f64)),
+            ("step", crate::util::json::Json::num(step as f64)),
+        ]);
+        std::fs::write(meta_path(path), meta.to_string())?;
+        Ok(())
+    }
+
+    /// Load a checkpoint; validates family/variant/size against `self`'s ids.
+    pub fn load(rt: &Runtime, family: &str, variant: &str, path: &Path) -> Result<(Self, usize)> {
+        let entry = rt.manifest().variant(family, variant)?;
+        let meta_text = std::fs::read_to_string(meta_path(path))
+            .with_context(|| format!("reading {}", meta_path(path).display()))?;
+        let meta = crate::util::json::Json::parse(&meta_text)?;
+        let m_family = meta.req("family")?.as_str().unwrap_or_default();
+        let m_variant = meta.req("variant")?.as_str().unwrap_or_default();
+        if m_family != family || m_variant != variant {
+            bail!(
+                "checkpoint is for {m_family}/{m_variant}, wanted {family}/{variant}"
+            );
+        }
+        let step = meta.req("step")?.as_usize().context("step")?;
+        let mut f = std::fs::File::open(path)?;
+        let mut bytes = Vec::new();
+        f.read_to_end(&mut bytes)?;
+        if bytes.len() != entry.n_params * 4 {
+            bail!(
+                "checkpoint has {} bytes, expected {}",
+                bytes.len(),
+                entry.n_params * 4
+            );
+        }
+        let host: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        let params = rt.buf_f32(&host, &[entry.n_params])?;
+        Ok((
+            Self::from_buffer(family, variant, entry.n_params, params),
+            step,
+        ))
+    }
+}
+
+fn meta_path(path: &Path) -> std::path::PathBuf {
+    let mut p = path.as_os_str().to_owned();
+    p.push(".meta.json");
+    std::path::PathBuf::from(p)
+}

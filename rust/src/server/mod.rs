@@ -1,0 +1,206 @@
+//! TCP front-end for the serving engine: newline-delimited JSON.
+//!
+//! Protocol (one JSON object per line, response per line):
+//!   {"tokens": [1,2,3]}          -> {"ok":true,"top":[[id,logit],..],...}
+//!   {"text": "tom found a ball"} -> same, tokenized with the story vocab
+//!   {"cmd": "metrics"}           -> metrics snapshot
+//!   {"cmd": "ping"}              -> {"ok":true,"pong":true}
+//!
+//! One thread per connection (connection counts here are tiny; the real
+//! concurrency lives in the engine's dispatcher/worker pool).
+
+use crate::coordinator::{Engine, Reject};
+use crate::data::Tokenizer;
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+pub struct Server {
+    listener: TcpListener,
+    engine: Arc<Engine>,
+    tokenizer: Arc<Tokenizer>,
+    stop: Arc<AtomicBool>,
+}
+
+impl Server {
+    pub fn bind(addr: &str, engine: Engine) -> Result<Self> {
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        Ok(Self {
+            listener,
+            engine: Arc::new(engine),
+            tokenizer: Arc::new(Tokenizer::for_stories()),
+            stop: Arc::new(AtomicBool::new(false)),
+        })
+    }
+
+    pub fn local_addr(&self) -> Result<std::net::SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// Handle returned by [`Server::serve_background`] to stop the server.
+    pub fn stop_handle(&self) -> Arc<AtomicBool> {
+        Arc::clone(&self.stop)
+    }
+
+    /// Accept loop (blocking). Checks `stop` between connections.
+    pub fn serve(self) -> Result<()> {
+        self.listener.set_nonblocking(true)?;
+        log::info!("serving on {}", self.listener.local_addr()?);
+        loop {
+            if self.stop.load(Ordering::Relaxed) {
+                return Ok(());
+            }
+            match self.listener.accept() {
+                Ok((stream, peer)) => {
+                    log::debug!("connection from {peer}");
+                    stream.set_nonblocking(false)?;
+                    let engine = Arc::clone(&self.engine);
+                    let tokenizer = Arc::clone(&self.tokenizer);
+                    std::thread::spawn(move || {
+                        if let Err(e) = handle_conn(stream, &engine, &tokenizer) {
+                            log::debug!("connection ended: {e:#}");
+                        }
+                    });
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(std::time::Duration::from_millis(10));
+                }
+                Err(e) => return Err(e.into()),
+            }
+        }
+    }
+
+    /// Run the accept loop on a background thread.
+    pub fn serve_background(self) -> (Arc<AtomicBool>, std::thread::JoinHandle<()>) {
+        let stop = self.stop_handle();
+        let h = std::thread::spawn(move || {
+            if let Err(e) = self.serve() {
+                log::error!("server: {e:#}");
+            }
+        });
+        (stop, h)
+    }
+}
+
+fn handle_conn(stream: TcpStream, engine: &Engine, tok: &Tokenizer) -> Result<()> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            return Ok(()); // client closed
+        }
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        let response = match Json::parse(trimmed) {
+            Ok(req) => handle_request(&req, engine, tok),
+            Err(e) => err_json(&format!("bad json: {e}")),
+        };
+        writer.write_all(response.to_string().as_bytes())?;
+        writer.write_all(b"\n")?;
+        writer.flush()?;
+    }
+}
+
+fn handle_request(req: &Json, engine: &Engine, tok: &Tokenizer) -> Json {
+    if let Some(cmd) = req.get("cmd").and_then(|c| c.as_str()) {
+        return match cmd {
+            "metrics" => {
+                let mut obj = vec![("ok", Json::Bool(true))];
+                obj.push(("metrics", engine.metrics.snapshot()));
+                Json::obj(obj)
+            }
+            "ping" => Json::obj(vec![("ok", Json::Bool(true)), ("pong", Json::Bool(true))]),
+            other => err_json(&format!("unknown cmd {other:?}")),
+        };
+    }
+    let tokens: Vec<u32> = if let Some(t) = req.get("tokens").and_then(|t| t.as_arr()) {
+        t.iter()
+            .filter_map(|x| x.as_i64())
+            .map(|x| x.max(0) as u32)
+            .collect()
+    } else if let Some(text) = req.get("text").and_then(|t| t.as_str()) {
+        tok.encode_wrapped(text)
+    } else {
+        return err_json("need \"tokens\", \"text\" or \"cmd\"");
+    };
+    if tokens.is_empty() {
+        return err_json("empty request");
+    }
+    match engine.encode(tokens) {
+        Ok(resp) => Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("id", Json::num(resp.id as f64)),
+            ("bucket", Json::num(resp.bucket as f64)),
+            ("batch_size", Json::num(resp.batch_size as f64)),
+            (
+                "top",
+                Json::arr(resp.top.iter().map(|(t, s)| {
+                    Json::arr(vec![Json::num(*t as f64), Json::num(*s as f64)])
+                })),
+            ),
+            ("queue_ms", Json::num(resp.queue_ms)),
+            ("total_ms", Json::num(resp.total_ms)),
+        ]),
+        Err(r @ Reject::Overloaded) => Json::obj(vec![
+            ("ok", Json::Bool(false)),
+            ("error", Json::str(r.to_string())),
+            ("retry", Json::Bool(true)),
+        ]),
+        Err(r) => err_json(&r.to_string()),
+    }
+}
+
+fn err_json(msg: &str) -> Json {
+    Json::obj(vec![
+        ("ok", Json::Bool(false)),
+        ("error", Json::str(msg)),
+    ])
+}
+
+/// Minimal blocking client for examples/tests/benches.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Self> {
+        let stream = TcpStream::connect(addr)?;
+        Ok(Self {
+            reader: BufReader::new(stream.try_clone()?),
+            writer: stream,
+        })
+    }
+
+    pub fn call(&mut self, req: &Json) -> Result<Json> {
+        self.writer.write_all(req.to_string().as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        self.writer.flush()?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        Json::parse(line.trim()).context("parsing server response")
+    }
+
+    pub fn encode_tokens(&mut self, tokens: &[u32]) -> Result<Json> {
+        self.call(&Json::obj(vec![(
+            "tokens",
+            Json::arr(tokens.iter().map(|&t| Json::num(t as f64))),
+        )]))
+    }
+
+    pub fn encode_text(&mut self, text: &str) -> Result<Json> {
+        self.call(&Json::obj(vec![("text", Json::str(text))]))
+    }
+
+    pub fn metrics(&mut self) -> Result<Json> {
+        self.call(&Json::obj(vec![("cmd", Json::str("metrics"))]))
+    }
+}

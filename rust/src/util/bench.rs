@@ -1,0 +1,154 @@
+//! Benchmark runner (criterion is unavailable offline).
+//!
+//! `cargo bench` targets use `harness = false` and drive this runner: it
+//! warms up, measures wall-clock per iteration until a time or rep budget
+//! is hit, and prints mean ± std plus throughput. Also renders the
+//! markdown tables the paper-reproduction benches emit.
+
+use crate::util::stats::Summary;
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub secs: Summary,
+    /// Optional work units per iteration (e.g. tokens) for throughput.
+    pub units_per_iter: Option<f64>,
+}
+
+impl BenchResult {
+    pub fn mean(&self) -> f64 {
+        self.secs.mean()
+    }
+
+    pub fn report_line(&self) -> String {
+        let mut s = format!(
+            "{:40} {:>10.4}s ± {:>8.4}s (n={})",
+            self.name,
+            self.secs.mean(),
+            self.secs.std(),
+            self.secs.len()
+        );
+        if let Some(u) = self.units_per_iter {
+            s.push_str(&format!("  [{:>10.1} units/s]", u / self.secs.mean()));
+        }
+        s
+    }
+}
+
+/// Bench configuration: bounded by both reps and wall-clock budget.
+#[derive(Debug, Clone)]
+pub struct Bench {
+    pub warmup: usize,
+    pub min_reps: usize,
+    pub max_reps: usize,
+    pub budget: Duration,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self {
+            warmup: 1,
+            min_reps: 3,
+            max_reps: 20,
+            budget: Duration::from_secs(20),
+        }
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Self {
+        Self {
+            warmup: 1,
+            min_reps: 2,
+            max_reps: 5,
+            budget: Duration::from_secs(8),
+        }
+    }
+
+    pub fn run<F: FnMut()>(&self, name: &str, units_per_iter: Option<f64>, mut f: F) -> BenchResult {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut secs = Summary::new();
+        let start = Instant::now();
+        for rep in 0..self.max_reps {
+            let t0 = Instant::now();
+            f();
+            secs.add(t0.elapsed().as_secs_f64());
+            if rep + 1 >= self.min_reps && start.elapsed() > self.budget {
+                break;
+            }
+        }
+        let result = BenchResult {
+            name: name.to_string(),
+            secs,
+            units_per_iter,
+        };
+        println!("{}", result.report_line());
+        result
+    }
+}
+
+/// Render a markdown table (paper-style): rows x columns of cells.
+pub fn markdown_table(header: &[String], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let fmt_row = |cells: &[String]| {
+        let mut s = String::from("|");
+        for (i, c) in cells.iter().enumerate() {
+            s.push_str(&format!(" {:>w$} |", c, w = widths.get(i).copied().unwrap_or(4)));
+        }
+        s
+    };
+    let mut out = fmt_row(header);
+    out.push('\n');
+    out.push('|');
+    for w in &widths {
+        out.push_str(&format!("{}|", "-".repeat(w + 2)));
+    }
+    out.push('\n');
+    for row in rows {
+        out.push_str(&fmt_row(row));
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_within_budget() {
+        let b = Bench {
+            warmup: 1,
+            min_reps: 2,
+            max_reps: 100,
+            budget: Duration::from_millis(50),
+        };
+        let r = b.run("sleepy", None, || std::thread::sleep(Duration::from_millis(5)));
+        assert!(r.secs.len() >= 2);
+        assert!(r.secs.len() < 100);
+        assert!(r.mean() >= 0.004);
+    }
+
+    #[test]
+    fn markdown_is_aligned() {
+        let t = markdown_table(
+            &["Seq".into(), "MHA".into()],
+            &[vec!["1024".into(), "0.0869".into()], vec!["200000".into(), "2.8734".into()]],
+        );
+        let lines: Vec<&str> = t.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].contains("Seq") && lines[2].contains("1024"));
+        assert_eq!(lines[0].len(), lines[3].len());
+    }
+}

@@ -1,0 +1,166 @@
+//! Tiny CLI argument parser (clap is unavailable in the offline image).
+//!
+//! Supports subcommands, `--flag`, `--key value`, `--key=value`, and typed
+//! accessors with defaults. Unknown flags are an error — catches typos in
+//! bench invocations early.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// First non-flag token (subcommand), if any.
+    pub command: Option<String>,
+    /// Remaining positional arguments.
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    known: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of tokens (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(tokens: I) -> anyhow::Result<Self> {
+        let mut args = Args::default();
+        let mut iter = tokens.into_iter().peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    args.flags.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    args.flags.insert(stripped.to_string(), v);
+                } else {
+                    args.flags.insert(stripped.to_string(), "true".to_string());
+                }
+            } else if args.command.is_none() {
+                args.command = Some(tok);
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn from_env() -> anyhow::Result<Self> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    fn mark(&mut self, key: &str) {
+        if !self.known.iter().any(|k| k == key) {
+            self.known.push(key.to_string());
+        }
+    }
+
+    pub fn str_opt(&mut self, key: &str) -> Option<String> {
+        self.mark(key);
+        self.flags.get(key).cloned()
+    }
+
+    pub fn str(&mut self, key: &str, default: &str) -> String {
+        self.str_opt(key).unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn usize(&mut self, key: &str, default: usize) -> anyhow::Result<usize> {
+        self.mark(key);
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn f64(&mut self, key: &str, default: f64) -> anyhow::Result<f64> {
+        self.mark(key);
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects a float, got {v:?}")),
+        }
+    }
+
+    pub fn bool(&mut self, key: &str) -> bool {
+        self.mark(key);
+        matches!(self.flags.get(key).map(|s| s.as_str()), Some("true") | Some("1"))
+    }
+
+    /// Comma-separated list flag.
+    pub fn list(&mut self, key: &str, default: &[&str]) -> Vec<String> {
+        self.mark(key);
+        match self.flags.get(key) {
+            None => default.iter().map(|s| s.to_string()).collect(),
+            Some(v) => v.split(',').map(|s| s.trim().to_string()).filter(|s| !s.is_empty()).collect(),
+        }
+    }
+
+    /// Call after consuming all flags; errors on unrecognized ones.
+    pub fn finish(&self) -> anyhow::Result<()> {
+        for k in self.flags.keys() {
+            if !self.known.iter().any(|known| known == k) {
+                anyhow::bail!(
+                    "unknown flag --{k} (known: {})",
+                    self.known.join(", ")
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let mut a = parse("train --steps 100 --lr=3e-4 --verbose");
+        assert_eq!(a.command.as_deref(), Some("train"));
+        assert_eq!(a.usize("steps", 0).unwrap(), 100);
+        assert_eq!(a.f64("lr", 0.0).unwrap(), 3e-4);
+        assert!(a.bool("verbose"));
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn defaults() {
+        let mut a = parse("bench");
+        assert_eq!(a.usize("steps", 7).unwrap(), 7);
+        assert_eq!(a.str("variant", "sqa"), "sqa");
+        assert!(!a.bool("force"));
+    }
+
+    #[test]
+    fn lists() {
+        let mut a = parse("bench --variants mha,sqa,xsqa");
+        assert_eq!(a.list("variants", &[]), vec!["mha", "sqa", "xsqa"]);
+        let mut b = parse("bench");
+        assert_eq!(b.list("variants", &["gqa"]), vec!["gqa"]);
+    }
+
+    #[test]
+    fn unknown_flag_errors() {
+        let mut a = parse("train --oops 1");
+        let _ = a.usize("steps", 0);
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn type_errors() {
+        let mut a = parse("x --n abc");
+        assert!(a.usize("n", 0).is_err());
+    }
+
+    #[test]
+    fn positional() {
+        let a = parse("encode file1 file2");
+        assert_eq!(a.positional, vec!["file1", "file2"]);
+    }
+}

@@ -1,0 +1,63 @@
+//! Minimal `log` backend (env_logger/tracing-subscriber are unavailable).
+//!
+//! `init()` installs a stderr logger filtered by `SQA_LOG`
+//! (error|warn|info|debug|trace, default info). Timestamps are
+//! seconds-since-start — enough to read training/serving logs.
+
+use std::sync::OnceLock;
+use std::time::Instant;
+
+struct StderrLogger {
+    start: Instant,
+    max_level: log::LevelFilter,
+}
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, metadata: &log::Metadata) -> bool {
+        metadata.level() <= self.max_level
+    }
+
+    fn log(&self, record: &log::Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let t = self.start.elapsed().as_secs_f64();
+        eprintln!(
+            "[{t:9.3}s {:5} {}] {}",
+            record.level(),
+            record.target().split("::").last().unwrap_or(""),
+            record.args()
+        );
+    }
+
+    fn flush(&self) {}
+}
+
+static LOGGER: OnceLock<StderrLogger> = OnceLock::new();
+
+/// Install the logger; safe to call multiple times.
+pub fn init() {
+    let level = match std::env::var("SQA_LOG").as_deref() {
+        Ok("error") => log::LevelFilter::Error,
+        Ok("warn") => log::LevelFilter::Warn,
+        Ok("debug") => log::LevelFilter::Debug,
+        Ok("trace") => log::LevelFilter::Trace,
+        _ => log::LevelFilter::Info,
+    };
+    let logger = LOGGER.get_or_init(|| StderrLogger {
+        start: Instant::now(),
+        max_level: level,
+    });
+    let _ = log::set_logger(logger);
+    log::set_max_level(level);
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn init_is_idempotent() {
+        super::init();
+        super::init();
+        log::info!("logging smoke test");
+    }
+}

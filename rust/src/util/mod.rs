@@ -1,0 +1,24 @@
+//! Substrate modules the offline image has no crates for.
+//!
+//! Each module replaces a crate a networked build would pull from
+//! crates.io (see DESIGN.md §3 substitution table):
+//!
+//! | module       | replaces            |
+//! |--------------|---------------------|
+//! | [`json`]     | serde + serde_json  |
+//! | [`cli`]      | clap                |
+//! | [`rng`]      | rand + rand_distr   |
+//! | [`threadpool`] | tokio task pool   |
+//! | [`stats`]    | hdrhistogram-lite   |
+//! | [`prop`]     | proptest            |
+//! | [`bench`]    | criterion           |
+//! | [`logging`]  | env_logger          |
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;

@@ -1,0 +1,227 @@
+//! Property-based testing harness (proptest is unavailable offline).
+//!
+//! `check` runs a property over `cases` randomized inputs drawn from a
+//! generator; on failure it performs greedy shrinking via the generator's
+//! `shrink` and reports the minimal counterexample plus the reproducing
+//! seed. Deliberately small: enough for the coordinator-invariant and
+//! attention-oracle properties this repo needs.
+
+use crate::util::rng::Pcg64;
+
+/// A generator of random values with optional shrinking.
+pub trait Gen {
+    type Value: Clone + std::fmt::Debug;
+
+    fn generate(&self, rng: &mut Pcg64) -> Self::Value;
+
+    /// Candidate smaller values; default = no shrinking.
+    fn shrink(&self, _value: &Self::Value) -> Vec<Self::Value> {
+        Vec::new()
+    }
+}
+
+/// Uniform usize in [lo, hi] with halving shrink toward lo.
+pub struct UsizeRange {
+    pub lo: usize,
+    pub hi: usize,
+}
+
+impl Gen for UsizeRange {
+    type Value = usize;
+
+    fn generate(&self, rng: &mut Pcg64) -> usize {
+        rng.range_usize(self.lo, self.hi + 1)
+    }
+
+    fn shrink(&self, value: &usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        if *value > self.lo {
+            out.push(self.lo);
+            out.push(self.lo + (*value - self.lo) / 2);
+            out.push(*value - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+/// f32 in [lo, hi) with shrink toward 0 / lo.
+pub struct F32Range {
+    pub lo: f32,
+    pub hi: f32,
+}
+
+impl Gen for F32Range {
+    type Value = f32;
+
+    fn generate(&self, rng: &mut Pcg64) -> f32 {
+        self.lo + rng.f32() * (self.hi - self.lo)
+    }
+
+    fn shrink(&self, value: &f32) -> Vec<f32> {
+        let mut out = Vec::new();
+        if *value != 0.0 && self.lo <= 0.0 && self.hi > 0.0 {
+            out.push(0.0);
+            out.push(value / 2.0);
+        } else if *value > self.lo {
+            out.push(self.lo);
+            out.push(self.lo + (value - self.lo) / 2.0);
+        }
+        out
+    }
+}
+
+/// Fixed-length Vec<f32> of standard normals (no shrinking).
+pub struct NormalVec {
+    pub len: usize,
+}
+
+impl Gen for NormalVec {
+    type Value = Vec<f32>;
+
+    fn generate(&self, rng: &mut Pcg64) -> Vec<f32> {
+        (0..self.len).map(|_| rng.normal_f32(0.0, 1.0)).collect()
+    }
+}
+
+/// Pair combinator.
+pub struct Pair<A, B>(pub A, pub B);
+
+impl<A: Gen, B: Gen> Gen for Pair<A, B> {
+    type Value = (A::Value, B::Value);
+
+    fn generate(&self, rng: &mut Pcg64) -> Self::Value {
+        (self.0.generate(rng), self.1.generate(rng))
+    }
+
+    fn shrink(&self, value: &Self::Value) -> Vec<Self::Value> {
+        let mut out: Vec<Self::Value> = self
+            .0
+            .shrink(&value.0)
+            .into_iter()
+            .map(|a| (a, value.1.clone()))
+            .collect();
+        out.extend(self.1.shrink(&value.1).into_iter().map(|b| (value.0.clone(), b)));
+        out
+    }
+}
+
+/// One of a fixed set of choices.
+pub struct Choice<T: Clone + std::fmt::Debug>(pub Vec<T>);
+
+impl<T: Clone + std::fmt::Debug> Gen for Choice<T> {
+    type Value = T;
+
+    fn generate(&self, rng: &mut Pcg64) -> T {
+        self.0[rng.below(self.0.len() as u64) as usize].clone()
+    }
+}
+
+/// Run `prop` over `cases` random inputs. Panics with the minimal shrunk
+/// counterexample and the seed that reproduces it.
+pub fn check<G: Gen, F>(seed: u64, cases: usize, gen: &G, mut prop: F)
+where
+    F: FnMut(&G::Value) -> Result<(), String>,
+{
+    let mut rng = Pcg64::new(seed);
+    for case in 0..cases {
+        let value = gen.generate(&mut rng);
+        if let Err(msg) = prop(&value) {
+            // Greedy shrink: repeatedly take the first failing shrink.
+            let mut best = value.clone();
+            let mut best_msg = msg;
+            let mut budget = 200;
+            'outer: while budget > 0 {
+                for cand in gen.shrink(&best) {
+                    budget -= 1;
+                    if let Err(m) = prop(&cand) {
+                        best = cand;
+                        best_msg = m;
+                        continue 'outer;
+                    }
+                    if budget == 0 {
+                        break;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property failed (seed={seed}, case={case}):\n  input: {best:?}\n  error: {best_msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        check(1, 100, &UsizeRange { lo: 0, hi: 50 }, |v| {
+            if *v <= 50 {
+                Ok(())
+            } else {
+                Err(format!("{v} > 50"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn fails_and_reports() {
+        check(2, 100, &UsizeRange { lo: 0, hi: 100 }, |v| {
+            if *v < 30 {
+                Ok(())
+            } else {
+                Err("too big".to_string())
+            }
+        });
+    }
+
+    #[test]
+    fn shrinks_toward_minimum() {
+        let result = std::panic::catch_unwind(|| {
+            check(3, 200, &UsizeRange { lo: 0, hi: 1000 }, |v| {
+                if *v < 17 {
+                    Ok(())
+                } else {
+                    Err("x".into())
+                }
+            })
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        // Greedy shrink should land on exactly the boundary (17).
+        assert!(msg.contains("input: 17"), "{msg}");
+    }
+
+    #[test]
+    fn pair_generates_both() {
+        check(
+            4,
+            50,
+            &Pair(UsizeRange { lo: 1, hi: 8 }, F32Range { lo: -1.0, hi: 1.0 }),
+            |(n, x)| {
+                if *n >= 1 && *x >= -1.0 && *x < 1.0 {
+                    Ok(())
+                } else {
+                    Err("out of range".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let collect = |seed| {
+            let mut vals = Vec::new();
+            check(seed, 10, &UsizeRange { lo: 0, hi: 1000 }, |v| {
+                vals.push(*v);
+                Ok(())
+            });
+            vals
+        };
+        assert_eq!(collect(7), collect(7));
+        assert_ne!(collect(7), collect(8));
+    }
+}

@@ -1,0 +1,195 @@
+//! Fixed-size thread pool with a bounded queue (tokio is unavailable).
+//!
+//! Used by the serving coordinator's worker pool and the bench harness's
+//! client load generators. The bounded queue is the backpressure primitive:
+//! `submit` blocks when the queue is full, `try_submit` fails fast —
+//! the serving path uses the latter to shed load explicitly.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Queue {
+    jobs: Mutex<QueueState>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    capacity: usize,
+}
+
+struct QueueState {
+    items: VecDeque<Job>,
+    shutdown: bool,
+}
+
+/// A fixed pool of worker threads over a bounded FIFO queue.
+pub struct ThreadPool {
+    queue: Arc<Queue>,
+    workers: Vec<JoinHandle<()>>,
+    in_flight: Arc<AtomicUsize>,
+}
+
+impl ThreadPool {
+    pub fn new(n_workers: usize, queue_capacity: usize) -> Self {
+        assert!(n_workers > 0 && queue_capacity > 0);
+        let queue = Arc::new(Queue {
+            jobs: Mutex::new(QueueState {
+                items: VecDeque::new(),
+                shutdown: false,
+            }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            capacity: queue_capacity,
+        });
+        let in_flight = Arc::new(AtomicUsize::new(0));
+        let workers = (0..n_workers)
+            .map(|i| {
+                let q = Arc::clone(&queue);
+                let inflight = Arc::clone(&in_flight);
+                std::thread::Builder::new()
+                    .name(format!("pool-{i}"))
+                    .spawn(move || worker_loop(q, inflight))
+                    .expect("spawn worker")
+            })
+            .collect();
+        Self {
+            queue,
+            workers,
+            in_flight,
+        }
+    }
+
+    /// Enqueue a job, blocking while the queue is full.
+    pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
+        let mut state = self.queue.jobs.lock().unwrap();
+        while state.items.len() >= self.queue.capacity && !state.shutdown {
+            state = self.queue.not_full.wait(state).unwrap();
+        }
+        if state.shutdown {
+            return;
+        }
+        state.items.push_back(Box::new(f));
+        self.queue.not_empty.notify_one();
+    }
+
+    /// Enqueue without blocking; `Err` means the queue is full (shed load).
+    pub fn try_submit<F: FnOnce() + Send + 'static>(&self, f: F) -> Result<(), F> {
+        let mut state = self.queue.jobs.lock().unwrap();
+        if state.shutdown || state.items.len() >= self.queue.capacity {
+            return Err(f);
+        }
+        state.items.push_back(Box::new(f));
+        self.queue.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Jobs queued but not yet started plus jobs currently running.
+    pub fn pending(&self) -> usize {
+        self.queue.jobs.lock().unwrap().items.len() + self.in_flight.load(Ordering::Relaxed)
+    }
+
+    /// Block until every queued job has finished.
+    pub fn wait_idle(&self) {
+        loop {
+            if self.pending() == 0 {
+                return;
+            }
+            std::thread::sleep(std::time::Duration::from_micros(200));
+        }
+    }
+}
+
+fn worker_loop(queue: Arc<Queue>, in_flight: Arc<AtomicUsize>) {
+    loop {
+        let job = {
+            let mut state = queue.jobs.lock().unwrap();
+            loop {
+                if let Some(job) = state.items.pop_front() {
+                    in_flight.fetch_add(1, Ordering::Relaxed);
+                    queue.not_full.notify_one();
+                    break job;
+                }
+                if state.shutdown {
+                    return;
+                }
+                state = queue.not_empty.wait(state).unwrap();
+            }
+        };
+        job();
+        in_flight.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        {
+            let mut state = self.queue.jobs.lock().unwrap();
+            state.shutdown = true;
+        }
+        self.queue.not_empty.notify_all();
+        self.queue.not_full.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn runs_all_jobs() {
+        let pool = ThreadPool::new(4, 16);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn try_submit_sheds_when_full() {
+        let pool = ThreadPool::new(1, 1);
+        let gate = Arc::new(Mutex::new(()));
+        let hold = gate.lock().unwrap();
+        let g1 = Arc::clone(&gate);
+        pool.submit(move || {
+            drop(g1.lock().unwrap()); // blocks until test releases
+        });
+        // Wait for the worker to pick up the blocking job.
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        pool.submit(|| {}); // fills the queue (capacity 1)
+        let mut shed = 0;
+        for _ in 0..3 {
+            if pool.try_submit(|| {}).is_err() {
+                shed += 1;
+            }
+        }
+        assert!(shed >= 2, "expected shedding, got {shed}");
+        drop(hold);
+        pool.wait_idle();
+    }
+
+    #[test]
+    fn drop_joins_workers() {
+        let pool = ThreadPool::new(2, 8);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..10 {
+            let c = Arc::clone(&counter);
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        drop(pool);
+        assert_eq!(counter.load(Ordering::SeqCst), 10);
+    }
+}

@@ -1,0 +1,66 @@
+//! Cross-language differential test: the pure-Rust attention oracle vs the
+//! JAX reference (`python/compile/kernels/ref.py`), via golden files
+//! written by `python/tests/test_golden.py` (run `make test` or pytest
+//! first — missing goldens skip with a message, they are build artifacts).
+
+use sqa::attention::{attention, tensor::Tensor, Spec};
+use sqa::util::json::Json;
+
+fn load_case(path: &std::path::Path) -> (Spec, Tensor, Tensor, Tensor, Tensor) {
+    let text = std::fs::read_to_string(path).unwrap();
+    let j = Json::parse(&text).unwrap();
+    let get = |k: &str| j.req(k).unwrap().as_usize().unwrap();
+    let (hq, hkv, s, d) = (get("hq"), get("hkv"), get("seq"), get("d"));
+    let spec = Spec {
+        hq,
+        hkv,
+        causal: j.req("causal").unwrap().as_bool().unwrap(),
+        window: j.get("window").and_then(|w| w.as_usize()),
+    };
+    let arr = |k: &str, shape: &[usize]| {
+        let data: Vec<f32> = j
+            .req(k)
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|x| x.as_f64().unwrap() as f32)
+            .collect();
+        Tensor::from_vec(shape, data).unwrap()
+    };
+    (
+        spec,
+        arr("q", &[1, hq, s, d]),
+        arr("k", &[1, hkv, s, d]),
+        arr("v", &[1, hkv, s, d]),
+        arr("out", &[1, hq, s, d]),
+    )
+}
+
+#[test]
+fn native_oracle_matches_jax_reference() {
+    let dir = std::path::Path::new("artifacts/golden");
+    if !dir.exists() {
+        panic!(
+            "golden files missing — run `cd python && python -m pytest tests/test_golden.py` \
+             (or `make test`) first"
+        );
+    }
+    let mut n = 0;
+    for entry in std::fs::read_dir(dir).unwrap() {
+        let path = entry.unwrap().path();
+        if path.extension().and_then(|e| e.to_str()) != Some("json") {
+            continue;
+        }
+        let (spec, q, k, v, expected) = load_case(&path);
+        let out = attention(&q, &k, &v, spec).unwrap();
+        let diff = out.max_abs_diff(&expected);
+        assert!(
+            diff <= 2e-5,
+            "{}: max |rust - jax| = {diff}",
+            path.display()
+        );
+        n += 1;
+    }
+    assert!(n >= 7, "only {n} golden cases found");
+}

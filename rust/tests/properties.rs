@@ -1,0 +1,220 @@
+//! Property-based tests (custom harness, `sqa::util::prop`) over the
+//! coordinator invariants and the native attention oracle.
+
+use sqa::attention::{attention, tensor::Tensor, Spec};
+use sqa::coordinator::batcher::DynamicBatcher;
+use sqa::coordinator::request::EncodeRequest;
+use sqa::coordinator::router::Router;
+use sqa::data::{pad_to, Batcher, Split};
+use sqa::util::prop::{check, Choice, Gen, Pair, UsizeRange};
+use sqa::util::rng::Pcg64;
+use std::time::{Duration, Instant};
+
+fn randn_tensor(shape: &[usize], rng: &mut Pcg64) -> Tensor {
+    let n: usize = shape.iter().product();
+    Tensor::from_vec(shape, (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect()).unwrap()
+}
+
+/// Attention rows are convex combinations: outputs stay inside the per-head
+/// value hull for every (Hq, Hkv, S, window) drawn.
+#[test]
+fn prop_attention_output_in_value_hull() {
+    let geom = Pair(
+        Pair(UsizeRange { lo: 1, hi: 3 }, UsizeRange { lo: 1, hi: 2 }), // (group, hkv)
+        Pair(UsizeRange { lo: 2, hi: 24 }, Choice(vec![None, Some(1usize), Some(4), Some(9)])),
+    );
+    let mut rng_seed = 0u64;
+    check(42, 40, &geom, |((group, hkv), (s, window))| {
+        rng_seed += 1;
+        let hq = group * hkv;
+        let mut rng = Pcg64::new(rng_seed);
+        let q = randn_tensor(&[1, hq, *s, 4], &mut rng);
+        let k = randn_tensor(&[1, *hkv, *s, 4], &mut rng);
+        let v = randn_tensor(&[1, *hkv, *s, 4], &mut rng);
+        let spec = Spec {
+            hq,
+            hkv: *hkv,
+            causal: window.is_none(), // exercise both mask kinds
+            window: *window,
+        };
+        let out = attention(&q, &k, &v, spec).map_err(|e| e.to_string())?;
+        for h in 0..hq {
+            let kvh = h / group;
+            for dd in 0..4 {
+                let (mut lo, mut hi) = (f32::MAX, f32::MIN);
+                for j in 0..*s {
+                    let x = v.get4(0, kvh, j, dd);
+                    lo = lo.min(x);
+                    hi = hi.max(x);
+                }
+                for i in 0..*s {
+                    let o = out.get4(0, h, i, dd);
+                    if o < lo - 1e-4 || o > hi + 1e-4 {
+                        return Err(format!("out {o} outside hull [{lo}, {hi}]"));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Permuting value rows under uniform attention leaves the output unchanged
+/// (softmax over constant scores is permutation-invariant).
+#[test]
+fn prop_uniform_attention_permutation_invariant() {
+    check(7, 30, &UsizeRange { lo: 2, hi: 32 }, |&s| {
+        let mut rng = Pcg64::new(s as u64);
+        let q = Tensor::from_vec(&[1, 2, s, 4], vec![1.0; 2 * s * 4]).unwrap();
+        let k = Tensor::from_vec(&[1, 1, s, 4], vec![1.0; s * 4]).unwrap();
+        let v = randn_tensor(&[1, 1, s, 4], &mut rng);
+        let out1 = attention(&q, &k, &v, Spec::full(2, 1)).map_err(|e| e.to_string())?;
+        // Rotate value rows by one.
+        let mut v2 = Tensor::zeros(&[1, 1, s, 4]);
+        for j in 0..s {
+            for dd in 0..4 {
+                v2.set4(0, 0, (j + 1) % s, dd, v.get4(0, 0, j, dd));
+            }
+        }
+        let out2 = attention(&q, &k, &v2, Spec::full(2, 1)).map_err(|e| e.to_string())?;
+        if out1.max_abs_diff(&out2) > 1e-5 {
+            return Err("uniform attention not permutation invariant".into());
+        }
+        Ok(())
+    });
+}
+
+/// Router invariants: routed bucket fits, is minimal, and waste < 1.
+#[test]
+fn prop_router_minimal_fitting_bucket() {
+    let gen = Pair(UsizeRange { lo: 1, hi: 4 }, UsizeRange { lo: 1, hi: 600 });
+    check(3, 200, &gen, |(n_buckets, len)| {
+        let buckets: Vec<usize> = (1..=*n_buckets).map(|i| i * 128).collect();
+        let router = Router::new(buckets.clone());
+        match router.route(*len) {
+            Ok(b) => {
+                if b < *len {
+                    return Err(format!("bucket {b} < len {len}"));
+                }
+                if let Some(&smaller) = buckets.iter().filter(|&&x| x >= *len).min() {
+                    if b != smaller {
+                        return Err(format!("bucket {b} not minimal ({smaller})"));
+                    }
+                }
+                let w = router.padding_waste(*len);
+                if !(0.0..1.0).contains(&w) {
+                    return Err(format!("waste {w} out of range"));
+                }
+            }
+            Err(_) => {
+                if *len <= *buckets.last().unwrap() {
+                    return Err("rejected a routable length".into());
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Dynamic batcher conservation: every pushed request comes out exactly
+/// once, in FIFO order per bucket, and no batch exceeds max_batch.
+#[test]
+fn prop_batcher_conserves_requests() {
+    let gen = Pair(UsizeRange { lo: 1, hi: 8 }, UsizeRange { lo: 1, hi: 50 });
+    check(11, 100, &gen, |(max_batch, n_reqs)| {
+        let now = Instant::now();
+        let mut b = DynamicBatcher::new(&[64, 128], *max_batch, Duration::ZERO);
+        let mut rng = Pcg64::new((*n_reqs * 31 + *max_batch) as u64);
+        let mut pushed = Vec::new();
+        for id in 0..*n_reqs as u64 {
+            let bucket = if rng.bool(0.5) { 64 } else { 128 };
+            b.push(
+                bucket,
+                EncodeRequest {
+                    id,
+                    tokens: vec![1],
+                    submitted: now,
+                },
+            );
+            pushed.push((bucket, id));
+        }
+        let batches = b.ready(now, true);
+        let mut seen: Vec<(usize, u64)> = Vec::new();
+        for batch in &batches {
+            if batch.requests.len() > *max_batch {
+                return Err(format!("batch of {} > max {max_batch}", batch.requests.len()));
+            }
+            for r in &batch.requests {
+                seen.push((batch.bucket, r.id));
+            }
+        }
+        // Exactly once, FIFO per bucket.
+        for bucket in [64usize, 128] {
+            let sent: Vec<u64> = pushed.iter().filter(|(b2, _)| *b2 == bucket).map(|(_, id)| *id).collect();
+            let got: Vec<u64> = seen.iter().filter(|(b2, _)| *b2 == bucket).map(|(_, id)| *id).collect();
+            if sent != got {
+                return Err(format!("bucket {bucket}: sent {sent:?} got {got:?}"));
+            }
+        }
+        if b.queued() != 0 {
+            return Err("requests left in queue after drain".into());
+        }
+        Ok(())
+    });
+}
+
+/// pad_to: length preserved, padding id correct, truncation exact.
+#[test]
+fn prop_pad_to() {
+    let gen = Pair(UsizeRange { lo: 0, hi: 300 }, UsizeRange { lo: 1, hi: 256 });
+    check(5, 200, &gen, |(len, bucket)| {
+        let tokens: Vec<u32> = (0..*len as u32).map(|i| i + 10).collect();
+        let (padded, n) = pad_to(&tokens, *bucket, 0);
+        if padded.len() != *bucket {
+            return Err(format!("padded len {} != bucket {bucket}", padded.len()));
+        }
+        if n != (*len).min(*bucket) {
+            return Err(format!("real len {n} wrong"));
+        }
+        for (i, &t) in padded.iter().enumerate() {
+            let want = if i < n { (i + 10) as i32 } else { 0 };
+            if t != want {
+                return Err(format!("padded[{i}] = {t}, want {want}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Batcher (data pipeline): targets always equal next tokens; train and val
+/// windows never overlap for any (seq, batch) geometry.
+#[test]
+fn prop_data_batcher_shift_and_split() {
+    let gen = Pair(UsizeRange { lo: 2, hi: 32 }, UsizeRange { lo: 1, hi: 4 });
+    check(13, 60, &gen, |(seq, batch)| {
+        let data: Vec<u32> = (0..((*seq + 1) * *batch * 25) as u32).collect();
+        let mut tr = Batcher::new(data.clone(), *batch, *seq, Split::Train);
+        let mut va = Batcher::new(data, *batch, *seq, Split::Val);
+        let mut train_starts = std::collections::HashSet::new();
+        for _ in 0..10 {
+            let b = tr.next_batch();
+            for row in 0..*batch {
+                train_starts.insert(b.tokens[row * *seq]);
+                for i in 0..*seq - 1 {
+                    if b.targets[row * *seq + i] != b.tokens[row * *seq + i + 1] {
+                        return Err("targets are not shifted tokens".into());
+                    }
+                }
+            }
+        }
+        for _ in 0..4 {
+            let b = va.next_batch();
+            for row in 0..*batch {
+                if train_starts.contains(&b.tokens[row * *seq]) {
+                    return Err("val window seen in train".into());
+                }
+            }
+        }
+        Ok(())
+    });
+}

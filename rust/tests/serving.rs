@@ -1,0 +1,186 @@
+//! Serving-path integration tests: engine, TCP server, wire protocol,
+//! backpressure, batching behaviour under concurrent load.
+
+use sqa::config::ServeConfig;
+use sqa::coordinator::{Engine, Reject};
+use sqa::runtime::Runtime;
+use sqa::server::{Client, Server};
+use sqa::util::json::Json;
+use std::sync::OnceLock;
+
+fn rt() -> &'static Runtime {
+    static RT: OnceLock<Runtime> = OnceLock::new();
+    RT.get_or_init(|| {
+        Runtime::new("artifacts").expect("artifacts missing — run `make artifacts` first")
+    })
+}
+
+fn cfg() -> ServeConfig {
+    ServeConfig {
+        family: "tiny".into(),
+        variant: "sqa".into(),
+        addr: "127.0.0.1:0".into(),
+        max_batch: 4,
+        max_wait_ms: 3,
+        workers: 1,
+        queue_capacity: 64,
+    }
+}
+
+#[test]
+fn engine_encodes_and_responds() {
+    let engine = Engine::start(rt(), &cfg(), None).unwrap();
+    let resp = engine.encode(vec![5, 6, 7, 8]).unwrap();
+    assert_eq!(resp.bucket, 64); // smallest tiny bucket
+    assert_eq!(resp.top.len(), 5);
+    assert!(resp.top[0].1 >= resp.top[1].1);
+    assert!(resp.total_ms > 0.0);
+    engine.shutdown();
+}
+
+#[test]
+fn engine_routes_by_length() {
+    let engine = Engine::start(rt(), &cfg(), None).unwrap();
+    assert_eq!(engine.encode(vec![1; 60]).unwrap().bucket, 64);
+    assert_eq!(engine.encode(vec![1; 65]).unwrap().bucket, 128);
+    assert_eq!(engine.encode(vec![1; 256]).unwrap().bucket, 256);
+    match engine.encode(vec![1; 257]) {
+        Err(Reject::TooLong { max }) => assert_eq!(max, 256),
+        other => panic!("expected TooLong, got {other:?}"),
+    }
+    engine.shutdown();
+}
+
+#[test]
+fn engine_batches_concurrent_requests() {
+    let mut c = cfg();
+    c.max_wait_ms = 30; // generous window so requests coalesce
+    let engine = std::sync::Arc::new(Engine::start(rt(), &c, None).unwrap());
+    let mut handles = Vec::new();
+    for i in 0..4 {
+        let e = std::sync::Arc::clone(&engine);
+        handles.push(std::thread::spawn(move || {
+            e.encode(vec![(4 + i) as u32; 32]).unwrap()
+        }));
+    }
+    let responses: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    // At least one response should have been co-batched.
+    let max_batch = responses.iter().map(|r| r.batch_size).max().unwrap();
+    assert!(max_batch >= 2, "no batching observed: {responses:?}");
+    assert!(engine.metrics.mean_batch_size() > 1.0);
+}
+
+#[test]
+fn deterministic_logits_identical_requests() {
+    let engine = Engine::start(rt(), &cfg(), None).unwrap();
+    let a = engine.encode(vec![9, 10, 11]).unwrap();
+    let b = engine.encode(vec![9, 10, 11]).unwrap();
+    assert_eq!(a.top, b.top, "same tokens must give same logits");
+    engine.shutdown();
+}
+
+#[test]
+fn padding_does_not_change_result() {
+    // A request is padded to its bucket; the last-real-token logits must
+    // not depend on how much padding follows (causal attention guarantee,
+    // checked through the whole serving stack).
+    let engine = Engine::start(rt(), &cfg(), None).unwrap();
+    let short = engine.encode(vec![42; 10]).unwrap(); // bucket 64, pad 54
+    let engine2 = Engine::start(rt(), &cfg(), None).unwrap();
+    let same = engine2.encode(vec![42; 10]).unwrap();
+    assert_eq!(short.top, same.top);
+    engine.shutdown();
+    engine2.shutdown();
+}
+
+#[test]
+fn tcp_server_roundtrip() {
+    let engine = Engine::start(rt(), &cfg(), None).unwrap();
+    let server = Server::bind("127.0.0.1:0", engine).unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let (stop, handle) = server.serve_background();
+
+    let mut client = Client::connect(&addr).unwrap();
+    // ping
+    let pong = client.call(&Json::parse(r#"{"cmd":"ping"}"#).unwrap()).unwrap();
+    assert_eq!(pong.get("pong").unwrap().as_bool(), Some(true));
+    // tokens
+    let resp = client.encode_tokens(&[4, 5, 6]).unwrap();
+    assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true));
+    assert_eq!(resp.get("top").unwrap().as_arr().unwrap().len(), 5);
+    // text (story tokenizer)
+    let resp = client.encode_text("tom found a red ball").unwrap();
+    assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true));
+    // metrics
+    let m = client.metrics().unwrap();
+    let served = m
+        .get("metrics")
+        .unwrap()
+        .get("responses")
+        .unwrap()
+        .as_f64()
+        .unwrap();
+    assert!(served >= 2.0);
+    // malformed input
+    let err = client.call(&Json::parse(r#"{"nope":1}"#).unwrap()).unwrap();
+    assert_eq!(err.get("ok").unwrap().as_bool(), Some(false));
+
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    let _ = handle.join();
+}
+
+#[test]
+fn empty_and_garbage_wire_input() {
+    let engine = Engine::start(rt(), &cfg(), None).unwrap();
+    let server = Server::bind("127.0.0.1:0", engine).unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let (stop, handle) = server.serve_background();
+
+    use std::io::{BufRead, BufReader, Write};
+    let stream = std::net::TcpStream::connect(&addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = stream;
+    writer.write_all(b"this is not json\n").unwrap();
+    writer.flush().unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let resp = Json::parse(line.trim()).unwrap();
+    assert_eq!(resp.get("ok").unwrap().as_bool(), Some(false));
+
+    // Empty token list is rejected, connection stays alive.
+    writer.write_all(b"{\"tokens\":[]}\n").unwrap();
+    writer.flush().unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    assert_eq!(
+        Json::parse(line.trim()).unwrap().get("ok").unwrap().as_bool(),
+        Some(false)
+    );
+
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    let _ = handle.join();
+}
+
+#[test]
+fn trained_params_can_be_served() {
+    // Wire a trained parameter vector into the engine (the deploy path).
+    use sqa::config::TrainConfig;
+    use sqa::train::Trainer;
+    let tcfg = TrainConfig {
+        family: "tiny".into(),
+        variant: "sqa".into(),
+        steps: 5,
+        eval_every: 0,
+        log_every: 0,
+        ..TrainConfig::default()
+    };
+    let mut trainer = Trainer::new(rt(), tcfg).unwrap();
+    for _ in 0..5 {
+        trainer.step_once().unwrap();
+    }
+    let params = trainer.params_to_host().unwrap();
+    let engine = Engine::start(rt(), &cfg(), Some(params)).unwrap();
+    let resp = engine.encode(vec![4, 5, 6, 7]).unwrap();
+    assert_eq!(resp.top.len(), 5);
+    engine.shutdown();
+}
