@@ -2,7 +2,7 @@
 //! multi-threaded client load generator, and report latency/throughput.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example encode_serve -- \
+//! cargo run --release --example encode_serve -- \
 //!     [--requests 200] [--clients 4] [--variant sqa]
 //! ```
 //!
@@ -13,6 +13,7 @@
 use anyhow::Result;
 use sqa::config::ServeConfig;
 use sqa::coordinator::Engine;
+use sqa::runtime::Backend;
 use sqa::server::{Client, Server};
 use sqa::util::cli::Args;
 use sqa::util::rng::Pcg64;
@@ -28,7 +29,7 @@ fn main() -> Result<()> {
     let variant = args.str("variant", "sqa");
     args.finish()?;
 
-    let rt = sqa::runtime::Runtime::new("artifacts")?;
+    let backend = sqa::runtime::open_backend("artifacts")?;
     let cfg = ServeConfig {
         family: "tiny".into(),
         variant,
@@ -38,7 +39,7 @@ fn main() -> Result<()> {
         workers: 2,
         queue_capacity: 128,
     };
-    let engine = Engine::start(&rt, &cfg, None)?;
+    let engine = Engine::start(&backend, &cfg, None)?;
     println!(
         "engine up: buckets {:?}, batch dim {}, {} workers",
         engine.buckets(),
@@ -50,7 +51,7 @@ fn main() -> Result<()> {
     let (stop, server_thread) = server.serve_background();
 
     // ---- load generation ---------------------------------------------------
-    let vocab = rt.manifest().family("tiny")?.dims.vocab as u64;
+    let vocab = backend.family("tiny")?.dims.vocab as u64;
     let done = Arc::new(AtomicU64::new(0));
     let shed = Arc::new(AtomicU64::new(0));
     let t0 = std::time::Instant::now();

@@ -1,15 +1,16 @@
 //! Long-context forward sweep — a compact, runnable slice of Table 3.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example long_context_sweep -- \
-//!     [--variants xsqa,sqa,mha] [--max-seq 4096]
+//! cargo run --release --example long_context_sweep -- \
+//!     [--variants xsqa,sqa,mha] [--max-seq 1024]
 //! ```
 //!
-//! Measures fwd time/step for the chosen variants across the compiled
+//! Measures fwd time/step for the chosen variants across the backend's
 //! sequence buckets, prints the paper-style table plus the measured-vs-
 //! predicted speed-up at the longest sequence. The headline check: SQA
 //! variants beat MHA by ≈ H/Hq while MQA/GQA sit at ≈1x (they do not
-//! reduce attention FLOPs — the paper's central observation).
+//! reduce attention FLOPs — the paper's central observation). The default
+//! cap suits the native CPU backend; raise --max-seq on faster backends.
 
 use anyhow::Result;
 use sqa::bench_harness;
@@ -19,12 +20,12 @@ fn main() -> Result<()> {
     sqa::util::logging::init();
     let mut args = Args::from_env()?;
     let variants = args.list("variants", &["xsqa", "sqa", "ssqa", "mqa", "gqa", "mha"]);
-    let max_seq = args.usize("max-seq", 4096)?;
+    let max_seq = args.usize("max-seq", 1024)?;
     args.finish()?;
 
-    let rt = sqa::runtime::Runtime::new("artifacts")?;
+    let backend = sqa::runtime::open_backend("artifacts")?;
     let refs: Vec<&str> = variants.iter().map(|s| s.as_str()).collect();
-    let (table, cells) = bench_harness::table3(&rt, &refs, max_seq, true)?;
+    let (table, cells) = bench_harness::table3(&backend, &refs, max_seq, true)?;
     println!("\n{table}");
 
     // Measured vs predicted at the longest common sequence.

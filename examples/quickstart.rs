@@ -1,51 +1,51 @@
-//! Quickstart: load an AOT artifact, run a forward pass, inspect the model.
+//! Quickstart: open the backend, run a forward pass, inspect the model.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example quickstart
+//! cargo run --release --example quickstart
 //! ```
 //!
-//! Demonstrates the minimal public-API path: manifest → runtime → params →
-//! forward execution → logits, plus the analytic FLOPs model for the same
-//! configuration.
+//! Runs on the native backend out of the box — no Python, no XLA, no
+//! artifacts. Demonstrates the minimal public-API path: catalog → backend →
+//! params → forward execution → logits, plus the analytic FLOPs model for
+//! the same configuration.
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 use sqa::flops;
-use sqa::runtime::{Kind, ModelState, Runtime};
+use sqa::runtime::{open_backend, Backend};
 
 fn main() -> Result<()> {
     sqa::util::logging::init();
-    let rt = Runtime::new("artifacts")?;
+    let backend = open_backend("artifacts")?;
 
     let (family, variant) = ("tiny", "sqa");
-    let fam = rt.manifest().family(family)?.clone();
-    let var = rt.manifest().variant(family, variant)?.clone();
+    let fam = backend.family(family)?.clone();
+    let var = backend.variant(family, variant)?.clone();
     println!(
-        "model {family}/{variant}: d_model={} layers={} Hq={} Hkv={} ({} params)",
-        fam.dims.d_model, fam.dims.n_layers, var.cfg.hq, var.cfg.hkv, var.n_params
+        "model {family}/{variant} on the {} backend: d_model={} layers={} Hq={} Hkv={} ({} params)",
+        backend.name(),
+        fam.dims.d_model,
+        fam.dims.n_layers,
+        var.cfg.hq,
+        var.cfg.hkv,
+        var.n_params
     );
 
-    // 1. Initialize parameters on device from a seed (the init artifact).
-    let state = ModelState::init(&rt, family, variant, 42)?;
+    // 1. Initialize parameters deterministically from a seed.
+    let params = backend.init_params(family, variant, 42)?;
 
-    // 2. Pick a fwd artifact (batch 8, seq 128) and run a batch of tokens.
-    let artifact = rt
-        .manifest()
-        .find(family, variant, Kind::Fwd, Some(128), None)?;
-    let exe = rt.compile_artifact(artifact)?;
-    let (batch, seq) = (
-        artifact.batch.context("batch")?,
-        artifact.seq.context("seq")?,
-    );
+    // 2. Pick a fwd bucket (seq 128) and run a batch of tokens.
+    let seq = 128usize;
+    let batch = backend.fwd_batch(family, variant, seq)?;
     let tokens: Vec<i32> = (0..batch * seq).map(|i| (i % fam.dims.vocab) as i32).collect();
-    let token_buf = rt.buf_i32(&tokens, &[batch, seq])?;
-    let logits = rt.execute1(&exe, &[&state.params, &token_buf])?;
-    let host = rt.to_vec_f32(&logits)?;
+    let logits = backend.forward(family, variant, &params, &tokens, batch, seq)?;
     println!(
         "forward OK: logits [{batch}, {seq}, {}] -> {} floats, first row max {:.3}",
         fam.dims.vocab,
-        host.len(),
-        host[..fam.dims.vocab].iter().cloned().fold(f32::MIN, f32::max)
+        logits.len(),
+        logits[..fam.dims.vocab].iter().cloned().fold(f32::MIN, f32::max)
     );
+    anyhow::ensure!(logits.len() == batch * seq * fam.dims.vocab);
+    anyhow::ensure!(logits.iter().all(|x| x.is_finite()));
 
     // 3. The paper's complexity model for this variant (§3.2.1).
     let b = flops::forward_flops(&fam.dims, &var.cfg, batch as u64, seq as u64);

@@ -2,23 +2,23 @@
 //! steps on the synthetic corpus and log the loss curve.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example train_lm -- [--family tiny]
+//! cargo run --release --example train_lm -- [--family tiny]
 //!     [--variant sqa] [--steps 300] [--compare]
 //! ```
 //!
-//! With `--compare`, trains SQA *and* the MHA baseline on the identical
-//! token stream and prints the quality/wall-clock comparison — the
-//! miniature version of the paper's Table 1 experiment. Proves all three
-//! layers compose: Pallas/JAX-authored compute, AOT HLO artifacts, and the
-//! Rust training coordinator with device-resident state.
+//! Runs on the native backend by default (no artifacts needed). With
+//! `--compare`, trains SQA *and* the MHA baseline on the identical token
+//! stream and prints the quality/wall-clock comparison — the miniature
+//! version of the paper's Table 1 experiment.
 
 use anyhow::Result;
 use sqa::config::TrainConfig;
-use sqa::runtime::Runtime;
+use sqa::runtime::Backend;
 use sqa::train::Trainer;
 use sqa::util::cli::Args;
+use std::sync::Arc;
 
-fn train_one(rt: &Runtime, family: &str, variant: &str, steps: usize) -> Result<()> {
+fn train_one(backend: &Arc<dyn Backend>, family: &str, variant: &str, steps: usize) -> Result<()> {
     let mut cfg = TrainConfig {
         family: family.into(),
         variant: variant.into(),
@@ -29,10 +29,11 @@ fn train_one(rt: &Runtime, family: &str, variant: &str, steps: usize) -> Result<
         seed: 42,
         ..TrainConfig::default()
     };
+    cfg.schedule.base_lr = 1e-2; // tuned for the catalog's reference models
     cfg.schedule.total_steps = steps;
     cfg.schedule.warmup_steps = steps / 10;
 
-    let mut trainer = Trainer::new(rt, cfg)?;
+    let mut trainer = Trainer::new(backend, cfg)?;
     let report = trainer.run()?;
 
     // Loss curve (ASCII sparkline over the history).
@@ -81,10 +82,10 @@ fn main() -> Result<()> {
     let compare = args.bool("compare");
     args.finish()?;
 
-    let rt = Runtime::new("artifacts")?;
-    train_one(&rt, &family, &variant, steps)?;
+    let backend = sqa::runtime::open_backend("artifacts")?;
+    train_one(&backend, &family, &variant, steps)?;
     if compare {
-        train_one(&rt, &family, "mha", steps)?;
+        train_one(&backend, &family, "mha", steps)?;
     }
     Ok(())
 }

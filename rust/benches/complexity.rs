@@ -2,18 +2,18 @@
 //! ablation (Pallas tiled kernel vs XLA-fused attention).
 
 use sqa::bench_harness;
-use sqa::runtime::Runtime;
+use sqa::runtime::open_backend;
 
 fn main() {
     sqa::util::logging::init();
-    let rt = Runtime::new("artifacts").expect("run `make artifacts` first");
-    let md = bench_harness::complexity(&rt, "dense_sm", 32768).expect("complexity");
+    let backend = open_backend("artifacts").expect("backend");
+    let md = bench_harness::complexity(&backend, "dense_sm", 32768).expect("complexity");
     println!("\n## Complexity model (dense_sm, N = 32768)\n");
     println!("{md}");
     for (hq, hkv, name) in [(16, 16, "MHA"), (8, 8, "sSQA"), (4, 4, "xSQA")] {
         println!("### {name}\n{}", bench_harness::diagram(16, hq, hkv));
     }
-    let ab = bench_harness::ablation_impl(&rt, 1024).expect("ablation");
+    let ab = bench_harness::ablation_impl(&backend, 1024).expect("ablation");
     println!("\n## Ablation — attention lowering (bench family, seq 1024)\n");
     println!("{ab}");
 }

@@ -6,12 +6,12 @@
 
 use sqa::config::ServeConfig;
 use sqa::coordinator::Engine;
-use sqa::runtime::Runtime;
+use sqa::runtime::{open_backend, Backend};
 use sqa::util::rng::Pcg64;
 use sqa::util::stats::Summary;
 use std::sync::Arc;
 
-fn bench_variant(rt: &Runtime, variant: &str, n_requests: usize) {
+fn bench_variant(rt: &Arc<dyn Backend>, variant: &str, n_requests: usize) {
     let cfg = ServeConfig {
         family: "tiny".into(),
         variant: variant.into(),
@@ -64,7 +64,7 @@ fn main() {
         .ok()
         .and_then(|s| s.parse().ok())
         .unwrap_or(160);
-    let rt = Runtime::new("artifacts").expect("run `make artifacts` first");
+    let rt = open_backend("artifacts").expect("backend");
     println!("\n## Serving throughput ({n} requests, 4 clients, tiny family)\n");
     for variant in ["sqa", "xsqa", "ssqa", "mha"] {
         bench_variant(&rt, variant, n);

@@ -10,7 +10,7 @@
 //! ranking; use 300+ for a cleaner separation).
 
 use sqa::bench_harness;
-use sqa::runtime::Runtime;
+use sqa::runtime::open_backend;
 
 fn main() {
     sqa::util::logging::init();
@@ -18,8 +18,8 @@ fn main() {
         .ok()
         .and_then(|s| s.parse().ok())
         .unwrap_or(30);
-    let rt = Runtime::new("artifacts").expect("run `make artifacts` first");
-    let (table, reports) = bench_harness::table1(&rt, steps, 42).expect("table1");
+    let backend = open_backend("artifacts").expect("backend");
+    let (table, reports) = bench_harness::table1(&backend, steps, 42).expect("table1");
     println!("\n## Table 1 — dense model quality ({steps} steps, CPU-scaled)\n");
     println!("{table}");
     std::fs::create_dir_all("bench_out").ok();

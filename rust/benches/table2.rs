@@ -8,7 +8,7 @@
 //! Env: SQA_BENCH_STEPS training steps per variant (default 30).
 
 use sqa::bench_harness;
-use sqa::runtime::Runtime;
+use sqa::runtime::open_backend;
 
 fn main() {
     sqa::util::logging::init();
@@ -16,8 +16,8 @@ fn main() {
         .ok()
         .and_then(|s| s.parse().ok())
         .unwrap_or(30);
-    let rt = Runtime::new("artifacts").expect("run `make artifacts` first");
-    let (table, reports) = bench_harness::table2(&rt, steps, 42).expect("table2");
+    let backend = open_backend("artifacts").expect("backend");
+    let (table, reports) = bench_harness::table2(&backend, steps, 42).expect("table2");
     println!("\n## Table 2 — MoE model quality ({steps} steps, CPU-scaled)\n");
     println!("{table}");
     std::fs::create_dir_all("bench_out").ok();

@@ -5,20 +5,21 @@
 //! MQA/GQA ~= MHA. This CPU-scaled sweep (512-8k ctx) must reproduce the
 //! *shape*: speed-up ordering and approximate factors at the longest bucket.
 //!
-//! Env: SQA_BENCH_MAX_SEQ caps the sweep (default 4096; set 8192 for full).
+//! Env: SQA_BENCH_MAX_SEQ caps the sweep (default 1024 on the native CPU
+//! backend; raise it — e.g. 4096 — for the full sweep).
 
 use sqa::bench_harness::{self, TABLE3_VARIANTS};
-use sqa::runtime::Runtime;
+use sqa::runtime::open_backend;
 
 fn main() {
     sqa::util::logging::init();
     let max_seq: usize = std::env::var("SQA_BENCH_MAX_SEQ")
         .ok()
         .and_then(|s| s.parse().ok())
-        .unwrap_or(4096);
-    let rt = Runtime::new("artifacts").expect("run `make artifacts` first");
+        .unwrap_or(1024);
+    let backend = open_backend("artifacts").expect("backend");
     let (table, cells) =
-        bench_harness::table3(&rt, TABLE3_VARIANTS, max_seq, true).expect("table3");
+        bench_harness::table3(&backend, TABLE3_VARIANTS, max_seq, true).expect("table3");
     println!("\n## Table 3 — forward time per step (s), CPU-scaled\n");
     println!("{table}");
     std::fs::create_dir_all("bench_out").ok();

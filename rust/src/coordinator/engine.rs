@@ -1,24 +1,26 @@
-//! The serving engine: dispatcher + worker pool over compiled fwd artifacts.
+//! The serving engine: dispatcher + worker pool over a [`Backend`].
 //!
-//! Topology (all std threads; Python is long gone by now):
+//! Topology (all std threads):
 //!
 //! ```text
 //!   clients ──encode()──► bounded channel ──► dispatcher thread
 //!                                               │  DynamicBatcher
 //!                                               ▼  (bucket, ≤max_batch)
 //!                                          job queue ──► N workers
-//!                                                        (own params buf +
-//!                                                         compiled exes)
+//!                                                        (shared params +
+//!                                                         backend handle)
 //! ```
 //!
 //! * Backpressure: the ingress channel is bounded; when full, `encode`
 //!   returns [`Reject::Overloaded`] instead of queueing unboundedly.
-//! * Each worker holds its **own** device copy of the parameters (PJRT
-//!   buffers are single-threaded objects); executables come from the shared
-//!   compile cache.
-//! * Fixed-shape artifacts: requests are padded to the bucket length and
-//!   the batch is padded to the artifact batch dim; the padding waste is
-//!   tracked in [`Metrics`] (see `router.rs` for why SQA cares less).
+//! * Workers share one immutable host parameter vector (`Arc<Vec<f32>>`)
+//!   and the backend handle; the native backend additionally fans each
+//!   batch out across its own thread pool, one row per job.
+//! * Requests are padded to the bucket length. Backends with fixed-shape
+//!   entry points ([`Backend::fixed_fwd_batch`], i.e. compiled artifacts)
+//!   also get the batch padded to the artifact batch dim; the native
+//!   backend runs ragged batches and skips the wasted rows. Padding waste
+//!   is tracked in [`Metrics`] (see `router.rs` for why SQA cares less).
 
 use crate::config::ServeConfig;
 use crate::coordinator::batcher::{DynamicBatcher, PendingBatch};
@@ -26,7 +28,7 @@ use crate::coordinator::metrics::Metrics;
 use crate::coordinator::request::{EncodeRequest, EncodeResponse, Reject, TOP_K};
 use crate::coordinator::router::Router;
 use crate::data::pad_to;
-use crate::runtime::{Kind, ModelState, Runtime};
+use crate::runtime::Backend;
 use anyhow::{Context, Result};
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -63,6 +65,19 @@ impl JobQueue {
     }
 }
 
+/// Per-worker immutable context.
+struct WorkerCtx {
+    backend: Arc<dyn Backend>,
+    family: String,
+    variant: String,
+    params: Arc<Vec<f32>>,
+    /// Fixed fwd batch dim per bucket (the merge cap; also the padded row
+    /// count when the backend is fixed-shape).
+    batch_dims: std::collections::BTreeMap<usize, usize>,
+    fixed_batch: bool,
+    vocab: usize,
+}
+
 /// Public handle; cheap to clone, shuts the engine down when the last
 /// handle drops.
 pub struct Engine {
@@ -77,42 +92,47 @@ pub struct Engine {
 }
 
 impl Engine {
-    /// Build the engine: compile fwd artifacts for every bucket, spawn
-    /// dispatcher + workers, initialize per-worker parameter buffers from
-    /// `seed` (or a caller-trained parameter vector).
-    pub fn start(rt: &Runtime, cfg: &ServeConfig, params_host: Option<Vec<f32>>) -> Result<Self> {
-        let manifest = rt.manifest();
-        let buckets = manifest.fwd_seqs(&cfg.family, &cfg.variant, "xla");
+    /// Build the engine: resolve buckets and parameters for the configured
+    /// (family, variant), spawn dispatcher + workers.
+    pub fn start(
+        backend: &Arc<dyn Backend>,
+        cfg: &ServeConfig,
+        params_host: Option<Vec<f32>>,
+    ) -> Result<Self> {
+        let buckets = backend.fwd_buckets(&cfg.family, &cfg.variant);
         anyhow::ensure!(
             !buckets.is_empty(),
-            "no fwd artifacts for {}/{} — run `make artifacts`",
+            "no fwd entry points for {}/{} on the {} backend",
             cfg.family,
-            cfg.variant
+            cfg.variant,
+            backend.name()
         );
         let router = Router::new(buckets.clone());
-        let entry = manifest.variant(&cfg.family, &cfg.variant)?;
-        let dims = manifest.family(&cfg.family)?.dims.clone();
+        let entry = backend.variant(&cfg.family, &cfg.variant)?;
+        let n_params = entry.n_params;
+        let vocab = backend.family(&cfg.family)?.dims.vocab;
 
-        // Resolve parameters on host once; each worker uploads its own copy.
+        // Resolve parameters on host once; workers share the vector.
         let params_host = match params_host {
             Some(p) => {
-                anyhow::ensure!(p.len() == entry.n_params, "param size mismatch");
+                anyhow::ensure!(p.len() == n_params, "param size mismatch");
                 p
             }
-            None => {
-                let state = ModelState::init(rt, &cfg.family, &cfg.variant, 7)?;
-                state.to_host(rt)?
-            }
+            None => backend.init_params(&cfg.family, &cfg.variant, 7)?,
         };
+        let params = Arc::new(params_host);
 
-        // Compile per-bucket artifacts up front (cache is shared).
-        let mut artifacts = Vec::new();
+        // Per-bucket batch dims. The merge cap must fit the *smallest*
+        // bucket's batch dim — backends may compile different batch sizes
+        // per bucket, and a batch merged beyond a bucket's dim would
+        // overflow that bucket's token matrix in the worker.
+        let mut batch_dims = std::collections::BTreeMap::new();
         let mut batch_dim = 0;
+        let mut min_batch_dim = usize::MAX;
         for &b in &buckets {
-            let a = manifest.find(&cfg.family, &cfg.variant, Kind::Fwd, Some(b), None)?;
-            batch_dim = a.batch.context("fwd artifact missing batch")?;
-            rt.compile_artifact(a)?;
-            artifacts.push((b, a.clone()));
+            batch_dim = backend.fwd_batch(&cfg.family, &cfg.variant, b)?;
+            batch_dims.insert(b, batch_dim);
+            min_batch_dim = min_batch_dim.min(batch_dim);
         }
 
         let metrics = Arc::new(Metrics::new());
@@ -130,7 +150,7 @@ impl Engine {
             let jobq = Arc::clone(&jobq);
             let shutdown = Arc::clone(&shutdown);
             let max_wait = Duration::from_millis(cfg.max_wait_ms);
-            let max_batch = cfg.max_batch.min(batch_dim);
+            let max_batch = cfg.max_batch.min(min_batch_dim).max(1);
             let bucket_list = buckets.clone();
             threads.push(
                 std::thread::Builder::new()
@@ -150,20 +170,22 @@ impl Engine {
 
         // Workers.
         for w in 0..cfg.workers.max(1) {
-            let rt = rt.clone();
+            let ctx = WorkerCtx {
+                backend: Arc::clone(backend),
+                family: cfg.family.clone(),
+                variant: cfg.variant.clone(),
+                params: Arc::clone(&params),
+                batch_dims: batch_dims.clone(),
+                fixed_batch: backend.fixed_fwd_batch(),
+                vocab,
+            };
             let jobq = Arc::clone(&jobq);
             let metrics = Arc::clone(&metrics);
-            let params_host = params_host.clone();
-            let artifacts = artifacts.clone();
-            let n_params = entry.n_params;
-            let vocab = dims.vocab;
             threads.push(
                 std::thread::Builder::new()
                     .name(format!("worker-{w}"))
                     .spawn(move || {
-                        if let Err(e) =
-                            worker_loop(rt, jobq, metrics, params_host, n_params, vocab, artifacts)
-                        {
+                        if let Err(e) = worker_loop(ctx, jobq, metrics) {
                             log::error!("worker-{w} died: {e:#}");
                         }
                     })?,
@@ -212,8 +234,7 @@ impl Engine {
         }
         let resp = rx.recv().map_err(|_| Reject::Shutdown)??;
         self.metrics.responses.fetch_add(1, Ordering::Relaxed);
-        self.metrics
-            .record_latency(resp.total_ms, resp.queue_ms);
+        self.metrics.record_latency(resp.total_ms, resp.queue_ms);
         Ok(resp)
     }
 
@@ -298,58 +319,49 @@ fn dispatcher_loop(
     }
 }
 
-fn worker_loop(
-    rt: Runtime,
-    jobq: Arc<JobQueue>,
-    metrics: Arc<Metrics>,
-    params_host: Vec<f32>,
-    n_params: usize,
-    vocab: usize,
-    artifacts: Vec<(usize, crate::runtime::Artifact)>,
-) -> Result<()> {
-    // Per-worker device parameters + executables.
-    let params = rt.buf_f32(&params_host, &[n_params])?;
-    drop(params_host);
-    let mut exes = std::collections::HashMap::new();
-    let mut batch_dims = std::collections::HashMap::new();
-    for (bucket, a) in &artifacts {
-        exes.insert(*bucket, rt.compile_artifact(a)?);
-        batch_dims.insert(*bucket, a.batch.context("batch")?);
-    }
-
+fn worker_loop(ctx: WorkerCtx, jobq: Arc<JobQueue>, metrics: Arc<Metrics>) -> Result<()> {
     while let Some(job) = jobq.pop() {
         let bucket = job.batch.bucket;
-        let bdim = batch_dims[&bucket];
-        let exe = &exes[&bucket];
+        let bdim = *ctx.batch_dims.get(&bucket).context("unknown bucket")?;
+        let n_reqs = job.batch.requests.len();
+        debug_assert!(n_reqs <= bdim, "dispatcher merged past the bucket batch dim");
+        // Fixed-shape backends need the full artifact batch; ragged ones
+        // only pay for the rows actually occupied.
+        let rows = if ctx.fixed_batch { bdim } else { n_reqs.min(bdim) };
         let t_exec = Instant::now();
 
-        // Assemble the padded [bdim, bucket] token matrix.
-        let mut tokens = vec![0i32; bdim * bucket];
-        let mut lens = Vec::with_capacity(job.batch.requests.len());
+        // Assemble the padded [rows, bucket] token matrix.
+        let mut tokens = vec![0i32; rows * bucket];
+        let mut lens = Vec::with_capacity(n_reqs);
         for (row, req) in job.batch.requests.iter().enumerate() {
             let (padded, n) = pad_to(&req.tokens, bucket, 0);
             tokens[row * bucket..(row + 1) * bucket].copy_from_slice(&padded);
             lens.push(n);
         }
-        let token_buf = rt.buf_i32(&tokens, &[bdim, bucket])?;
-        let out = rt
-            .execute1(exe, &[&params, &token_buf])
-            .context("fwd execution")?;
-        let logits = rt.to_vec_f32(&out)?; // [bdim, bucket, vocab]
+        let logits = ctx
+            .backend
+            .forward(
+                &ctx.family,
+                &ctx.variant,
+                &ctx.params,
+                &tokens,
+                rows,
+                bucket,
+            )
+            .context("fwd execution")?; // [rows, bucket, vocab]
 
         let exec_ms = t_exec.elapsed().as_secs_f64() * 1e3;
-        let n_reqs = job.batch.requests.len();
         metrics.batches.fetch_add(1, Ordering::Relaxed);
         metrics
             .batched_requests
             .fetch_add(n_reqs as u64, Ordering::Relaxed);
         metrics
             .tokens_processed
-            .fetch_add((bdim * bucket) as u64, Ordering::Relaxed);
+            .fetch_add((rows * bucket) as u64, Ordering::Relaxed);
         let real: usize = lens.iter().sum();
         metrics
             .padded_tokens
-            .fetch_add((bdim * bucket - real) as u64, Ordering::Relaxed);
+            .fetch_add((rows * bucket - real) as u64, Ordering::Relaxed);
 
         for (row, (req, reply)) in job
             .batch
@@ -359,11 +371,10 @@ fn worker_loop(
             .enumerate()
         {
             let last = lens[row].saturating_sub(1);
-            let base = (row * bucket + last) * vocab;
-            let row_logits = &logits[base..base + vocab];
+            let base = (row * bucket + last) * ctx.vocab;
+            let row_logits = &logits[base..base + ctx.vocab];
             let top = top_k(row_logits, TOP_K);
-            let queue_ms =
-                (t_exec.duration_since(req.submitted)).as_secs_f64() * 1e3;
+            let queue_ms = (t_exec.duration_since(req.submitted)).as_secs_f64() * 1e3;
             let _ = reply.send(Ok(EncodeResponse {
                 id: req.id,
                 bucket,

@@ -1,26 +1,29 @@
 //! `sqa` — CLI launcher for the SQA reproduction.
 //!
 //! Subcommands:
-//!   train       train a (family, variant) from Rust, device-resident state
+//!   train       train a (family, variant) through the active backend
 //!   serve       start the encoder-serving engine (TCP, JSON lines)
 //!   encode      one-shot client call against a running server
 //!   bench       regenerate paper tables: table1 | table2 | table3 |
 //!               complexity | ablation | all
 //!   flops       analytic FLOPs/KV-cache model for a (family, variant, seq)
 //!   diagram     ASCII head-wiring diagram (paper figures 2-6)
-//!   inspect     list manifest artifacts and parameter layouts
+//!   inspect     list the backend's model catalog and parameter layouts
 //!
-//! Run `sqa <cmd> --help-flags` for the flags each command reads.
+//! The backend is native (pure Rust) by default; builds with
+//! `--features pjrt` pick up `artifacts/manifest.json` automatically.
+//! `SQA_BACKEND=native|pjrt` forces a choice.
 
 use anyhow::{bail, Context, Result};
 use sqa::bench_harness;
 use sqa::config::{ServeConfig, TrainConfig};
 use sqa::coordinator::Engine;
 use sqa::flops;
-use sqa::runtime::Runtime;
+use sqa::runtime::{open_backend, Backend};
 use sqa::server::{Client, Server};
 use sqa::train::Trainer;
 use sqa::util::cli::Args;
+use std::sync::Arc;
 
 fn main() {
     sqa::util::logging::init();
@@ -54,12 +57,12 @@ fn run() -> Result<()> {
 }
 
 const HELP: &str = "\
-sqa — Sparse Query Attention reproduction (rust + JAX + Pallas, AOT/PJRT)
+sqa — Sparse Query Attention reproduction (native Rust backend; optional PJRT)
 
 USAGE: sqa <command> [--flags]
 
 COMMANDS
-  train     --family tiny --variant sqa --steps 200 --lr 3e-4 --seed 42
+  train     --family tiny --variant sqa --steps 200 --lr 1e-2 --seed 42
             [--checkpoint-dir DIR --checkpoint-every N --report OUT.json]
   serve     --family tiny --variant sqa --addr 127.0.0.1:7433
             [--max-batch 8 --max-wait-ms 5 --workers 2]
@@ -69,6 +72,9 @@ COMMANDS
   flops     --family bench --variant sqa --seq 8192 [--batch 1]
   diagram   --variant sqa --h-total 16   (or --hq 8 --hkv 4)
   inspect   [--family F]
+
+Backend: native by default; SQA_BACKEND=pjrt (with --features pjrt builds
+and an artifacts/ dir from `make artifacts`) selects the XLA path.
 ";
 
 fn cmd_train(mut args: Args) -> Result<()> {
@@ -84,7 +90,7 @@ fn cmd_train(mut args: Args) -> Result<()> {
         log_every: args.usize("log-every", 10)?,
         ..TrainConfig::default()
     };
-    cfg.schedule.base_lr = args.f64("lr", 3e-4)?;
+    cfg.schedule.base_lr = args.f64("lr", 1e-2)?;
     cfg.schedule.total_steps = cfg.steps;
     cfg.schedule.warmup_steps = args.usize("warmup", cfg.steps / 10)?;
     if let Some(d) = args.str_opt("checkpoint-dir") {
@@ -96,8 +102,8 @@ fn cmd_train(mut args: Args) -> Result<()> {
     }
     args.finish()?;
 
-    let rt = Runtime::new(&dir)?;
-    let mut trainer = Trainer::new(&rt, cfg)?;
+    let backend = open_backend(&dir)?;
+    let mut trainer = Trainer::new(&backend, cfg)?;
     let report = trainer.run()?;
     println!(
         "{}/{}: {} steps in {:.1}s | val_loss {:.4} ppl {:.3} acc {:.2}%",
@@ -130,25 +136,26 @@ fn cmd_serve(mut args: Args) -> Result<()> {
     let ckpt = args.str_opt("checkpoint");
     args.finish()?;
 
-    let rt = Runtime::new(&dir)?;
+    let backend = open_backend(&dir)?;
     let params = match ckpt {
         Some(p) => {
-            let (state, step) = sqa::runtime::ModelState::load(
-                &rt,
+            let (params, step) = sqa::runtime::checkpoint::load(
+                backend.as_ref(),
                 &cfg.family,
                 &cfg.variant,
                 std::path::Path::new(&p),
             )?;
             log::info!("loaded checkpoint {p} (step {step})");
-            Some(state.to_host(&rt)?)
+            Some(params)
         }
         None => None,
     };
-    let engine = Engine::start(&rt, &cfg, params)?;
+    let engine = Engine::start(&backend, &cfg, params)?;
     println!(
-        "serving {}/{} buckets={:?} on {}",
+        "serving {}/{} ({} backend) buckets={:?} on {}",
         cfg.family,
         cfg.variant,
+        backend.name(),
         engine.buckets(),
         cfg.addr
     );
@@ -188,22 +195,22 @@ fn cmd_bench(mut args: Args) -> Result<()> {
     let seed = args.usize("seed", 42)? as u64;
     let out = args.str_opt("out");
     args.finish()?;
-    let rt = Runtime::new(&dir)?;
+    let backend = open_backend(&dir)?;
     let mut output = String::new();
 
-    let run_one = |name: &str, rt: &Runtime, output: &mut String| -> Result<()> {
+    let run_one = |name: &str, backend: &Arc<dyn Backend>, output: &mut String| -> Result<()> {
         match name {
             "table1" => {
-                let (md, _) = bench_harness::table1(rt, steps, seed)?;
+                let (md, _) = bench_harness::table1(backend, steps, seed)?;
                 output.push_str(&format!("\n## Table 1 — dense quality ({steps} steps)\n\n{md}"));
             }
             "table2" => {
-                let (md, _) = bench_harness::table2(rt, steps, seed)?;
+                let (md, _) = bench_harness::table2(backend, steps, seed)?;
                 output.push_str(&format!("\n## Table 2 — MoE quality ({steps} steps)\n\n{md}"));
             }
             "table3" => {
                 let (md, cells) =
-                    bench_harness::table3(rt, bench_harness::TABLE3_VARIANTS, max_seq, quick)?;
+                    bench_harness::table3(backend, bench_harness::TABLE3_VARIANTS, max_seq, quick)?;
                 output.push_str(&format!("\n## Table 3 — fwd time per step (s)\n\n{md}"));
                 std::fs::write(
                     "bench_table3.json",
@@ -211,13 +218,13 @@ fn cmd_bench(mut args: Args) -> Result<()> {
                 )?;
             }
             "complexity" => {
-                let md = bench_harness::complexity(rt, "dense_sm", 32768)
-                    .or_else(|_| bench_harness::complexity(rt, "tiny", 32768))?;
+                let md = bench_harness::complexity(backend, "dense_sm", 32768)
+                    .or_else(|_| bench_harness::complexity(backend, "tiny", 32768))?;
                 output.push_str(&format!("\n## Complexity (§3.2.1, N=32768)\n\n{md}"));
             }
             "ablation" => {
-                let md = bench_harness::ablation_impl(rt, 1024)?;
-                output.push_str(&format!("\n## Ablation — Pallas kernel vs XLA attention\n\n{md}"));
+                let md = bench_harness::ablation_impl(backend, 1024)?;
+                output.push_str(&format!("\n## Ablation — attention lowerings\n\n{md}"));
             }
             other => bail!("unknown bench {other:?}"),
         }
@@ -226,10 +233,10 @@ fn cmd_bench(mut args: Args) -> Result<()> {
 
     if which == "all" {
         for name in ["complexity", "table3", "ablation", "table2", "table1"] {
-            run_one(name, &rt, &mut output)?;
+            run_one(name, &backend, &mut output)?;
         }
     } else {
-        run_one(&which, &rt, &mut output)?;
+        run_one(&which, &backend, &mut output)?;
     }
     println!("{output}");
     if let Some(p) = out {
@@ -247,19 +254,26 @@ fn cmd_flops(mut args: Args) -> Result<()> {
     let batch = args.usize("batch", 1)? as u64;
     let decode = args.bool("decode");
     args.finish()?;
-    let rt = Runtime::new(&dir)?;
+    let backend = open_backend(&dir)?;
     if decode {
         // §5 decode-phase roofline across the family's variant zoo.
-        let fam = rt.manifest().family(&family)?;
+        let fam = backend.family(&family)?;
         let variants: Vec<(String, sqa::config::VariantCfg)> = fam
             .variants
             .iter()
             .map(|(n, v)| (n.clone(), v.cfg))
             .collect();
-        let rows =
-            flops::decode::decode_table(&fam.dims, &variants, seq, flops::decode::Hardware::default());
+        let rows = flops::decode::decode_table(
+            &fam.dims,
+            &variants,
+            seq,
+            flops::decode::Hardware::default(),
+        );
         println!("decode roofline (A100-like envelope), {family} @ ctx {seq}:");
-        println!("{:8} {:>3} {:>4} {:>10} {:>12} {:>8}", "variant", "Hq", "Hkv", "KV MiB", "tok/s", "vs first");
+        println!(
+            "{:8} {:>3} {:>4} {:>10} {:>12} {:>8}",
+            "variant", "Hq", "Hkv", "KV MiB", "tok/s", "vs first"
+        );
         for r in rows {
             println!(
                 "{:8} {:>3} {:>4} {:>10.1} {:>12.1} {:>7.2}x",
@@ -268,11 +282,15 @@ fn cmd_flops(mut args: Args) -> Result<()> {
         }
         return Ok(());
     }
-    let fam = rt.manifest().family(&family)?;
-    let var = rt.manifest().variant(&family, &variant)?;
+    let fam = backend.family(&family)?;
+    let var = backend.variant(&family, &variant)?;
     let b = flops::forward_flops(&fam.dims, &var.cfg, batch, seq);
     println!("forward FLOPs for {family}/{variant} @ batch={batch} seq={seq}:");
-    println!("  attention core : {:>16}  ({:.1}% of total)", b.attn_core, 100.0 * b.attn_fraction());
+    println!(
+        "  attention core : {:>16}  ({:.1}% of total)",
+        b.attn_core,
+        100.0 * b.attn_fraction()
+    );
     println!("  attention proj : {:>16}", b.attn_proj);
     println!("  mlp/moe        : {:>16}", b.mlp);
     println!("  lm head        : {:>16}", b.lm_head);
@@ -319,9 +337,9 @@ fn cmd_inspect(mut args: Args) -> Result<()> {
     let dir = artifacts_dir(&mut args);
     let family = args.str_opt("family");
     args.finish()?;
-    let rt = Runtime::new(&dir)?;
-    let m = rt.manifest();
-    for (fname, fam) in &m.families {
+    let backend = open_backend(&dir)?;
+    println!("backend: {}", backend.name());
+    for (fname, fam) in backend.families() {
         if let Some(f) = &family {
             if f != fname {
                 continue;
@@ -341,8 +359,13 @@ fn cmd_inspect(mut args: Args) -> Result<()> {
             }
         );
         for (vname, v) in &fam.variants {
+            let buckets = backend.fwd_buckets(fname, vname);
+            let train = backend
+                .train_shape(fname, vname)
+                .map(|(b, s)| format!("{b}x{s}"))
+                .unwrap_or_else(|_| "-".into());
             println!(
-                "  {vname:6} Hq={:<2} Hkv={:<2} window={:<6} params={}",
+                "  {vname:6} Hq={:<2} Hkv={:<2} window={:<6} params={:<9} fwd={buckets:?} train={train}",
                 v.cfg.hq,
                 v.cfg.hkv,
                 v.cfg
@@ -352,21 +375,6 @@ fn cmd_inspect(mut args: Args) -> Result<()> {
                 v.n_params
             );
         }
-    }
-    println!("\nartifacts:");
-    for a in &m.artifacts {
-        let count = 1;
-        let _ = count;
-        println!(
-            "  {:10} {:7} {:6} {:4} batch={:?} seq={:?} {}",
-            a.family,
-            a.variant,
-            a.impl_,
-            a.kind.as_str(),
-            a.batch,
-            a.seq,
-            a.path.file_name().unwrap_or_default().to_string_lossy()
-        );
     }
     Ok(())
 }

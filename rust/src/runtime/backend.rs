@@ -1,0 +1,157 @@
+//! The execution-backend abstraction — the seam between the serving/training
+//! layers and whatever actually runs the math.
+//!
+//! Two implementations:
+//!   * [`crate::runtime::NativeBackend`] (default): pure Rust on top of the
+//!     `attention` oracle; runs everywhere, no Python/XLA/artifacts.
+//!   * `PjrtBackend` (`--features pjrt`): the AOT HLO artifact path through
+//!     the PJRT C API.
+//!
+//! The contract is host-centric: parameters and the fused train state
+//! (`[params | m | v | loss, acc]`) travel as flat `f32` slices, tokens as
+//! row-major `[batch, seq]` `i32`, logits as `[batch, seq, vocab]` `f32`.
+//! Backends are free to keep device-side caches internally.
+
+use crate::runtime::manifest::{FamilyEntry, VariantEntry};
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::Arc;
+
+/// An engine capable of running the SQA model zoo.
+pub trait Backend: Send + Sync {
+    /// Short backend id ("native", "pjrt") for logs and reports.
+    fn name(&self) -> &'static str;
+
+    /// Model catalog: family geometry + variant head configs + param layout.
+    fn families(&self) -> &BTreeMap<String, FamilyEntry>;
+
+    /// Sequence buckets with a forward entry point for (family, variant).
+    fn fwd_buckets(&self, family: &str, variant: &str) -> Vec<usize>;
+
+    /// Max batch rows of the fwd entry point for a sequence bucket.
+    fn fwd_batch(&self, family: &str, variant: &str, seq: usize) -> Result<usize>;
+
+    /// Whether fwd batches must be padded to exactly [`Backend::fwd_batch`]
+    /// rows (fixed-shape compiled artifacts) or may be ragged (native).
+    fn fixed_fwd_batch(&self) -> bool {
+        false
+    }
+
+    /// (batch, seq) of the training entry point.
+    fn train_shape(&self, family: &str, variant: &str) -> Result<(usize, usize)>;
+
+    /// Deterministically initialize the flat parameter vector from a seed.
+    fn init_params(&self, family: &str, variant: &str, seed: i32) -> Result<Vec<f32>>;
+
+    /// Forward pass: `tokens [batch, seq]` -> logits `[batch, seq, vocab]`.
+    fn forward(
+        &self,
+        family: &str,
+        variant: &str,
+        params: &[f32],
+        tokens: &[i32],
+        batch: usize,
+        seq: usize,
+    ) -> Result<Vec<f32>>;
+
+    /// One fused AdamW step over `state = [params | m | v | loss, acc]`
+    /// (updated in place); returns the step's (loss, accuracy), which are
+    /// also written into the 2-float metrics tail.
+    #[allow(clippy::too_many_arguments)]
+    fn train_step(
+        &self,
+        family: &str,
+        variant: &str,
+        state: &mut [f32],
+        step: i32,
+        lr: f32,
+        tokens: &[i32],
+        targets: &[i32],
+        batch: usize,
+        seq: usize,
+    ) -> Result<(f32, f32)>;
+
+    /// Mean (loss, accuracy) of `params` on one batch.
+    #[allow(clippy::too_many_arguments)]
+    fn eval(
+        &self,
+        family: &str,
+        variant: &str,
+        params: &[f32],
+        tokens: &[i32],
+        targets: &[i32],
+        batch: usize,
+        seq: usize,
+    ) -> Result<(f32, f32)>;
+
+    /// Attention lowerings this backend can ablate over (bench harness).
+    fn impls(&self) -> Vec<&'static str> {
+        Vec::new()
+    }
+
+    /// Forward pass through a specific attention lowering.
+    #[allow(clippy::too_many_arguments)]
+    fn forward_impl(
+        &self,
+        impl_: &str,
+        _family: &str,
+        _variant: &str,
+        _params: &[f32],
+        _tokens: &[i32],
+        _batch: usize,
+        _seq: usize,
+    ) -> Result<Vec<f32>> {
+        bail!("backend {:?} has no attention impl {impl_:?}", self.name())
+    }
+
+    // ---- provided lookups ----------------------------------------------
+
+    fn family(&self, name: &str) -> Result<&FamilyEntry> {
+        self.families().get(name).with_context(|| {
+            format!(
+                "family {name:?} unknown to the {} backend (have: {:?})",
+                self.name(),
+                self.families().keys().collect::<Vec<_>>()
+            )
+        })
+    }
+
+    fn variant(&self, family: &str, variant: &str) -> Result<&VariantEntry> {
+        self.family(family)?
+            .variants
+            .get(variant)
+            .with_context(|| format!("variant {variant:?} not in family {family:?}"))
+    }
+}
+
+/// Open the default backend for this build.
+///
+/// Native unless the `pjrt` feature is enabled *and* `<dir>/manifest.json`
+/// exists (i.e. `make artifacts` ran). `SQA_BACKEND=native|pjrt` overrides
+/// the choice explicitly.
+pub fn open_backend(artifact_dir: impl AsRef<Path>) -> Result<Arc<dyn Backend>> {
+    let dir = artifact_dir.as_ref();
+    let want = std::env::var("SQA_BACKEND").unwrap_or_default();
+
+    #[cfg(feature = "pjrt")]
+    {
+        let has_manifest = dir.join("manifest.json").exists();
+        if want == "pjrt" || (want.is_empty() && has_manifest) {
+            let backend = crate::runtime::pjrt::PjrtBackend::new(dir)?;
+            log::info!("backend: pjrt (artifacts in {})", dir.display());
+            return Ok(Arc::new(backend));
+        }
+    }
+    #[cfg(not(feature = "pjrt"))]
+    if want == "pjrt" {
+        bail!("SQA_BACKEND=pjrt but this binary was built without `--features pjrt`");
+    }
+
+    if !want.is_empty() && want != "native" {
+        bail!("unknown SQA_BACKEND {want:?} (native|pjrt)");
+    }
+    let _ = dir;
+    log::debug!("backend: native");
+    Ok(Arc::new(crate::runtime::native::NativeBackend::new()))
+}

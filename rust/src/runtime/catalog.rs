@@ -1,0 +1,346 @@
+//! Built-in model catalog for the native backend.
+//!
+//! The PJRT backend reads model geometry from `artifacts/manifest.json`;
+//! the native backend needs no artifacts, so the same four families
+//! (`tiny`, `dense_sm`, `moe_sm`, `bench`) and the paper's variant zoo are
+//! defined here directly, CPU-scaled like `python/compile/configs.py`:
+//!
+//! | family   | vocab | d_model | layers | H  | train (b, s) | fwd (b, seqs) |
+//! |----------|-------|---------|--------|----|--------------|---------------|
+//! | tiny     | 2048  | 128     | 2      | 8  | (4, 64)      | (8, 64..256)  |
+//! | dense_sm | 4096  | 256     | 8      | 16 | (2, 128)     | —             |
+//! | moe_sm   | 2048  | 128     | 6      | 8  | (4, 128)     | —             |
+//! | bench    | 1024  | 256     | 4      | 16 | —            | (1, 512..4k)  |
+//!
+//! [`Layout`] is the native parameter layout — the flat-f32-vector contract
+//! every backend shares (`[embed | per-layer wq wk wv wo | lm_head |
+//! lm_bias]`), mirrored into [`ParamSpec`] entries so checkpoints and
+//! per-tensor inspection work identically to the manifest path.
+
+use crate::config::{ModelDims, VariantCfg};
+use crate::runtime::manifest::{FamilyEntry, ParamSpec, VariantEntry};
+use std::collections::BTreeMap;
+
+/// Sliding-window width of the SWA variants (paper's CPU-scaled choice).
+pub const SWA_WINDOW: usize = 128;
+
+/// Fixed entry-point shapes of a native family.
+#[derive(Debug, Clone)]
+pub struct Geometry {
+    /// Max rows a fwd batch is merged to (serving); 0 = no fwd entry point.
+    pub fwd_batch: usize,
+    /// Sequence buckets compiled for serving/sweeps.
+    pub fwd_seqs: Vec<usize>,
+    /// Training (batch, seq); None = no train entry point.
+    pub train: Option<(usize, usize)>,
+}
+
+/// Offsets of every tensor inside the flat parameter vector.
+///
+/// The native reference model is deliberately small: token embedding, then
+/// `n_layers` residual SQA attention blocks (no MLP — attention is the
+/// subject under test), then an untied LM head with bias.
+#[derive(Debug, Clone, Copy)]
+pub struct Layout {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub hq: usize,
+    pub hkv: usize,
+    pub d_head: usize,
+}
+
+impl Layout {
+    pub fn new(dims: &ModelDims, cfg: &VariantCfg) -> Self {
+        Self {
+            vocab: dims.vocab,
+            d_model: dims.d_model,
+            n_layers: dims.n_layers,
+            hq: cfg.hq,
+            hkv: cfg.hkv,
+            d_head: dims.d_head,
+        }
+    }
+
+    fn wq_len(&self) -> usize {
+        self.d_model * self.hq * self.d_head
+    }
+
+    fn wkv_len(&self) -> usize {
+        self.d_model * self.hkv * self.d_head
+    }
+
+    fn wo_len(&self) -> usize {
+        self.hq * self.d_head * self.d_model
+    }
+
+    fn layer_len(&self) -> usize {
+        self.wq_len() + 2 * self.wkv_len() + self.wo_len()
+    }
+
+    fn layer_base(&self, l: usize) -> usize {
+        self.vocab * self.d_model + l * self.layer_len()
+    }
+
+    /// `embed [vocab, d_model]` — offset and length.
+    pub fn embed(&self) -> (usize, usize) {
+        (0, self.vocab * self.d_model)
+    }
+
+    /// `wq [d_model, hq*d_head]` of layer `l`.
+    pub fn wq(&self, l: usize) -> (usize, usize) {
+        (self.layer_base(l), self.wq_len())
+    }
+
+    /// `wk [d_model, hkv*d_head]` of layer `l`.
+    pub fn wk(&self, l: usize) -> (usize, usize) {
+        (self.layer_base(l) + self.wq_len(), self.wkv_len())
+    }
+
+    /// `wv [d_model, hkv*d_head]` of layer `l`.
+    pub fn wv(&self, l: usize) -> (usize, usize) {
+        (self.layer_base(l) + self.wq_len() + self.wkv_len(), self.wkv_len())
+    }
+
+    /// `wo [hq*d_head, d_model]` of layer `l`.
+    pub fn wo(&self, l: usize) -> (usize, usize) {
+        (
+            self.layer_base(l) + self.wq_len() + 2 * self.wkv_len(),
+            self.wo_len(),
+        )
+    }
+
+    /// `lm_head [d_model, vocab]`.
+    pub fn lm_head(&self) -> (usize, usize) {
+        (self.layer_base(self.n_layers), self.d_model * self.vocab)
+    }
+
+    /// `lm_bias [vocab]`.
+    pub fn lm_bias(&self) -> (usize, usize) {
+        let (off, len) = self.lm_head();
+        (off + len, self.vocab)
+    }
+
+    pub fn n_params(&self) -> usize {
+        let (off, len) = self.lm_bias();
+        off + len
+    }
+
+    /// Named parameter table (the manifest-compatible view of this layout).
+    pub fn param_specs(&self) -> Vec<ParamSpec> {
+        let mut specs = Vec::new();
+        let mut push = |name: String, shape: Vec<usize>, (offset, len): (usize, usize)| {
+            debug_assert_eq!(shape.iter().product::<usize>(), len);
+            specs.push(ParamSpec { name, shape, offset });
+        };
+        push("embed".into(), vec![self.vocab, self.d_model], self.embed());
+        for l in 0..self.n_layers {
+            let dq = self.hq * self.d_head;
+            let dkv = self.hkv * self.d_head;
+            push(format!("l{l}.wq"), vec![self.d_model, dq], self.wq(l));
+            push(format!("l{l}.wk"), vec![self.d_model, dkv], self.wk(l));
+            push(format!("l{l}.wv"), vec![self.d_model, dkv], self.wv(l));
+            push(format!("l{l}.wo"), vec![dq, self.d_model], self.wo(l));
+        }
+        push("lm_head".into(), vec![self.d_model, self.vocab], self.lm_head());
+        push("lm_bias".into(), vec![self.vocab], self.lm_bias());
+        specs
+    }
+}
+
+/// The paper's named variants for an MHA head budget `h` (Tables 1-3):
+/// GQA keeps H query heads with H/4 kv heads, SQA halves the query heads,
+/// sSQA/xSQA are the symmetric reductions, SWA adds a sliding window.
+fn variant_zoo(h: usize) -> Vec<(&'static str, VariantCfg)> {
+    let q = |f: usize| (h / f).max(1);
+    let mut zoo = vec![
+        ("mha", VariantCfg { hq: h, hkv: h, window: None }),
+        ("gqa", VariantCfg { hq: h, hkv: q(4), window: None }),
+        ("mqa", VariantCfg { hq: h, hkv: 1, window: None }),
+        ("sqa", VariantCfg { hq: q(2), hkv: q(4), window: None }),
+        ("ssqa", VariantCfg { hq: q(2), hkv: q(2), window: None }),
+        ("xsqa", VariantCfg { hq: q(4), hkv: q(4), window: None }),
+        ("xsmqa", VariantCfg { hq: q(4), hkv: 1, window: None }),
+        ("swa", VariantCfg { hq: h, hkv: h, window: Some(SWA_WINDOW) }),
+        ("swsqa", VariantCfg { hq: q(2), hkv: q(4), window: Some(SWA_WINDOW) }),
+    ];
+    // §6 future-work variant: light SQA (25% query reduction).
+    if h % 4 == 0 && (3 * h / 4) % q(4) == 0 {
+        zoo.push(("lsqa", VariantCfg { hq: 3 * h / 4, hkv: q(4), window: None }));
+    }
+    zoo
+}
+
+fn family(dims: ModelDims) -> FamilyEntry {
+    let mut variants = BTreeMap::new();
+    for (name, cfg) in variant_zoo(dims.h_total) {
+        let layout = Layout::new(&dims, &cfg);
+        variants.insert(
+            name.to_string(),
+            VariantEntry {
+                cfg,
+                n_params: layout.n_params(),
+                params: layout.param_specs(),
+            },
+        );
+    }
+    FamilyEntry {
+        dims,
+        causal: true,
+        variants,
+    }
+}
+
+/// Build the native catalog: families plus their entry-point geometry.
+pub fn builtin() -> (BTreeMap<String, FamilyEntry>, BTreeMap<String, Geometry>) {
+    let mut families = BTreeMap::new();
+    let mut geoms = BTreeMap::new();
+
+    families.insert(
+        "tiny".to_string(),
+        family(ModelDims {
+            vocab: 2048,
+            d_model: 128,
+            n_layers: 2,
+            h_total: 8,
+            d_head: 16,
+            d_ff: 352,
+            n_experts: 0,
+        }),
+    );
+    geoms.insert(
+        "tiny".to_string(),
+        Geometry {
+            fwd_batch: 8,
+            fwd_seqs: vec![64, 128, 256],
+            train: Some((4, 64)),
+        },
+    );
+
+    families.insert(
+        "dense_sm".to_string(),
+        family(ModelDims {
+            vocab: 4096,
+            d_model: 256,
+            n_layers: 8,
+            h_total: 16,
+            d_head: 16,
+            d_ff: 704,
+            n_experts: 0,
+        }),
+    );
+    geoms.insert(
+        "dense_sm".to_string(),
+        Geometry {
+            fwd_batch: 0,
+            fwd_seqs: vec![],
+            train: Some((2, 128)),
+        },
+    );
+
+    families.insert(
+        "moe_sm".to_string(),
+        family(ModelDims {
+            vocab: 2048,
+            d_model: 128,
+            n_layers: 6,
+            h_total: 8,
+            d_head: 16,
+            d_ff: 352,
+            n_experts: 4,
+        }),
+    );
+    geoms.insert(
+        "moe_sm".to_string(),
+        Geometry {
+            fwd_batch: 0,
+            fwd_seqs: vec![],
+            train: Some((4, 128)),
+        },
+    );
+
+    families.insert(
+        "bench".to_string(),
+        family(ModelDims {
+            vocab: 1024,
+            d_model: 256,
+            n_layers: 4,
+            h_total: 16,
+            d_head: 16,
+            d_ff: 704,
+            n_experts: 0,
+        }),
+    );
+    geoms.insert(
+        "bench".to_string(),
+        Geometry {
+            fwd_batch: 1,
+            fwd_seqs: vec![512, 1024, 2048, 4096],
+            train: None,
+        },
+    );
+
+    (families, geoms)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layout_offsets_are_contiguous() {
+        let dims = ModelDims {
+            vocab: 64,
+            d_model: 16,
+            n_layers: 3,
+            h_total: 4,
+            d_head: 4,
+            d_ff: 48,
+            n_experts: 0,
+        };
+        let cfg = VariantCfg { hq: 2, hkv: 1, window: None };
+        let lay = Layout::new(&dims, &cfg);
+        let specs = lay.param_specs();
+        let mut expect = 0usize;
+        for s in &specs {
+            assert_eq!(s.offset, expect, "{} misplaced", s.name);
+            expect += s.shape.iter().product::<usize>();
+        }
+        assert_eq!(expect, lay.n_params());
+    }
+
+    #[test]
+    fn builtin_catalog_is_consistent() {
+        let (families, geoms) = builtin();
+        for fam in ["tiny", "dense_sm", "moe_sm", "bench"] {
+            let f = families.get(fam).expect(fam);
+            assert!(geoms.contains_key(fam));
+            assert_eq!(f.dims.d_model, f.dims.h_total * f.dims.d_head);
+            for (vname, v) in &f.variants {
+                v.cfg.validate().unwrap_or_else(|e| panic!("{fam}/{vname}: {e}"));
+                let sum: usize = v.params.iter().map(|p| p.size()).sum();
+                assert_eq!(sum, v.n_params, "{fam}/{vname}");
+            }
+        }
+        // The paper's head counts at H = 16 (Table 1).
+        let dense = &families["dense_sm"].variants;
+        assert_eq!((dense["sqa"].cfg.hq, dense["sqa"].cfg.hkv), (8, 4));
+        assert_eq!((dense["xsqa"].cfg.hq, dense["xsqa"].cfg.hkv), (4, 4));
+        assert_eq!((dense["mqa"].cfg.hq, dense["mqa"].cfg.hkv), (16, 1));
+        assert_eq!(dense["swa"].cfg.window, Some(SWA_WINDOW));
+    }
+
+    #[test]
+    fn zoo_covers_every_table() {
+        let (families, _) = builtin();
+        for v in ["mha", "gqa", "mqa", "sqa", "ssqa", "xsqa", "xsmqa"] {
+            assert!(families["dense_sm"].variants.contains_key(v), "{v}");
+        }
+        for v in ["gqa", "mqa", "sqa", "ssqa", "xsqa"] {
+            assert!(families["moe_sm"].variants.contains_key(v), "{v}");
+        }
+        for v in ["xsqa", "sqa", "ssqa", "swa", "mqa", "gqa", "mha"] {
+            assert!(families["bench"].variants.contains_key(v), "{v}");
+        }
+    }
+}

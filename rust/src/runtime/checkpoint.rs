@@ -1,0 +1,85 @@
+//! Backend-agnostic checkpoints: raw little-endian f32 parameters plus a
+//! JSON sidecar (`<path>.meta.json`) recording family/variant/step, so a
+//! restore is validated against the catalog before it is served or trained.
+//!
+//! Both backends share this one on-disk format (the PJRT `ModelState`
+//! delegates here), but a checkpoint is only loadable by a backend whose
+//! parameter layout for that (family, variant) matches the producer's —
+//! the native catalog model and the PJRT manifest model differ (e.g. no
+//! MLP natively), and the size/ids validation below rejects mismatches.
+
+use crate::runtime::backend::Backend;
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+
+fn meta_path(path: &Path) -> PathBuf {
+    let mut p = path.as_os_str().to_owned();
+    p.push(".meta.json");
+    PathBuf::from(p)
+}
+
+/// Write `params` (+ sidecar) to `path`.
+pub fn save(path: &Path, family: &str, variant: &str, step: usize, params: &[f32]) -> Result<()> {
+    let mut f = std::fs::File::create(path)
+        .with_context(|| format!("creating {}", path.display()))?;
+    let bytes: Vec<u8> = params.iter().flat_map(|x| x.to_le_bytes()).collect();
+    f.write_all(&bytes)?;
+    let meta = Json::obj(vec![
+        ("family", Json::str(family)),
+        ("variant", Json::str(variant)),
+        ("n_params", Json::num(params.len() as f64)),
+        ("step", Json::num(step as f64)),
+    ]);
+    std::fs::write(meta_path(path), meta.to_string())?;
+    Ok(())
+}
+
+/// Load a checkpoint, validating ids and size against the backend catalog.
+/// Returns the parameter vector and the recorded step.
+pub fn load(
+    backend: &dyn Backend,
+    family: &str,
+    variant: &str,
+    path: &Path,
+) -> Result<(Vec<f32>, usize)> {
+    let entry = backend.variant(family, variant)?;
+    load_file(path, family, variant, entry.n_params)
+}
+
+/// Catalog-free core of [`load`]: validate the sidecar against the expected
+/// ids and parameter count, then read the raw f32 vector. The PJRT
+/// `ModelState` path reuses this so both backends share one on-disk format.
+pub fn load_file(
+    path: &Path,
+    family: &str,
+    variant: &str,
+    n_params: usize,
+) -> Result<(Vec<f32>, usize)> {
+    let meta_text = std::fs::read_to_string(meta_path(path))
+        .with_context(|| format!("reading {}", meta_path(path).display()))?;
+    let meta = Json::parse(&meta_text)?;
+    let m_family = meta.req("family")?.as_str().unwrap_or_default();
+    let m_variant = meta.req("variant")?.as_str().unwrap_or_default();
+    if m_family != family || m_variant != variant {
+        bail!("checkpoint is for {m_family}/{m_variant}, wanted {family}/{variant}");
+    }
+    let step = meta.req("step")?.as_usize().context("step")?;
+    let mut f = std::fs::File::open(path)
+        .with_context(|| format!("opening {}", path.display()))?;
+    let mut bytes = Vec::new();
+    f.read_to_end(&mut bytes)?;
+    if bytes.len() != n_params * 4 {
+        bail!(
+            "checkpoint has {} bytes, expected {} ({n_params} params)",
+            bytes.len(),
+            n_params * 4
+        );
+    }
+    let params: Vec<f32> = bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    Ok((params, step))
+}

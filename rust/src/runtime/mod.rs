@@ -1,14 +1,38 @@
-//! L3 runtime: PJRT client wrapper, artifact manifest, device-resident state.
+//! L3 runtime: the [`Backend`] abstraction plus its two implementations.
 //!
-//! The contract with the build-time Python layers (L1 Pallas kernels, L2 JAX
-//! models) is `artifacts/manifest.json` + HLO-text files; see
-//! `python/compile/aot.py`. Python never runs at request time — after
-//! `make artifacts` the Rust binary is self-contained.
+//! * [`backend`] — the `Backend` trait every upper layer (engine, trainer,
+//!   bench harness, CLI) programs against, and [`open_backend`], which
+//!   picks the implementation for this build.
+//! * [`native`] — the default pure-Rust backend: catalog-defined reference
+//!   models executed on the `attention` oracle; zero external dependencies.
+//! * [`catalog`] — built-in model zoo + flat-parameter [`catalog::Layout`].
+//! * [`checkpoint`] — host-side checkpoints shared by all backends.
+//! * [`manifest`] — the `artifacts/manifest.json` contract with the
+//!   build-time Python layers (types reused by the native catalog).
+//! * [`client`] / [`state`] / [`pjrt`] (`--features pjrt`) — the PJRT/XLA
+//!   artifact path: executable cache, device buffers, and its `Backend`
+//!   adapter. Type-checks offline against `rust/xla-stub`.
 
-pub mod client;
+pub mod backend;
+pub mod catalog;
+pub mod checkpoint;
 pub mod manifest;
+pub mod native;
+
+#[cfg(feature = "pjrt")]
+pub mod client;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+#[cfg(feature = "pjrt")]
 pub mod state;
 
-pub use client::Runtime;
+pub use backend::{open_backend, Backend};
 pub use manifest::{Artifact, FamilyEntry, Kind, Manifest, ParamSpec, VariantEntry};
+pub use native::NativeBackend;
+
+#[cfg(feature = "pjrt")]
+pub use client::Runtime;
+#[cfg(feature = "pjrt")]
+pub use pjrt::PjrtBackend;
+#[cfg(feature = "pjrt")]
 pub use state::ModelState;

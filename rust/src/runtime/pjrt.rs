@@ -1,0 +1,196 @@
+//! PJRT adapter: the AOT HLO artifact path exposed through the [`Backend`]
+//! trait (`--features pjrt` only).
+//!
+//! Wraps the low-level [`Runtime`] (executable cache, buffers, slicers) and
+//! moves data across the host boundary at the trait's granularity: params
+//! and train state up per call, logits/metrics down. The device-resident
+//! fast path (state buffer fed step-to-step) lives below the trait inside
+//! [`Runtime`] consumers that need it; the trait surface trades one host
+//! round-trip per step for a backend-agnostic engine and trainer.
+
+use crate::runtime::backend::Backend;
+use crate::runtime::client::Runtime;
+use crate::runtime::manifest::{FamilyEntry, Kind};
+use crate::runtime::state::ModelState;
+use anyhow::{ensure, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// [`Backend`] over compiled HLO artifacts (see `python/compile/aot.py`).
+pub struct PjrtBackend {
+    rt: Runtime,
+}
+
+impl PjrtBackend {
+    pub fn new(artifact_dir: impl AsRef<Path>) -> Result<Self> {
+        Ok(Self {
+            rt: Runtime::new(artifact_dir)?,
+        })
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        &self.rt
+    }
+
+    fn exec_logits(
+        &self,
+        impl_: Option<&str>,
+        family: &str,
+        variant: &str,
+        params: &[f32],
+        tokens: &[i32],
+        batch: usize,
+        seq: usize,
+    ) -> Result<Vec<f32>> {
+        let artifact =
+            self.rt
+                .manifest()
+                .find(family, variant, Kind::Fwd, Some(seq), impl_)?;
+        ensure!(
+            artifact.batch == Some(batch),
+            "fwd artifact batch {:?} != requested {batch}",
+            artifact.batch
+        );
+        let exe = self.rt.compile_artifact(artifact)?;
+        let entry = self.rt.manifest().variant(family, variant)?;
+        ensure!(params.len() == entry.n_params, "param size mismatch");
+        let params_buf = self.rt.buf_f32(params, &[entry.n_params])?;
+        let token_buf = self.rt.buf_i32(tokens, &[batch, seq])?;
+        let out = self.rt.execute1(&exe, &[&params_buf, &token_buf])?;
+        self.rt.to_vec_f32(&out)
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn families(&self) -> &BTreeMap<String, FamilyEntry> {
+        &self.rt.manifest().families
+    }
+
+    fn fwd_buckets(&self, family: &str, variant: &str) -> Vec<usize> {
+        self.rt.manifest().fwd_seqs(family, variant, "xla")
+    }
+
+    fn fwd_batch(&self, family: &str, variant: &str, seq: usize) -> Result<usize> {
+        let a = self
+            .rt
+            .manifest()
+            .find(family, variant, Kind::Fwd, Some(seq), None)?;
+        a.batch.context("fwd artifact missing batch dim")
+    }
+
+    fn fixed_fwd_batch(&self) -> bool {
+        true // compiled artifacts are fixed-shape; batches must be padded
+    }
+
+    fn train_shape(&self, family: &str, variant: &str) -> Result<(usize, usize)> {
+        let a = self
+            .rt
+            .manifest()
+            .find(family, variant, Kind::Train, None, None)?;
+        Ok((
+            a.batch.context("train artifact missing batch")?,
+            a.seq.context("train artifact missing seq")?,
+        ))
+    }
+
+    fn init_params(&self, family: &str, variant: &str, seed: i32) -> Result<Vec<f32>> {
+        let state = ModelState::init(&self.rt, family, variant, seed)?;
+        state.to_host(&self.rt)
+    }
+
+    fn forward(
+        &self,
+        family: &str,
+        variant: &str,
+        params: &[f32],
+        tokens: &[i32],
+        batch: usize,
+        seq: usize,
+    ) -> Result<Vec<f32>> {
+        self.exec_logits(None, family, variant, params, tokens, batch, seq)
+    }
+
+    fn train_step(
+        &self,
+        family: &str,
+        variant: &str,
+        state: &mut [f32],
+        step: i32,
+        lr: f32,
+        tokens: &[i32],
+        targets: &[i32],
+        batch: usize,
+        seq: usize,
+    ) -> Result<(f32, f32)> {
+        let entry = self.rt.manifest().variant(family, variant)?;
+        let p = entry.n_params;
+        ensure!(state.len() == 3 * p + 2, "train state size mismatch");
+        let artifact = self
+            .rt
+            .manifest()
+            .find(family, variant, Kind::Train, None, None)?;
+        let exe = self.rt.compile_artifact(artifact)?;
+        let state_buf = self.rt.buf_f32(state, &[state.len()])?;
+        let step_buf = self.rt.buf_scalar_i32(step)?;
+        let lr_buf = self.rt.buf_scalar_f32(lr)?;
+        let token_buf = self.rt.buf_i32(tokens, &[batch, seq])?;
+        let target_buf = self.rt.buf_i32(targets, &[batch, seq])?;
+        let new_state = self.rt.execute1(
+            &exe,
+            &[&state_buf, &step_buf, &lr_buf, &token_buf, &target_buf],
+        )?;
+        let host = self.rt.to_vec_f32(&new_state)?;
+        ensure!(host.len() == state.len(), "train artifact changed state size");
+        state.copy_from_slice(&host);
+        Ok((state[3 * p], state[3 * p + 1]))
+    }
+
+    fn eval(
+        &self,
+        family: &str,
+        variant: &str,
+        params: &[f32],
+        tokens: &[i32],
+        targets: &[i32],
+        batch: usize,
+        seq: usize,
+    ) -> Result<(f32, f32)> {
+        let entry = self.rt.manifest().variant(family, variant)?;
+        ensure!(params.len() == entry.n_params, "param size mismatch");
+        let artifact = self
+            .rt
+            .manifest()
+            .find(family, variant, Kind::Eval, None, None)?;
+        let exe = self.rt.compile_artifact(artifact)?;
+        let params_buf = self.rt.buf_f32(params, &[params.len()])?;
+        let token_buf = self.rt.buf_i32(tokens, &[batch, seq])?;
+        let target_buf = self.rt.buf_i32(targets, &[batch, seq])?;
+        let out = self
+            .rt
+            .execute1(&exe, &[&params_buf, &token_buf, &target_buf])?;
+        let la = self.rt.to_vec_f32(&out)?;
+        ensure!(la.len() >= 2, "eval artifact returned {} floats", la.len());
+        Ok((la[0], la[1]))
+    }
+
+    fn impls(&self) -> Vec<&'static str> {
+        vec!["xla", "pallas"]
+    }
+
+    fn forward_impl(
+        &self,
+        impl_: &str,
+        family: &str,
+        variant: &str,
+        params: &[f32],
+        tokens: &[i32],
+        batch: usize,
+        seq: usize,
+    ) -> Result<Vec<f32>> {
+        self.exec_logits(Some(impl_), family, variant, params, tokens, batch, seq)
+    }
+}

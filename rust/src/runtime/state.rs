@@ -1,14 +1,13 @@
 //! Device-resident model state: the flat parameter vector (+ optimizer
 //! moments during training) kept as PJRT buffers across steps.
 //!
-//! Checkpoints are written as raw little-endian f32 with a JSON sidecar
-//! (`<stem>.meta.json`) recording family/variant/step and the parameter
-//! layout digest, so restores are validated against the manifest.
+//! Checkpoint I/O delegates to [`crate::runtime::checkpoint`] (raw LE f32 +
+//! JSON sidecar — one on-disk format for all backends); restores are
+//! validated against the manifest's parameter count before upload.
 
 use crate::runtime::client::Runtime;
 use crate::runtime::manifest::{Kind, VariantEntry};
 use anyhow::{bail, Context, Result};
-use std::io::{Read, Write};
 use std::path::Path;
 
 /// Flat-parameter model state on device.
@@ -78,61 +77,21 @@ impl ModelState {
         Ok((spec.shape.clone(), data))
     }
 
-    /// Write a checkpoint: raw f32 LE + JSON sidecar.
+    /// Write a checkpoint (shared on-disk format; see `runtime::checkpoint`).
     pub fn save(&self, rt: &Runtime, path: &Path, step: usize) -> Result<()> {
         let host = self.to_host(rt)?;
-        let mut f = std::fs::File::create(path)
-            .with_context(|| format!("creating {}", path.display()))?;
-        let bytes: Vec<u8> = host.iter().flat_map(|x| x.to_le_bytes()).collect();
-        f.write_all(&bytes)?;
-        let meta = crate::util::json::Json::obj(vec![
-            ("family", crate::util::json::Json::str(&self.family)),
-            ("variant", crate::util::json::Json::str(&self.variant)),
-            ("n_params", crate::util::json::Json::num(self.n_params as f64)),
-            ("step", crate::util::json::Json::num(step as f64)),
-        ]);
-        std::fs::write(meta_path(path), meta.to_string())?;
-        Ok(())
+        crate::runtime::checkpoint::save(path, &self.family, &self.variant, step, &host)
     }
 
-    /// Load a checkpoint; validates family/variant/size against `self`'s ids.
+    /// Load a checkpoint; validates family/variant/size against the manifest.
     pub fn load(rt: &Runtime, family: &str, variant: &str, path: &Path) -> Result<(Self, usize)> {
         let entry = rt.manifest().variant(family, variant)?;
-        let meta_text = std::fs::read_to_string(meta_path(path))
-            .with_context(|| format!("reading {}", meta_path(path).display()))?;
-        let meta = crate::util::json::Json::parse(&meta_text)?;
-        let m_family = meta.req("family")?.as_str().unwrap_or_default();
-        let m_variant = meta.req("variant")?.as_str().unwrap_or_default();
-        if m_family != family || m_variant != variant {
-            bail!(
-                "checkpoint is for {m_family}/{m_variant}, wanted {family}/{variant}"
-            );
-        }
-        let step = meta.req("step")?.as_usize().context("step")?;
-        let mut f = std::fs::File::open(path)?;
-        let mut bytes = Vec::new();
-        f.read_to_end(&mut bytes)?;
-        if bytes.len() != entry.n_params * 4 {
-            bail!(
-                "checkpoint has {} bytes, expected {}",
-                bytes.len(),
-                entry.n_params * 4
-            );
-        }
-        let host: Vec<f32> = bytes
-            .chunks_exact(4)
-            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-            .collect();
+        let (host, step) =
+            crate::runtime::checkpoint::load_file(path, family, variant, entry.n_params)?;
         let params = rt.buf_f32(&host, &[entry.n_params])?;
         Ok((
             Self::from_buffer(family, variant, entry.n_params, params),
             step,
         ))
     }
-}
-
-fn meta_path(path: &Path) -> std::path::PathBuf {
-    let mut p = path.as_os_str().to_owned();
-    p.push(".meta.json");
-    std::path::PathBuf::from(p)
 }

@@ -1,21 +1,20 @@
 //! Training coordinator — the paper's compute-bound pre-training scenario.
 //!
-//! Owns the full training loop from Rust with **device-resident state**:
-//! parameters and AdamW moments live as a single fused f32 vector
-//! `[params | m | v | loss, acc]` that never round-trips through the host
-//! inside the hot loop — the output buffer of step N is fed directly into
-//! step N+1, and only a 2-float metrics slice is copied back (via the
-//! runtime's on-device slicer). The LR schedule, batching, eval cadence,
-//! checkpointing and logging are all L3 concerns — the XLA artifact is a
-//! pure function.
+//! Owns the full training loop over any [`Backend`]: the fused state
+//! `[params | m | v | loss, acc]` is advanced step-by-step through
+//! [`Backend::train_step`], while the LR schedule, batching, eval cadence,
+//! checkpointing and logging stay L3 concerns — the backend's step is a
+//! pure function of (state, step, lr, batch).
 //!
 //! This is the engine behind the `train` subcommand, the Table 1/2 quality
-//! benches, and `examples/train_lm.rs`.
+//! benches, and `examples/train_lm.rs`. On the native backend it runs on
+//! any machine with nothing but this crate; on `--features pjrt` the same
+//! loop drives the fused AdamW XLA artifact.
 
 use crate::config::TrainConfig;
-use crate::data::{Batch, Batcher, Split};
-use crate::runtime::{Kind, ModelState, Runtime};
-use anyhow::{Context, Result};
+use crate::data::{Batcher, Split};
+use crate::runtime::{checkpoint, Backend};
+use anyhow::{ensure, Result};
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -59,17 +58,15 @@ impl TrainReport {
     }
 }
 
-/// The trainer: compiled executables + device state + data streams.
+/// The trainer: a backend handle + fused train state + data streams.
 pub struct Trainer {
-    rt: Runtime,
+    backend: Arc<dyn Backend>,
     pub cfg: TrainConfig,
-    train_exe: Arc<xla::PjRtLoadedExecutable>,
-    eval_exe: Arc<xla::PjRtLoadedExecutable>,
     pub batch: usize,
     pub seq: usize,
     n_params: usize,
-    /// Fused train state on device: `[params | m | v | loss, acc]`.
-    state: xla::PjRtBuffer,
+    /// Fused train state: `[params | m | v | loss, acc]`.
+    state: Vec<f32>,
     pub step: usize,
     train_data: Batcher,
     val_data: Batcher,
@@ -77,16 +74,11 @@ pub struct Trainer {
 }
 
 impl Trainer {
-    pub fn new(rt: &Runtime, cfg: TrainConfig) -> Result<Self> {
-        let manifest = rt.manifest();
-        let entry = manifest.variant(&cfg.family, &cfg.variant)?;
-        let train_art = manifest.find(&cfg.family, &cfg.variant, Kind::Train, None, None)?;
-        let eval_art = manifest.find(&cfg.family, &cfg.variant, Kind::Eval, None, None)?;
-        let (batch, seq) = (
-            train_art.batch.context("train artifact missing batch")?,
-            train_art.seq.context("train artifact missing seq")?,
-        );
-        let dims = &manifest.family(&cfg.family)?.dims;
+    pub fn new(backend: &Arc<dyn Backend>, cfg: TrainConfig) -> Result<Self> {
+        let entry = backend.variant(&cfg.family, &cfg.variant)?;
+        let n_params = entry.n_params;
+        let (batch, seq) = backend.train_shape(&cfg.family, &cfg.variant)?;
+        let dims = backend.family(&cfg.family)?.dims.clone();
 
         // Data: enough tokens for the full run without excessive memory.
         let tokens_needed = (cfg.steps + 1) * batch * (seq + 1) + 64 * (seq + 1);
@@ -99,32 +91,18 @@ impl Trainer {
         let train_data = Batcher::new(stream.clone(), batch, seq, Split::Train);
         let val_data = Batcher::new(stream, batch, seq, Split::Val);
 
-        let t0 = Instant::now();
-        let train_exe = rt.compile_artifact(train_art)?;
-        let eval_exe = rt.compile_artifact(eval_art)?;
-        log::info!(
-            "compiled train+eval for {}/{} in {:.1}s",
-            cfg.family,
-            cfg.variant,
-            t0.elapsed().as_secs_f64()
-        );
-
-        // Initial fused state: params from the init artifact, zero moments.
-        let init_state = ModelState::init(rt, &cfg.family, &cfg.variant, cfg.seed as i32)?;
-        let params_host = init_state.to_host(rt)?;
-        let p = entry.n_params;
-        let mut state_host = vec![0.0f32; 3 * p + 2];
-        state_host[..p].copy_from_slice(&params_host);
-        let state = rt.buf_f32(&state_host, &[3 * p + 2])?;
+        // Initial fused state: params from the backend's init, zero moments.
+        let params = backend.init_params(&cfg.family, &cfg.variant, cfg.seed as i32)?;
+        ensure!(params.len() == n_params, "init returned wrong param count");
+        let mut state = vec![0.0f32; 3 * n_params + 2];
+        state[..n_params].copy_from_slice(&params);
 
         Ok(Self {
-            rt: rt.clone(),
+            backend: Arc::clone(backend),
             cfg,
-            train_exe,
-            eval_exe,
             batch,
             seq,
-            n_params: p,
+            n_params,
             state,
             step: 0,
             train_data,
@@ -133,37 +111,27 @@ impl Trainer {
         })
     }
 
-    fn state_len(&self) -> usize {
-        3 * self.n_params + 2
+    /// The current parameters (prefix of the fused state).
+    pub fn params(&self) -> &[f32] {
+        &self.state[..self.n_params]
     }
 
-    /// Device-side slice of the current parameters (prefix of the state).
-    pub fn params_buffer(&self) -> Result<xla::PjRtBuffer> {
-        self.rt
-            .slice_f32(&self.state, self.state_len(), 0, self.n_params)
-    }
-
-    /// Execute one fused AdamW step; state stays on device.
+    /// Execute one fused AdamW step.
     pub fn step_once(&mut self) -> Result<StepLog> {
         let t0 = Instant::now();
         let batch = self.train_data.next_batch();
         let lr = self.cfg.schedule.lr_at(self.step);
-        let (tokens, targets) = self.upload_batch(&batch)?;
-        let step_buf = self.rt.buf_scalar_i32(self.step as i32 + 1)?;
-        let lr_buf = self.rt.buf_scalar_f32(lr as f32)?;
-        self.state = self.rt.execute1(
-            &self.train_exe,
-            &[&self.state, &step_buf, &lr_buf, &tokens, &targets],
+        let (loss, acc) = self.backend.train_step(
+            &self.cfg.family,
+            &self.cfg.variant,
+            &mut self.state,
+            self.step as i32 + 1,
+            lr as f32,
+            &batch.tokens,
+            &batch.targets,
+            self.batch,
+            self.seq,
         )?;
-        // Metrics tail: 2 floats via on-device slice, then host copy.
-        let metrics = self.rt.slice_f32(
-            &self.state,
-            self.state_len(),
-            3 * self.n_params,
-            3 * self.n_params + 2,
-        )?;
-        let metrics = self.rt.to_vec_f32(&metrics)?;
-        let (loss, acc) = (metrics[0], metrics[1]);
         self.step += 1;
         let rec = StepLog {
             step: self.step,
@@ -176,36 +144,31 @@ impl Trainer {
         Ok(rec)
     }
 
-    fn upload_batch(&self, b: &Batch) -> Result<(xla::PjRtBuffer, xla::PjRtBuffer)> {
-        Ok((
-            self.rt.buf_i32(&b.tokens, &[b.batch, b.seq])?,
-            self.rt.buf_i32(&b.targets, &[b.batch, b.seq])?,
-        ))
-    }
-
     /// Mean (loss, acc) over `n` validation batches.
     pub fn evaluate(&mut self, n: usize) -> Result<(f32, f32)> {
+        ensure!(n > 0, "need at least one eval batch");
         let mut loss_sum = 0.0f64;
         let mut acc_sum = 0.0f64;
-        let params = self.params_buffer()?;
         for _ in 0..n {
             let batch = self.val_data.next_batch();
-            let (tokens, targets) = self.upload_batch(&batch)?;
-            let out = self
-                .rt
-                .execute1(&self.eval_exe, &[&params, &tokens, &targets])?;
-            let la = self.rt.to_vec_f32(&out)?;
-            loss_sum += la[0] as f64;
-            acc_sum += la[1] as f64;
+            let (loss, acc) = self.backend.eval(
+                &self.cfg.family,
+                &self.cfg.variant,
+                &self.state[..self.n_params],
+                &batch.tokens,
+                &batch.targets,
+                self.batch,
+                self.seq,
+            )?;
+            loss_sum += loss as f64;
+            acc_sum += acc as f64;
         }
         Ok(((loss_sum / n as f64) as f32, (acc_sum / n as f64) as f32))
     }
 
-    /// Current parameters as host floats (checkpointing / inspection).
+    /// Current parameters as an owned vector (serving / checkpoints).
     pub fn params_to_host(&self) -> Result<Vec<f32>> {
-        let v = self.rt.to_vec_f32(&self.params_buffer()?)?;
-        anyhow::ensure!(v.len() == self.n_params);
-        Ok(v)
+        Ok(self.params().to_vec())
     }
 
     pub fn save_checkpoint(&self, dir: &str) -> Result<std::path::PathBuf> {
@@ -214,15 +177,13 @@ impl Trainer {
             "{}_{}_step{}.ckpt",
             self.cfg.family, self.cfg.variant, self.step
         ));
-        let state = ModelState::from_buffer(
+        checkpoint::save(
+            &path,
             &self.cfg.family,
             &self.cfg.variant,
-            self.n_params,
-            // Copy the buffer handle by round-tripping through host — save
-            // reads it immediately, so just rebuild from host data.
-            self.rt.buf_f32(&self.params_to_host()?, &[self.n_params])?,
-        );
-        state.save(&self.rt, &path, self.step)?;
+            self.step,
+            self.params(),
+        )?;
         Ok(path)
     }
 
@@ -242,12 +203,10 @@ impl Trainer {
                 );
             }
             if self.cfg.eval_every > 0 && rec.step % self.cfg.eval_every == 0 {
-                let (vl, va) = self.evaluate(self.cfg.eval_batches)?;
+                let (vl, va) = self.evaluate(self.cfg.eval_batches.max(1))?;
                 log::info!("step {:>5}  val_loss {:.4}  val_acc {:.3}", rec.step, vl, va);
             }
-            if self.cfg.checkpoint_every > 0
-                && rec.step % self.cfg.checkpoint_every == 0
-            {
+            if self.cfg.checkpoint_every > 0 && rec.step % self.cfg.checkpoint_every == 0 {
                 if let Some(dir) = self.cfg.checkpoint_dir.clone() {
                     let p = self.save_checkpoint(&dir)?;
                     log::info!("checkpoint -> {}", p.display());

@@ -1,39 +1,37 @@
-//! Integration tests over the real artifacts: runtime + training + data.
+//! Integration tests over the default (native) backend: catalog, runtime,
+//! training, data — no Python, no XLA, no artifacts required.
 //!
-//! These require `make artifacts` to have run (skipped with a clear panic
-//! otherwise). They exercise the full L1→L2→L3 composition: HLO text load,
-//! PJRT compile, device-resident state, fused train steps, eval, and the
-//! differential check of XLA logits vs the pure-Rust attention oracle.
+//! The equivalence suite at the bottom differentially tests the backend's
+//! forward pass against a from-scratch reference implementation written in
+//! this file (independent loops, independent softmax), across the MHA
+//! (Hq = Hkv), GQA-style grouped, and MQA (Hkv = 1) head geometries.
 
-use sqa::attention::{attention, tensor::Tensor, Spec};
 use sqa::config::TrainConfig;
-use sqa::runtime::{Kind, ModelState, Runtime};
+use sqa::runtime::{checkpoint, Backend, FamilyEntry, NativeBackend, VariantEntry};
 use sqa::train::Trainer;
-use std::sync::OnceLock;
+use std::sync::{Arc, OnceLock};
 
-fn rt() -> &'static Runtime {
-    static RT: OnceLock<Runtime> = OnceLock::new();
-    RT.get_or_init(|| {
-        Runtime::new("artifacts").expect("artifacts missing — run `make artifacts` first")
-    })
+fn backend() -> &'static Arc<dyn Backend> {
+    static B: OnceLock<Arc<dyn Backend>> = OnceLock::new();
+    B.get_or_init(|| Arc::new(NativeBackend::new()))
 }
 
 #[test]
-fn manifest_has_all_families_and_variants() {
-    let m = rt().manifest();
+fn catalog_has_all_families_and_variants() {
+    let b = backend();
     for fam in ["tiny", "dense_sm", "moe_sm", "bench"] {
-        assert!(m.families.contains_key(fam), "{fam} missing");
+        assert!(b.families().contains_key(fam), "{fam} missing");
     }
     for v in ["mha", "gqa", "mqa", "sqa", "ssqa", "xsqa", "xsmqa"] {
-        assert!(m.variant("dense_sm", v).is_ok(), "dense_sm/{v}");
+        assert!(b.variant("dense_sm", v).is_ok(), "dense_sm/{v}");
     }
     for v in ["gqa", "mqa", "sqa", "ssqa", "xsqa"] {
-        assert!(m.variant("moe_sm", v).is_ok(), "moe_sm/{v}");
+        assert!(b.variant("moe_sm", v).is_ok(), "moe_sm/{v}");
     }
     // Table 3 needs fwd buckets for all 7 variants.
     for v in ["xsqa", "sqa", "ssqa", "swa", "mqa", "gqa", "mha"] {
         assert!(
-            !m.fwd_seqs("bench", v, "xla").is_empty(),
+            !b.fwd_buckets("bench", v).is_empty(),
             "bench/{v} has no fwd buckets"
         );
     }
@@ -41,39 +39,31 @@ fn manifest_has_all_families_and_variants() {
 
 #[test]
 fn init_is_deterministic_per_seed() {
-    let a = ModelState::init(rt(), "tiny", "sqa", 5).unwrap();
-    let b = ModelState::init(rt(), "tiny", "sqa", 5).unwrap();
-    let c = ModelState::init(rt(), "tiny", "sqa", 6).unwrap();
-    let (va, vb, vc) = (
-        a.to_host(rt()).unwrap(),
-        b.to_host(rt()).unwrap(),
-        c.to_host(rt()).unwrap(),
-    );
+    let b = backend();
+    let va = b.init_params("tiny", "sqa", 5).unwrap();
+    let vb = b.init_params("tiny", "sqa", 5).unwrap();
+    let vc = b.init_params("tiny", "sqa", 6).unwrap();
     assert_eq!(va, vb);
     assert_ne!(va, vc);
     // Healthy init: finite, non-degenerate spread.
     assert!(va.iter().all(|x| x.is_finite()));
     let nonzero = va.iter().filter(|x| **x != 0.0).count();
     assert!(nonzero > va.len() / 2);
+    assert_eq!(va.len(), b.variant("tiny", "sqa").unwrap().n_params);
 }
 
 #[test]
-fn fwd_artifact_runs_and_is_deterministic() {
-    let state = ModelState::init(rt(), "tiny", "sqa", 1).unwrap();
-    let a = rt()
-        .manifest()
-        .find("tiny", "sqa", Kind::Fwd, Some(64), None)
-        .unwrap();
-    let exe = rt().compile_artifact(a).unwrap();
-    let (b, s) = (a.batch.unwrap(), a.seq.unwrap());
-    let tokens: Vec<i32> = (0..b * s).map(|i| (i % 2000) as i32).collect();
-    let tbuf = rt().buf_i32(&tokens, &[b, s]).unwrap();
-    let o1 = rt().to_vec_f32(&rt().execute1(&exe, &[&state.params, &tbuf]).unwrap()).unwrap();
-    let o2 = rt().to_vec_f32(&rt().execute1(&exe, &[&state.params, &tbuf]).unwrap()).unwrap();
+fn forward_runs_and_is_deterministic() {
+    let b = backend();
+    let params = b.init_params("tiny", "sqa", 1).unwrap();
+    let (batch, seq) = (b.fwd_batch("tiny", "sqa", 64).unwrap(), 64usize);
+    let tokens: Vec<i32> = (0..batch * seq).map(|i| (i % 2000) as i32).collect();
+    let o1 = b.forward("tiny", "sqa", &params, &tokens, batch, seq).unwrap();
+    let o2 = b.forward("tiny", "sqa", &params, &tokens, batch, seq).unwrap();
     assert_eq!(o1, o2);
     assert!(o1.iter().all(|x| x.is_finite()));
-    let vocab = rt().manifest().family("tiny").unwrap().dims.vocab;
-    assert_eq!(o1.len(), b * s * vocab);
+    let vocab = b.family("tiny").unwrap().dims.vocab;
+    assert_eq!(o1.len(), batch * seq * vocab);
 }
 
 #[test]
@@ -88,18 +78,21 @@ fn training_reduces_loss_tiny_sqa() {
         seed: 3,
         ..TrainConfig::default()
     };
-    cfg.schedule.base_lr = 1e-3;
+    cfg.schedule.base_lr = 1e-2;
     cfg.schedule.total_steps = 60;
     cfg.schedule.warmup_steps = 6;
-    let mut t = Trainer::new(rt(), cfg).unwrap();
+    let mut t = Trainer::new(backend(), cfg).unwrap();
     let first = t.step_once().unwrap().loss;
     for _ in 0..59 {
         t.step_once().unwrap();
     }
-    let last = t.history.last().unwrap().loss;
+    let best_late = t.history[50..]
+        .iter()
+        .map(|h| h.loss)
+        .fold(f32::MAX, f32::min);
     assert!(
-        last < first - 0.5,
-        "loss did not drop: {first} -> {last}"
+        best_late < first - 1.0,
+        "loss did not drop: {first} -> best of last 10 {best_late}"
     );
     // ln(vocab) sanity at start.
     assert!((first - (2048f32).ln()).abs() < 1.0, "{first}");
@@ -117,7 +110,7 @@ fn train_state_stays_consistent_with_eval() {
         seed: 11,
         ..TrainConfig::default()
     };
-    let mut t = Trainer::new(rt(), cfg).unwrap();
+    let mut t = Trainer::new(backend(), cfg).unwrap();
     for _ in 0..10 {
         t.step_once().unwrap();
     }
@@ -140,136 +133,201 @@ fn checkpoint_roundtrip() {
         seed: 9,
         ..TrainConfig::default()
     };
-    let mut t = Trainer::new(rt(), cfg).unwrap();
+    let mut t = Trainer::new(backend(), cfg).unwrap();
     for _ in 0..3 {
         t.step_once().unwrap();
     }
     let path = t.save_checkpoint(dir.to_str().unwrap()).unwrap();
     let before = t.params_to_host().unwrap();
-    let (state, step) = ModelState::load(rt(), "tiny", "sqa", &path).unwrap();
+    let (params, step) = checkpoint::load(backend().as_ref(), "tiny", "sqa", &path).unwrap();
     assert_eq!(step, 3);
-    assert_eq!(state.to_host(rt()).unwrap(), before);
+    assert_eq!(params, before);
     // Wrong variant must be rejected.
-    assert!(ModelState::load(rt(), "tiny", "mha", &path).is_err());
+    assert!(checkpoint::load(backend().as_ref(), "tiny", "mha", &path).is_err());
     std::fs::remove_dir_all(&dir).ok();
 }
 
 #[test]
-fn pallas_impl_train_artifact_composes() {
-    // The tiny/sqa pallas-impl train artifact must execute and reduce loss:
-    // proves the Pallas kernel (fwd) + custom-vjp (bwd) lowering round-trips
-    // through HLO text into the PJRT runtime.
-    let m = rt().manifest();
-    let a = m
-        .find("tiny", "sqa", Kind::Train, None, Some("pallas"))
-        .expect("pallas train artifact");
-    let exe = rt().compile_artifact(a).unwrap();
-    let entry = m.variant("tiny", "sqa").unwrap();
-    let p = entry.n_params;
-    let init = ModelState::init(rt(), "tiny", "sqa", 2).unwrap();
-    let params = init.to_host(rt()).unwrap();
-    let mut state_host = vec![0.0f32; 3 * p + 2];
-    state_host[..p].copy_from_slice(&params);
-    let mut state = rt().buf_f32(&state_host, &[3 * p + 2]).unwrap();
-
-    let (b, s) = (a.batch.unwrap(), a.seq.unwrap());
-    let tokens: Vec<i32> = (0..b * s).map(|i| ((i * 31 + 7) % 2048) as i32).collect();
-    let targets: Vec<i32> = tokens.iter().map(|t| (t + 1) % 2048).collect();
-    let tbuf = rt().buf_i32(&tokens, &[b, s]).unwrap();
-    let gbuf = rt().buf_i32(&targets, &[b, s]).unwrap();
-
-    let mut losses = Vec::new();
-    for step in 1..=3 {
-        let sb = rt().buf_scalar_i32(step).unwrap();
-        let lb = rt().buf_scalar_f32(1e-3).unwrap();
-        state = rt().execute1(&exe, &[&state, &sb, &lb, &tbuf, &gbuf]).unwrap();
-        let metrics = rt().slice_f32(&state, 3 * p + 2, 3 * p, 3 * p + 2).unwrap();
-        losses.push(rt().to_vec_f32(&metrics).unwrap()[0]);
-    }
-    assert!(
-        losses[2] < losses[0],
-        "pallas train losses did not decrease: {losses:?}"
-    );
-}
-
-#[test]
-fn xla_logits_match_native_attention_oracle() {
-    // Differential test: run the attention core natively (pure Rust) and
-    // through an equivalent dot-product computation of the same geometry.
-    // We validate the *shared semantics* via a synthetic case: uniform
-    // queries/keys make attention an average of values; both the oracle and
-    // a device computation must agree with the analytic result.
-    let (b, hq, hkv, s, d) = (1usize, 4usize, 2usize, 16usize, 8usize);
-    let q = Tensor::from_vec(&[b, hq, s, d], vec![1.0; b * hq * s * d]).unwrap();
-    let k = Tensor::from_vec(&[b, hkv, s, d], vec![1.0; b * hkv * s * d]).unwrap();
-    let mut vals = vec![0.0f32; b * hkv * s * d];
-    for (i, v) in vals.iter_mut().enumerate() {
-        *v = (i % 7) as f32 - 3.0;
-    }
-    let v = Tensor::from_vec(&[b, hkv, s, d], vals).unwrap();
-    let out = attention(&q, &k, &v, Spec::full(hq, hkv)).unwrap();
-    for h in 0..hq {
-        for dd in 0..d {
-            let mean: f32 = (0..s).map(|j| v.get4(0, h / 2, j, dd)).sum::<f32>() / s as f32;
-            for i in 0..s {
-                assert!((out.get4(0, h, i, dd) - mean).abs() < 1e-5);
-            }
-        }
-    }
-}
-
-#[test]
-fn eval_artifact_matches_train_metrics_tail() {
+fn train_loss_tail_matches_eval_on_same_batch() {
     // After one train step, the loss in the state tail must equal the loss
-    // the eval artifact computes on the same batch with the *pre-step*
-    // params (train records the loss at the step's forward pass).
-    let m = rt().manifest();
-    let a_train = m.find("tiny", "ssqa", Kind::Train, None, None).unwrap();
-    let a_eval = m.find("tiny", "ssqa", Kind::Eval, None, None).unwrap();
-    let train_exe = rt().compile_artifact(a_train).unwrap();
-    let eval_exe = rt().compile_artifact(a_eval).unwrap();
-    let entry = m.variant("tiny", "ssqa").unwrap();
+    // eval computes on the same batch with the *pre-step* params (the step
+    // records the loss at its forward pass). This pins the fused
+    // forward+backward implementation to the forward-only path.
+    let b = backend();
+    let entry = b.variant("tiny", "ssqa").unwrap();
     let p = entry.n_params;
+    let params = b.init_params("tiny", "ssqa", 21).unwrap();
+    let mut state = vec![0.0f32; 3 * p + 2];
+    state[..p].copy_from_slice(&params);
 
-    let init = ModelState::init(rt(), "tiny", "ssqa", 21).unwrap();
-    let params_host = init.to_host(rt()).unwrap();
-    let mut state_host = vec![0.0f32; 3 * p + 2];
-    state_host[..p].copy_from_slice(&params_host);
-    let state = rt().buf_f32(&state_host, &[3 * p + 2]).unwrap();
-
-    let (b, s) = (a_train.batch.unwrap(), a_train.seq.unwrap());
-    let tokens: Vec<i32> = (0..b * s).map(|i| ((i * 13 + 5) % 2048) as i32).collect();
+    let (bs, s) = b.train_shape("tiny", "ssqa").unwrap();
+    let tokens: Vec<i32> = (0..bs * s).map(|i| ((i * 13 + 5) % 2048) as i32).collect();
     let targets: Vec<i32> = tokens.iter().map(|t| (t * 7 + 1) % 2048).collect();
-    let tbuf = rt().buf_i32(&tokens, &[b, s]).unwrap();
-    let gbuf = rt().buf_i32(&targets, &[b, s]).unwrap();
 
-    // Train-step loss (computed on pre-update params).
-    let sb = rt().buf_scalar_i32(1).unwrap();
-    let lb = rt().buf_scalar_f32(1e-3).unwrap();
-    let new_state = rt()
-        .execute1(&train_exe, &[&state, &sb, &lb, &tbuf, &gbuf])
+    let (train_loss, _) = b
+        .train_step("tiny", "ssqa", &mut state, 1, 1e-3, &tokens, &targets, bs, s)
         .unwrap();
-    let tail = rt()
-        .slice_f32(&new_state, 3 * p + 2, 3 * p, 3 * p + 2)
-        .unwrap();
-    let train_loss = rt().to_vec_f32(&tail).unwrap()[0];
+    assert_eq!(state[3 * p], train_loss);
 
-    // Eval loss with the original params on the same batch.
-    let out = rt()
-        .execute1(&eval_exe, &[&init.params, &tbuf, &gbuf])
+    let (eval_loss, _) = b
+        .eval("tiny", "ssqa", &params, &tokens, &targets, bs, s)
         .unwrap();
-    let eval_loss = rt().to_vec_f32(&out).unwrap()[0];
     assert!(
-        (train_loss - eval_loss).abs() < 1e-4,
+        (train_loss - eval_loss).abs() < 2e-3,
         "train tail {train_loss} vs eval {eval_loss}"
     );
 }
 
+// ---------------------------------------------------------------------------
+// Native-backend equivalence vs an independent reference implementation
+// ---------------------------------------------------------------------------
+
+fn named_param<'a>(entry: &VariantEntry, params: &'a [f32], name: &str) -> &'a [f32] {
+    let spec = entry
+        .params
+        .iter()
+        .find(|p| p.name == name)
+        .unwrap_or_else(|| panic!("no param {name}"));
+    &params[spec.offset..spec.offset + spec.size()]
+}
+
+/// From-scratch forward pass of the catalog's reference model: embedding,
+/// residual causal-attention blocks with Hq/Hkv head grouping, LM head.
+/// Shares *no* code with the backend (its own projections, masking and
+/// softmax), so agreement is a real differential check.
+fn ref_logits(
+    fam: &FamilyEntry,
+    entry: &VariantEntry,
+    params: &[f32],
+    tokens: &[i32],
+) -> Vec<f32> {
+    let (d, dh) = (fam.dims.d_model, fam.dims.d_head);
+    let (hq, hkv) = (entry.cfg.hq, entry.cfg.hkv);
+    let group = hq / hkv;
+    let s = tokens.len();
+    let vocab = fam.dims.vocab;
+    let scale = 1.0 / (dh as f32).sqrt();
+    assert!(fam.causal && entry.cfg.window.is_none(), "ref covers causal full");
+
+    let embed = named_param(entry, params, "embed");
+    let mut x = vec![0.0f32; s * d];
+    for (i, &t) in tokens.iter().enumerate() {
+        x[i * d..(i + 1) * d].copy_from_slice(&embed[t as usize * d..(t as usize + 1) * d]);
+    }
+
+    for l in 0..fam.dims.n_layers {
+        let wq = named_param(entry, params, &format!("l{l}.wq"));
+        let wk = named_param(entry, params, &format!("l{l}.wk"));
+        let wv = named_param(entry, params, &format!("l{l}.wv"));
+        let wo = named_param(entry, params, &format!("l{l}.wo"));
+        let proj = |w: &[f32], heads: usize| -> Vec<f32> {
+            let cols = heads * dh;
+            let mut out = vec![0.0f32; s * cols];
+            for i in 0..s {
+                for c in 0..cols {
+                    let mut acc = 0.0f32;
+                    for p in 0..d {
+                        acc += x[i * d + p] * w[p * cols + c];
+                    }
+                    out[i * cols + c] = acc;
+                }
+            }
+            out
+        };
+        let q = proj(wq, hq);
+        let k = proj(wk, hkv);
+        let v = proj(wv, hkv);
+        let mut o = vec![0.0f32; s * hq * dh];
+        for h in 0..hq {
+            let kvh = h / group; // head grouping under test
+            for i in 0..s {
+                // Causal scores 0..=i, plain two-pass softmax.
+                let mut scores = Vec::with_capacity(i + 1);
+                let mut maxv = f32::NEG_INFINITY;
+                for j in 0..=i {
+                    let mut acc = 0.0f32;
+                    for dd in 0..dh {
+                        acc += q[i * hq * dh + h * dh + dd] * k[j * hkv * dh + kvh * dh + dd];
+                    }
+                    let sc = acc * scale;
+                    scores.push(sc);
+                    maxv = maxv.max(sc);
+                }
+                let mut denom = 0.0f32;
+                for sc in scores.iter_mut() {
+                    *sc = (*sc - maxv).exp();
+                    denom += *sc;
+                }
+                for (j, sc) in scores.iter().enumerate() {
+                    let w = sc / denom;
+                    for dd in 0..dh {
+                        o[i * hq * dh + h * dh + dd] += w * v[j * hkv * dh + kvh * dh + dd];
+                    }
+                }
+            }
+        }
+        // Residual: x += o @ wo.
+        for i in 0..s {
+            for c in 0..d {
+                let mut acc = 0.0f32;
+                for p in 0..hq * dh {
+                    acc += o[i * hq * dh + p] * wo[p * d + c];
+                }
+                x[i * d + c] += acc;
+            }
+        }
+    }
+
+    let lm_head = named_param(entry, params, "lm_head");
+    let lm_bias = named_param(entry, params, "lm_bias");
+    let mut logits = vec![0.0f32; s * vocab];
+    for i in 0..s {
+        for c in 0..vocab {
+            let mut acc = lm_bias[c];
+            for p in 0..d {
+                acc += x[i * d + p] * lm_head[p * vocab + c];
+            }
+            logits[i * vocab + c] = acc;
+        }
+    }
+    logits
+}
+
+fn assert_matches_reference(variant: &str) {
+    let b = backend();
+    let fam = b.family("tiny").unwrap().clone();
+    let entry = b.variant("tiny", variant).unwrap().clone();
+    let params = b.init_params("tiny", variant, 17).unwrap();
+    let tokens: Vec<i32> = (0..8).map(|i| ((i * 523 + 91) % 2048) as i32).collect();
+    let got = b
+        .forward("tiny", variant, &params, &tokens, 1, tokens.len())
+        .unwrap();
+    let want = ref_logits(&fam, &entry, &params, &tokens);
+    assert_eq!(got.len(), want.len());
+    let mut worst = 0.0f32;
+    for (g, w) in got.iter().zip(&want) {
+        worst = worst.max((g - w).abs());
+    }
+    assert!(
+        worst < 1e-3,
+        "tiny/{variant}: backend diverges from reference by {worst}"
+    );
+}
+
 #[test]
-fn slicer_extracts_correct_ranges() {
-    let data: Vec<f32> = (0..100).map(|x| x as f32).collect();
-    let buf = rt().buf_f32(&data, &[100]).unwrap();
-    let s = rt().slice_f32(&buf, 100, 10, 15).unwrap();
-    assert_eq!(rt().to_vec_f32(&s).unwrap(), vec![10.0, 11.0, 12.0, 13.0, 14.0]);
-    assert!(rt().slice_f32(&buf, 100, 90, 101).is_err());
+fn native_matches_reference_mha() {
+    // Hq == Hkv: every query head owns its kv head.
+    assert_matches_reference("mha");
+}
+
+#[test]
+fn native_matches_reference_gqa_grouping() {
+    // tiny/sqa is (Hq=4, Hkv=2): two query heads share each kv head.
+    assert_matches_reference("sqa");
+}
+
+#[test]
+fn native_matches_reference_mqa() {
+    // Hkv = 1: all query heads read the single kv head.
+    assert_matches_reference("mqa");
 }

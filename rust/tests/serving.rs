@@ -3,16 +3,14 @@
 
 use sqa::config::ServeConfig;
 use sqa::coordinator::{Engine, Reject};
-use sqa::runtime::Runtime;
+use sqa::runtime::{Backend, NativeBackend};
 use sqa::server::{Client, Server};
 use sqa::util::json::Json;
-use std::sync::OnceLock;
+use std::sync::{Arc, OnceLock};
 
-fn rt() -> &'static Runtime {
-    static RT: OnceLock<Runtime> = OnceLock::new();
-    RT.get_or_init(|| {
-        Runtime::new("artifacts").expect("artifacts missing — run `make artifacts` first")
-    })
+fn rt() -> &'static Arc<dyn Backend> {
+    static B: OnceLock<Arc<dyn Backend>> = OnceLock::new();
+    B.get_or_init(|| Arc::new(NativeBackend::new()))
 }
 
 fn cfg() -> ServeConfig {
