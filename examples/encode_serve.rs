@@ -38,6 +38,7 @@ fn main() -> Result<()> {
         max_wait_ms: 4,
         workers: 2,
         queue_capacity: 128,
+        kernel: None,
     };
     let engine = Engine::start(&backend, &cfg, None)?;
     println!(

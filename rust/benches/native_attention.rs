@@ -1,9 +1,26 @@
-//! Native-oracle attention bench: the pure-Rust implementation across the
-//! variant zoo. A second, XLA-free datapoint for the H/Hq scaling law —
-//! useful to show the FLOP argument is implementation-independent.
+//! Native attention bench + kernel regression guard.
+//!
+//! Two tables:
+//!   1. naive-vs-tiled sweep across sequence lengths (the streaming
+//!      kernel's raison d'être: no S×S buffer, mask-aware block skipping);
+//!   2. the variant zoo (MHA → xSMQA) on the tiled kernel — the XLA-free
+//!      datapoint for the paper's H/Hq scaling law.
+//!
+//! Flags (after `--`):
+//!   --seqs 512,4096     sweep points            (default 1024,4096)
+//!   --seq N             variant-zoo seq         (default 1024)
+//!   --json FILE         write the comparison JSON
+//!   --enforce N         exit(1) if tiled is slower than naive at any
+//!                       swept S >= N (the CI smoke guard uses 4096)
+//!   --quick             fewer reps
+//!
+//! CI runs: `cargo bench --bench native_attention -- --seqs 1024,4096
+//! --quick --enforce 4096 --json native_attention.json`
 
-use sqa::attention::{attention, tensor::Tensor, Spec};
+use sqa::attention::{attention_with, tensor::Tensor, Kernel, Spec};
+use sqa::bench_harness::{kernel_cells_to_json, kernel_table};
 use sqa::util::bench::{markdown_table, Bench};
+use sqa::util::json::Json;
 use sqa::util::rng::Pcg64;
 
 fn randn(shape: &[usize], rng: &mut Pcg64) -> Tensor {
@@ -11,12 +28,72 @@ fn randn(shape: &[usize], rng: &mut Pcg64) -> Tensor {
     Tensor::from_vec(shape, (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect()).unwrap()
 }
 
+struct Flags {
+    seqs: Vec<usize>,
+    zoo_seq: usize,
+    json: Option<String>,
+    enforce: Option<usize>,
+    quick: bool,
+}
+
+fn parse_flags() -> Flags {
+    let mut f = Flags {
+        seqs: vec![1024, 4096],
+        zoo_seq: std::env::var("SQA_BENCH_NATIVE_SEQ")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(1024),
+        json: None,
+        enforce: None,
+        quick: false,
+    };
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut i = 0;
+    while i < args.len() {
+        let value = if i + 1 < args.len() {
+            Some(args[i + 1].clone())
+        } else {
+            None
+        };
+        match (args[i].as_str(), value) {
+            ("--seqs", Some(v)) => {
+                f.seqs = v.split(',').filter_map(|s| s.trim().parse().ok()).collect();
+                i += 2;
+            }
+            ("--seq", Some(v)) => {
+                f.zoo_seq = v.parse().expect("--seq");
+                i += 2;
+            }
+            ("--json", Some(v)) => {
+                f.json = Some(v);
+                i += 2;
+            }
+            ("--enforce", Some(v)) => {
+                f.enforce = Some(v.parse().expect("--enforce"));
+                i += 2;
+            }
+            ("--quick", _) => {
+                f.quick = true;
+                i += 1;
+            }
+            // Ignore unknown flags (the cargo bench runner passes its own).
+            _ => i += 1,
+        }
+    }
+    f
+}
+
 fn main() {
-    let seq: usize = std::env::var("SQA_BENCH_NATIVE_SEQ")
-        .ok()
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(1024);
-    let d = 16;
+    let flags = parse_flags();
+    let d = 32;
+
+    // ---- 1. naive vs tiled across sequence lengths ----------------------
+    println!("\n## Attention kernels: naive (S×S oracle) vs tiled streaming\n");
+    let (md, cells) = kernel_table(&flags.seqs, 8, 4, d, true, flags.quick).unwrap();
+    println!("\n{md}");
+
+    // ---- 2. variant zoo on the tiled kernel -----------------------------
+    let seq = flags.zoo_seq;
     let variants = [
         ("mha", 16, 16),
         ("gqa", 16, 4),
@@ -26,21 +103,37 @@ fn main() {
         ("xsqa", 4, 4),
         ("xsmqa", 4, 1),
     ];
-    let bench = Bench::quick();
+    let bench = if flags.quick {
+        Bench {
+            warmup: 0,
+            ..Bench::quick()
+        }
+    } else {
+        Bench::quick()
+    };
     let mut rows = Vec::new();
+    let mut zoo_json = Vec::new();
     let mut mha_secs = 0.0;
-    println!("\n## Native attention oracle, seq {seq}, d_head {d}\n");
+    println!("\n## Variant zoo on the tiled kernel, seq {seq}, d_head {d}\n");
     for (name, hq, hkv) in variants {
         let mut rng = Pcg64::new(1);
         let q = randn(&[1, hq, seq, d], &mut rng);
         let k = randn(&[1, hkv, seq, d], &mut rng);
         let v = randn(&[1, hkv, seq, d], &mut rng);
-        let r = bench.run(&format!("native/{name}"), None, || {
-            let _ = attention(&q, &k, &v, Spec::causal(hq, hkv)).unwrap();
+        let spec = Spec::causal(hq, hkv);
+        let r = bench.run(&format!("tiled/{name}"), None, || {
+            let out = attention_with(&q, &k, &v, spec, Kernel::Tiled).unwrap();
+            assert!(out.data[0].is_finite());
         });
         if name == "mha" {
             mha_secs = r.mean();
         }
+        zoo_json.push(Json::obj(vec![
+            ("variant", Json::str(name)),
+            ("hq", Json::num(hq as f64)),
+            ("hkv", Json::num(hkv as f64)),
+            ("secs", Json::num(r.mean())),
+        ]));
         rows.push(vec![
             name.to_string(),
             format!("{hq}"),
@@ -53,9 +146,53 @@ fn main() {
     println!(
         "\n{}",
         markdown_table(
-            &["Variant".into(), "Hq".into(), "Hkv".into(), "secs".into(),
-              "speed-up".into(), "eq.(9) predicted".into()],
+            &[
+                "Variant".into(),
+                "Hq".into(),
+                "Hkv".into(),
+                "secs".into(),
+                "speed-up".into(),
+                "eq.(9) predicted".into()
+            ],
             &rows
         )
     );
+
+    // ---- JSON + regression guard ----------------------------------------
+    if let Some(path) = &flags.json {
+        let doc = Json::obj(vec![
+            ("kernel_sweep", kernel_cells_to_json(&cells)),
+            ("variant_zoo", Json::arr(zoo_json)),
+        ]);
+        std::fs::write(path, doc.to_string()).expect("writing bench JSON");
+        println!("comparison JSON -> {path}");
+    }
+    if let Some(min_seq) = flags.enforce {
+        // Tiled must not lose to the S×S oracle at long sequence lengths
+        // (5% grace absorbs timer noise on shared CI runners). A sweep that
+        // never reaches the threshold measured nothing — fail loudly rather
+        // than pass vacuously.
+        let enforced: Vec<_> = cells.iter().filter(|c| c.seq >= min_seq).collect();
+        if enforced.is_empty() {
+            eprintln!(
+                "GUARD MISCONFIGURED: no swept S >= {min_seq} (swept {:?})",
+                flags.seqs
+            );
+            std::process::exit(1);
+        }
+        let mut failed = false;
+        for c in enforced {
+            if c.tiled_secs > c.naive_secs * 1.05 {
+                eprintln!(
+                    "REGRESSION: tiled {:.4}s slower than naive {:.4}s at S={}",
+                    c.tiled_secs, c.naive_secs, c.seq
+                );
+                failed = true;
+            }
+        }
+        if failed {
+            std::process::exit(1);
+        }
+        println!("kernel guard OK: tiled >= naive at every S >= {min_seq}");
+    }
 }

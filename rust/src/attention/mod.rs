@@ -1,17 +1,30 @@
-//! Pure-Rust attention oracle: the paper's full variant family, natively.
+//! Attention kernels over the SQA head geometry: a naive oracle and a
+//! tiled streaming production kernel, differentially tested against each
+//! other.
 //!
-//! A second, independent implementation of the SQA math (§3.2) used for:
-//!   1. differential testing against the JAX/Pallas artifacts (golden files
-//!      generated by `python/tests/test_golden.py`),
-//!   2. a native CPU baseline in the bench harness,
-//!   3. property tests on the attention invariants without Python.
+//! Two implementations of the same math (§3.2 of the paper):
+//!   * [`attention`] — the **naive oracle**: materializes the `[S, S]`
+//!     score matrix per head. Deliberately simple; it is the reference the
+//!     differential suites ([`tiled`] vs oracle, native backend vs
+//!     independent re-implementation, golden files from
+//!     `python/tests/test_golden.py`) all compare against.
+//!   * [`tiled`] — the **default execution path**: flash-style streaming
+//!     kernel (online softmax, fixed query/key tiles, mask-aware key-tile
+//!     skipping, never an S×S buffer) that reaches paper-scale sequence
+//!     lengths the oracle cannot.
+//!
+//! [`Kernel`] selects between them on the public entry points
+//! ([`attention_with`], [`sqa_layer_with`]); the naive path stays available
+//! everywhere purely as the testing oracle.
 //!
 //! Semantics match `python/compile/kernels/ref.py` exactly: Hq query heads,
 //! Hkv key/value heads, head `h` reads kv head `h / (Hq/Hkv)`, optional
 //! causal and sliding-window masks, f32 throughout.
 
 pub mod tensor;
+pub mod tiled;
 
+use crate::util::threadpool::ThreadPool;
 use anyhow::{bail, Result};
 use tensor::{matmul_nt, Tensor};
 
@@ -60,10 +73,58 @@ impl Spec {
     }
 }
 
-/// Scaled-dot-product attention over the SQA head geometry.
+/// Which attention lowering to run.
 ///
-/// q: [batch, Hq, S, d]; k, v: [batch, Hkv, S, d] -> [batch, Hq, S, d].
-pub fn attention(q: &Tensor, k: &Tensor, v: &Tensor, spec: Spec) -> Result<Tensor> {
+/// `Naive` is the S×S-materializing oracle; `Tiled` is the streaming
+/// flash-style kernel and the default everywhere outside differential
+/// tests. Parse from CLI/env strings with [`Kernel::parse`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Kernel {
+    /// Full score-matrix oracle — the differential-testing reference.
+    Naive,
+    /// Tiled online-softmax streaming kernel (no S×S buffer).
+    #[default]
+    Tiled,
+}
+
+impl Kernel {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "naive" => Ok(Self::Naive),
+            "tiled" => Ok(Self::Tiled),
+            other => bail!("unknown attention kernel {other:?} (naive|tiled)"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Naive => "naive",
+            Self::Tiled => "tiled",
+        }
+    }
+
+    /// Kernel selected by `SQA_KERNEL` (default: tiled).
+    ///
+    /// Panics on an unknown value: a differential run that silently fell
+    /// back to the kernel under test would be worse than no run at all
+    /// (`SQA_BACKEND` hard-fails the same way in `open_backend`).
+    pub fn from_env() -> Self {
+        match std::env::var("SQA_KERNEL").ok().as_deref() {
+            Some(s) if !s.is_empty() => {
+                Self::parse(s).unwrap_or_else(|e| panic!("SQA_KERNEL: {e:#}"))
+            }
+            _ => Self::default(),
+        }
+    }
+}
+
+/// Validate shapes against the spec; returns `(batch, hq, s, d)`.
+pub(crate) fn check_shapes(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    spec: Spec,
+) -> Result<(usize, usize, usize, usize)> {
     spec.validate()?;
     let (b, hq, s, d) = dims4(q)?;
     let (bk, hkv, sk, dk) = dims4(k)?;
@@ -79,6 +140,31 @@ pub fn attention(q: &Tensor, k: &Tensor, v: &Tensor, spec: Spec) -> Result<Tenso
     if hq != spec.hq {
         bail!("q has {hq} heads, spec says {}", spec.hq);
     }
+    Ok((b, hq, s, d))
+}
+
+/// Dispatch to the selected attention kernel.
+pub fn attention_with(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    spec: Spec,
+    kernel: Kernel,
+) -> Result<Tensor> {
+    match kernel {
+        Kernel::Naive => attention(q, k, v, spec),
+        Kernel::Tiled => tiled::attention_tiled(q, k, v, spec),
+    }
+}
+
+/// Scaled-dot-product attention over the SQA head geometry — the **naive
+/// oracle** (materializes the S×S score matrix; see [`tiled`] for the
+/// streaming production kernel).
+///
+/// q: [batch, Hq, S, d]; k, v: [batch, Hkv, S, d] -> [batch, Hq, S, d].
+pub fn attention(q: &Tensor, k: &Tensor, v: &Tensor, spec: Spec) -> Result<Tensor> {
+    let (b, hq, s, d) = check_shapes(q, k, v, spec)?;
+    let hkv = spec.hkv;
     let group = hq / hkv;
     let scale = 1.0 / (d as f32).sqrt();
 
@@ -166,7 +252,7 @@ fn dims4(t: &Tensor) -> Result<(usize, usize, usize, usize)> {
     Ok((t.shape[0], t.shape[1], t.shape[2], t.shape[3]))
 }
 
-/// Full SQA layer (paper eqs. 4-8) for end-to-end native checks.
+/// Full SQA layer (paper eqs. 4-8) on the default kernel (tiled).
 ///
 /// x: [batch, seq, d_model] (given as rank-4 [batch, 1, seq, d_model]);
 /// weights row-major: wq [d_model, hq*dh], wk/wv [d_model, hkv*dh],
@@ -179,6 +265,24 @@ pub fn sqa_layer(
     wo: &Tensor,
     d_head: usize,
     spec: Spec,
+) -> Result<Tensor> {
+    sqa_layer_with(x, wq, wk, wv, wo, d_head, spec, Kernel::default(), None)
+}
+
+/// [`sqa_layer`] with an explicit kernel choice and, for the tiled path, an
+/// optional thread pool to fan the attention out across
+/// `(batch, head, query-tile)` jobs.
+#[allow(clippy::too_many_arguments)]
+pub fn sqa_layer_with(
+    x: &Tensor,
+    wq: &Tensor,
+    wk: &Tensor,
+    wv: &Tensor,
+    wo: &Tensor,
+    d_head: usize,
+    spec: Spec,
+    kernel: Kernel,
+    pool: Option<&ThreadPool>,
 ) -> Result<Tensor> {
     spec.validate()?;
     let (b, one, s, dm) = dims4(x)?;
@@ -212,7 +316,20 @@ pub fn sqa_layer(
     let q = proj(wq, spec.hq)?;
     let k = proj(wk, spec.hkv)?;
     let v = proj(wv, spec.hkv)?;
-    let o = attention(&q, &k, &v, spec)?;
+    let o = match (kernel, pool) {
+        (Kernel::Naive, _) => attention(&q, &k, &v, spec)?,
+        (Kernel::Tiled, None) => tiled::attention_tiled(&q, &k, &v, spec)?,
+        // The projections are owned here: move them into the pool jobs'
+        // shared buffers instead of deep-copying.
+        (Kernel::Tiled, Some(pool)) => tiled::attention_tiled_parallel_owned(
+            q,
+            k,
+            v,
+            spec,
+            tiled::TileConfig::default(),
+            pool,
+        )?,
+    };
     // Merge heads + output projection.
     let dq = spec.hq * d_head;
     if wo.shape != vec![dq, dm] {

@@ -1,0 +1,644 @@
+//! Flash-style tiled streaming attention: online softmax, no S×S buffer.
+//!
+//! The naive oracle in [`super::attention`] materializes the full `[S, S]`
+//! score matrix per head, so memory — not FLOPs — becomes the binding
+//! constraint long before the 32k–200k regime the paper benchmarks. This
+//! kernel streams over fixed-size key tiles instead, keeping one running
+//! `(max, normalizer, output)` triple per query row:
+//!
+//! ```text
+//!   m' = max(m, max_j s_ij)                    (running max)
+//!   α  = exp(m - m')                           (rescale factor)
+//!   l' = α·l + Σ_j exp(s_ij - m')              (running normalizer)
+//!   o' = α·o + Σ_j exp(s_ij - m')·v_j          (unnormalized output)
+//! ```
+//!
+//! and divides by `l` once at the end. Peak score storage is one
+//! `[q_tile, k_tile]` block regardless of S. Key tiles that fall entirely
+//! outside the union of the query tile's visible ranges (causal and/or
+//! sliding-window masks) are skipped without touching K or V.
+//!
+//! Invariants the test suites pin down (see `rust/tests/`):
+//! * outputs match the naive oracle within 1e-4 for every head geometry
+//!   (MHA, GQA, MQA, extreme SQA) and every mask, including sequence
+//!   lengths that are not multiples of the tile size;
+//! * softmax rows sum to 1 (probed with all-ones values);
+//! * rows whose visible range is empty produce exact zeros, never NaN;
+//! * the running max keeps large-magnitude logits finite, and non-finite
+//!   scores reproduce the oracle bit-for-bit: `-inf`/NaN keys are masked
+//!   out individually, while a `+inf` score (which dominates the oracle's
+//!   row max and underflows its normalizer) zeroes the whole row;
+//! * the set of key tiles visited equals the set of key tiles that
+//!   intersect some row's [`super::visible_range`].
+
+use super::tensor::Tensor;
+use super::{check_shapes, visible_range, Spec};
+use crate::util::threadpool::ThreadPool;
+use anyhow::{bail, Context, Result};
+use std::sync::{mpsc, Arc};
+
+/// Default query/key tile edge. 64 rows × 64 keys of f32 scores is 16 KiB —
+/// comfortably inside L1/L2 alongside the K/V tile being streamed.
+pub const DEFAULT_TILE: usize = 64;
+
+/// Tile geometry of the streaming kernel.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TileConfig {
+    /// Query rows processed per tile.
+    pub q_tile: usize,
+    /// Keys consumed per inner step (the score block is `q_tile × k_tile`).
+    pub k_tile: usize,
+}
+
+impl Default for TileConfig {
+    fn default() -> Self {
+        Self {
+            q_tile: DEFAULT_TILE,
+            k_tile: DEFAULT_TILE,
+        }
+    }
+}
+
+impl TileConfig {
+    pub fn new(q_tile: usize, k_tile: usize) -> Result<Self> {
+        if q_tile == 0 || k_tile == 0 {
+            bail!("tile sizes must be positive (got {q_tile}x{k_tile})");
+        }
+        Ok(Self { q_tile, k_tile })
+    }
+}
+
+/// Union of the visible key ranges of query rows `[i0, i1)`.
+///
+/// Both `lo(i)` and `hi(i)` of [`visible_range`] are non-decreasing in `i`
+/// for every mask kind (causal, symmetric window, causal window, full), and
+/// consecutive rows' ranges always touch or overlap (windows are ≥ 1), so
+/// the union is exactly the interval `[lo(i0), hi(i1 - 1))` and every key
+/// in it is visible to at least one row of the tile.
+pub fn tile_visible_range(i0: usize, i1: usize, s: usize, spec: Spec) -> (usize, usize) {
+    debug_assert!(i0 < i1 && i1 <= s);
+    let (lo, _) = visible_range(i0, s, spec);
+    let (_, hi) = visible_range(i1 - 1, s, spec);
+    (lo, hi)
+}
+
+/// Indices of the key tiles the kernel visits for query tile `[i0, i1)`.
+///
+/// A key tile `t` covers keys `[t·k_tile, (t+1)·k_tile) ∩ [0, s)`; the
+/// kernel visits exactly the tiles intersecting [`tile_visible_range`].
+/// `rust/tests/properties.rs` checks this against the per-row
+/// [`visible_range`] definition.
+pub fn visited_key_tiles(
+    i0: usize,
+    i1: usize,
+    s: usize,
+    spec: Spec,
+    k_tile: usize,
+) -> std::ops::Range<usize> {
+    let (lo, hi) = tile_visible_range(i0, i1, s, spec);
+    if hi <= lo {
+        return 0..0;
+    }
+    lo / k_tile..hi.div_ceil(k_tile)
+}
+
+/// Stream one query tile `[i0, i1)` of one head.
+///
+/// `q`/`k`/`v` are full-sequence slabs addressed as
+/// `row j -> slab[j * stride + off ..][..d]`, which covers both the oracle's
+/// `[S, d]` per-head layout (`stride = d`, `off = 0`) and the native
+/// backend's head-interleaved `[S, H·d]` matrices (`stride = H·d`,
+/// `off = h·d`). `out` starts at query row `i0`: row `i` lands at
+/// `out[(i - i0) * out_stride + out_off ..][..d]` and is fully overwritten.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn stream_qtile(
+    q: &[f32],
+    q_stride: usize,
+    q_off: usize,
+    k: &[f32],
+    kv_stride: usize,
+    kv_off: usize,
+    v: &[f32],
+    out: &mut [f32],
+    out_stride: usize,
+    out_off: usize,
+    s: usize,
+    d: usize,
+    i0: usize,
+    i1: usize,
+    spec: Spec,
+    k_tile: usize,
+    scale: f32,
+) {
+    let tq = i1 - i0;
+    for ti in 0..tq {
+        out[ti * out_stride + out_off..][..d].fill(0.0);
+    }
+    let (t_lo, t_hi) = tile_visible_range(i0, i1, s, spec);
+    if t_hi <= t_lo {
+        return; // whole tile masked: zeros, by construction not NaN
+    }
+    // Running per-row state; `out` itself holds the unnormalized output.
+    let mut m = vec![f32::NEG_INFINITY; tq];
+    let mut l = vec![0.0f32; tq];
+    // Oracle semantics for non-finite scores: -inf/NaN entries are masked
+    // out individually, but a +inf score dominates the row max and drives
+    // every exp (and the normalizer) to 0 — the whole row becomes zeros.
+    let mut poisoned = vec![false; tq];
+    // The only score storage: one [q_tile, k_tile] block.
+    let mut scores = vec![0.0f32; tq * k_tile];
+
+    for jt in t_lo / k_tile..t_hi.div_ceil(k_tile) {
+        let j0 = jt * k_tile;
+        let j1 = ((jt + 1) * k_tile).min(s);
+        for ti in 0..tq {
+            let i = i0 + ti;
+            let (lo, hi) = visible_range(i, s, spec);
+            let (jlo, jhi) = (j0.max(lo), j1.min(hi));
+            if jlo >= jhi {
+                continue; // this row sees nothing in this key tile
+            }
+            let qi = &q[i * q_stride + q_off..][..d];
+            let srow = &mut scores[ti * k_tile..][..k_tile];
+            let mut block_max = f32::NEG_INFINITY;
+            for j in jlo..jhi {
+                let kj = &k[j * kv_stride + kv_off..][..d];
+                let mut acc = 0.0f32;
+                for (a, b) in qi.iter().zip(kj) {
+                    acc += a * b;
+                }
+                let sc = acc * scale;
+                if sc.is_finite() {
+                    srow[j - j0] = sc;
+                    block_max = block_max.max(sc);
+                } else {
+                    // -inf/NaN: this key contributes nothing; +inf: the
+                    // whole row degrades to zeros like the oracle's.
+                    poisoned[ti] |= sc == f32::INFINITY;
+                    srow[j - j0] = f32::NEG_INFINITY;
+                }
+            }
+            if block_max == f32::NEG_INFINITY {
+                // No finite score in this block: nothing to accumulate.
+                continue;
+            }
+            let m_new = m[ti].max(block_max);
+            let orow = &mut out[ti * out_stride + out_off..][..d];
+            // α = exp(m_old - m_new); exp(-inf) = 0 covers the first block.
+            let alpha = (m[ti] - m_new).exp();
+            if alpha != 1.0 {
+                l[ti] *= alpha;
+                for o in orow.iter_mut() {
+                    *o *= alpha;
+                }
+            }
+            m[ti] = m_new;
+            for j in jlo..jhi {
+                let p = (srow[j - j0] - m_new).exp();
+                if p == 0.0 {
+                    continue;
+                }
+                l[ti] += p;
+                let vj = &v[j * kv_stride + kv_off..][..d];
+                for (o, &vv) in orow.iter_mut().zip(vj) {
+                    *o += p * vv;
+                }
+            }
+        }
+    }
+    for ti in 0..tq {
+        // l == 0 means no key survived (all masked or all -inf) and a +inf
+        // score zeroes the whole row: in both cases emit exact zeros (what
+        // the oracle computes) rather than dividing into NaN.
+        let orow = &mut out[ti * out_stride + out_off..][..d];
+        if l[ti] > 0.0 && !poisoned[ti] {
+            let inv = 1.0 / l[ti];
+            for o in orow.iter_mut() {
+                *o *= inv;
+            }
+        } else {
+            orow.fill(0.0);
+        }
+    }
+}
+
+/// Drive every query tile of one head through [`stream_qtile`].
+///
+/// `out` is the full `[S, ·]` output slab (row 0 based) addressed with the
+/// same stride/offset convention as the inputs.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn stream_head(
+    q: &[f32],
+    q_stride: usize,
+    q_off: usize,
+    k: &[f32],
+    kv_stride: usize,
+    kv_off: usize,
+    v: &[f32],
+    out: &mut [f32],
+    out_stride: usize,
+    out_off: usize,
+    s: usize,
+    d: usize,
+    spec: Spec,
+    cfg: TileConfig,
+    scale: f32,
+) {
+    let mut i0 = 0;
+    while i0 < s {
+        let i1 = (i0 + cfg.q_tile).min(s);
+        stream_qtile(
+            q,
+            q_stride,
+            q_off,
+            k,
+            kv_stride,
+            kv_off,
+            v,
+            &mut out[i0 * out_stride..],
+            out_stride,
+            out_off,
+            s,
+            d,
+            i0,
+            i1,
+            spec,
+            cfg.k_tile,
+            scale,
+        );
+        i0 = i1;
+    }
+}
+
+/// Tiled streaming attention with the default tile geometry.
+///
+/// Same contract as [`super::attention`]: q `[B, Hq, S, d]`,
+/// k/v `[B, Hkv, S, d]` → `[B, Hq, S, d]`.
+pub fn attention_tiled(q: &Tensor, k: &Tensor, v: &Tensor, spec: Spec) -> Result<Tensor> {
+    attention_tiled_cfg(q, k, v, spec, TileConfig::default())
+}
+
+/// Tiled streaming attention with explicit tile geometry (tests use tiny
+/// tiles to exercise non-aligned sequence lengths cheaply).
+pub fn attention_tiled_cfg(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    spec: Spec,
+    cfg: TileConfig,
+) -> Result<Tensor> {
+    let (b, hq, s, d) = check_shapes(q, k, v, spec)?;
+    let group = hq / spec.hkv;
+    let scale = 1.0 / (d as f32).sqrt();
+    let mut out = Tensor::zeros(&[b, hq, s, d]);
+    for ib in 0..b {
+        for h in 0..hq {
+            let hk = h / group;
+            let q_slab = &q.data[q.idx4(ib, h, 0, 0)..][..s * d];
+            let k_slab = &k.data[k.idx4(ib, hk, 0, 0)..][..s * d];
+            let v_slab = &v.data[v.idx4(ib, hk, 0, 0)..][..s * d];
+            let o_base = (ib * hq + h) * s * d;
+            let o_slab = &mut out.data[o_base..o_base + s * d];
+            stream_head(
+                q_slab,
+                d,
+                0,
+                k_slab,
+                d,
+                0,
+                v_slab,
+                o_slab,
+                d,
+                0,
+                s,
+                d,
+                spec,
+                cfg,
+                scale,
+            );
+        }
+    }
+    Ok(out)
+}
+
+/// Tiled attention fanned out across `(batch, head, query-tile)` jobs on a
+/// [`ThreadPool`]. Each job streams one query tile into a private buffer;
+/// the caller thread assembles them, so no unsafe sharing is needed. Falls
+/// back to the serial kernel when there is only one job's worth of work.
+///
+/// Borrowing wrapper around [`attention_tiled_parallel_owned`]; it must
+/// deep-copy Q/K/V to hand `'static` buffers to the pool, so callers that
+/// own their projections (e.g. `sqa_layer_with`) should pass them by value
+/// instead.
+pub fn attention_tiled_parallel(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    spec: Spec,
+    cfg: TileConfig,
+    pool: &ThreadPool,
+) -> Result<Tensor> {
+    attention_tiled_parallel_owned(q.clone(), k.clone(), v.clone(), spec, cfg, pool)
+}
+
+/// [`attention_tiled_parallel`] taking ownership of Q/K/V — the buffers
+/// move straight into the job-shared `Arc`s with no copy.
+///
+/// Do not call from inside a job already running on `pool` — nested
+/// submission can deadlock the bounded queue.
+pub fn attention_tiled_parallel_owned(
+    q: Tensor,
+    k: Tensor,
+    v: Tensor,
+    spec: Spec,
+    cfg: TileConfig,
+    pool: &ThreadPool,
+) -> Result<Tensor> {
+    let (b, hq, s, d) = check_shapes(&q, &k, &v, spec)?;
+    let n_tiles = s.div_ceil(cfg.q_tile);
+    if b * hq * n_tiles <= 1 {
+        return attention_tiled_cfg(&q, &k, &v, spec, cfg);
+    }
+    let group = hq / spec.hkv;
+    let hkv = spec.hkv;
+    let scale = 1.0 / (d as f32).sqrt();
+    let qa = Arc::new(q.data);
+    let ka = Arc::new(k.data);
+    let va = Arc::new(v.data);
+    let (tx, rx) = mpsc::channel::<(usize, usize, usize, Vec<f32>)>();
+    let mut n_jobs = 0usize;
+    for ib in 0..b {
+        for h in 0..hq {
+            let hk = h / group;
+            for t in 0..n_tiles {
+                let i0 = t * cfg.q_tile;
+                let i1 = (i0 + cfg.q_tile).min(s);
+                let (qa, ka, va) = (Arc::clone(&qa), Arc::clone(&ka), Arc::clone(&va));
+                let tx = tx.clone();
+                n_jobs += 1;
+                pool.submit(move || {
+                    let q_slab = &qa[(ib * hq + h) * s * d..][..s * d];
+                    let k_slab = &ka[(ib * hkv + hk) * s * d..][..s * d];
+                    let v_slab = &va[(ib * hkv + hk) * s * d..][..s * d];
+                    let mut buf = vec![0.0f32; (i1 - i0) * d];
+                    stream_qtile(
+                        q_slab,
+                        d,
+                        0,
+                        k_slab,
+                        d,
+                        0,
+                        v_slab,
+                        &mut buf,
+                        d,
+                        0,
+                        s,
+                        d,
+                        i0,
+                        i1,
+                        spec,
+                        cfg.k_tile,
+                        scale,
+                    );
+                    let _ = tx.send((ib, h, i0, buf));
+                });
+            }
+        }
+    }
+    drop(tx);
+    let mut out = Tensor::zeros(&[b, hq, s, d]);
+    for _ in 0..n_jobs {
+        let (ib, h, i0, buf) = rx.recv().context("tiled attention worker lost")?;
+        let base = out.idx4(ib, h, i0, 0);
+        out.data[base..base + buf.len()].copy_from_slice(&buf);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::attention;
+    use crate::util::rng::Pcg64;
+
+    fn randn(shape: &[usize], seed: u64) -> Tensor {
+        let mut rng = Pcg64::new(seed);
+        let n = shape.iter().product();
+        Tensor::from_vec(shape, (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect()).unwrap()
+    }
+
+    #[test]
+    fn matches_oracle_on_default_tiles() {
+        let (b, hq, hkv, s, d) = (2, 4, 2, 97, 8);
+        let q = randn(&[b, hq, s, d], 1);
+        let k = randn(&[b, hkv, s, d], 2);
+        let v = randn(&[b, hkv, s, d], 3);
+        for spec in [
+            Spec::full(hq, hkv),
+            Spec::causal(hq, hkv),
+            Spec {
+                hq,
+                hkv,
+                causal: true,
+                window: Some(13),
+            },
+        ] {
+            let want = attention(&q, &k, &v, spec).unwrap();
+            let got = attention_tiled(&q, &k, &v, spec).unwrap();
+            assert!(
+                want.max_abs_diff(&got) < 1e-4,
+                "{spec:?}: diff {}",
+                want.max_abs_diff(&got)
+            );
+        }
+    }
+
+    #[test]
+    fn parallel_matches_serial() {
+        let pool = ThreadPool::new(4, 64);
+        let (b, hq, hkv, s, d) = (2, 4, 1, 83, 8);
+        let q = randn(&[b, hq, s, d], 4);
+        let k = randn(&[b, hkv, s, d], 5);
+        let v = randn(&[b, hkv, s, d], 6);
+        let spec = Spec::causal(hq, hkv);
+        let cfg = TileConfig::new(16, 16).unwrap();
+        let serial = attention_tiled_cfg(&q, &k, &v, spec, cfg).unwrap();
+        let par = attention_tiled_parallel(&q, &k, &v, spec, cfg, &pool).unwrap();
+        // Same per-tile arithmetic, so bitwise equality is expected.
+        assert_eq!(serial.data, par.data);
+    }
+
+    #[test]
+    fn rows_with_no_surviving_keys_write_zeros_not_nan() {
+        // The public masks never produce an empty visible range, but the
+        // kernel must stay total: when a row's normalizer ends at 0 (every
+        // score overflowed to -inf, the streaming analogue of an all-masked
+        // row) the output must be exact zeros, never 0/0 = NaN.
+        let s = 8;
+        let d = 4;
+        let spec = Spec::causal(1, 1);
+        // q·k overflows to -inf for every pair: every block is skipped and
+        // the normalizer stays 0.
+        let q = vec![f32::MAX; s * d];
+        let k = vec![f32::MIN; s * d];
+        let v: Vec<f32> = (0..s * d).map(|x| x as f32).collect();
+        let mut out = vec![f32::NAN; s * d]; // must be fully overwritten
+        stream_qtile(
+            &q,
+            d,
+            0,
+            &k,
+            d,
+            0,
+            &v,
+            &mut out,
+            d,
+            0,
+            s,
+            d,
+            0,
+            s,
+            spec,
+            4,
+            1.0,
+        );
+        assert!(out.iter().all(|&x| x == 0.0), "{out:?}");
+    }
+
+    #[test]
+    fn stale_scores_from_previous_block_are_not_reused() {
+        // Row windows narrower than k_tile leave parts of the score block
+        // unwritten on later tiles; those slots must never leak into p.
+        let (hq, hkv, s, d) = (1, 1, 11, 4);
+        let q = randn(&[1, hq, s, d], 7);
+        let k = randn(&[1, hkv, s, d], 8);
+        let v = randn(&[1, hkv, s, d], 9);
+        let spec = Spec {
+            hq,
+            hkv,
+            causal: true,
+            window: Some(2),
+        };
+        let want = attention(&q, &k, &v, spec).unwrap();
+        let got = attention_tiled_cfg(&q, &k, &v, spec, TileConfig::new(4, 4).unwrap()).unwrap();
+        assert!(want.max_abs_diff(&got) < 1e-5);
+    }
+
+    #[test]
+    fn large_magnitude_logits_stay_finite() {
+        // Scores ~ ±2500: naive and tiled both max-subtract, so outputs
+        // agree and stay finite (softmax saturates onto the argmax key).
+        let (hq, hkv, s, d) = (2, 1, 33, 4);
+        let mut q = randn(&[1, hq, s, d], 10);
+        let mut k = randn(&[1, hkv, s, d], 11);
+        for x in q.data.iter_mut() {
+            *x *= 50.0;
+        }
+        for x in k.data.iter_mut() {
+            *x *= 50.0;
+        }
+        let v = randn(&[1, hkv, s, d], 12);
+        let cfg = TileConfig::new(8, 8).unwrap();
+        for spec in [Spec::causal(hq, hkv), Spec::full(hq, hkv)] {
+            let got = attention_tiled_cfg(&q, &k, &v, spec, cfg).unwrap();
+            assert!(got.data.iter().all(|x| x.is_finite()));
+            let want = attention(&q, &k, &v, spec).unwrap();
+            assert!(want.max_abs_diff(&got) < 1e-4);
+        }
+    }
+
+    #[test]
+    fn overflowing_rows_degrade_to_zeros_like_the_oracle() {
+        let (hq, hkv, s, d) = (1, 1, 9, 4);
+        let v = randn(&[1, hkv, s, d], 13);
+        let spec = Spec::causal(hq, hkv);
+        let cfg = TileConfig::new(4, 4).unwrap();
+        // -inf overflow (q·k = MAX·MIN) and +inf overflow (q·k = MAX·MAX):
+        // the oracle zeroes both kinds of row; tiled must agree, not NaN.
+        for kval in [f32::MIN, f32::MAX] {
+            let q = Tensor::from_vec(&[1, hq, s, d], vec![f32::MAX; s * d]).unwrap();
+            let k = Tensor::from_vec(&[1, hkv, s, d], vec![kval; s * d]).unwrap();
+            let want = attention(&q, &k, &v, spec).unwrap();
+            let got = attention_tiled_cfg(&q, &k, &v, spec, cfg).unwrap();
+            assert!(want.data.iter().all(|&x| x == 0.0), "oracle kval={kval}");
+            assert_eq!(want.data, got.data, "kval={kval}");
+        }
+    }
+
+    #[test]
+    fn single_plus_inf_score_zeroes_only_that_row() {
+        // Key 1 sends row scores to +inf for every query row that sees it
+        // (oracle: +inf dominates the row max, denom underflows to 0 ->
+        // zeros); rows that never see key 1 must stay untouched and match.
+        let (hq, hkv, s, d) = (1, 1, 6, 4);
+        let q = Tensor::from_vec(&[1, hq, s, d], vec![1.0; s * d]).unwrap();
+        let mut k = randn(&[1, hkv, s, d], 14);
+        for dd in 0..d {
+            k.set4(0, 0, 1, dd, f32::MAX);
+        }
+        let spec = Spec::causal(hq, hkv);
+        let want = attention(&q, &k, &v_of(&k, 15), spec).unwrap();
+        let got =
+            attention_tiled_cfg(&q, &k, &v_of(&k, 15), spec, TileConfig::new(4, 4).unwrap())
+                .unwrap();
+        assert!(got.data.iter().all(|x| !x.is_nan()));
+        // Row 0 (sees only key 0) is a plain softmax; rows >= 1 see the
+        // poisoned key and must be zeros in both implementations.
+        assert!(want.max_abs_diff(&got) < 1e-5);
+        for i in 1..s {
+            for dd in 0..d {
+                assert_eq!(got.get4(0, 0, i, dd), 0.0, "row {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn nan_scores_are_masked_like_the_oracle() {
+        // A NaN q row makes all its scores NaN: the oracle masks them
+        // (weight 0, denom 0 -> zeros); the tiled kernel must agree and
+        // must not leak the NaN into neighbouring rows of the tile.
+        let (hq, hkv, s, d) = (1, 1, 7, 4);
+        let mut q = randn(&[1, hq, s, d], 16);
+        for dd in 0..d {
+            q.set4(0, 0, 3, dd, f32::NAN);
+        }
+        let k = randn(&[1, hkv, s, d], 17);
+        let v = randn(&[1, hkv, s, d], 18);
+        let spec = Spec::causal(hq, hkv);
+        let want = attention(&q, &k, &v, spec).unwrap();
+        let got = attention_tiled_cfg(&q, &k, &v, spec, TileConfig::new(4, 4).unwrap()).unwrap();
+        assert!(got.data.iter().all(|x| !x.is_nan()));
+        assert!(want.max_abs_diff(&got) < 1e-5);
+        for dd in 0..d {
+            assert_eq!(got.get4(0, 0, 3, dd), 0.0);
+        }
+    }
+
+    fn v_of(k: &Tensor, seed: u64) -> Tensor {
+        randn(&k.shape, seed)
+    }
+
+    #[test]
+    fn tile_range_helpers_agree_with_visible_range() {
+        let spec = Spec {
+            hq: 1,
+            hkv: 1,
+            causal: true,
+            window: Some(3),
+        };
+        let s = 32;
+        assert_eq!(tile_visible_range(4, 8, s, spec), (2, 8));
+        assert_eq!(visited_key_tiles(4, 8, s, spec, 4), 0..2);
+        // Causal full: tile [8, 16) sees keys [0, 16).
+        let causal = Spec::causal(1, 1);
+        assert_eq!(tile_visible_range(8, 16, s, causal), (0, 16));
+        assert_eq!(visited_key_tiles(8, 16, s, causal, 8), 0..2);
+    }
+
+    #[test]
+    fn rejects_zero_tiles() {
+        assert!(TileConfig::new(0, 8).is_err());
+        assert!(TileConfig::new(8, 0).is_err());
+        assert!(TileConfig::new(8, 8).is_ok());
+    }
+}

@@ -8,6 +8,7 @@
 //! | §3.2.1 complexity         | [`complexity`] | analytic table from `flops/` |
 //! | Figures 2–6 (head wiring) | [`diagram`] | ASCII rendering of the variant head graph |
 //! | kernel-impl ablation      | [`ablation_impl`] | every attention lowering of the backend |
+//! | naive-vs-tiled sweep      | [`kernel_table`] | raw attention kernels across seq lengths |
 //!
 //! Everything runs through the [`Backend`] trait, so the same harness
 //! regenerates the tables on the native CPU path (default) or the PJRT
@@ -203,9 +204,9 @@ pub fn table3(
 }
 
 /// Attention-lowering ablation on the same (variant, seq) point: every
-/// impl the backend exposes ("native"; or "xla" vs "pallas" under
-/// `--features pjrt`). The table exists to prove each lowering runs
-/// end-to-end; numerics are compared in `rust/tests/`.
+/// impl the backend exposes ("tiled" vs "naive" on native; "xla" vs
+/// "pallas" under `--features pjrt`). The table exists to prove each
+/// lowering runs end-to-end; numerics are compared in `rust/tests/`.
 pub fn ablation_impl(backend: &Arc<dyn Backend>, seq: usize) -> Result<String> {
     let family = "bench";
     // The probe pass below doubles as the warmup iteration.
@@ -248,6 +249,91 @@ pub fn ablation_impl(backend: &Arc<dyn Backend>, seq: usize) -> Result<String> {
         &["Variant".into(), "Attention impl".into(), "Fwd secs".into()],
         &rows,
     ))
+}
+
+/// One (seq, kernel-pair) point of the naive-vs-tiled sweep.
+#[derive(Debug, Clone)]
+pub struct KernelCell {
+    pub seq: usize,
+    pub naive_secs: f64,
+    pub tiled_secs: f64,
+    /// naive_secs / tiled_secs (> 1 means tiled wins).
+    pub speedup: f64,
+}
+
+/// Naive-vs-tiled wall-clock on the raw attention kernels across sequence
+/// lengths (Table-3-style sweep at the attention level, no model around
+/// it). This is the datapoint behind the "tiled must not lose at long S"
+/// CI guard in `rust/benches/native_attention.rs`.
+pub fn kernel_table(
+    seqs: &[usize],
+    hq: usize,
+    hkv: usize,
+    d_head: usize,
+    causal: bool,
+    quick: bool,
+) -> Result<(String, Vec<KernelCell>)> {
+    use crate::attention::{attention, attention_with, tensor::Tensor, Kernel, Spec};
+    let bench = if quick { Bench::quick() } else { Bench::default() };
+    let spec = Spec {
+        hq,
+        hkv,
+        causal,
+        window: None,
+    };
+    let mut cells = Vec::new();
+    for &seq in seqs {
+        let mut rng = Pcg64::new(17);
+        let mut randn = |shape: &[usize]| -> Result<Tensor> {
+            let n: usize = shape.iter().product();
+            Tensor::from_vec(shape, (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect())
+        };
+        let q = randn(&[1, hq, seq, d_head])?;
+        let k = randn(&[1, hkv, seq, d_head])?;
+        let v = randn(&[1, hkv, seq, d_head])?;
+        let naive = bench.run(&format!("naive/s{seq}"), Some(seq as f64), || {
+            let out = attention(&q, &k, &v, spec).unwrap();
+            assert!(out.data[0].is_finite());
+        });
+        let tiled = bench.run(&format!("tiled/s{seq}"), Some(seq as f64), || {
+            let out = attention_with(&q, &k, &v, spec, Kernel::Tiled).unwrap();
+            assert!(out.data[0].is_finite());
+        });
+        cells.push(KernelCell {
+            seq,
+            naive_secs: naive.mean(),
+            tiled_secs: tiled.mean(),
+            speedup: naive.mean() / tiled.mean(),
+        });
+    }
+    let header: Vec<String> = ["Seq. Length", "naive (s)", "tiled (s)", "tiled speed-up"]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+    let rows: Vec<Vec<String>> = cells
+        .iter()
+        .map(|c| {
+            vec![
+                c.seq.to_string(),
+                format!("{:.4}", c.naive_secs),
+                format!("{:.4}", c.tiled_secs),
+                format!("{:.2}x", c.speedup),
+            ]
+        })
+        .collect();
+    Ok((markdown_table(&header, &rows), cells))
+}
+
+/// Serialize kernel-sweep cells for the bench regression guard.
+pub fn kernel_cells_to_json(cells: &[KernelCell]) -> Json {
+    Json::arr(cells.iter().map(|c| {
+        Json::obj(vec![
+            ("seq", Json::num(c.seq as f64)),
+            ("naive_secs", Json::num(c.naive_secs)),
+            ("tiled_secs", Json::num(c.tiled_secs)),
+            ("speedup", Json::num(c.speedup)),
+        ])
+    }))
 }
 
 /// §3.2.1: analytic complexity table for a family's variant zoo.

@@ -180,6 +180,9 @@ pub struct ServeConfig {
     pub workers: usize,
     /// Queue capacity before requests are shed (backpressure).
     pub queue_capacity: usize,
+    /// Attention lowering the workers run ("tiled" | "naive" on native).
+    /// `None` = the backend's default (tiled).
+    pub kernel: Option<String>,
 }
 
 impl Default for ServeConfig {
@@ -192,6 +195,7 @@ impl Default for ServeConfig {
             max_wait_ms: 5,
             workers: 2,
             queue_capacity: 64,
+            kernel: None,
         }
     }
 }
@@ -219,6 +223,9 @@ impl ServeConfig {
         }
         if let Some(n) = v.get("queue_capacity").and_then(|x| x.as_usize()) {
             c.queue_capacity = n;
+        }
+        if let Some(s) = v.get("kernel").and_then(|x| x.as_str()) {
+            c.kernel = Some(s.to_string());
         }
         Ok(c)
     }
@@ -281,6 +288,9 @@ mod tests {
         assert_eq!(c.max_batch, 4);
         assert_eq!(c.workers, 1);
         assert_eq!(c.family, "tiny");
+        assert_eq!(c.kernel, None);
+        let j = Json::parse(r#"{"kernel":"naive"}"#).unwrap();
+        assert_eq!(ServeConfig::from_json(&j).unwrap().kernel.as_deref(), Some("naive"));
     }
 
     #[test]

@@ -76,6 +76,9 @@ struct WorkerCtx {
     batch_dims: std::collections::BTreeMap<usize, usize>,
     fixed_batch: bool,
     vocab: usize,
+    /// Attention lowering override; `None` runs the backend default
+    /// (tiled streaming on native).
+    kernel: Option<String>,
 }
 
 /// Public handle; cheap to clone, shuts the engine down when the last
@@ -111,6 +114,14 @@ impl Engine {
         let entry = backend.variant(&cfg.family, &cfg.variant)?;
         let n_params = entry.n_params;
         let vocab = backend.family(&cfg.family)?.dims.vocab;
+        if let Some(k) = &cfg.kernel {
+            anyhow::ensure!(
+                backend.impls().iter().any(|i| *i == k.as_str()),
+                "kernel {k:?} unknown to the {} backend (have {:?})",
+                backend.name(),
+                backend.impls()
+            );
+        }
 
         // Resolve parameters on host once; workers share the vector.
         let params_host = match params_host {
@@ -178,6 +189,7 @@ impl Engine {
                 batch_dims: batch_dims.clone(),
                 fixed_batch: backend.fixed_fwd_batch(),
                 vocab,
+                kernel: cfg.kernel.clone(),
             };
             let jobq = Arc::clone(&jobq);
             let metrics = Arc::clone(&metrics);
@@ -338,17 +350,17 @@ fn worker_loop(ctx: WorkerCtx, jobq: Arc<JobQueue>, metrics: Arc<Metrics>) -> Re
             tokens[row * bucket..(row + 1) * bucket].copy_from_slice(&padded);
             lens.push(n);
         }
-        let logits = ctx
-            .backend
-            .forward(
-                &ctx.family,
-                &ctx.variant,
-                &ctx.params,
-                &tokens,
-                rows,
-                bucket,
-            )
-            .context("fwd execution")?; // [rows, bucket, vocab]
+        // [rows, bucket, vocab]; an explicit kernel override routes through
+        // the backend's attention-lowering entry point.
+        let logits = match &ctx.kernel {
+            Some(k) => ctx
+                .backend
+                .forward_impl(k, &ctx.family, &ctx.variant, &ctx.params, &tokens, rows, bucket),
+            None => ctx
+                .backend
+                .forward(&ctx.family, &ctx.variant, &ctx.params, &tokens, rows, bucket),
+        }
+        .context("fwd execution")?;
 
         let exec_ms = t_exec.elapsed().as_secs_f64() * 1e3;
         metrics.batches.fetch_add(1, Ordering::Relaxed);

@@ -22,6 +22,31 @@
 //! The PJRT path type-checks offline against `rust/xla-stub` and comes
 //! alive when a real `xla` crate is patched in (see `rust/README.md`).
 //!
+//! ## Attention kernels
+//!
+//! The native backend executes attention through one of two lowerings,
+//! selected by [`attention::Kernel`] (`SQA_KERNEL=naive|tiled`, `serve
+//! --kernel`, or the backend's `forward_impl`):
+//!
+//! * **naive** — the S×S-materializing oracle; simple by design, kept as
+//!   the reference every differential suite compares against.
+//! * **tiled** (default) — flash-style streaming kernel: fixed query/key
+//!   tiles, online softmax, mask-aware key-tile skipping, parallelized
+//!   across `(batch, head, query-tile)` on the [`util::threadpool`].
+//!
+//! The online softmax maintains, per query row, a running maximum `m`, a
+//! running normalizer `l`, and an unnormalized output `o`; consuming a key
+//! tile rescales the pair by `α = exp(m_old − m_new)` before accumulating
+//! `exp(s − m_new)` terms. The test suites pin the invariants this
+//! transformation must preserve: agreement with the oracle to 1e-4 across
+//! the full spec grid including non-tile-aligned lengths
+//! (`rust/tests/tiled_differential.rs`); probability rows summing to 1;
+//! insensitivity to keys/values outside the visible window; visited key
+//! tiles exactly matching [`attention::visible_range`]
+//! (`rust/tests/properties.rs`); and totality — all-masked or
+//! `-inf`-saturated rows yield zeros, never NaN, and large-magnitude
+//! logits never overflow the accumulator (`attention::tiled` unit tests).
+//!
 //! ## Modules
 //!
 //! * [`runtime`] — the [`runtime::Backend`] trait, the native backend +
@@ -32,9 +57,10 @@
 //!   prompt-processing scenario): length-bucket router, dynamic batcher,
 //!   worker pool, backpressure, TCP front-end.
 //! * [`data`] — deterministic synthetic corpora + tokenizer + batcher.
-//! * [`attention`] — the pure-Rust attention oracle covering the whole
-//!   variant zoo (MHA/GQA/MQA/SQA/sSQA/xSQA/xSMQA/SWA); the native
-//!   backend's forward path is built on it.
+//! * [`attention`] — both attention kernels (naive oracle + tiled
+//!   streaming) covering the whole variant zoo
+//!   (MHA/GQA/MQA/SQA/sSQA/xSQA/xSMQA/SWA); the native backend's forward
+//!   path is built on them.
 //! * [`flops`] — the paper's §3.2.1 analytic complexity model.
 //! * [`bench_harness`] — regenerates every table of the paper's evaluation.
 //! * [`util`] — substrates the offline image lacks crates for: JSON,

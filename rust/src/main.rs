@@ -5,7 +5,7 @@
 //!   serve       start the encoder-serving engine (TCP, JSON lines)
 //!   encode      one-shot client call against a running server
 //!   bench       regenerate paper tables: table1 | table2 | table3 |
-//!               complexity | ablation | all
+//!               complexity | ablation | kernels | all
 //!   flops       analytic FLOPs/KV-cache model for a (family, variant, seq)
 //!   diagram     ASCII head-wiring diagram (paper figures 2-6)
 //!   inspect     list the backend's model catalog and parameter layouts
@@ -65,9 +65,9 @@ COMMANDS
   train     --family tiny --variant sqa --steps 200 --lr 1e-2 --seed 42
             [--checkpoint-dir DIR --checkpoint-every N --report OUT.json]
   serve     --family tiny --variant sqa --addr 127.0.0.1:7433
-            [--max-batch 8 --max-wait-ms 5 --workers 2]
+            [--max-batch 8 --max-wait-ms 5 --workers 2 --kernel tiled|naive]
   encode    --addr 127.0.0.1:7433 (--text \"...\" | --tokens 1,2,3 | --metrics)
-  bench     table1|table2|table3|complexity|ablation|all
+  bench     table1|table2|table3|complexity|ablation|kernels|all
             [--steps N --max-seq S --quick --out FILE.md]
   flops     --family bench --variant sqa --seq 8192 [--batch 1]
   diagram   --variant sqa --h-total 16   (or --hq 8 --hkv 4)
@@ -75,6 +75,9 @@ COMMANDS
 
 Backend: native by default; SQA_BACKEND=pjrt (with --features pjrt builds
 and an artifacts/ dir from `make artifacts`) selects the XLA path.
+Kernel:  the native backend runs the tiled streaming attention kernel by
+default; SQA_KERNEL=naive (or `serve --kernel naive`) selects the S×S
+oracle for differential runs. `bench kernels` sweeps naive vs tiled.
 ";
 
 fn cmd_train(mut args: Args) -> Result<()> {
@@ -132,6 +135,7 @@ fn cmd_serve(mut args: Args) -> Result<()> {
         max_wait_ms: args.usize("max-wait-ms", 5)? as u64,
         workers: args.usize("workers", 2)?,
         queue_capacity: args.usize("queue", 64)?,
+        kernel: args.str_opt("kernel"),
     };
     let ckpt = args.str_opt("checkpoint");
     args.finish()?;
@@ -226,13 +230,25 @@ fn cmd_bench(mut args: Args) -> Result<()> {
                 let md = bench_harness::ablation_impl(backend, 1024)?;
                 output.push_str(&format!("\n## Ablation — attention lowerings\n\n{md}"));
             }
+            "kernels" => {
+                let seqs: Vec<usize> = [512usize, 1024, 2048, 4096]
+                    .into_iter()
+                    .filter(|&s| max_seq == 0 || s <= max_seq)
+                    .collect();
+                let (md, cells) = bench_harness::kernel_table(&seqs, 8, 4, 32, true, quick)?;
+                output.push_str(&format!("\n## Kernels — naive vs tiled attention\n\n{md}"));
+                std::fs::write(
+                    "bench_kernels.json",
+                    bench_harness::kernel_cells_to_json(&cells).to_string(),
+                )?;
+            }
             other => bail!("unknown bench {other:?}"),
         }
         Ok(())
     };
 
     if which == "all" {
-        for name in ["complexity", "table3", "ablation", "table2", "table1"] {
+        for name in ["complexity", "kernels", "table3", "ablation", "table2", "table1"] {
             run_one(name, &backend, &mut output)?;
         }
     } else {

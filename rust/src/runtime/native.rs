@@ -1,13 +1,17 @@
 //! Native backend: the full SQA stack in pure Rust — no Python, no XLA,
 //! no artifacts.
 //!
-//! * **Forward** composes token embedding, residual [`crate::attention::sqa_layer`]
-//!   blocks and an LM head; serving batches fan out one row per
-//!   [`crate::util::threadpool::ThreadPool`] job.
+//! * **Forward** composes token embedding, residual
+//!   [`crate::attention::sqa_layer_with`] blocks and an LM head, running the
+//!   tiled streaming attention kernel by default (the naive S×S oracle on
+//!   request, see [`crate::attention::Kernel`]). Serving batches fan out one
+//!   row per [`crate::util::threadpool::ThreadPool`] job; a single row fans
+//!   its attention out across (head, query-tile) jobs instead.
 //! * **Training** is a fused forward+backward+AdamW step over the shared
-//!   state layout `[params | m | v | loss, acc]`. The backward pass
-//!   recomputes attention probabilities (checkpointing) instead of storing
-//!   the `[s, s]` score matrices; its math is differentially tested against
+//!   state layout `[params | m | v | loss, acc]`. The forward half streams
+//!   through the tiled kernel; the backward pass recomputes attention
+//!   probabilities row-by-row (checkpointing) instead of storing the
+//!   `[s, s]` score matrices; its math is differentially tested against
 //!   the forward path (train-step loss vs `eval` on identical inputs) and
 //!   against the oracle in `rust/tests/integration.rs`.
 //! * **Eval** reuses the forward path and computes cross-entropy on host.
@@ -19,13 +23,13 @@
 //! the analytic FLOPs model.
 
 use crate::attention::tensor::Tensor;
-use crate::attention::{sqa_layer, visible_range, Spec};
+use crate::attention::{sqa_layer_with, tiled, visible_range, Kernel, Spec};
 use crate::runtime::backend::Backend;
 use crate::runtime::catalog::{self, Geometry, Layout};
 use crate::runtime::manifest::FamilyEntry;
 use crate::util::rng::Pcg64;
 use crate::util::threadpool::ThreadPool;
-use anyhow::{bail, ensure, Context, Result};
+use anyhow::{ensure, Context, Result};
 use std::collections::BTreeMap;
 use std::sync::{mpsc, Arc};
 
@@ -39,6 +43,7 @@ const INIT_STD: f32 = 0.02;
 struct Model {
     lay: Layout,
     spec: Spec,
+    kernel: Kernel,
 }
 
 /// Pure-Rust implementation of [`Backend`].
@@ -46,6 +51,9 @@ pub struct NativeBackend {
     families: BTreeMap<String, FamilyEntry>,
     geoms: BTreeMap<String, Geometry>,
     pool: ThreadPool,
+    /// Default attention lowering (`SQA_KERNEL` env; tiled unless told
+    /// otherwise). `forward_impl` overrides it per call.
+    kernel: Kernel,
 }
 
 impl Default for NativeBackend {
@@ -56,6 +64,11 @@ impl Default for NativeBackend {
 
 impl NativeBackend {
     pub fn new() -> Self {
+        Self::with_kernel(Kernel::from_env())
+    }
+
+    /// Backend with an explicit default attention kernel.
+    pub fn with_kernel(kernel: Kernel) -> Self {
         let (families, geoms) = catalog::builtin();
         let workers = std::thread::available_parallelism()
             .map(|n| n.get())
@@ -65,6 +78,7 @@ impl NativeBackend {
             families,
             geoms,
             pool: ThreadPool::new(workers, 256),
+            kernel,
         }
     }
 
@@ -75,6 +89,10 @@ impl NativeBackend {
     }
 
     fn model(&self, family: &str, variant: &str) -> Result<Model> {
+        self.model_with_kernel(family, variant, self.kernel)
+    }
+
+    fn model_with_kernel(&self, family: &str, variant: &str, kernel: Kernel) -> Result<Model> {
         let fam = Backend::family(self, family)?;
         let var = fam
             .variants
@@ -88,6 +106,7 @@ impl NativeBackend {
                 causal: fam.causal,
                 window: var.cfg.window,
             },
+            kernel,
         })
     }
 
@@ -112,6 +131,45 @@ impl NativeBackend {
             tokens.len()
         );
         Ok(())
+    }
+
+    /// Forward with an explicit model (lets `forward_impl` override the
+    /// kernel). A single row runs on the caller thread and fans its tiled
+    /// attention out across the pool; multi-row batches fan out one row per
+    /// pool job instead (pool jobs must not submit nested jobs — the
+    /// bounded queue could deadlock).
+    fn forward_model(
+        &self,
+        model: Model,
+        params: &[f32],
+        tokens: &[i32],
+        batch: usize,
+        seq: usize,
+    ) -> Result<Vec<f32>> {
+        self.check_batch(&model, params, tokens, batch, seq)?;
+        let row_len = seq * model.lay.vocab;
+        if batch == 1 {
+            return forward_row(&model, params, tokens, Some(&self.pool));
+        }
+        let params = Arc::new(params.to_vec());
+        let tokens = Arc::new(tokens.to_vec());
+        let (tx, rx) = mpsc::channel();
+        for ib in 0..batch {
+            let params = Arc::clone(&params);
+            let tokens = Arc::clone(&tokens);
+            let tx = tx.clone();
+            self.pool.submit(move || {
+                let row = &tokens[ib * seq..(ib + 1) * seq];
+                let _ = tx.send((ib, forward_row(&model, &params, row, None)));
+            });
+        }
+        drop(tx);
+        let mut out = vec![0.0f32; batch * row_len];
+        for _ in 0..batch {
+            let (ib, logits) = rx.recv().context("forward worker lost")?;
+            out[ib * row_len..(ib + 1) * row_len].copy_from_slice(&logits?);
+        }
+        Ok(out)
     }
 }
 
@@ -176,30 +234,7 @@ impl Backend for NativeBackend {
         seq: usize,
     ) -> Result<Vec<f32>> {
         let model = self.model(family, variant)?;
-        self.check_batch(&model, params, tokens, batch, seq)?;
-        let row_len = seq * model.lay.vocab;
-        if batch == 1 {
-            return forward_row(&model, params, tokens);
-        }
-        let params = Arc::new(params.to_vec());
-        let tokens = Arc::new(tokens.to_vec());
-        let (tx, rx) = mpsc::channel();
-        for ib in 0..batch {
-            let params = Arc::clone(&params);
-            let tokens = Arc::clone(&tokens);
-            let tx = tx.clone();
-            self.pool.submit(move || {
-                let row = &tokens[ib * seq..(ib + 1) * seq];
-                let _ = tx.send((ib, forward_row(&model, &params, row)));
-            });
-        }
-        drop(tx);
-        let mut out = vec![0.0f32; batch * row_len];
-        for _ in 0..batch {
-            let (ib, logits) = rx.recv().context("forward worker lost")?;
-            out[ib * row_len..(ib + 1) * row_len].copy_from_slice(&logits?);
-        }
-        Ok(out)
+        self.forward_model(model, params, tokens, batch, seq)
     }
 
     fn train_step(
@@ -315,7 +350,7 @@ impl Backend for NativeBackend {
     }
 
     fn impls(&self) -> Vec<&'static str> {
-        vec!["native"]
+        vec!["tiled", "naive"]
     }
 
     fn forward_impl(
@@ -328,10 +363,10 @@ impl Backend for NativeBackend {
         batch: usize,
         seq: usize,
     ) -> Result<Vec<f32>> {
-        if impl_ != "native" {
-            bail!("native backend has no attention impl {impl_:?}");
-        }
-        self.forward(family, variant, params, tokens, batch, seq)
+        let kernel = Kernel::parse(impl_)
+            .with_context(|| format!("native backend has no attention impl {impl_:?}"))?;
+        let model = self.model_with_kernel(family, variant, kernel)?;
+        self.forward_model(model, params, tokens, batch, seq)
     }
 }
 
@@ -370,10 +405,18 @@ fn weight_tensor(params: &[f32], (off, len): (usize, usize), shape: &[usize]) ->
 
 /// Forward one sequence: tokens `[s]` -> logits `[s * vocab]`.
 ///
-/// Built on [`sqa_layer`] so the serving path exercises the oracle's fused
-/// layer; the training path below re-derives the same math with explicit
-/// buffers (and the two are differentially tested against each other).
-fn forward_row(model: &Model, params: &[f32], tokens: &[i32]) -> Result<Vec<f32>> {
+/// Built on [`sqa_layer_with`] so the serving path exercises the shared
+/// attention kernels (tiled streaming by default, naive oracle on request);
+/// the training path below re-derives the same math with explicit buffers
+/// (and the two are differentially tested against each other). `pool`
+/// fans the tiled attention out across (head, query-tile) jobs — pass
+/// `None` when already running on a pool worker.
+fn forward_row(
+    model: &Model,
+    params: &[f32],
+    tokens: &[i32],
+    pool: Option<&ThreadPool>,
+) -> Result<Vec<f32>> {
     let lay = &model.lay;
     let (s, d, dh) = (tokens.len(), lay.d_model, lay.d_head);
     let (dq, dkv) = (lay.hq * dh, lay.hkv * dh);
@@ -392,7 +435,7 @@ fn forward_row(model: &Model, params: &[f32], tokens: &[i32]) -> Result<Vec<f32>
         let wk = weight_tensor(params, lay.wk(l), &[d, dkv]);
         let wv = weight_tensor(params, lay.wv(l), &[d, dkv]);
         let wo = weight_tensor(params, lay.wo(l), &[dq, d]);
-        let a = sqa_layer(&x, &wq, &wk, &wv, &wo, dh, model.spec)?;
+        let a = sqa_layer_with(&x, &wq, &wk, &wv, &wo, dh, model.spec, model.kernel, pool)?;
         for (xv, av) in x.data.iter_mut().zip(&a.data) {
             *xv += av;
         }
@@ -551,20 +594,63 @@ fn train_row(
         let k = matmul(&x, &params[wk_o..wk_o + wk_n], s, d, dkv_cols);
         let v = matmul(&x, &params[wv_o..wv_o + wv_n], s, d, dkv_cols);
         let mut o = vec![0.0f32; s * dq_cols];
-        for h in 0..hq {
-            let hk = h / group;
-            for i in 0..s {
-                let (lo, hi) = visible_range(i, s, spec);
-                attn_probs(&q, &k, i, h, hk, s, dh, dq_cols, dkv_cols, scale, lo, hi, &mut probs);
-                let oi = i * dq_cols + h * dh;
-                for j in lo..hi {
-                    let p = probs[j - lo];
-                    if p == 0.0 {
-                        continue;
-                    }
-                    let vj = &v[j * dkv_cols + hk * dh..][..dh];
-                    for (ov, &vv) in o[oi..oi + dh].iter_mut().zip(vj) {
-                        *ov += p * vv;
+        match model.kernel {
+            // Default forward: stream the head-interleaved [s, H·dh]
+            // projections through the tiled kernel (the backward below still
+            // recomputes row softmaxes — checkpointing keeps it streaming).
+            Kernel::Tiled => {
+                for h in 0..hq {
+                    let hk = h / group;
+                    tiled::stream_head(
+                        &q,
+                        dq_cols,
+                        h * dh,
+                        &k,
+                        dkv_cols,
+                        hk * dh,
+                        &v,
+                        &mut o,
+                        dq_cols,
+                        h * dh,
+                        s,
+                        dh,
+                        spec,
+                        tiled::TileConfig::default(),
+                        scale,
+                    );
+                }
+            }
+            Kernel::Naive => {
+                for h in 0..hq {
+                    let hk = h / group;
+                    for i in 0..s {
+                        let (lo, hi) = visible_range(i, s, spec);
+                        attn_probs(
+                            &q,
+                            &k,
+                            i,
+                            h,
+                            hk,
+                            s,
+                            dh,
+                            dq_cols,
+                            dkv_cols,
+                            scale,
+                            lo,
+                            hi,
+                            &mut probs,
+                        );
+                        let oi = i * dq_cols + h * dh;
+                        for j in lo..hi {
+                            let p = probs[j - lo];
+                            if p == 0.0 {
+                                continue;
+                            }
+                            let vj = &v[j * dkv_cols + hk * dh..][..dh];
+                            for (ov, &vv) in o[oi..oi + dh].iter_mut().zip(vj) {
+                                *ov += p * vv;
+                            }
+                        }
                     }
                 }
             }
@@ -788,6 +874,30 @@ mod tests {
             losses[29] < losses[0] - 2.0,
             "no overfit on fixed batch: {losses:?}"
         );
+    }
+
+    #[test]
+    fn forward_impls_agree_and_tiled_is_default() {
+        let b = backend();
+        let params = b.init_params("tiny", "sqa", 2).unwrap();
+        let tokens: Vec<i32> = (0..16).map(|i| (i * 97 % 2048) as i32).collect();
+        let tiled = b
+            .forward_impl("tiled", "tiny", "sqa", &params, &tokens, 1, 16)
+            .unwrap();
+        let naive = b
+            .forward_impl("naive", "tiny", "sqa", &params, &tokens, 1, 16)
+            .unwrap();
+        assert_eq!(tiled.len(), naive.len());
+        let worst = tiled
+            .iter()
+            .zip(&naive)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(worst < 1e-3, "kernels diverge by {worst}");
+        // The plain forward entry point runs the default (tiled) path.
+        let default = b.forward("tiny", "sqa", &params, &tokens, 1, 16).unwrap();
+        assert_eq!(default, tiled);
+        assert_eq!(b.impls(), vec!["tiled", "naive"]);
     }
 
     #[test]

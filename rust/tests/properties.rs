@@ -1,6 +1,8 @@
 //! Property-based tests (custom harness, `sqa::util::prop`) over the
-//! coordinator invariants and the native attention oracle.
+//! coordinator invariants, the native attention oracle, and the tiled
+//! streaming kernel's online-softmax invariants.
 
+use sqa::attention::tiled::{attention_tiled_cfg, visited_key_tiles, TileConfig};
 use sqa::attention::{attention, tensor::Tensor, Spec};
 use sqa::coordinator::batcher::DynamicBatcher;
 use sqa::coordinator::request::EncodeRequest;
@@ -79,6 +81,145 @@ fn prop_uniform_attention_permutation_invariant() {
         let out2 = attention(&q, &k, &v2, Spec::full(2, 1)).map_err(|e| e.to_string())?;
         if out1.max_abs_diff(&out2) > 1e-5 {
             return Err("uniform attention not permutation invariant".into());
+        }
+        Ok(())
+    });
+}
+
+/// Tiled online softmax normalizes: with all-ones values, every output
+/// coordinate is exactly the row's probability mass, so it must be 1 for
+/// every (Hq, Hkv, S, tile, mask) drawn — rows always see at least
+/// themselves, hence no degenerate zero rows here.
+#[test]
+fn prop_tiled_softmax_rows_sum_to_one() {
+    let geom = Pair(
+        Pair(UsizeRange { lo: 1, hi: 3 }, UsizeRange { lo: 1, hi: 2 }), // (group, hkv)
+        Pair(
+            Pair(UsizeRange { lo: 1, hi: 25 }, UsizeRange { lo: 1, hi: 9 }), // (s, tile)
+            Choice(vec![None, Some(1usize), Some(3), Some(8)]),
+        ),
+    );
+    let mut rng_seed = 1000u64;
+    check(21, 50, &geom, |((group, hkv), ((s, tile), window))| {
+        rng_seed += 1;
+        let hq = group * hkv;
+        let d = 4;
+        let mut rng = Pcg64::new(rng_seed);
+        let q = randn_tensor(&[1, hq, *s, d], &mut rng);
+        let k = randn_tensor(&[1, *hkv, *s, d], &mut rng);
+        let v = Tensor::from_vec(&[1, *hkv, *s, d], vec![1.0; *hkv * *s * d]).unwrap();
+        let spec = Spec {
+            hq,
+            hkv: *hkv,
+            causal: window.is_none(),
+            window: *window,
+        };
+        let cfg = TileConfig::new(*tile, *tile).map_err(|e| e.to_string())?;
+        let out = attention_tiled_cfg(&q, &k, &v, spec, cfg).map_err(|e| e.to_string())?;
+        for (idx, &x) in out.data.iter().enumerate() {
+            if (x - 1.0).abs() > 1e-5 {
+                return Err(format!("row mass {x} != 1 at flat index {idx}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Keys/values outside a row's visible window must not influence that row:
+/// shuffling (K, V) jointly at the invisible positions leaves the tiled
+/// output of the probed row unchanged.
+#[test]
+fn prop_tiled_invariant_to_kv_outside_window() {
+    let gen = Pair(
+        Pair(UsizeRange { lo: 4, hi: 24 }, UsizeRange { lo: 1, hi: 4 }), // (s, window)
+        UsizeRange { lo: 1, hi: 6 },                                     // tile
+    );
+    let mut rng_seed = 2000u64;
+    check(23, 40, &gen, |((s, window), tile)| {
+        rng_seed += 1;
+        let (hq, hkv, d) = (2usize, 1usize, 4usize);
+        let mut rng = Pcg64::new(rng_seed);
+        let q = randn_tensor(&[1, hq, *s, d], &mut rng);
+        let k = randn_tensor(&[1, hkv, *s, d], &mut rng);
+        let v = randn_tensor(&[1, hkv, *s, d], &mut rng);
+        let spec = Spec {
+            hq,
+            hkv,
+            causal: rng.bool(0.5),
+            window: Some(*window),
+        };
+        let cfg = TileConfig::new(*tile, *tile).map_err(|e| e.to_string())?;
+        let out1 = attention_tiled_cfg(&q, &k, &v, spec, cfg).map_err(|e| e.to_string())?;
+        // Probe a random row; rotate K/V rows jointly outside its window.
+        let i = rng.range_usize(0, *s);
+        let (lo, hi) = sqa::attention::visible_range(i, *s, spec);
+        let outside: Vec<usize> = (0..*s).filter(|j| *j < lo || *j >= hi).collect();
+        if outside.is_empty() {
+            return Ok(()); // whole sequence visible, nothing to scramble
+        }
+        let mut k2 = k.clone();
+        let mut v2 = v.clone();
+        for (a, b) in outside.iter().zip(outside.iter().cycle().skip(1)) {
+            for dd in 0..d {
+                k2.set4(0, 0, *b, dd, k.get4(0, 0, *a, dd));
+                v2.set4(0, 0, *b, dd, v.get4(0, 0, *a, dd));
+            }
+        }
+        let out2 = attention_tiled_cfg(&q, &k2, &v2, spec, cfg).map_err(|e| e.to_string())?;
+        for h in 0..hq {
+            for dd in 0..d {
+                let (a, b) = (out1.get4(0, h, i, dd), out2.get4(0, h, i, dd));
+                if (a - b).abs() > 1e-5 {
+                    return Err(format!(
+                        "row {i} (visible [{lo},{hi})) changed: {a} vs {b}"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The key tiles the kernel visits are exactly the tiles intersecting some
+/// row's `visible_range` — no tile is skipped that holds a visible key, and
+/// no fully-masked tile is touched.
+#[test]
+fn prop_visited_key_tiles_agree_with_visible_range() {
+    let gen = Pair(
+        Pair(UsizeRange { lo: 1, hi: 40 }, UsizeRange { lo: 1, hi: 7 }), // (s, k_tile)
+        Pair(
+            Choice(vec![None, Some(1usize), Some(2), Some(5)]),
+            Choice(vec![false, true]),
+        ),
+    );
+    check(29, 150, &gen, |((s, k_tile), (window, causal))| {
+        let spec = Spec {
+            hq: 1,
+            hkv: 1,
+            causal: *causal,
+            window: *window,
+        };
+        let q_tile = 4usize;
+        let mut i0 = 0;
+        while i0 < *s {
+            let i1 = (i0 + q_tile).min(*s);
+            let visited: std::collections::BTreeSet<usize> =
+                visited_key_tiles(i0, i1, *s, spec, *k_tile).collect();
+            let mut expect = std::collections::BTreeSet::new();
+            for i in i0..i1 {
+                let (lo, hi) = sqa::attention::visible_range(i, *s, spec);
+                for t in lo / *k_tile..hi.div_ceil(*k_tile) {
+                    if (t * *k_tile).max(lo) < ((t + 1) * *k_tile).min(hi) {
+                        expect.insert(t);
+                    }
+                }
+            }
+            if visited != expect {
+                return Err(format!(
+                    "qtile [{i0},{i1}): visited {visited:?} != visible {expect:?}"
+                ));
+            }
+            i0 = i1;
         }
         Ok(())
     });

@@ -22,6 +22,7 @@ fn cfg() -> ServeConfig {
         max_wait_ms: 3,
         workers: 1,
         queue_capacity: 64,
+        kernel: None,
     }
 }
 
@@ -89,6 +90,32 @@ fn padding_does_not_change_result() {
     assert_eq!(short.top, same.top);
     engine.shutdown();
     engine2.shutdown();
+}
+
+#[test]
+fn kernel_override_serves_and_matches_default() {
+    // The serving path runs the tiled kernel by default; forcing the naive
+    // oracle through the engine must serve the same top-k (differential
+    // check through the whole batching/padding stack).
+    let tiled = Engine::start(rt(), &cfg(), None).unwrap();
+    let want = tiled.encode(vec![7, 8, 9, 10]).unwrap();
+    tiled.shutdown();
+    let mut c = cfg();
+    c.kernel = Some("naive".into());
+    let naive = Engine::start(rt(), &c, None).unwrap();
+    let got = naive.encode(vec![7, 8, 9, 10]).unwrap();
+    naive.shutdown();
+    let ids = |r: &sqa::coordinator::EncodeResponse| -> Vec<i32> {
+        r.top.iter().map(|(i, _)| *i).collect()
+    };
+    assert_eq!(ids(&want), ids(&got), "kernels rank tokens differently");
+}
+
+#[test]
+fn unknown_kernel_is_rejected_at_startup() {
+    let mut c = cfg();
+    c.kernel = Some("pallas".into());
+    assert!(Engine::start(rt(), &c, None).is_err());
 }
 
 #[test]

@@ -1,0 +1,144 @@
+//! Differential suite: the tiled streaming kernel vs the naive S×S oracle
+//! across the full spec grid — every head geometry of the paper's variant
+//! zoo, both mask kinds, and sequence lengths chosen to straddle the tile
+//! boundaries (S = 1, T−1, T, T+1, 3·T+5 for tile size T).
+//!
+//! Tolerance is 1e-4: the two kernels share the math but not the summation
+//! order (online rescaling vs two-pass softmax), so agreement here pins the
+//! streaming algebra, the mask-aware block skipping, and the SQA head
+//! sharing all at once.
+
+use sqa::attention::tiled::{attention_tiled_cfg, attention_tiled_parallel, TileConfig};
+use sqa::attention::{attention, attention_with, tensor::Tensor, Kernel, Spec};
+use sqa::util::rng::Pcg64;
+use sqa::util::threadpool::ThreadPool;
+
+const TILE: usize = 8;
+const TOL: f32 = 1e-4;
+
+fn randn(shape: &[usize], rng: &mut Pcg64) -> Tensor {
+    let n: usize = shape.iter().product();
+    Tensor::from_vec(shape, (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect()).unwrap()
+}
+
+/// (label, Hq, Hkv) — the head-geometry grid from the paper:
+/// MHA (Hq = Hkv = H), GQA grouping, MQA (Hkv = 1), SQA (Hq halved), and
+/// extreme SQA (Hq = Hkv = 2 vs an 8-head baseline).
+const GEOMETRIES: &[(&str, usize, usize)] = &[
+    ("mha", 8, 8),
+    ("gqa", 8, 2),
+    ("mqa", 4, 1),
+    ("sqa", 4, 2),
+    ("xsqa", 2, 2),
+];
+
+/// (causal, window) mask grid.
+const MASKS: &[(bool, Option<usize>)] = &[
+    (false, None),          // full bidirectional
+    (true, None),           // causal
+    (false, Some(3)),       // symmetric sliding window
+    (true, Some(3)),        // causal sliding window
+    (true, Some(TILE + 3)), // window wider than a tile
+];
+
+/// Sequence lengths straddling the tile size: 1, T−1, T, T+1, 3·T+5.
+const SEQS: &[usize] = &[1, TILE - 1, TILE, TILE + 1, 3 * TILE + 5];
+
+fn check_grid(run: impl Fn(&Tensor, &Tensor, &Tensor, Spec) -> Tensor, label: &str) {
+    let mut seed = 100;
+    for &(geom, hq, hkv) in GEOMETRIES {
+        for &(causal, window) in MASKS {
+            for &s in SEQS {
+                seed += 1;
+                let mut rng = Pcg64::new(seed);
+                let d = 4;
+                let q = randn(&[2, hq, s, d], &mut rng);
+                let k = randn(&[2, hkv, s, d], &mut rng);
+                let v = randn(&[2, hkv, s, d], &mut rng);
+                let spec = Spec {
+                    hq,
+                    hkv,
+                    causal,
+                    window,
+                };
+                let want = attention(&q, &k, &v, spec).unwrap();
+                let got = run(&q, &k, &v, spec);
+                let diff = want.max_abs_diff(&got);
+                assert!(
+                    diff < TOL,
+                    "{label}: {geom} (Hq={hq} Hkv={hkv}) causal={causal} \
+                     window={window:?} s={s}: diff {diff}"
+                );
+                assert!(got.data.iter().all(|x| x.is_finite()));
+            }
+        }
+    }
+}
+
+#[test]
+fn tiled_matches_oracle_across_spec_grid() {
+    let cfg = TileConfig::new(TILE, TILE).unwrap();
+    check_grid(
+        |q, k, v, spec| attention_tiled_cfg(q, k, v, spec, cfg).unwrap(),
+        "serial",
+    );
+}
+
+#[test]
+fn tiled_matches_oracle_with_rectangular_tiles() {
+    // q_tile != k_tile, and deliberately awkward sizes.
+    let cfg = TileConfig::new(5, 3).unwrap();
+    check_grid(
+        |q, k, v, spec| attention_tiled_cfg(q, k, v, spec, cfg).unwrap(),
+        "rect",
+    );
+}
+
+#[test]
+fn parallel_tiled_matches_oracle_across_spec_grid() {
+    let pool = ThreadPool::new(4, 128);
+    let cfg = TileConfig::new(TILE, TILE).unwrap();
+    check_grid(
+        |q, k, v, spec| attention_tiled_parallel(q, k, v, spec, cfg, &pool).unwrap(),
+        "parallel",
+    );
+}
+
+#[test]
+fn default_kernel_dispatch_is_tiled_and_matches_oracle() {
+    // attention_with(Tiled) on default 64-tiles, at sizes around that tile.
+    let mut rng = Pcg64::new(9);
+    for s in [1usize, 63, 64, 65, 197] {
+        let (hq, hkv, d) = (4, 2, 8);
+        let q = randn(&[1, hq, s, d], &mut rng);
+        let k = randn(&[1, hkv, s, d], &mut rng);
+        let v = randn(&[1, hkv, s, d], &mut rng);
+        let spec = Spec::causal(hq, hkv);
+        let want = attention_with(&q, &k, &v, spec, Kernel::Naive).unwrap();
+        let got = attention_with(&q, &k, &v, spec, Kernel::Tiled).unwrap();
+        assert!(
+            want.max_abs_diff(&got) < TOL,
+            "s={s}: {}",
+            want.max_abs_diff(&got)
+        );
+    }
+}
+
+#[test]
+fn kernel_parsing_round_trips() {
+    assert_eq!(Kernel::parse("naive").unwrap(), Kernel::Naive);
+    assert_eq!(Kernel::parse("tiled").unwrap(), Kernel::Tiled);
+    assert_eq!(Kernel::default(), Kernel::Tiled);
+    assert_eq!(Kernel::Tiled.name(), "tiled");
+    assert!(Kernel::parse("pallas").is_err());
+}
+
+#[test]
+fn tiled_rejects_bad_shapes_like_the_oracle() {
+    let mut rng = Pcg64::new(5);
+    let q = randn(&[1, 3, 4, 2], &mut rng);
+    let k = randn(&[1, 2, 4, 2], &mut rng);
+    // Hq=3 not a multiple of Hkv=2: both kernels must refuse.
+    assert!(attention(&q, &k, &k, Spec::full(3, 2)).is_err());
+    assert!(attention_with(&q, &k, &k, Spec::full(3, 2), Kernel::Tiled).is_err());
+}
