@@ -1,27 +1,46 @@
-//! Native attention bench + kernel regression guard.
+//! Native attention bench + kernel/GEMM regression guards.
 //!
-//! Two tables:
+//! Three tables:
 //!   1. naive-vs-tiled sweep across sequence lengths (the streaming
 //!      kernel's raison d'être: no S×S buffer, mask-aware block skipping);
 //!   2. the variant zoo (MHA → xSMQA) on the tiled kernel — the XLA-free
-//!      datapoint for the paper's H/Hq scaling law.
+//!      datapoint for the paper's H/Hq scaling law;
+//!   3. end-to-end single-row forward, blocked GEMMs ("tiled") vs the PR-2
+//!      scalar-loop path ("tiled+scalar") on the bench catalog model —
+//!      the perf trajectory recorded in BENCH_attention.json.
+//!
+//! Plus a fixed-shape raw-GEMM comparison (dense_sm LM-head shape,
+//! 128×256 @ 256×4096) of `linalg` blocked vs scalar.
 //!
 //! Flags (after `--`):
-//!   --seqs 512,4096     sweep points            (default 1024,4096)
-//!   --seq N             variant-zoo seq         (default 1024)
-//!   --json FILE         write the comparison JSON
-//!   --enforce N         exit(1) if tiled is slower than naive at any
-//!                       swept S >= N (the CI smoke guard uses 4096)
-//!   --quick             fewer reps
+//!   --seqs 512,4096       kernel sweep points          (default 1024,4096)
+//!   --seq N               variant-zoo seq              (default 1024)
+//!   --e2e-seqs 4096,16384 e2e fwd sweep points         (default 4096,16384;
+//!                         "none" skips the e2e sweep)
+//!   --e2e-variant V       e2e fwd variant              (default sqa)
+//!   --json FILE           comparison JSON              (default
+//!                         BENCH_attention.json at the repo root, so the
+//!                         perf trajectory persists across PRs)
+//!   --enforce N           exit(1) if tiled is slower than naive at any
+//!                         swept S >= N (the CI smoke guard uses 4096)
+//!   --enforce-linalg      exit(1) if the blocked GEMM loses to the scalar
+//!                         loops at the fixed dense_sm shape
+//!   --quick               fewer reps
 //!
 //! CI runs: `cargo bench --bench native_attention -- --seqs 1024,4096
-//! --quick --enforce 4096 --json native_attention.json`
+//! --quick --enforce 4096 --enforce-linalg --e2e-seqs 1024`
 
 use sqa::attention::{attention_with, tensor::Tensor, Kernel, Spec};
-use sqa::bench_harness::{kernel_cells_to_json, kernel_table};
+use sqa::bench_harness::{
+    forward_impl_table, impl_cells_to_json, kernel_cells_to_json, kernel_table,
+};
+use sqa::linalg;
+use sqa::runtime::{Backend, NativeBackend};
 use sqa::util::bench::{markdown_table, Bench};
 use sqa::util::json::Json;
 use sqa::util::rng::Pcg64;
+use std::sync::Arc;
+use std::time::Duration;
 
 fn randn(shape: &[usize], rng: &mut Pcg64) -> Tensor {
     let n: usize = shape.iter().product();
@@ -31,8 +50,11 @@ fn randn(shape: &[usize], rng: &mut Pcg64) -> Tensor {
 struct Flags {
     seqs: Vec<usize>,
     zoo_seq: usize,
+    e2e_seqs: Vec<usize>,
+    e2e_variant: String,
     json: Option<String>,
     enforce: Option<usize>,
+    enforce_linalg: bool,
     quick: bool,
 }
 
@@ -43,9 +65,15 @@ fn parse_flags() -> Flags {
             .ok()
             .and_then(|s| s.parse().ok())
             .unwrap_or(1024),
-        json: None,
+        e2e_seqs: vec![4096, 16384],
+        e2e_variant: "sqa".to_string(),
+        json: Some("BENCH_attention.json".to_string()),
         enforce: None,
+        enforce_linalg: false,
         quick: false,
+    };
+    let parse_list = |v: &str| -> Vec<usize> {
+        v.split(',').filter_map(|s| s.trim().parse().ok()).collect()
     };
     let args: Vec<String> = std::env::args().skip(1).collect();
     let mut i = 0;
@@ -57,11 +85,19 @@ fn parse_flags() -> Flags {
         };
         match (args[i].as_str(), value) {
             ("--seqs", Some(v)) => {
-                f.seqs = v.split(',').filter_map(|s| s.trim().parse().ok()).collect();
+                f.seqs = parse_list(&v);
                 i += 2;
             }
             ("--seq", Some(v)) => {
                 f.zoo_seq = v.parse().expect("--seq");
+                i += 2;
+            }
+            ("--e2e-seqs", Some(v)) => {
+                f.e2e_seqs = parse_list(&v); // "none" -> empty -> skip
+                i += 2;
+            }
+            ("--e2e-variant", Some(v)) => {
+                f.e2e_variant = v;
                 i += 2;
             }
             ("--json", Some(v)) => {
@@ -71,6 +107,10 @@ fn parse_flags() -> Flags {
             ("--enforce", Some(v)) => {
                 f.enforce = Some(v.parse().expect("--enforce"));
                 i += 2;
+            }
+            ("--enforce-linalg", _) => {
+                f.enforce_linalg = true;
+                i += 1;
             }
             ("--quick", _) => {
                 f.quick = true;
@@ -158,14 +198,93 @@ fn main() {
         )
     );
 
-    // ---- JSON + regression guard ----------------------------------------
+    // ---- 3. e2e forward: blocked GEMMs vs the scalar-loop path ----------
+    let mut e2e_cells = Vec::new();
+    if !flags.e2e_seqs.is_empty() {
+        let backend: Arc<dyn Backend> = Arc::new(NativeBackend::new());
+        let e2e_bench = if flags.quick {
+            Bench {
+                warmup: 0,
+                min_reps: 1,
+                max_reps: 1,
+                budget: Duration::from_secs(60),
+            }
+        } else {
+            Bench {
+                warmup: 1,
+                min_reps: 2,
+                max_reps: 3,
+                budget: Duration::from_secs(120),
+            }
+        };
+        println!(
+            "\n## End-to-end single-row forward, bench/{}: blocked vs scalar GEMMs\n",
+            flags.e2e_variant
+        );
+        let (md, cells) = forward_impl_table(
+            &backend,
+            "bench",
+            &flags.e2e_variant,
+            &["tiled", "tiled+scalar"],
+            &flags.e2e_seqs,
+            &e2e_bench,
+        )
+        .unwrap();
+        println!("\n{md}");
+        e2e_cells = cells;
+    }
+
+    // ---- 4. fixed-shape raw GEMM: blocked vs scalar ---------------------
+    // dense_sm LM-head shape: [128, 256] @ [256, 4096]. The CI smoke guard
+    // (--enforce-linalg) fails the build if blocking ever loses here.
+    let (gs, gm, gn) = (128usize, 256usize, 4096usize);
+    let mut rng = Pcg64::new(7);
+    let gx: Vec<f32> = (0..gs * gm).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let gw: Vec<f32> = (0..gm * gn).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let gemm_bench = Bench {
+        warmup: 1,
+        min_reps: 3,
+        max_reps: 10,
+        budget: Duration::from_secs(5),
+    };
+    println!("\n## Raw GEMM at the dense_sm LM-head shape [{gs},{gm}]@[{gm},{gn}]\n");
+    let mut gemm_secs = [0.0f64; 2];
+    for (idx, imp) in [linalg::Impl::Blocked, linalg::Impl::Scalar].into_iter().enumerate() {
+        let r = gemm_bench.run(&format!("gemm/{}", imp.name()), None, || {
+            let out = linalg::matmul(imp, &gx, &gw, gs, gm, gn, None);
+            assert!(out[0].is_finite());
+        });
+        gemm_secs[idx] = r.mean();
+    }
+    let gemm_speedup = gemm_secs[1] / gemm_secs[0];
+    println!("blocked {:.4}s vs scalar {:.4}s -> {gemm_speedup:.2}x", gemm_secs[0], gemm_secs[1]);
+
+    // ---- JSON + regression guards ---------------------------------------
     if let Some(path) = &flags.json {
         let doc = Json::obj(vec![
             ("kernel_sweep", kernel_cells_to_json(&cells)),
             ("variant_zoo", Json::arr(zoo_json)),
+            ("e2e_forward", impl_cells_to_json(&e2e_cells)),
+            (
+                "linalg_guard",
+                Json::obj(vec![
+                    ("shape", Json::str(&format!("{gs}x{gm}x{gn}"))),
+                    ("blocked_secs", Json::num(gemm_secs[0])),
+                    ("scalar_secs", Json::num(gemm_secs[1])),
+                    ("speedup", Json::num(gemm_speedup)),
+                ]),
+            ),
         ]);
         std::fs::write(path, doc.to_string()).expect("writing bench JSON");
         println!("comparison JSON -> {path}");
+    }
+    if flags.enforce_linalg && gemm_secs[0] > gemm_secs[1] * 1.05 {
+        // 5% grace absorbs timer noise on shared CI runners.
+        eprintln!(
+            "REGRESSION: blocked GEMM {:.4}s slower than scalar {:.4}s at [{gs},{gm}]@[{gm},{gn}]",
+            gemm_secs[0], gemm_secs[1]
+        );
+        std::process::exit(1);
     }
     if let Some(min_seq) = flags.enforce {
         // Tiled must not lose to the S×S oracle at long sequence lengths
@@ -194,5 +313,8 @@ fn main() {
             std::process::exit(1);
         }
         println!("kernel guard OK: tiled >= naive at every S >= {min_seq}");
+    }
+    if flags.enforce_linalg {
+        println!("linalg guard OK: blocked >= scalar at the dense_sm shape ({gemm_speedup:.2}x)");
     }
 }

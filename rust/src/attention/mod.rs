@@ -24,6 +24,7 @@
 pub mod tensor;
 pub mod tiled;
 
+use crate::linalg;
 use crate::util::threadpool::ThreadPool;
 use anyhow::{bail, Result};
 use tensor::{matmul_nt, Tensor};
@@ -271,7 +272,8 @@ pub fn sqa_layer(
 
 /// [`sqa_layer`] with an explicit kernel choice and, for the tiled path, an
 /// optional thread pool to fan the attention out across
-/// `(batch, head, query-tile)` jobs.
+/// `(head, query-tile)` jobs. Shape-checks the weight tensors, then
+/// delegates to [`sqa_layer_slices`] with the `SQA_LINALG` GEMM lowering.
 #[allow(clippy::too_many_arguments)]
 pub fn sqa_layer_with(
     x: &Tensor,
@@ -285,69 +287,142 @@ pub fn sqa_layer_with(
     pool: Option<&ThreadPool>,
 ) -> Result<Tensor> {
     spec.validate()?;
+    let (_, _, _, dm) = dims4(x)?;
+    let (dq, dkv) = (spec.hq * d_head, spec.hkv * d_head);
+    if wq.shape != vec![dm, dq] {
+        bail!("wq shape {:?} != [{dm}, {dq}]", wq.shape);
+    }
+    if wk.shape != vec![dm, dkv] || wv.shape != vec![dm, dkv] {
+        bail!("wk/wv shapes {:?}/{:?} != [{dm}, {dkv}]", wk.shape, wv.shape);
+    }
+    if wo.shape != vec![dq, dm] {
+        bail!("wo shape {:?} != [{dq}, {dm}]", wo.shape);
+    }
+    sqa_layer_slices(
+        x,
+        &wq.data,
+        &wk.data,
+        &wv.data,
+        &wo.data,
+        d_head,
+        spec,
+        kernel,
+        linalg::Impl::from_env(),
+        pool,
+    )
+}
+
+/// Split a head-interleaved `[s, heads*d_head]` projection into the
+/// kernels' `[1, heads, s, d_head]` layout (naive-oracle path only).
+fn split_heads(flat: &[f32], heads: usize, s: usize, d_head: usize) -> Tensor {
+    let cols = heads * d_head;
+    let mut t = Tensor::zeros(&[1, heads, s, d_head]);
+    for h in 0..heads {
+        for i in 0..s {
+            let base = t.idx4(0, h, i, 0);
+            t.data[base..base + d_head]
+                .copy_from_slice(&flat[i * cols + h * d_head..][..d_head]);
+        }
+    }
+    t
+}
+
+/// [`sqa_layer_with`] over raw weight *slices* — the native backend's entry
+/// point: weights stay borrowed views into the flat parameter vector (no
+/// per-layer copies), all projections and the output projection run as
+/// [`crate::linalg`] GEMMs under the given [`linalg::Impl`], and the tiled
+/// kernel streams directly over the head-interleaved `[s, H·dh]` slabs.
+///
+/// `pool` fans both the projection row blocks and the tiled attention's
+/// `(head, query-tile)` jobs out across workers; pass `None` when already
+/// running on a pool worker (nested submission can deadlock the bounded
+/// queue).
+#[allow(clippy::too_many_arguments)]
+pub fn sqa_layer_slices(
+    x: &Tensor,
+    wq: &[f32],
+    wk: &[f32],
+    wv: &[f32],
+    wo: &[f32],
+    d_head: usize,
+    spec: Spec,
+    kernel: Kernel,
+    imp: linalg::Impl,
+    pool: Option<&ThreadPool>,
+) -> Result<Tensor> {
+    spec.validate()?;
     let (b, one, s, dm) = dims4(x)?;
     if one != 1 {
         bail!("x must be [batch, 1, seq, d_model]");
     }
-    let proj = |w: &Tensor, heads: usize| -> Result<Tensor> {
-        let dout = heads * d_head;
-        if w.shape != vec![dm, dout] {
-            bail!("weight shape {:?} != [{dm}, {dout}]", w.shape);
-        }
-        // x @ w, then split heads: [b, heads, s, d_head]
-        let mut out = Tensor::zeros(&[b, heads, s, d_head]);
-        for ib in 0..b {
-            for i in 0..s {
-                let xr = x.row4(ib, 0, i);
-                for h in 0..heads {
-                    for dd in 0..d_head {
-                        let col = h * d_head + dd;
-                        let mut acc = 0.0;
-                        for p in 0..dm {
-                            acc += xr[p] * w.data[p * dout + col];
-                        }
-                        out.set4(ib, h, i, dd, acc);
-                    }
-                }
-            }
-        }
-        Ok(out)
-    };
-    let q = proj(wq, spec.hq)?;
-    let k = proj(wk, spec.hkv)?;
-    let v = proj(wv, spec.hkv)?;
-    let o = match (kernel, pool) {
-        (Kernel::Naive, _) => attention(&q, &k, &v, spec)?,
-        (Kernel::Tiled, None) => tiled::attention_tiled(&q, &k, &v, spec)?,
-        // The projections are owned here: move them into the pool jobs'
-        // shared buffers instead of deep-copying.
-        (Kernel::Tiled, Some(pool)) => tiled::attention_tiled_parallel_owned(
-            q,
-            k,
-            v,
-            spec,
-            tiled::TileConfig::default(),
-            pool,
-        )?,
-    };
-    // Merge heads + output projection.
-    let dq = spec.hq * d_head;
-    if wo.shape != vec![dq, dm] {
-        bail!("wo shape {:?} != [{dq}, {dm}]", wo.shape);
+    let (dq, dkv) = (spec.hq * d_head, spec.hkv * d_head);
+    if wq.len() != dm * dq || wk.len() != dm * dkv || wv.len() != dm * dkv {
+        bail!(
+            "projection weight lengths {}/{}/{} != {dm}x{dq} / {dm}x{dkv} / {dm}x{dkv}",
+            wq.len(),
+            wk.len(),
+            wv.len()
+        );
     }
+    if wo.len() != dq * dm {
+        bail!("wo length {} != {dq}x{dm}", wo.len());
+    }
+    let scale = 1.0 / (d_head as f32).sqrt();
+    let cfg = tiled::TileConfig::default().with_linalg(imp);
+    let group = spec.hq / spec.hkv;
     let mut y = Tensor::zeros(&[b, 1, s, dm]);
     for ib in 0..b {
-        for i in 0..s {
-            for c in 0..dm {
-                let mut acc = 0.0;
+        let xb = &x.data[ib * s * dm..][..s * dm];
+        let qf = linalg::matmul(imp, xb, wq, s, dm, dq, pool);
+        let kf = linalg::matmul(imp, xb, wk, s, dm, dkv, pool);
+        let vf = linalg::matmul(imp, xb, wv, s, dm, dkv, pool);
+        let mut of = vec![0.0f32; s * dq];
+        match kernel {
+            Kernel::Naive => {
+                // The oracle wants per-head [1, H, s, dh] tensors; the
+                // split/merge copies are O(s·dq), negligible next to it.
+                let qt = split_heads(&qf, spec.hq, s, d_head);
+                let kt = split_heads(&kf, spec.hkv, s, d_head);
+                let vt = split_heads(&vf, spec.hkv, s, d_head);
+                let ot = attention(&qt, &kt, &vt, spec)?;
                 for h in 0..spec.hq {
-                    for dd in 0..d_head {
-                        acc += o.get4(ib, h, i, dd) * wo.data[(h * d_head + dd) * dm + c];
+                    for i in 0..s {
+                        of[i * dq + h * d_head..][..d_head].copy_from_slice(ot.row4(0, h, i));
                     }
                 }
-                y.set4(ib, 0, i, c, acc);
             }
+            Kernel::Tiled => match pool {
+                Some(pool) if spec.hq * s.div_ceil(cfg.q_tile) > 1 => {
+                    tiled::stream_slabs_parallel(
+                        &qf, &kf, &vf, &mut of, s, d_head, spec, cfg, scale, pool,
+                    )
+                }
+                _ => {
+                    for h in 0..spec.hq {
+                        let hk = h / group;
+                        tiled::stream_head(
+                            &qf,
+                            dq,
+                            h * d_head,
+                            &kf,
+                            dkv,
+                            hk * d_head,
+                            &vf,
+                            &mut of,
+                            dq,
+                            h * d_head,
+                            s,
+                            d_head,
+                            spec,
+                            cfg,
+                            scale,
+                        );
+                    }
+                }
+            },
         }
+        let yb = linalg::matmul(imp, &of, wo, s, dq, dm, pool);
+        y.data[ib * s * dm..][..s * dm].copy_from_slice(&yb);
     }
     Ok(y)
 }

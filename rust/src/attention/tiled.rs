@@ -18,6 +18,15 @@
 //! outside the union of the query tile's visible ranges (causal and/or
 //! sliding-window masks) are skipped without touching K or V.
 //!
+//! Compute substrate: each key-tile step runs as two micro-GEMMs through
+//! [`crate::linalg`] — the whole `[q_tile, k_tile]` score block is one
+//! `Q_tile · K_tileᵀ` product and the output accumulation is one
+//! `probs · V_tile` product — instead of per-row scalar dots. Masking is
+//! applied to the materialized block (flash-style), so diagonal tiles do at
+//! most 2× the visible work while fully-visible tiles run at full GEMM
+//! throughput. [`TileConfig::linalg`] selects the blocked kernels or the
+//! scalar oracle loops.
+//!
 //! Invariants the test suites pin down (see `rust/tests/`):
 //! * outputs match the naive oracle within 1e-4 for every head geometry
 //!   (MHA, GQA, MQA, extreme SQA) and every mask, including sequence
@@ -33,21 +42,25 @@
 
 use super::tensor::Tensor;
 use super::{check_shapes, visible_range, Spec};
+use crate::linalg;
 use crate::util::threadpool::ThreadPool;
-use anyhow::{bail, Context, Result};
-use std::sync::{mpsc, Arc};
+use anyhow::{bail, Result};
+use std::sync::mpsc;
 
 /// Default query/key tile edge. 64 rows × 64 keys of f32 scores is 16 KiB —
 /// comfortably inside L1/L2 alongside the K/V tile being streamed.
 pub const DEFAULT_TILE: usize = 64;
 
-/// Tile geometry of the streaming kernel.
+/// Tile geometry + compute lowering of the streaming kernel.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct TileConfig {
     /// Query rows processed per tile.
     pub q_tile: usize,
     /// Keys consumed per inner step (the score block is `q_tile × k_tile`).
     pub k_tile: usize,
+    /// GEMM lowering for the score and `probs @ V` blocks
+    /// (`SQA_LINALG` picks the process-wide default; see [`crate::linalg`]).
+    pub linalg: linalg::Impl,
 }
 
 impl Default for TileConfig {
@@ -55,6 +68,7 @@ impl Default for TileConfig {
         Self {
             q_tile: DEFAULT_TILE,
             k_tile: DEFAULT_TILE,
+            linalg: linalg::Impl::from_env(),
         }
     }
 }
@@ -64,7 +78,17 @@ impl TileConfig {
         if q_tile == 0 || k_tile == 0 {
             bail!("tile sizes must be positive (got {q_tile}x{k_tile})");
         }
-        Ok(Self { q_tile, k_tile })
+        Ok(Self {
+            q_tile,
+            k_tile,
+            linalg: linalg::Impl::from_env(),
+        })
+    }
+
+    /// Override the GEMM lowering (builder-style).
+    pub fn with_linalg(mut self, imp: linalg::Impl) -> Self {
+        self.linalg = imp;
+        self
     }
 }
 
@@ -110,6 +134,11 @@ pub fn visited_key_tiles(
 /// backend's head-interleaved `[S, H·d]` matrices (`stride = H·d`,
 /// `off = h·d`). `out` starts at query row `i0`: row `i` lands at
 /// `out[(i - i0) * out_stride + out_off ..][..d]` and is fully overwritten.
+///
+/// Each key-tile step materializes its full `[q_tile, k_tile]` score block
+/// as one `Q · Kᵀ` micro-GEMM ([`linalg::score_block`]), applies masking
+/// and the online-softmax update per row, then accumulates the output as
+/// one `probs · V` micro-GEMM ([`linalg::pv_block`]).
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn stream_qtile(
     q: &[f32],
@@ -127,10 +156,11 @@ pub(crate) fn stream_qtile(
     i0: usize,
     i1: usize,
     spec: Spec,
-    k_tile: usize,
+    cfg: TileConfig,
     scale: f32,
 ) {
     let tq = i1 - i0;
+    let k_tile = cfg.k_tile;
     for ti in 0..tq {
         out[ti * out_stride + out_off..][..d].fill(0.0);
     }
@@ -145,65 +175,79 @@ pub(crate) fn stream_qtile(
     // out individually, but a +inf score dominates the row max and drives
     // every exp (and the normalizer) to 0 — the whole row becomes zeros.
     let mut poisoned = vec![false; tq];
-    // The only score storage: one [q_tile, k_tile] block.
+    // The only score storage: one [q_tile, k_tile] block, plus its
+    // exponentiated twin feeding the probs @ V micro-GEMM.
     let mut scores = vec![0.0f32; tq * k_tile];
+    let mut probs = vec![0.0f32; tq * k_tile];
 
     for jt in t_lo / k_tile..t_hi.div_ceil(k_tile) {
         let j0 = jt * k_tile;
         let j1 = ((jt + 1) * k_tile).min(s);
+        let tk = j1 - j0;
+        // 1. The whole score block in one micro-GEMM (overwrites the block,
+        //    so nothing stale survives from the previous key tile).
+        linalg::score_block(
+            cfg.linalg, q, q_stride, q_off, i0, tq, k, kv_stride, kv_off, j0, tk, d, scale,
+            &mut scores, k_tile,
+        );
+        // 2. Per-row masking + online-softmax update into the probs block.
+        let mut any = false;
         for ti in 0..tq {
             let i = i0 + ti;
             let (lo, hi) = visible_range(i, s, spec);
             let (jlo, jhi) = (j0.max(lo), j1.min(hi));
+            let srow = &scores[ti * k_tile..][..tk];
+            let prow = &mut probs[ti * k_tile..][..tk];
             if jlo >= jhi {
-                continue; // this row sees nothing in this key tile
+                prow.fill(0.0); // row sees nothing in this key tile
+                continue;
             }
-            let qi = &q[i * q_stride + q_off..][..d];
-            let srow = &mut scores[ti * k_tile..][..k_tile];
             let mut block_max = f32::NEG_INFINITY;
             for j in jlo..jhi {
-                let kj = &k[j * kv_stride + kv_off..][..d];
-                let mut acc = 0.0f32;
-                for (a, b) in qi.iter().zip(kj) {
-                    acc += a * b;
-                }
-                let sc = acc * scale;
+                let sc = srow[j - j0];
                 if sc.is_finite() {
-                    srow[j - j0] = sc;
                     block_max = block_max.max(sc);
                 } else {
                     // -inf/NaN: this key contributes nothing; +inf: the
                     // whole row degrades to zeros like the oracle's.
                     poisoned[ti] |= sc == f32::INFINITY;
-                    srow[j - j0] = f32::NEG_INFINITY;
                 }
             }
             if block_max == f32::NEG_INFINITY {
                 // No finite score in this block: nothing to accumulate.
+                prow.fill(0.0);
                 continue;
             }
             let m_new = m[ti].max(block_max);
-            let orow = &mut out[ti * out_stride + out_off..][..d];
             // α = exp(m_old - m_new); exp(-inf) = 0 covers the first block.
             let alpha = (m[ti] - m_new).exp();
             if alpha != 1.0 {
                 l[ti] *= alpha;
-                for o in orow.iter_mut() {
+                for o in out[ti * out_stride + out_off..][..d].iter_mut() {
                     *o *= alpha;
                 }
             }
             m[ti] = m_new;
-            for j in jlo..jhi {
-                let p = (srow[j - j0] - m_new).exp();
-                if p == 0.0 {
-                    continue;
-                }
+            for (jj, pv) in prow.iter_mut().enumerate() {
+                let j = j0 + jj;
+                let sc = srow[jj];
+                let p = if (jlo..jhi).contains(&j) && sc.is_finite() {
+                    (sc - m_new).exp()
+                } else {
+                    0.0 // masked, out of range, or non-finite
+                };
+                *pv = p;
                 l[ti] += p;
-                let vj = &v[j * kv_stride + kv_off..][..d];
-                for (o, &vv) in orow.iter_mut().zip(vj) {
-                    *o += p * vv;
-                }
             }
+            any = true;
+        }
+        // 3. Output accumulation as one probs @ V micro-GEMM (masked
+        //    entries carry weight exactly 0).
+        if any {
+            linalg::pv_block(
+                cfg.linalg, &probs, k_tile, tq, tk, v, kv_stride, kv_off, j0, d, out,
+                out_stride, out_off,
+            );
         }
     }
     for ti in 0..tq {
@@ -263,10 +307,77 @@ pub(crate) fn stream_head(
             i0,
             i1,
             spec,
-            cfg.k_tile,
+            cfg,
             scale,
         );
         i0 = i1;
+    }
+}
+
+/// Fan one sequence's attention across `(head, query-tile)` jobs directly
+/// on head-interleaved `[S, H·d]` projection slabs (`q: [S, Hq·d]`,
+/// `k`/`v`: `[S, Hkv·d]`, `out: [S, Hq·d]`).
+///
+/// Jobs *borrow* the slabs via [`ThreadPool::run_borrowed`] — no `Arc`
+/// clones, no per-head tensor splits; each job streams one query tile into
+/// a private buffer and the caller thread assembles them. Do not call from
+/// inside a job already running on `pool` (bounded-queue deadlock).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn stream_slabs_parallel(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    out: &mut [f32],
+    s: usize,
+    d: usize,
+    spec: Spec,
+    cfg: TileConfig,
+    scale: f32,
+    pool: &ThreadPool,
+) {
+    let (hq, hkv) = (spec.hq, spec.hkv);
+    let group = hq / hkv;
+    let (dq, dkv) = (hq * d, hkv * d);
+    let n_tiles = s.div_ceil(cfg.q_tile);
+    let (tx, rx) = mpsc::channel::<(usize, usize, Vec<f32>)>();
+    let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(hq * n_tiles);
+    for h in 0..hq {
+        let hk = h / group;
+        for t in 0..n_tiles {
+            let i0 = t * cfg.q_tile;
+            let i1 = (i0 + cfg.q_tile).min(s);
+            let tx = tx.clone();
+            jobs.push(Box::new(move || {
+                let mut buf = vec![0.0f32; (i1 - i0) * d];
+                stream_qtile(
+                    q,
+                    dq,
+                    h * d,
+                    k,
+                    dkv,
+                    hk * d,
+                    v,
+                    &mut buf,
+                    d,
+                    0,
+                    s,
+                    d,
+                    i0,
+                    i1,
+                    spec,
+                    cfg,
+                    scale,
+                );
+                let _ = tx.send((h, i0, buf));
+            }));
+        }
+    }
+    drop(tx);
+    pool.run_borrowed(jobs);
+    for (h, i0, buf) in rx.try_iter() {
+        for (ti, row) in buf.chunks_exact(d).enumerate() {
+            out[(i0 + ti) * dq + h * d..][..d].copy_from_slice(row);
+        }
     }
 }
 
@@ -322,14 +433,14 @@ pub fn attention_tiled_cfg(
 }
 
 /// Tiled attention fanned out across `(batch, head, query-tile)` jobs on a
-/// [`ThreadPool`]. Each job streams one query tile into a private buffer;
-/// the caller thread assembles them, so no unsafe sharing is needed. Falls
-/// back to the serial kernel when there is only one job's worth of work.
+/// [`ThreadPool`]. Each job streams one query tile into a private buffer
+/// and *borrows* Q/K/V via [`ThreadPool::run_borrowed`] (no deep copies);
+/// the caller thread assembles the buffers, so no unsafe sharing is
+/// needed. Falls back to the serial kernel when there is only one job's
+/// worth of work.
 ///
-/// Borrowing wrapper around [`attention_tiled_parallel_owned`]; it must
-/// deep-copy Q/K/V to hand `'static` buffers to the pool, so callers that
-/// own their projections (e.g. `sqa_layer_with`) should pass them by value
-/// instead.
+/// Do not call from inside a job already running on `pool` — nested
+/// submission can deadlock the bounded queue.
 pub fn attention_tiled_parallel(
     q: &Tensor,
     k: &Tensor,
@@ -338,48 +449,27 @@ pub fn attention_tiled_parallel(
     cfg: TileConfig,
     pool: &ThreadPool,
 ) -> Result<Tensor> {
-    attention_tiled_parallel_owned(q.clone(), k.clone(), v.clone(), spec, cfg, pool)
-}
-
-/// [`attention_tiled_parallel`] taking ownership of Q/K/V — the buffers
-/// move straight into the job-shared `Arc`s with no copy.
-///
-/// Do not call from inside a job already running on `pool` — nested
-/// submission can deadlock the bounded queue.
-pub fn attention_tiled_parallel_owned(
-    q: Tensor,
-    k: Tensor,
-    v: Tensor,
-    spec: Spec,
-    cfg: TileConfig,
-    pool: &ThreadPool,
-) -> Result<Tensor> {
-    let (b, hq, s, d) = check_shapes(&q, &k, &v, spec)?;
+    let (b, hq, s, d) = check_shapes(q, k, v, spec)?;
     let n_tiles = s.div_ceil(cfg.q_tile);
     if b * hq * n_tiles <= 1 {
-        return attention_tiled_cfg(&q, &k, &v, spec, cfg);
+        return attention_tiled_cfg(q, k, v, spec, cfg);
     }
     let group = hq / spec.hkv;
     let hkv = spec.hkv;
     let scale = 1.0 / (d as f32).sqrt();
-    let qa = Arc::new(q.data);
-    let ka = Arc::new(k.data);
-    let va = Arc::new(v.data);
     let (tx, rx) = mpsc::channel::<(usize, usize, usize, Vec<f32>)>();
-    let mut n_jobs = 0usize;
+    let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(b * hq * n_tiles);
     for ib in 0..b {
         for h in 0..hq {
             let hk = h / group;
+            let q_slab = &q.data[(ib * hq + h) * s * d..][..s * d];
+            let k_slab = &k.data[(ib * hkv + hk) * s * d..][..s * d];
+            let v_slab = &v.data[(ib * hkv + hk) * s * d..][..s * d];
             for t in 0..n_tiles {
                 let i0 = t * cfg.q_tile;
                 let i1 = (i0 + cfg.q_tile).min(s);
-                let (qa, ka, va) = (Arc::clone(&qa), Arc::clone(&ka), Arc::clone(&va));
                 let tx = tx.clone();
-                n_jobs += 1;
-                pool.submit(move || {
-                    let q_slab = &qa[(ib * hq + h) * s * d..][..s * d];
-                    let k_slab = &ka[(ib * hkv + hk) * s * d..][..s * d];
-                    let v_slab = &va[(ib * hkv + hk) * s * d..][..s * d];
+                jobs.push(Box::new(move || {
                     let mut buf = vec![0.0f32; (i1 - i0) * d];
                     stream_qtile(
                         q_slab,
@@ -397,22 +487,37 @@ pub fn attention_tiled_parallel_owned(
                         i0,
                         i1,
                         spec,
-                        cfg.k_tile,
+                        cfg,
                         scale,
                     );
                     let _ = tx.send((ib, h, i0, buf));
-                });
+                }));
             }
         }
     }
     drop(tx);
+    pool.run_borrowed(jobs);
     let mut out = Tensor::zeros(&[b, hq, s, d]);
-    for _ in 0..n_jobs {
-        let (ib, h, i0, buf) = rx.recv().context("tiled attention worker lost")?;
+    for (ib, h, i0, buf) in rx.try_iter() {
         let base = out.idx4(ib, h, i0, 0);
         out.data[base..base + buf.len()].copy_from_slice(&buf);
     }
     Ok(out)
+}
+
+/// [`attention_tiled_parallel`] taking ownership of Q/K/V. Retained for API
+/// compatibility: since the parallel path borrows its inputs through
+/// [`ThreadPool::run_borrowed`], ownership no longer buys anything — this
+/// is now a thin wrapper.
+pub fn attention_tiled_parallel_owned(
+    q: Tensor,
+    k: Tensor,
+    v: Tensor,
+    spec: Spec,
+    cfg: TileConfig,
+    pool: &ThreadPool,
+) -> Result<Tensor> {
+    attention_tiled_parallel(&q, &k, &v, spec, cfg, pool)
 }
 
 #[cfg(test)]
@@ -454,6 +559,25 @@ mod tests {
     }
 
     #[test]
+    fn both_linalg_impls_match_oracle() {
+        let (b, hq, hkv, s, d) = (1, 4, 2, 53, 8);
+        let q = randn(&[b, hq, s, d], 21);
+        let k = randn(&[b, hkv, s, d], 22);
+        let v = randn(&[b, hkv, s, d], 23);
+        let spec = Spec::causal(hq, hkv);
+        let want = attention(&q, &k, &v, spec).unwrap();
+        for imp in [linalg::Impl::Scalar, linalg::Impl::Blocked] {
+            let cfg = TileConfig::new(16, 16).unwrap().with_linalg(imp);
+            let got = attention_tiled_cfg(&q, &k, &v, spec, cfg).unwrap();
+            assert!(
+                want.max_abs_diff(&got) < 1e-4,
+                "{imp:?}: diff {}",
+                want.max_abs_diff(&got)
+            );
+        }
+    }
+
+    #[test]
     fn parallel_matches_serial() {
         let pool = ThreadPool::new(4, 64);
         let (b, hq, hkv, s, d) = (2, 4, 1, 83, 8);
@@ -466,6 +590,44 @@ mod tests {
         let par = attention_tiled_parallel(&q, &k, &v, spec, cfg, &pool).unwrap();
         // Same per-tile arithmetic, so bitwise equality is expected.
         assert_eq!(serial.data, par.data);
+    }
+
+    #[test]
+    fn slab_parallel_matches_serial_on_interleaved_layout() {
+        let pool = ThreadPool::new(4, 64);
+        let (hq, hkv, s, d) = (4usize, 2usize, 45usize, 8usize);
+        let (dq, dkv) = (hq * d, hkv * d);
+        let mut rng = Pcg64::new(31);
+        let q: Vec<f32> = (0..s * dq).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let k: Vec<f32> = (0..s * dkv).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let v: Vec<f32> = (0..s * dkv).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let spec = Spec::causal(hq, hkv);
+        let cfg = TileConfig::new(16, 16).unwrap();
+        let scale = 1.0 / (d as f32).sqrt();
+        let mut serial = vec![0.0f32; s * dq];
+        for h in 0..hq {
+            let hk = h / (hq / hkv);
+            stream_head(
+                &q,
+                dq,
+                h * d,
+                &k,
+                dkv,
+                hk * d,
+                &v,
+                &mut serial,
+                dq,
+                h * d,
+                s,
+                d,
+                spec,
+                cfg,
+                scale,
+            );
+        }
+        let mut par = vec![0.0f32; s * dq];
+        stream_slabs_parallel(&q, &k, &v, &mut par, s, d, spec, cfg, scale, &pool);
+        assert_eq!(serial, par);
     }
 
     #[test]
@@ -499,7 +661,7 @@ mod tests {
             0,
             s,
             spec,
-            4,
+            TileConfig::new(8, 4).unwrap(),
             1.0,
         );
         assert!(out.iter().all(|&x| x == 0.0), "{out:?}");

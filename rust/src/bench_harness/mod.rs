@@ -324,6 +324,105 @@ pub fn kernel_table(
     Ok((markdown_table(&header, &rows), cells))
 }
 
+/// One point of the end-to-end forward lowering sweep.
+#[derive(Debug, Clone)]
+pub struct ImplCell {
+    /// `forward_impl` string (`"tiled"`, `"tiled+scalar"`, …).
+    pub impl_name: String,
+    pub seq: usize,
+    pub secs: f64,
+    pub tokens_per_s: f64,
+}
+
+/// End-to-end single-row forward wall-clock across `forward_impl`
+/// lowerings on a catalog model — e.g. `"tiled"` (tiled kernel + blocked
+/// GEMMs, the default) against `"tiled+scalar"` (the PR-2 scalar-loop
+/// path). One row of tokens per seq bucket, shared across impls, so the
+/// ratio isolates the compute substrate. This is the datapoint behind the
+/// `BENCH_attention.json` perf trajectory written by
+/// `rust/benches/native_attention.rs`.
+pub fn forward_impl_table(
+    backend: &Arc<dyn Backend>,
+    family: &str,
+    variant: &str,
+    impls: &[&str],
+    seqs: &[usize],
+    bench: &Bench,
+) -> Result<(String, Vec<ImplCell>)> {
+    let vocab = backend.family(family)?.dims.vocab;
+    let params = backend.init_params(family, variant, 3)?;
+    let mut cells = Vec::new();
+    for &seq in seqs {
+        let batch = backend.fwd_batch(family, variant, seq)?;
+        let mut rng = Pcg64::new(99);
+        let tokens: Vec<i32> = (0..batch * seq)
+            .map(|_| rng.below(vocab as u64) as i32)
+            .collect();
+        for &impl_ in impls {
+            let r = bench.run(
+                &format!("{family}/{variant}/{impl_}/s{seq}"),
+                Some((batch * seq) as f64),
+                || {
+                    let out = backend
+                        .forward_impl(impl_, family, variant, &params, &tokens, batch, seq)
+                        .unwrap();
+                    assert!(out[0].is_finite());
+                },
+            );
+            cells.push(ImplCell {
+                impl_name: impl_.to_string(),
+                seq,
+                secs: r.mean(),
+                tokens_per_s: (batch * seq) as f64 / r.mean(),
+            });
+        }
+    }
+    // Rows = seq buckets; per-impl seconds plus the speed-up of the first
+    // impl (the candidate) over the last (the baseline).
+    let mut header = vec!["Seq. Length".to_string()];
+    header.extend(impls.iter().map(|i| format!("{i} (s)")));
+    if impls.len() >= 2 {
+        header.push(format!("{} speed-up vs {}", impls[0], impls[impls.len() - 1]));
+    }
+    let mut rows = Vec::new();
+    for &seq in seqs {
+        let mut row = vec![seq.to_string()];
+        for &impl_ in impls {
+            let cell = cells.iter().find(|c| c.seq == seq && c.impl_name == impl_);
+            row.push(match cell {
+                Some(c) => format!("{:.4}", c.secs),
+                None => "-".into(),
+            });
+        }
+        if impls.len() >= 2 {
+            let first = cells
+                .iter()
+                .find(|c| c.seq == seq && c.impl_name == impls[0]);
+            let last = cells
+                .iter()
+                .find(|c| c.seq == seq && c.impl_name == impls[impls.len() - 1]);
+            row.push(match (first, last) {
+                (Some(f), Some(l)) => format!("{:.2}x", l.secs / f.secs),
+                _ => "-".into(),
+            });
+        }
+        rows.push(row);
+    }
+    Ok((markdown_table(&header, &rows), cells))
+}
+
+/// Serialize end-to-end lowering cells for `BENCH_attention.json`.
+pub fn impl_cells_to_json(cells: &[ImplCell]) -> Json {
+    Json::arr(cells.iter().map(|c| {
+        Json::obj(vec![
+            ("impl", Json::str(&c.impl_name)),
+            ("seq", Json::num(c.seq as f64)),
+            ("secs", Json::num(c.secs)),
+            ("tokens_per_s", Json::num(c.tokens_per_s)),
+        ])
+    }))
+}
+
 /// Serialize kernel-sweep cells for the bench regression guard.
 pub fn kernel_cells_to_json(cells: &[KernelCell]) -> Json {
     Json::arr(cells.iter().map(|c| {

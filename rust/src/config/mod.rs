@@ -180,8 +180,9 @@ pub struct ServeConfig {
     pub workers: usize,
     /// Queue capacity before requests are shed (backpressure).
     pub queue_capacity: usize,
-    /// Attention lowering the workers run ("tiled" | "naive" on native).
-    /// `None` = the backend's default (tiled).
+    /// Lowering the workers run: `kernel[+linalg]` — "tiled" | "naive" |
+    /// "tiled+scalar" | "naive+scalar" on native. `None` = the backend's
+    /// default (tiled attention on blocked GEMMs).
     pub kernel: Option<String>,
 }
 

@@ -47,6 +47,26 @@
 //! `-inf`-saturated rows yield zeros, never NaN, and large-magnitude
 //! logits never overflow the accumulator (`attention::tiled` unit tests).
 //!
+//! ## Compute kernels ([`linalg`])
+//!
+//! Underneath both attention lowerings sits a second, orthogonal switch:
+//! [`linalg::Impl`] (`SQA_LINALG=blocked|scalar`) selects the GEMM
+//! substrate every dense product runs on — Q/K/V/O projections, the tiled
+//! kernel's `[q_tile, k_tile]` score blocks and `probs @ V` accumulation,
+//! the LM head, and the training backward's `xᵀ·dy` / `dy·wᵀ` reductions.
+//! `blocked` (default) is a cache-blocked, register-tiled f32 GEMM
+//! (`MR×NR` micro-kernel over packed, zero-padded A/B panels; `KC/MC/NC`
+//! cache blocking; strided views cover every orientation and the
+//! head-interleaved attention slabs) written so LLVM auto-vectorizes it;
+//! `scalar` keeps the element-at-a-time PR-2 loops as the differential
+//! oracle and perf baseline. Large products optionally fan row blocks out
+//! over the thread pool via `ThreadPool::run_borrowed` (scoped jobs that
+//! borrow caller buffers — no `Arc` clones, no per-request copies of the
+//! parameter vector). The native backend composes the two switches in its
+//! `forward_impl` strings: `"tiled"`, `"naive"`, `"tiled+scalar"`,
+//! `"naive+scalar"` — and `rust/benches/native_attention.rs` records the
+//! blocked-vs-scalar end-to-end trajectory in `BENCH_attention.json`.
+//!
 //! ## Modules
 //!
 //! * [`runtime`] — the [`runtime::Backend`] trait, the native backend +
@@ -61,6 +81,8 @@
 //!   streaming) covering the whole variant zoo
 //!   (MHA/GQA/MQA/SQA/sSQA/xSQA/xSMQA/SWA); the native backend's forward
 //!   path is built on them.
+//! * [`linalg`] — blocked GEMM micro-kernels + scalar oracles behind the
+//!   [`linalg::Impl`] switch; the compute substrate of everything above.
 //! * [`flops`] — the paper's §3.2.1 analytic complexity model.
 //! * [`bench_harness`] — regenerates every table of the paper's evaluation.
 //! * [`util`] — substrates the offline image lacks crates for: JSON,
@@ -79,6 +101,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod flops;
+pub mod linalg;
 pub mod runtime;
 pub mod server;
 pub mod train;

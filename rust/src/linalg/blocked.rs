@@ -1,0 +1,336 @@
+//! Cache-blocked, register-tiled f32 GEMM (the `Impl::Blocked` substrate).
+//!
+//! Classic three-level GotoBLAS/BLIS structure, scaled to the reference
+//! models this repo runs:
+//!
+//! * the **micro-kernel** computes an `MR×NR` output tile from packed
+//!   panels, keeping the whole accumulator in registers; it is written as
+//!   plain unrolled-friendly loops over fixed-size arrays so LLVM
+//!   auto-vectorizes it (no intrinsics — the crate stays portable);
+//! * **packing** copies an `MR`-row A panel (k-major: `a[p*MR + r]`) and an
+//!   `NR`-column B panel (`b[p*NR + c]`) into contiguous, zero-padded
+//!   buffers, so the micro-kernel sees unit-stride loads regardless of the
+//!   source layout — which is how one core serves all four orientations
+//!   (`x@w`, `xᵀ@dy`, `dy@wᵀ`, `q@kᵀ`) and the attention kernels' strided
+//!   head-interleaved slabs;
+//! * **cache blocking** walks `NC`-wide column blocks, `KC`-deep k blocks
+//!   and `MC`-tall row blocks so each packed panel is reused from L1/L2
+//!   across the whole opposite block.
+//!
+//! Numerics: each output element accumulates its k-terms in ascending order
+//! in a single f32 accumulator per k block, i.e. the same summation order
+//! as the scalar oracles up to `KC`-boundary regrouping — the differential
+//! suites pin agreement at 1e-4 and in practice see ~bit-exact results for
+//! the `k <= KC` shapes the models use.
+
+/// Rows per micro-tile. 4×16 needs eight 8-lane vector accumulators — in
+/// registers on any x86-64/aarch64 target LLVM vectorizes for.
+pub(crate) const MR: usize = 4;
+/// Columns per micro-tile.
+pub(crate) const NR: usize = 16;
+/// k extent packed per panel (A panel: `KC*MR` floats = 4 KiB in L1).
+const KC: usize = 256;
+/// Rows per packed A block (`MC*KC` floats = 128 KiB, L2-resident).
+const MC: usize = 128;
+/// Columns per packed B block (`KC*NC` floats = 512 KiB, streamed from L3).
+const NC: usize = 512;
+
+/// Borrowed strided matrix view: element `(i, j)` lives at
+/// `data[off + i * rs + j * cs]`. A transpose is a `(rs, cs)` swap, so the
+/// packing routines never special-case orientation.
+#[derive(Clone, Copy)]
+pub(crate) struct MatRef<'a> {
+    pub data: &'a [f32],
+    pub off: usize,
+    pub rs: usize,
+    pub cs: usize,
+}
+
+impl MatRef<'_> {
+    #[inline(always)]
+    fn at(&self, i: usize, j: usize) -> f32 {
+        self.data[self.off + i * self.rs + j * self.cs]
+    }
+}
+
+/// `acc[r][c] += Σ_p a_panel[p*MR + r] * b_panel[p*NR + c]` over one packed
+/// panel pair. Fixed-size array refs tell LLVM the trip counts, so the
+/// `c` loop vectorizes and `acc` stays in registers across `p`.
+#[inline(always)]
+fn micro_kernel(ap: &[f32], bp: &[f32], kc: usize, acc: &mut [[f32; NR]; MR]) {
+    debug_assert!(ap.len() >= kc * MR && bp.len() >= kc * NR);
+    for p in 0..kc {
+        let ar: &[f32; MR] = ap[p * MR..p * MR + MR].try_into().unwrap();
+        let br: &[f32; NR] = bp[p * NR..p * NR + NR].try_into().unwrap();
+        for r in 0..MR {
+            let a = ar[r];
+            let row = &mut acc[r];
+            for (o, &b) in row.iter_mut().zip(br.iter()) {
+                *o += a * b;
+            }
+        }
+    }
+}
+
+/// General blocked GEMM:
+/// `c[c_off + i*c_rs + j] (+)= alpha * Σ_p a(i, p) * b(p, j)` for
+/// `i < mdim`, `j < ndim`, `p < kdim`. With `accumulate == false` the block
+/// is overwritten (k blocks after the first still add into the partial
+/// result, preserving the plain-sum semantics).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn gemm(
+    a: MatRef,
+    b: MatRef,
+    c: &mut [f32],
+    c_off: usize,
+    c_rs: usize,
+    mdim: usize,
+    ndim: usize,
+    kdim: usize,
+    alpha: f32,
+    accumulate: bool,
+) {
+    if mdim == 0 || ndim == 0 {
+        return;
+    }
+    if kdim == 0 {
+        if !accumulate {
+            for i in 0..mdim {
+                c[c_off + i * c_rs..][..ndim].fill(0.0);
+            }
+        }
+        return;
+    }
+    // Packing scratch is thread-local: the tiled attention kernel calls in
+    // here twice per key-tile step from every pool worker, and a heap
+    // allocation per micro-GEMM would dominate the small-block cases. The
+    // buffers are cleared and re-zeroed per (jc, pc[, ic]) block below, so
+    // reuse never leaks values — only capacity.
+    PACK_SCRATCH.with(|scratch| {
+        let mut scratch = scratch.borrow_mut();
+        let (apack, bpack) = &mut *scratch;
+        gemm_blocks(a, b, c, c_off, c_rs, mdim, ndim, kdim, alpha, accumulate, apack, bpack);
+    });
+}
+
+thread_local! {
+    static PACK_SCRATCH: std::cell::RefCell<(Vec<f32>, Vec<f32>)> =
+        const { std::cell::RefCell::new((Vec::new(), Vec::new())) };
+}
+
+/// The blocking loops of [`gemm`], over caller-provided packing scratch.
+#[allow(clippy::too_many_arguments)]
+fn gemm_blocks(
+    a: MatRef,
+    b: MatRef,
+    c: &mut [f32],
+    c_off: usize,
+    c_rs: usize,
+    mdim: usize,
+    ndim: usize,
+    kdim: usize,
+    alpha: f32,
+    accumulate: bool,
+    apack: &mut Vec<f32>,
+    bpack: &mut Vec<f32>,
+) {
+    let mut jc = 0;
+    while jc < ndim {
+        let nc = NC.min(ndim - jc);
+        let nb_panels = nc.div_ceil(NR);
+        let mut pc = 0;
+        while pc < kdim {
+            let kc = KC.min(kdim - pc);
+            // k blocks after the first always add into the partial result.
+            let acc_pass = accumulate || pc > 0;
+            // Pack B: nb_panels panels of NR columns, zero-padded.
+            bpack.clear();
+            bpack.resize(nb_panels * kc * NR, 0.0);
+            for pb in 0..nb_panels {
+                let c0 = pb * NR;
+                let cmax = NR.min(nc - c0);
+                let panel = &mut bpack[pb * kc * NR..][..kc * NR];
+                for p in 0..kc {
+                    let row = &mut panel[p * NR..p * NR + cmax];
+                    for (cc, slot) in row.iter_mut().enumerate() {
+                        *slot = b.at(pc + p, jc + c0 + cc);
+                    }
+                }
+            }
+            let mut ic = 0;
+            while ic < mdim {
+                let mc = MC.min(mdim - ic);
+                let na_panels = mc.div_ceil(MR);
+                // Pack A: na_panels panels of MR rows, k-major, zero-padded.
+                apack.clear();
+                apack.resize(na_panels * kc * MR, 0.0);
+                for pa in 0..na_panels {
+                    let r0 = pa * MR;
+                    let rmax = MR.min(mc - r0);
+                    let panel = &mut apack[pa * kc * MR..][..kc * MR];
+                    for r in 0..rmax {
+                        for p in 0..kc {
+                            panel[p * MR + r] = a.at(ic + r0 + r, pc + p);
+                        }
+                    }
+                }
+                for pa in 0..na_panels {
+                    let r0 = pa * MR;
+                    let rmax = MR.min(mc - r0);
+                    let ap = &apack[pa * kc * MR..][..kc * MR];
+                    for pb in 0..nb_panels {
+                        let c0 = pb * NR;
+                        let cmax = NR.min(nc - c0);
+                        let bp = &bpack[pb * kc * NR..][..kc * NR];
+                        let mut acc = [[0.0f32; NR]; MR];
+                        micro_kernel(ap, bp, kc, &mut acc);
+                        for r in 0..rmax {
+                            let crow =
+                                &mut c[c_off + (ic + r0 + r) * c_rs + jc + c0..][..cmax];
+                            if acc_pass {
+                                for (o, &v) in crow.iter_mut().zip(&acc[r][..cmax]) {
+                                    *o += alpha * v;
+                                }
+                            } else {
+                                for (o, &v) in crow.iter_mut().zip(&acc[r][..cmax]) {
+                                    *o = alpha * v;
+                                }
+                            }
+                        }
+                    }
+                }
+                ic += mc;
+            }
+            pc += kc;
+        }
+        jc += nc;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn naive(
+        a: &dyn Fn(usize, usize) -> f32,
+        b: &dyn Fn(usize, usize) -> f32,
+        m: usize,
+        n: usize,
+        k: usize,
+        alpha: f32,
+    ) -> Vec<f32> {
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0f32;
+                for p in 0..k {
+                    acc += a(i, p) * b(p, j);
+                }
+                out[i * n + j] = alpha * acc;
+            }
+        }
+        out
+    }
+
+    fn fill(len: usize, seed: u32) -> Vec<f32> {
+        // Small deterministic pseudo-random values in [-1, 1).
+        (0..len)
+            .map(|i| {
+                let x = (i as u32).wrapping_mul(2654435761).wrapping_add(seed);
+                (x >> 8) as f32 / (1u32 << 23) as f32 - 1.0
+            })
+            .collect()
+    }
+
+    #[test]
+    fn matches_naive_around_tile_and_block_edges() {
+        for &(m, n, k) in &[
+            (1usize, 1usize, 1usize),
+            (MR - 1, NR - 1, 3),
+            (MR, NR, 7),
+            (MR + 1, NR + 1, 5),
+            (2 * MR + 3, 3 * NR + 5, KC + 9), // multiple k blocks
+            (MC + 2, 17, 4),                  // multiple row blocks
+        ] {
+            let ad = fill(m * k, 1);
+            let bd = fill(k * n, 2);
+            let a = MatRef { data: &ad, off: 0, rs: k, cs: 1 };
+            let b = MatRef { data: &bd, off: 0, rs: n, cs: 1 };
+            let mut got = vec![0.5f32; m * n];
+            gemm(a, b, &mut got, 0, n, m, n, k, 1.0, false);
+            let want = naive(&|i, p| ad[i * k + p], &|p, j| bd[p * n + j], m, n, k, 1.0);
+            for (g, w) in got.iter().zip(&want) {
+                assert!((g - w).abs() < 1e-4, "({m},{n},{k}): {g} vs {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn transposed_views_and_alpha() {
+        // a is stored column-major (a transpose view), alpha folds in.
+        let (m, n, k) = (5usize, 9usize, 6usize);
+        let ad = fill(k * m, 3); // stored [k, m]
+        let bd = fill(k * n, 4);
+        let a = MatRef { data: &ad, off: 0, rs: 1, cs: m };
+        let b = MatRef { data: &bd, off: 0, rs: n, cs: 1 };
+        let mut got = vec![0.0f32; m * n];
+        gemm(a, b, &mut got, 0, n, m, n, k, 0.25, true);
+        let want = naive(&|i, p| ad[p * m + i], &|p, j| bd[p * n + j], m, n, k, 0.25);
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-5, "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn accumulate_adds_overwrite_replaces() {
+        let (m, n, k) = (3usize, 4usize, 2usize);
+        let ad = fill(m * k, 5);
+        let bd = fill(k * n, 6);
+        let a = MatRef { data: &ad, off: 0, rs: k, cs: 1 };
+        let b = MatRef { data: &bd, off: 0, rs: n, cs: 1 };
+        let product = naive(&|i, p| ad[i * k + p], &|p, j| bd[p * n + j], m, n, k, 1.0);
+        let mut acc = vec![1.0f32; m * n];
+        gemm(a, b, &mut acc, 0, n, m, n, k, 1.0, true);
+        let mut ovw = vec![1.0f32; m * n];
+        gemm(a, b, &mut ovw, 0, n, m, n, k, 1.0, false);
+        for i in 0..m * n {
+            assert!((acc[i] - (1.0 + product[i])).abs() < 1e-5);
+            assert!((ovw[i] - product[i]).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn strided_output_leaves_gaps_untouched() {
+        // c rows are wider than ndim: the tail of each row must survive.
+        let (m, n, k, c_rs) = (4usize, 3usize, 2usize, 8usize);
+        let ad = fill(m * k, 7);
+        let bd = fill(k * n, 8);
+        let a = MatRef { data: &ad, off: 0, rs: k, cs: 1 };
+        let b = MatRef { data: &bd, off: 0, rs: n, cs: 1 };
+        let mut c = vec![7.0f32; m * c_rs + 1];
+        gemm(a, b, &mut c, 1, c_rs, m, n, k, 1.0, false);
+        let want = naive(&|i, p| ad[i * k + p], &|p, j| bd[p * n + j], m, n, k, 1.0);
+        assert_eq!(c[0], 7.0);
+        for i in 0..m {
+            for j in 0..c_rs {
+                let got = c[1 + i * c_rs + j];
+                if j < n {
+                    assert!((got - want[i * n + j]).abs() < 1e-5);
+                } else {
+                    assert_eq!(got, 7.0, "gap ({i},{j}) clobbered");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn zero_k_zeroes_on_overwrite_only() {
+        let a = MatRef { data: &[], off: 0, rs: 1, cs: 1 };
+        let b = MatRef { data: &[], off: 0, rs: 1, cs: 1 };
+        let mut c = vec![3.0f32; 6];
+        gemm(a, b, &mut c, 0, 3, 2, 3, 0, 1.0, true);
+        assert!(c.iter().all(|&x| x == 3.0));
+        gemm(a, b, &mut c, 0, 3, 2, 3, 0, 1.0, false);
+        assert!(c.iter().all(|&x| x == 0.0));
+    }
+}

@@ -1,0 +1,363 @@
+//! Compute kernels for the native stack: blocked GEMM micro-kernels with
+//! scalar differential oracles behind an [`Impl`] switch.
+//!
+//! Every dense FLOP in the native backend — Q/K/V/O projections, the tiled
+//! attention kernel's `[q_tile, k_tile]` score blocks and `probs @ V`
+//! accumulation, the LM head, and the training backward's `xᵀ·dy` /
+//! `dy·wᵀ` reductions — routes through this module. [`Impl`] mirrors
+//! [`crate::attention::Kernel`]: `Blocked` (default) runs the
+//! cache-blocked, register-tiled kernels in [`blocked`]; `Scalar` runs the
+//! element-at-a-time PR-2 loops in [`scalar`], kept as the oracle every
+//! blocked path is differentially tested against
+//! (`rust/tests/linalg_differential.rs`) and as the end-to-end baseline the
+//! bench regression guard compares throughput with.
+//!
+//! Selection: `SQA_LINALG=blocked|scalar` process-wide, the native
+//! backend's `forward_impl` strings (`tiled+scalar` etc.), or an explicit
+//! `Impl` argument. Large row-major products ([`matmul`],
+//! [`matmul_bias_into`]) optionally fan row blocks out over a
+//! [`ThreadPool`] via [`ThreadPool::run_borrowed`]; the fan-out is applied
+//! identically to both impls so blocked-vs-scalar comparisons measure the
+//! kernels, not the thread count.
+
+pub(crate) mod blocked;
+pub mod scalar;
+
+use crate::util::threadpool::ThreadPool;
+use anyhow::{bail, Result};
+use blocked::MatRef;
+
+/// Which GEMM lowering to run — the linalg analogue of
+/// [`crate::attention::Kernel`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Impl {
+    /// Element-at-a-time loops — the differential-testing oracle.
+    Scalar,
+    /// Cache-blocked, register-tiled micro-kernels (the default).
+    #[default]
+    Blocked,
+}
+
+impl Impl {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "scalar" => Ok(Self::Scalar),
+            "blocked" => Ok(Self::Blocked),
+            other => bail!("unknown linalg impl {other:?} (scalar|blocked)"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Scalar => "scalar",
+            Self::Blocked => "blocked",
+        }
+    }
+
+    /// Impl selected by `SQA_LINALG` (default: blocked). Panics on an
+    /// unknown value, exactly like `SQA_KERNEL` — a differential run that
+    /// silently fell back to the kernel under test would be worse than no
+    /// run at all.
+    pub fn from_env() -> Self {
+        match std::env::var("SQA_LINALG").ok().as_deref() {
+            Some(s) if !s.is_empty() => {
+                Self::parse(s).unwrap_or_else(|e| panic!("SQA_LINALG: {e:#}"))
+            }
+            _ => Self::default(),
+        }
+    }
+}
+
+/// Don't fan a product out below this many rows per job…
+const PAR_MIN_ROWS: usize = 32;
+/// …or below this many multiply-adds total (threads cost more than they buy).
+const PAR_MIN_MACS: usize = 1 << 21;
+
+/// `x[s, m] @ w[m, n]` into a fresh buffer. With a pool, row blocks fan out
+/// across workers (callers already running *on* a pool worker must pass
+/// `None` — nested submission can deadlock the bounded queue).
+pub fn matmul(
+    imp: Impl,
+    x: &[f32],
+    w: &[f32],
+    s: usize,
+    m: usize,
+    n: usize,
+    pool: Option<&ThreadPool>,
+) -> Vec<f32> {
+    let mut out = vec![0.0f32; s * n];
+    matmul_acc_into(imp, x, w, &mut out, s, m, n, pool);
+    out
+}
+
+/// `out[i, :] = bias + x[i, :] @ w` (the LM head shape). Overwrites `out`.
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_bias_into(
+    imp: Impl,
+    x: &[f32],
+    w: &[f32],
+    bias: &[f32],
+    out: &mut [f32],
+    s: usize,
+    m: usize,
+    n: usize,
+    pool: Option<&ThreadPool>,
+) {
+    debug_assert_eq!(bias.len(), n);
+    for row in out[..s * n].chunks_mut(n) {
+        row.copy_from_slice(bias);
+    }
+    matmul_acc_into(imp, x, w, out, s, m, n, pool);
+}
+
+/// `out[s, n] += x[s, m] @ w[m, n]`, optionally fanned over row blocks.
+#[allow(clippy::too_many_arguments)]
+fn matmul_acc_into(
+    imp: Impl,
+    x: &[f32],
+    w: &[f32],
+    out: &mut [f32],
+    s: usize,
+    m: usize,
+    n: usize,
+    pool: Option<&ThreadPool>,
+) {
+    debug_assert!(x.len() >= s * m && w.len() >= m * n && out.len() >= s * n);
+    if let Some(pool) = pool {
+        if s >= 2 * PAR_MIN_ROWS && s * m * n >= PAR_MIN_MACS && pool.n_workers() > 1 {
+            let rows_per_job = s.div_ceil(4 * pool.n_workers()).max(PAR_MIN_ROWS);
+            let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+            for (idx, chunk) in out[..s * n].chunks_mut(rows_per_job * n).enumerate() {
+                let i0 = idx * rows_per_job;
+                let rows = chunk.len() / n;
+                let xs = &x[i0 * m..(i0 + rows) * m];
+                jobs.push(Box::new(move || matmul_acc_serial(imp, xs, w, chunk, rows, m, n)));
+            }
+            pool.run_borrowed(jobs);
+            return;
+        }
+    }
+    matmul_acc_serial(imp, x, w, out, s, m, n);
+}
+
+fn matmul_acc_serial(
+    imp: Impl,
+    x: &[f32],
+    w: &[f32],
+    out: &mut [f32],
+    s: usize,
+    m: usize,
+    n: usize,
+) {
+    match imp {
+        Impl::Scalar => scalar::matmul_acc(x, w, out, s, m, n),
+        Impl::Blocked => blocked::gemm(
+            MatRef { data: x, off: 0, rs: m, cs: 1 },
+            MatRef { data: w, off: 0, rs: n, cs: 1 },
+            out,
+            0,
+            n,
+            s,
+            n,
+            m,
+            1.0,
+            true,
+        ),
+    }
+}
+
+/// `g[m, n] += x[s, m]ᵀ @ dy[s, n]` — the weight-gradient reduction.
+pub fn accum_xt_dy(imp: Impl, g: &mut [f32], x: &[f32], dy: &[f32], s: usize, m: usize, n: usize) {
+    match imp {
+        Impl::Scalar => scalar::xt_dy(g, x, dy, s, m, n),
+        Impl::Blocked => blocked::gemm(
+            MatRef { data: x, off: 0, rs: 1, cs: m },
+            MatRef { data: dy, off: 0, rs: n, cs: 1 },
+            g,
+            0,
+            n,
+            m,
+            n,
+            s,
+            1.0,
+            true,
+        ),
+    }
+}
+
+/// `dx[s, m] += dy[s, n] @ w[m, n]ᵀ` — the input-gradient reduction.
+pub fn accum_dy_wt(imp: Impl, dx: &mut [f32], dy: &[f32], w: &[f32], s: usize, m: usize, n: usize) {
+    match imp {
+        Impl::Scalar => scalar::dy_wt(dx, dy, w, s, m, n),
+        Impl::Blocked => blocked::gemm(
+            MatRef { data: dy, off: 0, rs: n, cs: 1 },
+            MatRef { data: w, off: 0, rs: 1, cs: n },
+            dx,
+            0,
+            m,
+            s,
+            m,
+            n,
+            1.0,
+            true,
+        ),
+    }
+}
+
+/// Attention score block (overwrite): one `[tq, tk]` tile of
+/// `scale · Q Kᵀ` over strided row slabs — row `r` of a slab lives at
+/// `slab[r * stride + off ..][..d]`, covering both the oracle's `[S, d]`
+/// per-head layout and the native backend's head-interleaved `[S, H·d]`.
+#[allow(clippy::too_many_arguments)]
+pub fn score_block(
+    imp: Impl,
+    q: &[f32],
+    q_stride: usize,
+    q_off: usize,
+    i0: usize,
+    tq: usize,
+    k: &[f32],
+    kv_stride: usize,
+    kv_off: usize,
+    j0: usize,
+    tk: usize,
+    d: usize,
+    scale: f32,
+    scores: &mut [f32],
+    scores_stride: usize,
+) {
+    match imp {
+        Impl::Scalar => scalar::score_block(
+            q, q_stride, q_off, i0, tq, k, kv_stride, kv_off, j0, tk, d, scale, scores,
+            scores_stride,
+        ),
+        Impl::Blocked => blocked::gemm(
+            MatRef { data: q, off: i0 * q_stride + q_off, rs: q_stride, cs: 1 },
+            MatRef { data: k, off: j0 * kv_stride + kv_off, rs: 1, cs: kv_stride },
+            scores,
+            0,
+            scores_stride,
+            tq,
+            tk,
+            d,
+            scale,
+            false,
+        ),
+    }
+}
+
+/// Attention output accumulation: `out_tile[tq, d] += probs[tq, tk] @ V_tile`
+/// over the same strided-slab convention as [`score_block`]. Probabilities
+/// must be exactly 0 for masked entries; with finite values a zero weight
+/// contributes nothing in either impl.
+#[allow(clippy::too_many_arguments)]
+pub fn pv_block(
+    imp: Impl,
+    probs: &[f32],
+    probs_stride: usize,
+    tq: usize,
+    tk: usize,
+    v: &[f32],
+    kv_stride: usize,
+    kv_off: usize,
+    j0: usize,
+    d: usize,
+    out: &mut [f32],
+    out_stride: usize,
+    out_off: usize,
+) {
+    match imp {
+        Impl::Scalar => scalar::pv_block(
+            probs, probs_stride, tq, tk, v, kv_stride, kv_off, j0, d, out, out_stride, out_off,
+        ),
+        Impl::Blocked => blocked::gemm(
+            MatRef { data: probs, off: 0, rs: probs_stride, cs: 1 },
+            MatRef { data: v, off: j0 * kv_stride + kv_off, rs: kv_stride, cs: 1 },
+            out,
+            out_off,
+            out_stride,
+            tq,
+            d,
+            tk,
+            1.0,
+            true,
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn randn(len: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg64::new(seed);
+        (0..len).map(|_| rng.normal_f32(0.0, 0.5)).collect()
+    }
+
+    #[test]
+    fn parse_round_trips() {
+        assert_eq!(Impl::parse("scalar").unwrap(), Impl::Scalar);
+        assert_eq!(Impl::parse("blocked").unwrap(), Impl::Blocked);
+        assert_eq!(Impl::default(), Impl::Blocked);
+        assert_eq!(Impl::Blocked.name(), "blocked");
+        assert!(Impl::parse("simd").is_err());
+    }
+
+    #[test]
+    fn matmul_known_values_both_impls() {
+        // [[1,2],[3,4]] @ [[5,6],[7,8]] = [[19,22],[43,50]]
+        let x = [1.0, 2.0, 3.0, 4.0];
+        let w = [5.0, 6.0, 7.0, 8.0];
+        for imp in [Impl::Scalar, Impl::Blocked] {
+            let out = matmul(imp, &x, &w, 2, 2, 2, None);
+            assert_eq!(out, vec![19.0, 22.0, 43.0, 50.0], "{imp:?}");
+        }
+    }
+
+    #[test]
+    fn bias_rows_are_prefilled() {
+        let x = [2.0f32];
+        let w = [3.0, 0.0];
+        let bias = [10.0, 20.0];
+        for imp in [Impl::Scalar, Impl::Blocked] {
+            let mut out = vec![f32::NAN; 2];
+            matmul_bias_into(imp, &x, &w, &bias, &mut out, 1, 1, 2, None);
+            assert_eq!(out, vec![16.0, 20.0], "{imp:?}");
+        }
+    }
+
+    #[test]
+    fn pool_fanout_matches_serial() {
+        let pool = ThreadPool::new(4, 64);
+        // Big enough to clear both parallel thresholds.
+        let (s, m, n) = (256usize, 64usize, 160usize);
+        let x = randn(s * m, 1);
+        let w = randn(m * n, 2);
+        for imp in [Impl::Scalar, Impl::Blocked] {
+            let serial = matmul(imp, &x, &w, s, m, n, None);
+            let par = matmul(imp, &x, &w, s, m, n, Some(&pool));
+            // Identical per-row arithmetic, so bitwise equality is expected.
+            assert_eq!(serial, par, "{imp:?}");
+        }
+    }
+
+    #[test]
+    fn transpose_variants_accumulate() {
+        let (s, m, n) = (7usize, 5usize, 9usize);
+        let x = randn(s * m, 3);
+        let dy = randn(s * n, 4);
+        let w = randn(m * n, 5);
+        let g0 = randn(m * n, 6);
+        let dx0 = randn(s * m, 7);
+        let (mut g_s, mut g_b) = (g0.clone(), g0);
+        accum_xt_dy(Impl::Scalar, &mut g_s, &x, &dy, s, m, n);
+        accum_xt_dy(Impl::Blocked, &mut g_b, &x, &dy, s, m, n);
+        let (mut dx_s, mut dx_b) = (dx0.clone(), dx0);
+        accum_dy_wt(Impl::Scalar, &mut dx_s, &dy, &w, s, m, n);
+        accum_dy_wt(Impl::Blocked, &mut dx_b, &dy, &w, s, m, n);
+        for (a, b) in g_s.iter().zip(&g_b).chain(dx_s.iter().zip(&dx_b)) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+    }
+}

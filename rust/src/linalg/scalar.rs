@@ -1,0 +1,124 @@
+//! Scalar reference kernels — the differential oracles for [`super::blocked`].
+//!
+//! These are the element-at-a-time loops the native backend ran through
+//! PR 2 (they lived in `runtime::native` before the `linalg` subsystem
+//! existed). They stay deliberately simple: one accumulator per output
+//! element, ascending-k summation, no packing, no tiling. Every blocked
+//! kernel is tested against them (`rust/tests/linalg_differential.rs`), and
+//! `Impl::Scalar` keeps them selectable end-to-end so a whole forward or
+//! train step can be re-run on the oracle path.
+
+/// `out[s, n] += x[s, m] @ w[m, n]` (row-major, contiguous inner loop).
+pub fn matmul_acc(x: &[f32], w: &[f32], out: &mut [f32], s: usize, m: usize, n: usize) {
+    debug_assert!(x.len() >= s * m && w.len() >= m * n && out.len() >= s * n);
+    for i in 0..s {
+        let xr = &x[i * m..(i + 1) * m];
+        let or = &mut out[i * n..(i + 1) * n];
+        for (p, &xv) in xr.iter().enumerate() {
+            let wr = &w[p * n..(p + 1) * n];
+            for (o, &wv) in or.iter_mut().zip(wr) {
+                *o += xv * wv;
+            }
+        }
+    }
+}
+
+/// `g[m, n] += x[s, m]^T @ dy[s, n]`.
+pub fn xt_dy(g: &mut [f32], x: &[f32], dy: &[f32], s: usize, m: usize, n: usize) {
+    debug_assert!(g.len() >= m * n && x.len() >= s * m && dy.len() >= s * n);
+    for i in 0..s {
+        let xr = &x[i * m..(i + 1) * m];
+        let dr = &dy[i * n..(i + 1) * n];
+        for (p, &xv) in xr.iter().enumerate() {
+            let gr = &mut g[p * n..(p + 1) * n];
+            for (gv, &dv) in gr.iter_mut().zip(dr) {
+                *gv += xv * dv;
+            }
+        }
+    }
+}
+
+/// `dx[s, m] += dy[s, n] @ w[m, n]^T`.
+pub fn dy_wt(dx: &mut [f32], dy: &[f32], w: &[f32], s: usize, m: usize, n: usize) {
+    debug_assert!(dx.len() >= s * m && dy.len() >= s * n && w.len() >= m * n);
+    for i in 0..s {
+        let dr = &dy[i * n..(i + 1) * n];
+        let xr = &mut dx[i * m..(i + 1) * m];
+        for (p, xv) in xr.iter_mut().enumerate() {
+            let wr = &w[p * n..(p + 1) * n];
+            let mut acc = 0.0f32;
+            for (&dv, &wv) in dr.iter().zip(wr) {
+                acc += dv * wv;
+            }
+            *xv += acc;
+        }
+    }
+}
+
+/// Attention score block over strided row slabs (overwrite):
+/// `scores[ti * scores_stride + jj] = scale * q_{i0+ti} · k_{j0+jj}` where
+/// row `r` of a slab lives at `slab[r * stride + off ..][..d]`.
+#[allow(clippy::too_many_arguments)]
+pub fn score_block(
+    q: &[f32],
+    q_stride: usize,
+    q_off: usize,
+    i0: usize,
+    tq: usize,
+    k: &[f32],
+    kv_stride: usize,
+    kv_off: usize,
+    j0: usize,
+    tk: usize,
+    d: usize,
+    scale: f32,
+    scores: &mut [f32],
+    scores_stride: usize,
+) {
+    for ti in 0..tq {
+        let qi = &q[(i0 + ti) * q_stride + q_off..][..d];
+        let srow = &mut scores[ti * scores_stride..][..tk];
+        for (jj, sv) in srow.iter_mut().enumerate() {
+            let kj = &k[(j0 + jj) * kv_stride + kv_off..][..d];
+            let mut acc = 0.0f32;
+            for (a, b) in qi.iter().zip(kj) {
+                acc += a * b;
+            }
+            *sv = acc * scale;
+        }
+    }
+}
+
+/// Attention output accumulation over strided row slabs:
+/// `out_{ti} += Σ_jj probs[ti * probs_stride + jj] · v_{j0+jj}` with output
+/// row `ti` at `out[ti * out_stride + out_off ..][..d]`. Zero probabilities
+/// contribute nothing (they are skipped, matching the PR-2 loops).
+#[allow(clippy::too_many_arguments)]
+pub fn pv_block(
+    probs: &[f32],
+    probs_stride: usize,
+    tq: usize,
+    tk: usize,
+    v: &[f32],
+    kv_stride: usize,
+    kv_off: usize,
+    j0: usize,
+    d: usize,
+    out: &mut [f32],
+    out_stride: usize,
+    out_off: usize,
+) {
+    for ti in 0..tq {
+        let prow = &probs[ti * probs_stride..][..tk];
+        let orow = &mut out[ti * out_stride + out_off..][..d];
+        for (jj, &p) in prow.iter().enumerate() {
+            if p == 0.0 {
+                continue;
+            }
+            let vj = &v[(j0 + jj) * kv_stride + kv_off..][..d];
+            for (o, &vv) in orow.iter_mut().zip(vj) {
+                *o += p * vv;
+            }
+        }
+    }
+}

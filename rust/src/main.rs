@@ -75,9 +75,11 @@ COMMANDS
 
 Backend: native by default; SQA_BACKEND=pjrt (with --features pjrt builds
 and an artifacts/ dir from `make artifacts`) selects the XLA path.
-Kernel:  the native backend runs the tiled streaming attention kernel by
-default; SQA_KERNEL=naive (or `serve --kernel naive`) selects the S×S
-oracle for differential runs. `bench kernels` sweeps naive vs tiled.
+Kernel:  the native backend runs the tiled streaming attention kernel on
+blocked GEMMs by default; SQA_KERNEL=naive selects the S×S oracle and
+SQA_LINALG=scalar the element-at-a-time GEMM oracle. `serve --kernel`
+accepts the combined forms (tiled, naive, tiled+scalar, naive+scalar).
+`bench kernels` sweeps naive vs tiled.
 ";
 
 fn cmd_train(mut args: Args) -> Result<()> {

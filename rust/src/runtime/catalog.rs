@@ -10,7 +10,7 @@
 //! | tiny     | 2048  | 128     | 2      | 8  | (4, 64)      | (8, 64..256)  |
 //! | dense_sm | 4096  | 256     | 8      | 16 | (2, 128)     | —             |
 //! | moe_sm   | 2048  | 128     | 6      | 8  | (4, 128)     | —             |
-//! | bench    | 1024  | 256     | 4      | 16 | —            | (1, 512..4k)  |
+//! | bench    | 1024  | 256     | 4      | 16 | —            | (1, 512..16k) |
 //!
 //! [`Layout`] is the native parameter layout — the flat-f32-vector contract
 //! every backend shares (`[embed | per-layer wq wk wv wo | lm_head |
@@ -275,7 +275,10 @@ pub fn builtin() -> (BTreeMap<String, FamilyEntry>, BTreeMap<String, Geometry>) 
         "bench".to_string(),
         Geometry {
             fwd_batch: 1,
-            fwd_seqs: vec![512, 1024, 2048, 4096],
+            // 8k/16k buckets serve the long-sequence perf trajectory
+            // (BENCH_attention.json): the tiled kernel + blocked GEMMs
+            // reach them easily; sweeps cap via --max-seq where needed.
+            fwd_seqs: vec![512, 1024, 2048, 4096, 8192, 16384],
             train: None,
         },
     );

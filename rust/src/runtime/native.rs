@@ -2,18 +2,27 @@
 //! no artifacts.
 //!
 //! * **Forward** composes token embedding, residual
-//!   [`crate::attention::sqa_layer_with`] blocks and an LM head, running the
-//!   tiled streaming attention kernel by default (the naive S×S oracle on
-//!   request, see [`crate::attention::Kernel`]). Serving batches fan out one
-//!   row per [`crate::util::threadpool::ThreadPool`] job; a single row fans
-//!   its attention out across (head, query-tile) jobs instead.
+//!   [`crate::attention::sqa_layer_slices`] blocks and an LM head, running
+//!   the tiled streaming attention kernel by default (the naive S×S oracle
+//!   on request, see [`crate::attention::Kernel`]). Every dense product —
+//!   projections, attention score/PV blocks, LM head — runs through
+//!   [`crate::linalg`] (blocked GEMM by default, the scalar oracle loops
+//!   via [`crate::linalg::Impl::Scalar`]); weights are borrowed slices of
+//!   the flat parameter vector, never copied per layer. Serving batches fan
+//!   out one row per [`crate::util::threadpool::ThreadPool`] job with jobs
+//!   *borrowing* params/tokens (`ThreadPool::run_borrowed`, no per-request
+//!   clones); a single row fans its attention tiles and GEMM row blocks
+//!   out across the pool instead.
 //! * **Training** is a fused forward+backward+AdamW step over the shared
 //!   state layout `[params | m | v | loss, acc]`. The forward half streams
 //!   through the tiled kernel; the backward pass recomputes attention
 //!   probabilities row-by-row (checkpointing) instead of storing the
-//!   `[s, s]` score matrices; its math is differentially tested against
-//!   the forward path (train-step loss vs `eval` on identical inputs) and
-//!   against the oracle in `rust/tests/integration.rs`.
+//!   `[s, s]` score matrices, and reduces its weight/input gradients
+//!   through the same `linalg` GEMMs (`xᵀ·dy`, `dy·wᵀ`); its math is
+//!   differentially tested against the forward path (train-step loss vs
+//!   `eval` on identical inputs), against the oracle in
+//!   `rust/tests/integration.rs`, and scalar-vs-blocked in
+//!   `rust/tests/linalg_differential.rs`.
 //! * **Eval** reuses the forward path and computes cross-entropy on host.
 //!
 //! The model is the catalog's reference architecture (embed + residual
@@ -23,7 +32,8 @@
 //! the analytic FLOPs model.
 
 use crate::attention::tensor::Tensor;
-use crate::attention::{sqa_layer_with, tiled, visible_range, Kernel, Spec};
+use crate::attention::{sqa_layer_slices, tiled, visible_range, Kernel, Spec};
+use crate::linalg;
 use crate::runtime::backend::Backend;
 use crate::runtime::catalog::{self, Geometry, Layout};
 use crate::runtime::manifest::FamilyEntry;
@@ -31,7 +41,7 @@ use crate::util::rng::Pcg64;
 use crate::util::threadpool::ThreadPool;
 use anyhow::{ensure, Context, Result};
 use std::collections::BTreeMap;
-use std::sync::{mpsc, Arc};
+use std::sync::mpsc;
 
 const ADAM_B1: f32 = 0.9;
 const ADAM_B2: f32 = 0.999;
@@ -44,6 +54,7 @@ struct Model {
     lay: Layout,
     spec: Spec,
     kernel: Kernel,
+    linalg: linalg::Impl,
 }
 
 /// Pure-Rust implementation of [`Backend`].
@@ -54,6 +65,9 @@ pub struct NativeBackend {
     /// Default attention lowering (`SQA_KERNEL` env; tiled unless told
     /// otherwise). `forward_impl` overrides it per call.
     kernel: Kernel,
+    /// Default GEMM lowering (`SQA_LINALG` env; blocked unless told
+    /// otherwise). `forward_impl` strings like `"tiled+scalar"` override it.
+    linalg: linalg::Impl,
 }
 
 impl Default for NativeBackend {
@@ -62,13 +76,31 @@ impl Default for NativeBackend {
     }
 }
 
+/// Parse a `forward_impl` string: `kernel[+linalg]`, e.g. `"tiled"`,
+/// `"naive"`, `"tiled+scalar"`, `"naive+blocked"`. A bare kernel name
+/// leaves the linalg choice `None` so the caller falls back to the
+/// backend's configured default — a bare `"naive"` under
+/// `SQA_LINALG=scalar` must not silently re-enable the blocked GEMMs
+/// under test.
+fn parse_impl(s: &str) -> Result<(Kernel, Option<linalg::Impl>)> {
+    match s.split_once('+') {
+        Some((k, l)) => Ok((Kernel::parse(k)?, Some(linalg::Impl::parse(l)?))),
+        None => Ok((Kernel::parse(s)?, None)),
+    }
+}
+
 impl NativeBackend {
     pub fn new() -> Self {
-        Self::with_kernel(Kernel::from_env())
+        Self::with_impls(Kernel::from_env(), linalg::Impl::from_env())
     }
 
     /// Backend with an explicit default attention kernel.
     pub fn with_kernel(kernel: Kernel) -> Self {
+        Self::with_impls(kernel, linalg::Impl::from_env())
+    }
+
+    /// Backend with explicit default attention kernel *and* GEMM lowering.
+    pub fn with_impls(kernel: Kernel, linalg: linalg::Impl) -> Self {
         let (families, geoms) = catalog::builtin();
         let workers = std::thread::available_parallelism()
             .map(|n| n.get())
@@ -79,6 +111,7 @@ impl NativeBackend {
             geoms,
             pool: ThreadPool::new(workers, 256),
             kernel,
+            linalg,
         }
     }
 
@@ -89,10 +122,16 @@ impl NativeBackend {
     }
 
     fn model(&self, family: &str, variant: &str) -> Result<Model> {
-        self.model_with_kernel(family, variant, self.kernel)
+        self.model_with_impls(family, variant, self.kernel, self.linalg)
     }
 
-    fn model_with_kernel(&self, family: &str, variant: &str, kernel: Kernel) -> Result<Model> {
+    fn model_with_impls(
+        &self,
+        family: &str,
+        variant: &str,
+        kernel: Kernel,
+        linalg: linalg::Impl,
+    ) -> Result<Model> {
         let fam = Backend::family(self, family)?;
         let var = fam
             .variants
@@ -107,6 +146,7 @@ impl NativeBackend {
                 window: var.cfg.window,
             },
             kernel,
+            linalg,
         })
     }
 
@@ -135,9 +175,11 @@ impl NativeBackend {
 
     /// Forward with an explicit model (lets `forward_impl` override the
     /// kernel). A single row runs on the caller thread and fans its tiled
-    /// attention out across the pool; multi-row batches fan out one row per
-    /// pool job instead (pool jobs must not submit nested jobs — the
-    /// bounded queue could deadlock).
+    /// attention + GEMM row blocks out across the pool; multi-row batches
+    /// fan out one row per pool job instead (pool jobs must not submit
+    /// nested jobs — the bounded queue could deadlock). Batch jobs *borrow*
+    /// params/tokens via [`ThreadPool::run_borrowed`]: the serving hot path
+    /// allocates nothing per request beyond its activations.
     fn forward_model(
         &self,
         model: Model,
@@ -151,24 +193,24 @@ impl NativeBackend {
         if batch == 1 {
             return forward_row(&model, params, tokens, Some(&self.pool));
         }
-        let params = Arc::new(params.to_vec());
-        let tokens = Arc::new(tokens.to_vec());
         let (tx, rx) = mpsc::channel();
+        let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(batch);
         for ib in 0..batch {
-            let params = Arc::clone(&params);
-            let tokens = Arc::clone(&tokens);
             let tx = tx.clone();
-            self.pool.submit(move || {
+            jobs.push(Box::new(move || {
                 let row = &tokens[ib * seq..(ib + 1) * seq];
-                let _ = tx.send((ib, forward_row(&model, &params, row, None)));
-            });
+                let _ = tx.send((ib, forward_row(&model, params, row, None)));
+            }));
         }
         drop(tx);
+        self.pool.run_borrowed(jobs);
         let mut out = vec![0.0f32; batch * row_len];
-        for _ in 0..batch {
-            let (ib, logits) = rx.recv().context("forward worker lost")?;
+        let mut got = 0usize;
+        for (ib, logits) in rx.try_iter() {
             out[ib * row_len..(ib + 1) * row_len].copy_from_slice(&logits?);
+            got += 1;
         }
+        ensure!(got == batch, "forward worker lost ({got}/{batch})");
         Ok(out)
     }
 }
@@ -266,29 +308,31 @@ impl Backend for NativeBackend {
         );
 
         // Per-row forward+backward in parallel; grads reduced in row order
-        // so training stays bit-deterministic.
+        // so training stays bit-deterministic. Jobs borrow the params half
+        // of the state directly (no per-step copies).
         let n_pos = batch * seq;
         let inv_n = 1.0 / n_pos as f32;
-        let params = Arc::new(state[..p].to_vec());
-        let tokens_arc = Arc::new(tokens.to_vec());
-        let targets_arc = Arc::new(targets.to_vec());
-        let (tx, rx) = mpsc::channel();
-        for ib in 0..batch {
-            let params = Arc::clone(&params);
-            let tokens = Arc::clone(&tokens_arc);
-            let targets = Arc::clone(&targets_arc);
-            let tx = tx.clone();
-            self.pool.submit(move || {
-                let t = &tokens[ib * seq..(ib + 1) * seq];
-                let g = &targets[ib * seq..(ib + 1) * seq];
-                let _ = tx.send((ib, train_row(&model, &params, t, g, inv_n)));
-            });
-        }
-        drop(tx);
         let mut rows: Vec<Option<RowGrad>> = (0..batch).map(|_| None).collect();
-        for _ in 0..batch {
-            let (ib, rg) = rx.recv().context("train worker lost")?;
-            rows[ib] = Some(rg?);
+        {
+            let params = &state[..p];
+            let (tx, rx) = mpsc::channel();
+            let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(batch);
+            for ib in 0..batch {
+                let tx = tx.clone();
+                jobs.push(Box::new(move || {
+                    let t = &tokens[ib * seq..(ib + 1) * seq];
+                    let g = &targets[ib * seq..(ib + 1) * seq];
+                    let _ = tx.send((ib, train_row(&model, params, t, g, inv_n)));
+                }));
+            }
+            drop(tx);
+            self.pool.run_borrowed(jobs);
+            let mut got = 0usize;
+            for (ib, rg) in rx.try_iter() {
+                rows[ib] = Some(rg?);
+                got += 1;
+            }
+            ensure!(got == batch, "train worker lost ({got}/{batch})");
         }
         let mut grad = vec![0.0f32; p];
         let mut loss_sum = 0.0f64;
@@ -350,7 +394,10 @@ impl Backend for NativeBackend {
     }
 
     fn impls(&self) -> Vec<&'static str> {
-        vec!["tiled", "naive"]
+        // `kernel[+linalg]`: the bare names run the blocked GEMMs;
+        // `+scalar` swaps in the element-at-a-time oracle loops
+        // ("tiled+scalar" is the PR-2 execution path, the bench baseline).
+        vec!["tiled", "naive", "tiled+scalar", "naive+scalar"]
     }
 
     fn forward_impl(
@@ -363,9 +410,10 @@ impl Backend for NativeBackend {
         batch: usize,
         seq: usize,
     ) -> Result<Vec<f32>> {
-        let kernel = Kernel::parse(impl_)
+        let (kernel, imp) = parse_impl(impl_)
             .with_context(|| format!("native backend has no attention impl {impl_:?}"))?;
-        let model = self.model_with_kernel(family, variant, kernel)?;
+        let model =
+            self.model_with_impls(family, variant, kernel, imp.unwrap_or(self.linalg))?;
         self.forward_model(model, params, tokens, batch, seq)
     }
 }
@@ -398,19 +446,23 @@ fn token_index(t: i32, vocab: usize) -> usize {
     (t.max(0) as usize).min(vocab - 1)
 }
 
-fn weight_tensor(params: &[f32], (off, len): (usize, usize), shape: &[usize]) -> Tensor {
-    Tensor::from_vec(shape, params[off..off + len].to_vec())
-        .expect("catalog layout shape mismatch")
+/// Borrow a named weight slice out of the flat parameter vector — no copy;
+/// the serving hot path must not allocate per layer per request.
+#[inline]
+fn weight_slice(params: &[f32], (off, len): (usize, usize)) -> &[f32] {
+    &params[off..off + len]
 }
 
 /// Forward one sequence: tokens `[s]` -> logits `[s * vocab]`.
 ///
-/// Built on [`sqa_layer_with`] so the serving path exercises the shared
-/// attention kernels (tiled streaming by default, naive oracle on request);
-/// the training path below re-derives the same math with explicit buffers
-/// (and the two are differentially tested against each other). `pool`
-/// fans the tiled attention out across (head, query-tile) jobs — pass
-/// `None` when already running on a pool worker.
+/// Built on [`sqa_layer_slices`] so the serving path exercises the shared
+/// attention kernels (tiled streaming by default, naive oracle on request)
+/// and the shared [`linalg`] GEMMs; weights stay borrowed views into
+/// `params`. The training path below re-derives the same math with
+/// explicit buffers (and the two are differentially tested against each
+/// other). `pool` fans the tiled attention out across (head, query-tile)
+/// jobs and the projection/LM-head GEMMs over row blocks — pass `None`
+/// when already running on a pool worker.
 fn forward_row(
     model: &Model,
     params: &[f32],
@@ -419,7 +471,6 @@ fn forward_row(
 ) -> Result<Vec<f32>> {
     let lay = &model.lay;
     let (s, d, dh) = (tokens.len(), lay.d_model, lay.d_head);
-    let (dq, dkv) = (lay.hq * dh, lay.hkv * dh);
 
     // x [1, 1, s, d] from the embedding table.
     let (e_off, _) = lay.embed();
@@ -431,33 +482,29 @@ fn forward_row(
     }
 
     for l in 0..lay.n_layers {
-        let wq = weight_tensor(params, lay.wq(l), &[d, dq]);
-        let wk = weight_tensor(params, lay.wk(l), &[d, dkv]);
-        let wv = weight_tensor(params, lay.wv(l), &[d, dkv]);
-        let wo = weight_tensor(params, lay.wo(l), &[dq, d]);
-        let a = sqa_layer_with(&x, &wq, &wk, &wv, &wo, dh, model.spec, model.kernel, pool)?;
+        let a = sqa_layer_slices(
+            &x,
+            weight_slice(params, lay.wq(l)),
+            weight_slice(params, lay.wk(l)),
+            weight_slice(params, lay.wv(l)),
+            weight_slice(params, lay.wo(l)),
+            dh,
+            model.spec,
+            model.kernel,
+            model.linalg,
+            pool,
+        )?;
         for (xv, av) in x.data.iter_mut().zip(&a.data) {
             *xv += av;
         }
     }
 
-    // logits[i, :] = x[i, :] @ lm_head + lm_bias
+    // logits = x @ lm_head + lm_bias, one GEMM over the whole sequence.
     let vocab = lay.vocab;
-    let (h_off, _) = lay.lm_head();
-    let (b_off, _) = lay.lm_bias();
-    let bias = &params[b_off..b_off + vocab];
+    let head = weight_slice(params, lay.lm_head());
+    let bias = weight_slice(params, lay.lm_bias());
     let mut logits = vec![0.0f32; s * vocab];
-    for i in 0..s {
-        let out = &mut logits[i * vocab..(i + 1) * vocab];
-        out.copy_from_slice(bias);
-        let xr = &x.data[x.idx4(0, 0, i, 0)..][..d];
-        for (p, &xv) in xr.iter().enumerate() {
-            let wr = &params[h_off + p * vocab..][..vocab];
-            for (o, &wv) in out.iter_mut().zip(wr) {
-                *o += xv * wv;
-            }
-        }
-    }
+    linalg::matmul_bias_into(model.linalg, &x.data, head, bias, &mut logits, s, d, vocab, pool);
     Ok(logits)
 }
 
@@ -466,52 +513,6 @@ struct RowGrad {
     loss_sum: f32,
     acc_count: f32,
     grad: Vec<f32>,
-}
-
-/// `out[s, n] = x[s, m] @ w[m, n]` (row-major, contiguous inner loop).
-fn matmul(x: &[f32], w: &[f32], s: usize, m: usize, n: usize) -> Vec<f32> {
-    let mut out = vec![0.0f32; s * n];
-    for i in 0..s {
-        let xr = &x[i * m..(i + 1) * m];
-        let or = &mut out[i * n..(i + 1) * n];
-        for (p, &xv) in xr.iter().enumerate() {
-            let wr = &w[p * n..(p + 1) * n];
-            for (o, &wv) in or.iter_mut().zip(wr) {
-                *o += xv * wv;
-            }
-        }
-    }
-    out
-}
-
-/// `g[m, n] += x[s, m]^T @ dy[s, n]`.
-fn accum_xt_dy(g: &mut [f32], x: &[f32], dy: &[f32], s: usize, m: usize, n: usize) {
-    for i in 0..s {
-        let xr = &x[i * m..(i + 1) * m];
-        let dr = &dy[i * n..(i + 1) * n];
-        for (p, &xv) in xr.iter().enumerate() {
-            let gr = &mut g[p * n..(p + 1) * n];
-            for (gv, &dv) in gr.iter_mut().zip(dr) {
-                *gv += xv * dv;
-            }
-        }
-    }
-}
-
-/// `dx[s, m] += dy[s, n] @ w[m, n]^T`.
-fn accum_dy_wt(dx: &mut [f32], dy: &[f32], w: &[f32], s: usize, m: usize, n: usize) {
-    for i in 0..s {
-        let dr = &dy[i * n..(i + 1) * n];
-        let xr = &mut dx[i * m..(i + 1) * m];
-        for (p, xv) in xr.iter_mut().enumerate() {
-            let wr = &w[p * n..(p + 1) * n];
-            let mut acc = 0.0f32;
-            for (&dv, &wv) in dr.iter().zip(wr) {
-                acc += dv * wv;
-            }
-            *xv += acc;
-        }
-    }
 }
 
 /// Softmax of one attention row over its visible range (max-subtracted,
@@ -584,15 +585,17 @@ fn train_row(
     let mut caches: Vec<(Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>)> =
         Vec::with_capacity(n_layers);
     let mut probs = vec![0.0f32; s];
+    let imp = model.linalg;
+    let tile_cfg = tiled::TileConfig::default().with_linalg(imp);
     for l in 0..n_layers {
         xs.push(x.clone());
         let (wq_o, wq_n) = lay.wq(l);
         let (wk_o, wk_n) = lay.wk(l);
         let (wv_o, wv_n) = lay.wv(l);
         let (wo_o, wo_n) = lay.wo(l);
-        let q = matmul(&x, &params[wq_o..wq_o + wq_n], s, d, dq_cols);
-        let k = matmul(&x, &params[wk_o..wk_o + wk_n], s, d, dkv_cols);
-        let v = matmul(&x, &params[wv_o..wv_o + wv_n], s, d, dkv_cols);
+        let q = linalg::matmul(imp, &x, &params[wq_o..wq_o + wq_n], s, d, dq_cols, None);
+        let k = linalg::matmul(imp, &x, &params[wk_o..wk_o + wk_n], s, d, dkv_cols, None);
+        let v = linalg::matmul(imp, &x, &params[wv_o..wv_o + wv_n], s, d, dkv_cols, None);
         let mut o = vec![0.0f32; s * dq_cols];
         match model.kernel {
             // Default forward: stream the head-interleaved [s, H·dh]
@@ -615,7 +618,7 @@ fn train_row(
                         s,
                         dh,
                         spec,
-                        tiled::TileConfig::default(),
+                        tile_cfg,
                         scale,
                     );
                 }
@@ -655,7 +658,7 @@ fn train_row(
                 }
             }
         }
-        let a = matmul(&o, &params[wo_o..wo_o + wo_n], s, dq_cols, d);
+        let a = linalg::matmul(imp, &o, &params[wo_o..wo_o + wo_n], s, dq_cols, d, None);
         for (xv, av) in x.iter_mut().zip(&a) {
             *xv += av;
         }
@@ -665,47 +668,37 @@ fn train_row(
     let x_top = &xs[n_layers];
 
     // ---- LM head: loss, accuracy, dlogits -> dx and head grads ----------
-    let (h_off, _) = lay.lm_head();
+    // Forward as one GEMM over the whole sequence, backward as two GEMM
+    // reductions (xᵀ·dlogits for the head grad, dlogits·headᵀ for dx);
+    // only the per-position softmax/loss stays scalar.
+    let (h_off, h_len) = lay.lm_head();
     let (b_off, _) = lay.lm_bias();
+    let head = &params[h_off..h_off + h_len];
+    let bias = &params[b_off..b_off + vocab];
     let mut grad = vec![0.0f32; lay.n_params()];
     let mut dx = vec![0.0f32; s * d];
     let mut loss_sum = 0.0f32;
     let mut acc_count = 0.0f32;
-    let mut logits = vec![0.0f32; vocab];
-    let mut dl = vec![0.0f32; vocab];
+    let mut logits = vec![0.0f32; s * vocab];
+    linalg::matmul_bias_into(imp, x_top, head, bias, &mut logits, s, d, vocab, None);
+    let mut dlogits = vec![0.0f32; s * vocab];
     for i in 0..s {
-        logits.copy_from_slice(&params[b_off..b_off + vocab]);
-        let xr = &x_top[i * d..(i + 1) * d];
-        for (p, &xv) in xr.iter().enumerate() {
-            let wr = &params[h_off + p * vocab..][..vocab];
-            for (o, &wv) in logits.iter_mut().zip(wr) {
-                *o += xv * wv;
-            }
-        }
+        let row = &logits[i * vocab..(i + 1) * vocab];
         let t = targets[i] as usize;
-        let (lse, argmax) = log_sum_exp_argmax(&logits);
-        loss_sum += lse - logits[t];
+        let (lse, argmax) = log_sum_exp_argmax(row);
+        loss_sum += lse - row[t];
         acc_count += (argmax == t) as u8 as f32;
-        for (c, dv) in dl.iter_mut().enumerate() {
-            *dv = (logits[c] - lse).exp() * inv_n;
+        let dl = &mut dlogits[i * vocab..(i + 1) * vocab];
+        for (dv, &lv) in dl.iter_mut().zip(row) {
+            *dv = (lv - lse).exp() * inv_n;
         }
         dl[t] -= inv_n;
-        // grad accumulation: lm_bias, lm_head, and dx through the head.
-        for (gb, &dv) in grad[b_off..b_off + vocab].iter_mut().zip(&dl) {
+        for (gb, &dv) in grad[b_off..b_off + vocab].iter_mut().zip(dl.iter()) {
             *gb += dv;
         }
-        let dxr = &mut dx[i * d..(i + 1) * d];
-        for (p, &xv) in xr.iter().enumerate() {
-            let wr = &params[h_off + p * vocab..][..vocab];
-            let gr = &mut grad[h_off + p * vocab..h_off + (p + 1) * vocab];
-            let mut acc = 0.0f32;
-            for ((g, &wv), &dv) in gr.iter_mut().zip(wr).zip(&dl) {
-                *g += xv * dv;
-                acc += dv * wv;
-            }
-            dxr[p] += acc;
-        }
     }
+    linalg::accum_xt_dy(imp, &mut grad[h_off..h_off + h_len], x_top, &dlogits, s, d, vocab);
+    linalg::accum_dy_wt(imp, &mut dx, &dlogits, head, s, d, vocab);
 
     // ---- layers, in reverse ---------------------------------------------
     for l in (0..n_layers).rev() {
@@ -716,9 +709,9 @@ fn train_row(
         let (wv_o, wv_n) = lay.wv(l);
         let (wo_o, wo_n) = lay.wo(l);
         // x_out = x_in + o @ wo; dx currently holds d(x_out).
-        accum_xt_dy(&mut grad[wo_o..wo_o + wo_n], o, &dx, s, dq_cols, d);
+        linalg::accum_xt_dy(imp, &mut grad[wo_o..wo_o + wo_n], o, &dx, s, dq_cols, d);
         let mut dout = vec![0.0f32; s * dq_cols];
-        accum_dy_wt(&mut dout, &dx, &params[wo_o..wo_o + wo_n], s, dq_cols, d);
+        linalg::accum_dy_wt(imp, &mut dout, &dx, &params[wo_o..wo_o + wo_n], s, dq_cols, d);
 
         let mut dq = vec![0.0f32; s * dq_cols];
         let mut dk = vec![0.0f32; s * dkv_cols];
@@ -763,13 +756,13 @@ fn train_row(
                 }
             }
         }
-        accum_xt_dy(&mut grad[wq_o..wq_o + wq_n], x_in, &dq, s, d, dq_cols);
-        accum_xt_dy(&mut grad[wk_o..wk_o + wk_n], x_in, &dk, s, d, dkv_cols);
-        accum_xt_dy(&mut grad[wv_o..wv_o + wv_n], x_in, &dv, s, d, dkv_cols);
+        linalg::accum_xt_dy(imp, &mut grad[wq_o..wq_o + wq_n], x_in, &dq, s, d, dq_cols);
+        linalg::accum_xt_dy(imp, &mut grad[wk_o..wk_o + wk_n], x_in, &dk, s, d, dkv_cols);
+        linalg::accum_xt_dy(imp, &mut grad[wv_o..wv_o + wv_n], x_in, &dv, s, d, dkv_cols);
         // d(x_in) = d(x_out) [residual] + projections' input grads.
-        accum_dy_wt(&mut dx, &dq, &params[wq_o..wq_o + wq_n], s, d, dq_cols);
-        accum_dy_wt(&mut dx, &dk, &params[wk_o..wk_o + wk_n], s, d, dkv_cols);
-        accum_dy_wt(&mut dx, &dv, &params[wv_o..wv_o + wv_n], s, d, dkv_cols);
+        linalg::accum_dy_wt(imp, &mut dx, &dq, &params[wq_o..wq_o + wq_n], s, d, dq_cols);
+        linalg::accum_dy_wt(imp, &mut dx, &dk, &params[wk_o..wk_o + wk_n], s, d, dkv_cols);
+        linalg::accum_dy_wt(imp, &mut dx, &dv, &params[wv_o..wv_o + wv_n], s, d, dkv_cols);
     }
 
     // ---- embedding scatter ----------------------------------------------
@@ -884,20 +877,28 @@ mod tests {
         let tiled = b
             .forward_impl("tiled", "tiny", "sqa", &params, &tokens, 1, 16)
             .unwrap();
-        let naive = b
-            .forward_impl("naive", "tiny", "sqa", &params, &tokens, 1, 16)
-            .unwrap();
-        assert_eq!(tiled.len(), naive.len());
-        let worst = tiled
-            .iter()
-            .zip(&naive)
-            .map(|(a, b)| (a - b).abs())
-            .fold(0.0f32, f32::max);
-        assert!(worst < 1e-3, "kernels diverge by {worst}");
-        // The plain forward entry point runs the default (tiled) path.
+        // Every lowering — both kernels x both GEMM impls — must agree.
+        for impl_ in ["naive", "tiled+scalar", "naive+scalar", "tiled+blocked"] {
+            let other = b
+                .forward_impl(impl_, "tiny", "sqa", &params, &tokens, 1, 16)
+                .unwrap();
+            assert_eq!(tiled.len(), other.len());
+            let worst = tiled
+                .iter()
+                .zip(&other)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            assert!(worst < 1e-3, "{impl_} diverges by {worst}");
+        }
+        // The plain forward entry point runs the default path:
+        // tiled kernel + blocked GEMMs.
         let default = b.forward("tiny", "sqa", &params, &tokens, 1, 16).unwrap();
         assert_eq!(default, tiled);
-        assert_eq!(b.impls(), vec!["tiled", "naive"]);
+        let explicit = b
+            .forward_impl("tiled+blocked", "tiny", "sqa", &params, &tokens, 1, 16)
+            .unwrap();
+        assert_eq!(default, explicit);
+        assert_eq!(b.impls(), vec!["tiled", "naive", "tiled+scalar", "naive+scalar"]);
     }
 
     #[test]

@@ -1,13 +1,23 @@
 //! Fixed-size thread pool with a bounded queue (tokio is unavailable).
 //!
-//! Used by the serving coordinator's worker pool and the bench harness's
-//! client load generators. The bounded queue is the backpressure primitive:
-//! `submit` blocks when the queue is full, `try_submit` fails fast —
-//! the serving path uses the latter to shed load explicitly.
+//! Used by the serving coordinator's worker pool, the native backend's
+//! row/tile fan-outs, the `linalg` GEMM row-block fan-out, and the bench
+//! harness's client load generators. The bounded queue is the backpressure
+//! primitive: `submit` blocks when the queue is full, `try_submit` fails
+//! fast — the serving path uses the latter to shed load explicitly.
+//!
+//! Two joining primitives:
+//! * [`ThreadPool::wait_idle`] blocks on a condvar signalled when the last
+//!   running job of an empty queue finishes (it used to poll `pending()` in
+//!   a 200 µs sleep loop — hot forward paths joining on the pool paid that
+//!   latency on every call);
+//! * [`ThreadPool::run_borrowed`] runs a batch of *borrowing* jobs and
+//!   blocks until all of them complete, which is what lets the compute
+//!   paths fan out over slices of caller-owned buffers without cloning
+//!   them into `Arc`s.
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
@@ -16,19 +26,29 @@ struct Queue {
     jobs: Mutex<QueueState>,
     not_empty: Condvar,
     not_full: Condvar,
+    /// Signalled when the queue drains and the last running job finishes.
+    idle: Condvar,
     capacity: usize,
 }
 
 struct QueueState {
     items: VecDeque<Job>,
+    /// Jobs popped but still running (owned by the queue mutex so `idle`
+    /// can be signalled without racing `pending`).
+    active: usize,
     shutdown: bool,
+}
+
+impl QueueState {
+    fn is_idle(&self) -> bool {
+        self.items.is_empty() && self.active == 0
+    }
 }
 
 /// A fixed pool of worker threads over a bounded FIFO queue.
 pub struct ThreadPool {
     queue: Arc<Queue>,
     workers: Vec<JoinHandle<()>>,
-    in_flight: Arc<AtomicUsize>,
 }
 
 impl ThreadPool {
@@ -37,32 +57,37 @@ impl ThreadPool {
         let queue = Arc::new(Queue {
             jobs: Mutex::new(QueueState {
                 items: VecDeque::new(),
+                active: 0,
                 shutdown: false,
             }),
             not_empty: Condvar::new(),
             not_full: Condvar::new(),
+            idle: Condvar::new(),
             capacity: queue_capacity,
         });
-        let in_flight = Arc::new(AtomicUsize::new(0));
         let workers = (0..n_workers)
             .map(|i| {
                 let q = Arc::clone(&queue);
-                let inflight = Arc::clone(&in_flight);
                 std::thread::Builder::new()
                     .name(format!("pool-{i}"))
-                    .spawn(move || worker_loop(q, inflight))
+                    .spawn(move || worker_loop(q))
                     .expect("spawn worker")
             })
             .collect();
-        Self {
-            queue,
-            workers,
-            in_flight,
-        }
+        Self { queue, workers }
+    }
+
+    /// Number of worker threads (fan-out sizing hint).
+    pub fn n_workers(&self) -> usize {
+        self.workers.len()
     }
 
     /// Enqueue a job, blocking while the queue is full.
     pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.submit_boxed(Box::new(f));
+    }
+
+    fn submit_boxed(&self, f: Job) {
         let mut state = self.queue.jobs.lock().unwrap();
         while state.items.len() >= self.queue.capacity && !state.shutdown {
             state = self.queue.not_full.wait(state).unwrap();
@@ -70,7 +95,7 @@ impl ThreadPool {
         if state.shutdown {
             return;
         }
-        state.items.push_back(Box::new(f));
+        state.items.push_back(f);
         self.queue.not_empty.notify_one();
     }
 
@@ -87,27 +112,74 @@ impl ThreadPool {
 
     /// Jobs queued but not yet started plus jobs currently running.
     pub fn pending(&self) -> usize {
-        self.queue.jobs.lock().unwrap().items.len() + self.in_flight.load(Ordering::Relaxed)
+        let state = self.queue.jobs.lock().unwrap();
+        state.items.len() + state.active
     }
 
-    /// Block until every queued job has finished.
+    /// Block until every queued job has finished — condvar wait, no
+    /// busy-polling: the last worker to finish with the queue empty
+    /// signals `idle`.
     pub fn wait_idle(&self) {
-        loop {
-            if self.pending() == 0 {
-                return;
-            }
-            std::thread::sleep(std::time::Duration::from_micros(200));
+        let mut state = self.queue.jobs.lock().unwrap();
+        while !state.is_idle() {
+            state = self.queue.idle.wait(state).unwrap();
         }
+    }
+
+    /// Run a batch of jobs that may **borrow** from the caller's stack and
+    /// block until every one of them has completed.
+    ///
+    /// This is the scoped-fan-out primitive behind the linalg row-block
+    /// parallelism and the native backend's per-row batch fan: jobs get
+    /// `&`/`&mut` slices of caller-owned buffers directly — no `Arc`
+    /// clones, no per-request allocation. A completion latch (one channel
+    /// message per job, sent after the job body returns or unwinds) makes
+    /// the early-return-while-borrowed case impossible: we do not return
+    /// until every job has stopped touching the borrows.
+    ///
+    /// Panics if a job panicked (its latch message never arrives). Do not
+    /// call from *inside* a pool job — the bounded queue can deadlock on
+    /// nested submission, same as [`ThreadPool::submit`].
+    pub fn run_borrowed<'env>(&self, jobs: Vec<Box<dyn FnOnce() + Send + 'env>>) {
+        let n = jobs.len();
+        let (tx, rx) = mpsc::channel::<()>();
+        for job in jobs {
+            let tx = tx.clone();
+            let wrapped: Box<dyn FnOnce() + Send + 'env> = Box::new(move || {
+                // On unwind `tx` drops unsent; the latch then comes up
+                // short and we panic below instead of hanging.
+                job();
+                let _ = tx.send(());
+            });
+            // SAFETY: lifetime erasure only. The closure (and everything it
+            // borrows) is guaranteed to be done before this function
+            // returns: we block on one latch message per job, and a message
+            // is only missing if the job unwound — in which case its borrows
+            // were released during the unwind. Jobs dropped unrun (pool
+            // shutdown) drop their `tx` immediately, which also releases
+            // the borrows before the latch loop ends.
+            #[allow(clippy::useless_transmute, clippy::missing_transmute_annotations)]
+            let wrapped: Job = unsafe {
+                std::mem::transmute::<Box<dyn FnOnce() + Send + 'env>, Job>(wrapped)
+            };
+            self.submit_boxed(wrapped);
+        }
+        drop(tx);
+        let mut done = 0usize;
+        while rx.recv().is_ok() {
+            done += 1;
+        }
+        assert!(done == n, "pool job failed while running borrowed batch ({done}/{n})");
     }
 }
 
-fn worker_loop(queue: Arc<Queue>, in_flight: Arc<AtomicUsize>) {
+fn worker_loop(queue: Arc<Queue>) {
     loop {
         let job = {
             let mut state = queue.jobs.lock().unwrap();
             loop {
                 if let Some(job) = state.items.pop_front() {
-                    in_flight.fetch_add(1, Ordering::Relaxed);
+                    state.active += 1;
                     queue.not_full.notify_one();
                     break job;
                 }
@@ -117,8 +189,17 @@ fn worker_loop(queue: Arc<Queue>, in_flight: Arc<AtomicUsize>) {
                 state = queue.not_empty.wait(state).unwrap();
             }
         };
-        job();
-        in_flight.fetch_sub(1, Ordering::Relaxed);
+        // A panicking job must not kill the worker (a shrinking pool turns
+        // into missed latches and stuck queues) nor leak `active`.
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
+        if result.is_err() {
+            log::error!("thread pool job panicked");
+        }
+        let mut state = queue.jobs.lock().unwrap();
+        state.active -= 1;
+        if state.is_idle() {
+            queue.idle.notify_all();
+        }
     }
 }
 
@@ -139,7 +220,7 @@ impl Drop for ThreadPool {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::atomic::AtomicU64;
+    use std::sync::atomic::{AtomicU64, Ordering};
 
     #[test]
     fn runs_all_jobs() {
@@ -153,6 +234,8 @@ mod tests {
         }
         pool.wait_idle();
         assert_eq!(counter.load(Ordering::SeqCst), 100);
+        assert_eq!(pool.pending(), 0);
+        assert_eq!(pool.n_workers(), 4);
     }
 
     #[test]
@@ -191,5 +274,55 @@ mod tests {
         pool.wait_idle();
         drop(pool);
         assert_eq!(counter.load(Ordering::SeqCst), 10);
+    }
+
+    #[test]
+    fn wait_idle_blocks_until_running_job_finishes() {
+        // The queue is empty the moment the worker pops the job; wait_idle
+        // must still block on the *running* job, not return early.
+        let pool = ThreadPool::new(1, 4);
+        let done = Arc::new(AtomicU64::new(0));
+        let d = Arc::clone(&done);
+        pool.submit(move || {
+            std::thread::sleep(std::time::Duration::from_millis(30));
+            d.store(1, Ordering::SeqCst);
+        });
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        pool.wait_idle();
+        assert_eq!(done.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn run_borrowed_sees_stack_data_and_joins() {
+        let pool = ThreadPool::new(3, 8);
+        let input: Vec<u64> = (0..64).collect();
+        let mut out = vec![0u64; 64];
+        {
+            let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+            for (i, chunk) in out.chunks_mut(16).enumerate() {
+                let src = &input[i * 16..(i + 1) * 16];
+                jobs.push(Box::new(move || {
+                    for (o, &s) in chunk.iter_mut().zip(src) {
+                        *o = s * 2;
+                    }
+                }));
+            }
+            pool.run_borrowed(jobs);
+        }
+        assert!(out.iter().enumerate().all(|(i, &x)| x == 2 * i as u64));
+    }
+
+    #[test]
+    fn pool_survives_a_panicking_job() {
+        let pool = ThreadPool::new(1, 4);
+        pool.submit(|| panic!("boom"));
+        pool.wait_idle(); // must not hang or leak `active`
+        let c = Arc::new(AtomicU64::new(0));
+        let c2 = Arc::clone(&c);
+        pool.submit(move || {
+            c2.fetch_add(1, Ordering::SeqCst);
+        });
+        pool.wait_idle();
+        assert_eq!(c.load(Ordering::SeqCst), 1, "worker died on panic");
     }
 }

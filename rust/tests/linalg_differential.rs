@@ -1,0 +1,267 @@
+//! Differential suite for the `linalg` subsystem: the blocked GEMM
+//! micro-kernels vs the scalar oracle loops, from raw products up through
+//! the full attention layer and a whole train step.
+//!
+//! Shape grids deliberately straddle every blocking boundary: the MR=4 /
+//! NR=16 micro-tile edges, the KC=256 k-block edge, and the degenerate
+//! s = 1 / n = 1 cases. Tolerance is 1e-4 — the two impls share the
+//! ascending-k summation order, so observed diffs are near-zero; the
+//! tolerance guards against future re-blocking.
+
+use sqa::attention::tensor::Tensor;
+use sqa::attention::{sqa_layer_slices, Kernel, Spec};
+use sqa::linalg::{self, Impl};
+use sqa::runtime::{Backend, NativeBackend};
+use sqa::util::rng::Pcg64;
+
+const TOL: f32 = 1e-4;
+
+fn randn(len: usize, seed: u64, std: f32) -> Vec<f32> {
+    let mut rng = Pcg64::new(seed);
+    (0..len).map(|_| rng.normal_f32(0.0, std)).collect()
+}
+
+fn max_diff(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f32, f32::max)
+}
+
+/// Dims straddling the micro-tile (4/16) and k-block (256) boundaries.
+const ODD_DIMS: &[usize] = &[1, 3, 4, 5, 15, 16, 17, 33];
+
+#[test]
+fn blocked_matmul_matches_scalar_over_odd_shapes() {
+    let mut seed = 10;
+    for &s in ODD_DIMS {
+        for &m in &[1usize, 5, 16, 31, 259] {
+            // 259 > KC: exercises the multi-k-block accumulation path.
+            for &n in &[1usize, 4, 15, 17, 40] {
+                seed += 1;
+                let x = randn(s * m, seed, 0.5);
+                let w = randn(m * n, seed + 1000, 0.5);
+                let want = linalg::matmul(Impl::Scalar, &x, &w, s, m, n, None);
+                let got = linalg::matmul(Impl::Blocked, &x, &w, s, m, n, None);
+                let diff = max_diff(&want, &got);
+                assert!(diff < TOL, "matmul {s}x{m}x{n}: diff {diff}");
+            }
+        }
+    }
+}
+
+#[test]
+fn transpose_variants_match_scalar_over_odd_shapes() {
+    let mut seed = 5000;
+    for &s in &[1usize, 2, 7, 33, 260] {
+        // s is the contraction dim of xᵀ·dy: 260 > KC crosses a k block.
+        for &(m, n) in &[(1usize, 1usize), (3, 17), (16, 16), (21, 5), (40, 33)] {
+            seed += 1;
+            let x = randn(s * m, seed, 0.5);
+            let dy = randn(s * n, seed + 1, 0.5);
+            let w = randn(m * n, seed + 2, 0.5);
+            // Nonzero initial accumulators: both variants must *add*.
+            let g0 = randn(m * n, seed + 3, 0.5);
+            let (mut g_s, mut g_b) = (g0.clone(), g0);
+            linalg::accum_xt_dy(Impl::Scalar, &mut g_s, &x, &dy, s, m, n);
+            linalg::accum_xt_dy(Impl::Blocked, &mut g_b, &x, &dy, s, m, n);
+            let diff = max_diff(&g_s, &g_b);
+            assert!(diff < TOL, "xt_dy s={s} {m}x{n}: diff {diff}");
+
+            let dx0 = randn(s * m, seed + 4, 0.5);
+            let (mut dx_s, mut dx_b) = (dx0.clone(), dx0);
+            linalg::accum_dy_wt(Impl::Scalar, &mut dx_s, &dy, &w, s, m, n);
+            linalg::accum_dy_wt(Impl::Blocked, &mut dx_b, &dy, &w, s, m, n);
+            let diff = max_diff(&dx_s, &dx_b);
+            assert!(diff < TOL, "dy_wt s={s} {m}x{n}: diff {diff}");
+        }
+    }
+}
+
+#[test]
+fn strided_attention_blocks_match_scalar() {
+    // Head-interleaved slabs: stride > d, nonzero head offsets, nonzero
+    // row bases — exactly how the tiled kernel addresses Q/K/V.
+    let (s, d, heads) = (23usize, 6usize, 3usize);
+    let stride = heads * d;
+    let q = randn(s * stride, 70, 0.7);
+    let k = randn(s * stride, 71, 0.7);
+    let v = randn(s * stride, 72, 0.7);
+    for &(i0, tq, j0, tk, h) in &[
+        (0usize, 5usize, 0usize, 7usize, 0usize),
+        (3, 8, 2, 16, 1),
+        (16, 7, 15, 8, 2),
+        (22, 1, 0, 1, 1), // degenerate 1x1 block
+    ] {
+        let q_off = h * d;
+        let kv_off = ((h + 1) % heads) * d;
+        let mut sc_s = vec![f32::NAN; tq * tk];
+        let mut sc_b = sc_s.clone();
+        linalg::score_block(
+            Impl::Scalar, &q, stride, q_off, i0, tq, &k, stride, kv_off, j0, tk, d, 0.3,
+            &mut sc_s, tk,
+        );
+        linalg::score_block(
+            Impl::Blocked, &q, stride, q_off, i0, tq, &k, stride, kv_off, j0, tk, d, 0.3,
+            &mut sc_b, tk,
+        );
+        let diff = max_diff(&sc_s, &sc_b);
+        assert!(diff < TOL, "score_block i0={i0} j0={j0}: diff {diff}");
+        assert!(sc_b.iter().all(|x| x.is_finite()), "score overwrite left NaN");
+
+        // probs: reuse |scores| so zeros stay zeros and weights are finite.
+        let probs: Vec<f32> = sc_s.iter().map(|x| x.abs()).collect();
+        let out0 = randn(tq * stride, 73, 0.2);
+        let (mut out_s, mut out_b) = (out0.clone(), out0);
+        linalg::pv_block(
+            Impl::Scalar, &probs, tk, tq, tk, &v, stride, kv_off, j0, d, &mut out_s, stride,
+            q_off,
+        );
+        linalg::pv_block(
+            Impl::Blocked, &probs, tk, tq, tk, &v, stride, kv_off, j0, d, &mut out_b, stride,
+            q_off,
+        );
+        let diff = max_diff(&out_s, &out_b);
+        assert!(diff < TOL, "pv_block i0={i0} j0={j0}: diff {diff}");
+        // Rows outside the written columns must be untouched by both.
+        for ti in 0..tq {
+            for c in 0..stride {
+                if !(q_off..q_off + d).contains(&c) {
+                    assert_eq!(out_b[ti * stride + c], out_s[ti * stride + c]);
+                }
+            }
+        }
+    }
+}
+
+/// (label, Hq, Hkv) — the paper's head-geometry grid.
+const GEOMETRIES: &[(&str, usize, usize)] = &[
+    ("mha", 4, 4),
+    ("gqa", 4, 2),
+    ("mqa", 4, 1),
+    ("sqa", 2, 1),
+];
+
+#[test]
+fn sqa_layer_blocked_matches_scalar_across_geometries() {
+    let d_head = 5; // deliberately not a multiple of MR/NR
+    let dm = 12;
+    for &(geom, hq, hkv) in GEOMETRIES {
+        for s in [1usize, 9, 33] {
+            for kernel in [Kernel::Tiled, Kernel::Naive] {
+                let seed = (hq * 100 + hkv * 10 + s) as u64;
+                let x = Tensor::from_vec(&[1, 1, s, dm], randn(s * dm, seed, 0.5)).unwrap();
+                let wq = randn(dm * hq * d_head, seed + 1, 0.3);
+                let wk = randn(dm * hkv * d_head, seed + 2, 0.3);
+                let wv = randn(dm * hkv * d_head, seed + 3, 0.3);
+                let wo = randn(hq * d_head * dm, seed + 4, 0.3);
+                let spec = Spec::causal(hq, hkv);
+                let run = |imp: Impl| {
+                    sqa_layer_slices(
+                        &x, &wq, &wk, &wv, &wo, d_head, spec, kernel, imp, None,
+                    )
+                    .unwrap()
+                };
+                let scalar = run(Impl::Scalar);
+                let blocked = run(Impl::Blocked);
+                let diff = scalar.max_abs_diff(&blocked);
+                assert!(
+                    diff < TOL,
+                    "{geom} (Hq={hq} Hkv={hkv}) s={s} {kernel:?}: diff {diff}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn forward_impl_blocked_matches_scalar_on_tiny_variants() {
+    // End-to-end logits, blocked vs scalar GEMMs under the same (tiled)
+    // attention kernel, across the catalog's MHA/GQA/MQA/SQA variants.
+    let b = NativeBackend::new();
+    let tokens: Vec<i32> = (0..24).map(|i| ((i * 131 + 17) % 2048) as i32).collect();
+    for variant in ["mha", "gqa", "mqa", "sqa"] {
+        let params = b.init_params("tiny", variant, 29).unwrap();
+        let blocked = b
+            .forward_impl("tiled", "tiny", variant, &params, &tokens, 1, 24)
+            .unwrap();
+        let scalar = b
+            .forward_impl("tiled+scalar", "tiny", variant, &params, &tokens, 1, 24)
+            .unwrap();
+        let diff = max_diff(&blocked, &scalar);
+        assert!(diff < TOL, "tiny/{variant}: logits diverge by {diff}");
+    }
+}
+
+#[test]
+fn train_step_gradients_match_between_impls() {
+    // One fused forward+backward+AdamW step, scalar vs blocked GEMMs end
+    // to end (projections, attention blocks, LM head, xᵀ·dy / dy·wᵀ):
+    // losses and the *updated* parameters must agree to 1e-4.
+    let blocked = NativeBackend::with_impls(Kernel::Tiled, Impl::Blocked);
+    let scalar = NativeBackend::with_impls(Kernel::Tiled, Impl::Scalar);
+    for variant in ["sqa", "mqa"] {
+        let params = blocked.init_params("tiny", variant, 41).unwrap();
+        let p = params.len();
+        let (bs, s) = blocked.train_shape("tiny", variant).unwrap();
+        let tokens: Vec<i32> = (0..bs * s).map(|i| ((i * 37 + 3) % 2048) as i32).collect();
+        let targets: Vec<i32> = tokens.iter().map(|t| (t * 5 + 11) % 2048).collect();
+
+        let run = |backend: &NativeBackend| -> (f32, Vec<f32>) {
+            let mut state = vec![0.0f32; 3 * p + 2];
+            state[..p].copy_from_slice(&params);
+            let (loss, _) = backend
+                .train_step("tiny", variant, &mut state, 1, 1e-2, &tokens, &targets, bs, s)
+                .unwrap();
+            (loss, state)
+        };
+        let (loss_b, state_b) = run(&blocked);
+        let (loss_s, state_s) = run(&scalar);
+        assert!(
+            (loss_b - loss_s).abs() < 1e-4,
+            "tiny/{variant}: loss {loss_b} vs {loss_s}"
+        );
+        let diff = max_diff(&state_b, &state_s);
+        assert!(diff < TOL, "tiny/{variant}: train state diverges by {diff}");
+    }
+}
+
+#[test]
+fn sqa_layer_slices_rejects_bad_weight_lengths() {
+    let x = Tensor::from_vec(&[1, 1, 4, 6], vec![0.0; 24]).unwrap();
+    let spec = Spec::causal(2, 1);
+    let ok_q = vec![0.0f32; 6 * 2 * 3];
+    let ok_kv = vec![0.0f32; 6 * 3];
+    let ok_o = vec![0.0f32; 2 * 3 * 6];
+    assert!(sqa_layer_slices(
+        &x, &ok_q, &ok_kv, &ok_kv, &ok_o, 3, spec, Kernel::Tiled, Impl::Blocked, None
+    )
+    .is_ok());
+    assert!(sqa_layer_slices(
+        &x,
+        &ok_q[..ok_q.len() - 1],
+        &ok_kv,
+        &ok_kv,
+        &ok_o,
+        3,
+        spec,
+        Kernel::Tiled,
+        Impl::Blocked,
+        None
+    )
+    .is_err());
+    assert!(sqa_layer_slices(
+        &x,
+        &ok_q,
+        &ok_kv,
+        &ok_kv,
+        &ok_o[1..],
+        3,
+        spec,
+        Kernel::Tiled,
+        Impl::Blocked,
+        None
+    )
+    .is_err());
+}

@@ -1,9 +1,11 @@
 //! Property-based tests (custom harness, `sqa::util::prop`) over the
-//! coordinator invariants, the native attention oracle, and the tiled
-//! streaming kernel's online-softmax invariants.
+//! coordinator invariants, the native attention oracle, the tiled
+//! streaming kernel's online-softmax invariants, and the blocked-vs-scalar
+//! GEMM equivalence of `sqa::linalg`.
 
 use sqa::attention::tiled::{attention_tiled_cfg, visited_key_tiles, TileConfig};
 use sqa::attention::{attention, tensor::Tensor, Spec};
+use sqa::linalg::{self, Impl};
 use sqa::coordinator::batcher::DynamicBatcher;
 use sqa::coordinator::request::EncodeRequest;
 use sqa::coordinator::router::Router;
@@ -220,6 +222,33 @@ fn prop_visited_key_tiles_agree_with_visible_range() {
                 ));
             }
             i0 = i1;
+        }
+        Ok(())
+    });
+}
+
+/// Blocked GEMM equivalence: for any (s, m, n) the blocked micro-kernels
+/// compute the same product as the scalar oracle loops (within f32
+/// reassociation tolerance), including shapes that are not multiples of
+/// the MR/NR micro-tile or leave partial edge panels.
+#[test]
+fn prop_blocked_gemm_matches_scalar() {
+    let gen = Pair(
+        Pair(UsizeRange { lo: 1, hi: 40 }, UsizeRange { lo: 1, hi: 40 }),
+        UsizeRange { lo: 1, hi: 40 },
+    );
+    let mut rng_seed = 9000u64;
+    check(37, 60, &gen, |((s, m), n)| {
+        rng_seed += 1;
+        let mut rng = Pcg64::new(rng_seed);
+        let x: Vec<f32> = (0..s * m).map(|_| rng.normal_f32(0.0, 0.5)).collect();
+        let w: Vec<f32> = (0..m * n).map(|_| rng.normal_f32(0.0, 0.5)).collect();
+        let want = linalg::matmul(Impl::Scalar, &x, &w, *s, *m, *n, None);
+        let got = linalg::matmul(Impl::Blocked, &x, &w, *s, *m, *n, None);
+        for (i, (a, b)) in want.iter().zip(&got).enumerate() {
+            if (a - b).abs() > 1e-4 {
+                return Err(format!("({s},{m},{n}) elem {i}: {a} vs {b}"));
+            }
         }
         Ok(())
     });
