@@ -38,7 +38,7 @@ fn main() -> Result<()> {
         max_wait_ms: 4,
         workers: 2,
         queue_capacity: 128,
-        kernel: None,
+        ..ServeConfig::default()
     };
     let engine = Engine::start(&backend, &cfg, None)?;
     println!(

@@ -1,0 +1,251 @@
+//! Decode-throughput bench: tokens/s and KV bytes/step vs context length
+//! across the variant zoo — the paper's §5.2 axis measured on the *real*
+//! prefill + incremental-decode path (per-session KV caches in
+//! `runtime::session`), not the roofline simulator.
+//!
+//! For every (variant, context) cell the bench prefills a `ctx`-token
+//! prompt, runs `--steps` incremental decode steps, and records:
+//!   * measured decode tokens/s (wall clock over the step loop);
+//!   * measured KV bytes/step from the live session
+//!     ([`Backend::session_stats`] — the buffer the step actually streams);
+//!   * the `flops::decode` roofline's predicted cache bytes for the same
+//!     final context, as a cross-check (exact match expected for
+//!     non-windowed variants: both are `2·layers·len·Hkv·dh·4`).
+//!
+//! The §5.2 ordering this makes observable: xSQA's bytes/step equals
+//! GQA's (same Hkv) while sSQA pays 2x — and MQA streams the least.
+//!
+//! Flags (after `--`):
+//!   --ctxs 256,1024,4096   context lengths             (default shown)
+//!   --steps N              decode steps per cell       (default 32)
+//!   --json FILE            output JSON                 (default
+//!                          BENCH_decode.json at the repo root, so the
+//!                          decode trajectory persists across PRs)
+//!   --smoke                exit(1) unless measured bytes/step order
+//!                          matches §5.2: xsqa <= gqa and ssqa > gqa
+//!   --quick                fewer/smaller cells
+//!
+//! CI runs: `cargo bench --bench decode_throughput -- --ctxs 256,1024
+//! --steps 16 --smoke --json BENCH_decode.json`
+
+use sqa::flops::decode::{decode_step as roofline_step, Hardware};
+use sqa::runtime::{Backend, NativeBackend};
+use sqa::util::json::Json;
+use std::time::Instant;
+
+const FAMILY: &str = "bench";
+const VARIANTS: &[&str] = &["mha", "gqa", "mqa", "sqa", "ssqa", "xsqa"];
+
+struct Flags {
+    ctxs: Vec<usize>,
+    steps: usize,
+    json: Option<String>,
+    smoke: bool,
+    quick: bool,
+}
+
+fn parse_flags() -> Flags {
+    let mut f = Flags {
+        ctxs: vec![256, 1024, 4096],
+        steps: 32,
+        json: Some("BENCH_decode.json".to_string()),
+        smoke: false,
+        quick: false,
+    };
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut i = 0;
+    while i < args.len() {
+        let value = if i + 1 < args.len() {
+            Some(args[i + 1].clone())
+        } else {
+            None
+        };
+        match (args[i].as_str(), value) {
+            ("--ctxs", Some(v)) => {
+                f.ctxs = v.split(',').filter_map(|s| s.trim().parse().ok()).collect();
+                i += 2;
+            }
+            ("--steps", Some(v)) => {
+                f.steps = v.parse().expect("--steps");
+                i += 2;
+            }
+            ("--json", Some(v)) => {
+                f.json = Some(v);
+                i += 2;
+            }
+            ("--smoke", _) => {
+                f.smoke = true;
+                i += 1;
+            }
+            ("--quick", _) => {
+                f.quick = true;
+                i += 1;
+            }
+            // Ignore unknown flags (the cargo bench runner passes its own).
+            _ => i += 1,
+        }
+    }
+    if f.quick {
+        f.ctxs.retain(|&c| c <= 1024);
+        f.steps = f.steps.min(16);
+    }
+    f
+}
+
+struct Row {
+    variant: String,
+    hq: usize,
+    hkv: usize,
+    ctx: usize,
+    prefill_ms: f64,
+    tok_per_s: f64,
+    measured_bytes_per_step: u64,
+    predicted_bytes_per_step: u64,
+    roofline_tok_per_s: f64,
+}
+
+fn main() {
+    let flags = parse_flags();
+    let backend = NativeBackend::new();
+    let fam = backend.family(FAMILY).expect("bench family");
+    let dims = fam.dims.clone();
+    let vocab = dims.vocab as i32;
+    let hw = Hardware::default();
+
+    let mut rows: Vec<Row> = Vec::new();
+    println!("## Decode throughput, family `{FAMILY}` ({} steps per cell)\n", flags.steps);
+    println!(
+        "{:6} {:>3} {:>4} {:>6} {:>11} {:>10} {:>14} {:>14} {:>12}",
+        "var", "Hq", "Hkv", "ctx", "prefill ms", "tok/s", "KV B/step", "roofline B", "roofline t/s"
+    );
+    for &ctx in &flags.ctxs {
+        for &variant in VARIANTS {
+            let cfg = backend.variant(FAMILY, variant).expect("variant").cfg;
+            let params = backend
+                .init_params(FAMILY, variant, 42)
+                .expect("init params");
+            let prompt: Vec<i32> = (0..ctx).map(|i| ((i * 131 + 17) as i32) % vocab).collect();
+            let capacity = ctx + flags.steps;
+
+            let t0 = Instant::now();
+            let (sid, logits) = backend
+                .prefill(FAMILY, variant, &params, &prompt, capacity)
+                .expect("prefill");
+            let prefill_ms = t0.elapsed().as_secs_f64() * 1e3;
+            assert!(logits.iter().all(|x| x.is_finite()));
+
+            let t1 = Instant::now();
+            for i in 0..flags.steps {
+                let tok = ((ctx + i) as i32 * 7 + 3) % vocab;
+                let l = backend.decode_step(sid, &params, tok).expect("decode step");
+                assert!(l[0].is_finite());
+            }
+            let decode_secs = t1.elapsed().as_secs_f64();
+            let tok_per_s = flags.steps as f64 / decode_secs;
+
+            let stats = backend.session_stats(sid).expect("session stats");
+            assert_eq!(stats.len, capacity);
+            backend.close_session(sid);
+
+            // Roofline cross-check at the same final context length.
+            let pred = roofline_step(&dims, &cfg, capacity as u64, hw);
+            println!(
+                "{:6} {:>3} {:>4} {:>6} {:>11.1} {:>10.1} {:>14} {:>14} {:>12.1}",
+                variant,
+                cfg.hq,
+                cfg.hkv,
+                ctx,
+                prefill_ms,
+                tok_per_s,
+                stats.kv_bytes,
+                pred.kv_bytes,
+                1.0 / pred.time()
+            );
+            rows.push(Row {
+                variant: variant.to_string(),
+                hq: cfg.hq,
+                hkv: cfg.hkv,
+                ctx,
+                prefill_ms,
+                tok_per_s,
+                measured_bytes_per_step: stats.kv_bytes,
+                predicted_bytes_per_step: pred.kv_bytes,
+                roofline_tok_per_s: 1.0 / pred.time(),
+            });
+        }
+        println!();
+    }
+
+    // Cross-check: the session's live bytes must equal the analytic
+    // model's cache term for every non-windowed variant — the bench dies
+    // if the simulated and executed decode paths ever drift apart.
+    for r in &rows {
+        assert_eq!(
+            r.measured_bytes_per_step, r.predicted_bytes_per_step,
+            "{}@{}: measured KV bytes diverge from flops::decode",
+            r.variant, r.ctx
+        );
+    }
+    println!("roofline cross-check OK: measured KV bytes/step == flops::decode prediction");
+
+    if let Some(path) = &flags.json {
+        let doc = Json::obj(vec![
+            ("bench", Json::str("decode_throughput")),
+            ("family", Json::str(FAMILY)),
+            ("steps", Json::num(flags.steps as f64)),
+            (
+                "rows",
+                Json::arr(rows.iter().map(|r| {
+                    Json::obj(vec![
+                        ("variant", Json::str(&r.variant)),
+                        ("hq", Json::num(r.hq as f64)),
+                        ("hkv", Json::num(r.hkv as f64)),
+                        ("ctx", Json::num(r.ctx as f64)),
+                        ("prefill_ms", Json::num(r.prefill_ms)),
+                        ("tok_per_s", Json::num(r.tok_per_s)),
+                        (
+                            "measured_kv_bytes_per_step",
+                            Json::num(r.measured_bytes_per_step as f64),
+                        ),
+                        (
+                            "predicted_kv_bytes_per_step",
+                            Json::num(r.predicted_bytes_per_step as f64),
+                        ),
+                        ("roofline_tok_per_s", Json::num(r.roofline_tok_per_s)),
+                    ])
+                })),
+            ),
+        ]);
+        std::fs::write(path, doc.to_string()).expect("writing bench JSON");
+        println!("decode JSON -> {path}");
+    }
+
+    if flags.smoke {
+        // The paper's §5.2 ordering as a hard guard on *measured* cache
+        // traffic: xSQA matches GQA's cache (same Hkv) and sSQA carries
+        // strictly more. Deterministic — the bytes come from buffer sizes,
+        // not timers — so no noise grace is needed.
+        let bytes = |variant: &str, ctx: usize| -> u64 {
+            rows.iter()
+                .find(|r| r.variant == variant && r.ctx == ctx)
+                .unwrap_or_else(|| panic!("smoke needs {variant}@{ctx}"))
+                .measured_bytes_per_step
+        };
+        let mut failed = false;
+        for &ctx in &flags.ctxs {
+            let (gqa, xsqa, ssqa) = (bytes("gqa", ctx), bytes("xsqa", ctx), bytes("ssqa", ctx));
+            if xsqa > gqa {
+                eprintln!("SMOKE FAIL @{ctx}: xsqa bytes/step {xsqa} > gqa {gqa}");
+                failed = true;
+            }
+            if ssqa <= gqa {
+                eprintln!("SMOKE FAIL @{ctx}: ssqa bytes/step {ssqa} <= gqa {gqa}");
+                failed = true;
+            }
+        }
+        if failed {
+            std::process::exit(1);
+        }
+        println!("decode smoke OK: xsqa <= gqa < ssqa bytes/step at every ctx");
+    }
+}

@@ -20,7 +20,7 @@ fn bench_variant(rt: &Arc<dyn Backend>, variant: &str, n_requests: usize) {
         max_wait_ms: 4,
         workers: 2,
         queue_capacity: 256,
-        kernel: None,
+        ..ServeConfig::default()
     };
     let engine = Arc::new(Engine::start(rt, &cfg, None).expect("engine"));
     let t0 = std::time::Instant::now();

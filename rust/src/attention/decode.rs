@@ -1,0 +1,198 @@
+//! Incremental (decode-phase) attention: new query rows against cached K/V.
+//!
+//! Autoregressive generation never re-attends the whole sequence: after the
+//! prompt is prefilled once, each step projects a *single* new token and
+//! attends its query row against the session's per-layer KV cache. This is
+//! the paper's §2.2/§5 memory-bound regime — the cost of a step is
+//! streaming `2 · cache_len · Hkv · d_head` floats of cache, which is why
+//! the KV-head count (not the query-head count) governs decode throughput
+//! and why xSQA matches GQA here while sSQA deliberately pays more.
+//!
+//! This module is a thin driver over the tiled kernel's machinery
+//! ([`tiled::stream_qtile_at`]): the same `linalg` score/PV micro-GEMMs,
+//! the same online softmax, the same mask handling — only the addressing
+//! differs. The query slab holds just the `n_new` fresh rows (row 0 of the
+//! slab is absolute position `pos0`), while K/V slabs are the cache's
+//! absolute rows `0 .. cache_len`. Chunked prefill falls out for free:
+//! `n_new > 1` streams multiple query tiles against the same cache.
+//!
+//! Invariants (pinned by `rust/tests/decode_differential.rs` and the units
+//! below): an N-step incremental decode produces, at every step, logits
+//! identical (to 1e-4) to a full stateless re-forward of the same prefix —
+//! across every head geometry, both attention kernels and both linalg
+//! impls.
+
+use super::tiled::{self, TileConfig};
+use super::Spec;
+use crate::linalg;
+
+/// Attend `n_new` fresh query rows (absolute positions `pos0 ..
+/// pos0 + n_new`) against `cache_len` cached key/value rows.
+///
+/// Layouts are the native backend's head-interleaved slabs:
+/// `q`/`out`: `[n_new, Hq·d]`, `k_cache`/`v_cache`: `[≥cache_len, Hkv·d]`
+/// (only the first `cache_len` rows are read). Requires
+/// `pos0 + n_new == cache_len` — the fresh rows are always the tail of the
+/// cache, so causal masking for row `ti` is `visible_range(pos0 + ti,
+/// cache_len, spec)` exactly as in the full-sequence kernels.
+#[allow(clippy::too_many_arguments)]
+pub fn decode_attend(
+    q: &[f32],
+    k_cache: &[f32],
+    v_cache: &[f32],
+    out: &mut [f32],
+    pos0: usize,
+    n_new: usize,
+    cache_len: usize,
+    d: usize,
+    spec: Spec,
+    imp: linalg::Impl,
+) {
+    debug_assert!(n_new > 0 && pos0 + n_new == cache_len);
+    let (hq, hkv) = (spec.hq, spec.hkv);
+    let group = hq / hkv;
+    let (dq, dkv) = (hq * d, hkv * d);
+    debug_assert!(q.len() >= n_new * dq && out.len() >= n_new * dq);
+    debug_assert!(k_cache.len() >= cache_len * dkv && v_cache.len() >= cache_len * dkv);
+    let scale = 1.0 / (d as f32).sqrt();
+    let cfg = TileConfig::default().with_linalg(imp);
+    for h in 0..hq {
+        let hk = h / group;
+        // Tile over the fresh rows (n_new is 1 in steady-state decode, a
+        // whole prompt chunk during chunked prefill).
+        let mut r0 = 0;
+        while r0 < n_new {
+            let r1 = (r0 + cfg.q_tile).min(n_new);
+            tiled::stream_qtile_at(
+                q,
+                dq,
+                h * d,
+                k_cache,
+                dkv,
+                hk * d,
+                v_cache,
+                &mut out[r0 * dq..],
+                dq,
+                h * d,
+                cache_len,
+                d,
+                r0,
+                pos0 + r0,
+                r1 - r0,
+                spec,
+                cfg,
+                scale,
+            );
+            r0 = r1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::tensor::Tensor;
+    use crate::attention::{attention, Spec};
+    use crate::util::rng::Pcg64;
+
+    fn rand_slab(rows: usize, cols: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg64::new(seed);
+        (0..rows * cols).map(|_| rng.normal_f32(0.0, 1.0)).collect()
+    }
+
+    /// Reshape a head-interleaved `[s, h*d]` slab into the oracle's
+    /// `[1, h, s, d]` tensor.
+    fn to_tensor(slab: &[f32], h: usize, s: usize, d: usize) -> Tensor {
+        let mut t = Tensor::zeros(&[1, h, s, d]);
+        for hh in 0..h {
+            for i in 0..s {
+                let base = t.idx4(0, hh, i, 0);
+                t.data[base..base + d].copy_from_slice(&slab[i * h * d + hh * d..][..d]);
+            }
+        }
+        t
+    }
+
+    /// Every step of an incremental decode must reproduce the oracle's row
+    /// for the same absolute position over the full cache.
+    #[test]
+    fn incremental_rows_match_oracle() {
+        let (hq, hkv, s, d) = (4usize, 2usize, 21usize, 8usize);
+        let (dq, dkv) = (hq * d, hkv * d);
+        let q = rand_slab(s, dq, 1);
+        let k = rand_slab(s, dkv, 2);
+        let v = rand_slab(s, dkv, 3);
+        for spec in [
+            Spec::causal(hq, hkv),
+            Spec {
+                hq,
+                hkv,
+                causal: true,
+                window: Some(5),
+            },
+        ] {
+            let want = attention(
+                &to_tensor(&q, hq, s, d),
+                &to_tensor(&k, hkv, s, d),
+                &to_tensor(&v, hkv, s, d),
+                spec,
+            )
+            .unwrap();
+            for imp in [linalg::Impl::Scalar, linalg::Impl::Blocked] {
+                // Prefill the first 6 rows in one chunk, then one row at a
+                // time; each fresh row must match the oracle's.
+                let mut check_rows = |pos0: usize, n_new: usize| {
+                    let cache_len = pos0 + n_new;
+                    let mut out = vec![f32::NAN; n_new * dq];
+                    decode_attend(
+                        &q[pos0 * dq..cache_len * dq],
+                        &k[..cache_len * dkv],
+                        &v[..cache_len * dkv],
+                        &mut out,
+                        pos0,
+                        n_new,
+                        cache_len,
+                        d,
+                        spec,
+                        imp,
+                    );
+                    for ti in 0..n_new {
+                        for h in 0..hq {
+                            for dd in 0..d {
+                                let got = out[ti * dq + h * d + dd];
+                                let exp = want.get4(0, h, pos0 + ti, dd);
+                                assert!(
+                                    (got - exp).abs() < 1e-4,
+                                    "{spec:?} {imp:?} row {} h{h} d{dd}: {got} vs {exp}",
+                                    pos0 + ti
+                                );
+                            }
+                        }
+                    }
+                };
+                check_rows(0, 6); // chunked prefill
+                for i in 6..s {
+                    check_rows(i, 1); // token-by-token decode
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn single_token_sequence() {
+        // pos0 = 0, cache_len = 1: row attends only itself.
+        let (hq, hkv, d) = (2usize, 1usize, 4usize);
+        let q = rand_slab(1, hq * d, 7);
+        let k = rand_slab(1, hkv * d, 8);
+        let v = rand_slab(1, hkv * d, 9);
+        let mut out = vec![f32::NAN; hq * d];
+        let spec = Spec::causal(hq, hkv);
+        decode_attend(&q, &k, &v, &mut out, 0, 1, 1, d, spec, linalg::Impl::Blocked);
+        // softmax over one key is 1.0 -> output is exactly that value row.
+        for h in 0..hq {
+            for dd in 0..d {
+                assert!((out[h * d + dd] - v[dd]).abs() < 1e-5);
+            }
+        }
+    }
+}

@@ -159,12 +159,48 @@ pub(crate) fn stream_qtile(
     cfg: TileConfig,
     scale: f32,
 ) {
-    let tq = i1 - i0;
+    stream_qtile_at(
+        q, q_stride, q_off, k, kv_stride, kv_off, v, out, out_stride, out_off, s, d, i0, i0,
+        i1 - i0, spec, cfg, scale,
+    )
+}
+
+/// [`stream_qtile`] with the query slab's row base decoupled from the
+/// absolute sequence positions — the primitive the incremental decode path
+/// ([`super::decode`]) is built on.
+///
+/// Query rows `q_row0 .. q_row0 + n_rows` of the `q` slab occupy *absolute*
+/// positions `pos0 .. pos0 + n_rows` of a sequence whose keys `0 .. s` live
+/// in `k`/`v` (for decode: the session KV cache, `s = cache_len`). Masking
+/// uses the absolute positions, score/PV micro-GEMMs address the slab rows.
+/// `out` rows are relative (`0 .. n_rows`), same as [`stream_qtile`].
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn stream_qtile_at(
+    q: &[f32],
+    q_stride: usize,
+    q_off: usize,
+    k: &[f32],
+    kv_stride: usize,
+    kv_off: usize,
+    v: &[f32],
+    out: &mut [f32],
+    out_stride: usize,
+    out_off: usize,
+    s: usize,
+    d: usize,
+    q_row0: usize,
+    pos0: usize,
+    n_rows: usize,
+    spec: Spec,
+    cfg: TileConfig,
+    scale: f32,
+) {
+    let tq = n_rows;
     let k_tile = cfg.k_tile;
     for ti in 0..tq {
         out[ti * out_stride + out_off..][..d].fill(0.0);
     }
-    let (t_lo, t_hi) = tile_visible_range(i0, i1, s, spec);
+    let (t_lo, t_hi) = tile_visible_range(pos0, pos0 + n_rows, s, spec);
     if t_hi <= t_lo {
         return; // whole tile masked: zeros, by construction not NaN
     }
@@ -187,13 +223,13 @@ pub(crate) fn stream_qtile(
         // 1. The whole score block in one micro-GEMM (overwrites the block,
         //    so nothing stale survives from the previous key tile).
         linalg::score_block(
-            cfg.linalg, q, q_stride, q_off, i0, tq, k, kv_stride, kv_off, j0, tk, d, scale,
+            cfg.linalg, q, q_stride, q_off, q_row0, tq, k, kv_stride, kv_off, j0, tk, d, scale,
             &mut scores, k_tile,
         );
         // 2. Per-row masking + online-softmax update into the probs block.
         let mut any = false;
         for ti in 0..tq {
-            let i = i0 + ti;
+            let i = pos0 + ti;
             let (lo, hi) = visible_range(i, s, spec);
             let (jlo, jhi) = (j0.max(lo), j1.min(hi));
             let srow = &scores[ti * k_tile..][..tk];

@@ -184,6 +184,18 @@ pub struct ServeConfig {
     /// "tiled+scalar" | "naive+scalar" on native. `None` = the backend's
     /// default (tiled attention on blocked GEMMs).
     pub kernel: Option<String>,
+    /// Max concurrent generation sessions (admission cap; further
+    /// generate requests queue for a slot).
+    pub max_sessions: usize,
+    /// Wall-clock budget of one generation; sessions running longer are
+    /// evicted mid-generation and reply with their partial output.
+    pub session_timeout_ms: u64,
+    /// KV-cache capacity (prompt + generated tokens) per session;
+    /// 0 = the family's largest fwd bucket.
+    pub gen_capacity: usize,
+    /// Connection-handler threads of the TCP front-end (bounded pool so a
+    /// long-running generate cannot starve encode/metrics clients).
+    pub conn_threads: usize,
 }
 
 impl Default for ServeConfig {
@@ -197,6 +209,10 @@ impl Default for ServeConfig {
             workers: 2,
             queue_capacity: 64,
             kernel: None,
+            max_sessions: 4,
+            session_timeout_ms: 30_000,
+            gen_capacity: 0,
+            conn_threads: 8,
         }
     }
 }
@@ -227,6 +243,18 @@ impl ServeConfig {
         }
         if let Some(s) = v.get("kernel").and_then(|x| x.as_str()) {
             c.kernel = Some(s.to_string());
+        }
+        if let Some(n) = v.get("max_sessions").and_then(|x| x.as_usize()) {
+            c.max_sessions = n;
+        }
+        if let Some(n) = v.get("session_timeout_ms").and_then(|x| x.as_usize()) {
+            c.session_timeout_ms = n as u64;
+        }
+        if let Some(n) = v.get("gen_capacity").and_then(|x| x.as_usize()) {
+            c.gen_capacity = n;
+        }
+        if let Some(n) = v.get("conn_threads").and_then(|x| x.as_usize()) {
+            c.conn_threads = n;
         }
         Ok(c)
     }
@@ -290,8 +318,18 @@ mod tests {
         assert_eq!(c.workers, 1);
         assert_eq!(c.family, "tiny");
         assert_eq!(c.kernel, None);
-        let j = Json::parse(r#"{"kernel":"naive"}"#).unwrap();
-        assert_eq!(ServeConfig::from_json(&j).unwrap().kernel.as_deref(), Some("naive"));
+        assert_eq!(c.max_sessions, 4);
+        assert_eq!(c.gen_capacity, 0);
+        let j = Json::parse(
+            r#"{"kernel":"naive","max_sessions":2,"session_timeout_ms":100,"gen_capacity":64,"conn_threads":3}"#,
+        )
+        .unwrap();
+        let c = ServeConfig::from_json(&j).unwrap();
+        assert_eq!(c.kernel.as_deref(), Some("naive"));
+        assert_eq!(c.max_sessions, 2);
+        assert_eq!(c.session_timeout_ms, 100);
+        assert_eq!(c.gen_capacity, 64);
+        assert_eq!(c.conn_threads, 3);
     }
 
     #[test]

@@ -83,6 +83,53 @@ impl DynamicBatcher {
     }
 }
 
+/// Per-tick coalescer for decode steps — continuous batching's inner loop.
+///
+/// Each scheduler tick, every session that is ready to advance pushes its
+/// next step here; `take_batches` drains them into chunks of at most
+/// `max_batch` (one worker job each). Unlike [`DynamicBatcher`] there is
+/// no deadline: a decode step is ready the moment its token is sampled,
+/// and the tick cadence itself bounds latency. Pure data structure, same
+/// rationale as above.
+#[derive(Debug)]
+pub struct TickBatcher<T> {
+    ready: Vec<T>,
+    max_batch: usize,
+}
+
+impl<T> TickBatcher<T> {
+    pub fn new(max_batch: usize) -> Self {
+        assert!(max_batch > 0);
+        Self {
+            ready: Vec::new(),
+            max_batch,
+        }
+    }
+
+    pub fn push(&mut self, item: T) {
+        self.ready.push(item);
+    }
+
+    pub fn len(&self) -> usize {
+        self.ready.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ready.is_empty()
+    }
+
+    /// Drain everything queued this tick into `<= max_batch`-sized chunks,
+    /// FIFO order preserved.
+    pub fn take_batches(&mut self) -> Vec<Vec<T>> {
+        let mut out = Vec::new();
+        while !self.ready.is_empty() {
+            let take = self.ready.len().min(self.max_batch);
+            out.push(self.ready.drain(..take).collect());
+        }
+        out
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -176,5 +223,27 @@ mod tests {
         let batches = b.ready(now, false);
         let ids: Vec<u64> = batches[0].requests.iter().map(|r| r.id).collect();
         assert_eq!(ids, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn tick_batcher_chunks_and_preserves_order() {
+        let mut t = TickBatcher::new(2);
+        assert!(t.is_empty());
+        for i in 0..5 {
+            t.push(i);
+        }
+        assert_eq!(t.len(), 5);
+        let batches = t.take_batches();
+        assert_eq!(batches, vec![vec![0, 1], vec![2, 3], vec![4]]);
+        assert!(t.is_empty());
+        assert!(t.take_batches().is_empty());
+    }
+
+    #[test]
+    fn tick_batcher_single_batch_under_cap() {
+        let mut t = TickBatcher::new(8);
+        t.push("a");
+        t.push("b");
+        assert_eq!(t.take_batches(), vec![vec!["a", "b"]]);
     }
 }

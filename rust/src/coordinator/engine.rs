@@ -1,60 +1,105 @@
-//! The serving engine: dispatcher + worker pool over a [`Backend`].
+//! The serving engine: dispatcher + generation scheduler + worker pool
+//! over a [`Backend`].
 //!
 //! Topology (all std threads):
 //!
 //! ```text
-//!   clients ──encode()──► bounded channel ──► dispatcher thread
-//!                                               │  DynamicBatcher
-//!                                               ▼  (bucket, ≤max_batch)
-//!                                          job queue ──► N workers
-//!                                                        (shared params +
-//!                                                         backend handle)
+//!   clients ──encode()───► bounded channel ──► dispatcher thread
+//!                                                │  DynamicBatcher
+//!                                                ▼  (bucket, ≤max_batch)
+//!   clients ──generate()─► event channel ──► gen-scheduler thread
+//!                             ▲                │  sessions + TickBatcher
+//!                             │ completions    ▼  (prefill / decode jobs)
+//!                             └───────────  job queue ──► N workers
+//!                                                         (shared params +
+//!                                                          backend handle)
 //! ```
 //!
-//! * Backpressure: the ingress channel is bounded; when full, `encode`
-//!   returns [`Reject::Overloaded`] instead of queueing unboundedly.
+//! * Backpressure: the encode ingress channel and the generation waiting
+//!   queue are bounded; both shed with [`Reject::Overloaded`].
 //! * Workers share one immutable host parameter vector (`Arc<Vec<f32>>`)
-//!   and the backend handle; the native backend additionally fans each
-//!   batch out across its own thread pool, one row per job.
-//! * Requests are padded to the bucket length. Backends with fixed-shape
-//!   entry points ([`Backend::fixed_fwd_batch`], i.e. compiled artifacts)
-//!   also get the batch padded to the artifact batch dim; the native
-//!   backend runs ragged batches and skips the wasted rows. Padding waste
-//!   is tracked in [`Metrics`] (see `router.rs` for why SQA cares less).
+//!   and the backend handle; encode batches, prefill jobs and coalesced
+//!   decode batches all drain from the same job queue, so decode steps
+//!   from many sessions execute alongside encode traffic each tick
+//!   (continuous batching).
+//! * Generation is stateful: the scheduler admits at most `max_sessions`
+//!   sessions (each holding a backend KV cache), samples tokens from the
+//!   returned logits (top-k / temperature / seed), coalesces every
+//!   runnable session's next step into one decode job per tick chunk, and
+//!   evicts sessions that exceed the wall-clock budget — replying with
+//!   their partial output.
+//! * Requests are padded to the bucket length (encode only; decode steps
+//!   are single rows and need no padding). Padding waste is tracked in
+//!   [`Metrics`] (see `router.rs` for why SQA cares less).
 
 use crate::config::ServeConfig;
-use crate::coordinator::batcher::{DynamicBatcher, PendingBatch};
+use crate::coordinator::batcher::{DynamicBatcher, PendingBatch, TickBatcher};
 use crate::coordinator::metrics::Metrics;
-use crate::coordinator::request::{EncodeRequest, EncodeResponse, Reject, TOP_K};
+use crate::coordinator::request::{
+    EncodeRequest, EncodeResponse, FinishReason, GenParams, GenerateRequest, GenerateResponse,
+    Reject, TOP_K,
+};
 use crate::coordinator::router::Router;
 use crate::data::pad_to;
+use crate::data::tokenizer::EOS;
 use crate::runtime::Backend;
+use crate::util::rng::Pcg64;
 use anyhow::{Context, Result};
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 type Reply = mpsc::Sender<Result<EncodeResponse, Reject>>;
+type GenReply = mpsc::Sender<Result<GenerateResponse, Reject>>;
 
 struct Job {
     batch: PendingBatch,
     replies: Vec<Reply>,
 }
 
+/// What a worker can be handed: an encode batch, a session prefill, or a
+/// coalesced batch of decode steps (one per session).
+enum Work {
+    Encode(Job),
+    Prefill {
+        gen: u64,
+        tokens: Vec<i32>,
+        capacity: usize,
+    },
+    /// `(gen id, backend session, token to append)` per item.
+    Decode { items: Vec<(u64, u64, i32)> },
+}
+
+/// Scheduler-bound events: new requests from clients, completions from
+/// workers. Errors travel as strings (already formatted) so the enum stays
+/// `Send` without dragging `anyhow` across threads.
+enum GenEvent {
+    Request(GenerateRequest, GenReply),
+    PrefillDone {
+        gen: u64,
+        result: Result<(u64, Vec<f32>), String>,
+        exec_ms: f64,
+    },
+    DecodeDone {
+        items: Vec<(u64, Result<Vec<f32>, String>)>,
+        exec_ms: f64,
+    },
+}
+
 struct JobQueue {
-    jobs: Mutex<VecDeque<Option<Job>>>,
+    jobs: Mutex<VecDeque<Option<Work>>>,
     cv: Condvar,
 }
 
 impl JobQueue {
-    fn push(&self, job: Option<Job>) {
+    fn push(&self, job: Option<Work>) {
         self.jobs.lock().unwrap().push_back(job);
         self.cv.notify_one();
     }
 
-    fn pop(&self) -> Option<Job> {
+    fn pop(&self) -> Option<Work> {
         let mut q = self.jobs.lock().unwrap();
         loop {
             if let Some(job) = q.pop_front() {
@@ -77,14 +122,21 @@ struct WorkerCtx {
     fixed_batch: bool,
     vocab: usize,
     /// Attention lowering override; `None` runs the backend default
-    /// (tiled streaming on native).
+    /// (tiled streaming on native). Applies to encode; generation runs the
+    /// backend's configured default lowering.
     kernel: Option<String>,
+    /// Completion channel back to the generation scheduler.
+    gen_tx: mpsc::Sender<GenEvent>,
 }
 
 /// Public handle; cheap to clone, shuts the engine down when the last
 /// handle drops.
 pub struct Engine {
     ingress: mpsc::SyncSender<(EncodeRequest, Reply)>,
+    /// Generation ingress; `None` when the backend has no decode path.
+    gen_ingress: Option<mpsc::Sender<GenEvent>>,
+    /// KV-cache capacity (prompt + generated) of one session.
+    pub gen_capacity: usize,
     router: Router,
     pub metrics: Arc<Metrics>,
     next_id: AtomicU64,
@@ -96,7 +148,7 @@ pub struct Engine {
 
 impl Engine {
     /// Build the engine: resolve buckets and parameters for the configured
-    /// (family, variant), spawn dispatcher + workers.
+    /// (family, variant), spawn dispatcher + generation scheduler + workers.
     pub fn start(
         backend: &Arc<dyn Backend>,
         cfg: &ServeConfig,
@@ -153,6 +205,7 @@ impl Engine {
             cv: Condvar::new(),
         });
         let (ingress_tx, ingress_rx) = mpsc::sync_channel(cfg.queue_capacity);
+        let (gen_tx, gen_rx) = mpsc::channel::<GenEvent>();
 
         let mut threads = Vec::new();
 
@@ -179,6 +232,36 @@ impl Engine {
             );
         }
 
+        // Generation scheduler (only when the backend can decode; sessions
+        // default their KV capacity to the largest serving bucket).
+        let gen_capacity = if cfg.gen_capacity > 0 {
+            cfg.gen_capacity
+        } else {
+            buckets.iter().copied().max().unwrap_or(0)
+        };
+        let gen_supported = backend.supports_decode() && gen_capacity > 0;
+        if gen_supported {
+            let sched = GenScheduler {
+                jobq: Arc::clone(&jobq),
+                backend: Arc::clone(backend),
+                metrics: Arc::clone(&metrics),
+                max_sessions: cfg.max_sessions.max(1),
+                timeout: Duration::from_millis(cfg.session_timeout_ms),
+                capacity: gen_capacity,
+                max_batch: cfg.max_batch.max(1),
+                queue_cap: cfg.queue_capacity.max(1),
+                active: HashMap::new(),
+                waiting: VecDeque::new(),
+                next_gen: 1,
+                defer_until: None,
+            };
+            threads.push(
+                std::thread::Builder::new()
+                    .name("gen-scheduler".into())
+                    .spawn(move || sched.run(gen_rx))?,
+            );
+        }
+
         // Workers.
         for w in 0..cfg.workers.max(1) {
             let ctx = WorkerCtx {
@@ -190,6 +273,7 @@ impl Engine {
                 fixed_batch: backend.fixed_fwd_batch(),
                 vocab,
                 kernel: cfg.kernel.clone(),
+                gen_tx: gen_tx.clone(),
             };
             let jobq = Arc::clone(&jobq);
             let metrics = Arc::clone(&metrics);
@@ -206,6 +290,8 @@ impl Engine {
 
         Ok(Self {
             ingress: ingress_tx,
+            gen_ingress: gen_supported.then_some(gen_tx),
+            gen_capacity,
             router,
             metrics,
             next_id: AtomicU64::new(1),
@@ -250,6 +336,45 @@ impl Engine {
         Ok(resp)
     }
 
+    /// Blocking generation: prefill the prompt into a session, then decode
+    /// up to `params.max_tokens` tokens with top-k sampling. The engine
+    /// interleaves many sessions' decode steps per worker tick, so
+    /// concurrent `generate` calls batch against each other (and run
+    /// alongside `encode` traffic).
+    pub fn generate(
+        &self,
+        tokens: Vec<u32>,
+        params: GenParams,
+    ) -> Result<GenerateResponse, Reject> {
+        if self.shutdown.load(Ordering::Relaxed) {
+            return Err(Reject::Shutdown);
+        }
+        let Some(tx) = &self.gen_ingress else {
+            return Err(Reject::Failed(
+                "backend has no incremental decode path".into(),
+            ));
+        };
+        if tokens.is_empty() {
+            return Err(Reject::Failed("empty prompt".into()));
+        }
+        if tokens.len() > self.gen_capacity {
+            self.metrics.too_long.fetch_add(1, Ordering::Relaxed);
+            return Err(Reject::TooLong {
+                max: self.gen_capacity,
+            });
+        }
+        let req = GenerateRequest {
+            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            tokens,
+            params,
+            submitted: Instant::now(),
+        };
+        let (rtx, rrx) = mpsc::channel();
+        tx.send(GenEvent::Request(req, rtx))
+            .map_err(|_| Reject::Shutdown)?;
+        rrx.recv().map_err(|_| Reject::Shutdown)?
+    }
+
     pub fn shutdown(mut self) {
         self.do_shutdown();
     }
@@ -259,8 +384,11 @@ impl Engine {
             return;
         }
         // Closing ingress ends the dispatcher; it pushes worker sentinels.
+        // Dropping the generation sender (workers drop their clones when
+        // they exit) ends the scheduler, which evicts live sessions.
         let (closed_tx, _) = mpsc::sync_channel(1);
         let _ = std::mem::replace(&mut self.ingress, closed_tx);
+        self.gen_ingress = None;
         for t in self.threads.drain(..) {
             let _ = t.join();
         }
@@ -310,7 +438,7 @@ fn dispatcher_loop(
                         .iter()
                         .filter_map(|rq| replies.remove(&rq.id))
                         .collect();
-                    jobq.push(Some(Job { batch: b, replies: r }));
+                    jobq.push(Some(Work::Encode(Job { batch: b, replies: r })));
                 }
                 shutdown.store(true, Ordering::SeqCst);
                 // One sentinel per possible worker (generous).
@@ -326,76 +454,440 @@ fn dispatcher_loop(
                 .iter()
                 .filter_map(|rq| replies.remove(&rq.id))
                 .collect();
-            jobq.push(Some(Job { batch: b, replies: r }));
+            jobq.push(Some(Work::Encode(Job { batch: b, replies: r })));
         }
     }
 }
 
-fn worker_loop(ctx: WorkerCtx, jobq: Arc<JobQueue>, metrics: Arc<Metrics>) -> Result<()> {
-    while let Some(job) = jobq.pop() {
-        let bucket = job.batch.bucket;
-        let bdim = *ctx.batch_dims.get(&bucket).context("unknown bucket")?;
-        let n_reqs = job.batch.requests.len();
-        debug_assert!(n_reqs <= bdim, "dispatcher merged past the bucket batch dim");
-        // Fixed-shape backends need the full artifact batch; ragged ones
-        // only pay for the rows actually occupied.
-        let rows = if ctx.fixed_batch { bdim } else { n_reqs.min(bdim) };
-        let t_exec = Instant::now();
+// ---- generation scheduler --------------------------------------------------
 
-        // Assemble the padded [rows, bucket] token matrix.
-        let mut tokens = vec![0i32; rows * bucket];
-        let mut lens = Vec::with_capacity(n_reqs);
-        for (row, req) in job.batch.requests.iter().enumerate() {
-            let (padded, n) = pad_to(&req.tokens, bucket, 0);
-            tokens[row * bucket..(row + 1) * bucket].copy_from_slice(&padded);
-            lens.push(n);
+/// Per-session generation state tracked by the scheduler.
+struct GenSession {
+    req: GenerateRequest,
+    reply: GenReply,
+    /// Backend session id (`None` until prefill completes).
+    sid: Option<u64>,
+    generated: Vec<u32>,
+    rng: Pcg64,
+    /// Sampled token waiting for its decode step.
+    pending: Option<i32>,
+    /// A prefill/decode job for this session is in flight.
+    awaiting: bool,
+    admitted: Instant,
+    queue_ms: f64,
+    prefill_ms: f64,
+    decode_ms: f64,
+    steps: usize,
+}
+
+/// How long a partially-ready decode tick waits for in-flight sessions to
+/// report back before dispatching a smaller batch — the decode analogue of
+/// the encode batcher's max-wait deadline. Keeps staggered sessions
+/// phase-locked into shared batches instead of ping-ponging one-step jobs.
+const DECODE_COALESCE_WAIT: Duration = Duration::from_millis(1);
+
+/// The continuous-batching scheduler: admission (session cap), sampling,
+/// per-tick decode coalescing, timeout eviction.
+struct GenScheduler {
+    jobq: Arc<JobQueue>,
+    backend: Arc<dyn Backend>,
+    metrics: Arc<Metrics>,
+    max_sessions: usize,
+    timeout: Duration,
+    capacity: usize,
+    max_batch: usize,
+    queue_cap: usize,
+    active: HashMap<u64, GenSession>,
+    waiting: VecDeque<(GenerateRequest, GenReply)>,
+    next_gen: u64,
+    /// Deadline of a deferred partial dispatch (see
+    /// [`DECODE_COALESCE_WAIT`]).
+    defer_until: Option<Instant>,
+}
+
+impl GenScheduler {
+    fn run(mut self, rx: mpsc::Receiver<GenEvent>) {
+        loop {
+            // Block generously when idle; tick fast while work is in
+            // flight so sampled tokens coalesce into the next batch.
+            let idle = self.active.is_empty() && self.waiting.is_empty();
+            let timeout = Duration::from_millis(if idle { 100 } else { 1 });
+            let mut disconnected = false;
+            match rx.recv_timeout(timeout) {
+                Ok(ev) => self.handle(ev),
+                Err(mpsc::RecvTimeoutError::Timeout) => {}
+                Err(mpsc::RecvTimeoutError::Disconnected) => disconnected = true,
+            }
+            while let Ok(ev) = rx.try_recv() {
+                self.handle(ev);
+            }
+            if disconnected {
+                // Engine shut down: evict live sessions (partial replies),
+                // reject everything still waiting for a slot.
+                let ids: Vec<u64> = self.active.keys().copied().collect();
+                for id in ids {
+                    self.metrics.evicted_sessions.fetch_add(1, Ordering::Relaxed);
+                    self.finish(id, FinishReason::Evicted);
+                }
+                for (_, reply) in self.waiting.drain(..) {
+                    let _ = reply.send(Err(Reject::Shutdown));
+                }
+                return;
+            }
+            self.tick();
         }
-        // [rows, bucket, vocab]; an explicit kernel override routes through
-        // the backend's attention-lowering entry point.
-        let logits = match &ctx.kernel {
-            Some(k) => ctx
-                .backend
-                .forward_impl(k, &ctx.family, &ctx.variant, &ctx.params, &tokens, rows, bucket),
-            None => ctx
-                .backend
-                .forward(&ctx.family, &ctx.variant, &ctx.params, &tokens, rows, bucket),
+    }
+
+    fn handle(&mut self, ev: GenEvent) {
+        match ev {
+            GenEvent::Request(req, reply) => {
+                self.metrics.gen_requests.fetch_add(1, Ordering::Relaxed);
+                if self.waiting.len() >= self.queue_cap {
+                    self.metrics.shed.fetch_add(1, Ordering::Relaxed);
+                    let _ = reply.send(Err(Reject::Overloaded));
+                } else {
+                    self.waiting.push_back((req, reply));
+                }
+            }
+            GenEvent::PrefillDone { gen, result, exec_ms } => {
+                if !self.active.contains_key(&gen) {
+                    // Session vanished (shutdown race): free the backend
+                    // session the orphaned prefill created.
+                    if let Ok((sid, _)) = result {
+                        self.backend.close_session(sid);
+                    }
+                    return;
+                }
+                match result {
+                    Err(e) => self.fail(gen, e),
+                    Ok((sid, logits)) => {
+                        let s = self.active.get_mut(&gen).unwrap();
+                        s.awaiting = false;
+                        s.prefill_ms = exec_ms;
+                        s.sid = Some(sid);
+                        self.metrics
+                            .prefill_tokens
+                            .fetch_add(s.req.tokens.len() as u64, Ordering::Relaxed);
+                        if s.req.params.max_tokens == 0 {
+                            self.finish(gen, FinishReason::MaxTokens);
+                            return;
+                        }
+                        let p = s.req.params;
+                        let t = sample_top_k(&logits, p.top_k, p.temperature, &mut s.rng);
+                        if let Some(reason) = accept_token(s, t) {
+                            self.finish(gen, reason);
+                        }
+                    }
+                }
+            }
+            GenEvent::DecodeDone { items, exec_ms } => {
+                self.metrics
+                    .decode_busy_us
+                    .fetch_add((exec_ms * 1e3) as u64, Ordering::Relaxed);
+                let per_item_ms = exec_ms / items.len().max(1) as f64;
+                for (gen, result) in items {
+                    let Some(s) = self.active.get_mut(&gen) else {
+                        continue; // evicted while the step was in flight
+                    };
+                    s.awaiting = false;
+                    s.decode_ms += per_item_ms;
+                    match result {
+                        Err(e) => {
+                            // The scheduler gates on capacity, but map the
+                            // backend's own guard anyway — partial output
+                            // beats an opaque failure.
+                            if e.contains("capacity") {
+                                self.finish(gen, FinishReason::CacheFull);
+                            } else {
+                                self.fail(gen, e);
+                            }
+                        }
+                        Ok(logits) => {
+                            self.metrics.decode_tokens.fetch_add(1, Ordering::Relaxed);
+                            s.steps += 1;
+                            let p = s.req.params;
+                            let t = sample_top_k(&logits, p.top_k, p.temperature, &mut s.rng);
+                            if let Some(reason) = accept_token(s, t) {
+                                self.finish(gen, reason);
+                            }
+                        }
+                    }
+                }
+            }
         }
-        .context("fwd execution")?;
+    }
 
-        let exec_ms = t_exec.elapsed().as_secs_f64() * 1e3;
-        metrics.batches.fetch_add(1, Ordering::Relaxed);
-        metrics
-            .batched_requests
-            .fetch_add(n_reqs as u64, Ordering::Relaxed);
-        metrics
-            .tokens_processed
-            .fetch_add((rows * bucket) as u64, Ordering::Relaxed);
-        let real: usize = lens.iter().sum();
-        metrics
-            .padded_tokens
-            .fetch_add((rows * bucket - real) as u64, Ordering::Relaxed);
-
-        for (row, (req, reply)) in job
-            .batch
-            .requests
+    /// One scheduling pass: admit, evict, coalesce + dispatch decode steps.
+    fn tick(&mut self) {
+        // Admit waiting requests into free session slots (prefill jobs).
+        while self.active.len() < self.max_sessions {
+            let Some((req, reply)) = self.waiting.pop_front() else {
+                break;
+            };
+            self.admit(req, reply);
+        }
+        // Evict sessions over the wall-clock budget (only once their
+        // in-flight step returned — the backend close path handles the
+        // rest). Partial output still flows back to the client.
+        let overdue: Vec<u64> = self
+            .active
             .iter()
-            .zip(job.replies.iter())
-            .enumerate()
-        {
-            let last = lens[row].saturating_sub(1);
-            let base = (row * bucket + last) * ctx.vocab;
-            let row_logits = &logits[base..base + ctx.vocab];
-            let top = top_k(row_logits, TOP_K);
-            let queue_ms = (t_exec.duration_since(req.submitted)).as_secs_f64() * 1e3;
-            let _ = reply.send(Ok(EncodeResponse {
-                id: req.id,
-                bucket,
-                batch_size: n_reqs,
-                top,
-                queue_ms,
-                total_ms: queue_ms + exec_ms,
-            }));
+            .filter(|(_, s)| !s.awaiting && s.sid.is_some() && s.admitted.elapsed() > self.timeout)
+            .map(|(&id, _)| id)
+            .collect();
+        for id in overdue {
+            self.metrics.evicted_sessions.fetch_add(1, Ordering::Relaxed);
+            self.finish(id, FinishReason::Evicted);
         }
+        // Sessions whose next step would overflow the KV cache are done.
+        let full: Vec<u64> = self
+            .active
+            .iter()
+            .filter(|(_, s)| {
+                !s.awaiting
+                    && s.sid.is_some()
+                    && s.pending.is_some()
+                    && s.req.tokens.len() + s.steps >= self.capacity
+            })
+            .map(|(&id, _)| id)
+            .collect();
+        for id in full {
+            self.finish(id, FinishReason::CacheFull);
+        }
+        // Coalesce every runnable session's next step; chunk into at most
+        // max_batch-sized decode jobs so several workers can share a tick.
+        let ready: Vec<u64> = self
+            .active
+            .iter()
+            .filter(|(_, s)| !s.awaiting && s.sid.is_some() && s.pending.is_some())
+            .map(|(&id, _)| id)
+            .collect();
+        if ready.is_empty() {
+            self.defer_until = None;
+            return;
+        }
+        // Partial batch while other sessions are still in flight: hold the
+        // dispatch back one short window so their steps can join this
+        // batch. Without this, a single worker ping-pongs one-step jobs
+        // and decode never actually batches.
+        if ready.len() < self.active.len() && ready.len() < self.max_batch {
+            match self.defer_until {
+                None => {
+                    self.defer_until = Some(Instant::now() + DECODE_COALESCE_WAIT);
+                    return;
+                }
+                Some(t) if Instant::now() < t => return,
+                Some(_) => {}
+            }
+        }
+        self.defer_until = None;
+        let mut coalescer = TickBatcher::new(self.max_batch);
+        for id in ready {
+            let s = self.active.get_mut(&id).unwrap();
+            s.awaiting = true;
+            coalescer.push((id, s.sid.unwrap(), s.pending.take().unwrap()));
+        }
+        for items in coalescer.take_batches() {
+            self.metrics.decode_batches.fetch_add(1, Ordering::Relaxed);
+            self.jobq.push(Some(Work::Decode { items }));
+        }
+    }
+
+    fn admit(&mut self, req: GenerateRequest, reply: GenReply) {
+        let gen = self.next_gen;
+        self.next_gen += 1;
+        self.metrics.active_sessions.fetch_add(1, Ordering::Relaxed);
+        let queue_ms = req.submitted.elapsed().as_secs_f64() * 1e3;
+        let tokens: Vec<i32> = req.tokens.iter().map(|&t| t as i32).collect();
+        // Seeded from the request's own seed only — NOT the engine-global
+        // request id — so identical (prompt, params, seed) requests sample
+        // identical continuations, as the wire contract promises.
+        let rng = Pcg64::new(req.params.seed);
+        self.active.insert(
+            gen,
+            GenSession {
+                req,
+                reply,
+                sid: None,
+                generated: Vec::new(),
+                rng,
+                pending: None,
+                awaiting: true,
+                admitted: Instant::now(),
+                queue_ms,
+                prefill_ms: 0.0,
+                decode_ms: 0.0,
+                steps: 0,
+            },
+        );
+        self.jobq.push(Some(Work::Prefill {
+            gen,
+            tokens,
+            capacity: self.capacity,
+        }));
+    }
+
+    /// Remove a session, free its backend KV cache and reply.
+    fn finish(&mut self, gen: u64, reason: FinishReason) {
+        let Some(s) = self.active.remove(&gen) else {
+            return;
+        };
+        let kv_bytes = s
+            .sid
+            .and_then(|sid| self.backend.session_stats(sid).ok())
+            .map(|st| st.kv_bytes)
+            .unwrap_or(0);
+        if let Some(sid) = s.sid {
+            self.backend.close_session(sid);
+        }
+        self.metrics.active_sessions.fetch_sub(1, Ordering::Relaxed);
+        self.metrics.gen_responses.fetch_add(1, Ordering::Relaxed);
+        let _ = s.reply.send(Ok(GenerateResponse {
+            id: s.req.id,
+            prompt_len: s.req.tokens.len(),
+            tokens: s.generated,
+            finish: reason,
+            steps: s.steps,
+            queue_ms: s.queue_ms,
+            prefill_ms: s.prefill_ms,
+            decode_ms: s.decode_ms,
+            kv_bytes,
+        }));
+    }
+
+    fn fail(&mut self, gen: u64, msg: String) {
+        let Some(s) = self.active.remove(&gen) else {
+            return;
+        };
+        if let Some(sid) = s.sid {
+            self.backend.close_session(sid);
+        }
+        self.metrics.active_sessions.fetch_sub(1, Ordering::Relaxed);
+        let _ = s.reply.send(Err(Reject::Failed(msg)));
+    }
+}
+
+/// Append a sampled token; returns the finish reason if generation is done.
+fn accept_token(s: &mut GenSession, t: u32) -> Option<FinishReason> {
+    if t == EOS {
+        return Some(FinishReason::Eos);
+    }
+    s.generated.push(t);
+    if s.generated.len() >= s.req.params.max_tokens {
+        return Some(FinishReason::MaxTokens);
+    }
+    s.pending = Some(t as i32);
+    None
+}
+
+// ---- workers ----------------------------------------------------------------
+
+fn worker_loop(ctx: WorkerCtx, jobq: Arc<JobQueue>, metrics: Arc<Metrics>) -> Result<()> {
+    while let Some(work) = jobq.pop() {
+        match work {
+            Work::Encode(job) => encode_batch(&ctx, job, &metrics)?,
+            Work::Prefill {
+                gen,
+                tokens,
+                capacity,
+            } => {
+                let t0 = Instant::now();
+                let result = ctx
+                    .backend
+                    .prefill(&ctx.family, &ctx.variant, &ctx.params, &tokens, capacity)
+                    .map_err(|e| format!("{e:#}"));
+                let _ = ctx.gen_tx.send(GenEvent::PrefillDone {
+                    gen,
+                    result,
+                    exec_ms: t0.elapsed().as_secs_f64() * 1e3,
+                });
+            }
+            Work::Decode { items } => {
+                let t0 = Instant::now();
+                let results: Vec<(u64, Result<Vec<f32>, String>)> = items
+                    .iter()
+                    .map(|&(gen, sid, tok)| {
+                        (
+                            gen,
+                            ctx.backend
+                                .decode_step(sid, &ctx.params, tok)
+                                .map_err(|e| format!("{e:#}")),
+                        )
+                    })
+                    .collect();
+                let _ = ctx.gen_tx.send(GenEvent::DecodeDone {
+                    items: results,
+                    exec_ms: t0.elapsed().as_secs_f64() * 1e3,
+                });
+            }
+        }
+    }
+    Ok(())
+}
+
+fn encode_batch(ctx: &WorkerCtx, job: Job, metrics: &Metrics) -> Result<()> {
+    let bucket = job.batch.bucket;
+    let bdim = *ctx.batch_dims.get(&bucket).context("unknown bucket")?;
+    let n_reqs = job.batch.requests.len();
+    debug_assert!(n_reqs <= bdim, "dispatcher merged past the bucket batch dim");
+    // Fixed-shape backends need the full artifact batch; ragged ones
+    // only pay for the rows actually occupied.
+    let rows = if ctx.fixed_batch { bdim } else { n_reqs.min(bdim) };
+    let t_exec = Instant::now();
+
+    // Assemble the padded [rows, bucket] token matrix.
+    let mut tokens = vec![0i32; rows * bucket];
+    let mut lens = Vec::with_capacity(n_reqs);
+    for (row, req) in job.batch.requests.iter().enumerate() {
+        let (padded, n) = pad_to(&req.tokens, bucket, 0);
+        tokens[row * bucket..(row + 1) * bucket].copy_from_slice(&padded);
+        lens.push(n);
+    }
+    // [rows, bucket, vocab]; an explicit kernel override routes through
+    // the backend's attention-lowering entry point.
+    let logits = match &ctx.kernel {
+        Some(k) => ctx
+            .backend
+            .forward_impl(k, &ctx.family, &ctx.variant, &ctx.params, &tokens, rows, bucket),
+        None => ctx
+            .backend
+            .forward(&ctx.family, &ctx.variant, &ctx.params, &tokens, rows, bucket),
+    }
+    .context("fwd execution")?;
+
+    let exec_ms = t_exec.elapsed().as_secs_f64() * 1e3;
+    metrics.batches.fetch_add(1, Ordering::Relaxed);
+    metrics
+        .batched_requests
+        .fetch_add(n_reqs as u64, Ordering::Relaxed);
+    metrics
+        .tokens_processed
+        .fetch_add((rows * bucket) as u64, Ordering::Relaxed);
+    let real: usize = lens.iter().sum();
+    metrics
+        .padded_tokens
+        .fetch_add((rows * bucket - real) as u64, Ordering::Relaxed);
+
+    for (row, (req, reply)) in job
+        .batch
+        .requests
+        .iter()
+        .zip(job.replies.iter())
+        .enumerate()
+    {
+        let last = lens[row].saturating_sub(1);
+        let base = (row * bucket + last) * ctx.vocab;
+        let row_logits = &logits[base..base + ctx.vocab];
+        let top = top_k(row_logits, TOP_K);
+        let queue_ms = (t_exec.duration_since(req.submitted)).as_secs_f64() * 1e3;
+        let _ = reply.send(Ok(EncodeResponse {
+            id: req.id,
+            bucket,
+            batch_size: n_reqs,
+            top,
+            queue_ms,
+            total_ms: queue_ms + exec_ms,
+        }));
     }
     Ok(())
 }
@@ -414,6 +906,32 @@ pub fn top_k(xs: &[f32], k: usize) -> Vec<(i32, f32)> {
         }
     }
     top
+}
+
+/// Sample a token id from the `k` highest logits: softmax at
+/// `temperature` over the top-k, greedy argmax when `k == 1` or
+/// `temperature <= 0`. Deterministic given the RNG state.
+pub fn sample_top_k(logits: &[f32], k: usize, temperature: f32, rng: &mut Pcg64) -> u32 {
+    let top = top_k(logits, k.max(1));
+    debug_assert!(!top.is_empty());
+    if top.len() == 1 || temperature <= 0.0 {
+        return top[0].0 as u32;
+    }
+    let inv_t = 1.0 / temperature as f64;
+    let maxv = top[0].1 as f64;
+    let weights: Vec<f64> = top
+        .iter()
+        .map(|&(_, v)| ((v as f64 - maxv) * inv_t).exp())
+        .collect();
+    let total: f64 = weights.iter().sum();
+    let mut u = rng.f64() * total;
+    for (w, &(id, _)) in weights.iter().zip(&top) {
+        if u < *w {
+            return id as u32;
+        }
+        u -= w;
+    }
+    top.last().unwrap().0 as u32
 }
 
 #[cfg(test)]
@@ -438,5 +956,37 @@ mod tests {
     fn top_k_ties_keep_first() {
         let t = top_k(&[1.0, 1.0, 1.0], 2);
         assert_eq!(t, vec![(0, 1.0), (1, 1.0)]);
+    }
+
+    #[test]
+    fn sampling_is_greedy_when_asked() {
+        let logits = [0.0, 3.0, 1.0, 2.0];
+        let mut rng = Pcg64::new(1);
+        assert_eq!(sample_top_k(&logits, 1, 1.0, &mut rng), 1);
+        assert_eq!(sample_top_k(&logits, 4, 0.0, &mut rng), 1);
+        assert_eq!(sample_top_k(&logits, 4, -1.0, &mut rng), 1);
+    }
+
+    #[test]
+    fn sampling_stays_inside_top_k_and_is_seed_deterministic() {
+        let logits = [0.5, 3.0, 1.0, 2.5, -1.0, 2.0];
+        let allowed = [1u32, 3, 5]; // the 3 highest ids
+        let mut a = Pcg64::new(9);
+        let mut b = Pcg64::new(9);
+        let mut saw_non_argmax = false;
+        for _ in 0..200 {
+            let ta = sample_top_k(&logits, 3, 1.5, &mut a);
+            let tb = sample_top_k(&logits, 3, 1.5, &mut b);
+            assert_eq!(ta, tb, "same seed, same stream");
+            assert!(allowed.contains(&ta), "sampled {ta} outside top-3");
+            saw_non_argmax |= ta != 1;
+        }
+        assert!(saw_non_argmax, "temperature sampling never left the argmax");
+    }
+
+    #[test]
+    fn sampling_single_logit() {
+        let mut rng = Pcg64::new(2);
+        assert_eq!(sample_top_k(&[7.0], 5, 1.0, &mut rng), 0);
     }
 }

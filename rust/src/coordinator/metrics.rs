@@ -1,4 +1,10 @@
-//! Serving metrics: atomic counters + latency summaries.
+//! Serving metrics: atomic counters + latency summaries, split by phase.
+//!
+//! Encode requests keep their original counters; generation adds the
+//! per-phase view the paper's two-regime analysis needs: prefill tokens
+//! (compute-bound), decode tokens/steps (memory-bound), decode batching
+//! efficiency (steps coalesced per worker tick), session lifecycle
+//! (active / evicted) and decode throughput.
 
 use crate::util::json::Json;
 use crate::util::stats::Summary;
@@ -15,6 +21,24 @@ pub struct Metrics {
     pub batched_requests: AtomicU64,
     pub tokens_processed: AtomicU64,
     pub padded_tokens: AtomicU64,
+    // ---- generation (prefill/decode) phase counters ---------------------
+    /// Generation requests accepted by the scheduler.
+    pub gen_requests: AtomicU64,
+    /// Generation responses delivered (any finish reason).
+    pub gen_responses: AtomicU64,
+    /// Prompt tokens run through the compute-bound prefill phase.
+    pub prefill_tokens: AtomicU64,
+    /// Tokens produced by incremental decode steps.
+    pub decode_tokens: AtomicU64,
+    /// Coalesced decode jobs (one per scheduler tick per chunk) — decode
+    /// steps per batch = `decode_tokens / decode_batches`.
+    pub decode_batches: AtomicU64,
+    /// Live generation sessions (gauge).
+    pub active_sessions: AtomicU64,
+    /// Sessions evicted before finishing (timeout / shutdown).
+    pub evicted_sessions: AtomicU64,
+    /// Microseconds workers spent inside decode jobs (busy time).
+    pub decode_busy_us: AtomicU64,
     latency_ms: Mutex<Summary>,
     queue_ms: Mutex<Summary>,
 }
@@ -46,24 +70,50 @@ impl Metrics {
         self.padded_tokens.load(Ordering::Relaxed) as f64 / total as f64
     }
 
+    /// Mean decode steps coalesced into one worker tick (continuous
+    /// batching efficiency; 1.0 = no coalescing happened).
+    pub fn decode_steps_per_batch(&self) -> f64 {
+        let b = self.decode_batches.load(Ordering::Relaxed);
+        if b == 0 {
+            return 0.0;
+        }
+        self.decode_tokens.load(Ordering::Relaxed) as f64 / b as f64
+    }
+
+    /// Decode tokens per worker-busy second (the §5.2 tokens/s axis).
+    pub fn decode_tok_per_s(&self) -> f64 {
+        let us = self.decode_busy_us.load(Ordering::Relaxed);
+        if us == 0 {
+            return 0.0;
+        }
+        self.decode_tokens.load(Ordering::Relaxed) as f64 / (us as f64 / 1e6)
+    }
+
     pub fn snapshot(&self) -> Json {
         let lat = self.latency_ms.lock().unwrap();
         let q = self.queue_ms.lock().unwrap();
+        let n = |v: &AtomicU64| Json::num(v.load(Ordering::Relaxed) as f64);
         Json::obj(vec![
-            ("requests", Json::num(self.requests.load(Ordering::Relaxed) as f64)),
-            ("responses", Json::num(self.responses.load(Ordering::Relaxed) as f64)),
-            ("shed", Json::num(self.shed.load(Ordering::Relaxed) as f64)),
-            ("too_long", Json::num(self.too_long.load(Ordering::Relaxed) as f64)),
-            ("batches", Json::num(self.batches.load(Ordering::Relaxed) as f64)),
+            ("requests", n(&self.requests)),
+            ("responses", n(&self.responses)),
+            ("shed", n(&self.shed)),
+            ("too_long", n(&self.too_long)),
+            ("batches", n(&self.batches)),
             ("mean_batch_size", Json::num(self.mean_batch_size())),
             ("padding_fraction", Json::num(self.padding_fraction())),
             ("latency_p50_ms", Json::num(lat.p50())),
             ("latency_p99_ms", Json::num(lat.p99())),
             ("queue_p50_ms", Json::num(q.p50())),
-            (
-                "tokens_processed",
-                Json::num(self.tokens_processed.load(Ordering::Relaxed) as f64),
-            ),
+            ("tokens_processed", n(&self.tokens_processed)),
+            ("gen_requests", n(&self.gen_requests)),
+            ("gen_responses", n(&self.gen_responses)),
+            ("prefill_tokens", n(&self.prefill_tokens)),
+            ("decode_tokens", n(&self.decode_tokens)),
+            ("decode_batches", n(&self.decode_batches)),
+            ("decode_steps_per_batch", Json::num(self.decode_steps_per_batch())),
+            ("decode_tok_per_s", Json::num(self.decode_tok_per_s())),
+            ("active_sessions", n(&self.active_sessions)),
+            ("evicted_sessions", n(&self.evicted_sessions)),
         ])
     }
 }
@@ -90,6 +140,7 @@ mod tests {
         let s = m.snapshot().to_string();
         let parsed = crate::util::json::Json::parse(&s).unwrap();
         assert_eq!(parsed.get("latency_p50_ms").unwrap().as_f64(), Some(12.0));
+        assert_eq!(parsed.get("active_sessions").unwrap().as_f64(), Some(0.0));
     }
 
     #[test]
@@ -97,5 +148,20 @@ mod tests {
         let m = Metrics::new();
         assert_eq!(m.mean_batch_size(), 0.0);
         assert_eq!(m.padding_fraction(), 0.0);
+        assert_eq!(m.decode_steps_per_batch(), 0.0);
+        assert_eq!(m.decode_tok_per_s(), 0.0);
+    }
+
+    #[test]
+    fn decode_phase_derivations() {
+        let m = Metrics::new();
+        m.decode_tokens.store(12, Ordering::Relaxed);
+        m.decode_batches.store(4, Ordering::Relaxed);
+        m.decode_busy_us.store(2_000_000, Ordering::Relaxed);
+        assert_eq!(m.decode_steps_per_batch(), 3.0);
+        assert_eq!(m.decode_tok_per_s(), 6.0);
+        let s = m.snapshot();
+        assert_eq!(s.get("decode_steps_per_batch").unwrap().as_f64(), Some(3.0));
+        assert_eq!(s.get("decode_tok_per_s").unwrap().as_f64(), Some(6.0));
     }
 }

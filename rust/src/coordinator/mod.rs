@@ -1,12 +1,17 @@
-//! Encoder-serving coordinator — the paper's "prompt processing / encoder"
-//! compute-bound scenario as a real serving engine.
+//! Serving coordinator — the paper's *both* regimes as one engine: the
+//! compute-bound "prompt processing / encoder" path (batched encode) and
+//! the memory-bound autoregressive path (stateful generate with per-session
+//! KV caches and continuous batching).
 //!
 //! Pieces (each unit-tested in isolation):
-//!   * [`request`] — wire types and rejection reasons;
+//!   * [`request`] — wire types (encode + generate), rejection reasons;
 //!   * [`router`]  — length-bucket routing over fixed-shape artifacts;
-//!   * [`batcher`] — dynamic batching policy (max-batch / deadline);
-//!   * [`engine`]  — dispatcher + worker pool + device execution;
-//!   * [`metrics`] — counters, latency percentiles, padding accounting.
+//!   * [`batcher`] — batching policy: [`DynamicBatcher`] (max-batch /
+//!     deadline, encode) and [`TickBatcher`] (per-tick decode coalescing);
+//!   * [`engine`]  — dispatcher + generation scheduler + worker pool +
+//!     device execution;
+//!   * [`metrics`] — counters, latency percentiles, padding accounting,
+//!     per-phase (prefill/decode) generation counters.
 
 pub mod batcher;
 pub mod engine;
@@ -14,8 +19,11 @@ pub mod metrics;
 pub mod request;
 pub mod router;
 
-pub use batcher::{DynamicBatcher, PendingBatch};
-pub use engine::Engine;
+pub use batcher::{DynamicBatcher, PendingBatch, TickBatcher};
+pub use engine::{sample_top_k, top_k, Engine};
 pub use metrics::Metrics;
-pub use request::{EncodeRequest, EncodeResponse, Reject};
+pub use request::{
+    EncodeRequest, EncodeResponse, FinishReason, GenParams, GenerateRequest, GenerateResponse,
+    Reject,
+};
 pub use router::Router;

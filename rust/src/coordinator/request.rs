@@ -1,4 +1,5 @@
-//! Request/response types of the encoder-serving engine.
+//! Request/response types of the serving engine: batched encode and
+//! stateful generation.
 
 use std::time::Instant;
 
@@ -28,6 +29,87 @@ pub struct EncodeResponse {
     pub total_ms: f64,
 }
 
+/// Sampling knobs of a generation request.
+#[derive(Debug, Clone, Copy)]
+pub struct GenParams {
+    /// Max tokens to generate (the response may stop earlier: EOS, cache
+    /// full, eviction).
+    pub max_tokens: usize,
+    /// Sample from the `k` highest logits (1 = greedy argmax).
+    pub top_k: usize,
+    /// Softmax temperature over the top-k (`<= 0` = greedy).
+    pub temperature: f32,
+    /// Seed of the per-request sampling RNG (generation is deterministic
+    /// given prompt + params + seed + weights).
+    pub seed: u64,
+}
+
+impl Default for GenParams {
+    fn default() -> Self {
+        Self {
+            max_tokens: 32,
+            top_k: TOP_K,
+            temperature: 1.0,
+            seed: 0,
+        }
+    }
+}
+
+/// A generation request: prompt tokens + sampling knobs.
+#[derive(Debug, Clone)]
+pub struct GenerateRequest {
+    pub id: u64,
+    pub tokens: Vec<u32>,
+    pub params: GenParams,
+    pub submitted: Instant,
+}
+
+/// Why a generation stopped.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FinishReason {
+    /// Produced `max_tokens` tokens.
+    MaxTokens,
+    /// Sampled the tokenizer's `<eos>` id.
+    Eos,
+    /// The session's KV cache reached capacity.
+    CacheFull,
+    /// Evicted by the scheduler (session timeout / shutdown).
+    Evicted,
+}
+
+impl FinishReason {
+    pub fn name(self) -> &'static str {
+        match self {
+            FinishReason::MaxTokens => "max_tokens",
+            FinishReason::Eos => "eos",
+            FinishReason::CacheFull => "cache_full",
+            FinishReason::Evicted => "evicted",
+        }
+    }
+}
+
+/// Generation response: the sampled ids plus per-phase accounting (the
+/// prefill/decode split is the paper's two-regime story, so both timings
+/// travel on the wire).
+#[derive(Debug, Clone)]
+pub struct GenerateResponse {
+    pub id: u64,
+    pub prompt_len: usize,
+    /// Generated token ids (without the prompt; without `<eos>`).
+    pub tokens: Vec<u32>,
+    pub finish: FinishReason,
+    /// Incremental decode steps executed.
+    pub steps: usize,
+    pub queue_ms: f64,
+    /// Compute-bound prompt pass (where SQA's Hq reduction pays).
+    pub prefill_ms: f64,
+    /// Memory-bound token loop (where Hkv / cache size governs).
+    pub decode_ms: f64,
+    /// Live KV bytes of the session at the end — one decode step's cache
+    /// traffic, the §5.2 observable.
+    pub kv_bytes: u64,
+}
+
 /// Why a request was rejected.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum Reject {
@@ -37,6 +119,8 @@ pub enum Reject {
     TooLong { max: usize },
     /// Engine is shutting down.
     Shutdown,
+    /// The request failed inside the engine (bad request or backend error).
+    Failed(String),
 }
 
 impl std::fmt::Display for Reject {
@@ -45,6 +129,7 @@ impl std::fmt::Display for Reject {
             Reject::Overloaded => write!(f, "overloaded"),
             Reject::TooLong { max } => write!(f, "sequence too long (max {max})"),
             Reject::Shutdown => write!(f, "shutting down"),
+            Reject::Failed(msg) => write!(f, "request failed: {msg}"),
         }
     }
 }

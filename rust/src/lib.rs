@@ -47,6 +47,33 @@
 //! `-inf`-saturated rows yield zeros, never NaN, and large-magnitude
 //! logits never overflow the accumulator (`attention::tiled` unit tests).
 //!
+//! ## Generation (prefill + incremental decode)
+//!
+//! The paper's second axis — memory-bound token-by-token decode governed
+//! by the KV-head count (§2.2, §5) — runs as a real stateful path, not
+//! just the `flops::decode` roofline:
+//!
+//! * [`attention::decode`] attends fresh query rows against cached K/V
+//!   through the same tile streamer / linalg micro-GEMMs as the tiled
+//!   kernel ([`attention::tiled`]'s `stream_qtile_at`);
+//! * [`runtime::session::KvCache`] is the per-session, per-layer
+//!   contiguous K/V append buffer, sized by the variant's `Hkv` — sSQA
+//!   observably allocates and streams 2x a GQA/xSQA session's bytes;
+//! * [`runtime::Backend`] gains `prefill` (prompt → session + logits),
+//!   `decode_step` (token → logits), `close_session` and `session_stats`;
+//! * the [`coordinator`]'s generation scheduler admits sessions (cap +
+//!   timeout eviction), samples top-k tokens, and coalesces decode steps
+//!   from many sessions into shared worker ticks (continuous batching)
+//!   alongside encode batches;
+//! * `sqa generate` / the server's `{"cmd":"generate"}` endpoint expose it
+//!   end-to-end, and `rust/benches/decode_throughput.rs` records tokens/s
+//!   and measured KV bytes/step per variant (`BENCH_decode.json`),
+//!   cross-checked against the roofline.
+//!
+//! The invariant suite is `rust/tests/decode_differential.rs`: N-step
+//! incremental decode logits equal a full stateless re-forward to 1e-4
+//! for every variant, both attention kernels and both linalg impls.
+//!
 //! ## Compute kernels ([`linalg`])
 //!
 //! Underneath both attention lowerings sits a second, orthogonal switch:
@@ -69,13 +96,15 @@
 //!
 //! ## Modules
 //!
-//! * [`runtime`] — the [`runtime::Backend`] trait, the native backend +
-//!   model catalog, checkpoints, and the feature-gated PJRT client.
+//! * [`runtime`] — the [`runtime::Backend`] trait (stateless forward/train
+//!   *and* stateful prefill/decode), the native backend + model catalog,
+//!   per-session KV caches, checkpoints, and the feature-gated PJRT client.
 //! * [`train`] — the training coordinator (the paper's compute-bound
 //!   pre-training scenario): fused AdamW state, LR schedule, checkpoints.
-//! * [`coordinator`] + [`server`] — the encoder-serving engine (the paper's
-//!   prompt-processing scenario): length-bucket router, dynamic batcher,
-//!   worker pool, backpressure, TCP front-end.
+//! * [`coordinator`] + [`server`] — the serving engine: length-bucket
+//!   router + dynamic batcher for encode, session scheduler + continuous
+//!   decode batching for generate, backpressure, per-phase metrics, TCP
+//!   front-end on a bounded connection-handler pool.
 //! * [`data`] — deterministic synthetic corpora + tokenizer + batcher.
 //! * [`attention`] — both attention kernels (naive oracle + tiled
 //!   streaming) covering the whole variant zoo

@@ -2,8 +2,11 @@
 //!
 //! Subcommands:
 //!   train       train a (family, variant) through the active backend
-//!   serve       start the encoder-serving engine (TCP, JSON lines)
+//!   serve       start the serving engine (TCP, JSON lines): batched
+//!               encode + stateful generate with per-session KV caches
 //!   encode      one-shot client call against a running server
+//!   generate    autoregressive generation against a running server
+//!               (prefill + incremental decode, top-k sampling)
 //!   bench       regenerate paper tables: table1 | table2 | table3 |
 //!               complexity | ablation | kernels | all
 //!   flops       analytic FLOPs/KV-cache model for a (family, variant, seq)
@@ -17,7 +20,7 @@
 use anyhow::{bail, Context, Result};
 use sqa::bench_harness;
 use sqa::config::{ServeConfig, TrainConfig};
-use sqa::coordinator::Engine;
+use sqa::coordinator::{Engine, GenParams};
 use sqa::flops;
 use sqa::runtime::{open_backend, Backend};
 use sqa::server::{Client, Server};
@@ -44,6 +47,7 @@ fn run() -> Result<()> {
         "train" => cmd_train(args),
         "serve" => cmd_serve(args),
         "encode" => cmd_encode(args),
+        "generate" => cmd_generate(args),
         "bench" => cmd_bench(args),
         "flops" => cmd_flops(args),
         "diagram" => cmd_diagram(args),
@@ -66,10 +70,14 @@ COMMANDS
             [--checkpoint-dir DIR --checkpoint-every N --report OUT.json]
   serve     --family tiny --variant sqa --addr 127.0.0.1:7433
             [--max-batch 8 --max-wait-ms 5 --workers 2 --kernel tiled|naive]
+            [--max-sessions 4 --session-timeout-ms 30000 --gen-capacity 0
+             --conn-threads 8]
   encode    --addr 127.0.0.1:7433 (--text \"...\" | --tokens 1,2,3 | --metrics)
+  generate  --addr 127.0.0.1:7433 (--text \"...\" | --tokens 1,2,3)
+            [--max-tokens 32 --top-k 5 --temperature 1.0 --seed 0]
   bench     table1|table2|table3|complexity|ablation|kernels|all
             [--steps N --max-seq S --quick --out FILE.md]
-  flops     --family bench --variant sqa --seq 8192 [--batch 1]
+  flops     --family bench --variant sqa --seq 8192 [--batch 1 --decode]
   diagram   --variant sqa --h-total 16   (or --hq 8 --hkv 4)
   inspect   [--family F]
 
@@ -80,6 +88,11 @@ blocked GEMMs by default; SQA_KERNEL=naive selects the S×S oracle and
 SQA_LINALG=scalar the element-at-a-time GEMM oracle. `serve --kernel`
 accepts the combined forms (tiled, naive, tiled+scalar, naive+scalar).
 `bench kernels` sweeps naive vs tiled.
+Generate: prompts prefill once (compute-bound, where SQA wins) into a
+per-session KV cache sized by the variant's Hkv, then decode token-by-token
+(memory-bound, where the cache size rules); concurrent generations batch
+their decode steps per worker tick. `cargo bench --bench decode_throughput`
+sweeps measured tokens/s and bytes/step across the variant zoo.
 ";
 
 fn cmd_train(mut args: Args) -> Result<()> {
@@ -138,6 +151,10 @@ fn cmd_serve(mut args: Args) -> Result<()> {
         workers: args.usize("workers", 2)?,
         queue_capacity: args.usize("queue", 64)?,
         kernel: args.str_opt("kernel"),
+        max_sessions: args.usize("max-sessions", 4)?,
+        session_timeout_ms: args.usize("session-timeout-ms", 30_000)? as u64,
+        gen_capacity: args.usize("gen-capacity", 0)?,
+        conn_threads: args.usize("conn-threads", 8)?,
     };
     let ckpt = args.str_opt("checkpoint");
     args.finish()?;
@@ -158,14 +175,47 @@ fn cmd_serve(mut args: Args) -> Result<()> {
     };
     let engine = Engine::start(&backend, &cfg, params)?;
     println!(
-        "serving {}/{} ({} backend) buckets={:?} on {}",
+        "serving {}/{} ({} backend) buckets={:?} gen_capacity={} on {}",
         cfg.family,
         cfg.variant,
         backend.name(),
         engine.buckets(),
+        engine.gen_capacity,
         cfg.addr
     );
-    Server::bind(&cfg.addr, engine)?.serve()
+    Server::bind_with(&cfg.addr, engine, cfg.conn_threads)?.serve()
+}
+
+fn cmd_generate(mut args: Args) -> Result<()> {
+    let addr = args.str("addr", "127.0.0.1:7433");
+    let text = args.str_opt("text");
+    let tokens = args.str_opt("tokens");
+    let params = GenParams {
+        max_tokens: args.usize("max-tokens", 32)?,
+        top_k: args.usize("top-k", 5)?.max(1),
+        temperature: args.f64("temperature", 1.0)? as f32,
+        seed: args.usize("seed", 0)? as u64,
+    };
+    args.finish()?;
+    let mut client = Client::connect(&addr)?;
+    let resp = if let Some(t) = text {
+        client.generate_text(&t, &params)?
+    } else if let Some(t) = tokens {
+        let toks: Vec<u32> = t
+            .split(',')
+            .map(|s| s.trim().parse().context("parsing --tokens"))
+            .collect::<Result<_>>()?;
+        client.generate_tokens(&toks, &params)?
+    } else {
+        bail!("need --text or --tokens");
+    };
+    println!("{resp}");
+    if resp.get("ok").and_then(|o| o.as_bool()) == Some(true) {
+        if let Some(t) = resp.get("text").and_then(|t| t.as_str()) {
+            println!("generated: {t}");
+        }
+    }
+    Ok(())
 }
 
 fn cmd_encode(mut args: Args) -> Result<()> {

@@ -18,6 +18,27 @@ use std::collections::BTreeMap;
 use std::path::Path;
 use std::sync::Arc;
 
+/// KV-cache accounting for one live decode session.
+///
+/// `kv_bytes` is the cache traffic of one decode step at the current
+/// length — the §5.2 memory-bound cost, directly comparable to
+/// [`crate::flops::decode::DecodeStep::kv_bytes`]; `alloc_bytes` is the
+/// session's allocated footprint (capacity, what it costs in RSS).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SessionStats {
+    /// Cached token rows (prompt + generated so far).
+    pub len: usize,
+    /// Max token rows the session can hold.
+    pub capacity: usize,
+    /// K/V bytes one decode step streams: `2·layers·rows·Hkv·dh·4`, where
+    /// a sliding window caps `rows` at `min(len, window)` exactly like the
+    /// roofline's `eff_s` (mask-aware tile skipping never reads older
+    /// tiles).
+    pub kv_bytes: u64,
+    /// Allocated K/V bytes: `2·layers·capacity·Hkv·dh·4`.
+    pub alloc_bytes: u64,
+}
+
 /// An engine capable of running the SQA model zoo.
 pub trait Backend: Send + Sync {
     /// Short backend id ("native", "pjrt") for logs and reports.
@@ -103,6 +124,49 @@ pub trait Backend: Send + Sync {
         _seq: usize,
     ) -> Result<Vec<f32>> {
         bail!("backend {:?} has no attention impl {impl_:?}", self.name())
+    }
+
+    // ---- stateful generation (prefill + incremental decode) -------------
+
+    /// Whether [`Backend::prefill`] / [`Backend::decode_step`] work.
+    fn supports_decode(&self) -> bool {
+        false
+    }
+
+    /// Create a generation session: run the prompt through the model once
+    /// (the compute-bound prefill phase), filling per-layer KV caches sized
+    /// `capacity` tokens. Returns the session id and the last prompt
+    /// position's logits `[vocab]` (what the first generated token is
+    /// sampled from). Fails if the prompt is longer than `capacity`.
+    fn prefill(
+        &self,
+        _family: &str,
+        _variant: &str,
+        _params: &[f32],
+        _tokens: &[i32],
+        _capacity: usize,
+    ) -> Result<(u64, Vec<f32>)> {
+        bail!("backend {:?} has no incremental decode path", self.name())
+    }
+
+    /// One incremental decode step: append `token` to the session's cache
+    /// and return the new position's logits `[vocab]` (memory-bound: the
+    /// step streams the whole cache but computes only one query row).
+    /// Fails — leaving the session alive — when the cache is at capacity.
+    fn decode_step(&self, _session: u64, _params: &[f32], _token: i32) -> Result<Vec<f32>> {
+        bail!("backend {:?} has no incremental decode path", self.name())
+    }
+
+    /// Close a session and free its KV cache; `false` if unknown. Safe to
+    /// call while a step is in flight (the state is dropped when the step
+    /// completes).
+    fn close_session(&self, _session: u64) -> bool {
+        false
+    }
+
+    /// KV-cache accounting for a live session.
+    fn session_stats(&self, session: u64) -> Result<SessionStats> {
+        bail!("backend {:?} has no decode session {session}", self.name())
     }
 
     // ---- provided lookups ----------------------------------------------

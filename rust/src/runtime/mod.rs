@@ -5,6 +5,8 @@
 //!   picks the implementation for this build.
 //! * [`native`] — the default pure-Rust backend: catalog-defined reference
 //!   models executed on the `attention` oracle; zero external dependencies.
+//! * [`session`] — per-session KV caches ([`KvCache`]) backing the
+//!   stateful prefill/decode generation path.
 //! * [`catalog`] — built-in model zoo + flat-parameter [`catalog::Layout`].
 //! * [`checkpoint`] — host-side checkpoints shared by all backends.
 //! * [`manifest`] — the `artifacts/manifest.json` contract with the
@@ -18,6 +20,7 @@ pub mod catalog;
 pub mod checkpoint;
 pub mod manifest;
 pub mod native;
+pub mod session;
 
 #[cfg(feature = "pjrt")]
 pub mod client;
@@ -26,9 +29,10 @@ pub mod pjrt;
 #[cfg(feature = "pjrt")]
 pub mod state;
 
-pub use backend::{open_backend, Backend};
+pub use backend::{open_backend, Backend, SessionStats};
 pub use manifest::{Artifact, FamilyEntry, Kind, Manifest, ParamSpec, VariantEntry};
 pub use native::NativeBackend;
+pub use session::KvCache;
 
 #[cfg(feature = "pjrt")]
 pub use client::Runtime;

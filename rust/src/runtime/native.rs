@@ -31,17 +31,20 @@
 //! else). MoE families run the same dense blocks; `n_experts` only feeds
 //! the analytic FLOPs model.
 
+use crate::attention::decode::decode_attend;
 use crate::attention::tensor::Tensor;
 use crate::attention::{sqa_layer_slices, tiled, visible_range, Kernel, Spec};
 use crate::linalg;
-use crate::runtime::backend::Backend;
+use crate::runtime::backend::{Backend, SessionStats};
 use crate::runtime::catalog::{self, Geometry, Layout};
 use crate::runtime::manifest::FamilyEntry;
+use crate::runtime::session::KvCache;
 use crate::util::rng::Pcg64;
 use crate::util::threadpool::ThreadPool;
-use anyhow::{ensure, Context, Result};
-use std::collections::BTreeMap;
-use std::sync::mpsc;
+use anyhow::{bail, ensure, Context, Result};
+use std::collections::{BTreeMap, HashMap};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Mutex};
 
 const ADAM_B1: f32 = 0.9;
 const ADAM_B2: f32 = 0.999;
@@ -57,6 +60,21 @@ struct Model {
     linalg: linalg::Impl,
 }
 
+/// A live generation session: model geometry + per-layer KV cache.
+struct DecodeSession {
+    model: Model,
+    kv: KvCache,
+}
+
+/// Session-table slot. `Busy` marks a session whose decode step is in
+/// flight on some worker with the table lock *released*; closing a busy
+/// session removes the entry, and the step's put-back notices and drops
+/// the state instead of resurrecting it.
+enum Slot {
+    Ready(Box<DecodeSession>),
+    Busy,
+}
+
 /// Pure-Rust implementation of [`Backend`].
 pub struct NativeBackend {
     families: BTreeMap<String, FamilyEntry>,
@@ -68,6 +86,11 @@ pub struct NativeBackend {
     /// Default GEMM lowering (`SQA_LINALG` env; blocked unless told
     /// otherwise). `forward_impl` strings like `"tiled+scalar"` override it.
     linalg: linalg::Impl,
+    /// Live decode sessions. The lock is held only for table lookups —
+    /// steps take the session *out* (leaving a [`Slot::Busy`] marker) so
+    /// concurrently batched sessions never serialize on it.
+    sessions: Mutex<HashMap<u64, Slot>>,
+    next_session: AtomicU64,
 }
 
 impl Default for NativeBackend {
@@ -112,6 +135,8 @@ impl NativeBackend {
             pool: ThreadPool::new(workers, 256),
             kernel,
             linalg,
+            sessions: Mutex::new(HashMap::new()),
+            next_session: AtomicU64::new(1),
         }
     }
 
@@ -416,6 +441,97 @@ impl Backend for NativeBackend {
             self.model_with_impls(family, variant, kernel, imp.unwrap_or(self.linalg))?;
         self.forward_model(model, params, tokens, batch, seq)
     }
+
+    // ---- stateful generation --------------------------------------------
+
+    fn supports_decode(&self) -> bool {
+        true
+    }
+
+    fn prefill(
+        &self,
+        family: &str,
+        variant: &str,
+        params: &[f32],
+        tokens: &[i32],
+        capacity: usize,
+    ) -> Result<(u64, Vec<f32>)> {
+        let model = self.model(family, variant)?;
+        ensure!(
+            model.spec.causal,
+            "prefill/decode needs a causal family (got {family:?})"
+        );
+        ensure!(capacity > 0, "session capacity must be positive");
+        ensure!(!tokens.is_empty(), "empty prompt");
+        ensure!(
+            tokens.len() <= capacity,
+            "prompt of {} tokens exceeds the session cache capacity {capacity}",
+            tokens.len()
+        );
+        self.check_batch(&model, params, tokens, 1, tokens.len())?;
+        let mut kv = KvCache::new(
+            model.lay.n_layers,
+            capacity,
+            model.lay.hkv * model.lay.d_head,
+        );
+        let logits = prefill_row(&model, params, tokens, &mut kv, Some(&self.pool))?;
+        let id = self.next_session.fetch_add(1, Ordering::Relaxed);
+        self.sessions
+            .lock()
+            .unwrap()
+            .insert(id, Slot::Ready(Box::new(DecodeSession { model, kv })));
+        Ok((id, logits))
+    }
+
+    fn decode_step(&self, session: u64, params: &[f32], token: i32) -> Result<Vec<f32>> {
+        // Take the session out of the table (leaving a Busy marker) so
+        // steps for other sessions never serialize on the lock and a
+        // concurrent close cannot race the compute.
+        let mut sess = {
+            let mut tab = self.sessions.lock().unwrap();
+            match tab.get_mut(&session) {
+                None => bail!("unknown decode session {session}"),
+                Some(Slot::Busy) => bail!("decode session {session} is mid-step"),
+                Some(slot) => match std::mem::replace(slot, Slot::Busy) {
+                    Slot::Ready(s) => s,
+                    Slot::Busy => unreachable!(),
+                },
+            }
+        };
+        let out = (|| {
+            self.check_batch(&sess.model, params, &[token], 1, 1)?;
+            decode_step_row(&sess.model, params, token, &mut sess.kv)
+        })();
+        // Put the session back — unless it was closed while we computed
+        // (the entry is gone or replaced), in which case drop the state.
+        let mut tab = self.sessions.lock().unwrap();
+        if let Some(slot) = tab.get_mut(&session) {
+            if matches!(slot, Slot::Busy) {
+                *slot = Slot::Ready(sess);
+            }
+        }
+        out
+    }
+
+    fn close_session(&self, session: u64) -> bool {
+        // Removing a Busy marker is fine: the in-flight step's put-back
+        // sees the missing entry and drops the session state.
+        self.sessions.lock().unwrap().remove(&session).is_some()
+    }
+
+    fn session_stats(&self, session: u64) -> Result<SessionStats> {
+        let tab = self.sessions.lock().unwrap();
+        match tab.get(&session) {
+            Some(Slot::Ready(s)) => Ok(SessionStats {
+                len: s.kv.len(),
+                capacity: s.kv.capacity(),
+                kv_bytes: s.kv.step_bytes(s.model.spec.window) as u64,
+                alloc_bytes: s.kv.alloc_bytes() as u64,
+            }),
+            Some(Slot::Busy) => bail!("decode session {session} is mid-step"),
+            None => bail!("unknown decode session {session}"),
+        }
+    }
 }
 
 fn fnv1a(bytes: &[u8]) -> u64 {
@@ -508,6 +624,158 @@ fn forward_row(
     Ok(logits)
 }
 
+/// Attention over head-interleaved projection slabs `q [s, Hq·dh]`,
+/// `k`/`v [s, Hkv·dh]` into `o [s, Hq·dh]` (zero-initialized by the
+/// caller), honouring the model's kernel choice. Shared by the training
+/// forward and the generation prefill; `pool` fans the tiled kernel's
+/// `(head, query-tile)` jobs out — pass `None` on a pool worker.
+fn attend_slabs(
+    model: &Model,
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    o: &mut [f32],
+    s: usize,
+    pool: Option<&ThreadPool>,
+) {
+    let lay = &model.lay;
+    let (dh, hq, hkv) = (lay.d_head, lay.hq, lay.hkv);
+    let (dq_cols, dkv_cols) = (hq * dh, hkv * dh);
+    let group = hq / hkv;
+    let scale = 1.0 / (dh as f32).sqrt();
+    let spec = model.spec;
+    let cfg = tiled::TileConfig::default().with_linalg(model.linalg);
+    match model.kernel {
+        Kernel::Tiled => match pool {
+            Some(pool) if hq * s.div_ceil(cfg.q_tile) > 1 => {
+                tiled::stream_slabs_parallel(q, k, v, o, s, dh, spec, cfg, scale, pool)
+            }
+            _ => {
+                for h in 0..hq {
+                    let hk = h / group;
+                    tiled::stream_head(
+                        q, dq_cols, h * dh, k, dkv_cols, hk * dh, v, o, dq_cols, h * dh, s,
+                        dh, spec, cfg, scale,
+                    );
+                }
+            }
+        },
+        Kernel::Naive => {
+            let mut probs = vec![0.0f32; s];
+            for h in 0..hq {
+                let hk = h / group;
+                for i in 0..s {
+                    let (lo, hi) = visible_range(i, s, spec);
+                    attn_probs(
+                        q, k, i, h, hk, s, dh, dq_cols, dkv_cols, scale, lo, hi, &mut probs,
+                    );
+                    let oi = i * dq_cols + h * dh;
+                    for j in lo..hi {
+                        let p = probs[j - lo];
+                        if p == 0.0 {
+                            continue;
+                        }
+                        let vj = &v[j * dkv_cols + hk * dh..][..dh];
+                        for (ov, &vv) in o[oi..oi + dh].iter_mut().zip(vj) {
+                            *ov += p * vv;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Prefill one prompt: a full forward over `tokens` that additionally
+/// writes every layer's K/V projections into the session cache; returns
+/// the *last* position's logits `[vocab]`. This is the compute-bound phase
+/// where SQA's query-head reduction pays (§3.2) — the cache it leaves
+/// behind is what the memory-bound [`decode_step_row`] then streams.
+fn prefill_row(
+    model: &Model,
+    params: &[f32],
+    tokens: &[i32],
+    kv: &mut KvCache,
+    pool: Option<&ThreadPool>,
+) -> Result<Vec<f32>> {
+    let lay = &model.lay;
+    let (s, d, dh, vocab) = (tokens.len(), lay.d_model, lay.d_head, lay.vocab);
+    let (dq_cols, dkv_cols) = (lay.hq * dh, lay.hkv * dh);
+    let imp = model.linalg;
+    let (e_off, _) = lay.embed();
+    let mut x = vec![0.0f32; s * d];
+    for (i, &t) in tokens.iter().enumerate() {
+        x[i * d..(i + 1) * d]
+            .copy_from_slice(&params[e_off + token_index(t, vocab) * d..][..d]);
+    }
+    for l in 0..lay.n_layers {
+        let q = linalg::matmul(imp, &x, weight_slice(params, lay.wq(l)), s, d, dq_cols, pool);
+        let kf = linalg::matmul(imp, &x, weight_slice(params, lay.wk(l)), s, d, dkv_cols, pool);
+        let vf = linalg::matmul(imp, &x, weight_slice(params, lay.wv(l)), s, d, dkv_cols, pool);
+        kv.write(l, &kf, &vf)?;
+        let mut o = vec![0.0f32; s * dq_cols];
+        attend_slabs(model, &q, &kf, &vf, &mut o, s, pool);
+        let a = linalg::matmul(imp, &o, weight_slice(params, lay.wo(l)), s, dq_cols, d, pool);
+        for (xv, av) in x.iter_mut().zip(&a) {
+            *xv += av;
+        }
+    }
+    kv.advance(s)?;
+    let head = weight_slice(params, lay.lm_head());
+    let bias = weight_slice(params, lay.lm_bias());
+    let mut logits = vec![0.0f32; vocab];
+    linalg::matmul_bias_into(imp, &x[(s - 1) * d..], head, bias, &mut logits, 1, d, vocab, None);
+    Ok(logits)
+}
+
+/// One incremental decode step: embed `token`, project its single row,
+/// append the K/V row to every layer's cache, attend against the whole
+/// cache via [`decode_attend`], and return the new position's logits.
+///
+/// The per-step FLOPs are O(d²) projections plus O(cache_len · Hq · dh)
+/// attention — the memory-bound regime where only `Hkv` (the cache width)
+/// differentiates the variants. The attention kernel choice does not enter
+/// here: decode always runs the incremental streaming kernel; `Kernel`
+/// selects the *prefill* lowering.
+fn decode_step_row(
+    model: &Model,
+    params: &[f32],
+    token: i32,
+    kv: &mut KvCache,
+) -> Result<Vec<f32>> {
+    let lay = &model.lay;
+    let (d, dh, vocab) = (lay.d_model, lay.d_head, lay.vocab);
+    let (dq_cols, dkv_cols) = (lay.hq * dh, lay.hkv * dh);
+    let imp = model.linalg;
+    let pos = kv.len();
+    ensure!(
+        pos < kv.capacity(),
+        "session at capacity ({pos}/{} tokens)",
+        kv.capacity()
+    );
+    let (e_off, _) = lay.embed();
+    let mut x = params[e_off + token_index(token, vocab) * d..][..d].to_vec();
+    let mut o = vec![0.0f32; dq_cols];
+    for l in 0..lay.n_layers {
+        let q = linalg::matmul(imp, &x, weight_slice(params, lay.wq(l)), 1, d, dq_cols, None);
+        let kf = linalg::matmul(imp, &x, weight_slice(params, lay.wk(l)), 1, d, dkv_cols, None);
+        let vf = linalg::matmul(imp, &x, weight_slice(params, lay.wv(l)), 1, d, dkv_cols, None);
+        kv.write(l, &kf, &vf)?;
+        let (kc, vc) = kv.layer_upto(l, pos + 1);
+        decode_attend(&q, kc, vc, &mut o, pos, 1, pos + 1, dh, model.spec, imp);
+        let a = linalg::matmul(imp, &o, weight_slice(params, lay.wo(l)), 1, dq_cols, d, None);
+        for (xv, av) in x.iter_mut().zip(&a) {
+            *xv += av;
+        }
+    }
+    kv.advance(1)?;
+    let head = weight_slice(params, lay.lm_head());
+    let bias = weight_slice(params, lay.lm_bias());
+    let mut logits = vec![0.0f32; vocab];
+    linalg::matmul_bias_into(imp, &x, head, bias, &mut logits, 1, d, vocab, None);
+    Ok(logits)
+}
+
 /// One row's contribution to the batch gradient.
 struct RowGrad {
     loss_sum: f32,
@@ -586,7 +854,6 @@ fn train_row(
         Vec::with_capacity(n_layers);
     let mut probs = vec![0.0f32; s];
     let imp = model.linalg;
-    let tile_cfg = tiled::TileConfig::default().with_linalg(imp);
     for l in 0..n_layers {
         xs.push(x.clone());
         let (wq_o, wq_n) = lay.wq(l);
@@ -597,67 +864,11 @@ fn train_row(
         let k = linalg::matmul(imp, &x, &params[wk_o..wk_o + wk_n], s, d, dkv_cols, None);
         let v = linalg::matmul(imp, &x, &params[wv_o..wv_o + wv_n], s, d, dkv_cols, None);
         let mut o = vec![0.0f32; s * dq_cols];
-        match model.kernel {
-            // Default forward: stream the head-interleaved [s, H·dh]
-            // projections through the tiled kernel (the backward below still
-            // recomputes row softmaxes — checkpointing keeps it streaming).
-            Kernel::Tiled => {
-                for h in 0..hq {
-                    let hk = h / group;
-                    tiled::stream_head(
-                        &q,
-                        dq_cols,
-                        h * dh,
-                        &k,
-                        dkv_cols,
-                        hk * dh,
-                        &v,
-                        &mut o,
-                        dq_cols,
-                        h * dh,
-                        s,
-                        dh,
-                        spec,
-                        tile_cfg,
-                        scale,
-                    );
-                }
-            }
-            Kernel::Naive => {
-                for h in 0..hq {
-                    let hk = h / group;
-                    for i in 0..s {
-                        let (lo, hi) = visible_range(i, s, spec);
-                        attn_probs(
-                            &q,
-                            &k,
-                            i,
-                            h,
-                            hk,
-                            s,
-                            dh,
-                            dq_cols,
-                            dkv_cols,
-                            scale,
-                            lo,
-                            hi,
-                            &mut probs,
-                        );
-                        let oi = i * dq_cols + h * dh;
-                        for j in lo..hi {
-                            let p = probs[j - lo];
-                            if p == 0.0 {
-                                continue;
-                            }
-                            let vj = &v[j * dkv_cols + hk * dh..][..dh];
-                            for (ov, &vv) in o[oi..oi + dh].iter_mut().zip(vj) {
-                                *ov += p * vv;
-                            }
-                        }
-                    }
-                }
-            }
-        }
+        // Forward attention through the shared kernel dispatch (tiled
+        // streaming by default, naive oracle on request; the backward below
+        // still recomputes row softmaxes — checkpointing keeps it
+        // streaming). No pool: train rows already run on pool workers.
+        attend_slabs(model, &q, &k, &v, &mut o, s, None);
         let a = linalg::matmul(imp, &o, &params[wo_o..wo_o + wo_n], s, dq_cols, d, None);
         for (xv, av) in x.iter_mut().zip(&a) {
             *xv += av;
@@ -899,6 +1110,72 @@ mod tests {
             .unwrap();
         assert_eq!(default, explicit);
         assert_eq!(b.impls(), vec!["tiled", "naive", "tiled+scalar", "naive+scalar"]);
+    }
+
+    #[test]
+    fn decode_path_matches_full_forward() {
+        // Prefill 4 tokens then decode 8 more; every step's logits must
+        // match the corresponding row of a full stateless forward (the
+        // exhaustive variant x kernel x linalg grid lives in
+        // rust/tests/decode_differential.rs).
+        let b = backend();
+        let params = b.init_params("tiny", "sqa", 11).unwrap();
+        let tokens: Vec<i32> = (0..12).map(|i| ((i * 53 + 5) % 2048) as i32).collect();
+        let full = b.forward("tiny", "sqa", &params, &tokens, 1, 12).unwrap();
+        let vocab = 2048usize;
+        let diff = |a: &[f32], b: &[f32]| {
+            a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0f32, f32::max)
+        };
+        let (sid, logits) = b.prefill("tiny", "sqa", &params, &tokens[..4], 32).unwrap();
+        assert!(diff(&logits, &full[3 * vocab..4 * vocab]) < 1e-4);
+        for i in 4..12 {
+            let l = b.decode_step(sid, &params, tokens[i]).unwrap();
+            assert!(
+                diff(&l, &full[i * vocab..(i + 1) * vocab]) < 1e-4,
+                "step at position {i} diverges"
+            );
+        }
+        // tiny/sqa: 2 layers, Hkv=2, dh=16 -> 2*2*12*32*4 bytes live.
+        let stats = b.session_stats(sid).unwrap();
+        assert_eq!(stats.len, 12);
+        assert_eq!(stats.capacity, 32);
+        assert_eq!(stats.kv_bytes, 2 * 2 * 12 * 32 * 4);
+        assert_eq!(stats.alloc_bytes, 2 * 2 * 32 * 32 * 4);
+        assert!(b.close_session(sid));
+        assert!(!b.close_session(sid), "close is not idempotent-true");
+        assert!(b.decode_step(sid, &params, 1).is_err(), "closed session");
+        assert!(b.session_stats(sid).is_err());
+    }
+
+    #[test]
+    fn prefill_rejects_bad_sessions() {
+        let b = backend();
+        let params = b.init_params("tiny", "sqa", 1).unwrap();
+        assert!(b.supports_decode());
+        // Prompt longer than the cache.
+        let long: Vec<i32> = vec![7; 9];
+        assert!(b.prefill("tiny", "sqa", &params, &long, 8).is_err());
+        // Empty prompt / zero capacity.
+        assert!(b.prefill("tiny", "sqa", &params, &[], 8).is_err());
+        assert!(b.prefill("tiny", "sqa", &params, &[1], 0).is_err());
+        // Unknown session ids.
+        assert!(b.decode_step(999, &params, 1).is_err());
+        assert!(b.session_stats(999).is_err());
+        assert!(!b.close_session(999));
+    }
+
+    #[test]
+    fn decode_step_at_capacity_fails_but_keeps_session() {
+        let b = backend();
+        let params = b.init_params("tiny", "gqa", 2).unwrap();
+        let (sid, _) = b.prefill("tiny", "gqa", &params, &[1, 2, 3], 4).unwrap();
+        b.decode_step(sid, &params, 4).unwrap(); // fills slot 4/4
+        let err = b.decode_step(sid, &params, 5).unwrap_err();
+        assert!(err.to_string().contains("capacity"), "{err:#}");
+        // The failed step must not have corrupted or dropped the session.
+        let stats = b.session_stats(sid).unwrap();
+        assert_eq!((stats.len, stats.capacity), (4, 4));
+        assert!(b.close_session(sid));
     }
 
     #[test]

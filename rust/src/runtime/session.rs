@@ -1,0 +1,210 @@
+//! Per-session KV caches for incremental decode.
+//!
+//! One [`KvCache`] backs one generation session: a contiguous per-layer
+//! append buffer of projected key/value rows in the native backend's
+//! head-interleaved `[capacity, Hkv·d_head]` layout. Sizing follows the
+//! variant's `Hkv` — this is where the paper's §5 decode axis becomes
+//! *observable* instead of simulated: an sSQA session (`Hkv = H/2`)
+//! allocates and streams twice the bytes of a GQA/xSQA session
+//! (`Hkv = H/4`) at the same context length, and
+//! [`KvCache::live_bytes`] is exactly the cache traffic term of
+//! [`crate::flops::decode::decode_step`].
+//!
+//! Write protocol (mirrors how a forward step visits layers): each layer
+//! writes its fresh rows at the *same* base slot via [`KvCache::write`],
+//! then the step commits once with [`KvCache::advance`]. Until `advance`,
+//! readers that pass an explicit row count ([`KvCache::layer_upto`]) can
+//! already see the fresh rows — the decode kernel attends `len + 1` rows
+//! while the step that produced row `len` is still in flight across layers.
+
+use anyhow::{ensure, Result};
+
+/// Contiguous per-layer K/V append buffers for one generation session.
+#[derive(Debug, Clone)]
+pub struct KvCache {
+    /// Per-layer `[capacity, dkv]` key rows (flat, row-major).
+    k: Vec<Vec<f32>>,
+    /// Per-layer `[capacity, dkv]` value rows.
+    v: Vec<Vec<f32>>,
+    /// Committed token rows (every layer has this many valid rows).
+    len: usize,
+    capacity: usize,
+    /// Row width: `Hkv * d_head`.
+    dkv: usize,
+}
+
+impl KvCache {
+    pub fn new(n_layers: usize, capacity: usize, dkv: usize) -> Self {
+        assert!(n_layers > 0 && capacity > 0 && dkv > 0, "empty cache geometry");
+        Self {
+            k: (0..n_layers).map(|_| vec![0.0; capacity * dkv]).collect(),
+            v: (0..n_layers).map(|_| vec![0.0; capacity * dkv]).collect(),
+            len: 0,
+            capacity,
+            dkv,
+        }
+    }
+
+    /// Committed token rows.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Maximum token rows (prompt + generated) this session can hold.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Rows still free.
+    pub fn remaining(&self) -> usize {
+        self.capacity - self.len
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.k.len()
+    }
+
+    /// Row width (`Hkv * d_head`).
+    pub fn dkv(&self) -> usize {
+        self.dkv
+    }
+
+    /// Write `n` fresh K/V rows for layer `l` at slots `[len, len + n)`
+    /// (uncommitted until [`KvCache::advance`]). `k_rows`/`v_rows` are
+    /// `[n, dkv]` head-interleaved slabs, `n` inferred from their length.
+    pub fn write(&mut self, l: usize, k_rows: &[f32], v_rows: &[f32]) -> Result<()> {
+        ensure!(l < self.k.len(), "layer {l} out of range ({})", self.k.len());
+        ensure!(
+            k_rows.len() == v_rows.len() && !k_rows.is_empty() && k_rows.len() % self.dkv == 0,
+            "kv rows must be equal non-empty multiples of dkv={} (got {}/{})",
+            self.dkv,
+            k_rows.len(),
+            v_rows.len()
+        );
+        let n = k_rows.len() / self.dkv;
+        ensure!(
+            self.len + n <= self.capacity,
+            "session at capacity: {} cached + {n} new > {}",
+            self.len,
+            self.capacity
+        );
+        let at = self.len * self.dkv;
+        self.k[l][at..at + k_rows.len()].copy_from_slice(k_rows);
+        self.v[l][at..at + v_rows.len()].copy_from_slice(v_rows);
+        Ok(())
+    }
+
+    /// Commit `n` rows written to every layer.
+    pub fn advance(&mut self, n: usize) -> Result<()> {
+        ensure!(
+            self.len + n <= self.capacity,
+            "advance past capacity: {} + {n} > {}",
+            self.len,
+            self.capacity
+        );
+        self.len += n;
+        Ok(())
+    }
+
+    /// Layer `l`'s first `rows` K/V rows (may exceed `len` by the
+    /// uncommitted rows a step just wrote).
+    pub fn layer_upto(&self, l: usize, rows: usize) -> (&[f32], &[f32]) {
+        let n = rows * self.dkv;
+        (&self.k[l][..n], &self.v[l][..n])
+    }
+
+    /// Bytes of K/V currently resident in the cache (`len` rows, every
+    /// layer, both directions).
+    pub fn live_bytes(&self) -> usize {
+        2 * self.k.len() * self.len * self.dkv * std::mem::size_of::<f32>()
+    }
+
+    /// Bytes of cached K/V one decode step at the current length actually
+    /// streams (the memory-bound cost the §5.2 roofline models). A sliding
+    /// window caps the visible rows — the decode kernel's mask-aware tile
+    /// skipping never touches older tiles — matching the
+    /// `eff_s = min(len, window)` term of [`crate::flops::decode`].
+    pub fn step_bytes(&self, window: Option<usize>) -> usize {
+        let rows = match window {
+            Some(w) => self.len.min(w),
+            None => self.len,
+        };
+        2 * self.k.len() * rows * self.dkv * std::mem::size_of::<f32>()
+    }
+
+    /// Allocated cache footprint (capacity, not occupancy) — what a
+    /// session costs in RSS.
+    pub fn alloc_bytes(&self) -> usize {
+        2 * self.k.len() * self.capacity * self.dkv * std::mem::size_of::<f32>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn write_then_advance_commits_rows() {
+        let mut kv = KvCache::new(2, 4, 3);
+        assert_eq!(kv.len(), 0);
+        assert_eq!(kv.remaining(), 4);
+        for l in 0..2 {
+            kv.write(l, &[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]).unwrap();
+        }
+        // Uncommitted rows are already readable with an explicit count.
+        let (k0, v0) = kv.layer_upto(0, 1);
+        assert_eq!(k0, &[1.0, 2.0, 3.0]);
+        assert_eq!(v0, &[4.0, 5.0, 6.0]);
+        kv.advance(1).unwrap();
+        assert_eq!(kv.len(), 1);
+        // Next write lands at row 1.
+        kv.write(1, &[7.0; 3], &[8.0; 3]).unwrap();
+        let (k1, _) = kv.layer_upto(1, 2);
+        assert_eq!(&k1[3..], &[7.0; 3]);
+    }
+
+    #[test]
+    fn capacity_is_enforced() {
+        let mut kv = KvCache::new(1, 2, 2);
+        kv.write(0, &[0.0; 4], &[0.0; 4]).unwrap(); // 2 rows at once
+        kv.advance(2).unwrap();
+        assert!(kv.write(0, &[0.0; 2], &[0.0; 2]).is_err(), "cache is full");
+        assert!(kv.advance(1).is_err());
+        assert_eq!(kv.remaining(), 0);
+    }
+
+    #[test]
+    fn byte_accounting_scales_with_hkv() {
+        // Same context, 2x the kv heads -> exactly 2x the live bytes:
+        // the sSQA-vs-GQA §5.2 difference as an actual buffer size.
+        let mut small = KvCache::new(3, 8, 4); // Hkv*dh = 4
+        let mut big = KvCache::new(3, 8, 8); // Hkv*dh = 8
+        for kv in [&mut small, &mut big] {
+            for l in 0..3 {
+                let w = kv.dkv();
+                kv.write(l, &vec![0.0; 5 * w], &vec![0.0; 5 * w]).unwrap();
+            }
+            kv.advance(5).unwrap();
+        }
+        assert_eq!(small.live_bytes(), 2 * 3 * 5 * 4 * 4);
+        assert_eq!(big.live_bytes(), 2 * small.live_bytes());
+        assert_eq!(big.alloc_bytes(), 2 * 3 * 8 * 8 * 4);
+        // A sliding window caps the *streamed* rows, not the resident ones.
+        assert_eq!(small.step_bytes(None), small.live_bytes());
+        assert_eq!(small.step_bytes(Some(3)), 2 * 3 * 3 * 4 * 4);
+        assert_eq!(small.step_bytes(Some(100)), small.live_bytes());
+    }
+
+    #[test]
+    fn bad_writes_are_rejected() {
+        let mut kv = KvCache::new(1, 4, 3);
+        assert!(kv.write(1, &[0.0; 3], &[0.0; 3]).is_err(), "bad layer");
+        assert!(kv.write(0, &[0.0; 2], &[0.0; 2]).is_err(), "not a row multiple");
+        assert!(kv.write(0, &[0.0; 3], &[0.0; 6]).is_err(), "k/v mismatch");
+        assert!(kv.write(0, &[], &[]).is_err(), "empty write");
+    }
+}

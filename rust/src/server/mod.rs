@@ -3,30 +3,56 @@
 //! Protocol (one JSON object per line, response per line):
 //!   {"tokens": [1,2,3]}          -> {"ok":true,"top":[[id,logit],..],...}
 //!   {"text": "tom found a ball"} -> same, tokenized with the story vocab
+//!   {"cmd": "generate", "tokens": [..] | "text": "...",
+//!    "max_tokens": 32, "top_k": 5, "temperature": 1.0, "seed": 0}
+//!                                -> {"ok":true,"tokens":[..],"text":"...",
+//!                                    "finish":"max_tokens","steps":..,
+//!                                    "prefill_ms":..,"decode_ms":..,
+//!                                    "kv_bytes":..}
 //!   {"cmd": "metrics"}           -> metrics snapshot
 //!   {"cmd": "ping"}              -> {"ok":true,"pong":true}
 //!
-//! One thread per connection (connection counts here are tiny; the real
-//! concurrency lives in the engine's dispatcher/worker pool).
+//! Connections are handled on a **bounded thread pool** (not a thread per
+//! connection): a long-running `generate` stream occupies one handler
+//! while `encode`/`metrics` clients keep being served on the others, and
+//! a connection flood degrades into shed connections instead of unbounded
+//! thread spawn. Handlers poll a read timeout so a server stop is honoured
+//! even while clients hold idle connections open.
 
-use crate::coordinator::{Engine, Reject};
+use crate::coordinator::{Engine, GenParams, Reject};
 use crate::data::Tokenizer;
 use crate::util::json::Json;
+use crate::util::threadpool::ThreadPool;
 use anyhow::{Context, Result};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
+use std::time::Duration;
+
+/// Default connection-handler threads (see [`Server::bind_with`]).
+pub const DEFAULT_CONN_THREADS: usize = 8;
 
 pub struct Server {
     listener: TcpListener,
     engine: Arc<Engine>,
     tokenizer: Arc<Tokenizer>,
     stop: Arc<AtomicBool>,
+    /// Bounded connection-handler pool; its queue depth bounds how many
+    /// accepted-but-unserved connections can wait.
+    conns: ThreadPool,
 }
 
 impl Server {
     pub fn bind(addr: &str, engine: Engine) -> Result<Self> {
+        Self::bind_with(addr, engine, DEFAULT_CONN_THREADS)
+    }
+
+    /// Bind with an explicit handler-pool size. Each concurrent connection
+    /// occupies one handler for its lifetime; size the pool for the
+    /// expected number of concurrent clients (long-running `generate`
+    /// streams included).
+    pub fn bind_with(addr: &str, engine: Engine, conn_threads: usize) -> Result<Self> {
         let listener =
             TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
         Ok(Self {
@@ -34,6 +60,7 @@ impl Server {
             engine: Arc::new(engine),
             tokenizer: Arc::new(Tokenizer::for_stories()),
             stop: Arc::new(AtomicBool::new(false)),
+            conns: ThreadPool::new(conn_threads.max(1), 64),
         })
     }
 
@@ -46,7 +73,8 @@ impl Server {
         Arc::clone(&self.stop)
     }
 
-    /// Accept loop (blocking). Checks `stop` between connections.
+    /// Accept loop (blocking). Checks `stop` between connections; handlers
+    /// notice `stop` within their read-timeout tick.
     pub fn serve(self) -> Result<()> {
         self.listener.set_nonblocking(true)?;
         log::info!("serving on {}", self.listener.local_addr()?);
@@ -58,13 +86,22 @@ impl Server {
                 Ok((stream, peer)) => {
                     log::debug!("connection from {peer}");
                     stream.set_nonblocking(false)?;
+                    // The read timeout doubles as the stop-poll cadence.
+                    stream.set_read_timeout(Some(Duration::from_millis(200)))?;
                     let engine = Arc::clone(&self.engine);
                     let tokenizer = Arc::clone(&self.tokenizer);
-                    std::thread::spawn(move || {
-                        if let Err(e) = handle_conn(stream, &engine, &tokenizer) {
+                    let stop = Arc::clone(&self.stop);
+                    let job = move || {
+                        if let Err(e) = handle_conn(stream, &engine, &tokenizer, &stop) {
                             log::debug!("connection ended: {e:#}");
                         }
-                    });
+                    };
+                    if self.conns.try_submit(job).is_err() {
+                        // Handler pool and its wait queue are saturated:
+                        // shed the connection (dropping the stream closes
+                        // it; the client sees EOF and retries).
+                        log::warn!("shedding connection from {peer}: handler pool saturated");
+                    }
                 }
                 Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                     std::thread::sleep(std::time::Duration::from_millis(10));
@@ -86,14 +123,36 @@ impl Server {
     }
 }
 
-fn handle_conn(stream: TcpStream, engine: &Engine, tok: &Tokenizer) -> Result<()> {
+fn handle_conn(
+    stream: TcpStream,
+    engine: &Engine,
+    tok: &Tokenizer,
+    stop: &AtomicBool,
+) -> Result<()> {
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut writer = stream;
     let mut line = String::new();
     loop {
         line.clear();
-        if reader.read_line(&mut line)? == 0 {
-            return Ok(()); // client closed
+        // Read one line, tolerating read-timeout ticks (partial bytes stay
+        // appended to `line` across retries) so `stop` is honoured even on
+        // idle connections.
+        loop {
+            match reader.read_line(&mut line) {
+                Ok(0) => return Ok(()), // client closed
+                Ok(_) => break,
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                    ) =>
+                {
+                    if stop.load(Ordering::Relaxed) {
+                        return Ok(());
+                    }
+                }
+                Err(e) => return Err(e.into()),
+            }
         }
         let trimmed = line.trim();
         if trimmed.is_empty() {
@@ -109,6 +168,21 @@ fn handle_conn(stream: TcpStream, engine: &Engine, tok: &Tokenizer) -> Result<()
     }
 }
 
+/// Extract the prompt: explicit `tokens` win, else `text` through the
+/// story tokenizer.
+fn parse_tokens(req: &Json, tok: &Tokenizer) -> Result<Vec<u32>, Json> {
+    if let Some(t) = req.get("tokens").and_then(|t| t.as_arr()) {
+        Ok(t.iter()
+            .filter_map(|x| x.as_i64())
+            .map(|x| x.max(0) as u32)
+            .collect())
+    } else if let Some(text) = req.get("text").and_then(|t| t.as_str()) {
+        Ok(tok.encode_wrapped(text))
+    } else {
+        Err(err_json("need \"tokens\", \"text\" or \"cmd\""))
+    }
+}
+
 fn handle_request(req: &Json, engine: &Engine, tok: &Tokenizer) -> Json {
     if let Some(cmd) = req.get("cmd").and_then(|c| c.as_str()) {
         return match cmd {
@@ -118,18 +192,13 @@ fn handle_request(req: &Json, engine: &Engine, tok: &Tokenizer) -> Json {
                 Json::obj(obj)
             }
             "ping" => Json::obj(vec![("ok", Json::Bool(true)), ("pong", Json::Bool(true))]),
+            "generate" => handle_generate(req, engine, tok),
             other => err_json(&format!("unknown cmd {other:?}")),
         };
     }
-    let tokens: Vec<u32> = if let Some(t) = req.get("tokens").and_then(|t| t.as_arr()) {
-        t.iter()
-            .filter_map(|x| x.as_i64())
-            .map(|x| x.max(0) as u32)
-            .collect()
-    } else if let Some(text) = req.get("text").and_then(|t| t.as_str()) {
-        tok.encode_wrapped(text)
-    } else {
-        return err_json("need \"tokens\", \"text\" or \"cmd\"");
+    let tokens = match parse_tokens(req, tok) {
+        Ok(t) => t,
+        Err(e) => return e,
     };
     if tokens.is_empty() {
         return err_json("empty request");
@@ -149,13 +218,62 @@ fn handle_request(req: &Json, engine: &Engine, tok: &Tokenizer) -> Json {
             ("queue_ms", Json::num(resp.queue_ms)),
             ("total_ms", Json::num(resp.total_ms)),
         ]),
-        Err(r @ Reject::Overloaded) => Json::obj(vec![
-            ("ok", Json::Bool(false)),
-            ("error", Json::str(r.to_string())),
-            ("retry", Json::Bool(true)),
-        ]),
-        Err(r) => err_json(&r.to_string()),
+        Err(r) => reject_json(r),
     }
+}
+
+fn handle_generate(req: &Json, engine: &Engine, tok: &Tokenizer) -> Json {
+    let tokens = match parse_tokens(req, tok) {
+        Ok(t) => t,
+        Err(e) => return e,
+    };
+    if tokens.is_empty() {
+        return err_json("empty prompt");
+    }
+    let mut params = GenParams::default();
+    if let Some(n) = req.get("max_tokens").and_then(|x| x.as_usize()) {
+        params.max_tokens = n;
+    }
+    if let Some(n) = req.get("top_k").and_then(|x| x.as_usize()) {
+        params.top_k = n.max(1);
+    }
+    if let Some(t) = req.get("temperature").and_then(|x| x.as_f64()) {
+        params.temperature = t as f32;
+    }
+    if let Some(s) = req.get("seed").and_then(|x| x.as_i64()) {
+        params.seed = s as u64;
+    }
+    match engine.generate(tokens, params) {
+        Ok(resp) => Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("id", Json::num(resp.id as f64)),
+            ("prompt_len", Json::num(resp.prompt_len as f64)),
+            (
+                "tokens",
+                Json::arr(resp.tokens.iter().map(|&t| Json::num(t as f64))),
+            ),
+            ("text", Json::str(tok.decode(&resp.tokens))),
+            ("finish", Json::str(resp.finish.name())),
+            ("steps", Json::num(resp.steps as f64)),
+            ("queue_ms", Json::num(resp.queue_ms)),
+            ("prefill_ms", Json::num(resp.prefill_ms)),
+            ("decode_ms", Json::num(resp.decode_ms)),
+            ("kv_bytes", Json::num(resp.kv_bytes as f64)),
+        ]),
+        Err(r) => reject_json(r),
+    }
+}
+
+fn reject_json(r: Reject) -> Json {
+    let retry = matches!(r, Reject::Overloaded);
+    let mut obj = vec![
+        ("ok", Json::Bool(false)),
+        ("error", Json::str(r.to_string())),
+    ];
+    if retry {
+        obj.push(("retry", Json::Bool(true)));
+    }
+    Json::obj(obj)
 }
 
 fn err_json(msg: &str) -> Json {
@@ -198,6 +316,29 @@ impl Client {
 
     pub fn encode_text(&mut self, text: &str) -> Result<Json> {
         self.call(&Json::obj(vec![("text", Json::str(text))]))
+    }
+
+    fn generate_req(prompt: (&str, Json), params: &GenParams) -> Json {
+        Json::obj(vec![
+            ("cmd", Json::str("generate")),
+            prompt,
+            ("max_tokens", Json::num(params.max_tokens as f64)),
+            ("top_k", Json::num(params.top_k as f64)),
+            ("temperature", Json::num(params.temperature as f64)),
+            ("seed", Json::num(params.seed as f64)),
+        ])
+    }
+
+    pub fn generate_tokens(&mut self, tokens: &[u32], params: &GenParams) -> Result<Json> {
+        let prompt = (
+            "tokens",
+            Json::arr(tokens.iter().map(|&t| Json::num(t as f64))),
+        );
+        self.call(&Self::generate_req(prompt, params))
+    }
+
+    pub fn generate_text(&mut self, text: &str, params: &GenParams) -> Result<Json> {
+        self.call(&Self::generate_req(("text", Json::str(text)), params))
     }
 
     pub fn metrics(&mut self) -> Result<Json> {

@@ -1,0 +1,184 @@
+//! Differential suite for the autoregressive decode path: an N-step
+//! incremental decode (prefill + per-token [`Backend::decode_step`]) must
+//! reproduce a full stateless re-forward of the same token sequence at
+//! every position, to 1e-4 — across the variant zoo, both attention
+//! kernels (prefill lowering) and both linalg impls (which the incremental
+//! decode kernel also runs on).
+//!
+//! Plus KV-cache bookkeeping edge cases at the backend boundary: prompt
+//! longer than the cache, session at capacity, eviction (close)
+//! mid-generation, single-token prompts, and the §5.2 cache-size ordering
+//! (xSQA == GQA < sSQA) as observable `session_stats` bytes.
+
+use sqa::attention::Kernel;
+use sqa::linalg;
+use sqa::runtime::{Backend, NativeBackend};
+
+const VOCAB: usize = 2048; // tiny family
+
+fn max_diff(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0f32, f32::max)
+}
+
+fn prompt_tokens(n: usize) -> Vec<i32> {
+    (0..n).map(|i| ((i * 37 + 11) % VOCAB) as i32).collect()
+}
+
+/// Incremental decode logits vs the full forward's rows, for one backend
+/// configuration and variant. `split` is the prefill length.
+fn check_decode_matches_forward(
+    b: &NativeBackend,
+    variant: &str,
+    tokens: &[i32],
+    split: usize,
+    label: &str,
+) {
+    let t_len = tokens.len();
+    let params = b.init_params("tiny", variant, 5).unwrap();
+    let full = b.forward("tiny", variant, &params, tokens, 1, t_len).unwrap();
+    let (sid, logits) = b
+        .prefill("tiny", variant, &params, &tokens[..split], t_len)
+        .unwrap();
+    let d = max_diff(&logits, &full[(split - 1) * VOCAB..split * VOCAB]);
+    assert!(d < 1e-4, "{label}/{variant} prefill logits diverge by {d}");
+    for i in split..t_len {
+        let l = b.decode_step(sid, &params, tokens[i]).unwrap();
+        let d = max_diff(&l, &full[i * VOCAB..(i + 1) * VOCAB]);
+        assert!(d < 1e-4, "{label}/{variant} step at position {i} diverges by {d}");
+    }
+    assert!(b.close_session(sid));
+}
+
+#[test]
+fn incremental_decode_matches_full_forward_across_variants_and_impls() {
+    let tokens = prompt_tokens(20);
+    for kernel in [Kernel::Tiled, Kernel::Naive] {
+        for imp in [linalg::Impl::Blocked, linalg::Impl::Scalar] {
+            let b = NativeBackend::with_impls(kernel, imp);
+            let label = format!("{}+{}", kernel.name(), imp.name());
+            for variant in ["mha", "gqa", "mqa", "sqa", "xsqa"] {
+                check_decode_matches_forward(&b, variant, &tokens, 7, &label);
+            }
+        }
+    }
+}
+
+#[test]
+fn incremental_decode_matches_forward_for_ssqa_and_window_variants() {
+    // sSQA (the deliberately-larger-cache variant) on the default impls,
+    // and the sliding-window variants with the context pushed *past* the
+    // window (tiny's SWA window is 128) so decode masking actually trims.
+    let b = NativeBackend::new();
+    check_decode_matches_forward(&b, "ssqa", &prompt_tokens(20), 7, "default");
+    let long = prompt_tokens(140);
+    for variant in ["swa", "swsqa"] {
+        check_decode_matches_forward(&b, variant, &long, 120, "default");
+    }
+}
+
+#[test]
+fn single_token_prompt_decodes_correctly() {
+    // The smallest possible prefill: one token, then decode from there.
+    let b = NativeBackend::new();
+    let tokens = prompt_tokens(6);
+    check_decode_matches_forward(&b, "sqa", &tokens, 1, "single-token");
+}
+
+#[test]
+fn prompt_longer_than_cache_is_rejected() {
+    let b = NativeBackend::new();
+    let params = b.init_params("tiny", "sqa", 1).unwrap();
+    let tokens = prompt_tokens(12);
+    let err = b.prefill("tiny", "sqa", &params, &tokens, 8).unwrap_err();
+    assert!(err.to_string().contains("exceeds"), "{err:#}");
+    // Exactly filling the cache is allowed (prefill-only session).
+    let (sid, _) = b.prefill("tiny", "sqa", &params, &tokens, 12).unwrap();
+    let stats = b.session_stats(sid).unwrap();
+    assert_eq!((stats.len, stats.capacity), (12, 12));
+    // ...but the next step must fail with the session kept alive.
+    assert!(b.decode_step(sid, &params, 1).is_err());
+    assert_eq!(b.session_stats(sid).unwrap().len, 12);
+    assert!(b.close_session(sid));
+}
+
+#[test]
+fn closing_a_session_mid_generation_stops_it() {
+    // Eviction at the backend boundary: the coordinator closes sessions
+    // whose budget expired; subsequent steps must fail cleanly and the
+    // cache must be gone (close is the only reclamation path).
+    let b = NativeBackend::new();
+    let params = b.init_params("tiny", "gqa", 9).unwrap();
+    let (sid, _) = b.prefill("tiny", "gqa", &params, &prompt_tokens(4), 32).unwrap();
+    b.decode_step(sid, &params, 42).unwrap();
+    assert!(b.close_session(sid), "first close reclaims");
+    assert!(!b.close_session(sid), "second close is a no-op");
+    let err = b.decode_step(sid, &params, 43).unwrap_err();
+    assert!(err.to_string().contains("unknown"), "{err:#}");
+    assert!(b.session_stats(sid).is_err());
+}
+
+#[test]
+fn cache_bytes_follow_hkv_ordering() {
+    // The paper's §5.2 decode axis as *observable* buffer sizes: at the
+    // same context, bytes/step scale with Hkv alone. tiny (H=8):
+    // GQA(8,2) == xSQA(2,2), sSQA(4,4) = 2x, MHA(8,8) = 4x, MQA(8,1) = ½x.
+    let b = NativeBackend::new();
+    let tokens = prompt_tokens(16);
+    let bytes = |variant: &str| -> u64 {
+        let params = b.init_params("tiny", variant, 3).unwrap();
+        let (sid, _) = b.prefill("tiny", variant, &params, &tokens, 16).unwrap();
+        let st = b.session_stats(sid).unwrap();
+        b.close_session(sid);
+        st.kv_bytes
+    };
+    let (mha, gqa, mqa, ssqa, xsqa) =
+        (bytes("mha"), bytes("gqa"), bytes("mqa"), bytes("ssqa"), bytes("xsqa"));
+    assert_eq!(xsqa, gqa, "xSQA must match GQA's cache exactly (§5.2)");
+    assert_eq!(ssqa, 2 * gqa, "sSQA carries 2x GQA's cache (§5.1)");
+    assert_eq!(mha, 4 * gqa);
+    assert_eq!(2 * mqa, gqa);
+    // And the absolute value is the analytic model's cache term:
+    // 2 bytes-dirs * 2 layers * 16 tokens * Hkv * 16 dh * 4 B.
+    assert_eq!(gqa, 2 * 2 * 16 * 2 * 16 * 4);
+}
+
+#[test]
+fn windowed_sessions_report_window_capped_step_bytes() {
+    // tiny/swsqa: Hq=4, Hkv=2, window 128. Past the window, a decode step
+    // only streams the visible 128 rows (mask-aware tile skipping), and
+    // session_stats must report that — matching flops::decode's eff_s —
+    // while the allocation stays the full capacity.
+    let b = NativeBackend::new();
+    let params = b.init_params("tiny", "swsqa", 4).unwrap();
+    let tokens = prompt_tokens(140);
+    let (sid, _) = b.prefill("tiny", "swsqa", &params, &tokens, 140).unwrap();
+    let st = b.session_stats(sid).unwrap();
+    assert_eq!(st.len, 140);
+    assert_eq!(st.kv_bytes, 2 * 2 * 128 * 32 * 4);
+    assert_eq!(st.alloc_bytes, 2 * 2 * 140 * 32 * 4);
+    assert!(b.close_session(sid));
+}
+
+#[test]
+fn sessions_are_isolated() {
+    // Two interleaved sessions with different prompts must not bleed into
+    // each other's caches: each must still match its own full forward.
+    let b = NativeBackend::new();
+    let params = b.init_params("tiny", "sqa", 21).unwrap();
+    let ta = prompt_tokens(12);
+    let tb: Vec<i32> = (0..12).map(|i| ((i * 71 + 5) % VOCAB) as i32).collect();
+    let fa = b.forward("tiny", "sqa", &params, &ta, 1, 12).unwrap();
+    let fb = b.forward("tiny", "sqa", &params, &tb, 1, 12).unwrap();
+    let (sa, _) = b.prefill("tiny", "sqa", &params, &ta[..4], 16).unwrap();
+    let (sb, _) = b.prefill("tiny", "sqa", &params, &tb[..4], 16).unwrap();
+    for i in 4..12 {
+        // Interleave the two sessions' steps.
+        let la = b.decode_step(sa, &params, ta[i]).unwrap();
+        let lb = b.decode_step(sb, &params, tb[i]).unwrap();
+        assert!(max_diff(&la, &fa[i * VOCAB..(i + 1) * VOCAB]) < 1e-4, "A@{i}");
+        assert!(max_diff(&lb, &fb[i * VOCAB..(i + 1) * VOCAB]) < 1e-4, "B@{i}");
+    }
+    assert!(b.close_session(sa));
+    assert!(b.close_session(sb));
+}
