@@ -1,0 +1,342 @@
+//! Training-throughput bench: fwd/bwd split step time vs sequence length
+//! across the variant zoo — the paper's compute-bound pre-training axis
+//! (§3.2) measured on the *real* fused train step, for both attention
+//! backward implementations (flash-style streaming vs the scalar row-loop
+//! oracle).
+//!
+//! For every (variant, seq, impl) cell the bench times, at batch 1:
+//!   * `fwd_secs` — a forward pass through the same lowering
+//!     (`Backend::forward_impl`);
+//!   * `step_secs` — one fused forward+backward+AdamW step
+//!     (`Backend::train_step_impl`);
+//!   * `bwd_secs = step_secs − fwd_secs` — the backward(+optimizer) share,
+//!     the fraction the streaming backward exists to shrink.
+//!
+//! The scalar-oracle rows are the PR-1 training path: per-head, per-row
+//! loops with full softmax recomputation. Their step time grows ~S² with a
+//! large constant, so naive cells are capped at `--naive-max-seq`
+//! (default 4096) — the skip is printed, never silent.
+//!
+//! Flags (after `--`):
+//!   --seqs 1024,4096,8192,16384   sequence lengths        (default shown)
+//!   --variants mha,...,xsqa       variant list            (default zoo)
+//!   --impls tiled,naive           lowerings               (default shown)
+//!   --naive-max-seq N             cap for naive cells     (default 4096)
+//!   --reps N                      timed reps per cell     (default 2)
+//!   --json FILE                   output JSON             (default
+//!                                 BENCH_train.json at the repo root, so
+//!                                 the training trajectory persists
+//!                                 across PRs)
+//!   --smoke                       CI mode: seqs <= 4096, naive only at
+//!                                 4096 for mha/sqa, 1 rep; exit(1) if the
+//!                                 tiled backward loses to the scalar
+//!                                 oracle at S >= 4096 or if sqa's step is
+//!                                 not faster than mha's at the largest
+//!                                 smoke shape
+//!   --quick                       fewer/smaller cells
+//!
+//! CI runs: `cargo bench --bench train_throughput -- --smoke
+//! --json BENCH_train.json`
+
+use sqa::runtime::{Backend, NativeBackend};
+use sqa::util::json::Json;
+use std::time::Instant;
+
+const FAMILY: &str = "bench";
+const DEFAULT_VARIANTS: &[&str] = &["mha", "gqa", "mqa", "sqa", "ssqa", "xsqa"];
+
+struct Flags {
+    seqs: Vec<usize>,
+    variants: Vec<String>,
+    impls: Vec<String>,
+    naive_max_seq: usize,
+    reps: usize,
+    json: Option<String>,
+    smoke: bool,
+    quick: bool,
+}
+
+fn parse_flags() -> Flags {
+    let mut f = Flags {
+        seqs: vec![1024, 4096, 8192, 16384],
+        variants: DEFAULT_VARIANTS.iter().map(|s| s.to_string()).collect(),
+        impls: vec!["tiled".to_string(), "naive".to_string()],
+        naive_max_seq: 4096,
+        reps: 2,
+        json: Some("BENCH_train.json".to_string()),
+        smoke: false,
+        quick: false,
+    };
+    let parse_list =
+        |v: &str| -> Vec<String> { v.split(',').map(|s| s.trim().to_string()).collect() };
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut i = 0;
+    while i < args.len() {
+        let value = if i + 1 < args.len() {
+            Some(args[i + 1].clone())
+        } else {
+            None
+        };
+        match (args[i].as_str(), value) {
+            ("--seqs", Some(v)) => {
+                f.seqs = v.split(',').filter_map(|s| s.trim().parse().ok()).collect();
+                i += 2;
+            }
+            ("--variants", Some(v)) => {
+                f.variants = parse_list(&v);
+                i += 2;
+            }
+            ("--impls", Some(v)) => {
+                f.impls = parse_list(&v);
+                i += 2;
+            }
+            ("--naive-max-seq", Some(v)) => {
+                f.naive_max_seq = v.parse().expect("--naive-max-seq");
+                i += 2;
+            }
+            ("--reps", Some(v)) => {
+                f.reps = v.parse::<usize>().expect("--reps").max(1);
+                i += 2;
+            }
+            ("--json", Some(v)) => {
+                f.json = Some(v);
+                i += 2;
+            }
+            ("--smoke", _) => {
+                f.smoke = true;
+                i += 1;
+            }
+            ("--quick", _) => {
+                f.quick = true;
+                i += 1;
+            }
+            // Ignore unknown flags (the cargo bench runner passes its own).
+            _ => i += 1,
+        }
+    }
+    if f.smoke || f.quick {
+        f.seqs.retain(|&s| s <= 4096);
+        f.reps = 1;
+    }
+    f
+}
+
+/// Smoke mode keeps the scalar-oracle cells that feed the regression guard
+/// (mha/sqa at the 4096 threshold) and drops the rest — the oracle's ~S²
+/// step time is exactly what CI cannot afford to sweep.
+fn cell_enabled(flags: &Flags, variant: &str, seq: usize, impl_: &str) -> bool {
+    if impl_.starts_with("naive") {
+        if seq > flags.naive_max_seq {
+            return false;
+        }
+        if flags.smoke && !(seq >= 4096 && (variant == "mha" || variant == "sqa")) {
+            return false;
+        }
+    }
+    true
+}
+
+struct Row {
+    variant: String,
+    hq: usize,
+    hkv: usize,
+    seq: usize,
+    impl_: String,
+    fwd_secs: f64,
+    step_secs: f64,
+    bwd_secs: f64,
+    bwd_share: f64,
+    loss: f32,
+}
+
+fn main() {
+    let flags = parse_flags();
+    let backend = NativeBackend::new();
+    let fam = backend.family(FAMILY).expect("bench family");
+    let vocab = fam.dims.vocab as i32;
+
+    let mut rows: Vec<Row> = Vec::new();
+    println!(
+        "## Train throughput, family `{FAMILY}`, batch 1 ({} rep(s) per cell)\n",
+        flags.reps
+    );
+    println!(
+        "{:6} {:>3} {:>4} {:>6} {:12} {:>10} {:>10} {:>10} {:>9}",
+        "var", "Hq", "Hkv", "seq", "impl", "fwd s", "step s", "bwd s", "bwd %"
+    );
+    for &seq in &flags.seqs {
+        for variant in &flags.variants {
+            let cfg = backend.variant(FAMILY, variant).expect("variant").cfg;
+            let params = backend.init_params(FAMILY, variant, 42).expect("init params");
+            let p = params.len();
+            let tokens: Vec<i32> = (0..seq).map(|i| ((i * 131 + 17) as i32) % vocab).collect();
+            let targets: Vec<i32> = tokens.iter().map(|t| (t * 7 + 3) % vocab).collect();
+            for impl_ in &flags.impls {
+                if !cell_enabled(&flags, variant, seq, impl_) {
+                    println!(
+                        "{:6} {:>3} {:>4} {:>6} {:12} skipped (scalar oracle capped; \
+                         see --naive-max-seq/--smoke)",
+                        variant, cfg.hq, cfg.hkv, seq, impl_
+                    );
+                    continue;
+                }
+                // Forward through the same lowering: the fwd half of the
+                // split (one warm-less timed loop; reps bound the noise).
+                let t0 = Instant::now();
+                for _ in 0..flags.reps {
+                    let logits = backend
+                        .forward_impl(impl_, FAMILY, variant, &params, &tokens, 1, seq)
+                        .expect("forward_impl");
+                    assert!(logits[0].is_finite());
+                }
+                let fwd_secs = t0.elapsed().as_secs_f64() / flags.reps as f64;
+
+                let mut state = vec![0.0f32; 3 * p + 2];
+                state[..p].copy_from_slice(&params);
+                let mut loss = f32::NAN;
+                let t1 = Instant::now();
+                for rep in 0..flags.reps {
+                    let (l, _) = backend
+                        .train_step_impl(
+                            impl_,
+                            FAMILY,
+                            variant,
+                            &mut state,
+                            rep as i32 + 1,
+                            1e-3,
+                            &tokens,
+                            &targets,
+                            1,
+                            seq,
+                        )
+                        .expect("train_step_impl");
+                    assert!(l.is_finite(), "{variant}/{impl_}@{seq}: non-finite loss");
+                    loss = l;
+                }
+                let step_secs = t1.elapsed().as_secs_f64() / flags.reps as f64;
+                let bwd_secs = (step_secs - fwd_secs).max(0.0);
+                let bwd_share = if step_secs > 0.0 { bwd_secs / step_secs } else { 0.0 };
+                println!(
+                    "{:6} {:>3} {:>4} {:>6} {:12} {:>10.3} {:>10.3} {:>10.3} {:>8.1}%",
+                    variant,
+                    cfg.hq,
+                    cfg.hkv,
+                    seq,
+                    impl_,
+                    fwd_secs,
+                    step_secs,
+                    bwd_secs,
+                    100.0 * bwd_share
+                );
+                rows.push(Row {
+                    variant: variant.clone(),
+                    hq: cfg.hq,
+                    hkv: cfg.hkv,
+                    seq,
+                    impl_: impl_.clone(),
+                    fwd_secs,
+                    step_secs,
+                    bwd_secs,
+                    bwd_share,
+                    loss,
+                });
+            }
+        }
+        println!();
+    }
+
+    if let Some(path) = &flags.json {
+        let doc = Json::obj(vec![
+            ("bench", Json::str("train_throughput")),
+            ("family", Json::str(FAMILY)),
+            ("batch", Json::num(1.0)),
+            ("reps", Json::num(flags.reps as f64)),
+            (
+                "rows",
+                Json::arr(rows.iter().map(|r| {
+                    Json::obj(vec![
+                        ("variant", Json::str(&r.variant)),
+                        ("hq", Json::num(r.hq as f64)),
+                        ("hkv", Json::num(r.hkv as f64)),
+                        ("seq", Json::num(r.seq as f64)),
+                        ("impl", Json::str(&r.impl_)),
+                        ("fwd_secs", Json::num(r.fwd_secs)),
+                        ("step_secs", Json::num(r.step_secs)),
+                        ("bwd_secs", Json::num(r.bwd_secs)),
+                        ("bwd_share", Json::num(r.bwd_share)),
+                        ("loss", Json::num(r.loss as f64)),
+                    ])
+                })),
+            ),
+        ]);
+        std::fs::write(path, doc.to_string()).expect("writing bench JSON");
+        println!("train JSON -> {path}");
+    }
+
+    if flags.smoke {
+        let find = |variant: &str, seq: usize, impl_: &str| -> Option<&Row> {
+            rows.iter()
+                .find(|r| r.variant == variant && r.seq == seq && r.impl_ == impl_)
+        };
+        let mut failed = false;
+        // Guard 1: the streaming backward must beat the scalar oracle at
+        // every S >= 4096 it was measured against (5% grace for timer
+        // noise on shared CI runners). The comparison is on the *backward
+        // split* (step − fwd), not the whole step — the naive cells also
+        // run the S×S naive forward, whose cost would otherwise mask a
+        // large regression in the backward under guard; the full step is
+        // checked too as a sanity floor. An empty comparison set would
+        // pass vacuously — fail loudly instead.
+        let mut compared = 0;
+        for r in rows.iter().filter(|r| r.impl_ == "naive" && r.seq >= 4096) {
+            let Some(tiled) = find(&r.variant, r.seq, "tiled") else {
+                continue;
+            };
+            compared += 1;
+            if tiled.bwd_secs > r.bwd_secs * 1.05 {
+                eprintln!(
+                    "SMOKE FAIL {}@{}: tiled backward {:.3}s slower than scalar oracle \
+                     backward {:.3}s",
+                    r.variant, r.seq, tiled.bwd_secs, r.bwd_secs
+                );
+                failed = true;
+            }
+            if tiled.step_secs > r.step_secs * 1.05 {
+                eprintln!(
+                    "SMOKE FAIL {}@{}: tiled step {:.3}s slower than scalar oracle {:.3}s",
+                    r.variant, r.seq, tiled.step_secs, r.step_secs
+                );
+                failed = true;
+            }
+        }
+        if compared == 0 {
+            eprintln!("SMOKE MISCONFIGURED: no tiled-vs-naive pair at S >= 4096");
+            failed = true;
+        }
+        // Guard 2: the paper's headline — query-head reduction must show
+        // up in the measured train step at the largest smoke shape.
+        let top = flags.seqs.iter().copied().max().unwrap_or(0);
+        match (find("sqa", top, "tiled"), find("mha", top, "tiled")) {
+            (Some(sqa), Some(mha)) => {
+                if sqa.step_secs >= mha.step_secs {
+                    eprintln!(
+                        "SMOKE FAIL @{top}: sqa step {:.3}s >= mha step {:.3}s",
+                        sqa.step_secs, mha.step_secs
+                    );
+                    failed = true;
+                }
+            }
+            _ => {
+                eprintln!("SMOKE MISCONFIGURED: missing sqa/mha tiled cells at S={top}");
+                failed = true;
+            }
+        }
+        if failed {
+            std::process::exit(1);
+        }
+        println!(
+            "train smoke OK: tiled backward beats the scalar oracle at S >= 4096 \
+             and sqa steps faster than mha at S = {top}"
+        );
+    }
+}

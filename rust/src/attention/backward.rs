@@ -1,0 +1,618 @@
+//! Flash-style streaming attention **backward**: tile-recomputed score
+//! blocks on the `linalg` micro-GEMMs, driven by the forward's logsumexp
+//! statistics.
+//!
+//! The paper's training claim is compute-bound (§3.2: the `H/Hq` FLOP
+//! reduction pays in pre-training and full-sequence processing), but until
+//! this module the backward half of every train step ran per-head, per-row
+//! scalar loops with a full softmax recomputation per row — the backward
+//! dominated step time and the measured training speedup never approached
+//! the forward ratio. This is the backward analogue of [`super::tiled`]:
+//!
+//! * the forward tile streamer exports, per query row, one number — the
+//!   logsumexp `L_i = m_i + ln(l_i)` of its scaled, masked scores
+//!   ([`super::tiled::stream_qtile_at_lse`]) — so the backward recomputes
+//!   any probability block directly as `P = exp(scale·QKᵀ − L)` without
+//!   re-running the online max/normalizer search;
+//! * per `(head, query-tile)` job, every key-tile step is four micro-GEMMs
+//!   through [`crate::linalg`]: the score block `scale·Q Kᵀ`
+//!   ([`linalg::score_block`]), `dP = dO Vᵀ` (the same block shape), then
+//!   with `dS = P ∘ (dP − Δ) · scale` (where `Δ_i = dOᵢ·Oᵢ` is the
+//!   softmax-Jacobian row term) the three gradient accumulations
+//!   `dQ += dS K` ([`linalg::pv_block`]), `dK += dSᵀ Q` and `dV += Pᵀ dO`
+//!   ([`linalg::ptx_block`]);
+//! * key tiles outside [`tile_visible_range`] are skipped without touching
+//!   K or V — masked-out keys provably receive exactly zero dK/dV
+//!   (`rust/tests/properties.rs`);
+//! * jobs fan out over the thread pool in fixed-size **waves** whose
+//!   per-tile dK/dV accumulation buffers are merged in job order, so the
+//!   reduction order — and therefore every gradient bit — is independent
+//!   of worker count and scheduling (two runs on different pool sizes are
+//!   bitwise equal).
+//!
+//! Row semantics mirror the forward exactly: a row whose normalizer was 0
+//! (fully masked / all `-inf`) or that was poisoned by a `+inf` score
+//! exported `lse = -inf`, and the backward emits zero attention gradients
+//! for it — the same "zeros, never NaN" totality the forward guarantees.
+//!
+//! [`backward_naive_slabs`] keeps the PR-1 scalar loops (row-by-row softmax
+//! recomputation, per-element dot products) as the differential oracle:
+//! `rust/tests/grad_differential.rs` pins the streaming backward against it
+//! to 1e-4 over the full variant × mask × length × linalg grid, and
+//! finite-difference checks pin both against the loss itself.
+
+use super::tiled::{self, tile_visible_range, TileConfig};
+use super::{visible_range, Spec};
+use crate::linalg;
+use crate::util::threadpool::ThreadPool;
+use std::sync::mpsc;
+
+/// Jobs per parallel wave. Each `(head, query-tile)` job carries private
+/// dQ/dK/dV tile buffers (worst case ~`2·s·d_head` floats for a causal
+/// full-attention tile), so the wave size bounds transient memory at
+/// `WAVE · 2·s·d_head` floats while still keeping every pool worker fed;
+/// waves are a fixed partition of the job list, which is what makes the
+/// merge order independent of the pool size.
+const WAVE: usize = 16;
+
+/// Tiled streaming forward over head-interleaved slabs that also exports
+/// the per-row logsumexp statistics the streaming backward consumes.
+///
+/// Layouts match `runtime::native`'s projection slabs: `q`/`dout`-shaped
+/// slabs are `[s, Hq·d]`, `k`/`v` are `[s, Hkv·d]`, `out` is `[s, Hq·d]`
+/// (fully overwritten), and `lse` is head-major `[Hq, s]`
+/// (`lse[h·s + i]` = logsumexp of head `h`, row `i`; `-inf` marks a row
+/// whose probabilities are all exactly 0). With a pool, `(head, q-tile)`
+/// jobs fan out and write disjoint slices; results are bitwise identical
+/// to the serial path. Do not pass a pool from inside a pool job.
+#[allow(clippy::too_many_arguments)]
+pub fn forward_slabs_lse(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    out: &mut [f32],
+    lse: &mut [f32],
+    s: usize,
+    d: usize,
+    spec: Spec,
+    cfg: TileConfig,
+    scale: f32,
+    pool: Option<&ThreadPool>,
+) {
+    let (hq, hkv) = (spec.hq, spec.hkv);
+    let group = hq / hkv;
+    let (dq_cols, dkv_cols) = (hq * d, hkv * d);
+    debug_assert!(out.len() >= s * dq_cols && lse.len() >= hq * s);
+    // Same drivers as the plain tiled forward (`stream_head` /
+    // `stream_slabs_parallel` are thin wrappers over these) — one tile
+    // walk serves both paths, with the statistics threaded through.
+    match pool {
+        Some(pool) if hq * s.div_ceil(cfg.q_tile) > 1 => tiled::stream_slabs_parallel_lse(
+            q,
+            k,
+            v,
+            out,
+            Some(lse),
+            s,
+            d,
+            spec,
+            cfg,
+            scale,
+            pool,
+        ),
+        _ => {
+            for h in 0..hq {
+                let hk = h / group;
+                tiled::stream_head_lse(
+                    q,
+                    dq_cols,
+                    h * d,
+                    k,
+                    dkv_cols,
+                    hk * d,
+                    v,
+                    out,
+                    dq_cols,
+                    h * d,
+                    s,
+                    d,
+                    spec,
+                    cfg,
+                    scale,
+                    Some(&mut lse[h * s..(h + 1) * s]),
+                );
+            }
+        }
+    }
+}
+
+/// One `(head, query-tile)` job's gradient contribution: a dense dQ tile
+/// plus dK/dV accumulation buffers spanning only the tile's visible key
+/// range (`k_lo..k_lo + dk.len()/d`).
+struct TileGrad {
+    h: usize,
+    i0: usize,
+    k_lo: usize,
+    dq: Vec<f32>,
+    dk: Vec<f32>,
+    dv: Vec<f32>,
+}
+
+/// Backward of one query tile `[i0, i1)` of head `h` — the streaming core.
+///
+/// Recomputes each visible key tile's score block via one micro-GEMM,
+/// turns it into probabilities with the forward's `lse` statistics (no
+/// max/normalizer search), and accumulates the three gradient products as
+/// blocked GEMM calls. Returns `None` when the whole tile is masked.
+#[allow(clippy::too_many_arguments)]
+fn backward_qtile(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    o: &[f32],
+    lse_head: &[f32],
+    dout: &[f32],
+    s: usize,
+    d: usize,
+    h: usize,
+    hk: usize,
+    dq_cols: usize,
+    dkv_cols: usize,
+    i0: usize,
+    i1: usize,
+    spec: Spec,
+    cfg: TileConfig,
+    scale: f32,
+) -> Option<TileGrad> {
+    let tq = i1 - i0;
+    let (k_lo, k_hi) = tile_visible_range(i0, i1, s, spec);
+    if k_hi <= k_lo {
+        return None;
+    }
+    let k_tile = cfg.k_tile;
+    // Δ_i = dO_i · O_i — the softmax-Jacobian row term. Mathematically
+    // Σ_j P_ij dP_ij, but computable from the forward's output without
+    // touching the probabilities (the standard flash-backward identity).
+    let mut delta = vec![0.0f32; tq];
+    for (ti, dl) in delta.iter_mut().enumerate() {
+        let base = (i0 + ti) * dq_cols + h * d;
+        let dorow = &dout[base..base + d];
+        let orow = &o[base..base + d];
+        *dl = dorow.iter().zip(orow).map(|(a, b)| a * b).sum();
+    }
+    let mut dq_buf = vec![0.0f32; tq * d];
+    let mut dk_buf = vec![0.0f32; (k_hi - k_lo) * d];
+    let mut dv_buf = vec![0.0f32; (k_hi - k_lo) * d];
+    // Block scratch: scores + dP + their masked P / dS twins — four
+    // [q_tile, k_tile] blocks regardless of S, the same peak-storage
+    // contract as the forward streamer.
+    let mut scores = vec![0.0f32; tq * k_tile];
+    let mut dp = vec![0.0f32; tq * k_tile];
+    let mut probs = vec![0.0f32; tq * k_tile];
+    let mut ds = vec![0.0f32; tq * k_tile];
+
+    for jt in k_lo / k_tile..k_hi.div_ceil(k_tile) {
+        // Clamp the block to the tile's visible union [k_lo, k_hi): unlike
+        // the forward (which masks per row into full-width blocks), the
+        // dK/dV accumulation buffers are offset by k_lo and sized to the
+        // union, so the GEMMs must never address rows outside it.
+        let j0 = (jt * k_tile).max(k_lo);
+        let j1 = ((jt + 1) * k_tile).min(k_hi);
+        let tk = j1 - j0;
+        // 1. Score block recompute: scale·Q Kᵀ, one micro-GEMM.
+        linalg::score_block(
+            cfg.linalg, q, dq_cols, h * d, i0, tq, k, dkv_cols, hk * d, j0, tk, d, scale,
+            &mut scores, k_tile,
+        );
+        // 2. dP block: dO Vᵀ — the same strided NT product, scale 1.
+        linalg::score_block(
+            cfg.linalg, dout, dq_cols, h * d, i0, tq, v, dkv_cols, hk * d, j0, tk, d, 1.0,
+            &mut dp, k_tile,
+        );
+        // 3. P = exp(score − lse) under the row mask; dS = P∘(dP − Δ)·scale.
+        for ti in 0..tq {
+            let i = i0 + ti;
+            let (lo, hi) = visible_range(i, s, spec);
+            let (jlo, jhi) = (j0.max(lo), j1.min(hi));
+            let prow = &mut probs[ti * k_tile..][..tk];
+            let dsrow = &mut ds[ti * k_tile..][..tk];
+            let l = lse_head[i];
+            if jlo >= jhi || !l.is_finite() {
+                // Row sees nothing here, or the forward zeroed it (empty
+                // normalizer / poisoned +inf): zero gradients, like the
+                // forward's zero outputs.
+                prow.fill(0.0);
+                dsrow.fill(0.0);
+                continue;
+            }
+            let srow = &scores[ti * k_tile..][..tk];
+            let dprow = &dp[ti * k_tile..][..tk];
+            for jj in 0..tk {
+                let j = j0 + jj;
+                let sc = srow[jj];
+                // Masked, out-of-window, or non-finite scores carry weight
+                // exactly 0 (matching the forward's per-key masking).
+                let p = if (jlo..jhi).contains(&j) && sc.is_finite() {
+                    (sc - l).exp()
+                } else {
+                    0.0
+                };
+                prow[jj] = p;
+                dsrow[jj] = if p == 0.0 {
+                    0.0
+                } else {
+                    p * (dprow[jj] - delta[ti]) * scale
+                };
+            }
+        }
+        // 4. The three gradient micro-GEMMs.
+        //    dQ_tile += dS @ K_tile (rows 0..tq of the private buffer);
+        linalg::pv_block(
+            cfg.linalg, &ds, k_tile, tq, tk, k, dkv_cols, hk * d, j0, d, &mut dq_buf, d, 0,
+        );
+        //    dK_{j0..j1} += dSᵀ @ Q_tile;
+        linalg::ptx_block(
+            cfg.linalg, &ds, k_tile, tq, tk, q, dq_cols, h * d, i0, d, &mut dk_buf, d, 0,
+            j0 - k_lo,
+        );
+        //    dV_{j0..j1} += Pᵀ @ dO_tile.
+        linalg::ptx_block(
+            cfg.linalg, &probs, k_tile, tq, tk, dout, dq_cols, h * d, i0, d, &mut dv_buf, d,
+            0, j0 - k_lo,
+        );
+    }
+    Some(TileGrad {
+        h,
+        i0,
+        k_lo,
+        dq: dq_buf,
+        dk: dk_buf,
+        dv: dv_buf,
+    })
+}
+
+/// Flash-style streaming attention backward over head-interleaved slabs.
+///
+/// Inputs are the forward's projection slabs (`q`/`o`/`dout`: `[s, Hq·d]`,
+/// `k`/`v`: `[s, Hkv·d]`) plus the head-major `[Hq, s]` logsumexp
+/// statistics exported by [`forward_slabs_lse`]; `dq`/`dk`/`dv` are
+/// **accumulated into** (callers pass zeroed buffers), with KV-head
+/// sharing folding every query head's dK/dV into its `h / (Hq/Hkv)` group
+/// exactly like the forward read them.
+///
+/// With a pool, `(head, query-tile)` jobs run in fixed-size waves and are
+/// merged in job order — gradients are bitwise identical for any worker
+/// count, including the serial `pool: None` path. Do not pass a pool from
+/// inside a pool job (bounded-queue deadlock, as everywhere else).
+#[allow(clippy::too_many_arguments)]
+pub fn backward_tiled_slabs(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    o: &[f32],
+    lse: &[f32],
+    dout: &[f32],
+    dq: &mut [f32],
+    dk: &mut [f32],
+    dv: &mut [f32],
+    s: usize,
+    d: usize,
+    spec: Spec,
+    cfg: TileConfig,
+    scale: f32,
+    pool: Option<&ThreadPool>,
+) {
+    let (hq, hkv) = (spec.hq, spec.hkv);
+    let group = hq / hkv;
+    let (dq_cols, dkv_cols) = (hq * d, hkv * d);
+    debug_assert!(lse.len() >= hq * s);
+    debug_assert!(dq.len() >= s * dq_cols && dk.len() >= s * dkv_cols);
+    let n_tiles = s.div_ceil(cfg.q_tile);
+    let tiles: Vec<(usize, usize)> = (0..hq)
+        .flat_map(|h| (0..n_tiles).map(move |t| (h, t * cfg.q_tile)))
+        .collect();
+
+    for wave in tiles.chunks(WAVE) {
+        let run_tile = |&(h, i0): &(usize, usize)| {
+            let hk = h / group;
+            let i1 = (i0 + cfg.q_tile).min(s);
+            backward_qtile(
+                q,
+                k,
+                v,
+                o,
+                &lse[h * s..(h + 1) * s],
+                dout,
+                s,
+                d,
+                h,
+                hk,
+                dq_cols,
+                dkv_cols,
+                i0,
+                i1,
+                spec,
+                cfg,
+                scale,
+            )
+        };
+        let results: Vec<Option<TileGrad>> = match pool {
+            Some(pool) if wave.len() > 1 => {
+                let (tx, rx) = mpsc::channel::<(usize, Option<TileGrad>)>();
+                let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
+                    Vec::with_capacity(wave.len());
+                for (idx, tile) in wave.iter().enumerate() {
+                    let tx = tx.clone();
+                    jobs.push(Box::new(move || {
+                        let _ = tx.send((idx, run_tile(tile)));
+                    }));
+                }
+                drop(tx);
+                pool.run_borrowed(jobs);
+                let mut slots: Vec<Option<TileGrad>> =
+                    (0..wave.len()).map(|_| None).collect();
+                for (idx, g) in rx.try_iter() {
+                    slots[idx] = g;
+                }
+                slots
+            }
+            _ => wave.iter().map(run_tile).collect(),
+        };
+        // Merge this wave in job order: the (head, tile) enumeration — not
+        // worker scheduling — fixes the floating-point reduction order.
+        for g in results.into_iter().flatten() {
+            let hk = g.h / group;
+            for (ti, row) in g.dq.chunks_exact(d).enumerate() {
+                let dst = &mut dq[(g.i0 + ti) * dq_cols + g.h * d..][..d];
+                for (a, b) in dst.iter_mut().zip(row) {
+                    *a += b;
+                }
+            }
+            for (r, row) in g.dk.chunks_exact(d).enumerate() {
+                let dst = &mut dk[(g.k_lo + r) * dkv_cols + hk * d..][..d];
+                for (a, b) in dst.iter_mut().zip(row) {
+                    *a += b;
+                }
+            }
+            for (r, row) in g.dv.chunks_exact(d).enumerate() {
+                let dst = &mut dv[(g.k_lo + r) * dkv_cols + hk * d..][..d];
+                for (a, b) in dst.iter_mut().zip(row) {
+                    *a += b;
+                }
+            }
+        }
+    }
+}
+
+/// Softmax of one attention row over its visible range (max-subtracted,
+/// identical summation order to the naive oracle's) — the row primitive of
+/// the scalar paths: the naive forward in `runtime::native::attend_slabs`
+/// and the [`backward_naive_slabs`] oracle below.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn attn_probs(
+    q: &[f32],
+    k: &[f32],
+    i: usize,
+    h: usize,
+    hk: usize,
+    s: usize,
+    dh: usize,
+    dq_cols: usize,
+    dkv_cols: usize,
+    scale: f32,
+    lo: usize,
+    hi: usize,
+    probs: &mut [f32],
+) {
+    let qi = &q[i * dq_cols + h * dh..][..dh];
+    let mut maxv = f32::NEG_INFINITY;
+    debug_assert!(hi <= s && lo < hi);
+    for j in lo..hi {
+        let kj = &k[j * dkv_cols + hk * dh..][..dh];
+        let mut acc = 0.0f32;
+        for (a, b) in qi.iter().zip(kj) {
+            acc += a * b;
+        }
+        let sc = acc * scale;
+        probs[j - lo] = sc;
+        maxv = maxv.max(sc);
+    }
+    let mut denom = 0.0f32;
+    for p in probs[..hi - lo].iter_mut() {
+        *p = (*p - maxv).exp();
+        denom += *p;
+    }
+    let inv = if denom > 0.0 { 1.0 / denom } else { 0.0 };
+    for p in probs[..hi - lo].iter_mut() {
+        *p *= inv;
+    }
+}
+
+/// The scalar attention backward — per-head, per-row loops with full
+/// softmax recomputation, no tiling, no GEMMs. This is the PR-1 training
+/// backward verbatim, kept (like `linalg::scalar` and the naive attention
+/// oracle) purely as the differential reference the streaming backward is
+/// pinned against; `Kernel::Naive` still selects it end-to-end.
+///
+/// Same slab layouts and accumulate-into semantics as
+/// [`backward_tiled_slabs`]; needs no `lse` (it recomputes each row's
+/// softmax from scratch, which is exactly the cost the tiled path
+/// eliminates).
+#[allow(clippy::too_many_arguments)]
+pub fn backward_naive_slabs(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    dout: &[f32],
+    dq: &mut [f32],
+    dk: &mut [f32],
+    dv: &mut [f32],
+    s: usize,
+    d: usize,
+    spec: Spec,
+    scale: f32,
+) {
+    let (hq, hkv) = (spec.hq, spec.hkv);
+    let group = hq / hkv;
+    let (dq_cols, dkv_cols) = (hq * d, hkv * d);
+    let mut probs = vec![0.0f32; s];
+    let mut dp = vec![0.0f32; s];
+    for h in 0..hq {
+        let hk = h / group;
+        for i in 0..s {
+            let (lo, hi) = visible_range(i, s, spec);
+            attn_probs(q, k, i, h, hk, s, d, dq_cols, dkv_cols, scale, lo, hi, &mut probs);
+            let doi = &dout[i * dq_cols + h * d..][..d];
+            let mut sum_pd = 0.0f32;
+            for j in lo..hi {
+                let vj = &v[j * dkv_cols + hk * d..][..d];
+                let mut acc = 0.0f32;
+                for (a, b) in doi.iter().zip(vj) {
+                    acc += a * b;
+                }
+                dp[j - lo] = acc;
+                sum_pd += probs[j - lo] * acc;
+            }
+            let qi_base = i * dq_cols + h * d;
+            for j in lo..hi {
+                let p = probs[j - lo];
+                let ds = p * (dp[j - lo] - sum_pd) * scale;
+                let kj = &k[j * dkv_cols + hk * d..][..d];
+                for (dqv, &kv) in dq[qi_base..qi_base + d].iter_mut().zip(kj) {
+                    *dqv += ds * kv;
+                }
+                let qi = &q[qi_base..qi_base + d];
+                let dkj = &mut dk[j * dkv_cols + hk * d..j * dkv_cols + hk * d + d];
+                for (dkv_, &qv) in dkj.iter_mut().zip(qi) {
+                    *dkv_ += ds * qv;
+                }
+                if p != 0.0 {
+                    let dvj = &mut dv[j * dkv_cols + hk * d..j * dkv_cols + hk * d + d];
+                    for (dvv, &dov) in dvj.iter_mut().zip(doi) {
+                        *dvv += p * dov;
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Impl;
+    use crate::util::rng::Pcg64;
+
+    fn randn(len: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg64::new(seed);
+        (0..len).map(|_| rng.normal_f32(0.0, 0.7)).collect()
+    }
+
+    type Slabs = (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>);
+
+    fn slabs(hq: usize, hkv: usize, s: usize, d: usize, seed: u64) -> Slabs {
+        (
+            randn(s * hq * d, seed),
+            randn(s * hkv * d, seed + 1),
+            randn(s * hkv * d, seed + 2),
+            randn(s * hq * d, seed + 3), // dout
+        )
+    }
+
+    /// lse matches a two-pass logsumexp of the masked, scaled scores.
+    #[test]
+    fn forward_lse_matches_two_pass_logsumexp() {
+        let (hq, hkv, s, d) = (2usize, 1usize, 13usize, 4usize);
+        let (q, k, v, _) = slabs(hq, hkv, s, d, 50);
+        let spec = Spec {
+            hq,
+            hkv,
+            causal: true,
+            window: Some(5),
+        };
+        let scale = 1.0 / (d as f32).sqrt();
+        let cfg = TileConfig::new(4, 4).unwrap();
+        let mut out = vec![0.0f32; s * hq * d];
+        let mut lse = vec![0.0f32; hq * s];
+        forward_slabs_lse(&q, &k, &v, &mut out, &mut lse, s, d, spec, cfg, scale, None);
+        for h in 0..hq {
+            for i in 0..s {
+                let (lo, hi) = visible_range(i, s, spec);
+                let qi = &q[i * hq * d + h * d..][..d];
+                let mut scores = Vec::new();
+                for j in lo..hi {
+                    let kj = &k[j * hkv * d..][..d];
+                    scores.push(qi.iter().zip(kj).map(|(a, b)| a * b).sum::<f32>() * scale);
+                }
+                let m = scores.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                let want = m + scores.iter().map(|x| (x - m).exp()).sum::<f32>().ln();
+                let got = lse[h * s + i];
+                assert!((want - got).abs() < 1e-4, "h={h} i={i}: {got} vs {want}");
+            }
+        }
+    }
+
+    /// Streaming backward agrees with the scalar oracle on a small slab
+    /// (the exhaustive grid lives in rust/tests/grad_differential.rs).
+    #[test]
+    fn tiled_backward_matches_naive_oracle_smoke() {
+        let (hq, hkv, s, d) = (4usize, 2usize, 21usize, 4usize);
+        let (q, k, v, dout) = slabs(hq, hkv, s, d, 60);
+        let spec = Spec::causal(hq, hkv);
+        let scale = 1.0 / (d as f32).sqrt();
+        for imp in [Impl::Scalar, Impl::Blocked] {
+            let cfg = TileConfig::new(8, 8).unwrap().with_linalg(imp);
+            let mut o = vec![0.0f32; s * hq * d];
+            let mut lse = vec![0.0f32; hq * s];
+            forward_slabs_lse(&q, &k, &v, &mut o, &mut lse, s, d, spec, cfg, scale, None);
+            let (mut dq_t, mut dk_t, mut dv_t) = (
+                vec![0.0f32; s * hq * d],
+                vec![0.0f32; s * hkv * d],
+                vec![0.0f32; s * hkv * d],
+            );
+            backward_tiled_slabs(
+                &q, &k, &v, &o, &lse, &dout, &mut dq_t, &mut dk_t, &mut dv_t, s, d, spec, cfg,
+                scale, None,
+            );
+            let (mut dq_n, mut dk_n, mut dv_n) = (
+                vec![0.0f32; s * hq * d],
+                vec![0.0f32; s * hkv * d],
+                vec![0.0f32; s * hkv * d],
+            );
+            backward_naive_slabs(
+                &q, &k, &v, &dout, &mut dq_n, &mut dk_n, &mut dv_n, s, d, spec, scale,
+            );
+            let diff = |a: &[f32], b: &[f32]| {
+                a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0f32, f32::max)
+            };
+            assert!(diff(&dq_t, &dq_n) < 1e-4, "{imp:?} dq {}", diff(&dq_t, &dq_n));
+            assert!(diff(&dk_t, &dk_n) < 1e-4, "{imp:?} dk {}", diff(&dk_t, &dk_n));
+            assert!(diff(&dv_t, &dv_n) < 1e-4, "{imp:?} dv {}", diff(&dv_t, &dv_n));
+        }
+    }
+
+    /// Parallel waves merge in job order: bitwise equal to serial.
+    #[test]
+    fn parallel_backward_is_bitwise_deterministic() {
+        let pool = ThreadPool::new(3, 64);
+        let (hq, hkv, s, d) = (4usize, 2usize, 37usize, 4usize);
+        let (q, k, v, dout) = slabs(hq, hkv, s, d, 70);
+        let spec = Spec::causal(hq, hkv);
+        let scale = 1.0 / (d as f32).sqrt();
+        let cfg = TileConfig::new(4, 4).unwrap();
+        let mut o = vec![0.0f32; s * hq * d];
+        let mut lse = vec![0.0f32; hq * s];
+        forward_slabs_lse(&q, &k, &v, &mut o, &mut lse, s, d, spec, cfg, scale, None);
+        let run = |pool: Option<&ThreadPool>| {
+            let mut dq = vec![0.0f32; s * hq * d];
+            let mut dk = vec![0.0f32; s * hkv * d];
+            let mut dv = vec![0.0f32; s * hkv * d];
+            backward_tiled_slabs(
+                &q, &k, &v, &o, &lse, &dout, &mut dq, &mut dk, &mut dv, s, d, spec, cfg, scale,
+                pool,
+            );
+            (dq, dk, dv)
+        };
+        assert_eq!(run(None), run(Some(&pool)));
+    }
+}

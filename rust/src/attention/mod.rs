@@ -21,6 +21,7 @@
 //! Hkv key/value heads, head `h` reads kv head `h / (Hq/Hkv)`, optional
 //! causal and sliding-window masks, f32 throughout.
 
+pub mod backward;
 pub mod decode;
 pub mod tensor;
 pub mod tiled;

@@ -195,6 +195,44 @@ pub(crate) fn stream_qtile_at(
     cfg: TileConfig,
     scale: f32,
 ) {
+    stream_qtile_at_lse(
+        q, q_stride, q_off, k, kv_stride, kv_off, v, out, out_stride, out_off, s, d, q_row0,
+        pos0, n_rows, spec, cfg, scale, None,
+    )
+}
+
+/// [`stream_qtile_at`] additionally exporting per-row softmax statistics:
+/// `lse[ti] = m + ln(l)` — the logsumexp of row `pos0 + ti`'s *scaled,
+/// masked* scores. This is the one extra number the streaming backward
+/// ([`super::backward`]) needs to recompute any probability block as
+/// `P = exp(scale·QKᵀ − lse)` without re-running the online max/normalizer
+/// search. Rows whose normalizer is 0 (fully masked / all `-inf`) and
+/// poisoned rows (a `+inf` score, which the forward degrades to zeros)
+/// export `-inf`, marking "every probability of this row is exactly 0" —
+/// the backward emits zero gradients for them, matching the forward's zero
+/// outputs.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn stream_qtile_at_lse(
+    q: &[f32],
+    q_stride: usize,
+    q_off: usize,
+    k: &[f32],
+    kv_stride: usize,
+    kv_off: usize,
+    v: &[f32],
+    out: &mut [f32],
+    out_stride: usize,
+    out_off: usize,
+    s: usize,
+    d: usize,
+    q_row0: usize,
+    pos0: usize,
+    n_rows: usize,
+    spec: Spec,
+    cfg: TileConfig,
+    scale: f32,
+    lse_out: Option<&mut [f32]>,
+) {
     let tq = n_rows;
     let k_tile = cfg.k_tile;
     for ti in 0..tq {
@@ -202,6 +240,9 @@ pub(crate) fn stream_qtile_at(
     }
     let (t_lo, t_hi) = tile_visible_range(pos0, pos0 + n_rows, s, spec);
     if t_hi <= t_lo {
+        if let Some(lse) = lse_out {
+            lse[..tq].fill(f32::NEG_INFINITY);
+        }
         return; // whole tile masked: zeros, by construction not NaN
     }
     // Running per-row state; `out` itself holds the unnormalized output.
@@ -300,6 +341,15 @@ pub(crate) fn stream_qtile_at(
             orow.fill(0.0);
         }
     }
+    if let Some(lse) = lse_out {
+        for ti in 0..tq {
+            lse[ti] = if l[ti] > 0.0 && !poisoned[ti] {
+                m[ti] + l[ti].ln()
+            } else {
+                f32::NEG_INFINITY
+            };
+        }
+    }
 }
 
 /// Drive every query tile of one head through [`stream_qtile`].
@@ -324,10 +374,39 @@ pub(crate) fn stream_head(
     cfg: TileConfig,
     scale: f32,
 ) {
+    stream_head_lse(
+        q, q_stride, q_off, k, kv_stride, kv_off, v, out, out_stride, out_off, s, d, spec,
+        cfg, scale, None,
+    )
+}
+
+/// [`stream_head`] optionally exporting this head's per-row logsumexp into
+/// `lse_out` (`[s]` — see [`stream_qtile_at_lse`] for the statistic's
+/// semantics). One driver serves both the plain forward and the
+/// backward-feeding forward, so the tile walk can never drift between them.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn stream_head_lse(
+    q: &[f32],
+    q_stride: usize,
+    q_off: usize,
+    k: &[f32],
+    kv_stride: usize,
+    kv_off: usize,
+    v: &[f32],
+    out: &mut [f32],
+    out_stride: usize,
+    out_off: usize,
+    s: usize,
+    d: usize,
+    spec: Spec,
+    cfg: TileConfig,
+    scale: f32,
+    mut lse_out: Option<&mut [f32]>,
+) {
     let mut i0 = 0;
     while i0 < s {
         let i1 = (i0 + cfg.q_tile).min(s);
-        stream_qtile(
+        stream_qtile_at_lse(
             q,
             q_stride,
             q_off,
@@ -341,10 +420,12 @@ pub(crate) fn stream_head(
             s,
             d,
             i0,
-            i1,
+            i0,
+            i1 - i0,
             spec,
             cfg,
             scale,
+            lse_out.as_mut().map(|l| &mut l[i0..i1]),
         );
         i0 = i1;
     }
@@ -371,11 +452,34 @@ pub(crate) fn stream_slabs_parallel(
     scale: f32,
     pool: &ThreadPool,
 ) {
+    stream_slabs_parallel_lse(q, k, v, out, None, s, d, spec, cfg, scale, pool)
+}
+
+/// [`stream_slabs_parallel`] optionally exporting the head-major `[Hq, s]`
+/// per-row logsumexp (`lse[h·s + i]`; see [`stream_qtile_at_lse`]). Jobs
+/// compute their tile's statistics only when requested; writes stay
+/// disjoint, so results are bitwise identical to the serial
+/// [`stream_head_lse`] walk for any pool size.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn stream_slabs_parallel_lse(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    out: &mut [f32],
+    mut lse_out: Option<&mut [f32]>,
+    s: usize,
+    d: usize,
+    spec: Spec,
+    cfg: TileConfig,
+    scale: f32,
+    pool: &ThreadPool,
+) {
     let (hq, hkv) = (spec.hq, spec.hkv);
     let group = hq / hkv;
     let (dq, dkv) = (hq * d, hkv * d);
     let n_tiles = s.div_ceil(cfg.q_tile);
-    let (tx, rx) = mpsc::channel::<(usize, usize, Vec<f32>)>();
+    let want_lse = lse_out.is_some();
+    let (tx, rx) = mpsc::channel::<(usize, usize, Vec<f32>, Option<Vec<f32>>)>();
     let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(hq * n_tiles);
     for h in 0..hq {
         let hk = h / group;
@@ -385,7 +489,12 @@ pub(crate) fn stream_slabs_parallel(
             let tx = tx.clone();
             jobs.push(Box::new(move || {
                 let mut buf = vec![0.0f32; (i1 - i0) * d];
-                stream_qtile(
+                let mut lbuf = if want_lse {
+                    Some(vec![0.0f32; i1 - i0])
+                } else {
+                    None
+                };
+                stream_qtile_at_lse(
                     q,
                     dq,
                     h * d,
@@ -399,20 +508,25 @@ pub(crate) fn stream_slabs_parallel(
                     s,
                     d,
                     i0,
-                    i1,
+                    i0,
+                    i1 - i0,
                     spec,
                     cfg,
                     scale,
+                    lbuf.as_deref_mut(),
                 );
-                let _ = tx.send((h, i0, buf));
+                let _ = tx.send((h, i0, buf, lbuf));
             }));
         }
     }
     drop(tx);
     pool.run_borrowed(jobs);
-    for (h, i0, buf) in rx.try_iter() {
+    for (h, i0, buf, lbuf) in rx.try_iter() {
         for (ti, row) in buf.chunks_exact(d).enumerate() {
             out[(i0 + ti) * dq + h * d..][..d].copy_from_slice(row);
+        }
+        if let (Some(lse), Some(lbuf)) = (lse_out.as_mut(), lbuf) {
+            lse[h * s + i0..][..lbuf.len()].copy_from_slice(&lbuf);
         }
     }
 }

@@ -103,6 +103,12 @@ pub struct TrainConfig {
     pub checkpoint_dir: Option<String>,
     pub checkpoint_every: usize,
     pub log_every: usize,
+    /// Lowering the train steps run: `kernel[+linalg]` — "tiled" | "naive"
+    /// | "tiled+scalar" | "naive+scalar" on native, selecting both the
+    /// forward kernel and the matching attention backward (streaming vs
+    /// scalar oracle). `None` = the backend's default (tiled attention on
+    /// blocked GEMMs). Mirrors [`ServeConfig::kernel`].
+    pub kernel: Option<String>,
 }
 
 impl Default for TrainConfig {
@@ -123,6 +129,7 @@ impl Default for TrainConfig {
             checkpoint_dir: None,
             checkpoint_every: 0,
             log_every: 10,
+            kernel: None,
         }
     }
 }
@@ -157,6 +164,9 @@ impl TrainConfig {
         }
         if let Some(n) = v.get("checkpoint_every").and_then(|x| x.as_usize()) {
             c.checkpoint_every = n;
+        }
+        if let Some(s) = v.get("kernel").and_then(|x| x.as_str()) {
+            c.kernel = Some(s.to_string());
         }
         Ok(c)
     }
@@ -308,6 +318,10 @@ mod tests {
         assert_eq!(c.steps, 50);
         assert_eq!(c.schedule.total_steps, 50);
         assert_eq!(c.seed, 7);
+        assert_eq!(c.kernel, None);
+        let j = Json::parse(r#"{"kernel":"tiled+scalar"}"#).unwrap();
+        let c = TrainConfig::from_json(&j).unwrap();
+        assert_eq!(c.kernel.as_deref(), Some("tiled+scalar"));
     }
 
     #[test]

@@ -94,6 +94,42 @@
 //! `"naive+scalar"` — and `rust/benches/native_attention.rs` records the
 //! blocked-vs-scalar end-to-end trajectory in `BENCH_attention.json`.
 //!
+//! ## Training backward ([`attention::backward`])
+//!
+//! The same kernel switch governs the *gradient* path of the fused train
+//! step. Under `Kernel::Tiled` the backward is a flash-style streaming
+//! replay: the forward tile streamer exports, per query row, the
+//! logsumexp `L = m + ln(l)` of its scaled masked scores, and the
+//! backward recomputes any probability block as `P = exp(scale·QKᵀ − L)`
+//! — no second online-softmax search, no `[S, S]` buffer — then runs the
+//! four per-tile products (`scale·QKᵀ`, `dP = dO Vᵀ`, `dQ += dS K`,
+//! `dK += dSᵀ Q` / `dV += Pᵀ dO`) as `linalg` micro-GEMMs with mask-aware
+//! key-tile skipping. Invariants the suites pin
+//! (`rust/tests/grad_differential.rs`, `rust/tests/properties.rs`):
+//!
+//! * agreement with the scalar row-loop oracle
+//!   ([`attention::backward::backward_naive_slabs`], the `Kernel::Naive`
+//!   path) to 1e-4 across the full variant × mask × length × linalg grid,
+//!   and with central-difference gradients of the actual loss on every
+//!   parameter block;
+//! * **LSE reuse**: the exported statistic equals the two-pass
+//!   logsumexp, so forward and backward see the same probabilities;
+//! * **poisoned-row semantics matching the forward**: rows the forward
+//!   zeroed (empty normalizer or a `+inf` score) export `lse = −inf` and
+//!   receive exactly zero attention gradients — zeros, never NaN;
+//! * masked keys get *exactly* zero dK/dV (skipped tiles are untouched);
+//! * **deterministic reduction**: `(head, query-tile)` jobs fan out in
+//!   fixed waves merged in job order, so gradients are bitwise identical
+//!   for any thread-pool size — training stays bit-reproducible.
+//!
+//! The train step checkpoints one contiguous activation slab per row
+//! (layer inputs, projection slabs, per-row LSE) instead of per-layer
+//! activation clones; `rust/benches/train_throughput.rs` records the
+//! fwd/bwd split step time across the variant zoo and both backward
+//! implementations (`BENCH_train.json`), with the `train-smoke` CI job
+//! failing if the streaming backward ever loses to the scalar oracle at
+//! S ≥ 4096 or if SQA's measured step stops beating MHA's.
+//!
 //! ## Modules
 //!
 //! * [`runtime`] — the [`runtime::Backend`] trait (stateless forward/train

@@ -285,6 +285,50 @@ pub fn pv_block(
     }
 }
 
+/// Transposed attention accumulation — the streaming backward's
+/// `dK_tile += dSᵀ @ Q_tile` and `dV_tile += Pᵀ @ dO_tile` shape:
+/// `out[j0 + jj] += Σ_ti probs[ti, jj] · x[row0 + ti]` over the same
+/// strided-slab convention as [`score_block`] / [`pv_block`] (input rows at
+/// `x[(row0+ti) * x_stride + x_off..][..d]`, output rows at
+/// `out[(j0+jj) * out_stride + out_off..][..d]`). Weights must be exactly 0
+/// for masked entries, mirroring [`pv_block`].
+#[allow(clippy::too_many_arguments)]
+pub fn ptx_block(
+    imp: Impl,
+    probs: &[f32],
+    probs_stride: usize,
+    tq: usize,
+    tk: usize,
+    x: &[f32],
+    x_stride: usize,
+    x_off: usize,
+    row0: usize,
+    d: usize,
+    out: &mut [f32],
+    out_stride: usize,
+    out_off: usize,
+    j0: usize,
+) {
+    match imp {
+        Impl::Scalar => scalar::ptx_block(
+            probs, probs_stride, tq, tk, x, x_stride, x_off, row0, d, out, out_stride, out_off,
+            j0,
+        ),
+        Impl::Blocked => blocked::gemm(
+            MatRef { data: probs, off: 0, rs: 1, cs: probs_stride },
+            MatRef { data: x, off: row0 * x_stride + x_off, rs: x_stride, cs: 1 },
+            out,
+            j0 * out_stride + out_off,
+            out_stride,
+            tk,
+            d,
+            tq,
+            1.0,
+            true,
+        ),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -339,6 +383,37 @@ mod tests {
             let par = matmul(imp, &x, &w, s, m, n, Some(&pool));
             // Identical per-row arithmetic, so bitwise equality is expected.
             assert_eq!(serial, par, "{imp:?}");
+        }
+    }
+
+    #[test]
+    fn ptx_block_matches_manual_transpose_product() {
+        // out[j0+jj] += Σ_ti probs[ti, jj] · x[row0+ti], strided rows with
+        // head offsets — both impls against a hand-rolled reference.
+        let (tq, tk, d, stride) = (5usize, 7usize, 4usize, 12usize);
+        let (row0, j0, x_off, out_off) = (2usize, 3usize, 4usize, 8usize);
+        let probs = randn(tq * tk, 30);
+        let x = randn((row0 + tq) * stride, 31);
+        let out0 = randn((j0 + tk) * stride, 32);
+        let mut want = out0.clone();
+        for ti in 0..tq {
+            for jj in 0..tk {
+                let p = probs[ti * tk + jj];
+                for dd in 0..d {
+                    want[(j0 + jj) * stride + out_off + dd] +=
+                        p * x[(row0 + ti) * stride + x_off + dd];
+                }
+            }
+        }
+        for imp in [Impl::Scalar, Impl::Blocked] {
+            let mut out = out0.clone();
+            ptx_block(
+                imp, &probs, tk, tq, tk, &x, stride, x_off, row0, d, &mut out, stride,
+                out_off, j0,
+            );
+            for (i, (a, b)) in out.iter().zip(&want).enumerate() {
+                assert!((a - b).abs() < 1e-5, "{imp:?} elem {i}: {a} vs {b}");
+            }
         }
     }
 

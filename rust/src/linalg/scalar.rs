@@ -89,6 +89,43 @@ pub fn score_block(
     }
 }
 
+/// Transposed attention accumulation over strided row slabs — the backward
+/// pass's `dK += dSᵀ·Q` / `dV += Pᵀ·dO` shape:
+/// `out_{j0+jj} += Σ_ti probs[ti * probs_stride + jj] · x_{row0+ti}` with
+/// output row `j0+jj` at `out[(j0+jj) * out_stride + out_off ..][..d]` and
+/// input row `row0+ti` at `x[(row0+ti) * x_stride + x_off ..][..d]`. Zero
+/// weights contribute nothing (skipped, like [`pv_block`]).
+#[allow(clippy::too_many_arguments)]
+pub fn ptx_block(
+    probs: &[f32],
+    probs_stride: usize,
+    tq: usize,
+    tk: usize,
+    x: &[f32],
+    x_stride: usize,
+    x_off: usize,
+    row0: usize,
+    d: usize,
+    out: &mut [f32],
+    out_stride: usize,
+    out_off: usize,
+    j0: usize,
+) {
+    for ti in 0..tq {
+        let prow = &probs[ti * probs_stride..][..tk];
+        let xr = &x[(row0 + ti) * x_stride + x_off..][..d];
+        for (jj, &p) in prow.iter().enumerate() {
+            if p == 0.0 {
+                continue;
+            }
+            let orow = &mut out[(j0 + jj) * out_stride + out_off..][..d];
+            for (o, &xv) in orow.iter_mut().zip(xr) {
+                *o += p * xv;
+            }
+        }
+    }
+}
+
 /// Attention output accumulation over strided row slabs:
 /// `out_{ti} += Σ_jj probs[ti * probs_stride + jj] · v_{j0+jj}` with output
 /// row `ti` at `out[ti * out_stride + out_off ..][..d]`. Zero probabilities

@@ -67,6 +67,7 @@ USAGE: sqa <command> [--flags]
 
 COMMANDS
   train     --family tiny --variant sqa --steps 200 --lr 1e-2 --seed 42
+            [--kernel tiled|naive|tiled+scalar|naive+scalar]
             [--checkpoint-dir DIR --checkpoint-every N --report OUT.json]
   serve     --family tiny --variant sqa --addr 127.0.0.1:7433
             [--max-batch 8 --max-wait-ms 5 --workers 2 --kernel tiled|naive]
@@ -85,9 +86,13 @@ Backend: native by default; SQA_BACKEND=pjrt (with --features pjrt builds
 and an artifacts/ dir from `make artifacts`) selects the XLA path.
 Kernel:  the native backend runs the tiled streaming attention kernel on
 blocked GEMMs by default; SQA_KERNEL=naive selects the S×S oracle and
-SQA_LINALG=scalar the element-at-a-time GEMM oracle. `serve --kernel`
-accepts the combined forms (tiled, naive, tiled+scalar, naive+scalar).
-`bench kernels` sweeps naive vs tiled.
+SQA_LINALG=scalar the element-at-a-time GEMM oracle. `serve --kernel` and
+`train --kernel` accept the combined forms (tiled, naive, tiled+scalar,
+naive+scalar); for training the switch selects the attention *backward*
+too — flash-style streaming (LSE reuse, blocked micro-GEMMs) for tiled,
+the scalar row-loop oracle for naive. `bench kernels` sweeps naive vs
+tiled; `cargo bench --bench train_throughput` records the fwd/bwd split
+step times (BENCH_train.json).
 Generate: prompts prefill once (compute-bound, where SQA wins) into a
 per-session KV cache sized by the variant's Hkv, then decode token-by-token
 (memory-bound, where the cache size rules); concurrent generations batch
@@ -106,6 +111,7 @@ fn cmd_train(mut args: Args) -> Result<()> {
         seed: args.usize("seed", 42)? as u64,
         checkpoint_every: args.usize("checkpoint-every", 0)?,
         log_every: args.usize("log-every", 10)?,
+        kernel: args.str_opt("kernel"),
         ..TrainConfig::default()
     };
     cfg.schedule.base_lr = args.f64("lr", 1e-2)?;

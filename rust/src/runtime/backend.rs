@@ -93,6 +93,30 @@ pub trait Backend: Send + Sync {
         seq: usize,
     ) -> Result<(f32, f32)>;
 
+    /// [`Backend::train_step`] through a specific attention lowering — the
+    /// same `kernel[+linalg]` strings as [`Backend::forward_impl`]. Both
+    /// halves of the fused step run on the selected pair: the forward
+    /// streams (or materializes) attention with that kernel, and the
+    /// backward runs the matching gradient path (flash-style streaming
+    /// backward for `tiled`, the scalar row-loop oracle for `naive`).
+    /// Backends without switchable training lowerings reject.
+    #[allow(clippy::too_many_arguments)]
+    fn train_step_impl(
+        &self,
+        impl_: &str,
+        _family: &str,
+        _variant: &str,
+        _state: &mut [f32],
+        _step: i32,
+        _lr: f32,
+        _tokens: &[i32],
+        _targets: &[i32],
+        _batch: usize,
+        _seq: usize,
+    ) -> Result<(f32, f32)> {
+        bail!("backend {:?} has no train impl {impl_:?}", self.name())
+    }
+
     /// Mean (loss, accuracy) of `params` on one batch.
     #[allow(clippy::too_many_arguments)]
     fn eval(

@@ -15,14 +15,18 @@
 //!   out across the pool instead.
 //! * **Training** is a fused forward+backward+AdamW step over the shared
 //!   state layout `[params | m | v | loss, acc]`. The forward half streams
-//!   through the tiled kernel; the backward pass recomputes attention
-//!   probabilities row-by-row (checkpointing) instead of storing the
-//!   `[s, s]` score matrices, and reduces its weight/input gradients
-//!   through the same `linalg` GEMMs (`xᵀ·dy`, `dy·wᵀ`); its math is
-//!   differentially tested against the forward path (train-step loss vs
-//!   `eval` on identical inputs), against the oracle in
-//!   `rust/tests/integration.rs`, and scalar-vs-blocked in
-//!   `rust/tests/linalg_differential.rs`.
+//!   through the tiled kernel, checkpointing one contiguous activation
+//!   slab plus each layer's projection slabs and per-row attention
+//!   logsumexp; the backward half replays attention through the
+//!   flash-style streaming backward ([`crate::attention::backward`]) —
+//!   tile-recomputed score blocks on the `linalg` micro-GEMMs, never an
+//!   `[s, s]` buffer and never a re-run of the online-softmax search —
+//!   and reduces its weight/input gradients through the same `linalg`
+//!   GEMMs (`xᵀ·dy`, `dy·wᵀ`). `Kernel::Naive` selects the scalar
+//!   row-loop backward oracle end-to-end; the two are differentially
+//!   tested in `rust/tests/grad_differential.rs` (plus train-step loss vs
+//!   `eval`, the oracle suite in `rust/tests/integration.rs`, and
+//!   scalar-vs-blocked in `rust/tests/linalg_differential.rs`).
 //! * **Eval** reuses the forward path and computes cross-entropy on host.
 //!
 //! The model is the catalog's reference architecture (embed + residual
@@ -31,6 +35,7 @@
 //! else). MoE families run the same dense blocks; `n_experts` only feeds
 //! the analytic FLOPs model.
 
+use crate::attention::backward::{self, attn_probs};
 use crate::attention::decode::decode_attend;
 use crate::attention::tensor::Tensor;
 use crate::attention::{sqa_layer_slices, tiled, visible_range, Kernel, Spec};
@@ -238,6 +243,153 @@ impl NativeBackend {
         ensure!(got == batch, "forward worker lost ({got}/{batch})");
         Ok(out)
     }
+
+    /// The fused train step with an explicit model (lets `train_step_impl`
+    /// override kernel + linalg). Multi-row batches fan one row per pool
+    /// job; a single row runs on the caller thread and fans its attention
+    /// tiles, backward waves and GEMM row blocks out across the pool
+    /// instead — in both shapes the gradient reduction order is fixed
+    /// (rows in order, backward waves in job order), so training stays
+    /// bit-deterministic for any worker count.
+    #[allow(clippy::too_many_arguments)]
+    fn train_step_model(
+        &self,
+        model: Model,
+        state: &mut [f32],
+        step: i32,
+        lr: f32,
+        tokens: &[i32],
+        targets: &[i32],
+        batch: usize,
+        seq: usize,
+    ) -> Result<(f32, f32)> {
+        let p = model.lay.n_params();
+        ensure!(
+            state.len() == 3 * p + 2,
+            "train state has {} floats, want 3x{p}+2",
+            state.len()
+        );
+        ensure!(step >= 1, "step must be >= 1 (got {step})");
+        self.check_batch(&model, &state[..p], tokens, batch, seq)?;
+        ensure!(targets.len() == batch * seq, "targets/tokens length mismatch");
+        let vocab = model.lay.vocab as i32;
+        ensure!(
+            targets.iter().all(|&t| t >= 0 && t < vocab),
+            "target id out of vocab range"
+        );
+
+        // Per-row forward+backward in parallel; grads reduced in row order
+        // so training stays bit-deterministic. Jobs borrow the params half
+        // of the state directly (no per-step copies).
+        let n_pos = batch * seq;
+        let inv_n = 1.0 / n_pos as f32;
+        let mut rows: Vec<Option<RowGrad>> = (0..batch).map(|_| None).collect();
+        {
+            let params = &state[..p];
+            if batch == 1 {
+                rows[0] =
+                    Some(train_row(&model, params, tokens, targets, inv_n, Some(&self.pool))?);
+            } else {
+                let (tx, rx) = mpsc::channel();
+                let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(batch);
+                for ib in 0..batch {
+                    let tx = tx.clone();
+                    jobs.push(Box::new(move || {
+                        let t = &tokens[ib * seq..(ib + 1) * seq];
+                        let g = &targets[ib * seq..(ib + 1) * seq];
+                        let _ = tx.send((ib, train_row(&model, params, t, g, inv_n, None)));
+                    }));
+                }
+                drop(tx);
+                self.pool.run_borrowed(jobs);
+                let mut got = 0usize;
+                for (ib, rg) in rx.try_iter() {
+                    rows[ib] = Some(rg?);
+                    got += 1;
+                }
+                ensure!(got == batch, "train worker lost ({got}/{batch})");
+            }
+        }
+        let mut grad = vec![0.0f32; p];
+        let mut loss_sum = 0.0f64;
+        let mut acc_sum = 0.0f64;
+        for rg in rows.into_iter().flatten() {
+            loss_sum += rg.loss_sum as f64;
+            acc_sum += rg.acc_count as f64;
+            for (gt, gr) in grad.iter_mut().zip(&rg.grad) {
+                *gt += gr;
+            }
+        }
+        let loss = (loss_sum / n_pos as f64) as f32;
+        let acc = (acc_sum / n_pos as f64) as f32;
+
+        // Fused AdamW (decoupled decay 0 — these reference models are tiny).
+        let (ps, rest) = state.split_at_mut(p);
+        let (ms, rest) = rest.split_at_mut(p);
+        let (vs, tail) = rest.split_at_mut(p);
+        let c1 = 1.0 - ADAM_B1.powi(step);
+        let c2 = 1.0 - ADAM_B2.powi(step);
+        for i in 0..p {
+            let g = grad[i];
+            ms[i] = ADAM_B1 * ms[i] + (1.0 - ADAM_B1) * g;
+            vs[i] = ADAM_B2 * vs[i] + (1.0 - ADAM_B2) * g * g;
+            let mhat = ms[i] / c1;
+            let vhat = vs[i] / c2;
+            ps[i] -= lr * mhat / (vhat.sqrt() + ADAM_EPS);
+        }
+        tail[0] = loss;
+        tail[1] = acc;
+        Ok((loss, acc))
+    }
+
+    /// Mean loss and the full parameter gradient of one batch at `params`,
+    /// through an explicit `kernel[+linalg]` lowering — no optimizer step.
+    /// Test/diagnostic entry point: the finite-difference suite in
+    /// `rust/tests/grad_differential.rs` pins both analytic backwards
+    /// (streaming and scalar oracle) against central differences of this
+    /// loss, parameter block by parameter block.
+    #[allow(clippy::too_many_arguments)]
+    pub fn loss_and_grad(
+        &self,
+        impl_: &str,
+        family: &str,
+        variant: &str,
+        params: &[f32],
+        tokens: &[i32],
+        targets: &[i32],
+        batch: usize,
+        seq: usize,
+    ) -> Result<(f32, Vec<f32>)> {
+        let (kernel, imp) = parse_impl(impl_)
+            .with_context(|| format!("native backend has no train impl {impl_:?}"))?;
+        let model =
+            self.model_with_impls(family, variant, kernel, imp.unwrap_or(self.linalg))?;
+        self.check_batch(&model, params, tokens, batch, seq)?;
+        ensure!(targets.len() == batch * seq, "targets/tokens length mismatch");
+        let vocab = model.lay.vocab as i32;
+        ensure!(
+            targets.iter().all(|&t| t >= 0 && t < vocab),
+            "target id out of vocab range"
+        );
+        let inv_n = 1.0 / (batch * seq) as f32;
+        let mut grad = vec![0.0f32; model.lay.n_params()];
+        let mut loss_sum = 0.0f64;
+        for ib in 0..batch {
+            let rg = train_row(
+                &model,
+                params,
+                &tokens[ib * seq..(ib + 1) * seq],
+                &targets[ib * seq..(ib + 1) * seq],
+                inv_n,
+                Some(&self.pool),
+            )?;
+            loss_sum += rg.loss_sum as f64;
+            for (gt, gr) in grad.iter_mut().zip(&rg.grad) {
+                *gt += gr;
+            }
+        }
+        Ok(((loss_sum / (batch * seq) as f64) as f32, grad))
+    }
 }
 
 impl Backend for NativeBackend {
@@ -317,78 +469,26 @@ impl Backend for NativeBackend {
         seq: usize,
     ) -> Result<(f32, f32)> {
         let model = self.model(family, variant)?;
-        let p = model.lay.n_params();
-        ensure!(
-            state.len() == 3 * p + 2,
-            "train state has {} floats, want 3x{p}+2",
-            state.len()
-        );
-        ensure!(step >= 1, "step must be >= 1 (got {step})");
-        self.check_batch(&model, &state[..p], tokens, batch, seq)?;
-        ensure!(targets.len() == batch * seq, "targets/tokens length mismatch");
-        let vocab = model.lay.vocab as i32;
-        ensure!(
-            targets.iter().all(|&t| t >= 0 && t < vocab),
-            "target id out of vocab range"
-        );
-
-        // Per-row forward+backward in parallel; grads reduced in row order
-        // so training stays bit-deterministic. Jobs borrow the params half
-        // of the state directly (no per-step copies).
-        let n_pos = batch * seq;
-        let inv_n = 1.0 / n_pos as f32;
-        let mut rows: Vec<Option<RowGrad>> = (0..batch).map(|_| None).collect();
-        {
-            let params = &state[..p];
-            let (tx, rx) = mpsc::channel();
-            let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(batch);
-            for ib in 0..batch {
-                let tx = tx.clone();
-                jobs.push(Box::new(move || {
-                    let t = &tokens[ib * seq..(ib + 1) * seq];
-                    let g = &targets[ib * seq..(ib + 1) * seq];
-                    let _ = tx.send((ib, train_row(&model, params, t, g, inv_n)));
-                }));
-            }
-            drop(tx);
-            self.pool.run_borrowed(jobs);
-            let mut got = 0usize;
-            for (ib, rg) in rx.try_iter() {
-                rows[ib] = Some(rg?);
-                got += 1;
-            }
-            ensure!(got == batch, "train worker lost ({got}/{batch})");
-        }
-        let mut grad = vec![0.0f32; p];
-        let mut loss_sum = 0.0f64;
-        let mut acc_sum = 0.0f64;
-        for rg in rows.into_iter().flatten() {
-            loss_sum += rg.loss_sum as f64;
-            acc_sum += rg.acc_count as f64;
-            for (gt, gr) in grad.iter_mut().zip(&rg.grad) {
-                *gt += gr;
-            }
-        }
-        let loss = (loss_sum / n_pos as f64) as f32;
-        let acc = (acc_sum / n_pos as f64) as f32;
-
-        // Fused AdamW (decoupled decay 0 — these reference models are tiny).
-        let (ps, rest) = state.split_at_mut(p);
-        let (ms, rest) = rest.split_at_mut(p);
-        let (vs, tail) = rest.split_at_mut(p);
-        let c1 = 1.0 - ADAM_B1.powi(step);
-        let c2 = 1.0 - ADAM_B2.powi(step);
-        for i in 0..p {
-            let g = grad[i];
-            ms[i] = ADAM_B1 * ms[i] + (1.0 - ADAM_B1) * g;
-            vs[i] = ADAM_B2 * vs[i] + (1.0 - ADAM_B2) * g * g;
-            let mhat = ms[i] / c1;
-            let vhat = vs[i] / c2;
-            ps[i] -= lr * mhat / (vhat.sqrt() + ADAM_EPS);
-        }
-        tail[0] = loss;
-        tail[1] = acc;
-        Ok((loss, acc))
+        self.train_step_model(model, state, step, lr, tokens, targets, batch, seq)
+    }
+    fn train_step_impl(
+        &self,
+        impl_: &str,
+        family: &str,
+        variant: &str,
+        state: &mut [f32],
+        step: i32,
+        lr: f32,
+        tokens: &[i32],
+        targets: &[i32],
+        batch: usize,
+        seq: usize,
+    ) -> Result<(f32, f32)> {
+        let (kernel, imp) = parse_impl(impl_)
+            .with_context(|| format!("native backend has no train impl {impl_:?}"))?;
+        let model =
+            self.model_with_impls(family, variant, kernel, imp.unwrap_or(self.linalg))?;
+        self.train_step_model(model, state, step, lr, tokens, targets, batch, seq)
     }
 
     fn eval(
@@ -783,100 +883,81 @@ struct RowGrad {
     grad: Vec<f32>,
 }
 
-/// Softmax of one attention row over its visible range (max-subtracted,
-/// identical ordering to the oracle's) — shared by fwd and bwd recompute.
-fn attn_probs(
-    q: &[f32],
-    k: &[f32],
-    i: usize,
-    h: usize,
-    hk: usize,
-    s: usize,
-    dh: usize,
-    dq_cols: usize,
-    dkv_cols: usize,
-    scale: f32,
-    lo: usize,
-    hi: usize,
-    probs: &mut [f32],
-) {
-    let qi = &q[i * dq_cols + h * dh..][..dh];
-    let mut maxv = f32::NEG_INFINITY;
-    debug_assert!(hi <= s && lo < hi);
-    for j in lo..hi {
-        let kj = &k[j * dkv_cols + hk * dh..][..dh];
-        let mut acc = 0.0f32;
-        for (a, b) in qi.iter().zip(kj) {
-            acc += a * b;
-        }
-        let sc = acc * scale;
-        probs[j - lo] = sc;
-        maxv = maxv.max(sc);
-    }
-    let mut denom = 0.0f32;
-    for p in probs[..hi - lo].iter_mut() {
-        *p = (*p - maxv).exp();
-        denom += *p;
-    }
-    let inv = if denom > 0.0 { 1.0 / denom } else { 0.0 };
-    for p in probs[..hi - lo].iter_mut() {
-        *p *= inv;
-    }
-}
-
 /// Fused forward + backward for one sequence; returns loss/acc sums and the
 /// parameter gradient (already scaled by `inv_n = 1 / (batch * seq)`).
+///
+/// The forward checkpoints one contiguous activation slab
+/// `[n_layers + 1, s, d_model]` (every layer's input plus the final hidden
+/// states — a single allocation, no per-layer clones) together with each
+/// layer's Q/K/V/O projection slabs and, on the tiled kernel, the per-row
+/// attention logsumexp. The backward replays attention through the
+/// flash-style streaming kernel ([`backward::backward_tiled_slabs`],
+/// driven by those statistics) or the scalar row-loop oracle
+/// ([`backward::backward_naive_slabs`]) under `Kernel::Naive`. `pool` fans
+/// the attention tiles, backward waves and GEMM row blocks out
+/// (single-row steps); pass `None` when already on a pool worker.
 fn train_row(
     model: &Model,
     params: &[f32],
     tokens: &[i32],
     targets: &[i32],
     inv_n: f32,
+    pool: Option<&ThreadPool>,
 ) -> Result<RowGrad> {
     let lay = &model.lay;
     let spec = model.spec;
     let (s, d, dh, vocab) = (tokens.len(), lay.d_model, lay.d_head, lay.vocab);
     let (hq, hkv) = (lay.hq, lay.hkv);
     let (dq_cols, dkv_cols) = (hq * dh, hkv * dh);
-    let group = hq / hkv;
     let scale = 1.0 / (dh as f32).sqrt();
     let n_layers = lay.n_layers;
+    let imp = model.linalg;
+    let cfg = tiled::TileConfig::default().with_linalg(imp);
 
-    // ---- forward, caching per-layer activations -------------------------
+    // ---- forward: one checkpointed activation slab ----------------------
+    // acts[l*s*d..] is layer l's input; acts[n_layers*s*d..] the final
+    // hidden states the LM head reads.
     let (e_off, _) = lay.embed();
-    let mut x = vec![0.0f32; s * d];
+    let mut acts = vec![0.0f32; (n_layers + 1) * s * d];
     for (i, &t) in tokens.iter().enumerate() {
-        x[i * d..(i + 1) * d]
+        acts[i * d..(i + 1) * d]
             .copy_from_slice(&params[e_off + token_index(t, vocab) * d..][..d]);
     }
-    let mut xs: Vec<Vec<f32>> = Vec::with_capacity(n_layers + 1);
     let mut caches: Vec<(Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>)> =
         Vec::with_capacity(n_layers);
-    let mut probs = vec![0.0f32; s];
-    let imp = model.linalg;
+    // Per-(head, row) logsumexp from the tiled forward — the statistic that
+    // lets the streaming backward recompute any probability block without
+    // re-running the online-softmax max/normalizer search.
+    let mut lses: Vec<Vec<f32>> = Vec::with_capacity(n_layers);
     for l in 0..n_layers {
-        xs.push(x.clone());
-        let (wq_o, wq_n) = lay.wq(l);
-        let (wk_o, wk_n) = lay.wk(l);
-        let (wv_o, wv_n) = lay.wv(l);
-        let (wo_o, wo_n) = lay.wo(l);
-        let q = linalg::matmul(imp, &x, &params[wq_o..wq_o + wq_n], s, d, dq_cols, None);
-        let k = linalg::matmul(imp, &x, &params[wk_o..wk_o + wk_n], s, d, dkv_cols, None);
-        let v = linalg::matmul(imp, &x, &params[wv_o..wv_o + wv_n], s, d, dkv_cols, None);
+        let (done, rest) = acts.split_at_mut((l + 1) * s * d);
+        let x = &done[l * s * d..];
+        let x_out = &mut rest[..s * d];
+        let q = linalg::matmul(imp, x, weight_slice(params, lay.wq(l)), s, d, dq_cols, pool);
+        let k = linalg::matmul(imp, x, weight_slice(params, lay.wk(l)), s, d, dkv_cols, pool);
+        let v = linalg::matmul(imp, x, weight_slice(params, lay.wv(l)), s, d, dkv_cols, pool);
         let mut o = vec![0.0f32; s * dq_cols];
-        // Forward attention through the shared kernel dispatch (tiled
-        // streaming by default, naive oracle on request; the backward below
-        // still recomputes row softmaxes — checkpointing keeps it
-        // streaming). No pool: train rows already run on pool workers.
-        attend_slabs(model, &q, &k, &v, &mut o, s, None);
-        let a = linalg::matmul(imp, &o, &params[wo_o..wo_o + wo_n], s, dq_cols, d, None);
-        for (xv, av) in x.iter_mut().zip(&a) {
-            *xv += av;
+        let lse = match model.kernel {
+            Kernel::Tiled => {
+                let mut lse = vec![0.0f32; hq * s];
+                backward::forward_slabs_lse(
+                    &q, &k, &v, &mut o, &mut lse, s, dh, spec, cfg, scale, pool,
+                );
+                lse
+            }
+            Kernel::Naive => {
+                attend_slabs(model, &q, &k, &v, &mut o, s, pool);
+                Vec::new() // the scalar backward recomputes its softmaxes
+            }
+        };
+        let a = linalg::matmul(imp, &o, weight_slice(params, lay.wo(l)), s, dq_cols, d, pool);
+        for ((xo, &xv), &av) in x_out.iter_mut().zip(x.iter()).zip(&a) {
+            *xo = xv + av;
         }
         caches.push((q, k, v, o));
+        lses.push(lse);
     }
-    xs.push(x);
-    let x_top = &xs[n_layers];
+    let x_top = &acts[n_layers * s * d..];
 
     // ---- LM head: loss, accuracy, dlogits -> dx and head grads ----------
     // Forward as one GEMM over the whole sequence, backward as two GEMM
@@ -891,7 +972,7 @@ fn train_row(
     let mut loss_sum = 0.0f32;
     let mut acc_count = 0.0f32;
     let mut logits = vec![0.0f32; s * vocab];
-    linalg::matmul_bias_into(imp, x_top, head, bias, &mut logits, s, d, vocab, None);
+    linalg::matmul_bias_into(imp, x_top, head, bias, &mut logits, s, d, vocab, pool);
     let mut dlogits = vec![0.0f32; s * vocab];
     for i in 0..s {
         let row = &logits[i * vocab..(i + 1) * vocab];
@@ -914,7 +995,7 @@ fn train_row(
     // ---- layers, in reverse ---------------------------------------------
     for l in (0..n_layers).rev() {
         let (q, k, v, o) = &caches[l];
-        let x_in = &xs[l];
+        let x_in = &acts[l * s * d..][..s * d];
         let (wq_o, wq_n) = lay.wq(l);
         let (wk_o, wk_n) = lay.wk(l);
         let (wv_o, wv_n) = lay.wv(l);
@@ -924,48 +1005,20 @@ fn train_row(
         let mut dout = vec![0.0f32; s * dq_cols];
         linalg::accum_dy_wt(imp, &mut dout, &dx, &params[wo_o..wo_o + wo_n], s, dq_cols, d);
 
+        // Attention backward through the kernel the forward ran on: the
+        // flash-style tile streamer (LSE reuse, blocked micro-GEMMs) or
+        // the scalar row-loop oracle.
         let mut dq = vec![0.0f32; s * dq_cols];
         let mut dk = vec![0.0f32; s * dkv_cols];
         let mut dv = vec![0.0f32; s * dkv_cols];
-        let mut dp = vec![0.0f32; s];
-        for h in 0..hq {
-            let hk = h / group;
-            for i in 0..s {
-                let (lo, hi) = visible_range(i, s, spec);
-                attn_probs(q, k, i, h, hk, s, dh, dq_cols, dkv_cols, scale, lo, hi, &mut probs);
-                let doi = &dout[i * dq_cols + h * dh..][..dh];
-                let mut sum_pd = 0.0f32;
-                for j in lo..hi {
-                    let vj = &v[j * dkv_cols + hk * dh..][..dh];
-                    let mut acc = 0.0f32;
-                    for (a, b) in doi.iter().zip(vj) {
-                        acc += a * b;
-                    }
-                    dp[j - lo] = acc;
-                    sum_pd += probs[j - lo] * acc;
-                }
-                let qi_base = i * dq_cols + h * dh;
-                for j in lo..hi {
-                    let p = probs[j - lo];
-                    let ds = p * (dp[j - lo] - sum_pd) * scale;
-                    let kj = &k[j * dkv_cols + hk * dh..][..dh];
-                    for (dqv, &kv) in dq[qi_base..qi_base + dh].iter_mut().zip(kj) {
-                        *dqv += ds * kv;
-                    }
-                    let qi = &q[qi_base..qi_base + dh];
-                    let dkj = &mut dk[j * dkv_cols + hk * dh..j * dkv_cols + hk * dh + dh];
-                    for (dkv_, &qv) in dkj.iter_mut().zip(qi) {
-                        *dkv_ += ds * qv;
-                    }
-                    if p != 0.0 {
-                        let dvj =
-                            &mut dv[j * dkv_cols + hk * dh..j * dkv_cols + hk * dh + dh];
-                        for (dvv, &dov) in dvj.iter_mut().zip(doi) {
-                            *dvv += p * dov;
-                        }
-                    }
-                }
-            }
+        match model.kernel {
+            Kernel::Tiled => backward::backward_tiled_slabs(
+                q, k, v, o, &lses[l], &dout, &mut dq, &mut dk, &mut dv, s, dh, spec, cfg,
+                scale, pool,
+            ),
+            Kernel::Naive => backward::backward_naive_slabs(
+                q, k, v, &dout, &mut dq, &mut dk, &mut dv, s, dh, spec, scale,
+            ),
         }
         linalg::accum_xt_dy(imp, &mut grad[wq_o..wq_o + wq_n], x_in, &dq, s, d, dq_cols);
         linalg::accum_xt_dy(imp, &mut grad[wk_o..wk_o + wk_n], x_in, &dk, s, d, dkv_cols);

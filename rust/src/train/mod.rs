@@ -116,22 +116,38 @@ impl Trainer {
         &self.state[..self.n_params]
     }
 
-    /// Execute one fused AdamW step.
+    /// Execute one fused AdamW step — on the backend's default lowering,
+    /// or through [`TrainConfig::kernel`]'s explicit `kernel[+linalg]`
+    /// choice (both the forward and the attention backward switch).
     pub fn step_once(&mut self) -> Result<StepLog> {
         let t0 = Instant::now();
         let batch = self.train_data.next_batch();
         let lr = self.cfg.schedule.lr_at(self.step);
-        let (loss, acc) = self.backend.train_step(
-            &self.cfg.family,
-            &self.cfg.variant,
-            &mut self.state,
-            self.step as i32 + 1,
-            lr as f32,
-            &batch.tokens,
-            &batch.targets,
-            self.batch,
-            self.seq,
-        )?;
+        let (loss, acc) = match self.cfg.kernel.clone() {
+            Some(impl_) => self.backend.train_step_impl(
+                &impl_,
+                &self.cfg.family,
+                &self.cfg.variant,
+                &mut self.state,
+                self.step as i32 + 1,
+                lr as f32,
+                &batch.tokens,
+                &batch.targets,
+                self.batch,
+                self.seq,
+            )?,
+            None => self.backend.train_step(
+                &self.cfg.family,
+                &self.cfg.variant,
+                &mut self.state,
+                self.step as i32 + 1,
+                lr as f32,
+                &batch.tokens,
+                &batch.targets,
+                self.batch,
+                self.seq,
+            )?,
+        };
         self.step += 1;
         let rec = StepLog {
             step: self.step,

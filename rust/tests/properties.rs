@@ -1,10 +1,13 @@
 //! Property-based tests (custom harness, `sqa::util::prop`) over the
 //! coordinator invariants, the native attention oracle, the tiled
-//! streaming kernel's online-softmax invariants, and the blocked-vs-scalar
+//! streaming kernel's online-softmax invariants, the streaming attention
+//! backward's masking/determinism guarantees, and the blocked-vs-scalar
 //! GEMM equivalence of `sqa::linalg`.
 
+use sqa::attention::backward::{backward_tiled_slabs, forward_slabs_lse};
 use sqa::attention::tiled::{attention_tiled_cfg, visited_key_tiles, TileConfig};
 use sqa::attention::{attention, tensor::Tensor, Spec};
+use sqa::util::threadpool::ThreadPool;
 use sqa::linalg::{self, Impl};
 use sqa::coordinator::batcher::DynamicBatcher;
 use sqa::coordinator::request::EncodeRequest;
@@ -222,6 +225,137 @@ fn prop_visited_key_tiles_agree_with_visible_range() {
                 ));
             }
             i0 = i1;
+        }
+        Ok(())
+    });
+}
+
+/// Mask-aware backward: a gradient injected at one query row produces
+/// exactly zero dK/dV outside that row's visible window (the mask-skipped
+/// key tiles are provably untouched, not just approximately zero) and
+/// exactly zero dQ at every other row.
+#[test]
+fn prop_backward_grads_outside_visible_window_are_exactly_zero() {
+    let gen = Pair(
+        Pair(UsizeRange { lo: 2, hi: 24 }, UsizeRange { lo: 1, hi: 4 }), // (s, window)
+        Pair(UsizeRange { lo: 1, hi: 6 }, Choice(vec![false, true])),    // (tile, causal)
+    );
+    let mut rng_seed = 4000u64;
+    check(31, 40, &gen, |((s, window), (tile, causal))| {
+        rng_seed += 1;
+        let (hq, hkv, d) = (2usize, 1usize, 4usize);
+        let (dq_cols, dkv_cols) = (hq * d, hkv * d);
+        let mut rng = Pcg64::new(rng_seed);
+        let mut fill = |n: usize| -> Vec<f32> {
+            (0..n).map(|_| rng.normal_f32(0.0, 0.7)).collect()
+        };
+        let q = fill(*s * dq_cols);
+        let k = fill(*s * dkv_cols);
+        let v = fill(*s * dkv_cols);
+        let spec = Spec {
+            hq,
+            hkv,
+            causal: *causal,
+            window: Some(*window),
+        };
+        let scale = 1.0 / (d as f32).sqrt();
+        let cfg = TileConfig::new(*tile, *tile).map_err(|e| e.to_string())?;
+        let mut o = vec![0.0f32; *s * dq_cols];
+        let mut lse = vec![0.0f32; hq * *s];
+        forward_slabs_lse(&q, &k, &v, &mut o, &mut lse, *s, d, spec, cfg, scale, None);
+        // dout nonzero only at one (row, head).
+        let i = rng.range_usize(0, *s);
+        let h = rng.range_usize(0, hq);
+        let mut dout = vec![0.0f32; *s * dq_cols];
+        for dd in 0..d {
+            dout[i * dq_cols + h * d + dd] = rng.normal_f32(0.0, 1.0);
+        }
+        let mut dq = vec![0.0f32; *s * dq_cols];
+        let mut dk = vec![0.0f32; *s * dkv_cols];
+        let mut dv = vec![0.0f32; *s * dkv_cols];
+        backward_tiled_slabs(
+            &q, &k, &v, &o, &lse, &dout, &mut dq, &mut dk, &mut dv, *s, d, spec, cfg, scale,
+            None,
+        );
+        let (lo, hi) = sqa::attention::visible_range(i, *s, spec);
+        for j in 0..*s {
+            if (lo..hi).contains(&j) {
+                continue;
+            }
+            for dd in 0..d {
+                let (gk, gv) = (dk[j * dkv_cols + dd], dv[j * dkv_cols + dd]);
+                if gk != 0.0 || gv != 0.0 {
+                    return Err(format!(
+                        "key {j} outside visible [{lo},{hi}) of row {i}: dk {gk} dv {gv}"
+                    ));
+                }
+            }
+        }
+        for r in 0..*s {
+            if r == i {
+                continue;
+            }
+            for c in 0..dq_cols {
+                if dq[r * dq_cols + c] != 0.0 {
+                    return Err(format!("dq row {r} nonzero with dout only at row {i}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Gradient reduction order is deterministic: the wave-merged backward is
+/// bitwise identical across thread-pool sizes (and to the serial path).
+#[test]
+fn prop_backward_bitwise_deterministic_across_pool_sizes() {
+    let pool2 = ThreadPool::new(2, 128);
+    let pool5 = ThreadPool::new(5, 128);
+    let gen = Pair(
+        Pair(UsizeRange { lo: 1, hi: 40 }, UsizeRange { lo: 1, hi: 5 }), // (s, tile)
+        Pair(UsizeRange { lo: 1, hi: 2 }, Choice(vec![None, Some(2usize), Some(7)])),
+    );
+    let mut rng_seed = 5000u64;
+    check(33, 25, &gen, |((s, tile), (group, window))| {
+        rng_seed += 1;
+        let (hkv, d) = (2usize, 4usize);
+        let hq = group * hkv;
+        let (dq_cols, dkv_cols) = (hq * d, hkv * d);
+        let mut rng = Pcg64::new(rng_seed);
+        let mut fill = |n: usize| -> Vec<f32> {
+            (0..n).map(|_| rng.normal_f32(0.0, 0.7)).collect()
+        };
+        let q = fill(*s * dq_cols);
+        let k = fill(*s * dkv_cols);
+        let v = fill(*s * dkv_cols);
+        let dout = fill(*s * dq_cols);
+        let spec = Spec {
+            hq,
+            hkv,
+            causal: window.is_none(),
+            window: *window,
+        };
+        let scale = 1.0 / (d as f32).sqrt();
+        let cfg = TileConfig::new(*tile, *tile).map_err(|e| e.to_string())?;
+        let mut o = vec![0.0f32; *s * dq_cols];
+        let mut lse = vec![0.0f32; hq * *s];
+        forward_slabs_lse(&q, &k, &v, &mut o, &mut lse, *s, d, spec, cfg, scale, None);
+        let run = |pool: Option<&ThreadPool>| {
+            let mut dq = vec![0.0f32; *s * dq_cols];
+            let mut dk = vec![0.0f32; *s * dkv_cols];
+            let mut dv = vec![0.0f32; *s * dkv_cols];
+            backward_tiled_slabs(
+                &q, &k, &v, &o, &lse, &dout, &mut dq, &mut dk, &mut dv, *s, d, spec, cfg,
+                scale, pool,
+            );
+            (dq, dk, dv)
+        };
+        let serial = run(None);
+        if serial != run(Some(&pool2)) {
+            return Err("2-worker pool diverged from serial".into());
+        }
+        if serial != run(Some(&pool5)) {
+            return Err("5-worker pool diverged from serial".into());
         }
         Ok(())
     });
