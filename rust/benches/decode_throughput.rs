@@ -216,7 +216,7 @@ fn main() {
                 })),
             ),
         ]);
-        std::fs::write(path, doc.to_string()).expect("writing bench JSON");
+        sqa::util::bench::write_bench_json(path, &doc).expect("writing bench JSON");
         println!("decode JSON -> {path}");
     }
 

@@ -262,6 +262,7 @@ fn main() {
     // ---- JSON + regression guards ---------------------------------------
     if let Some(path) = &flags.json {
         let doc = Json::obj(vec![
+            ("bench", Json::str("native_attention")),
             ("kernel_sweep", kernel_cells_to_json(&cells)),
             ("variant_zoo", Json::arr(zoo_json)),
             ("e2e_forward", impl_cells_to_json(&e2e_cells)),
@@ -275,7 +276,7 @@ fn main() {
                 ]),
             ),
         ]);
-        std::fs::write(path, doc.to_string()).expect("writing bench JSON");
+        sqa::util::bench::write_bench_json(path, &doc).expect("writing bench JSON");
         println!("comparison JSON -> {path}");
     }
     if flags.enforce_linalg && gemm_secs[0] > gemm_secs[1] * 1.05 {

@@ -20,8 +20,13 @@ fn main() {
     let (table, reports) = bench_harness::table2(&backend, steps, 42).expect("table2");
     println!("\n## Table 2 — MoE model quality ({steps} steps, CPU-scaled)\n");
     println!("{table}");
-    std::fs::create_dir_all("bench_out").ok();
-    let json = sqa::util::json::Json::arr(reports.iter().map(|r| r.to_json()));
-    std::fs::write("bench_out/table2.json", json.to_string()).unwrap();
+    use sqa::util::json::Json;
+    let json = Json::obj(vec![
+        ("bench", Json::str("table2")),
+        ("steps", Json::num(steps as f64)),
+        ("reports", Json::arr(reports.iter().map(|r| r.to_json()))),
+    ]);
+    sqa::util::bench::write_bench_json("bench_out/table2.json", &json)
+        .expect("write bench_out/table2.json");
     println!("reports -> bench_out/table2.json");
 }

@@ -22,11 +22,13 @@ fn main() {
         bench_harness::table3(&backend, TABLE3_VARIANTS, max_seq, true).expect("table3");
     println!("\n## Table 3 — forward time per step (s), CPU-scaled\n");
     println!("{table}");
-    std::fs::create_dir_all("bench_out").ok();
-    std::fs::write(
-        "bench_out/table3.json",
-        bench_harness::cells_to_json(&cells).to_string(),
-    )
-    .expect("write bench_out/table3.json");
+    use sqa::util::json::Json;
+    let json = Json::obj(vec![
+        ("bench", Json::str("table3")),
+        ("max_seq", Json::num(max_seq as f64)),
+        ("cells", bench_harness::cells_to_json(&cells)),
+    ]);
+    sqa::util::bench::write_bench_json("bench_out/table3.json", &json)
+        .expect("write bench_out/table3.json");
     println!("cells -> bench_out/table3.json");
 }

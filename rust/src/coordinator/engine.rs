@@ -44,11 +44,14 @@ use crate::data::pad_to;
 use crate::data::tokenizer::EOS;
 use crate::runtime::Backend;
 use crate::util::rng::Pcg64;
+use crate::util::sync::{self, AtomicBool, AtomicU64, Condvar, Mutex, Ordering};
 use anyhow::{Context, Result};
 use std::collections::{HashMap, VecDeque};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc;
-use std::sync::{Arc, Condvar, Mutex};
+// `Arc<dyn Backend>` needs std's unsized coercion, which the loom Arc does
+// not provide — Arcs stay std; only lock/condvar/atomic state goes through
+// the `util::sync` seam (that is where the interleaving-sensitive logic is).
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 type Reply = mpsc::Sender<Result<EncodeResponse, Reject>>;
@@ -95,17 +98,17 @@ struct JobQueue {
 
 impl JobQueue {
     fn push(&self, job: Option<Work>) {
-        self.jobs.lock().unwrap().push_back(job);
+        sync::lock(&self.jobs).push_back(job);
         self.cv.notify_one();
     }
 
     fn pop(&self) -> Option<Work> {
-        let mut q = self.jobs.lock().unwrap();
+        let mut q = sync::lock(&self.jobs);
         loop {
             if let Some(job) = q.pop_front() {
                 return job; // None = shutdown sentinel
             }
-            q = self.cv.wait(q).unwrap();
+            q = sync::wait(&self.cv, q);
         }
     }
 }
@@ -309,7 +312,14 @@ impl Engine {
     /// Blocking encode. Returns backpressure/too-long rejections directly.
     pub fn encode(&self, tokens: Vec<u32>) -> Result<EncodeResponse, Reject> {
         self.metrics.requests.fetch_add(1, Ordering::Relaxed);
-        if self.shutdown.load(Ordering::Relaxed) {
+        // Acquire pairs with the Release/AcqRel stores in `do_shutdown` and
+        // the dispatcher's disconnect path: a caller that observes `true`
+        // also observes everything the shutting-down thread published
+        // before raising the flag. The flag is still only a fast-path —
+        // a caller that races past it is caught by the closed ingress
+        // channel below (`try_send` → Disconnected → Shutdown), which is
+        // the authoritative shutdown signal.
+        if self.shutdown.load(Ordering::Acquire) {
             return Err(Reject::Shutdown);
         }
         if let Err(r) = self.router.route(tokens.len()) {
@@ -346,7 +356,10 @@ impl Engine {
         tokens: Vec<u32>,
         params: GenParams,
     ) -> Result<GenerateResponse, Reject> {
-        if self.shutdown.load(Ordering::Relaxed) {
+        // Acquire for the same pairing as `encode`; the dropped generation
+        // sender (`send` → Err → Shutdown below) is the authoritative
+        // signal if this load races the flag.
+        if self.shutdown.load(Ordering::Acquire) {
             return Err(Reject::Shutdown);
         }
         let Some(tx) = &self.gen_ingress else {
@@ -380,7 +393,13 @@ impl Engine {
     }
 
     fn do_shutdown(&mut self) {
-        if self.shutdown.swap(true, Ordering::SeqCst) {
+        // AcqRel: the Release half publishes this thread's writes to any
+        // Acquire load that sees the flag; the Acquire half orders the
+        // teardown below after whatever a concurrent first-shutdowner did
+        // (swap returning true means someone else already owns teardown).
+        // SeqCst buys nothing here — no third shared variable needs a
+        // total order against this flag.
+        if self.shutdown.swap(true, Ordering::AcqRel) {
             return;
         }
         // Closing ingress ends the dispatcher; it pushes worker sentinels.
@@ -440,7 +459,10 @@ fn dispatcher_loop(
                         .collect();
                     jobq.push(Some(Work::Encode(Job { batch: b, replies: r })));
                 }
-                shutdown.store(true, Ordering::SeqCst);
+                // Release pairs with the Acquire loads in encode/generate:
+                // the drained batches pushed above happen-before any caller
+                // that observes the flag.
+                shutdown.store(true, Ordering::Release);
                 // One sentinel per possible worker (generous).
                 for _ in 0..64 {
                     jobq.push(None);

@@ -5,21 +5,43 @@
 //! (compute-bound), decode tokens/steps (memory-bound), decode batching
 //! efficiency (steps coalesced per worker tick), session lifecycle
 //! (active / evicted) and decode throughput.
+//!
+//! ## Why every counter is `Ordering::Relaxed`
+//!
+//! All `AtomicU64`s here are *independent monotonic event counters* (plus
+//! one gauge, `active_sessions`, whose inc and dec both happen on paths
+//! already ordered by the scheduler's own channel/mutex synchronization).
+//! No reader derives a decision from a *relationship between two counters
+//! at one instant* that could be wrong under reordering: ratios like
+//! `mean_batch_size` or `decode_tok_per_s` are diagnostics where a
+//! momentarily torn numerator/denominator pair skews a report, never
+//! correctness. Nothing acquires data *through* a counter — publication of
+//! the things being counted (batches, sessions, responses) travels over
+//! `mpsc` channels and mutexes, which already create the happens-before
+//! edges. Relaxed still guarantees per-counter atomicity and monotonic
+//! modification order, which is all a counter needs; anything stronger
+//! would buy fences the hot path pays for and no one reads.
 
 use crate::util::json::Json;
 use crate::util::stats::Summary;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use crate::util::sync::{self, AtomicU64, Mutex, Ordering};
 
-#[derive(Debug, Default)]
 pub struct Metrics {
+    /// Encode requests seen (counted before routing/admission).
     pub requests: AtomicU64,
+    /// Encode responses delivered.
     pub responses: AtomicU64,
+    /// Requests shed on a full queue (encode ingress or gen waiting list).
     pub shed: AtomicU64,
+    /// Requests rejected for exceeding the largest bucket / gen capacity.
     pub too_long: AtomicU64,
+    /// Encode batches executed by workers.
     pub batches: AtomicU64,
+    /// Requests carried inside those batches (`/ batches` = mean size).
     pub batched_requests: AtomicU64,
+    /// Token slots processed (padded): `rows * bucket` per batch.
     pub tokens_processed: AtomicU64,
+    /// Padding share of `tokens_processed` (the router's waste metric).
     pub padded_tokens: AtomicU64,
     // ---- generation (prefill/decode) phase counters ---------------------
     /// Generation requests accepted by the scheduler.
@@ -33,7 +55,8 @@ pub struct Metrics {
     /// Coalesced decode jobs (one per scheduler tick per chunk) — decode
     /// steps per batch = `decode_tokens / decode_batches`.
     pub decode_batches: AtomicU64,
-    /// Live generation sessions (gauge).
+    /// Live generation sessions (gauge: inc on admit, dec on finish/fail,
+    /// both on the single scheduler thread — Relaxed is trivially enough).
     pub active_sessions: AtomicU64,
     /// Sessions evicted before finishing (timeout / shutdown).
     pub evicted_sessions: AtomicU64,
@@ -43,14 +66,42 @@ pub struct Metrics {
     queue_ms: Mutex<Summary>,
 }
 
+// Manual (not derived) so the struct builds against the loom shim too:
+// loom's atomics provide `new` but not the `Default`/`Debug` impls a
+// derive would require.
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 impl Metrics {
     pub fn new() -> Self {
-        Self::default()
+        Self {
+            requests: AtomicU64::new(0),
+            responses: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+            too_long: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            batched_requests: AtomicU64::new(0),
+            tokens_processed: AtomicU64::new(0),
+            padded_tokens: AtomicU64::new(0),
+            gen_requests: AtomicU64::new(0),
+            gen_responses: AtomicU64::new(0),
+            prefill_tokens: AtomicU64::new(0),
+            decode_tokens: AtomicU64::new(0),
+            decode_batches: AtomicU64::new(0),
+            active_sessions: AtomicU64::new(0),
+            evicted_sessions: AtomicU64::new(0),
+            decode_busy_us: AtomicU64::new(0),
+            latency_ms: Mutex::new(Summary::new()),
+            queue_ms: Mutex::new(Summary::new()),
+        }
     }
 
     pub fn record_latency(&self, total_ms: f64, queue_ms: f64) {
-        self.latency_ms.lock().unwrap().add(total_ms);
-        self.queue_ms.lock().unwrap().add(queue_ms);
+        sync::lock(&self.latency_ms).add(total_ms);
+        sync::lock(&self.queue_ms).add(queue_ms);
     }
 
     pub fn mean_batch_size(&self) -> f64 {
@@ -90,8 +141,8 @@ impl Metrics {
     }
 
     pub fn snapshot(&self) -> Json {
-        let lat = self.latency_ms.lock().unwrap();
-        let q = self.queue_ms.lock().unwrap();
+        let lat = sync::lock(&self.latency_ms);
+        let q = sync::lock(&self.queue_ms);
         let n = |v: &AtomicU64| Json::num(v.load(Ordering::Relaxed) as f64);
         Json::obj(vec![
             ("requests", n(&self.requests)),

@@ -130,6 +130,40 @@
 //! failing if the streaming backward ever loses to the scalar oracle at
 //! S ≥ 4096 or if SQA's measured step stops beating MHA's.
 //!
+//! ## Concurrency & unsafety invariants
+//!
+//! The concurrent core is written against [`util::sync`], a thin shim
+//! over `std::sync` that re-exports the mutexes, condvars, atomics and
+//! `Arc` the runtime uses — and swaps them for
+//! [loom](https://github.com/tokio-rs/loom)'s permutation-exploring
+//! doubles under `--cfg loom`, so the thread-pool, latch and
+//! session-table protocols are *model-checked* (`rust/tests/loom_models.rs`),
+//! not just stress-tested. Two repo-wide policies are machine-enforced by
+//! the in-tree linter (`cargo run -p xtask -- lint`, CI's required
+//! `invariant-lint` job):
+//!
+//! * **Every `unsafe` carries a `// SAFETY:` contract.** The crate has
+//!   exactly three unsafe seams — the lifetime-erased scoped jobs behind
+//!   `ThreadPool::run_borrowed`, and the `Send`/`Sync` impls for the
+//!   pool's shared inner state — and each states the invariant that makes
+//!   it sound. The seams are additionally run under Miri
+//!   (`cargo +nightly miri test --test unsafe_seams`) and nightly
+//!   TSan/ASan CI sweeps.
+//! * **Lock poisoning is a policy, not a crash.** The serving stack
+//!   acquires locks through the poison-tolerant [`util::sync::lock`] /
+//!   [`util::sync::wait`] helpers (a worker that panicked mid-batch has
+//!   already failed its own job; the shared maps/counters it guarded
+//!   remain structurally valid, and sibling sessions must not cascade).
+//!   Bare `.lock().unwrap()` in the concurrent subsystems is a lint
+//!   finding.
+//!
+//! Two more linted invariants keep the measurement story honest: the
+//! [`attention`]/[`linalg`] kernels are clock-free (timing lives in the
+//! benches and [`util::bench`], keeping kernels deterministic and
+//! Miri/loom-runnable), and every bench report goes through the schema'd
+//! [`util::bench::write_bench_json`] writer so the committed
+//! `BENCH_*.json` baselines stay diffable by `xtask bench-check`.
+//!
 //! ## Modules
 //!
 //! * [`runtime`] — the [`runtime::Backend`] trait (stateless forward/train

@@ -11,6 +11,7 @@
 //!     the host.
 
 use crate::runtime::manifest::{Artifact, Manifest};
+use crate::util::sync::lock;
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -30,9 +31,34 @@ struct Inner {
     slicer_cache: Mutex<HashMap<(usize, usize, usize), Arc<xla::PjRtLoadedExecutable>>>,
 }
 
-// The PJRT CPU client is internally synchronized; executions from multiple
-// threads are safe (each call owns its inputs/outputs).
+// SAFETY: `Inner` is not auto-Send/Sync only because the `xla` crate's
+// PJRT wrappers hold raw pointers into the C API. Sharing them across
+// threads is sound for this wrapper because:
+//
+// * `client` (`PjRtClient`) wraps a `PJRT_Client*`. The PJRT C API
+//   specifies its entry points are thread-safe ("PJRT is expected to be
+//   thread-safe... implementations must allow concurrent calls", see
+//   `pjrt_c_api.h`; the CPU client is backed by TFRT's multi-threaded
+//   runtime, which serves concurrent Compile/Execute/BufferFromHost calls
+//   by design). We only ever call through `&self` methods; the client is
+//   never mutated from Rust after construction.
+// * `manifest` is plain owned Rust data (paths + metadata), immutable
+//   after load — Send + Sync on its own.
+// * `exe_cache`/`slicer_cache` are only touched through their `Mutex`es
+//   (via the poison-tolerant `lock` helper below): the `HashMap` and the
+//   `Arc<PjRtLoadedExecutable>` handles inside are never aliased without
+//   the lock. Executables themselves are only *used* via `execute_b`,
+//   which is one of the concurrent-safe PJRT entry points.
+// * Every execution owns its inputs/outputs: buffers are created per call
+//   and results are popped out of the returned replica vectors, so no
+//   cross-thread aliasing of `PjRtBuffer` raw pointers exists unless the
+//   caller clones one — and `PjRtBuffer` is not `Clone`.
+//
+// What this does NOT claim: that arbitrary `xla` crate types are Sync.
+// Only `Inner`'s specific fields, used in the specific patterns above.
 unsafe impl Send for Inner {}
+// SAFETY: see the Send justification above — all `&Inner` access is
+// through PJRT's thread-safe entry points or Mutex-guarded caches.
 unsafe impl Sync for Inner {}
 
 impl Runtime {
@@ -65,7 +91,7 @@ impl Runtime {
 
     /// Compile (or fetch from cache) the executable for an artifact path.
     pub fn compile(&self, path: &Path) -> Result<Arc<xla::PjRtLoadedExecutable>> {
-        if let Some(exe) = self.inner.exe_cache.lock().unwrap().get(path) {
+        if let Some(exe) = lock(&self.inner.exe_cache).get(path) {
             return Ok(Arc::clone(exe));
         }
         let t0 = std::time::Instant::now();
@@ -87,11 +113,7 @@ impl Runtime {
             path.file_name().unwrap_or_default().to_string_lossy(),
             t0.elapsed().as_secs_f64()
         );
-        self.inner
-            .exe_cache
-            .lock()
-            .unwrap()
-            .insert(path.to_path_buf(), Arc::clone(&exe));
+        lock(&self.inner.exe_cache).insert(path.to_path_buf(), Arc::clone(&exe));
         Ok(exe)
     }
 
@@ -178,7 +200,7 @@ impl Runtime {
         stop: usize,
     ) -> Result<Arc<xla::PjRtLoadedExecutable>> {
         let key = (len, start, stop);
-        if let Some(exe) = self.inner.slicer_cache.lock().unwrap().get(&key) {
+        if let Some(exe) = lock(&self.inner.slicer_cache).get(&key) {
             return Ok(Arc::clone(exe));
         }
         let builder = xla::XlaBuilder::new(&format!("slice_{start}_{stop}"));
@@ -191,11 +213,7 @@ impl Runtime {
             .build()
             .map_err(wrap_xla)?;
         let exe = Arc::new(self.inner.client.compile(&comp).map_err(wrap_xla)?);
-        self.inner
-            .slicer_cache
-            .lock()
-            .unwrap()
-            .insert(key, Arc::clone(&exe));
+        lock(&self.inner.slicer_cache).insert(key, Arc::clone(&exe));
         Ok(exe)
     }
 }

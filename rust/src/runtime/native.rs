@@ -43,13 +43,12 @@ use crate::linalg;
 use crate::runtime::backend::{Backend, SessionStats};
 use crate::runtime::catalog::{self, Geometry, Layout};
 use crate::runtime::manifest::FamilyEntry;
-use crate::runtime::session::KvCache;
+use crate::runtime::session::{KvCache, SessionTable, TakeError};
 use crate::util::rng::Pcg64;
 use crate::util::threadpool::ThreadPool;
 use anyhow::{bail, ensure, Context, Result};
-use std::collections::{BTreeMap, HashMap};
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{mpsc, Mutex};
+use std::collections::BTreeMap;
+use std::sync::mpsc;
 
 const ADAM_B1: f32 = 0.9;
 const ADAM_B2: f32 = 0.999;
@@ -71,15 +70,6 @@ struct DecodeSession {
     kv: KvCache,
 }
 
-/// Session-table slot. `Busy` marks a session whose decode step is in
-/// flight on some worker with the table lock *released*; closing a busy
-/// session removes the entry, and the step's put-back notices and drops
-/// the state instead of resurrecting it.
-enum Slot {
-    Ready(Box<DecodeSession>),
-    Busy,
-}
-
 /// Pure-Rust implementation of [`Backend`].
 pub struct NativeBackend {
     families: BTreeMap<String, FamilyEntry>,
@@ -91,11 +81,10 @@ pub struct NativeBackend {
     /// Default GEMM lowering (`SQA_LINALG` env; blocked unless told
     /// otherwise). `forward_impl` strings like `"tiled+scalar"` override it.
     linalg: linalg::Impl,
-    /// Live decode sessions. The lock is held only for table lookups —
-    /// steps take the session *out* (leaving a [`Slot::Busy`] marker) so
-    /// concurrently batched sessions never serialize on it.
-    sessions: Mutex<HashMap<u64, Slot>>,
-    next_session: AtomicU64,
+    /// Live decode sessions. The take/Busy/put-back step protocol (and why
+    /// it is safe under concurrent step/close) lives in [`SessionTable`];
+    /// the loom suite model-checks it directly.
+    sessions: SessionTable<DecodeSession>,
 }
 
 impl Default for NativeBackend {
@@ -140,8 +129,7 @@ impl NativeBackend {
             pool: ThreadPool::new(workers, 256),
             kernel,
             linalg,
-            sessions: Mutex::new(HashMap::new()),
-            next_session: AtomicU64::new(1),
+            sessions: SessionTable::new(),
         }
     }
 
@@ -575,11 +563,7 @@ impl Backend for NativeBackend {
             model.lay.hkv * model.lay.d_head,
         );
         let logits = prefill_row(&model, params, tokens, &mut kv, Some(&self.pool))?;
-        let id = self.next_session.fetch_add(1, Ordering::Relaxed);
-        self.sessions
-            .lock()
-            .unwrap()
-            .insert(id, Slot::Ready(Box::new(DecodeSession { model, kv })));
+        let id = self.sessions.insert(DecodeSession { model, kv });
         Ok((id, logits))
     }
 
@@ -587,49 +571,35 @@ impl Backend for NativeBackend {
         // Take the session out of the table (leaving a Busy marker) so
         // steps for other sessions never serialize on the lock and a
         // concurrent close cannot race the compute.
-        let mut sess = {
-            let mut tab = self.sessions.lock().unwrap();
-            match tab.get_mut(&session) {
-                None => bail!("unknown decode session {session}"),
-                Some(Slot::Busy) => bail!("decode session {session} is mid-step"),
-                Some(slot) => match std::mem::replace(slot, Slot::Busy) {
-                    Slot::Ready(s) => s,
-                    Slot::Busy => unreachable!(),
-                },
-            }
+        let mut sess = match self.sessions.take(session) {
+            Ok(s) => s,
+            Err(TakeError::Unknown) => bail!("unknown decode session {session}"),
+            Err(TakeError::Busy) => bail!("decode session {session} is mid-step"),
         };
         let out = (|| {
             self.check_batch(&sess.model, params, &[token], 1, 1)?;
             decode_step_row(&sess.model, params, token, &mut sess.kv)
         })();
-        // Put the session back — unless it was closed while we computed
-        // (the entry is gone or replaced), in which case drop the state.
-        let mut tab = self.sessions.lock().unwrap();
-        if let Some(slot) = tab.get_mut(&session) {
-            if matches!(slot, Slot::Busy) {
-                *slot = Slot::Ready(sess);
-            }
-        }
+        // Put the session back — unless it was closed while we computed,
+        // in which case put_back drops the state.
+        self.sessions.put_back(session, sess);
         out
     }
 
     fn close_session(&self, session: u64) -> bool {
-        // Removing a Busy marker is fine: the in-flight step's put-back
-        // sees the missing entry and drops the session state.
-        self.sessions.lock().unwrap().remove(&session).is_some()
+        self.sessions.close(session)
     }
 
     fn session_stats(&self, session: u64) -> Result<SessionStats> {
-        let tab = self.sessions.lock().unwrap();
-        match tab.get(&session) {
-            Some(Slot::Ready(s)) => Ok(SessionStats {
-                len: s.kv.len(),
-                capacity: s.kv.capacity(),
-                kv_bytes: s.kv.step_bytes(s.model.spec.window) as u64,
-                alloc_bytes: s.kv.alloc_bytes() as u64,
-            }),
-            Some(Slot::Busy) => bail!("decode session {session} is mid-step"),
-            None => bail!("unknown decode session {session}"),
+        match self.sessions.with(session, |s| SessionStats {
+            len: s.kv.len(),
+            capacity: s.kv.capacity(),
+            kv_bytes: s.kv.step_bytes(s.model.spec.window) as u64,
+            alloc_bytes: s.kv.alloc_bytes() as u64,
+        }) {
+            Ok(stats) => Ok(stats),
+            Err(TakeError::Busy) => bail!("decode session {session} is mid-step"),
+            Err(TakeError::Unknown) => bail!("unknown decode session {session}"),
         }
     }
 }

@@ -17,7 +17,9 @@
 //! already see the fresh rows — the decode kernel attends `len + 1` rows
 //! while the step that produced row `len` is still in flight across layers.
 
+use crate::util::sync::{self, AtomicU64, Mutex, Ordering};
 use anyhow::{ensure, Result};
+use std::collections::HashMap;
 
 /// Contiguous per-layer K/V append buffers for one generation session.
 #[derive(Debug, Clone)]
@@ -143,6 +145,123 @@ impl KvCache {
     }
 }
 
+// ---- session table ----------------------------------------------------------
+
+/// Why [`SessionTable::take`] (or [`SessionTable::with`]) failed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TakeError {
+    /// No such session — never created, or already closed.
+    Unknown,
+    /// The session exists but a step is in flight (`Busy` marker in the
+    /// slot): the caller raced another step on the same session.
+    Busy,
+}
+
+/// Table slot. `Busy` marks a session whose step is in flight on some
+/// worker with the table lock *released*; closing a busy session removes
+/// the entry, and the step's put-back notices and drops the state instead
+/// of resurrecting it.
+enum Slot<S> {
+    Ready(Box<S>),
+    Busy,
+}
+
+/// Concurrent id → session map with a take/Busy/put-back step protocol.
+///
+/// The lock is held only for table lookups: a step [`SessionTable::take`]s
+/// the session *out* (leaving a `Busy` marker), computes with the lock
+/// released, then [`SessionTable::put_back`]s. Concurrently batched
+/// sessions never serialize on the lock; two steps on the *same* id are
+/// rejected (`TakeError::Busy`) instead of silently queued; a close during
+/// a step wins — put-back sees the entry gone and drops the state.
+///
+/// This protocol is loom-model-checked (`rust/tests/loom_models.rs`,
+/// `session_table_*`) via the [`crate::util::sync`] seam.
+pub struct SessionTable<S> {
+    slots: Mutex<HashMap<u64, Slot<S>>>,
+    next: AtomicU64,
+}
+
+impl<S> Default for SessionTable<S> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<S> SessionTable<S> {
+    pub fn new() -> Self {
+        Self {
+            slots: Mutex::new(HashMap::new()),
+            // Ids start at 1 so 0 is never a live session (callers use it
+            // as a "no session" sentinel in logs and CLI plumbing).
+            next: AtomicU64::new(1),
+        }
+    }
+
+    /// Register a new session, returning its id.
+    pub fn insert(&self, session: S) -> u64 {
+        // Relaxed: the id is data, not a synchronization edge — the mutex
+        // below publishes the slot itself, and uniqueness needs only the
+        // RMW atomicity of fetch_add, not any ordering with other memory.
+        let id = self.next.fetch_add(1, Ordering::Relaxed);
+        sync::lock(&self.slots).insert(id, Slot::Ready(Box::new(session)));
+        id
+    }
+
+    /// Take the session out for a step, leaving a `Busy` marker.
+    pub fn take(&self, id: u64) -> Result<Box<S>, TakeError> {
+        let mut tab = sync::lock(&self.slots);
+        match tab.get_mut(&id) {
+            None => Err(TakeError::Unknown),
+            Some(Slot::Busy) => Err(TakeError::Busy),
+            Some(slot) => match std::mem::replace(slot, Slot::Busy) {
+                Slot::Ready(s) => Ok(s),
+                Slot::Busy => unreachable!(),
+            },
+        }
+    }
+
+    /// Return a taken session. `false` means the session was closed while
+    /// the step ran — the state is dropped, not resurrected.
+    pub fn put_back(&self, id: u64, session: Box<S>) -> bool {
+        let mut tab = sync::lock(&self.slots);
+        match tab.get_mut(&id) {
+            Some(slot) if matches!(slot, Slot::Busy) => {
+                *slot = Slot::Ready(session);
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Remove a session. `true` if an entry (ready *or* busy) was removed;
+    /// removing a `Busy` marker is fine — the in-flight step's put-back
+    /// sees the missing entry and drops the session state.
+    pub fn close(&self, id: u64) -> bool {
+        sync::lock(&self.slots).remove(&id).is_some()
+    }
+
+    /// Read-only peek at a resident session (stats paths). Fails `Busy`
+    /// rather than blocking behind an in-flight step.
+    pub fn with<R>(&self, id: u64, f: impl FnOnce(&S) -> R) -> Result<R, TakeError> {
+        let tab = sync::lock(&self.slots);
+        match tab.get(&id) {
+            Some(Slot::Ready(s)) => Ok(f(s)),
+            Some(Slot::Busy) => Err(TakeError::Busy),
+            None => Err(TakeError::Unknown),
+        }
+    }
+
+    /// Number of live entries (ready + busy).
+    pub fn len(&self) -> usize {
+        sync::lock(&self.slots).len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -206,5 +325,42 @@ mod tests {
         assert!(kv.write(0, &[0.0; 2], &[0.0; 2]).is_err(), "not a row multiple");
         assert!(kv.write(0, &[0.0; 3], &[0.0; 6]).is_err(), "k/v mismatch");
         assert!(kv.write(0, &[], &[]).is_err(), "empty write");
+    }
+
+    #[test]
+    fn table_take_put_back_roundtrip() {
+        let tab = SessionTable::new();
+        let id = tab.insert(41u64);
+        assert_eq!(tab.with(id, |s| *s), Ok(41));
+        let mut s = tab.take(id).unwrap();
+        *s += 1;
+        // Mid-step: a second take and a stats peek both see Busy.
+        assert_eq!(tab.take(id).unwrap_err(), TakeError::Busy);
+        assert_eq!(tab.with(id, |s| *s).unwrap_err(), TakeError::Busy);
+        assert!(tab.put_back(id, s));
+        assert_eq!(tab.with(id, |s| *s), Ok(42));
+        assert!(tab.close(id));
+        assert_eq!(tab.take(id).unwrap_err(), TakeError::Unknown);
+    }
+
+    #[test]
+    fn table_close_during_step_drops_state() {
+        let tab = SessionTable::new();
+        let id = tab.insert("state".to_string());
+        let s = tab.take(id).unwrap();
+        assert!(tab.close(id), "closing a busy session removes the marker");
+        assert!(!tab.put_back(id, s), "put-back after close must drop, not resurrect");
+        assert_eq!(tab.with(id, |s| s.clone()).unwrap_err(), TakeError::Unknown);
+        assert!(tab.is_empty());
+    }
+
+    #[test]
+    fn table_ids_are_unique_and_nonzero() {
+        let tab = SessionTable::new();
+        let a = tab.insert(0u8);
+        let b = tab.insert(1u8);
+        assert_ne!(a, 0);
+        assert_ne!(a, b);
+        assert_eq!(tab.len(), 2);
     }
 }

@@ -22,11 +22,11 @@
 use crate::coordinator::{Engine, GenParams, Reject};
 use crate::data::Tokenizer;
 use crate::util::json::Json;
+use crate::util::sync::{AtomicBool, Ordering};
 use crate::util::threadpool::ThreadPool;
 use anyhow::{Context, Result};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -79,6 +79,10 @@ impl Server {
         self.listener.set_nonblocking(true)?;
         log::info!("serving on {}", self.listener.local_addr()?);
         loop {
+            // Relaxed is enough for `stop`: it is a pure advisory flag that
+            // carries no data — nothing is read "through" it, so no
+            // Acquire pairing is needed, and the accept/read-timeout ticks
+            // bound how stale a Relaxed load can be (≤ one 10/200 ms tick).
             if self.stop.load(Ordering::Relaxed) {
                 return Ok(());
             }

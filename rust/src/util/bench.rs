@@ -3,10 +3,44 @@
 //! `cargo bench` targets use `harness = false` and drive this runner: it
 //! warms up, measures wall-clock per iteration until a time or rep budget
 //! is hit, and prints mean ± std plus throughput. Also renders the
-//! markdown tables the paper-reproduction benches emit.
+//! markdown tables the paper-reproduction benches emit, and owns
+//! [`write_bench_json`] — the single gate through which every bench
+//! persists its JSON report.
 
+use crate::util::json::Json;
 use crate::util::stats::Summary;
+use std::path::Path;
 use std::time::{Duration, Instant};
+
+/// Write a bench report to disk through the one schema gate all benches
+/// share.
+///
+/// A report is a top-level JSON **object** carrying a `"bench"` string key
+/// that names the bench — the handle `xtask bench-check` uses to pair a
+/// fresh report with its committed `BENCH_*.json` baseline, and the reason
+/// raw `fs::write` is banned in `rust/benches/` by the invariant linter
+/// (`cargo run -p xtask -- lint`, rule `bench-writer`). Parent directories
+/// are created; output ends with a newline so baselines diff cleanly.
+pub fn write_bench_json(path: impl AsRef<Path>, doc: &Json) -> anyhow::Result<()> {
+    let path = path.as_ref();
+    let name = doc.get("bench").and_then(Json::as_str).unwrap_or("");
+    anyhow::ensure!(
+        !name.is_empty(),
+        "bench report must be a JSON object with a top-level \"bench\" string key \
+         naming the bench (writing {})",
+        path.display()
+    );
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)
+                .map_err(|e| anyhow::anyhow!("creating {}: {e}", dir.display()))?;
+        }
+    }
+    let mut text = doc.to_string();
+    text.push('\n');
+    std::fs::write(path, text)
+        .map_err(|e| anyhow::anyhow!("writing bench report {}: {e}", path.display()))
+}
 
 /// Result of one benchmark case.
 #[derive(Debug, Clone)]
@@ -138,6 +172,33 @@ mod tests {
         assert!(r.secs.len() >= 2);
         assert!(r.secs.len() < 100);
         assert!(r.mean() >= 0.004);
+    }
+
+    #[test]
+    fn write_bench_json_roundtrips_and_creates_dirs() {
+        let dir = std::env::temp_dir().join(format!("sqa-bench-{}", std::process::id()));
+        let path = dir.join("nested").join("report.json");
+        let doc = Json::obj(vec![
+            ("bench", Json::str("unit")),
+            ("rows", Json::arr([Json::num(1.0)])),
+        ]);
+        write_bench_json(&path, &doc).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.ends_with('\n'));
+        assert_eq!(Json::parse(&text).unwrap(), doc);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn write_bench_json_rejects_reports_outside_the_schema() {
+        let path = std::env::temp_dir().join("sqa-bench-rejected.json");
+        // A bare array (the old table1/2/3 shape) and an object missing the
+        // "bench" key must both be refused before touching the filesystem.
+        let arr = Json::arr([Json::num(1.0)]);
+        assert!(write_bench_json(&path, &arr).is_err());
+        let keyless = Json::obj(vec![("rows", Json::arr(Vec::new()))]);
+        assert!(write_bench_json(&path, &keyless).is_err());
+        assert!(!path.exists());
     }
 
     #[test]

@@ -13,6 +13,7 @@
 //! | [`prop`]     | proptest            |
 //! | [`bench`]    | criterion           |
 //! | [`logging`]  | env_logger          |
+//! | [`sync`]     | std ⇄ loom seam (+ poison-tolerant lock helpers) |
 
 pub mod bench;
 pub mod cli;
@@ -21,4 +22,5 @@ pub mod logging;
 pub mod prop;
 pub mod rng;
 pub mod stats;
+pub mod sync;
 pub mod threadpool;

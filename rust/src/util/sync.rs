@@ -1,0 +1,254 @@
+//! Concurrency substrate: one import seam for every synchronization
+//! primitive the runtime's concurrent code uses.
+//!
+//! Three jobs, one module:
+//!
+//! 1. **Model-checking seam.** Under `--cfg loom` every re-export swaps to
+//!    the [`loom`](https://docs.rs/loom) equivalents, so the thread pool's
+//!    submit/`wait_idle` handshake, the `run_borrowed` completion latch and
+//!    the session table's take/Busy/put-back protocol run under loom's
+//!    exhaustive interleaving explorer (`rust/tests/loom_models.rs`).
+//!    Tier-1 builds never set the cfg, never resolve the `loom` crate, and
+//!    compile the std paths only — the CI `loom` job adds the dev-dependency
+//!    in its own workspace (see `rust/README.md`, "Correctness tooling").
+//!
+//! 2. **Poison policy.** [`lock`] and [`wait`] are the *only* sanctioned
+//!    ways to acquire a mutex or block on a condvar in `server`,
+//!    `coordinator` and `runtime` (the in-tree invariant linter,
+//!    `cargo run -p xtask -- lint`, rejects `.lock().unwrap()` there).
+//!    They recover from poisoning instead of cascading the panic: every
+//!    critical section in this crate leaves its guarded state consistent
+//!    at each statement boundary (counters are single increments, queues
+//!    are structurally valid between push/pop), so the last state a
+//!    panicking thread published is safe to keep serving. One crashed
+//!    connection handler or worker must not take down every later locker.
+//!
+//! 3. **Completion latch.** [`Latch`] is the join primitive behind
+//!    `ThreadPool::run_borrowed`: one guard per job, distinguishing
+//!    *completed* (job body returned) from merely *terminated* (guard
+//!    dropped — job panicked, or was dropped unrun at pool shutdown). It
+//!    replaces the old `mpsc` channel latch with shim-native Mutex+Condvar
+//!    so the panic and drop paths of the `run_borrowed` SAFETY argument
+//!    are themselves loom-explorable.
+
+#[cfg(not(loom))]
+pub use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+#[cfg(not(loom))]
+pub use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+
+#[cfg(loom)]
+pub use loom::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+#[cfg(loom)]
+pub use loom::sync::{Arc, Condvar, Mutex, MutexGuard};
+
+/// Thread spawning through the same std/loom seam. Only the thread pool
+/// routes through this (loom models must own every thread they explore);
+/// service threads with names and lifecycles of their own (dispatcher,
+/// scheduler, server accept loop) stay on `std::thread` directly.
+pub mod thread {
+    #[cfg(not(loom))]
+    pub use std::thread::JoinHandle;
+
+    #[cfg(loom)]
+    pub use loom::thread::JoinHandle;
+
+    /// Spawn a named thread (loom ignores the name — its scheduler
+    /// identifies threads by spawn order).
+    #[cfg(not(loom))]
+    pub fn spawn_named<F: FnOnce() + Send + 'static>(name: String, f: F) -> JoinHandle<()> {
+        std::thread::Builder::new()
+            .name(name)
+            .spawn(f)
+            .expect("spawn thread")
+    }
+
+    #[cfg(loom)]
+    pub fn spawn_named<F: FnOnce() + Send + 'static>(_name: String, f: F) -> JoinHandle<()> {
+        loom::thread::spawn(f)
+    }
+}
+
+/// Acquire a mutex, recovering from poisoning (see the module docs for why
+/// recovery is sound here). This is the poison-tolerant helper the
+/// invariant linter requires in place of `.lock().unwrap()`.
+pub fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+/// Block on a condvar, recovering from poisoning on wake. Spurious wakeups
+/// are possible (std and loom both model them) — always re-check the
+/// predicate in a loop.
+pub fn wait<'a, T>(cv: &Condvar, guard: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+    cv.wait(guard).unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+// ---- completion latch -------------------------------------------------------
+
+struct LatchState {
+    /// Guards handed out so far (must not exceed `n`).
+    minted: usize,
+    /// Guards whose job body returned normally.
+    completed: usize,
+    /// Guards dropped for any reason — completion, panic unwind, or the
+    /// boxed job being dropped unrun at pool shutdown.
+    terminated: usize,
+}
+
+struct LatchInner {
+    state: Mutex<LatchState>,
+    done: Condvar,
+}
+
+/// Counts `n` jobs to termination, separately tracking how many actually
+/// completed. [`Latch::wait`] blocks until every guard is gone — which is
+/// exactly the property `ThreadPool::run_borrowed`'s lifetime-erasure
+/// SAFETY argument needs: no guard left means no job closure left alive,
+/// means no outstanding borrow of the caller's stack.
+pub struct Latch {
+    inner: Arc<LatchInner>,
+    n: usize,
+}
+
+/// One job's handle on a [`Latch`]. Call [`LatchGuard::complete`] as the
+/// last statement of the job body; dropping the guard any other way (panic
+/// unwind, job dropped unrun) still counts the job as terminated, so the
+/// waiter can never hang — it just observes `completed < n`.
+pub struct LatchGuard {
+    inner: Arc<LatchInner>,
+    completed: bool,
+}
+
+impl Latch {
+    pub fn new(n: usize) -> Self {
+        Self {
+            inner: Arc::new(LatchInner {
+                state: Mutex::new(LatchState {
+                    minted: 0,
+                    completed: 0,
+                    terminated: 0,
+                }),
+                done: Condvar::new(),
+            }),
+            n,
+        }
+    }
+
+    /// Mint the guard for one of the `n` jobs.
+    pub fn guard(&self) -> LatchGuard {
+        let mut st = lock(&self.inner.state);
+        st.minted += 1;
+        assert!(st.minted <= self.n, "latch over-minted: {} > {}", st.minted, self.n);
+        LatchGuard {
+            inner: Arc::clone(&self.inner),
+            completed: false,
+        }
+    }
+
+    /// Block until all `n` guards have terminated; returns how many
+    /// completed normally. `completed < n` means at least one job panicked
+    /// or was dropped unrun.
+    pub fn wait(&self) -> usize {
+        let mut st = lock(&self.inner.state);
+        while st.terminated < self.n {
+            st = wait(&self.inner.done, st);
+        }
+        st.completed
+    }
+}
+
+impl LatchGuard {
+    /// Mark the job as completed (consumes the guard; the drop below
+    /// publishes both counts under one lock acquisition).
+    pub fn complete(mut self) {
+        self.completed = true;
+    }
+}
+
+impl Drop for LatchGuard {
+    fn drop(&mut self) {
+        let mut st = lock(&self.inner.state);
+        st.terminated += 1;
+        if self.completed {
+            st.completed += 1;
+        }
+        // notify_all: several run_borrowed batches never share a latch,
+        // but the waiter and a concurrent guard drop can race the condvar.
+        self.inner.done.notify_all();
+    }
+}
+
+#[cfg(all(test, not(loom)))]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lock_recovers_from_poison() {
+        let m = Arc::new(Mutex::new(7u32));
+        let m2 = Arc::clone(&m);
+        // Poison the mutex: panic while holding the guard.
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+            panic!("poison it");
+        })
+        .join();
+        assert!(m.lock().is_err(), "mutex should be poisoned");
+        // The helper still returns the last consistent state.
+        assert_eq!(*lock(&m), 7);
+        *lock(&m) += 1;
+        assert_eq!(*lock(&m), 8);
+    }
+
+    #[test]
+    fn latch_counts_completions() {
+        let latch = Latch::new(3);
+        let guards: Vec<LatchGuard> = (0..3).map(|_| latch.guard()).collect();
+        let mut handles = Vec::new();
+        for g in guards {
+            handles.push(std::thread::spawn(move || g.complete()));
+        }
+        assert_eq!(latch.wait(), 3);
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn latch_counts_dropped_guards_as_terminated_not_completed() {
+        let latch = Latch::new(2);
+        let g1 = latch.guard();
+        let g2 = latch.guard();
+        g1.complete();
+        drop(g2); // the panic-unwind / dropped-unrun path
+        assert_eq!(latch.wait(), 1, "one completed, one merely terminated");
+    }
+
+    #[test]
+    fn empty_latch_returns_immediately() {
+        let latch = Latch::new(0);
+        assert_eq!(latch.wait(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "over-minted")]
+    fn latch_rejects_extra_guards() {
+        let latch = Latch::new(1);
+        let _a = latch.guard();
+        let _b = latch.guard();
+    }
+
+    #[test]
+    fn wait_blocks_until_last_guard() {
+        let latch = Latch::new(1);
+        let g = latch.guard();
+        let flag = Arc::new(AtomicBool::new(false));
+        let f2 = Arc::clone(&flag);
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            f2.store(true, Ordering::SeqCst);
+            g.complete();
+        });
+        assert_eq!(latch.wait(), 1);
+        assert!(flag.load(Ordering::SeqCst), "wait returned before the guard dropped");
+        h.join().unwrap();
+    }
+}

@@ -6,6 +6,10 @@
 //! primitive: `submit` blocks when the queue is full, `try_submit` fails
 //! fast — the serving path uses the latter to shed load explicitly.
 //!
+//! All synchronization goes through [`crate::util::sync`], so the whole
+//! pool — queue handshake, idle condvar, `run_borrowed` latch — runs under
+//! loom's exhaustive interleaving explorer (`rust/tests/loom_models.rs`).
+//!
 //! Two joining primitives:
 //! * [`ThreadPool::wait_idle`] blocks on a condvar signalled when the last
 //!   running job of an empty queue finishes (it used to poll `pending()` in
@@ -16,9 +20,8 @@
 //!   paths fan out over slices of caller-owned buffers without cloning
 //!   them into `Arc`s.
 
+use crate::util::sync::{self, thread::JoinHandle, Arc, Condvar, Latch, Mutex};
 use std::collections::VecDeque;
-use std::sync::{mpsc, Arc, Condvar, Mutex};
-use std::thread::JoinHandle;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
@@ -68,10 +71,7 @@ impl ThreadPool {
         let workers = (0..n_workers)
             .map(|i| {
                 let q = Arc::clone(&queue);
-                std::thread::Builder::new()
-                    .name(format!("pool-{i}"))
-                    .spawn(move || worker_loop(q))
-                    .expect("spawn worker")
+                sync::thread::spawn_named(format!("pool-{i}"), move || worker_loop(q))
             })
             .collect();
         Self { queue, workers }
@@ -88,11 +88,14 @@ impl ThreadPool {
     }
 
     fn submit_boxed(&self, f: Job) {
-        let mut state = self.queue.jobs.lock().unwrap();
+        let mut state = sync::lock(&self.queue.jobs);
         while state.items.len() >= self.queue.capacity && !state.shutdown {
-            state = self.queue.not_full.wait(state).unwrap();
+            state = sync::wait(&self.queue.not_full, state);
         }
         if state.shutdown {
+            // Dropping `f` here is load-bearing for run_borrowed: the job's
+            // latch guard drops with it, so the batch waiter observes the
+            // job as terminated-but-not-completed instead of hanging.
             return;
         }
         state.items.push_back(f);
@@ -101,7 +104,7 @@ impl ThreadPool {
 
     /// Enqueue without blocking; `Err` means the queue is full (shed load).
     pub fn try_submit<F: FnOnce() + Send + 'static>(&self, f: F) -> Result<(), F> {
-        let mut state = self.queue.jobs.lock().unwrap();
+        let mut state = sync::lock(&self.queue.jobs);
         if state.shutdown || state.items.len() >= self.queue.capacity {
             return Err(f);
         }
@@ -112,7 +115,7 @@ impl ThreadPool {
 
     /// Jobs queued but not yet started plus jobs currently running.
     pub fn pending(&self) -> usize {
-        let state = self.queue.jobs.lock().unwrap();
+        let state = sync::lock(&self.queue.jobs);
         state.items.len() + state.active
     }
 
@@ -120,9 +123,9 @@ impl ThreadPool {
     /// busy-polling: the last worker to finish with the queue empty
     /// signals `idle`.
     pub fn wait_idle(&self) {
-        let mut state = self.queue.jobs.lock().unwrap();
+        let mut state = sync::lock(&self.queue.jobs);
         while !state.is_idle() {
-            state = self.queue.idle.wait(state).unwrap();
+            state = sync::wait(&self.queue.idle, state);
         }
     }
 
@@ -132,43 +135,39 @@ impl ThreadPool {
     /// This is the scoped-fan-out primitive behind the linalg row-block
     /// parallelism and the native backend's per-row batch fan: jobs get
     /// `&`/`&mut` slices of caller-owned buffers directly — no `Arc`
-    /// clones, no per-request allocation. A completion latch (one channel
-    /// message per job, sent after the job body returns or unwinds) makes
-    /// the early-return-while-borrowed case impossible: we do not return
-    /// until every job has stopped touching the borrows.
+    /// clones, no per-request allocation. A completion [`Latch`] (one
+    /// guard per job, dropped when the job returns, unwinds, or is dropped
+    /// unrun) makes the early-return-while-borrowed case impossible: we do
+    /// not return until every job has stopped touching the borrows.
     ///
-    /// Panics if a job panicked (its latch message never arrives). Do not
-    /// call from *inside* a pool job — the bounded queue can deadlock on
-    /// nested submission, same as [`ThreadPool::submit`].
+    /// Panics if a job panicked (its guard terminated without completing).
+    /// Do not call from *inside* a pool job — the bounded queue can
+    /// deadlock on nested submission, same as [`ThreadPool::submit`].
     pub fn run_borrowed<'env>(&self, jobs: Vec<Box<dyn FnOnce() + Send + 'env>>) {
         let n = jobs.len();
-        let (tx, rx) = mpsc::channel::<()>();
+        let latch = Latch::new(n);
         for job in jobs {
-            let tx = tx.clone();
+            let guard = latch.guard();
             let wrapped: Box<dyn FnOnce() + Send + 'env> = Box::new(move || {
-                // On unwind `tx` drops unsent; the latch then comes up
-                // short and we panic below instead of hanging.
+                // On unwind `guard` drops un-completed; the latch then
+                // comes up short and we panic below instead of hanging.
                 job();
-                let _ = tx.send(());
+                guard.complete();
             });
             // SAFETY: lifetime erasure only. The closure (and everything it
             // borrows) is guaranteed to be done before this function
-            // returns: we block on one latch message per job, and a message
-            // is only missing if the job unwound — in which case its borrows
-            // were released during the unwind. Jobs dropped unrun (pool
-            // shutdown) drop their `tx` immediately, which also releases
-            // the borrows before the latch loop ends.
+            // returns: `latch.wait()` blocks until all `n` guards have
+            // dropped, and a guard drops only when its job completed,
+            // unwound (borrows released during the unwind), or was dropped
+            // unrun at pool shutdown (closure dropped, borrows released).
+            // No path leaks a live closure past the wait below.
             #[allow(clippy::useless_transmute, clippy::missing_transmute_annotations)]
             let wrapped: Job = unsafe {
                 std::mem::transmute::<Box<dyn FnOnce() + Send + 'env>, Job>(wrapped)
             };
             self.submit_boxed(wrapped);
         }
-        drop(tx);
-        let mut done = 0usize;
-        while rx.recv().is_ok() {
-            done += 1;
-        }
+        let done = latch.wait();
         assert!(done == n, "pool job failed while running borrowed batch ({done}/{n})");
     }
 }
@@ -176,7 +175,7 @@ impl ThreadPool {
 fn worker_loop(queue: Arc<Queue>) {
     loop {
         let job = {
-            let mut state = queue.jobs.lock().unwrap();
+            let mut state = sync::lock(&queue.jobs);
             loop {
                 if let Some(job) = state.items.pop_front() {
                     state.active += 1;
@@ -186,16 +185,13 @@ fn worker_loop(queue: Arc<Queue>) {
                 if state.shutdown {
                     return;
                 }
-                state = queue.not_empty.wait(state).unwrap();
+                state = sync::wait(&queue.not_empty, state);
             }
         };
         // A panicking job must not kill the worker (a shrinking pool turns
         // into missed latches and stuck queues) nor leak `active`.
-        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
-        if result.is_err() {
-            log::error!("thread pool job panicked");
-        }
-        let mut state = queue.jobs.lock().unwrap();
+        run_job(job);
+        let mut state = sync::lock(&queue.jobs);
         state.active -= 1;
         if state.is_idle() {
             queue.idle.notify_all();
@@ -203,12 +199,32 @@ fn worker_loop(queue: Arc<Queue>) {
     }
 }
 
+#[cfg(not(loom))]
+fn run_job(job: Job) {
+    if std::panic::catch_unwind(std::panic::AssertUnwindSafe(job)).is_err() {
+        log::error!("thread pool job panicked");
+    }
+}
+
+/// loom's model has no unwinding — a panic inside a model aborts the
+/// exploration anyway, so the catch_unwind wrapper (not implemented for
+/// loom's types) is simply omitted.
+#[cfg(loom)]
+fn run_job(job: Job) {
+    job();
+}
+
 impl Drop for ThreadPool {
     fn drop(&mut self) {
         {
-            let mut state = self.queue.jobs.lock().unwrap();
+            let mut state = sync::lock(&self.queue.jobs);
             state.shutdown = true;
         }
+        // Workers pop items *before* checking shutdown, so already-queued
+        // jobs drain before the join — Drop is graceful. The only
+        // dropped-unrun path is a submitter blocked on `not_full` when
+        // shutdown lands (see submit_boxed); run_borrowed's latch turns
+        // that into a loud done!=n assertion instead of a hang.
         self.queue.not_empty.notify_all();
         self.queue.not_full.notify_all();
         for w in self.workers.drain(..) {
@@ -217,7 +233,7 @@ impl Drop for ThreadPool {
     }
 }
 
-#[cfg(test)]
+#[cfg(all(test, not(loom)))]
 mod tests {
     use super::*;
     use std::sync::atomic::{AtomicU64, Ordering};
@@ -242,10 +258,10 @@ mod tests {
     fn try_submit_sheds_when_full() {
         let pool = ThreadPool::new(1, 1);
         let gate = Arc::new(Mutex::new(()));
-        let hold = gate.lock().unwrap();
+        let hold = sync::lock(&gate);
         let g1 = Arc::clone(&gate);
         pool.submit(move || {
-            drop(g1.lock().unwrap()); // blocks until test releases
+            drop(sync::lock(&g1)); // blocks until test releases
         });
         // Wait for the worker to pick up the blocking job.
         std::thread::sleep(std::time::Duration::from_millis(20));
@@ -324,5 +340,94 @@ mod tests {
         });
         pool.wait_idle();
         assert_eq!(c.load(Ordering::SeqCst), 1, "worker died on panic");
+    }
+
+    // ---- edge cases behind the run_borrowed SAFETY argument (ISSUE 6) ----
+
+    #[test]
+    fn run_borrowed_empty_batch_returns_immediately() {
+        let pool = ThreadPool::new(2, 4);
+        pool.run_borrowed(Vec::new());
+        // And again — no latch state leaks across batches.
+        pool.run_borrowed(Vec::new());
+    }
+
+    #[test]
+    fn run_borrowed_panicking_job_asserts_instead_of_hanging() {
+        let pool = ThreadPool::new(2, 8);
+        let flag = Arc::new(AtomicU64::new(0));
+        let f = Arc::clone(&flag);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = vec![
+                Box::new(move || {
+                    f.fetch_add(1, Ordering::SeqCst);
+                }),
+                Box::new(|| panic!("job blew up")),
+            ];
+            pool.run_borrowed(jobs);
+        }));
+        let err = result.expect_err("run_borrowed must panic when a job panicked");
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_else(|| "<non-string panic>".into());
+        assert!(
+            msg.contains("pool job failed while running borrowed batch (1/2)"),
+            "wrong panic: {msg}"
+        );
+        assert_eq!(flag.load(Ordering::SeqCst), 1, "healthy job should still have run");
+    }
+
+    #[test]
+    fn drop_with_queued_jobs_drains_then_joins() {
+        // One worker wedged on a gate, several jobs stuck in the queue:
+        // Drop must wait out the gate job, drain the queue, and join —
+        // without hanging and without losing queued work.
+        let gate = Arc::new(Mutex::new(false));
+        let cv = Arc::new(Condvar::new());
+        let ran = Arc::new(AtomicU64::new(0));
+        {
+            let pool = ThreadPool::new(1, 8);
+            let (g, c) = (Arc::clone(&gate), Arc::clone(&cv));
+            pool.submit(move || {
+                let mut open = sync::lock(&g);
+                while !*open {
+                    open = sync::wait(&c, open);
+                }
+            });
+            for _ in 0..4 {
+                let r = Arc::clone(&ran);
+                pool.submit(move || {
+                    r.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+            // Open the gate from a helper thread *after* Drop has begun so
+            // Drop really does wait on a busy worker with a loaded queue.
+            let (g, c) = (Arc::clone(&gate), Arc::clone(&cv));
+            std::thread::spawn(move || {
+                std::thread::sleep(std::time::Duration::from_millis(30));
+                *sync::lock(&g) = true;
+                c.notify_all();
+            });
+            drop(pool); // must not hang
+        }
+        assert_eq!(ran.load(Ordering::SeqCst), 4, "queued jobs drain before the join");
+    }
+
+    #[test]
+    fn submit_after_shutdown_drops_job_silently() {
+        // try_submit on a shut-down pool must shed, not enqueue.
+        let pool = ThreadPool::new(1, 2);
+        {
+            let mut st = sync::lock(&pool.queue.jobs);
+            st.shutdown = true;
+        }
+        assert!(pool.try_submit(|| {}).is_err());
+        pool.submit(|| unreachable!("job must be dropped, not run"));
+        // Un-wedge shutdown so Drop's join completes normally.
+        {
+            let mut st = sync::lock(&pool.queue.jobs);
+            assert!(st.items.is_empty());
+        }
     }
 }

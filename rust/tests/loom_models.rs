@@ -1,0 +1,177 @@
+//! Loom interleaving models for the runtime's concurrency protocols.
+//!
+//! Compiled ONLY under `--cfg loom` — tier-1 builds see an empty crate and
+//! never resolve the `loom` dependency (the offline image has no crates;
+//! the CI `loom` job `cargo add`s it before running). Locally:
+//!
+//! ```sh
+//! cargo add loom@0.7 --dev              # network required, not committed
+//! RUSTFLAGS="--cfg loom" LOOM_MAX_PREEMPTIONS=3 \
+//!   cargo test --release --test loom_models
+//! git checkout Cargo.toml               # drop the dev-dep again
+//! ```
+//!
+//! Every primitive here reaches loom through the `sqa::util::sync` seam:
+//! under `cfg(loom)` the pool's mutexes/condvars, the `run_borrowed`
+//! latch, and the session table's lock are loom types, so loom explores
+//! every interleaving (bounded by `LOOM_MAX_PREEMPTIONS`) of the exact
+//! production code paths — not of a test-only model.
+//!
+//! Models are kept to ≤2 spawned threads + main: loom's state space grows
+//! exponentially in threads and context switches.
+
+#![cfg(loom)]
+
+use loom::thread;
+use sqa::runtime::session::{SessionTable, TakeError};
+use sqa::util::sync::{Arc, AtomicUsize, Latch, Ordering};
+use sqa::util::threadpool::ThreadPool;
+
+/// The submit → worker-pop → `wait_idle` idle-condvar handshake: wait_idle
+/// must not return while a popped job is still running (the queue is
+/// already empty then — `active` is what holds it back).
+#[test]
+fn pool_submit_wait_idle_handshake() {
+    loom::model(|| {
+        let pool = ThreadPool::new(1, 2);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..2 {
+            let c = Arc::clone(&counter);
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::Relaxed), 2);
+        drop(pool); // drains + joins: every branch must terminate cleanly
+    });
+}
+
+/// Bounded-queue backpressure: with capacity 1 the second submit must
+/// block on `not_full` until the worker pops — no job may be lost or
+/// duplicated in any interleaving of submitter vs worker.
+#[test]
+fn pool_bounded_queue_backpressure() {
+    loom::model(|| {
+        let pool = ThreadPool::new(1, 1);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..2 {
+            let c = Arc::clone(&counter);
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::Relaxed), 2);
+        drop(pool);
+    });
+}
+
+/// `run_borrowed`'s SAFETY argument, model-checked: the erased-lifetime
+/// jobs write through borrows of main's stack, and in every interleaving
+/// the writes are complete (and the borrows dead) before `run_borrowed`
+/// returns to the assert.
+#[test]
+fn run_borrowed_latch_joins_every_interleaving() {
+    loom::model(|| {
+        let pool = ThreadPool::new(1, 2);
+        let mut data = [0usize; 2];
+        {
+            let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+            for slot in data.iter_mut() {
+                jobs.push(Box::new(move || {
+                    *slot += 1;
+                }));
+            }
+            pool.run_borrowed(jobs);
+        }
+        assert_eq!(data, [1, 1]);
+        drop(pool);
+    });
+}
+
+/// The latch's terminated-vs-completed split — the path behind the
+/// job-panic and pool-drops-jobs-unrun cases (loom cannot unwind, so the
+/// "panic" is modeled as what unwinding does to the guard: a drop without
+/// `complete()`). The waiter must unblock in every schedule and must
+/// count exactly the completions.
+#[test]
+fn latch_counts_drops_as_terminated_not_completed() {
+    loom::model(|| {
+        let latch = Arc::new(Latch::new(2));
+        let g_ok = latch.guard();
+        let g_drop = latch.guard();
+        let t1 = thread::spawn(move || g_ok.complete());
+        let t2 = thread::spawn(move || drop(g_drop));
+        let completed = latch.wait();
+        assert_eq!(completed, 1, "one completed, one merely terminated");
+        t1.join().unwrap();
+        t2.join().unwrap();
+    });
+}
+
+/// Session-table step vs close race: in every interleaving the close
+/// succeeds exactly once, the state is never resurrected after close, and
+/// the step either runs to a successful put-back or observes the session
+/// gone — never a hang, never a double-free of the boxed state.
+#[test]
+fn session_table_step_vs_close() {
+    loom::model(|| {
+        let tab = Arc::new(SessionTable::new());
+        let id = tab.insert(0u64);
+        let stepper = {
+            let tab = Arc::clone(&tab);
+            thread::spawn(move || match tab.take(id) {
+                Ok(mut s) => {
+                    *s += 1;
+                    tab.put_back(id, s)
+                }
+                Err(TakeError::Unknown) => false, // close won the race
+                Err(TakeError::Busy) => unreachable!("no concurrent stepper"),
+            })
+        };
+        let closed = tab.close(id);
+        let _stepped = stepper.join().unwrap();
+        assert!(closed, "the entry (ready or busy) is removable exactly once");
+        assert!(tab.is_empty(), "closed session must not be resurrected");
+        assert_eq!(tab.take(id).unwrap_err(), TakeError::Unknown);
+    });
+}
+
+/// Two concurrent steps on one session: mutual exclusion through the Busy
+/// marker — at least one step wins, a loser sees `Busy` (not a hang, not
+/// a second handle to the same boxed state), and the final state reflects
+/// exactly the steps that reported success.
+#[test]
+fn session_table_concurrent_steps_exclude() {
+    loom::model(|| {
+        let tab = Arc::new(SessionTable::new());
+        let id = tab.insert(0u64);
+        let other = {
+            let tab = Arc::clone(&tab);
+            thread::spawn(move || match tab.take(id) {
+                Ok(mut s) => {
+                    *s += 1;
+                    assert!(tab.put_back(id, s), "nobody closes in this model");
+                    true
+                }
+                Err(TakeError::Busy) => false,
+                Err(TakeError::Unknown) => unreachable!("never closed"),
+            })
+        };
+        let mine = match tab.take(id) {
+            Ok(mut s) => {
+                *s += 1;
+                assert!(tab.put_back(id, s));
+                true
+            }
+            Err(TakeError::Busy) => false,
+            Err(TakeError::Unknown) => unreachable!("never closed"),
+        };
+        let theirs = other.join().unwrap();
+        assert!(mine || theirs, "at least one step must win the slot");
+        let expected = (mine as u64) + (theirs as u64);
+        assert_eq!(tab.with(id, |s| *s), Ok(expected));
+        assert!(tab.close(id));
+    });
+}

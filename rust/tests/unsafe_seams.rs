@@ -1,0 +1,270 @@
+//! Miri-sized exercise of the crate's unsafe (and unsafe-adjacent) seams.
+//!
+//! Run under Miri (CI `miri` job, or locally
+//! `cargo +nightly miri test --test unsafe_seams`) to check for UB; the
+//! same tests run under plain `cargo test` as cheap functional coverage.
+//! Three seams, per ISSUE 6:
+//!
+//! 1. `ThreadPool::run_borrowed` — the lifetime-erasing `transmute` that
+//!    lets pool jobs borrow the caller's stack. Miri validates that no
+//!    borrow outlives the latch wait (it tracks the erased lifetimes as
+//!    raw provenance).
+//! 2. `linalg` strided views — the `MatRef {data, off, rs, cs}` tiles the
+//!    blocked GEMM walks. All indexing is safe Rust, but the stride
+//!    arithmetic is exactly where an off-by-one turns into OOB; Miri (and
+//!    the scalar-vs-blocked differential here) pins it.
+//! 3. Tensor / KvCache slab indexing — flat `[a,b,c,d]` and per-layer
+//!    `[capacity, dkv]` buffers addressed by hand-rolled index math.
+//!
+//! Shapes are deliberately tiny (Miri runs ~100x slower than native) and
+//! nothing here touches wall clocks or sleeps, so the suite runs with
+//! Miri's isolation on.
+
+use sqa::attention::tensor::Tensor;
+use sqa::linalg::{self, Impl};
+use sqa::runtime::session::{KvCache, SessionTable, TakeError};
+use sqa::util::threadpool::ThreadPool;
+
+/// Deterministic, libm-free fill: small signed fractions.
+fn fill(n: usize, salt: u64) -> Vec<f32> {
+    (0..n)
+        .map(|i| {
+            let h = (i as u64).wrapping_mul(2654435761).wrapping_add(salt.wrapping_mul(97));
+            ((h >> 7) % 17) as f32 / 8.0 - 1.0
+        })
+        .collect()
+}
+
+fn assert_close(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!(
+            (x - y).abs() <= 1e-4 * (1.0 + x.abs().max(y.abs())),
+            "{what}[{i}]: {x} vs {y}"
+        );
+    }
+}
+
+// ---- seam 1: run_borrowed lifetime erasure ---------------------------------
+
+#[test]
+fn run_borrowed_borrows_stay_inside_the_latch() {
+    let pool = ThreadPool::new(2, 8);
+    let input: Vec<u64> = (0..24).collect();
+    let mut out = vec![0u64; 24];
+    {
+        let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+        for (i, chunk) in out.chunks_mut(6).enumerate() {
+            let src = &input[i * 6..(i + 1) * 6];
+            jobs.push(Box::new(move || {
+                for (o, &s) in chunk.iter_mut().zip(src) {
+                    *o = s * 3 + 1;
+                }
+            }));
+        }
+        pool.run_borrowed(jobs);
+    }
+    assert!(out.iter().enumerate().all(|(i, &x)| x == 3 * i as u64 + 1));
+}
+
+#[test]
+fn run_borrowed_batches_do_not_leak_state_across_calls() {
+    // Two consecutive batches on one pool: the second batch's borrows are
+    // fresh — any guard/latch state bleeding over would show up as a
+    // count mismatch or, under Miri, a stale-provenance access.
+    let pool = ThreadPool::new(2, 4);
+    for round in 0u64..3 {
+        let mut acc = vec![0u64; 4];
+        {
+            let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+            for slot in acc.iter_mut() {
+                jobs.push(Box::new(move || *slot = round + 1));
+            }
+            pool.run_borrowed(jobs);
+        }
+        assert_eq!(acc, vec![round + 1; 4]);
+    }
+    pool.run_borrowed(Vec::new()); // empty batch: wait() on n = 0
+}
+
+#[test]
+fn pool_drop_after_borrowed_batches_is_clean() {
+    // Worker teardown after erased-lifetime jobs ran: Miri checks the
+    // joined threads left no dangling references behind.
+    let pool = ThreadPool::new(2, 4);
+    let data = [1u8, 2, 3, 4];
+    let mut sums = [0u32; 2];
+    {
+        let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+        for (i, s) in sums.iter_mut().enumerate() {
+            let half = &data[i * 2..i * 2 + 2];
+            jobs.push(Box::new(move || *s = half.iter().map(|&b| b as u32).sum()));
+        }
+        pool.run_borrowed(jobs);
+    }
+    assert_eq!(sums, [3, 7]);
+    drop(pool);
+}
+
+// ---- seam 2: linalg strided views ------------------------------------------
+
+#[test]
+fn score_block_strided_scalar_vs_blocked() {
+    // Head-interleaved slab geometry: row r of the view lives at
+    // slab[r * stride + off ..][..d]. Offsets chosen so a stride slip
+    // lands outside the buffer (Miri aborts) or off the differential.
+    let (d, tq, tk, i0, j0) = (4usize, 3usize, 5usize, 1usize, 2usize);
+    let (q_stride, q_off, kv_stride, kv_off, s_stride) = (11usize, 2usize, 9usize, 1usize, 6usize);
+    let q = fill((i0 + tq - 1) * q_stride + q_off + d, 1);
+    let k = fill((j0 + tk - 1) * kv_stride + kv_off + d, 2);
+    let mut s_scalar = vec![f32::NAN; (tq - 1) * s_stride + tk + 1];
+    let mut s_blocked = s_scalar.clone();
+    for (imp, out) in [(Impl::Scalar, &mut s_scalar), (Impl::Blocked, &mut s_blocked)] {
+        linalg::score_block(
+            imp, &q, q_stride, q_off, i0, tq, &k, kv_stride, kv_off, j0, tk, d, 0.25, out,
+            s_stride,
+        );
+    }
+    for i in 0..tq {
+        assert_close(
+            &s_scalar[i * s_stride..i * s_stride + tk],
+            &s_blocked[i * s_stride..i * s_stride + tk],
+            "score row",
+        );
+    }
+}
+
+#[test]
+fn pv_and_ptx_blocks_strided_scalar_vs_blocked() {
+    let (d, tq, tk, j0, row0) = (4usize, 3usize, 5usize, 2usize, 1usize);
+    let (p_stride, kv_stride, kv_off) = (6usize, 9usize, 1usize);
+    let probs = fill((tq - 1) * p_stride + tk + 1, 3)
+        .iter()
+        .map(|x| x.abs()) // probabilities: non-negative
+        .collect::<Vec<_>>();
+    let v = fill((j0 + tk - 1) * kv_stride + kv_off + d, 4);
+
+    let (o_stride, o_off) = (7usize, 2usize);
+    let base = fill((tq - 1) * o_stride + o_off + d, 5);
+    let mut o_scalar = base.clone();
+    let mut o_blocked = base;
+    for (imp, out) in [(Impl::Scalar, &mut o_scalar), (Impl::Blocked, &mut o_blocked)] {
+        linalg::pv_block(
+            imp, &probs, p_stride, tq, tk, &v, kv_stride, kv_off, j0, d, out, o_stride, o_off,
+        );
+    }
+    assert_close(&o_scalar, &o_blocked, "pv_block out slab");
+
+    // dK/dV shape: out rows indexed j0 + jj, input rows row0 + ti.
+    let (x_stride, x_off) = (10usize, 3usize);
+    let x = fill((row0 + tq - 1) * x_stride + x_off + d, 6);
+    let base = fill((j0 + tk - 1) * o_stride + o_off + d, 7);
+    let mut t_scalar = base.clone();
+    let mut t_blocked = base;
+    for (imp, out) in [(Impl::Scalar, &mut t_scalar), (Impl::Blocked, &mut t_blocked)] {
+        linalg::ptx_block(
+            imp, &probs, p_stride, tq, tk, &x, x_stride, x_off, row0, d, out, o_stride, o_off, j0,
+        );
+    }
+    assert_close(&t_scalar, &t_blocked, "ptx_block out slab");
+}
+
+#[test]
+fn gemm_entrypoints_scalar_vs_blocked() {
+    let (s, m, n) = (4usize, 3usize, 5usize);
+    let x = fill(s * m, 8);
+    let w = fill(m * n, 9);
+    let bias = fill(n, 10);
+
+    let a = linalg::matmul(Impl::Scalar, &x, &w, s, m, n, None);
+    let b = linalg::matmul(Impl::Blocked, &x, &w, s, m, n, None);
+    assert_close(&a, &b, "matmul");
+
+    let mut ya = vec![0.0; s * n];
+    let mut yb = vec![0.0; s * n];
+    linalg::matmul_bias_into(Impl::Scalar, &x, &w, &bias, &mut ya, s, m, n, None);
+    linalg::matmul_bias_into(Impl::Blocked, &x, &w, &bias, &mut yb, s, m, n, None);
+    assert_close(&ya, &yb, "matmul_bias_into");
+
+    let dy = fill(s * n, 11);
+    let mut ga = fill(m * n, 12);
+    let mut gb = ga.clone();
+    linalg::accum_xt_dy(Impl::Scalar, &mut ga, &x, &dy, s, m, n);
+    linalg::accum_xt_dy(Impl::Blocked, &mut gb, &x, &dy, s, m, n);
+    assert_close(&ga, &gb, "accum_xt_dy");
+
+    let mut dxa = fill(s * m, 13);
+    let mut dxb = dxa.clone();
+    linalg::accum_dy_wt(Impl::Scalar, &mut dxa, &dy, &w, s, m, n);
+    linalg::accum_dy_wt(Impl::Blocked, &mut dxb, &dy, &w, s, m, n);
+    assert_close(&dxa, &dxb, "accum_dy_wt");
+}
+
+// ---- seam 3: tensor / KV slab indexing -------------------------------------
+
+#[test]
+fn tensor_slab_indexing_round_trips() {
+    let (a, b, c, d) = (2usize, 3usize, 4usize, 5usize);
+    let mut t = Tensor::zeros(&[a, b, c, d]);
+    for ia in 0..a {
+        for ib in 0..b {
+            for ic in 0..c {
+                for id in 0..d {
+                    let v = (((ia * b + ib) * c + ic) * d + id) as f32;
+                    t.set4(ia, ib, ic, id, v);
+                }
+            }
+        }
+    }
+    // idx4 is exactly the row-major flattening...
+    let (ia, ib, ic, id) = (1usize, 2usize, 3usize, 4usize);
+    assert_eq!(t.idx4(ia, ib, ic, id), ((ia * b + ib) * c + ic) * d + id);
+    // ...and get4/row4 read back what set4 wrote, at the slab edges too.
+    assert_eq!(t.get4(a - 1, b - 1, c - 1, d - 1), (a * b * c * d - 1) as f32);
+    let row = t.row4(1, 2, 3);
+    assert_eq!(row.len(), d);
+    assert_eq!(row[0], t.get4(1, 2, 3, 0));
+    assert_eq!(row[d - 1], t.get4(1, 2, 3, d - 1));
+}
+
+#[test]
+fn kv_cache_slab_writes_and_reads() {
+    let (layers, cap, dkv) = (2usize, 3usize, 4usize);
+    let mut kv = KvCache::new(layers, cap, dkv);
+    for step in 0..cap {
+        for l in 0..layers {
+            let k: Vec<f32> = (0..dkv).map(|i| (step * 10 + l + i) as f32).collect();
+            let v: Vec<f32> = k.iter().map(|x| -x).collect();
+            kv.write(l, &k, &v).unwrap();
+        }
+        kv.advance(1).unwrap();
+    }
+    assert_eq!(kv.len(), cap);
+    let (k0, v0) = kv.layer_upto(0, cap);
+    assert_eq!(k0.len(), cap * dkv);
+    assert_eq!(k0[(cap - 1) * dkv], ((cap - 1) * 10) as f32);
+    assert_eq!(v0[(cap - 1) * dkv], -(((cap - 1) * 10) as f32));
+    assert_eq!(kv.live_bytes(), 2 * layers * cap * dkv * 4);
+}
+
+#[test]
+fn session_table_protocol_under_miri() {
+    // The Busy-marker protocol with a real thread interleaving (Miri
+    // explores a few schedules and checks the Box<S> ownership handoff).
+    let tab = std::sync::Arc::new(SessionTable::new());
+    let id = tab.insert(vec![0u8; 8]);
+    let t = {
+        let tab = std::sync::Arc::clone(&tab);
+        std::thread::spawn(move || match tab.take(id) {
+            Ok(mut s) => {
+                s[0] = 1;
+                tab.put_back(id, s)
+            }
+            Err(TakeError::Busy) | Err(TakeError::Unknown) => false,
+        })
+    };
+    let closed = tab.close(id);
+    let _stepped = t.join().unwrap();
+    assert!(closed, "entry (ready or busy) must be removable exactly once");
+    assert!(tab.is_empty(), "no resurrection after close");
+}

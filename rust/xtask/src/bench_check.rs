@@ -1,0 +1,221 @@
+//! `xtask bench-check <fresh.json> <baseline.json> [--update]` — diff a
+//! freshly produced bench report against its committed `BENCH_*.json`
+//! baseline.
+//!
+//! What "no worse than the baseline" means for a report whose timings are
+//! measured on whatever machine CI happens to land on:
+//!
+//! * **Schema** — the key sets of every object must match, recursively.
+//!   A bench that silently drops a column (or grows one nobody reviewed)
+//!   fails the check, with `--update` as the explicit accept path.
+//! * **Identity fields** — strings (`variant`, `impl`, `family`, shape
+//!   labels) and *integer-valued* numbers (`hq`, `hkv`, `ctx`, `seq`,
+//!   measured/predicted KV bytes per step, grid sizes) must match the
+//!   baseline **exactly**: they are deterministic functions of the config
+//!   and buffer geometry, so any drift is a real behavior change — e.g. a
+//!   KV-cache accounting bug — not noise.
+//! * **Timings** — fractional numbers are machine-dependent; they are
+//!   only required to be finite. Perf regressions are enforced by the
+//!   benches' own `--smoke`/`--enforce` guards, not by this diff.
+//! * **Row grids** — arrays must keep their length and order (the benches
+//!   sweep deterministic `variant × ctx/seq` grids).
+
+use anyhow::{Context, Result};
+use sqa::util::json::Json;
+use std::path::Path;
+
+fn kind(v: &Json) -> &'static str {
+    match v {
+        Json::Null => "null",
+        Json::Bool(_) => "bool",
+        Json::Num(_) => "number",
+        Json::Str(_) => "string",
+        Json::Arr(_) => "array",
+        Json::Obj(_) => "object",
+    }
+}
+
+/// Identity numbers are integer-valued; timings carry fractions. (An f64
+/// keeps integers exact well past any head count or byte total we emit.)
+fn is_identity_num(x: f64) -> bool {
+    x.fract() == 0.0 && x.abs() < 9.0e15
+}
+
+fn diff(path: &str, fresh: &Json, base: &Json, out: &mut Vec<String>) {
+    match (fresh, base) {
+        (Json::Obj(f), Json::Obj(b)) => {
+            for k in b.keys() {
+                if !f.contains_key(k) {
+                    out.push(format!("{path}.{k}: key missing from the fresh report"));
+                }
+            }
+            for (k, fv) in f {
+                match b.get(k) {
+                    None => out.push(format!(
+                        "{path}.{k}: key not in the baseline (bench-check --update to accept)"
+                    )),
+                    Some(bv) => diff(&format!("{path}.{k}"), fv, bv, out),
+                }
+            }
+        }
+        (Json::Arr(f), Json::Arr(b)) => {
+            if f.len() != b.len() {
+                out.push(format!(
+                    "{path}: {} rows vs baseline {} (sweep grid changed? --update to accept)",
+                    f.len(),
+                    b.len()
+                ));
+            }
+            for (i, (fv, bv)) in f.iter().zip(b.iter()).enumerate() {
+                diff(&format!("{path}[{i}]"), fv, bv, out);
+            }
+        }
+        (Json::Str(f), Json::Str(b)) => {
+            if f != b {
+                out.push(format!("{path}: {f:?} != baseline {b:?}"));
+            }
+        }
+        (Json::Bool(f), Json::Bool(b)) => {
+            if f != b {
+                out.push(format!("{path}: {f} != baseline {b}"));
+            }
+        }
+        (Json::Num(f), Json::Num(b)) => {
+            if is_identity_num(*f) && is_identity_num(*b) {
+                if f != b {
+                    out.push(format!(
+                        "{path}: {f} != baseline {b} (integer-valued fields are identity, \
+                         not timing — this is a real change)"
+                    ));
+                }
+            } else if !f.is_finite() {
+                out.push(format!("{path}: non-finite measurement {f}"));
+            }
+        }
+        (Json::Null, Json::Null) => {}
+        _ => out.push(format!(
+            "{path}: type changed — fresh {} vs baseline {}",
+            kind(fresh),
+            kind(base)
+        )),
+    }
+}
+
+/// Returns the human-readable findings (empty = check passed).
+pub fn run(fresh_path: &Path, base_path: &Path, update: bool) -> Result<Vec<String>> {
+    let fresh_text = std::fs::read_to_string(fresh_path)
+        .with_context(|| format!("reading fresh report {}", fresh_path.display()))?;
+    let fresh = Json::parse(&fresh_text)
+        .with_context(|| format!("parsing {}", fresh_path.display()))?;
+    let name = fresh
+        .get("bench")
+        .and_then(Json::as_str)
+        .with_context(|| format!("{}: no top-level \"bench\" key", fresh_path.display()))?
+        .to_string();
+
+    if update {
+        // Reuse the schema gate: --update can only ever write valid reports.
+        sqa::util::bench::write_bench_json(base_path, &fresh)?;
+        println!("bench-check: baseline {} <- {} ({name})", base_path.display(), fresh_path.display());
+        return Ok(Vec::new());
+    }
+
+    let base_text = std::fs::read_to_string(base_path).with_context(|| {
+        format!(
+            "reading baseline {} (first run? seed it with bench-check --update)",
+            base_path.display()
+        )
+    })?;
+    let base = Json::parse(&base_text)
+        .with_context(|| format!("parsing {}", base_path.display()))?;
+    let mut out = Vec::new();
+    diff(&name, &fresh, &base, &mut out);
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(variant: &str, hkv: f64, bytes: f64, secs: f64) -> Json {
+        Json::obj(vec![
+            ("variant", Json::str(variant)),
+            ("hkv", Json::num(hkv)),
+            ("kv_bytes", Json::num(bytes)),
+            ("secs", Json::num(secs)),
+        ])
+    }
+
+    fn report(rows: Vec<Json>) -> Json {
+        Json::obj(vec![
+            ("bench", Json::str("unit")),
+            ("rows", Json::Arr(rows)),
+        ])
+    }
+
+    fn diffs(fresh: &Json, base: &Json) -> Vec<String> {
+        let mut out = Vec::new();
+        diff("unit", fresh, base, &mut out);
+        out
+    }
+
+    #[test]
+    fn identical_reports_pass() {
+        let a = report(vec![row("sqa", 4.0, 557_056.0, 0.012)]);
+        assert!(diffs(&a, &a).is_empty());
+    }
+
+    #[test]
+    fn timing_drift_is_ignored_but_identity_ints_are_exact() {
+        let base = report(vec![row("sqa", 4.0, 557_056.0, 0.012)]);
+        let timing_drift = report(vec![row("sqa", 4.0, 557_056.0, 3.7)]);
+        assert!(diffs(&timing_drift, &base).is_empty(), "timings are machine-dependent");
+        let cache_bug = report(vec![row("sqa", 4.0, 557_057.0, 0.012)]);
+        let d = diffs(&cache_bug, &base);
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert!(d[0].contains("kv_bytes"));
+    }
+
+    #[test]
+    fn schema_changes_are_findings() {
+        let base = report(vec![row("sqa", 4.0, 557_056.0, 0.012)]);
+        // Dropped column.
+        let narrow = report(vec![Json::obj(vec![
+            ("variant", Json::str("sqa")),
+            ("hkv", Json::num(4.0)),
+            ("secs", Json::num(0.011)),
+        ])]);
+        assert!(diffs(&narrow, &base).iter().any(|d| d.contains("kv_bytes")));
+        // New unreviewed key.
+        let wide = Json::obj(vec![
+            ("bench", Json::str("unit")),
+            ("rows", Json::Arr(vec![row("sqa", 4.0, 557_056.0, 0.012)])),
+            ("extra", Json::num(1.0)),
+        ]);
+        assert!(diffs(&wide, &base).iter().any(|d| d.contains("extra")));
+    }
+
+    #[test]
+    fn grid_and_identity_string_changes_are_findings() {
+        let base = report(vec![
+            row("gqa", 4.0, 557_056.0, 0.010),
+            row("sqa", 4.0, 557_056.0, 0.012),
+        ]);
+        let shrunk = report(vec![row("gqa", 4.0, 557_056.0, 0.010)]);
+        assert!(diffs(&shrunk, &base).iter().any(|d| d.contains("rows")));
+        let renamed = report(vec![
+            row("gqa", 4.0, 557_056.0, 0.010),
+            row("ssqa", 4.0, 557_056.0, 0.012),
+        ]);
+        assert!(diffs(&renamed, &base).iter().any(|d| d.contains("ssqa")));
+    }
+
+    #[test]
+    fn non_finite_timings_are_findings() {
+        let base = report(vec![row("sqa", 4.0, 557_056.0, 0.012)]);
+        let broken = report(vec![row("sqa", 4.0, 557_056.0, f64::NAN)]);
+        let d = diffs(&broken, &base);
+        assert_eq!(d.len(), 1);
+        assert!(d[0].contains("non-finite"));
+    }
+}

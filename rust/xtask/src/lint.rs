@@ -1,0 +1,413 @@
+//! The in-tree invariant linter (`cargo run -p xtask -- lint`).
+//!
+//! Four rules, each encoding an invariant the runtime's correctness
+//! tooling depends on (see `rust/README.md` § Correctness tooling):
+//!
+//! | rule             | invariant                                             |
+//! |------------------|-------------------------------------------------------|
+//! | `safety-comment` | every `unsafe` block/impl carries a `// SAFETY:` note |
+//! | `lock-unwrap`    | no `.lock().unwrap()` in server/coordinator/runtime — |
+//! |                  | use the poison-tolerant `util::sync::lock` helper     |
+//! | `kernel-clock`   | no `Instant::now`/`SystemTime` inside attention/linalg|
+//! |                  | kernels — timing belongs to the bench/driver layer    |
+//! | `bench-writer`   | benches persist JSON only via `write_bench_json`      |
+//!
+//! Rules match against the masked code view ([`crate::scan::mask`]), so
+//! prose in comments or strings never fires them. A finding on line *L*
+//! can be waived by putting `// lint: allow(<rule>)` on *L* or *L−1* —
+//! the marker is deliberately greppable so waivers stay auditable.
+
+use crate::scan::mask;
+use std::path::{Path, PathBuf};
+
+pub struct Finding {
+    pub rule: &'static str,
+    pub path: String,
+    /// 1-based.
+    pub line: usize,
+    pub msg: String,
+}
+
+impl std::fmt::Display for Finding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.path, self.line, self.rule, self.msg)
+    }
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// `// lint: allow(<rule>)` on the finding's line or the line above.
+fn allowed(orig_lines: &[&str], line0: usize, rule: &str) -> bool {
+    let marker = format!("lint: allow({rule})");
+    orig_lines.get(line0).is_some_and(|l| l.contains(&marker))
+        || (line0 > 0 && orig_lines[line0 - 1].contains(&marker))
+}
+
+/// 0-based lines where `needle` matches `code` with ALL whitespace in the
+/// haystack ignored — catches `.lock()\n.unwrap()` split across a method
+/// chain just like the single-line form.
+fn find_normalized(code: &str, needle: &str) -> Vec<usize> {
+    let chars: Vec<char> = code.chars().collect();
+    let nd: Vec<char> = needle.chars().collect();
+    let mut hits = Vec::new();
+    let mut line = 0usize;
+    for start in 0..chars.len() {
+        if chars[start] == '\n' {
+            line += 1;
+            continue;
+        }
+        if chars[start] != nd[0] {
+            continue;
+        }
+        let (mut i, mut k) = (start, 0usize);
+        while i < chars.len() && k < nd.len() {
+            if chars[i].is_whitespace() {
+                i += 1;
+            } else if chars[i] == nd[k] {
+                i += 1;
+                k += 1;
+            } else {
+                break;
+            }
+        }
+        if k == nd.len() {
+            hits.push(line);
+        }
+    }
+    hits
+}
+
+/// Word-boundary occurrences of `word` in one masked code line.
+fn has_word(line: &str, word: &str) -> bool {
+    let chars: Vec<char> = line.chars().collect();
+    let w: Vec<char> = word.chars().collect();
+    if chars.len() < w.len() {
+        return false;
+    }
+    for s in 0..=chars.len() - w.len() {
+        if chars[s..s + w.len()] == w[..]
+            && (s == 0 || !is_ident(chars[s - 1]))
+            && (s + w.len() == chars.len() || !is_ident(chars[s + w.len()]))
+        {
+            return true;
+        }
+    }
+    false
+}
+
+// ---- rule: safety-comment ----------------------------------------------
+
+/// Every `unsafe` keyword in code must be justified by a comment
+/// containing `SAFETY` on the same line, or in the contiguous block of
+/// comment/attribute lines immediately above (attributes like
+/// `#[allow(...)]` may sit between the justification and the `unsafe`).
+pub fn rule_safety_comment(path: &str, src: &str) -> Vec<Finding> {
+    let m = mask(src);
+    let code_lines: Vec<&str> = m.code.lines().collect();
+    let comment_lines: Vec<&str> = m.comments.lines().collect();
+    let orig_lines: Vec<&str> = src.lines().collect();
+    let mut out = Vec::new();
+    for (ln, cl) in code_lines.iter().enumerate() {
+        if !has_word(cl, "unsafe") || allowed(&orig_lines, ln, "safety-comment") {
+            continue;
+        }
+        let mut justified = comment_lines.get(ln).is_some_and(|l| l.contains("SAFETY"));
+        let mut j = ln;
+        while !justified && j > 0 {
+            j -= 1;
+            if comment_lines[j].contains("SAFETY") {
+                justified = true;
+                break;
+            }
+            let code = code_lines[j].trim();
+            // Walk through blank/comment-only lines and attributes; stop
+            // at the first real code line — the comment block has ended.
+            if !(code.is_empty() || code.starts_with("#[") || code.starts_with("#!") || code == ")]")
+            {
+                break;
+            }
+        }
+        if !justified {
+            out.push(Finding {
+                rule: "safety-comment",
+                path: path.to_string(),
+                line: ln + 1,
+                msg: "`unsafe` without a `// SAFETY:` justification above it".to_string(),
+            });
+        }
+    }
+    out
+}
+
+// ---- rule: lock-unwrap --------------------------------------------------
+
+/// Scope: the concurrent subsystems that must survive a panicking peer.
+pub fn lock_unwrap_scope(rel: &str) -> bool {
+    rel.starts_with("rust/src/server/")
+        || rel.starts_with("rust/src/coordinator/")
+        || rel.starts_with("rust/src/runtime/")
+        || rel == "rust/src/util/threadpool.rs"
+}
+
+pub fn rule_lock_unwrap(path: &str, src: &str) -> Vec<Finding> {
+    let m = mask(src);
+    let orig_lines: Vec<&str> = src.lines().collect();
+    find_normalized(&m.code, ".lock().unwrap()")
+        .into_iter()
+        .filter(|&ln| !allowed(&orig_lines, ln, "lock-unwrap"))
+        .map(|ln| Finding {
+            rule: "lock-unwrap",
+            path: path.to_string(),
+            line: ln + 1,
+            msg: "poison-panic propagation: use util::sync::lock (PoisonError::into_inner) \
+                  instead of .lock().unwrap()"
+                .to_string(),
+        })
+        .collect()
+}
+
+// ---- rule: kernel-clock -------------------------------------------------
+
+pub fn kernel_clock_scope(rel: &str) -> bool {
+    rel.starts_with("rust/src/attention") || rel.starts_with("rust/src/linalg")
+}
+
+pub fn rule_kernel_clock(path: &str, src: &str) -> Vec<Finding> {
+    let m = mask(src);
+    let orig_lines: Vec<&str> = src.lines().collect();
+    let mut out = Vec::new();
+    for needle in ["Instant::now", "SystemTime"] {
+        for ln in find_normalized(&m.code, needle) {
+            if allowed(&orig_lines, ln, "kernel-clock") {
+                continue;
+            }
+            out.push(Finding {
+                rule: "kernel-clock",
+                path: path.to_string(),
+                line: ln + 1,
+                msg: format!(
+                    "{needle} inside a kernel module — keep kernels clock-free; \
+                     time at the bench/driver layer (util::bench)"
+                ),
+            });
+        }
+    }
+    out
+}
+
+// ---- rule: bench-writer -------------------------------------------------
+
+pub fn bench_writer_scope(rel: &str) -> bool {
+    rel.starts_with("rust/benches/")
+}
+
+pub fn rule_bench_writer(path: &str, src: &str) -> Vec<Finding> {
+    let m = mask(src);
+    let orig_lines: Vec<&str> = src.lines().collect();
+    let mut out = Vec::new();
+    for needle in ["fs::write", "File::create"] {
+        for ln in find_normalized(&m.code, needle) {
+            if allowed(&orig_lines, ln, "bench-writer") {
+                continue;
+            }
+            out.push(Finding {
+                rule: "bench-writer",
+                path: path.to_string(),
+                line: ln + 1,
+                msg: format!(
+                    "{needle} in a bench — reports go through \
+                     util::bench::write_bench_json (schema'd, baseline-diffable)"
+                ),
+            });
+        }
+    }
+    out
+}
+
+// ---- driver --------------------------------------------------------------
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> anyhow::Result<()> {
+    if !dir.is_dir() {
+        return Ok(());
+    }
+    for entry in std::fs::read_dir(dir)? {
+        let path = entry?.path();
+        let name = path.file_name().unwrap_or_default().to_string_lossy().into_owned();
+        if name.starts_with('.') || name == "target" {
+            continue;
+        }
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if name.ends_with(".rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Lint every Rust source in the tree; returns `(files scanned, findings)`.
+pub fn run(root: &Path) -> anyhow::Result<(usize, Vec<Finding>)> {
+    let mut files = Vec::new();
+    for top in ["rust/src", "rust/benches", "rust/tests", "rust/xtask/src", "examples"] {
+        collect_rs(&root.join(top), &mut files)?;
+    }
+    files.sort();
+    let mut findings = Vec::new();
+    for file in &files {
+        let rel = file
+            .strip_prefix(root)
+            .unwrap_or(file)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let src = std::fs::read_to_string(file)
+            .map_err(|e| anyhow::anyhow!("reading {rel}: {e}"))?;
+        findings.extend(rule_safety_comment(&rel, &src));
+        if lock_unwrap_scope(&rel) {
+            findings.extend(rule_lock_unwrap(&rel, &src));
+        }
+        if kernel_clock_scope(&rel) {
+            findings.extend(rule_kernel_clock(&rel, &src));
+        }
+        if bench_writer_scope(&rel) {
+            findings.extend(rule_bench_writer(&rel, &src));
+        }
+    }
+    Ok((files.len(), findings))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // ---- safety-comment: must fire on a seeded violation ---------------
+
+    #[test]
+    fn safety_fires_on_bare_unsafe_block() {
+        let src = "pub fn f() -> *const u8 {\n    unsafe { std::ptr::null() }\n}\n";
+        let f = rule_safety_comment("x.rs", src);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].line, 2);
+    }
+
+    #[test]
+    fn safety_fires_on_undocumented_send_impl() {
+        // The shape of the original runtime/client.rs finding: a comment
+        // that asserts thread-safety without the SAFETY contract marker.
+        let src = "struct Inner;\n\
+                   // These raw pointers are fine to share across threads.\n\
+                   unsafe impl Send for Inner {}\n";
+        let f = rule_safety_comment("client.rs", src);
+        assert_eq!(f.len(), 1, "an explanation is not a SAFETY contract");
+        assert_eq!(f[0].line, 3);
+    }
+
+    #[test]
+    fn safety_accepts_contract_above_attributes() {
+        let src = "fn f(x: &[u8]) -> u8 {\n\
+                       // SAFETY: caller guarantees x is non-empty, so index\n\
+                       // 0 is in bounds.\n\
+                       #[allow(clippy::missing_transmute_annotations)]\n\
+                       unsafe { *x.get_unchecked(0) }\n\
+                   }\n";
+        assert!(rule_safety_comment("x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn safety_honors_trailing_and_allow_marker() {
+        let trailing = "let p = unsafe { q.add(1) }; // SAFETY: q has 2 elems\n";
+        assert!(rule_safety_comment("x.rs", trailing).is_empty());
+        let waived = "// lint: allow(safety-comment) — exercised by the miri suite\n\
+                      let p = unsafe { q.add(1) };\n";
+        assert!(rule_safety_comment("x.rs", waived).is_empty());
+    }
+
+    #[test]
+    fn safety_ignores_prose_and_identifiers() {
+        let src = "// unsafe is discussed here only.\n\
+                   let s = \"unsafe impl Send\";\n\
+                   #![deny(unsafe_code)]\n";
+        assert!(rule_safety_comment("x.rs", src).is_empty());
+    }
+
+    // ---- lock-unwrap ---------------------------------------------------
+
+    #[test]
+    fn lock_unwrap_fires_on_the_original_client_pattern() {
+        let src = "let exe = self.inner.exe_cache.lock().unwrap();\n";
+        let f = rule_lock_unwrap("client.rs", src);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].line, 1);
+    }
+
+    #[test]
+    fn lock_unwrap_fires_across_line_breaks() {
+        let src = "let g = state\n    .queue\n    .lock()\n    .unwrap();\n";
+        let f = rule_lock_unwrap("engine.rs", src);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].line, 3, "finding anchors at the .lock() line");
+    }
+
+    #[test]
+    fn lock_unwrap_ignores_the_poison_tolerant_helper_and_prose() {
+        let src = "// never .lock().unwrap() here\n\
+                   let g = m.lock().unwrap_or_else(std::sync::PoisonError::into_inner);\n";
+        assert!(rule_lock_unwrap("sync.rs", src).is_empty());
+    }
+
+    #[test]
+    fn lock_unwrap_scope_covers_the_concurrent_subsystems() {
+        assert!(lock_unwrap_scope("rust/src/runtime/client.rs"));
+        assert!(lock_unwrap_scope("rust/src/coordinator/engine.rs"));
+        assert!(lock_unwrap_scope("rust/src/server/mod.rs"));
+        assert!(lock_unwrap_scope("rust/src/util/threadpool.rs"));
+        assert!(!lock_unwrap_scope("rust/src/util/sync.rs"));
+        assert!(!lock_unwrap_scope("rust/tests/integration.rs"));
+    }
+
+    // ---- kernel-clock --------------------------------------------------
+
+    #[test]
+    fn kernel_clock_fires_on_seeded_timing() {
+        let src = "let t0 = std::time::Instant::now();\nlet w = SystemTime::now();\n";
+        let f = rule_kernel_clock("rust/src/linalg/mod.rs", src);
+        assert_eq!(f.len(), 2);
+    }
+
+    #[test]
+    fn kernel_clock_ignores_comments_and_scope_is_kernels_only() {
+        let src = "// Instant::now() would go here in a bench, not a kernel.\n";
+        assert!(rule_kernel_clock("rust/src/linalg/mod.rs", src).is_empty());
+        assert!(kernel_clock_scope("rust/src/attention/tiled.rs"));
+        assert!(kernel_clock_scope("rust/src/linalg/mod.rs"));
+        assert!(!kernel_clock_scope("rust/src/util/bench.rs"));
+        assert!(!kernel_clock_scope("rust/benches/native_attention.rs"));
+    }
+
+    // ---- bench-writer --------------------------------------------------
+
+    #[test]
+    fn bench_writer_fires_on_raw_fs_write() {
+        let src = "std::fs::write(path, doc.to_string()).expect(\"writing bench JSON\");\n";
+        let f = rule_bench_writer("rust/benches/decode_throughput.rs", src);
+        assert_eq!(f.len(), 1);
+    }
+
+    #[test]
+    fn bench_writer_accepts_the_shared_writer() {
+        let src = "sqa::util::bench::write_bench_json(path, &doc).expect(\"writing bench JSON\");\n";
+        assert!(rule_bench_writer("rust/benches/decode_throughput.rs", src).is_empty());
+    }
+
+    // ---- the tree itself is the fifth fixture --------------------------
+
+    #[test]
+    fn repo_is_lint_clean() {
+        let root = crate::repo_root().expect("repo root");
+        let (files, findings) = run(&root).expect("lint run");
+        assert!(files > 30, "expected to scan the whole tree, saw {files} files");
+        let report: Vec<String> = findings.iter().map(|f| f.to_string()).collect();
+        assert!(findings.is_empty(), "lint findings:\n{}", report.join("\n"));
+    }
+}

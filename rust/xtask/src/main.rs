@@ -1,0 +1,99 @@
+//! `cargo run -p xtask -- <command>` — repo automation, cargo-xtask style.
+//!
+//! Commands:
+//!   lint                      run the in-tree invariant linter (exit 1 on
+//!                             findings); see src/lint.rs for the rules
+//!   bench-check F B           diff fresh bench report F against committed
+//!                             baseline B (exit 1 on findings)
+//!   bench-check F B --update  accept F as the new baseline B
+//!
+//! Both commands locate the repo root by walking up from this crate's
+//! manifest (or the cwd) to the directory holding `rust/src/lib.rs`, so
+//! they work from any working directory inside the checkout.
+
+mod bench_check;
+mod lint;
+mod scan;
+
+use anyhow::{bail, Result};
+use std::path::{Path, PathBuf};
+
+const USAGE: &str = "usage: cargo run -p xtask -- <command>\n\
+    \n\
+    commands:\n\
+    \x20 lint                                  invariant linter over the Rust tree\n\
+    \x20 bench-check <fresh> <baseline>        diff a bench report against its baseline\n\
+    \x20 bench-check <fresh> <baseline> --update   accept the fresh report as baseline\n";
+
+pub fn repo_root() -> Result<PathBuf> {
+    let base = std::env::var_os("CARGO_MANIFEST_DIR")
+        .map(PathBuf::from)
+        .map_or_else(std::env::current_dir, Ok)?;
+    for dir in base.ancestors() {
+        if dir.join("rust").join("src").join("lib.rs").is_file() {
+            return Ok(dir.to_path_buf());
+        }
+    }
+    bail!("no repo root (rust/src/lib.rs) at or above {}", base.display())
+}
+
+fn cmd_lint() -> Result<i32> {
+    let root = repo_root()?;
+    let (files, findings) = lint::run(&root)?;
+    for f in &findings {
+        println!("{f}");
+    }
+    if findings.is_empty() {
+        println!("lint: {files} files clean (safety-comment, lock-unwrap, kernel-clock, bench-writer)");
+        Ok(0)
+    } else {
+        println!("lint: {} finding(s) across {files} files", findings.len());
+        Ok(1)
+    }
+}
+
+fn cmd_bench_check(args: &[String]) -> Result<i32> {
+    let mut update = false;
+    let mut paths: Vec<&str> = Vec::new();
+    for a in args {
+        if a == "--update" {
+            update = true;
+        } else {
+            paths.push(a);
+        }
+    }
+    if paths.len() != 2 {
+        bail!("bench-check needs <fresh.json> <baseline.json> [--update]\n\n{USAGE}");
+    }
+    let (fresh, baseline) = (paths[0], paths[1]);
+    let findings = bench_check::run(Path::new(fresh), Path::new(baseline), update)?;
+    for f in &findings {
+        println!("bench-check: {f}");
+    }
+    if findings.is_empty() {
+        if !update {
+            println!("bench-check: {fresh} matches baseline {baseline}");
+        }
+        Ok(0)
+    } else {
+        println!("bench-check: {} finding(s); --update accepts the fresh report", findings.len());
+        Ok(1)
+    }
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let result = match args.first().map(String::as_str) {
+        Some("lint") => cmd_lint(),
+        Some("bench-check") => cmd_bench_check(&args[1..]),
+        Some(other) => Err(anyhow::anyhow!("unknown command {other:?}\n\n{USAGE}")),
+        None => Err(anyhow::anyhow!("missing command\n\n{USAGE}")),
+    };
+    match result {
+        Ok(code) => std::process::exit(code),
+        Err(e) => {
+            eprintln!("xtask: {e:#}");
+            std::process::exit(2);
+        }
+    }
+}

@@ -1,0 +1,271 @@
+//! Lossless source masking for the invariant linter.
+//!
+//! Splits a Rust source file into two same-shape views (one output char
+//! per input char, newlines preserved, so line/column structure survives):
+//!
+//! * `code`     — comments and string/char-literal *contents* blanked to
+//!   spaces; everything else verbatim. Rules that must not fire on prose
+//!   (`.lock().unwrap()` in a doc comment, "unsafe" in a test string)
+//!   match against this view.
+//! * `comments` — the inverse: only comment text survives. The
+//!   `// SAFETY:` rule reads this view so a `SAFETY` inside a string
+//!   cannot justify an unsafe block.
+//!
+//! The tokenizer is deliberately hand-rolled (no `syn` — the offline
+//! build image has no crates registry) and handles the constructs that
+//! actually occur in this tree: line and nested block comments, plain and
+//! byte strings with escapes, raw strings `r#"…"#` / `br#"…"#`, char and
+//! byte-char literals, and the char-vs-lifetime ambiguity (`'x'` vs
+//! `'env`).
+
+pub struct Masked {
+    pub code: String,
+    pub comments: String,
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// For a `'` at index `q`: `Some(end)` (one past the closing quote) if it
+/// opens a char/byte-char literal, `None` if it starts a lifetime/label.
+fn char_literal_end(chars: &[char], q: usize) -> Option<usize> {
+    let mut j = q + 1;
+    match chars.get(j)? {
+        '\\' => {
+            j += 1;
+            if chars.get(j) == Some(&'u') && chars.get(j + 1) == Some(&'{') {
+                j += 2;
+                while chars.get(j).is_some_and(|c| *c != '}') {
+                    j += 1;
+                }
+            }
+            j += 1;
+        }
+        '\'' => return None, // `''` opens nothing
+        _ => j += 1,
+    }
+    (chars.get(j) == Some(&'\'')).then_some(j + 1)
+}
+
+pub fn mask(src: &str) -> Masked {
+    let chars: Vec<char> = src.chars().collect();
+    let n = chars.len();
+    let mut code: Vec<char> = Vec::with_capacity(n);
+    let mut comments: Vec<char> = Vec::with_capacity(n);
+    // Pushes one masked char into both views, preserving newlines.
+    let blank = |c: char, keep_in: &mut Vec<char>, other: &mut Vec<char>| {
+        if c == '\n' {
+            keep_in.push('\n');
+            other.push('\n');
+        } else {
+            keep_in.push(c);
+            other.push(' ');
+        }
+    };
+
+    let mut i = 0;
+    // Whether the previous code char can end an identifier — gates the
+    // raw-string/byte prefixes so `bar"` in (invalid) code or `let r = 1`
+    // never misparse.
+    let mut prev_ident = false;
+    while i < n {
+        let c = chars[i];
+
+        // ---- line comment (incl. `///`, `//!`) --------------------------
+        if c == '/' && chars.get(i + 1) == Some(&'/') {
+            while i < n && chars[i] != '\n' {
+                blank(chars[i], &mut comments, &mut code);
+                i += 1;
+            }
+            prev_ident = false;
+            continue;
+        }
+
+        // ---- block comment, nested --------------------------------------
+        if c == '/' && chars.get(i + 1) == Some(&'*') {
+            let mut depth = 0usize;
+            while i < n {
+                if chars[i] == '/' && chars.get(i + 1) == Some(&'*') {
+                    depth += 1;
+                    blank(chars[i], &mut comments, &mut code);
+                    blank(chars[i + 1], &mut comments, &mut code);
+                    i += 2;
+                } else if chars[i] == '*' && chars.get(i + 1) == Some(&'/') {
+                    depth -= 1;
+                    blank(chars[i], &mut comments, &mut code);
+                    blank(chars[i + 1], &mut comments, &mut code);
+                    i += 2;
+                    if depth == 0 {
+                        break;
+                    }
+                } else {
+                    blank(chars[i], &mut comments, &mut code);
+                    i += 1;
+                }
+            }
+            prev_ident = false;
+            continue;
+        }
+
+        // ---- raw (byte) string: r"…", r#"…"#, br#"…"# -------------------
+        if !prev_ident && (c == 'r' || (c == 'b' && chars.get(i + 1) == Some(&'r'))) {
+            let mut j = i + if c == 'b' { 2 } else { 1 };
+            let mut hashes = 0usize;
+            while chars.get(j) == Some(&'#') {
+                hashes += 1;
+                j += 1;
+            }
+            if chars.get(j) == Some(&'"') {
+                for &pc in &chars[i..=j] {
+                    code.push(pc);
+                    comments.push(' ');
+                }
+                i = j + 1;
+                while i < n {
+                    if chars[i] == '"'
+                        && (0..hashes).all(|h| chars.get(i + 1 + h) == Some(&'#'))
+                    {
+                        code.push('"');
+                        comments.push(' ');
+                        for _ in 0..hashes {
+                            code.push('#');
+                            comments.push(' ');
+                        }
+                        i += 1 + hashes;
+                        break;
+                    }
+                    blank(if chars[i] == '\n' { '\n' } else { ' ' }, &mut code, &mut comments);
+                    i += 1;
+                }
+                prev_ident = false;
+                continue;
+            }
+            // `r`/`br` not followed by a string: plain identifier chars.
+        }
+
+        // ---- plain / byte string ----------------------------------------
+        if c == '"' || (!prev_ident && c == 'b' && chars.get(i + 1) == Some(&'"')) {
+            if c == 'b' {
+                code.push('b');
+                comments.push(' ');
+                i += 1;
+            }
+            code.push('"');
+            comments.push(' ');
+            i += 1;
+            while i < n {
+                match chars[i] {
+                    '\\' => {
+                        blank(' ', &mut code, &mut comments);
+                        i += 1;
+                        if i < n {
+                            blank(if chars[i] == '\n' { '\n' } else { ' ' }, &mut code, &mut comments);
+                            i += 1;
+                        }
+                    }
+                    '"' => {
+                        code.push('"');
+                        comments.push(' ');
+                        i += 1;
+                        break;
+                    }
+                    ch => {
+                        blank(if ch == '\n' { '\n' } else { ' ' }, &mut code, &mut comments);
+                        i += 1;
+                    }
+                }
+            }
+            prev_ident = false;
+            continue;
+        }
+
+        // ---- char / byte-char literal (vs lifetime) ---------------------
+        if c == '\'' || (!prev_ident && c == 'b' && chars.get(i + 1) == Some(&'\'')) {
+            let q = if c == 'b' { i + 1 } else { i };
+            if let Some(end) = char_literal_end(&chars, q) {
+                for (k, &pc) in chars[i..end].iter().enumerate() {
+                    // Keep the delimiters (and `b` prefix), blank contents.
+                    if i + k <= q || i + k == end - 1 {
+                        code.push(pc);
+                        comments.push(' ');
+                    } else {
+                        blank(if pc == '\n' { '\n' } else { ' ' }, &mut code, &mut comments);
+                    }
+                }
+                i = end;
+                prev_ident = false;
+                continue;
+            }
+            // Lifetime or label: falls through as ordinary code.
+        }
+
+        // ---- ordinary code ----------------------------------------------
+        blank(c, &mut code, &mut comments);
+        prev_ident = is_ident(c);
+        i += 1;
+    }
+
+    Masked {
+        code: code.into_iter().collect(),
+        comments: comments.into_iter().collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn views_keep_line_structure() {
+        let src = "let a = 1; // trailing\n/* block\n spans */ let b = \"s\ntr\";\n";
+        let m = mask(src);
+        assert_eq!(m.code.lines().count(), src.lines().count());
+        assert_eq!(m.comments.lines().count(), src.lines().count());
+    }
+
+    #[test]
+    fn comments_are_blanked_from_code() {
+        let src = "x(); // calls .lock().unwrap() conceptually\n/* unsafe here too */ y();\n";
+        let m = mask(src);
+        assert!(!m.code.contains("unwrap"));
+        assert!(!m.code.contains("unsafe"));
+        assert!(m.code.contains("x();") && m.code.contains("y();"));
+        assert!(m.comments.contains("unsafe here too"));
+    }
+
+    #[test]
+    fn string_contents_are_blanked_from_both_views() {
+        let src = "let s = \"unsafe impl\"; let r = r#\".lock().unwrap()\"#; let c = 'u';\n";
+        let m = mask(src);
+        assert!(!m.code.contains("unsafe"));
+        assert!(!m.code.contains(".lock()"));
+        assert!(!m.comments.contains("unsafe"));
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        let src = "fn f<'env>(x: &'env str) -> &'static str { x }\n";
+        let m = mask(src);
+        // If `'env` were eaten as a char literal the rest of the line
+        // would be blanked — `'static` must survive in the code view.
+        assert!(m.code.contains("'static str"));
+    }
+
+    #[test]
+    fn nested_block_comments_close_correctly() {
+        let src = "/* outer /* inner */ still comment */ code();\n";
+        let m = mask(src);
+        assert!(m.code.contains("code();"));
+        assert!(!m.code.contains("still"));
+        assert!(m.comments.contains("still comment"));
+    }
+
+    #[test]
+    fn escaped_quotes_do_not_end_strings() {
+        let src = "let s = \"a\\\"b.lock().unwrap()\"; done();\n";
+        let m = mask(src);
+        assert!(!m.code.contains("unwrap"));
+        assert!(m.code.contains("done();"));
+    }
+}
