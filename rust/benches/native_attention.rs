@@ -10,7 +10,10 @@
 //!      the perf trajectory recorded in BENCH_attention.json.
 //!
 //! Plus a fixed-shape raw-GEMM comparison (dense_sm LM-head shape,
-//! 128×256 @ 256×4096) of `linalg` blocked vs scalar.
+//! 128×256 @ 256×4096) of `linalg` blocked vs scalar, and a block-sparse
+//! mask-pattern sweep: exact visited-key-tile counts per pattern (the
+//! sub-quadratic §3.2-style claim, integers exact-matched by bench-check)
+//! plus tiled-vs-naive wall clock under each pattern.
 //!
 //! Flags (after `--`):
 //!   --seqs 512,4096       kernel sweep points          (default 1024,4096)
@@ -18,6 +21,11 @@
 //!   --e2e-seqs 4096,16384 e2e fwd sweep points         (default 4096,16384;
 //!                         "none" skips the e2e sweep)
 //!   --e2e-variant V       e2e fwd variant              (default sqa)
+//!   --pattern-seqs S,...  visited-tile count sweep points (default
+//!                         4096,32768; "none" skips — pure mask geometry,
+//!                         no FLOPs, so long S is cheap here)
+//!   --pattern-bench-seq N pattern throughput point     (default 4096;
+//!                         0 skips)
 //!   --json FILE           comparison JSON              (default
 //!                         BENCH_attention.json at the repo root, so the
 //!                         perf trajectory persists across PRs)
@@ -25,12 +33,17 @@
 //!                         swept S >= N (the CI smoke guard uses 4096)
 //!   --enforce-linalg      exit(1) if the blocked GEMM loses to the scalar
 //!                         loops at the fixed dense_sm shape
+//!   --enforce-sparse N    exit(1) if any sparse pattern visits >= the
+//!                         dense tile count at a swept S >= N, or tiled
+//!                         loses to naive under any pattern
 //!   --quick               fewer reps
 //!
 //! CI runs: `cargo bench --bench native_attention -- --seqs 1024,4096
-//! --quick --enforce 4096 --enforce-linalg --e2e-seqs 1024`
+//! --quick --enforce 4096 --enforce-linalg --e2e-seqs 1024
+//! --pattern-seqs 4096,32768 --pattern-bench-seq 4096 --enforce-sparse 4096`
 
-use sqa::attention::{attention_with, tensor::Tensor, Kernel, Spec};
+use sqa::attention::tiled::{visited_key_tiles, DEFAULT_TILE};
+use sqa::attention::{attention_with, tensor::Tensor, Kernel, MaskPattern, Spec};
 use sqa::bench_harness::{
     forward_impl_table, impl_cells_to_json, kernel_cells_to_json, kernel_table,
 };
@@ -52,9 +65,12 @@ struct Flags {
     zoo_seq: usize,
     e2e_seqs: Vec<usize>,
     e2e_variant: String,
+    pattern_seqs: Vec<usize>,
+    pattern_bench_seq: usize,
     json: Option<String>,
     enforce: Option<usize>,
     enforce_linalg: bool,
+    enforce_sparse: Option<usize>,
     quick: bool,
 }
 
@@ -67,9 +83,12 @@ fn parse_flags() -> Flags {
             .unwrap_or(1024),
         e2e_seqs: vec![4096, 16384],
         e2e_variant: "sqa".to_string(),
+        pattern_seqs: vec![4096, 32768],
+        pattern_bench_seq: 4096,
         json: Some("BENCH_attention.json".to_string()),
         enforce: None,
         enforce_linalg: false,
+        enforce_sparse: None,
         quick: false,
     };
     let parse_list = |v: &str| -> Vec<usize> {
@@ -100,6 +119,14 @@ fn parse_flags() -> Flags {
                 f.e2e_variant = v;
                 i += 2;
             }
+            ("--pattern-seqs", Some(v)) => {
+                f.pattern_seqs = parse_list(&v); // "none" -> empty -> skip
+                i += 2;
+            }
+            ("--pattern-bench-seq", Some(v)) => {
+                f.pattern_bench_seq = v.parse().expect("--pattern-bench-seq");
+                i += 2;
+            }
             ("--json", Some(v)) => {
                 f.json = Some(v);
                 i += 2;
@@ -111,6 +138,10 @@ fn parse_flags() -> Flags {
             ("--enforce-linalg", _) => {
                 f.enforce_linalg = true;
                 i += 1;
+            }
+            ("--enforce-sparse", Some(v)) => {
+                f.enforce_sparse = Some(v.parse().expect("--enforce-sparse"));
+                i += 2;
             }
             ("--quick", _) => {
                 f.quick = true;
@@ -259,6 +290,123 @@ fn main() {
     let gemm_speedup = gemm_secs[1] / gemm_secs[0];
     println!("blocked {:.4}s vs scalar {:.4}s -> {gemm_speedup:.2}x", gemm_secs[0], gemm_secs[1]);
 
+    // ---- 5. block-sparse patterns: exact visited-key-tile counts --------
+    // Pure mask geometry, no FLOPs: the sub-quadratic claim for sparse
+    // patterns is that the tiled kernel's visited-tile count falls from
+    // Θ((S/T)²) to o((S/T)²). Counted with `visited_key_tiles` — the same
+    // iterator the kernel streams with — so the integers are exactly
+    // reproducible and bench-check diffs them without a tolerance. The
+    // pattern parameters are sized for 64×64 tiles: a tile pair spans a
+    // diagonal range of width q_tile + k_tile - 1 = 127, so windows and
+    // strides must be comfortably larger to prune whole tiles.
+    let patterns: &[&str] = &[
+        "dense",
+        "window:1024",
+        "strided:1024",
+        "dilated:8:512",
+        "sink:64:1024",
+    ];
+    let tile = DEFAULT_TILE;
+    // (pattern, seq, visited, dense) rows for JSON + the sparse guard.
+    let mut pattern_counts: Vec<(String, usize, usize, usize)> = Vec::new();
+    if !flags.pattern_seqs.is_empty() {
+        println!("\n## Sparse-pattern visited key tiles (causal, {tile}x{tile} tiles)\n");
+        let count = |p: &str, s: usize| -> usize {
+            let spec =
+                Spec::causal(8, 4).with_pattern(MaskPattern::parse(p).expect("pattern"));
+            let mut total = 0usize;
+            let mut i0 = 0;
+            while i0 < s {
+                let i1 = (i0 + tile).min(s);
+                total += visited_key_tiles(i0, i1, s, spec, tile).len();
+                i0 = i1;
+            }
+            total
+        };
+        let mut rows = Vec::new();
+        for &s in &flags.pattern_seqs {
+            let dense_tiles = count("dense", s);
+            for p in patterns {
+                let visited = count(p, s);
+                pattern_counts.push((p.to_string(), s, visited, dense_tiles));
+                rows.push(vec![
+                    p.to_string(),
+                    s.to_string(),
+                    visited.to_string(),
+                    dense_tiles.to_string(),
+                    format!("{:.4}", visited as f64 / dense_tiles as f64),
+                ]);
+            }
+        }
+        println!(
+            "{}",
+            markdown_table(
+                &[
+                    "Pattern".into(),
+                    "S".into(),
+                    "visited".into(),
+                    "dense".into(),
+                    "ratio".into()
+                ],
+                &rows
+            )
+        );
+    }
+
+    // ---- 6. pattern throughput: tiled tile-skipping vs naive masking ----
+    // (pattern, tiled_secs, naive_secs) at the one throughput point.
+    let mut pattern_times: Vec<(String, f64, f64)> = Vec::new();
+    let pattern_tp_seq = flags.pattern_bench_seq;
+    if pattern_tp_seq > 0 {
+        let s = pattern_tp_seq;
+        let (hq, hkv) = (4usize, 2usize);
+        let mut rng = Pcg64::new(23);
+        let q = randn(&[1, hq, s, d], &mut rng);
+        let k = randn(&[1, hkv, s, d], &mut rng);
+        let v = randn(&[1, hkv, s, d], &mut rng);
+        let tp_bench = if flags.quick {
+            Bench {
+                warmup: 0,
+                ..Bench::quick()
+            }
+        } else {
+            Bench::quick()
+        };
+        println!("\n## Sparse-pattern throughput at S={s} (tiled skips tiles, naive masks)\n");
+        let mut rows = Vec::new();
+        for p in patterns {
+            let spec =
+                Spec::causal(hq, hkv).with_pattern(MaskPattern::parse(p).expect("pattern"));
+            let tiled = tp_bench.run(&format!("tiled@{p}"), Some(s as f64), || {
+                let out = attention_with(&q, &k, &v, spec, Kernel::Tiled).unwrap();
+                assert!(out.data[0].is_finite());
+            });
+            let naive = tp_bench.run(&format!("naive@{p}"), Some(s as f64), || {
+                let out = attention_with(&q, &k, &v, spec, Kernel::Naive).unwrap();
+                assert!(out.data[0].is_finite());
+            });
+            pattern_times.push((p.to_string(), tiled.mean(), naive.mean()));
+            rows.push(vec![
+                p.to_string(),
+                format!("{:.4}", tiled.mean()),
+                format!("{:.4}", naive.mean()),
+                format!("{:.0}", s as f64 / tiled.mean()),
+            ]);
+        }
+        println!(
+            "{}",
+            markdown_table(
+                &[
+                    "Pattern".into(),
+                    "tiled (s)".into(),
+                    "naive (s)".into(),
+                    "tiled tok/s".into()
+                ],
+                &rows
+            )
+        );
+    }
+
     // ---- JSON + regression guards ---------------------------------------
     if let Some(path) = &flags.json {
         let doc = Json::obj(vec![
@@ -266,6 +414,30 @@ fn main() {
             ("kernel_sweep", kernel_cells_to_json(&cells)),
             ("variant_zoo", Json::arr(zoo_json)),
             ("e2e_forward", impl_cells_to_json(&e2e_cells)),
+            (
+                "pattern_tiles",
+                Json::arr(pattern_counts.iter().map(|(p, s, visited, dense)| {
+                    Json::obj(vec![
+                        ("pattern", Json::str(p.as_str())),
+                        ("seq", Json::num(*s as f64)),
+                        ("visited_tiles", Json::num(*visited as f64)),
+                        ("dense_tiles", Json::num(*dense as f64)),
+                        ("ratio", Json::num(*visited as f64 / *dense as f64)),
+                    ])
+                })),
+            ),
+            (
+                "pattern_throughput",
+                Json::arr(pattern_times.iter().map(|(p, tiled, naive)| {
+                    Json::obj(vec![
+                        ("pattern", Json::str(p.as_str())),
+                        ("seq", Json::num(pattern_tp_seq as f64)),
+                        ("tiled_secs", Json::num(*tiled)),
+                        ("naive_secs", Json::num(*naive)),
+                        ("tokens_per_s", Json::num(pattern_tp_seq as f64 / *tiled)),
+                    ])
+                })),
+            ),
             (
                 "linalg_guard",
                 Json::obj(vec![
@@ -317,5 +489,50 @@ fn main() {
     }
     if flags.enforce_linalg {
         println!("linalg guard OK: blocked >= scalar at the dense_sm shape ({gemm_speedup:.2}x)");
+    }
+    if let Some(min_seq) = flags.enforce_sparse {
+        // Sparse patterns must actually prune: every non-dense pattern's
+        // visited-tile count must be strictly below dense at each swept
+        // S >= N, and tiled must not lose to naive under any pattern at
+        // the throughput point (tile skipping has to pay for its own
+        // bookkeeping). Same vacuity rule as --enforce: a sweep that never
+        // reaches the threshold measured nothing.
+        let enforced: Vec<_> = pattern_counts
+            .iter()
+            .filter(|(p, s, _, _)| p != "dense" && *s >= min_seq)
+            .collect();
+        if enforced.is_empty() {
+            eprintln!(
+                "GUARD MISCONFIGURED: no sparse pattern swept at S >= {min_seq} (swept {:?})",
+                flags.pattern_seqs
+            );
+            std::process::exit(1);
+        }
+        let mut failed = false;
+        for (p, s, visited, dense_tiles) in enforced {
+            if visited >= dense_tiles {
+                eprintln!(
+                    "REGRESSION: pattern {p} visits {visited} tiles >= dense {dense_tiles} at S={s}"
+                );
+                failed = true;
+            }
+        }
+        for (p, tiled_secs, naive_secs) in &pattern_times {
+            // 5% grace absorbs timer noise on shared CI runners.
+            if *tiled_secs > naive_secs * 1.05 {
+                eprintln!(
+                    "REGRESSION: tiled@{p} {tiled_secs:.4}s slower than naive@{p} \
+                     {naive_secs:.4}s at S={pattern_tp_seq}"
+                );
+                failed = true;
+            }
+        }
+        if failed {
+            std::process::exit(1);
+        }
+        println!(
+            "sparse-pattern guard OK: sub-dense visited tiles at S >= {min_seq}, \
+             tiled >= naive under every pattern"
+        );
     }
 }

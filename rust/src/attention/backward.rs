@@ -42,7 +42,7 @@
 //! finite-difference checks pin both against the loss itself.
 
 use super::tiled::{self, tile_visible_range, TileConfig};
-use super::{visible_range, Spec};
+use super::{visible_range, ResolvedMask, Spec};
 use crate::linalg;
 use crate::util::threadpool::ThreadPool;
 use std::sync::mpsc;
@@ -116,7 +116,7 @@ pub fn forward_slabs_lse(
                     h * d,
                     s,
                     d,
-                    spec,
+                    spec.for_head(h),
                     cfg,
                     scale,
                     Some(&mut lse[h * s..(h + 1) * s]),
@@ -169,6 +169,10 @@ fn backward_qtile(
     if k_hi <= k_lo {
         return None;
     }
+    // Callers hand us a concrete (for_head-resolved) spec; one registry
+    // lookup here, then lock-free visibility queries per element.
+    let rm = spec.resolved();
+    let dense = rm.is_dense();
     let k_tile = cfg.k_tile;
     // Δ_i = dO_i · O_i — the softmax-Jacobian row term. Mathematically
     // Σ_j P_ij dP_ij, but computable from the forward's output without
@@ -199,6 +203,12 @@ fn backward_qtile(
         let j0 = (jt * k_tile).max(k_lo);
         let j1 = ((jt + 1) * k_tile).min(k_hi);
         let tk = j1 - j0;
+        // Pattern-invisible key tiles contribute nothing to any gradient:
+        // skip them like the forward does. The dK/dV buffers stay sized to
+        // the [k_lo, k_hi) union, so skipped tiles simply remain zero.
+        if !dense && !rm.tile_visible(i0, i1, j0, j1) {
+            continue;
+        }
         // 1. Score block recompute: scale·Q Kᵀ, one micro-GEMM.
         linalg::score_block(
             cfg.linalg, q, dq_cols, h * d, i0, tq, k, dkv_cols, hk * d, j0, tk, d, scale,
@@ -230,9 +240,13 @@ fn backward_qtile(
             for jj in 0..tk {
                 let j = j0 + jj;
                 let sc = srow[jj];
-                // Masked, out-of-window, or non-finite scores carry weight
-                // exactly 0 (matching the forward's per-key masking).
-                let p = if (jlo..jhi).contains(&j) && sc.is_finite() {
+                // Masked, out-of-window, pattern-invisible, or non-finite
+                // scores carry weight exactly 0 (matching the forward's
+                // per-key masking).
+                let p = if (jlo..jhi).contains(&j)
+                    && sc.is_finite()
+                    && (dense || rm.pattern_visible(i, j))
+                {
                     (sc - l).exp()
                 } else {
                     0.0
@@ -331,7 +345,7 @@ pub fn backward_tiled_slabs(
                 dkv_cols,
                 i0,
                 i1,
-                spec,
+                spec.for_head(h),
                 cfg,
                 scale,
             )
@@ -388,6 +402,11 @@ pub fn backward_tiled_slabs(
 /// identical summation order to the naive oracle's) — the row primitive of
 /// the scalar paths: the naive forward in `runtime::native::attend_slabs`
 /// and the [`backward_naive_slabs`] oracle below.
+///
+/// `rm` is the row's (for_head-resolved) visibility rule: pattern-invisible
+/// keys are masked to `-inf` before the max, exactly like the
+/// [`super::attention`] oracle, and a row with no surviving key yields all
+/// zeros — never `exp(-inf − -inf) = NaN`.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn attn_probs(
     q: &[f32],
@@ -402,12 +421,17 @@ pub(crate) fn attn_probs(
     scale: f32,
     lo: usize,
     hi: usize,
+    rm: &ResolvedMask,
     probs: &mut [f32],
 ) {
     let qi = &q[i * dq_cols + h * dh..][..dh];
     let mut maxv = f32::NEG_INFINITY;
     debug_assert!(hi <= s && lo < hi);
     for j in lo..hi {
+        if !rm.pattern_visible(i, j) {
+            probs[j - lo] = f32::NEG_INFINITY;
+            continue;
+        }
         let kj = &k[j * dkv_cols + hk * dh..][..dh];
         let mut acc = 0.0f32;
         for (a, b) in qi.iter().zip(kj) {
@@ -419,8 +443,15 @@ pub(crate) fn attn_probs(
     }
     let mut denom = 0.0f32;
     for p in probs[..hi - lo].iter_mut() {
-        *p = (*p - maxv).exp();
-        denom += *p;
+        if p.is_finite() {
+            *p = (*p - maxv).exp();
+            denom += *p;
+        } else {
+            // Pattern-masked (-inf) and overflowed (±inf/NaN) scores carry
+            // weight 0; a +inf score still drives `denom` computation to a
+            // zero row below because every finite exp(sc - inf) underflows.
+            *p = 0.0;
+        }
     }
     let inv = if denom > 0.0 { 1.0 / denom } else { 0.0 };
     for p in probs[..hi - lo].iter_mut() {
@@ -459,9 +490,10 @@ pub fn backward_naive_slabs(
     let mut dp = vec![0.0f32; s];
     for h in 0..hq {
         let hk = h / group;
+        let rm = spec.for_head(h).resolved();
         for i in 0..s {
             let (lo, hi) = visible_range(i, s, spec);
-            attn_probs(q, k, i, h, hk, s, d, dq_cols, dkv_cols, scale, lo, hi, &mut probs);
+            attn_probs(q, k, i, h, hk, s, d, dq_cols, dkv_cols, scale, lo, hi, &rm, &mut probs);
             let doi = &dout[i * dq_cols + h * d..][..d];
             let mut sum_pd = 0.0f32;
             for j in lo..hi {
@@ -525,10 +557,8 @@ mod tests {
         let (hq, hkv, s, d) = (2usize, 1usize, 13usize, 4usize);
         let (q, k, v, _) = slabs(hq, hkv, s, d, 50);
         let spec = Spec {
-            hq,
-            hkv,
-            causal: true,
             window: Some(5),
+            ..Spec::causal(hq, hkv)
         };
         let scale = 1.0 / (d as f32).sqrt();
         let cfg = TileConfig::new(4, 4).unwrap();
@@ -614,5 +644,72 @@ mod tests {
             (dq, dk, dv)
         };
         assert_eq!(run(None), run(Some(&pool)));
+    }
+
+    /// Sparse patterns run the same streaming-vs-scalar agreement (the
+    /// exhaustive grid lives in rust/tests/grad_differential.rs).
+    #[test]
+    fn tiled_backward_matches_naive_oracle_under_sparse_patterns() {
+        use crate::attention::MaskPattern;
+        let (hq, hkv, s, d) = (4usize, 2usize, 21usize, 4usize);
+        let (q, k, v, dout) = slabs(hq, hkv, s, d, 80);
+        let scale = 1.0 / (d as f32).sqrt();
+        let cfg = TileConfig::new(8, 8).unwrap();
+        for pat in [
+            MaskPattern::Strided { stride: 3 },
+            MaskPattern::SinkLocal { sinks: 2, window: 4 },
+        ] {
+            let spec = Spec::causal(hq, hkv).with_pattern(pat);
+            let mut o = vec![0.0f32; s * hq * d];
+            let mut lse = vec![0.0f32; hq * s];
+            forward_slabs_lse(&q, &k, &v, &mut o, &mut lse, s, d, spec, cfg, scale, None);
+            let (mut dq_t, mut dk_t, mut dv_t) = (
+                vec![0.0f32; s * hq * d],
+                vec![0.0f32; s * hkv * d],
+                vec![0.0f32; s * hkv * d],
+            );
+            backward_tiled_slabs(
+                &q, &k, &v, &o, &lse, &dout, &mut dq_t, &mut dk_t, &mut dv_t, s, d, spec, cfg,
+                scale, None,
+            );
+            let (mut dq_n, mut dk_n, mut dv_n) = (
+                vec![0.0f32; s * hq * d],
+                vec![0.0f32; s * hkv * d],
+                vec![0.0f32; s * hkv * d],
+            );
+            backward_naive_slabs(
+                &q, &k, &v, &dout, &mut dq_n, &mut dk_n, &mut dv_n, s, d, spec, scale,
+            );
+            let diff = |a: &[f32], b: &[f32]| {
+                a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0f32, f32::max)
+            };
+            assert!(diff(&dq_t, &dq_n) < 1e-4, "{pat:?} dq {}", diff(&dq_t, &dq_n));
+            assert!(diff(&dk_t, &dk_n) < 1e-4, "{pat:?} dk {}", diff(&dk_t, &dk_n));
+            assert!(diff(&dv_t, &dv_n) < 1e-4, "{pat:?} dv {}", diff(&dv_t, &dv_n));
+        }
+    }
+
+    /// A row whose every key is pattern-masked yields zero probabilities,
+    /// never `exp(-inf - -inf) = NaN`.
+    #[test]
+    fn attn_probs_zeroes_fully_masked_rows() {
+        use crate::attention::{pattern, BlockBitmap, MaskPattern};
+        // Query block 0 sees nothing; query block 1 sees key block 0 only.
+        let bid = pattern::register_bitmap(
+            BlockBitmap::new(4, 2, 2, vec![false, false, true, false]).unwrap(),
+        );
+        let (hq, hkv, s, d) = (1usize, 1usize, 8usize, 4usize);
+        let (q, k, _, _) = slabs(hq, hkv, s, d, 90);
+        let spec = Spec::causal(hq, hkv).with_pattern(MaskPattern::Bitmap(bid));
+        let rm = spec.resolved();
+        let scale = 1.0 / (d as f32).sqrt();
+        let mut probs = vec![f32::NAN; s];
+        // Row 2 lives in query block 0, whose bitmap row is all-false.
+        attn_probs(&q, &k, 2, 0, 0, s, d, d, d, scale, 0, 3, &rm, &mut probs);
+        assert_eq!(&probs[..3], &[0.0, 0.0, 0.0]);
+        // Row 5 (query block 1) sees keys 0..4 and normalizes over them.
+        attn_probs(&q, &k, 5, 0, 0, s, d, d, d, scale, 0, 6, &rm, &mut probs);
+        assert!((probs[..4].iter().sum::<f32>() - 1.0).abs() < 1e-5);
+        assert_eq!(&probs[4..6], &[0.0, 0.0]);
     }
 }

@@ -79,7 +79,9 @@ pub fn decode_attend(
                 r0,
                 pos0 + r0,
                 r1 - r0,
-                spec,
+                // Cached positions obey the same per-head visibility rules
+                // as the full-sequence kernels (one seam, no decode drift).
+                spec.for_head(h),
                 cfg,
                 scale,
             );
@@ -125,11 +127,12 @@ mod tests {
         for spec in [
             Spec::causal(hq, hkv),
             Spec {
-                hq,
-                hkv,
-                causal: true,
                 window: Some(5),
+                ..Spec::causal(hq, hkv)
             },
+            Spec::causal(hq, hkv).with_pattern(crate::attention::MaskPattern::Strided { stride: 3 }),
+            Spec::causal(hq, hkv)
+                .with_pattern(crate::attention::MaskPattern::SinkLocal { sinks: 2, window: 4 }),
         ] {
             let want = attention(
                 &to_tensor(&q, hq, s, d),

@@ -19,16 +19,22 @@
 //!
 //! Semantics match `python/compile/kernels/ref.py` exactly: Hq query heads,
 //! Hkv key/value heads, head `h` reads kv head `h / (Hq/Hkv)`, optional
-//! causal and sliding-window masks, f32 throughout.
+//! causal and sliding-window masks, f32 throughout. On top of those, the
+//! [`pattern`] module adds block-sparse [`MaskPattern`]s (strided, dilated,
+//! sink+local, block bitmaps, per-head tables) that AND with the
+//! causal/window mask through one visibility seam shared by the oracle,
+//! the tiled forward/backward and decode.
 
 pub mod backward;
 pub mod decode;
+pub mod pattern;
 pub mod tensor;
 pub mod tiled;
 
 use crate::linalg;
 use crate::util::threadpool::ThreadPool;
 use anyhow::{bail, Result};
+pub use pattern::{BitmapId, BlockBitmap, HeadTableId, MaskPattern, ResolvedMask};
 use tensor::{matmul_nt, Tensor};
 
 /// Attention variant hyper-parameters — mirrors `AttentionSpec` in L2.
@@ -41,6 +47,9 @@ pub struct Spec {
     /// j with `0 <= i - j < window` (the usual causal sliding window). With
     /// `causal: false`, the window is symmetric: `|i - j| < window`.
     pub window: Option<usize>,
+    /// Block-sparse pattern AND-ed with the causal/window mask;
+    /// [`MaskPattern::Dense`] reproduces the plain causal/window kernels.
+    pub pattern: MaskPattern,
 }
 
 impl Spec {
@@ -50,6 +59,7 @@ impl Spec {
             hkv,
             causal: false,
             window: None,
+            pattern: MaskPattern::Dense,
         }
     }
 
@@ -59,7 +69,32 @@ impl Spec {
             hkv,
             causal: true,
             window: None,
+            pattern: MaskPattern::Dense,
         }
+    }
+
+    /// Builder: this spec with a different mask pattern.
+    pub fn with_pattern(mut self, pattern: MaskPattern) -> Self {
+        self.pattern = pattern;
+        self
+    }
+
+    /// Resolve a per-head pattern table to head `h`'s concrete pattern
+    /// (`table[h % len]`); concrete patterns pass through unchanged. Every
+    /// head-dispatch site calls this before entering a kernel.
+    pub fn for_head(mut self, h: usize) -> Self {
+        if let MaskPattern::PerHead(id) = self.pattern {
+            let table = pattern::head_table(id)
+                .expect("per-head pattern table not registered (validate the Spec first)");
+            self.pattern = table[h % table.len()];
+        }
+        self
+    }
+
+    /// Materialize this (concrete) spec's visibility rule — one registry
+    /// lookup, then lock-free queries. See [`ResolvedMask`].
+    pub fn resolved(&self) -> ResolvedMask {
+        ResolvedMask::new(*self)
     }
 
     pub fn validate(&self) -> Result<()> {
@@ -72,6 +107,7 @@ impl Spec {
         if self.window == Some(0) {
             bail!("window must be positive");
         }
+        self.pattern.validate()?;
         Ok(())
     }
 }
@@ -177,6 +213,9 @@ pub fn attention(q: &Tensor, k: &Tensor, v: &Tensor, spec: Spec) -> Result<Tenso
     for ib in 0..b {
         for h in 0..hq {
             let hk = h / group; // the paper's zero-copy K'/V' sharing
+            // Per-head visibility: per-head tables resolve here, so the
+            // oracle stays the exact reference for every pattern.
+            let rm = spec.for_head(h).resolved();
             let q_base = q.idx4(ib, h, 0, 0);
             let k_base = k.idx4(ib, hk, 0, 0);
             let q_slab = &q.data[q_base..q_base + s * d];
@@ -189,7 +228,7 @@ pub fn attention(q: &Tensor, k: &Tensor, v: &Tensor, spec: Spec) -> Result<Tenso
                 let (lo, hi) = visible_range(i, s, spec);
                 let mut maxv = f32::NEG_INFINITY;
                 for (j, r) in row.iter_mut().enumerate() {
-                    if j < lo || j >= hi {
+                    if j < lo || j >= hi || !rm.pattern_visible(i, j) {
                         *r = f32::NEG_INFINITY;
                     } else {
                         *r *= scale;
@@ -415,7 +454,7 @@ pub fn sqa_layer_slices(
                             h * d_head,
                             s,
                             d_head,
-                            spec,
+                            spec.for_head(h),
                             cfg,
                             scale,
                         );
@@ -480,10 +519,8 @@ mod tests {
         let k = randn(&[b, hkv, s, d], 6);
         let v = randn(&[b, hkv, s, d], 7);
         let spec = Spec {
-            hq,
-            hkv,
-            causal: false,
             window: Some(1),
+            ..Spec::full(hq, hkv)
         };
         let out = attention(&q, &k, &v, spec).unwrap();
         for h in 0..hq {
@@ -523,14 +560,117 @@ mod tests {
         let t = randn(&[1, 3, 4, 2], 0);
         let k = randn(&[1, 2, 4, 2], 0);
         assert!(attention(&t, &k, &k, Spec::full(3, 2)).is_err());
-        assert!(Spec {
-            hq: 2,
-            hkv: 2,
-            causal: false,
-            window: Some(0)
+        let err = Spec {
+            window: Some(0),
+            ..Spec::full(2, 2)
         }
         .validate()
-        .is_err());
+        .unwrap_err();
+        assert!(err.to_string().contains("window must be positive"), "{err:#}");
+        // Pattern validation flows through Spec::validate too.
+        let err = Spec::causal(2, 2)
+            .with_pattern(MaskPattern::Strided { stride: 0 })
+            .validate()
+            .unwrap_err();
+        assert!(err.to_string().contains("pattern stride must be positive"), "{err:#}");
+        let err = Spec::causal(2, 2)
+            .with_pattern(MaskPattern::Window { window: 0 })
+            .validate()
+            .unwrap_err();
+        assert!(err.to_string().contains("pattern window must be positive"), "{err:#}");
+    }
+
+    #[test]
+    fn dense_pattern_is_identity_and_sparse_patterns_mask_the_oracle() {
+        // strided:2 under uniform scores: row i averages the visible keys
+        // j <= i with (i - j) % 2 == 0 — directly checkable against the
+        // per-element rule.
+        let (b, hq, hkv, s, d) = (1, 2, 1, 7, 3);
+        let q = Tensor::from_vec(&[b, hq, s, d], vec![1.0; hq * s * d]).unwrap();
+        let k = Tensor::from_vec(&[b, hkv, s, d], vec![1.0; s * d]).unwrap();
+        let v = randn(&[b, hkv, s, d], 21);
+        let dense = attention(&q, &k, &v, Spec::causal(hq, hkv)).unwrap();
+        let explicit = attention(
+            &q,
+            &k,
+            &v,
+            Spec::causal(hq, hkv).with_pattern(MaskPattern::Dense),
+        )
+        .unwrap();
+        assert_eq!(dense.data, explicit.data, "Dense must be bit-identical");
+        let strided = attention(
+            &q,
+            &k,
+            &v,
+            Spec::causal(hq, hkv).with_pattern(MaskPattern::Strided { stride: 2 }),
+        )
+        .unwrap();
+        for i in 0..s {
+            let vis: Vec<usize> = (0..=i).filter(|j| (i - j) % 2 == 0).collect();
+            for dd in 0..d {
+                let mean: f32 =
+                    vis.iter().map(|&j| v.get4(0, 0, j, dd)).sum::<f32>() / vis.len() as f32;
+                let got = strided.get4(0, 0, i, dd);
+                assert!((got - mean).abs() < 1e-5, "row {i} dim {dd}: {got} vs {mean}");
+            }
+        }
+    }
+
+    #[test]
+    fn fully_masked_bitmap_rows_yield_exact_zeros_not_nan() {
+        // Bitmap with an all-zero query-block row: those rows see nothing
+        // and must come out exactly zero (denominator-0 path), never NaN.
+        let bid = pattern::register_bitmap(
+            BlockBitmap::new(2, 3, 3, vec![
+                true, false, false, //
+                false, false, false, // rows 2..4 fully masked
+                true, false, true,
+            ])
+            .unwrap(),
+        );
+        let (b, hq, hkv, s, d) = (1, 2, 1, 6, 3);
+        let q = randn(&[b, hq, s, d], 31);
+        let k = randn(&[b, hkv, s, d], 32);
+        let v = randn(&[b, hkv, s, d], 33);
+        let spec = Spec::causal(hq, hkv).with_pattern(MaskPattern::Bitmap(bid));
+        let out = attention(&q, &k, &v, spec).unwrap();
+        assert!(out.data.iter().all(|x| x.is_finite()), "no NaNs anywhere");
+        for h in 0..hq {
+            for i in 2..4 {
+                for dd in 0..d {
+                    assert_eq!(out.get4(0, h, i, dd), 0.0, "masked row {i} head {h}");
+                }
+            }
+        }
+        // Row 5 (block 2) sees blocks 0 and 2: keys 0,1,4,5 — nonzero.
+        assert!((0..d).any(|dd| out.get4(0, 0, 5, dd) != 0.0));
+    }
+
+    #[test]
+    fn per_head_tables_give_each_head_its_own_mask() {
+        // Head 0 dense, head 1 window:1 (sees only itself) under uniform
+        // scores: head 1's rows equal v rows exactly, head 0 averages.
+        let tid = pattern::register_head_table(vec![
+            MaskPattern::Dense,
+            MaskPattern::Window { window: 1 },
+        ])
+        .unwrap();
+        let (b, hq, hkv, s, d) = (1, 2, 1, 5, 3);
+        let q = Tensor::from_vec(&[b, hq, s, d], vec![1.0; hq * s * d]).unwrap();
+        let k = Tensor::from_vec(&[b, hkv, s, d], vec![1.0; s * d]).unwrap();
+        let v = randn(&[b, hkv, s, d], 41);
+        let spec = Spec::full(hq, hkv).with_pattern(MaskPattern::PerHead(tid));
+        let out = attention(&q, &k, &v, spec).unwrap();
+        for i in 0..s {
+            for dd in 0..d {
+                let mean: f32 = (0..s).map(|j| v.get4(0, 0, j, dd)).sum::<f32>() / s as f32;
+                assert!((out.get4(0, 0, i, dd) - mean).abs() < 1e-5, "head 0 row {i}");
+                assert!(
+                    (out.get4(0, 1, i, dd) - v.get4(0, 0, i, dd)).abs() < 1e-5,
+                    "head 1 row {i}"
+                );
+            }
+        }
     }
 
     #[test]
@@ -543,10 +683,8 @@ mod tests {
         let k = Tensor::from_vec(&[b, hkv, s, d], vec![1.0; s * d]).unwrap();
         let v = randn(&[b, hkv, s, d], 12);
         let spec = Spec {
-            hq,
-            hkv,
-            causal: false,
             window: Some(2),
+            ..Spec::full(hq, hkv)
         };
         let out = attention(&q, &k, &v, spec).unwrap();
         for i in 0..s {
@@ -572,10 +710,8 @@ mod tests {
         let k = Tensor::from_vec(&[b, hkv, s, d], vec![1.0; s * d]).unwrap();
         let v = randn(&[b, hkv, s, d], 13);
         let spec = Spec {
-            hq,
-            hkv,
-            causal: true,
             window: Some(w),
+            ..Spec::causal(hq, hkv)
         };
         let out = attention(&q, &k, &v, spec).unwrap();
         for i in 0..s {
@@ -594,10 +730,8 @@ mod tests {
         assert_eq!(visible_range(0, 8, causal), (0, 1));
         assert_eq!(visible_range(7, 8, causal), (0, 8));
         let swa = Spec {
-            hq: 1,
-            hkv: 1,
-            causal: true,
             window: Some(3),
+            ..Spec::causal(1, 1)
         };
         assert_eq!(visible_range(7, 8, swa), (5, 8));
         assert_eq!(visible_range(1, 8, swa), (0, 2));
@@ -605,10 +739,8 @@ mod tests {
         assert_eq!(visible_range(3, 8, full), (0, 8));
         // Symmetric (non-causal) window: w keys behind and ahead, clamped.
         let sym = Spec {
-            hq: 1,
-            hkv: 1,
-            causal: false,
             window: Some(3),
+            ..Spec::full(1, 1)
         };
         assert_eq!(visible_range(0, 8, sym), (0, 3));
         assert_eq!(visible_range(4, 8, sym), (2, 7));

@@ -1,0 +1,627 @@
+//! Block-sparse mask patterns composed with the causal/window mask.
+//!
+//! [`MaskPattern`] generalizes [`super::Spec`]'s `{causal, window}` mask:
+//! the effective visibility of a key `j` from a query row `i` is the AND
+//! of the causal constraint, the sliding-window constraint, and the
+//! pattern — so `MaskPattern::Dense` reproduces the pre-pattern kernels
+//! bit-for-bit, and every sparse pattern only ever *removes* visible
+//! positions. All three kernels (naive oracle, tiled streaming forward +
+//! backward, incremental decode) dispatch through one seam:
+//!
+//! * [`ResolvedMask::pattern_visible`] / [`ResolvedMask::visible`] — the
+//!   per-element rule the naive oracle applies and the tiled kernels use
+//!   inside a visited tile;
+//! * [`ResolvedMask::tile_visible`] — the O(1) per-tile test the tile
+//!   iterators use to skip whole key tiles. It is exact (a tile is
+//!   visited iff it holds at least one visible element) via diagonal-band
+//!   arithmetic: for a tile pair the difference `d = i - j` sweeps a
+//!   contiguous range, and every built-in pattern constrains `d` to an
+//!   arithmetic progression `d = m·stride, |m| ≤ max_m`.
+//!
+//! Bitmap and per-head patterns carry data too big for a `Copy` spec, so
+//! they live in a process-global append-only registry and the spec stores
+//! a small id ([`BitmapId`] / [`HeadTableId`]). Per-head tables are
+//! resolved to a concrete pattern by [`super::Spec::for_head`] at every
+//! head-dispatch site; a `ResolvedMask` is always concrete.
+//!
+//! This module is clock-free and uses `std::sync` directly (not the loom
+//! shim): the registry is append-only configuration state, not part of
+//! the model-checked concurrent core, and kernels must stay buildable
+//! under `--cfg loom` without exploring its interleavings.
+
+use super::Spec;
+use anyhow::{bail, ensure, Context, Result};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Handle to a registered [`BlockBitmap`] (see [`register_bitmap`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct BitmapId(pub u32);
+
+/// Handle to a registered per-head pattern table
+/// (see [`register_head_table`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct HeadTableId(pub u32);
+
+/// Which key positions a query row may attend, *in addition to* (AND-ed
+/// with) the spec-level causal/window mask. Parsed from / rendered to the
+/// CLI grammar `dense | window:W | strided:T | dilated:W:T | sink:S:W |
+/// bitmap:N | heads:N`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MaskPattern {
+    /// No extra masking: the spec's causal/window mask alone.
+    Dense,
+    /// Local band: `|i - j| < window`.
+    Window { window: usize },
+    /// Strided (dilated-full) pattern: `|i - j| % stride == 0`.
+    Strided { stride: usize },
+    /// Dilated local band: `|i - j| % stride == 0` and
+    /// `|i - j| / stride < window` — `window` taps spaced `stride` apart.
+    Dilated { window: usize, stride: usize },
+    /// Attention-sink + local band: the first `sinks` keys are visible to
+    /// every row, plus the local band `|i - j| < window`.
+    SinkLocal { sinks: usize, window: usize },
+    /// Config-supplied block bitmap, looked up in the registry.
+    Bitmap(BitmapId),
+    /// Per-head pattern table: head `h` runs `table[h % len]`. Must be
+    /// resolved via [`Spec::for_head`] before reaching a kernel.
+    PerHead(HeadTableId),
+}
+
+impl Default for MaskPattern {
+    fn default() -> Self {
+        MaskPattern::Dense
+    }
+}
+
+impl MaskPattern {
+    /// Parse the CLI/config grammar. Validates the result, including that
+    /// `bitmap:N` / `heads:N` ids are actually registered.
+    pub fn parse(s: &str) -> Result<Self> {
+        let num = |x: &str, what: &str| -> Result<usize> {
+            x.parse::<usize>()
+                .ok()
+                .with_context(|| format!("bad {what} {x:?} in mask pattern {s:?}"))
+        };
+        let parts: Vec<&str> = s.split(':').collect();
+        let p = match parts.as_slice() {
+            ["dense"] => MaskPattern::Dense,
+            ["window", w] => MaskPattern::Window {
+                window: num(w, "window")?,
+            },
+            ["strided", t] => MaskPattern::Strided {
+                stride: num(t, "stride")?,
+            },
+            ["dilated", w, t] => MaskPattern::Dilated {
+                window: num(w, "window")?,
+                stride: num(t, "stride")?,
+            },
+            ["sink", k, w] => MaskPattern::SinkLocal {
+                sinks: num(k, "sink count")?,
+                window: num(w, "window")?,
+            },
+            ["bitmap", n] => MaskPattern::Bitmap(BitmapId(num(n, "bitmap id")? as u32)),
+            ["heads", n] => MaskPattern::PerHead(HeadTableId(num(n, "table id")? as u32)),
+            _ => bail!(
+                "unknown mask pattern {s:?} (want dense | window:W | strided:T | \
+                 dilated:W:T | sink:S:W | bitmap:N | heads:N)"
+            ),
+        };
+        p.validate()?;
+        Ok(p)
+    }
+
+    /// Inverse of [`MaskPattern::parse`].
+    pub fn label(&self) -> String {
+        match *self {
+            MaskPattern::Dense => "dense".into(),
+            MaskPattern::Window { window } => format!("window:{window}"),
+            MaskPattern::Strided { stride } => format!("strided:{stride}"),
+            MaskPattern::Dilated { window, stride } => format!("dilated:{window}:{stride}"),
+            MaskPattern::SinkLocal { sinks, window } => format!("sink:{sinks}:{window}"),
+            MaskPattern::Bitmap(BitmapId(n)) => format!("bitmap:{n}"),
+            MaskPattern::PerHead(HeadTableId(n)) => format!("heads:{n}"),
+        }
+    }
+
+    /// Reject degenerate parameters (zero window/stride) and dangling
+    /// registry ids.
+    pub fn validate(&self) -> Result<()> {
+        match *self {
+            MaskPattern::Dense => {}
+            MaskPattern::Window { window }
+            | MaskPattern::Dilated { window, stride: _ }
+            | MaskPattern::SinkLocal { sinks: _, window } => {
+                ensure!(window > 0, "pattern window must be positive");
+            }
+            MaskPattern::Strided { stride } => {
+                ensure!(stride > 0, "pattern stride must be positive");
+            }
+            MaskPattern::Bitmap(id) => {
+                ensure!(bitmap(id).is_some(), "bitmap pattern {} is not registered", id.0);
+            }
+            MaskPattern::PerHead(id) => {
+                ensure!(
+                    head_table(id).is_some(),
+                    "per-head pattern table {} is not registered",
+                    id.0
+                );
+            }
+        }
+        // Dilated constrains both knobs; the window arm above only caught
+        // its window.
+        if let MaskPattern::Dilated { stride, .. } = *self {
+            ensure!(stride > 0, "pattern stride must be positive");
+        }
+        Ok(())
+    }
+}
+
+/// A block-granular visibility bitmap: query block `qb` may attend key
+/// block `kb` iff `bits[qb * k_blocks + kb]`. Positions beyond the mapped
+/// `q_blocks * block` × `k_blocks * block` area are invisible.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BlockBitmap {
+    pub block: usize,
+    pub q_blocks: usize,
+    pub k_blocks: usize,
+    bits: Vec<bool>,
+}
+
+impl BlockBitmap {
+    pub fn new(block: usize, q_blocks: usize, k_blocks: usize, bits: Vec<bool>) -> Result<Self> {
+        ensure!(block > 0, "bitmap block size must be positive");
+        ensure!(
+            q_blocks > 0 && k_blocks > 0,
+            "bitmap needs at least one block row and column"
+        );
+        ensure!(
+            bits.len() == q_blocks * k_blocks,
+            "bitmap has {} bits, want q_blocks x k_blocks = {}",
+            bits.len(),
+            q_blocks * k_blocks
+        );
+        Ok(Self {
+            block,
+            q_blocks,
+            k_blocks,
+            bits,
+        })
+    }
+
+    /// Block-coordinate lookup; out-of-range blocks are invisible.
+    #[inline]
+    pub fn block_visible(&self, qb: usize, kb: usize) -> bool {
+        qb < self.q_blocks && kb < self.k_blocks && self.bits[qb * self.k_blocks + kb]
+    }
+
+    /// Element-coordinate lookup; positions beyond the mapped area are
+    /// invisible.
+    #[inline]
+    pub fn visible(&self, i: usize, j: usize) -> bool {
+        self.block_visible(i / self.block, j / self.block)
+    }
+}
+
+// ---- registry -------------------------------------------------------------
+
+struct Registry {
+    bitmaps: Vec<Arc<BlockBitmap>>,
+    tables: Vec<Arc<Vec<MaskPattern>>>,
+}
+
+fn registry() -> &'static Mutex<Registry> {
+    static REGISTRY: OnceLock<Mutex<Registry>> = OnceLock::new();
+    REGISTRY.get_or_init(|| {
+        Mutex::new(Registry {
+            bitmaps: Vec::new(),
+            tables: Vec::new(),
+        })
+    })
+}
+
+// The registry is append-only config state; a panic while holding the
+// lock cannot leave it structurally invalid, so poisoning is tolerated
+// (same policy as util::sync::lock, which this module avoids to stay
+// buildable under `--cfg loom`).
+fn with_registry<T>(f: impl FnOnce(&mut Registry) -> T) -> T {
+    let mut guard = registry().lock().unwrap_or_else(|e| e.into_inner());
+    f(&mut guard)
+}
+
+/// Register a validated bitmap; the returned id is what `bitmap:N`
+/// strings and [`MaskPattern::Bitmap`] specs refer to.
+pub fn register_bitmap(b: BlockBitmap) -> BitmapId {
+    with_registry(|r| {
+        r.bitmaps.push(Arc::new(b));
+        BitmapId((r.bitmaps.len() - 1) as u32)
+    })
+}
+
+/// Look up a registered bitmap.
+pub fn bitmap(id: BitmapId) -> Option<Arc<BlockBitmap>> {
+    with_registry(|r| r.bitmaps.get(id.0 as usize).cloned())
+}
+
+/// Register a per-head pattern table (head `h` runs `table[h % len]`).
+/// Entries must be concrete (no nested `PerHead`) and individually valid.
+pub fn register_head_table(table: Vec<MaskPattern>) -> Result<HeadTableId> {
+    ensure!(!table.is_empty(), "per-head table must name at least one pattern");
+    for p in &table {
+        ensure!(
+            !matches!(p, MaskPattern::PerHead(_)),
+            "per-head table entries must be concrete patterns"
+        );
+        p.validate()?;
+    }
+    Ok(with_registry(|r| {
+        r.tables.push(Arc::new(table));
+        HeadTableId((r.tables.len() - 1) as u32)
+    }))
+}
+
+/// Look up a registered per-head table.
+pub fn head_table(id: HeadTableId) -> Option<Arc<Vec<MaskPattern>>> {
+    with_registry(|r| r.tables.get(id.0 as usize).cloned())
+}
+
+// ---- resolved mask --------------------------------------------------------
+
+/// One head's fully-resolved visibility rule: the spec's causal/window
+/// mask AND a concrete pattern, with any bitmap already fetched from the
+/// registry — built once per (head, query-tile), then queried lock-free.
+#[derive(Debug, Clone)]
+pub struct ResolvedMask {
+    causal: bool,
+    window: Option<usize>,
+    pattern: MaskPattern,
+    bitmap: Option<Arc<BlockBitmap>>,
+}
+
+impl ResolvedMask {
+    /// Materialize `spec`'s mask. The pattern must be concrete — resolve
+    /// per-head tables with [`Spec::for_head`] first.
+    pub fn new(spec: Spec) -> Self {
+        let bitmap = match spec.pattern {
+            MaskPattern::Bitmap(id) => Some(
+                bitmap(id).expect("bitmap pattern not registered (validate the Spec first)"),
+            ),
+            MaskPattern::PerHead(_) => {
+                panic!("resolve PerHead patterns with Spec::for_head before building a ResolvedMask")
+            }
+            _ => None,
+        };
+        Self {
+            causal: spec.causal,
+            window: spec.window,
+            pattern: spec.pattern,
+            bitmap,
+        }
+    }
+
+    /// True when the pattern adds no masking beyond causal/window (the
+    /// pre-pattern fast path).
+    #[inline]
+    pub fn is_dense(&self) -> bool {
+        matches!(self.pattern, MaskPattern::Dense)
+    }
+
+    /// The pattern component alone: may row `i` attend key `j`?
+    /// (Causal/window are applied separately by the kernels' existing
+    /// `visible_range` clipping; [`ResolvedMask::visible`] combines all.)
+    #[inline]
+    pub fn pattern_visible(&self, i: usize, j: usize) -> bool {
+        let d = (i as i64 - j as i64).unsigned_abs() as usize;
+        match self.pattern {
+            MaskPattern::Dense => true,
+            MaskPattern::Window { window } => d < window,
+            MaskPattern::Strided { stride } => d % stride == 0,
+            MaskPattern::Dilated { window, stride } => d % stride == 0 && d / stride < window,
+            MaskPattern::SinkLocal { sinks, window } => j < sinks || d < window,
+            MaskPattern::Bitmap(_) => {
+                self.bitmap.as_ref().expect("bitmap resolved").visible(i, j)
+            }
+            MaskPattern::PerHead(_) => unreachable!("ResolvedMask is always concrete"),
+        }
+    }
+
+    /// Full per-element rule: causal AND window AND pattern.
+    #[inline]
+    pub fn visible(&self, i: usize, j: usize) -> bool {
+        if self.causal && j > i {
+            return false;
+        }
+        if let Some(w) = self.window {
+            if (i as i64 - j as i64).unsigned_abs() as usize >= w {
+                return false;
+            }
+        }
+        self.pattern_visible(i, j)
+    }
+
+    /// Exact O(1) tile test: does the query-tile `[i0, i1)` × key-tile
+    /// `[j0, j1)` rectangle hold at least one fully-visible element?
+    pub fn tile_visible(&self, i0: usize, i1: usize, j0: usize, j1: usize) -> bool {
+        if i0 >= i1 || j0 >= j1 {
+            return false;
+        }
+        match self.pattern {
+            MaskPattern::Dense => self.diag(i0, i1, j0, j1, 1, i64::MAX),
+            MaskPattern::Window { window } => self.diag(i0, i1, j0, j1, 1, window as i64 - 1),
+            MaskPattern::Strided { stride } => {
+                self.diag(i0, i1, j0, j1, stride as i64, i64::MAX)
+            }
+            MaskPattern::Dilated { window, stride } => {
+                self.diag(i0, i1, j0, j1, stride as i64, window as i64 - 1)
+            }
+            MaskPattern::SinkLocal { sinks, window } => {
+                (j0 < sinks && self.diag(i0, i1, j0, j1.min(sinks), 1, i64::MAX))
+                    || self.diag(i0, i1, j0, j1, 1, window as i64 - 1)
+            }
+            MaskPattern::Bitmap(_) => {
+                let bm = self.bitmap.as_ref().expect("bitmap resolved");
+                let b = bm.block;
+                for qb in i0 / b..=(i1 - 1) / b {
+                    for kb in j0 / b..=(j1 - 1) / b {
+                        if !bm.block_visible(qb, kb) {
+                            continue;
+                        }
+                        let (bi0, bi1) = (i0.max(qb * b), i1.min((qb + 1) * b));
+                        let (bj0, bj1) = (j0.max(kb * b), j1.min((kb + 1) * b));
+                        if self.diag(bi0, bi1, bj0, bj1, 1, i64::MAX) {
+                            return true;
+                        }
+                    }
+                }
+                false
+            }
+            MaskPattern::PerHead(_) => unreachable!("ResolvedMask is always concrete"),
+        }
+    }
+
+    /// Diagonal-band overlap: over the rectangle, `d = i - j` sweeps the
+    /// contiguous range `[i0 - (j1-1), (i1-1) - j0]`; the pattern admits
+    /// `d = m * stride` with `|m| <= max_m`, the causal mask `d >= 0`, and
+    /// a spec window `w` admits `|d| <= w - 1`. The tile holds a visible
+    /// element iff the intersection admits some integer `m`.
+    fn diag(&self, i0: usize, i1: usize, j0: usize, j1: usize, stride: i64, max_m: i64) -> bool {
+        let mut dlo = i0 as i64 - (j1 as i64 - 1);
+        let mut dhi = (i1 as i64 - 1) - j0 as i64;
+        if self.causal {
+            dlo = dlo.max(0);
+        }
+        if let Some(w) = self.window {
+            dlo = dlo.max(-(w as i64 - 1));
+            dhi = dhi.min(w as i64 - 1);
+        }
+        if dlo > dhi {
+            return false;
+        }
+        let mlo = ceil_div(dlo, stride).max(-max_m);
+        let mhi = dhi.div_euclid(stride).min(max_m);
+        mlo <= mhi
+    }
+}
+
+/// `ceil(a / b)` for `b > 0` on signed `a`.
+#[inline]
+fn ceil_div(a: i64, b: i64) -> i64 {
+    -((-a).div_euclid(b))
+}
+
+/// Reject bitmap patterns whose block size does not tile evenly into the
+/// kernel's tile sizes — keeps every `(q_tile, k_tile)` tile inside an
+/// aligned grid of bitmap blocks. Checks per-head table entries too.
+pub fn check_tiling(spec: Spec, q_tile: usize, k_tile: usize) -> Result<()> {
+    let check_one = |p: MaskPattern| -> Result<()> {
+        if let MaskPattern::Bitmap(id) = p {
+            let bm = bitmap(id)
+                .with_context(|| format!("bitmap pattern {} is not registered", id.0))?;
+            ensure!(
+                bm.block % q_tile == 0 && bm.block % k_tile == 0,
+                "bitmap block {} must be a multiple of the tile sizes {}x{}",
+                bm.block,
+                q_tile,
+                k_tile
+            );
+        }
+        Ok(())
+    };
+    match spec.pattern {
+        MaskPattern::PerHead(id) => {
+            let table = head_table(id)
+                .with_context(|| format!("per-head pattern table {} is not registered", id.0))?;
+            for &p in table.iter() {
+                check_one(p)?;
+            }
+            Ok(())
+        }
+        p => check_one(p),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec_with(pattern: MaskPattern, causal: bool, window: Option<usize>) -> Spec {
+        Spec {
+            hq: 1,
+            hkv: 1,
+            causal,
+            window,
+            pattern,
+        }
+    }
+
+    #[test]
+    fn parse_label_round_trips() {
+        for s in [
+            "dense",
+            "window:7",
+            "strided:3",
+            "dilated:2:5",
+            "sink:4:16",
+        ] {
+            let p = MaskPattern::parse(s).unwrap();
+            assert_eq!(p.label(), s);
+        }
+        let id = register_bitmap(BlockBitmap::new(8, 2, 2, vec![true; 4]).unwrap());
+        let s = format!("bitmap:{}", id.0);
+        assert_eq!(MaskPattern::parse(&s).unwrap(), MaskPattern::Bitmap(id));
+        let tid = register_head_table(vec![MaskPattern::Dense]).unwrap();
+        let s = format!("heads:{}", tid.0);
+        assert_eq!(MaskPattern::parse(&s).unwrap(), MaskPattern::PerHead(tid));
+        assert!(MaskPattern::parse("sliding:3").is_err());
+        assert!(MaskPattern::parse("window").is_err());
+        assert!(MaskPattern::parse("window:x").is_err());
+    }
+
+    #[test]
+    fn validation_rejects_degenerate_patterns() {
+        let err = MaskPattern::Window { window: 0 }.validate().unwrap_err();
+        assert!(err.to_string().contains("pattern window must be positive"), "{err:#}");
+        let err = MaskPattern::Strided { stride: 0 }.validate().unwrap_err();
+        assert!(err.to_string().contains("pattern stride must be positive"), "{err:#}");
+        let err = MaskPattern::Dilated { window: 2, stride: 0 }.validate().unwrap_err();
+        assert!(err.to_string().contains("pattern stride must be positive"), "{err:#}");
+        let err = MaskPattern::Dilated { window: 0, stride: 2 }.validate().unwrap_err();
+        assert!(err.to_string().contains("pattern window must be positive"), "{err:#}");
+        let err = MaskPattern::SinkLocal { sinks: 1, window: 0 }.validate().unwrap_err();
+        assert!(err.to_string().contains("pattern window must be positive"), "{err:#}");
+        let err = MaskPattern::Bitmap(BitmapId(u32::MAX)).validate().unwrap_err();
+        assert!(err.to_string().contains("is not registered"), "{err:#}");
+        let err = MaskPattern::PerHead(HeadTableId(u32::MAX)).validate().unwrap_err();
+        assert!(err.to_string().contains("is not registered"), "{err:#}");
+    }
+
+    #[test]
+    fn bitmap_shape_validation() {
+        let err = BlockBitmap::new(0, 1, 1, vec![true]).unwrap_err();
+        assert!(err.to_string().contains("bitmap block size must be positive"), "{err:#}");
+        let err = BlockBitmap::new(8, 0, 1, vec![]).unwrap_err();
+        assert!(
+            err.to_string().contains("bitmap needs at least one block row and column"),
+            "{err:#}"
+        );
+        let err = BlockBitmap::new(8, 2, 2, vec![true; 3]).unwrap_err();
+        assert!(
+            err.to_string().contains("bitmap has 3 bits, want q_blocks x k_blocks = 4"),
+            "{err:#}"
+        );
+    }
+
+    #[test]
+    fn head_table_validation() {
+        let err = register_head_table(vec![]).unwrap_err();
+        assert!(
+            err.to_string().contains("per-head table must name at least one pattern"),
+            "{err:#}"
+        );
+        let tid = register_head_table(vec![MaskPattern::Dense]).unwrap();
+        let err = register_head_table(vec![MaskPattern::PerHead(tid)]).unwrap_err();
+        assert!(
+            err.to_string().contains("per-head table entries must be concrete"),
+            "{err:#}"
+        );
+        let err =
+            register_head_table(vec![MaskPattern::Window { window: 0 }]).unwrap_err();
+        assert!(err.to_string().contains("pattern window must be positive"), "{err:#}");
+    }
+
+    #[test]
+    fn check_tiling_rejects_misaligned_bitmap_blocks() {
+        let id = register_bitmap(BlockBitmap::new(8, 2, 2, vec![true; 4]).unwrap());
+        let spec = spec_with(MaskPattern::Bitmap(id), true, None);
+        assert!(check_tiling(spec, 8, 8).is_ok());
+        assert!(check_tiling(spec, 4, 8).is_ok(), "block 8 tiles evenly into 4x8");
+        let err = check_tiling(spec, 8, 3).unwrap_err();
+        assert!(
+            err.to_string()
+                .contains("bitmap block 8 must be a multiple of the tile sizes 8x3"),
+            "{err:#}"
+        );
+        let tid = register_head_table(vec![MaskPattern::Dense, MaskPattern::Bitmap(id)]).unwrap();
+        assert!(check_tiling(spec_with(MaskPattern::PerHead(tid), true, None), 8, 3).is_err());
+        assert!(check_tiling(spec_with(MaskPattern::Dense, true, None), 7, 13).is_ok());
+    }
+
+    /// `tile_visible` is exact: equals the brute-force OR of `visible`
+    /// over the tile rectangle, for every pattern kind × causal/window ×
+    /// tile geometry drawn here.
+    #[test]
+    fn tile_visible_matches_elementwise_brute_force() {
+        let bid = register_bitmap(
+            BlockBitmap::new(
+                4,
+                3,
+                3,
+                vec![
+                    true, false, false, //
+                    false, false, true, //
+                    false, true, false,
+                ],
+            )
+            .unwrap(),
+        );
+        let patterns = [
+            MaskPattern::Dense,
+            MaskPattern::Window { window: 1 },
+            MaskPattern::Window { window: 5 },
+            MaskPattern::Strided { stride: 3 },
+            MaskPattern::Dilated { window: 2, stride: 3 },
+            MaskPattern::SinkLocal { sinks: 2, window: 3 },
+            MaskPattern::Bitmap(bid),
+        ];
+        let s = 13usize;
+        for &pattern in &patterns {
+            for &causal in &[false, true] {
+                for &window in &[None, Some(4usize)] {
+                    let rm = ResolvedMask::new(spec_with(pattern, causal, window));
+                    for &(qt, kt) in &[(3usize, 2usize), (4, 4), (5, 3), (1, 1)] {
+                        let mut i0 = 0;
+                        while i0 < s {
+                            let i1 = (i0 + qt).min(s);
+                            let mut j0 = 0;
+                            while j0 < s {
+                                let j1 = (j0 + kt).min(s);
+                                let brute = (i0..i1)
+                                    .any(|i| (j0..j1).any(|j| rm.visible(i, j)));
+                                assert_eq!(
+                                    rm.tile_visible(i0, i1, j0, j1),
+                                    brute,
+                                    "{} causal={causal} window={window:?} \
+                                     tile [{i0},{i1})x[{j0},{j1})",
+                                    pattern.label()
+                                );
+                                j0 = j1;
+                            }
+                            i0 = i1;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn for_head_resolves_per_head_tables() {
+        let tid = register_head_table(vec![
+            MaskPattern::Dense,
+            MaskPattern::Window { window: 2 },
+        ])
+        .unwrap();
+        let spec = Spec {
+            hq: 4,
+            hkv: 2,
+            causal: true,
+            window: None,
+            pattern: MaskPattern::PerHead(tid),
+        };
+        assert_eq!(spec.for_head(0).pattern, MaskPattern::Dense);
+        assert_eq!(spec.for_head(1).pattern, MaskPattern::Window { window: 2 });
+        assert_eq!(spec.for_head(2).pattern, MaskPattern::Dense);
+        // Concrete patterns pass through unchanged.
+        let dense = spec_with(MaskPattern::Strided { stride: 2 }, true, None);
+        assert_eq!(dense.for_head(3).pattern, MaskPattern::Strided { stride: 2 });
+    }
+}

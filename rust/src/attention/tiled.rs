@@ -37,9 +37,13 @@
 //!   scores reproduce the oracle bit-for-bit: `-inf`/NaN keys are masked
 //!   out individually, while a `+inf` score (which dominates the oracle's
 //!   row max and underflows its normalizer) zeroes the whole row;
-//! * the set of key tiles visited equals the set of key tiles that
-//!   intersect some row's [`super::visible_range`].
+//! * the set of key tiles visited equals the set of key tiles containing at
+//!   least one `(i, j)` pair visible under the full mask — per-row
+//!   [`super::visible_range`] AND-ed with the spec's
+//!   [`super::MaskPattern`] ([`visited_key_tiles`] is the reference
+//!   iterator; sparse patterns make it sub-quadratic in `S / k_tile`).
 
+use super::pattern;
 use super::tensor::Tensor;
 use super::{check_shapes, visible_range, Spec};
 use crate::linalg;
@@ -109,21 +113,25 @@ pub fn tile_visible_range(i0: usize, i1: usize, s: usize, spec: Spec) -> (usize,
 /// Indices of the key tiles the kernel visits for query tile `[i0, i1)`.
 ///
 /// A key tile `t` covers keys `[t·k_tile, (t+1)·k_tile) ∩ [0, s)`; the
-/// kernel visits exactly the tiles intersecting [`tile_visible_range`].
-/// `rust/tests/properties.rs` checks this against the per-row
-/// [`visible_range`] definition.
-pub fn visited_key_tiles(
-    i0: usize,
-    i1: usize,
-    s: usize,
-    spec: Spec,
-    k_tile: usize,
-) -> std::ops::Range<usize> {
+/// kernel visits exactly the tiles inside [`tile_visible_range`] that
+/// additionally contain a pattern-visible `(i, j)` pair
+/// ([`super::ResolvedMask::tile_visible`] — exact, not conservative).
+/// `rust/tests/properties.rs` checks this against the per-element
+/// visibility definition. Per-head specs must be resolved with
+/// [`Spec::for_head`] first.
+pub fn visited_key_tiles(i0: usize, i1: usize, s: usize, spec: Spec, k_tile: usize) -> Vec<usize> {
     let (lo, hi) = tile_visible_range(i0, i1, s, spec);
     if hi <= lo {
-        return 0..0;
+        return Vec::new();
     }
-    lo / k_tile..hi.div_ceil(k_tile)
+    let rm = spec.resolved();
+    (lo / k_tile..hi.div_ceil(k_tile))
+        .filter(|&jt| {
+            let j0 = jt * k_tile;
+            let j1 = ((jt + 1) * k_tile).min(s);
+            rm.tile_visible(i0, i1, j0, j1)
+        })
+        .collect()
 }
 
 /// Stream one query tile `[i0, i1)` of one head.
@@ -245,6 +253,10 @@ pub(crate) fn stream_qtile_at_lse(
         }
         return; // whole tile masked: zeros, by construction not NaN
     }
+    // One registry lookup per query tile, then lock-free visibility queries.
+    // Callers hand us a concrete (for_head-resolved) spec.
+    let rm = spec.resolved();
+    let dense = rm.is_dense();
     // Running per-row state; `out` itself holds the unnormalized output.
     let mut m = vec![f32::NEG_INFINITY; tq];
     let mut l = vec![0.0f32; tq];
@@ -261,6 +273,11 @@ pub(crate) fn stream_qtile_at_lse(
         let j0 = jt * k_tile;
         let j1 = ((jt + 1) * k_tile).min(s);
         let tk = j1 - j0;
+        // Key tiles with no pattern-visible (i, j) pair are skipped without
+        // touching K or V — the same set `visited_key_tiles` enumerates.
+        if !dense && !rm.tile_visible(pos0, pos0 + n_rows, j0, j1) {
+            continue;
+        }
         // 1. The whole score block in one micro-GEMM (overwrites the block,
         //    so nothing stale survives from the previous key tile).
         linalg::score_block(
@@ -281,6 +298,11 @@ pub(crate) fn stream_qtile_at_lse(
             }
             let mut block_max = f32::NEG_INFINITY;
             for j in jlo..jhi {
+                if !dense && !rm.pattern_visible(i, j) {
+                    // Pattern-masked keys are -inf *before* the max in the
+                    // oracle: they neither raise the max nor poison the row.
+                    continue;
+                }
                 let sc = srow[j - j0];
                 if sc.is_finite() {
                     block_max = block_max.max(sc);
@@ -308,7 +330,10 @@ pub(crate) fn stream_qtile_at_lse(
             for (jj, pv) in prow.iter_mut().enumerate() {
                 let j = j0 + jj;
                 let sc = srow[jj];
-                let p = if (jlo..jhi).contains(&j) && sc.is_finite() {
+                let p = if (jlo..jhi).contains(&j)
+                    && sc.is_finite()
+                    && (dense || rm.pattern_visible(i, j))
+                {
                     (sc - m_new).exp()
                 } else {
                     0.0 // masked, out of range, or non-finite
@@ -483,6 +508,7 @@ pub(crate) fn stream_slabs_parallel_lse(
     let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(hq * n_tiles);
     for h in 0..hq {
         let hk = h / group;
+        let hspec = spec.for_head(h);
         for t in 0..n_tiles {
             let i0 = t * cfg.q_tile;
             let i1 = (i0 + cfg.q_tile).min(s);
@@ -510,7 +536,7 @@ pub(crate) fn stream_slabs_parallel_lse(
                     i0,
                     i0,
                     i1 - i0,
-                    spec,
+                    hspec,
                     cfg,
                     scale,
                     lbuf.as_deref_mut(),
@@ -549,6 +575,7 @@ pub fn attention_tiled_cfg(
     cfg: TileConfig,
 ) -> Result<Tensor> {
     let (b, hq, s, d) = check_shapes(q, k, v, spec)?;
+    pattern::check_tiling(spec, cfg.q_tile, cfg.k_tile)?;
     let group = hq / spec.hkv;
     let scale = 1.0 / (d as f32).sqrt();
     let mut out = Tensor::zeros(&[b, hq, s, d]);
@@ -573,7 +600,7 @@ pub fn attention_tiled_cfg(
                 0,
                 s,
                 d,
-                spec,
+                spec.for_head(h),
                 cfg,
                 scale,
             );
@@ -600,6 +627,7 @@ pub fn attention_tiled_parallel(
     pool: &ThreadPool,
 ) -> Result<Tensor> {
     let (b, hq, s, d) = check_shapes(q, k, v, spec)?;
+    pattern::check_tiling(spec, cfg.q_tile, cfg.k_tile)?;
     let n_tiles = s.div_ceil(cfg.q_tile);
     if b * hq * n_tiles <= 1 {
         return attention_tiled_cfg(q, k, v, spec, cfg);
@@ -612,6 +640,7 @@ pub fn attention_tiled_parallel(
     for ib in 0..b {
         for h in 0..hq {
             let hk = h / group;
+            let hspec = spec.for_head(h);
             let q_slab = &q.data[(ib * hq + h) * s * d..][..s * d];
             let k_slab = &k.data[(ib * hkv + hk) * s * d..][..s * d];
             let v_slab = &v.data[(ib * hkv + hk) * s * d..][..s * d];
@@ -636,7 +665,7 @@ pub fn attention_tiled_parallel(
                         d,
                         i0,
                         i1,
-                        spec,
+                        hspec,
                         cfg,
                         scale,
                     );
@@ -692,10 +721,8 @@ mod tests {
             Spec::full(hq, hkv),
             Spec::causal(hq, hkv),
             Spec {
-                hq,
-                hkv,
-                causal: true,
                 window: Some(13),
+                ..Spec::causal(hq, hkv)
             },
         ] {
             let want = attention(&q, &k, &v, spec).unwrap();
@@ -826,10 +853,8 @@ mod tests {
         let k = randn(&[1, hkv, s, d], 8);
         let v = randn(&[1, hkv, s, d], 9);
         let spec = Spec {
-            hq,
-            hkv,
-            causal: true,
             window: Some(2),
+            ..Spec::causal(hq, hkv)
         };
         let want = attention(&q, &k, &v, spec).unwrap();
         let got = attention_tiled_cfg(&q, &k, &v, spec, TileConfig::new(4, 4).unwrap()).unwrap();
@@ -933,18 +958,83 @@ mod tests {
     #[test]
     fn tile_range_helpers_agree_with_visible_range() {
         let spec = Spec {
-            hq: 1,
-            hkv: 1,
-            causal: true,
             window: Some(3),
+            ..Spec::causal(1, 1)
         };
         let s = 32;
         assert_eq!(tile_visible_range(4, 8, s, spec), (2, 8));
-        assert_eq!(visited_key_tiles(4, 8, s, spec, 4), 0..2);
+        assert_eq!(visited_key_tiles(4, 8, s, spec, 4), vec![0, 1]);
         // Causal full: tile [8, 16) sees keys [0, 16).
         let causal = Spec::causal(1, 1);
         assert_eq!(tile_visible_range(8, 16, s, causal), (0, 16));
-        assert_eq!(visited_key_tiles(8, 16, s, causal, 8), 0..2);
+        assert_eq!(visited_key_tiles(8, 16, s, causal, 8), vec![0, 1]);
+    }
+
+    #[test]
+    fn strided_pattern_skips_interior_key_tiles() {
+        // Causal strided:8, query tile [8, 12), k_tile 4. Rows 8..12 see
+        // keys j <= i with (i - j) % 8 == 0: {0..3} and {8..11} — the middle
+        // tile {4..7} contains no visible pair and must be skipped.
+        let spec = Spec::causal(1, 1).with_pattern(super::super::MaskPattern::Strided { stride: 8 });
+        assert_eq!(visited_key_tiles(8, 12, 32, spec, 4), vec![0, 2]);
+        // And the skip list matches a brute-force per-element check.
+        for (i0, i1) in [(0, 4), (8, 12), (12, 16), (28, 32)] {
+            let rm = spec.resolved();
+            let want: Vec<usize> = (0..32usize.div_ceil(4))
+                .filter(|&jt| {
+                    (i0..i1).any(|i| {
+                        (jt * 4..(jt + 1) * 4).any(|j| rm.visible(i, j))
+                    })
+                })
+                .collect();
+            assert_eq!(visited_key_tiles(i0, i1, 32, spec, 4), want, "tile [{i0},{i1})");
+        }
+    }
+
+    #[test]
+    fn sparse_patterns_match_oracle_through_the_tiled_kernel() {
+        use super::super::MaskPattern;
+        let (b, hq, hkv, s, d) = (1, 4, 2, 29, 8);
+        let q = randn(&[b, hq, s, d], 61);
+        let k = randn(&[b, hkv, s, d], 62);
+        let v = randn(&[b, hkv, s, d], 63);
+        for pat in [
+            MaskPattern::Window { window: 5 },
+            MaskPattern::Strided { stride: 3 },
+            MaskPattern::Dilated { window: 2, stride: 3 },
+            MaskPattern::SinkLocal { sinks: 2, window: 4 },
+        ] {
+            for causal in [false, true] {
+                let mut spec = Spec::full(hq, hkv).with_pattern(pat);
+                spec.causal = causal;
+                let want = attention(&q, &k, &v, spec).unwrap();
+                let got =
+                    attention_tiled_cfg(&q, &k, &v, spec, TileConfig::new(8, 8).unwrap()).unwrap();
+                assert!(
+                    want.max_abs_diff(&got) < 1e-4,
+                    "{pat:?} causal={causal}: diff {}",
+                    want.max_abs_diff(&got)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn misaligned_bitmap_blocks_are_rejected_with_tile_sizes_in_the_error() {
+        use super::super::{BlockBitmap, MaskPattern};
+        let bid = pattern::register_bitmap(BlockBitmap::new(6, 2, 2, vec![true; 4]).unwrap());
+        let (b, hq, hkv, s, d) = (1, 2, 2, 12, 4);
+        let q = randn(&[b, hq, s, d], 71);
+        let spec = Spec::causal(hq, hkv).with_pattern(MaskPattern::Bitmap(bid));
+        let err = attention_tiled_cfg(&q, &q, &q, spec, TileConfig::new(4, 4).unwrap())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("bitmap block 6 must be a multiple of the tile sizes 4x4"), "{err}");
+        // Aligned tiles accept it and match the oracle.
+        let got =
+            attention_tiled_cfg(&q, &q, &q, spec, TileConfig::new(6, 6).unwrap()).unwrap();
+        let want = attention(&q, &q, &q, spec).unwrap();
+        assert!(want.max_abs_diff(&got) < 1e-4);
     }
 
     #[test]

@@ -275,11 +275,10 @@ pub fn kernel_table(
 ) -> Result<(String, Vec<KernelCell>)> {
     use crate::attention::{attention, attention_with, tensor::Tensor, Kernel, Spec};
     let bench = if quick { Bench::quick() } else { Bench::default() };
-    let spec = Spec {
-        hq,
-        hkv,
-        causal,
-        window: None,
+    let spec = if causal {
+        Spec::causal(hq, hkv)
+    } else {
+        Spec::full(hq, hkv)
     };
     let mut cells = Vec::new();
     for &seq in seqs {

@@ -65,6 +65,96 @@ impl ModelDims {
     }
 }
 
+/// A mask-pattern selection from a config file: either a string in the
+/// [`crate::attention::MaskPattern::parse`] grammar (`dense | window:W |
+/// strided:T | dilated:W:T | sink:S:W | bitmap:N | heads:N`), or an inline
+/// block bitmap `{"block": B, "q_blocks": QB, "k_blocks": KB, "bits":
+/// [...]}` whose bits are booleans or 0/1 numbers, row-major
+/// `q_blocks x k_blocks`. [`PatternSpec::resolve`] registers inline
+/// bitmaps and hands back a canonical pattern string (`bitmap:N`).
+#[derive(Debug, Clone, PartialEq)]
+pub enum PatternSpec {
+    /// A pattern in the string grammar, validated on resolve.
+    Named(String),
+    /// An inline block bitmap, registered on resolve.
+    Bitmap {
+        block: usize,
+        q_blocks: usize,
+        k_blocks: usize,
+        bits: Vec<bool>,
+    },
+}
+
+impl PatternSpec {
+    pub fn from_json(v: &Json) -> Result<Self> {
+        if let Some(s) = v.as_str() {
+            return Ok(Self::Named(s.to_string()));
+        }
+        if v.as_obj().is_some() {
+            let bits = v
+                .req("bits")?
+                .as_arr()
+                .context("bitmap bits must be an array")?
+                .iter()
+                .map(|b| match b {
+                    Json::Bool(x) => Ok(*x),
+                    Json::Num(n) if *n == 0.0 || *n == 1.0 => Ok(*n != 0.0),
+                    _ => bail!("bitmap bits must be booleans or 0/1"),
+                })
+                .collect::<Result<Vec<bool>>>()?;
+            return Ok(Self::Bitmap {
+                block: v.req("block")?.as_usize().context("block")?,
+                q_blocks: v.req("q_blocks")?.as_usize().context("q_blocks")?,
+                k_blocks: v.req("k_blocks")?.as_usize().context("k_blocks")?,
+                bits,
+            });
+        }
+        bail!("pattern must be a grammar string or a bitmap object")
+    }
+
+    pub fn to_json(&self) -> Json {
+        match self {
+            Self::Named(s) => Json::str(s.clone()),
+            Self::Bitmap {
+                block,
+                q_blocks,
+                k_blocks,
+                bits,
+            } => Json::obj(vec![
+                ("block", Json::num(*block as f64)),
+                ("q_blocks", Json::num(*q_blocks as f64)),
+                ("k_blocks", Json::num(*k_blocks as f64)),
+                ("bits", Json::arr(bits.iter().map(|&b| Json::Bool(b)))),
+            ]),
+        }
+    }
+
+    /// Validate and canonicalize to a pattern string for the
+    /// `kernel[+linalg][@pattern]` lowering grammar. Named patterns are
+    /// parse-checked (dangling `bitmap:N`/`heads:N` ids rejected); inline
+    /// bitmaps are shape-checked, registered, and returned as their
+    /// registry reference `bitmap:N`.
+    pub fn resolve(&self) -> Result<String> {
+        use crate::attention::{pattern, BlockBitmap, MaskPattern};
+        match self {
+            Self::Named(s) => {
+                MaskPattern::parse(s)?;
+                Ok(s.clone())
+            }
+            Self::Bitmap {
+                block,
+                q_blocks,
+                k_blocks,
+                bits,
+            } => {
+                let bm = BlockBitmap::new(*block, *q_blocks, *k_blocks, bits.clone())?;
+                let id = pattern::register_bitmap(bm);
+                Ok(MaskPattern::Bitmap(id).label())
+            }
+        }
+    }
+}
+
 /// Learning-rate schedule: linear warmup then cosine decay to `min_ratio`.
 #[derive(Debug, Clone)]
 pub struct LrSchedule {
@@ -109,6 +199,10 @@ pub struct TrainConfig {
     /// scalar oracle). `None` = the backend's default (tiled attention on
     /// blocked GEMMs). Mirrors [`ServeConfig::kernel`].
     pub kernel: Option<String>,
+    /// Sparse mask pattern the train steps run under, as a resolved
+    /// pattern string (see [`PatternSpec`]); composed with `kernel` into
+    /// the `kernel[+linalg][@pattern]` lowering. `None` = dense.
+    pub pattern: Option<String>,
 }
 
 impl Default for TrainConfig {
@@ -130,6 +224,7 @@ impl Default for TrainConfig {
             checkpoint_every: 0,
             log_every: 10,
             kernel: None,
+            pattern: None,
         }
     }
 }
@@ -168,6 +263,9 @@ impl TrainConfig {
         if let Some(s) = v.get("kernel").and_then(|x| x.as_str()) {
             c.kernel = Some(s.to_string());
         }
+        if let Some(p) = v.get("pattern") {
+            c.pattern = Some(PatternSpec::from_json(p)?.resolve().context("pattern")?);
+        }
         Ok(c)
     }
 
@@ -194,6 +292,11 @@ pub struct ServeConfig {
     /// "tiled+scalar" | "naive+scalar" on native. `None` = the backend's
     /// default (tiled attention on blocked GEMMs).
     pub kernel: Option<String>,
+    /// Sparse mask pattern served requests run under, as a resolved
+    /// pattern string (see [`PatternSpec`]); composed with `kernel` into
+    /// the `kernel[+linalg][@pattern]` lowering for encode, prefill, and
+    /// the decode steps of prefilling sessions. `None` = dense.
+    pub pattern: Option<String>,
     /// Max concurrent generation sessions (admission cap; further
     /// generate requests queue for a slot).
     pub max_sessions: usize,
@@ -219,6 +322,7 @@ impl Default for ServeConfig {
             workers: 2,
             queue_capacity: 64,
             kernel: None,
+            pattern: None,
             max_sessions: 4,
             session_timeout_ms: 30_000,
             gen_capacity: 0,
@@ -253,6 +357,9 @@ impl ServeConfig {
         }
         if let Some(s) = v.get("kernel").and_then(|x| x.as_str()) {
             c.kernel = Some(s.to_string());
+        }
+        if let Some(p) = v.get("pattern") {
+            c.pattern = Some(PatternSpec::from_json(p)?.resolve().context("pattern")?);
         }
         if let Some(n) = v.get("max_sessions").and_then(|x| x.as_usize()) {
             c.max_sessions = n;
@@ -344,6 +451,82 @@ mod tests {
         assert_eq!(c.session_timeout_ms, 100);
         assert_eq!(c.gen_capacity, 64);
         assert_eq!(c.conn_threads, 3);
+    }
+
+    #[test]
+    fn pattern_spec_json_round_trips_and_resolves() {
+        // Named patterns: JSON string → spec → JSON → spec; resolve
+        // validates through the MaskPattern grammar.
+        let j = Json::parse(r#""sink:4:128""#).unwrap();
+        let p = PatternSpec::from_json(&j).unwrap();
+        assert_eq!(p, PatternSpec::Named("sink:4:128".into()));
+        assert_eq!(PatternSpec::from_json(&p.to_json()).unwrap(), p);
+        assert_eq!(p.resolve().unwrap(), "sink:4:128");
+        assert!(PatternSpec::Named("window:0".into()).resolve().is_err());
+        assert!(PatternSpec::Named("bogus".into()).resolve().is_err());
+
+        // Inline bitmaps round-trip structurally (0/1 bits accepted on the
+        // way in, booleans on the way out) and resolve to a live registry
+        // reference.
+        let j =
+            Json::parse(r#"{"block":8,"q_blocks":2,"k_blocks":2,"bits":[1,0,0,1]}"#).unwrap();
+        let p = PatternSpec::from_json(&j).unwrap();
+        assert_eq!(
+            p,
+            PatternSpec::Bitmap {
+                block: 8,
+                q_blocks: 2,
+                k_blocks: 2,
+                bits: vec![true, false, false, true],
+            }
+        );
+        assert_eq!(PatternSpec::from_json(&p.to_json()).unwrap(), p);
+        let s = p.resolve().unwrap();
+        assert!(s.starts_with("bitmap:"), "{s}");
+        crate::attention::MaskPattern::parse(&s).unwrap();
+
+        // Shape and bit-value errors surface with their own messages.
+        let bad = PatternSpec::Bitmap {
+            block: 8,
+            q_blocks: 2,
+            k_blocks: 2,
+            bits: vec![true; 3],
+        };
+        let err = bad.resolve().unwrap_err();
+        assert!(err.to_string().contains("bitmap has 3 bits"), "{err:#}");
+        let j =
+            Json::parse(r#"{"block":8,"q_blocks":1,"k_blocks":1,"bits":[2]}"#).unwrap();
+        let err = PatternSpec::from_json(&j).unwrap_err();
+        assert!(err.to_string().contains("booleans or 0/1"), "{err:#}");
+        let err = PatternSpec::from_json(&Json::Num(3.0)).unwrap_err();
+        assert!(
+            err.to_string().contains("grammar string or a bitmap object"),
+            "{err:#}"
+        );
+    }
+
+    #[test]
+    fn configs_resolve_patterns_from_json() {
+        let j = Json::parse(r#"{"kernel":"tiled","pattern":"strided:4"}"#).unwrap();
+        let c = TrainConfig::from_json(&j).unwrap();
+        assert_eq!(c.pattern.as_deref(), Some("strided:4"));
+        assert_eq!(c.kernel.as_deref(), Some("tiled"));
+        assert!(TrainConfig::from_json(&Json::parse(r#"{"pattern":"window:0"}"#).unwrap())
+            .is_err());
+
+        let j = Json::parse(
+            r#"{"pattern":{"block":16,"q_blocks":1,"k_blocks":1,"bits":[true]}}"#,
+        )
+        .unwrap();
+        let c = ServeConfig::from_json(&j).unwrap();
+        assert!(c.pattern.as_deref().unwrap().starts_with("bitmap:"));
+        assert!(ServeConfig::from_json(
+            &Json::parse(r#"{"pattern":"dilated:0:2"}"#).unwrap()
+        )
+        .is_err());
+        // Patterns default off.
+        assert_eq!(ServeConfig::default().pattern, None);
+        assert_eq!(TrainConfig::default().pattern, None);
     }
 
     #[test]

@@ -32,6 +32,7 @@
 //!   are single rows and need no padding). Padding waste is tracked in
 //!   [`Metrics`] (see `router.rs` for why SQA cares less).
 
+use crate::attention::MaskPattern;
 use crate::config::ServeConfig;
 use crate::coordinator::batcher::{DynamicBatcher, PendingBatch, TickBatcher};
 use crate::coordinator::metrics::Metrics;
@@ -124,9 +125,11 @@ struct WorkerCtx {
     batch_dims: std::collections::BTreeMap<usize, usize>,
     fixed_batch: bool,
     vocab: usize,
-    /// Attention lowering override; `None` runs the backend default
-    /// (tiled streaming on native). Applies to encode; generation runs the
-    /// backend's configured default lowering.
+    /// Attention lowering override as a `kernel[+linalg][@pattern]` string;
+    /// `None` runs the backend default (dense tiled streaming on native).
+    /// Applies to encode batches *and* generation prefill — a prefilled
+    /// session keeps the pattern, so its decode steps mask cached positions
+    /// by the same rules.
     kernel: Option<String>,
     /// Completion channel back to the generation scheduler.
     gen_tx: mpsc::Sender<GenEvent>,
@@ -169,13 +172,32 @@ impl Engine {
         let entry = backend.variant(&cfg.family, &cfg.variant)?;
         let n_params = entry.n_params;
         let vocab = backend.family(&cfg.family)?.dims.vocab;
-        if let Some(k) = &cfg.kernel {
+        // A configured mask pattern composes into the attention-lowering
+        // string (`kernel[+linalg][@pattern]`); with no explicit kernel the
+        // pattern rides on the default tiled lowering. Validation splits at
+        // '@': the base must be one of the backend's lowerings, the pattern
+        // must parse (bitmap ids must already be registered).
+        let kernel = match &cfg.pattern {
+            None => cfg.kernel.clone(),
+            Some(p) => Some(format!(
+                "{}@{p}",
+                cfg.kernel.as_deref().unwrap_or("tiled")
+            )),
+        };
+        if let Some(k) = &kernel {
+            let (base, pattern) = match k.split_once('@') {
+                Some((b, p)) => (b, Some(p)),
+                None => (k.as_str(), None),
+            };
             anyhow::ensure!(
-                backend.impls().iter().any(|i| *i == k.as_str()),
-                "kernel {k:?} unknown to the {} backend (have {:?})",
+                backend.impls().iter().any(|i| *i == base),
+                "kernel {base:?} unknown to the {} backend (have {:?})",
                 backend.name(),
                 backend.impls()
             );
+            if let Some(p) = pattern {
+                MaskPattern::parse(p).with_context(|| format!("serve pattern {p:?}"))?;
+            }
         }
 
         // Resolve parameters on host once; workers share the vector.
@@ -275,7 +297,7 @@ impl Engine {
                 batch_dims: batch_dims.clone(),
                 fixed_batch: backend.fixed_fwd_batch(),
                 vocab,
-                kernel: cfg.kernel.clone(),
+                kernel: kernel.clone(),
                 gen_tx: gen_tx.clone(),
             };
             let jobq = Arc::clone(&jobq);
@@ -814,10 +836,27 @@ fn worker_loop(ctx: WorkerCtx, jobq: Arc<JobQueue>, metrics: Arc<Metrics>) -> Re
                 capacity,
             } => {
                 let t0 = Instant::now();
-                let result = ctx
-                    .backend
-                    .prefill(&ctx.family, &ctx.variant, &ctx.params, &tokens, capacity)
-                    .map_err(|e| format!("{e:#}"));
+                // An explicit lowering routes prefill through the impl
+                // entry point; the session then decodes under the same
+                // kernel/pattern selection.
+                let result = match &ctx.kernel {
+                    Some(k) => ctx.backend.prefill_impl(
+                        k,
+                        &ctx.family,
+                        &ctx.variant,
+                        &ctx.params,
+                        &tokens,
+                        capacity,
+                    ),
+                    None => ctx.backend.prefill(
+                        &ctx.family,
+                        &ctx.variant,
+                        &ctx.params,
+                        &tokens,
+                        capacity,
+                    ),
+                }
+                .map_err(|e| format!("{e:#}"));
                 let _ = ctx.gen_tx.send(GenEvent::PrefillDone {
                     gen,
                     result,

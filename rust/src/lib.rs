@@ -47,6 +47,43 @@
 //! `-inf`-saturated rows yield zeros, never NaN, and large-magnitude
 //! logits never overflow the accumulator (`attention::tiled` unit tests).
 //!
+//! ### Sparse mask patterns and the visibility seam
+//!
+//! On top of the causal/window flags, [`attention::Spec`] carries a
+//! per-head [`attention::MaskPattern`] — `dense`, `window:W`, `strided:T`,
+//! `dilated:W:T`, `sink:S:W`, a registered block [`attention::BlockBitmap`],
+//! or a per-head table (`heads:N`) — parsed from the same grammar strings
+//! the CLI (`--pattern`), the configs and the backend's
+//! `kernel[+linalg][@pattern]` impl strings use. Effective visibility is
+//! always the *conjunction* `causal ∧ window ∧ pattern`. Every kernel
+//! consults one seam, [`attention::ResolvedMask`], and the suites pin its
+//! invariants:
+//!
+//! * **one definition** — `ResolvedMask::visible(i, j)` is the per-element
+//!   truth; the naive oracle applies it directly, and the tiled forward,
+//!   the streaming backward and the decode path must agree with the
+//!   oracle to 1e-4 for every pattern × geometry × length
+//!   (`tiled_differential.rs`, `grad_differential.rs`,
+//!   `decode_differential.rs` — so prefilled sessions can never drift
+//!   from the stateless forward);
+//! * **exact tile pruning** — `tile_visible` decides a whole
+//!   `[q_tile × k_tile]` block from the diagonal interval it spans
+//!   (`i − j` bands for window/strided/dilated, a sink rectangle union,
+//!   block lookups for bitmaps), and `visited_key_tiles` must equal the
+//!   per-element visible-tile set exactly — no tile skipped that holds a
+//!   visible key, none touched that doesn't (`properties.rs`), with
+//!   sub-dense counts at scale pinned as integers
+//!   (`pattern_tiles` in `BENCH_attention.json`, the `--enforce-sparse`
+//!   CI guard);
+//! * **totality under patterns** — a row whose whole pattern row is masked
+//!   streams to exactly-zero outputs, `lse = −inf`, and exactly-zero
+//!   gradients, never NaN; pattern-invisible keys contribute neither to
+//!   the running block max nor to dK/dV;
+//! * **bitmap alignment** — block bitmaps must tile evenly
+//!   (`block % tile == 0`, checked up front), and registry ids
+//!   (`bitmap:N`, `heads:N`) must be registered before use — misuse is a
+//!   validation error, not a silent dense fallback.
+//!
 //! ## Generation (prefill + incremental decode)
 //!
 //! The paper's second axis — memory-bound token-by-token decode governed

@@ -68,9 +68,11 @@ USAGE: sqa <command> [--flags]
 COMMANDS
   train     --family tiny --variant sqa --steps 200 --lr 1e-2 --seed 42
             [--kernel tiled|naive|tiled+scalar|naive+scalar]
+            [--pattern dense|window:W|strided:T|dilated:W:T|sink:S:W|bitmap:N]
             [--checkpoint-dir DIR --checkpoint-every N --report OUT.json]
   serve     --family tiny --variant sqa --addr 127.0.0.1:7433
             [--max-batch 8 --max-wait-ms 5 --workers 2 --kernel tiled|naive]
+            [--pattern dense|window:W|strided:T|dilated:W:T|sink:S:W|bitmap:N]
             [--max-sessions 4 --session-timeout-ms 30000 --gen-capacity 0
              --conn-threads 8]
   encode    --addr 127.0.0.1:7433 (--text \"...\" | --tokens 1,2,3 | --metrics)
@@ -93,11 +95,22 @@ too — flash-style streaming (LSE reuse, blocked micro-GEMMs) for tiled,
 the scalar row-loop oracle for naive. `bench kernels` sweeps naive vs
 tiled; `cargo bench --bench train_throughput` records the fwd/bwd split
 step times (BENCH_train.json).
+Pattern: `serve --pattern` and `train --pattern` compose a block-sparse
+mask into the lowering (`kernel[+linalg][@pattern]` — a pattern without
+--kernel rides on tiled): window:W is a local band |i-j|<W, strided:T keeps
+|i-j|%T==0, dilated:W:T is W taps spaced T apart, sink:S:W adds S global
+attention-sink keys to a local band, bitmap:N references a registered block
+bitmap (JSON configs can inline one as {block,q_blocks,k_blocks,bits}).
+Patterns AND with the causal/window mask; the tiled kernels skip whole
+invisible key tiles, so sparse patterns drop visited-tile counts
+sub-quadratically (see `cargo bench --bench native_attention`).
 Generate: prompts prefill once (compute-bound, where SQA wins) into a
 per-session KV cache sized by the variant's Hkv, then decode token-by-token
 (memory-bound, where the cache size rules); concurrent generations batch
-their decode steps per worker tick. `cargo bench --bench decode_throughput`
-sweeps measured tokens/s and bytes/step across the variant zoo.
+their decode steps per worker tick. Generation inherits the *server's*
+--pattern (sessions keep the mask from prefill through every decode step);
+there is no per-request pattern switch. `cargo bench --bench
+decode_throughput` sweeps measured tokens/s and bytes/step across the zoo.
 ";
 
 fn cmd_train(mut args: Args) -> Result<()> {
@@ -112,6 +125,7 @@ fn cmd_train(mut args: Args) -> Result<()> {
         checkpoint_every: args.usize("checkpoint-every", 0)?,
         log_every: args.usize("log-every", 10)?,
         kernel: args.str_opt("kernel"),
+        pattern: args.str_opt("pattern"),
         ..TrainConfig::default()
     };
     cfg.schedule.base_lr = args.f64("lr", 1e-2)?;
@@ -157,6 +171,7 @@ fn cmd_serve(mut args: Args) -> Result<()> {
         workers: args.usize("workers", 2)?,
         queue_capacity: args.usize("queue", 64)?,
         kernel: args.str_opt("kernel"),
+        pattern: args.str_opt("pattern"),
         max_sessions: args.usize("max-sessions", 4)?,
         session_timeout_ms: args.usize("session-timeout-ms", 30_000)? as u64,
         gen_capacity: args.usize("gen-capacity", 0)?,

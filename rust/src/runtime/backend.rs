@@ -173,6 +173,26 @@ pub trait Backend: Send + Sync {
         bail!("backend {:?} has no incremental decode path", self.name())
     }
 
+    /// [`Backend::prefill`] through a specific attention lowering — the same
+    /// `kernel[+linalg][@pattern]` strings as [`Backend::forward_impl`]. The
+    /// session remembers the selection: every subsequent
+    /// [`Backend::decode_step`] masks its cached positions by the same
+    /// pattern rules the prefill ran with.
+    fn prefill_impl(
+        &self,
+        impl_: &str,
+        _family: &str,
+        _variant: &str,
+        _params: &[f32],
+        _tokens: &[i32],
+        _capacity: usize,
+    ) -> Result<(u64, Vec<f32>)> {
+        bail!(
+            "backend {:?} has no incremental decode path for impl {impl_:?}",
+            self.name()
+        )
+    }
+
     /// One incremental decode step: append `token` to the session's cache
     /// and return the new position's logits `[vocab]` (memory-bound: the
     /// step streams the whole cache but computes only one query row).

@@ -38,7 +38,7 @@
 use crate::attention::backward::{self, attn_probs};
 use crate::attention::decode::decode_attend;
 use crate::attention::tensor::Tensor;
-use crate::attention::{sqa_layer_slices, tiled, visible_range, Kernel, Spec};
+use crate::attention::{sqa_layer_slices, tiled, visible_range, Kernel, MaskPattern, Spec};
 use crate::linalg;
 use crate::runtime::backend::{Backend, SessionStats};
 use crate::runtime::catalog::{self, Geometry, Layout};
@@ -93,17 +93,24 @@ impl Default for NativeBackend {
     }
 }
 
-/// Parse a `forward_impl` string: `kernel[+linalg]`, e.g. `"tiled"`,
-/// `"naive"`, `"tiled+scalar"`, `"naive+blocked"`. A bare kernel name
+/// Parse a `forward_impl` string: `kernel[+linalg][@pattern]`, e.g.
+/// `"tiled"`, `"naive"`, `"tiled+scalar"`, `"naive+blocked"`,
+/// `"tiled@strided:4"`, `"tiled+scalar@sink:4:64"`. A bare kernel name
 /// leaves the linalg choice `None` so the caller falls back to the
 /// backend's configured default — a bare `"naive"` under
 /// `SQA_LINALG=scalar` must not silently re-enable the blocked GEMMs
-/// under test.
-fn parse_impl(s: &str) -> Result<(Kernel, Option<linalg::Impl>)> {
-    match s.split_once('+') {
-        Some((k, l)) => Ok((Kernel::parse(k)?, Some(linalg::Impl::parse(l)?))),
-        None => Ok((Kernel::parse(s)?, None)),
-    }
+/// under test. A missing `@pattern` suffix likewise leaves the model's
+/// catalog mask untouched ([`MaskPattern::Dense`]).
+fn parse_impl(s: &str) -> Result<(Kernel, Option<linalg::Impl>, Option<MaskPattern>)> {
+    let (base, pattern) = match s.split_once('@') {
+        Some((b, p)) => (b, Some(MaskPattern::parse(p)?)),
+        None => (s, None),
+    };
+    let (kernel, imp) = match base.split_once('+') {
+        Some((k, l)) => (Kernel::parse(k)?, Some(linalg::Impl::parse(l)?)),
+        None => (Kernel::parse(base)?, None),
+    };
+    Ok((kernel, imp, pattern))
 }
 
 impl NativeBackend {
@@ -162,10 +169,30 @@ impl NativeBackend {
                 hkv: var.cfg.hkv,
                 causal: fam.causal,
                 window: var.cfg.window,
+                pattern: MaskPattern::Dense,
             },
             kernel,
             linalg,
         })
+    }
+
+    /// Overlay an impl-string `@pattern` suffix on a catalog model's mask,
+    /// re-validating the composed spec (unregistered bitmap/table ids and
+    /// degenerate patterns are rejected here, before any kernel runs).
+    fn model_with_pattern(
+        &self,
+        family: &str,
+        variant: &str,
+        kernel: Kernel,
+        linalg: linalg::Impl,
+        pattern: Option<MaskPattern>,
+    ) -> Result<Model> {
+        let mut model = self.model_with_impls(family, variant, kernel, linalg)?;
+        if let Some(p) = pattern {
+            model.spec = model.spec.with_pattern(p);
+            model.spec.validate()?;
+        }
+        Ok(model)
     }
 
     fn check_batch(
@@ -348,10 +375,10 @@ impl NativeBackend {
         batch: usize,
         seq: usize,
     ) -> Result<(f32, Vec<f32>)> {
-        let (kernel, imp) = parse_impl(impl_)
+        let (kernel, imp, pattern) = parse_impl(impl_)
             .with_context(|| format!("native backend has no train impl {impl_:?}"))?;
         let model =
-            self.model_with_impls(family, variant, kernel, imp.unwrap_or(self.linalg))?;
+            self.model_with_pattern(family, variant, kernel, imp.unwrap_or(self.linalg), pattern)?;
         self.check_batch(&model, params, tokens, batch, seq)?;
         ensure!(targets.len() == batch * seq, "targets/tokens length mismatch");
         let vocab = model.lay.vocab as i32;
@@ -377,6 +404,40 @@ impl NativeBackend {
             }
         }
         Ok(((loss_sum / (batch * seq) as f64) as f32, grad))
+    }
+
+    /// Shared session setup behind [`Backend::prefill`] and
+    /// [`Backend::prefill_impl`]: validates the prompt/capacity geometry,
+    /// allocates the per-layer KV cache, and stores the (possibly
+    /// pattern-carrying) model with the session.
+    fn prefill_model(
+        &self,
+        model: Model,
+        family: &str,
+        params: &[f32],
+        tokens: &[i32],
+        capacity: usize,
+    ) -> Result<(u64, Vec<f32>)> {
+        ensure!(
+            model.spec.causal,
+            "prefill/decode needs a causal family (got {family:?})"
+        );
+        ensure!(capacity > 0, "session capacity must be positive");
+        ensure!(!tokens.is_empty(), "empty prompt");
+        ensure!(
+            tokens.len() <= capacity,
+            "prompt of {} tokens exceeds the session cache capacity {capacity}",
+            tokens.len()
+        );
+        self.check_batch(&model, params, tokens, 1, tokens.len())?;
+        let mut kv = KvCache::new(
+            model.lay.n_layers,
+            capacity,
+            model.lay.hkv * model.lay.d_head,
+        );
+        let logits = prefill_row(&model, params, tokens, &mut kv, Some(&self.pool))?;
+        let id = self.sessions.insert(DecodeSession { model, kv });
+        Ok((id, logits))
     }
 }
 
@@ -472,10 +533,10 @@ impl Backend for NativeBackend {
         batch: usize,
         seq: usize,
     ) -> Result<(f32, f32)> {
-        let (kernel, imp) = parse_impl(impl_)
+        let (kernel, imp, pattern) = parse_impl(impl_)
             .with_context(|| format!("native backend has no train impl {impl_:?}"))?;
         let model =
-            self.model_with_impls(family, variant, kernel, imp.unwrap_or(self.linalg))?;
+            self.model_with_pattern(family, variant, kernel, imp.unwrap_or(self.linalg), pattern)?;
         self.train_step_model(model, state, step, lr, tokens, targets, batch, seq)
     }
 
@@ -523,10 +584,10 @@ impl Backend for NativeBackend {
         batch: usize,
         seq: usize,
     ) -> Result<Vec<f32>> {
-        let (kernel, imp) = parse_impl(impl_)
+        let (kernel, imp, pattern) = parse_impl(impl_)
             .with_context(|| format!("native backend has no attention impl {impl_:?}"))?;
         let model =
-            self.model_with_impls(family, variant, kernel, imp.unwrap_or(self.linalg))?;
+            self.model_with_pattern(family, variant, kernel, imp.unwrap_or(self.linalg), pattern)?;
         self.forward_model(model, params, tokens, batch, seq)
     }
 
@@ -545,26 +606,25 @@ impl Backend for NativeBackend {
         capacity: usize,
     ) -> Result<(u64, Vec<f32>)> {
         let model = self.model(family, variant)?;
-        ensure!(
-            model.spec.causal,
-            "prefill/decode needs a causal family (got {family:?})"
-        );
-        ensure!(capacity > 0, "session capacity must be positive");
-        ensure!(!tokens.is_empty(), "empty prompt");
-        ensure!(
-            tokens.len() <= capacity,
-            "prompt of {} tokens exceeds the session cache capacity {capacity}",
-            tokens.len()
-        );
-        self.check_batch(&model, params, tokens, 1, tokens.len())?;
-        let mut kv = KvCache::new(
-            model.lay.n_layers,
-            capacity,
-            model.lay.hkv * model.lay.d_head,
-        );
-        let logits = prefill_row(&model, params, tokens, &mut kv, Some(&self.pool))?;
-        let id = self.sessions.insert(DecodeSession { model, kv });
-        Ok((id, logits))
+        self.prefill_model(model, family, params, tokens, capacity)
+    }
+
+    fn prefill_impl(
+        &self,
+        impl_: &str,
+        family: &str,
+        variant: &str,
+        params: &[f32],
+        tokens: &[i32],
+        capacity: usize,
+    ) -> Result<(u64, Vec<f32>)> {
+        let (kernel, imp, pattern) = parse_impl(impl_)
+            .with_context(|| format!("native backend has no attention impl {impl_:?}"))?;
+        let model =
+            self.model_with_pattern(family, variant, kernel, imp.unwrap_or(self.linalg), pattern)?;
+        // The session keeps the pattern-carrying model, so every subsequent
+        // decode_step masks its cached positions by the same rules.
+        self.prefill_model(model, family, params, tokens, capacity)
     }
 
     fn decode_step(&self, session: u64, params: &[f32], token: i32) -> Result<Vec<f32>> {
@@ -725,7 +785,7 @@ fn attend_slabs(
                     let hk = h / group;
                     tiled::stream_head(
                         q, dq_cols, h * dh, k, dkv_cols, hk * dh, v, o, dq_cols, h * dh, s,
-                        dh, spec, cfg, scale,
+                        dh, spec.for_head(h), cfg, scale,
                     );
                 }
             }
@@ -734,10 +794,11 @@ fn attend_slabs(
             let mut probs = vec![0.0f32; s];
             for h in 0..hq {
                 let hk = h / group;
+                let rm = spec.for_head(h).resolved();
                 for i in 0..s {
                     let (lo, hi) = visible_range(i, s, spec);
                     attn_probs(
-                        q, k, i, h, hk, s, dh, dq_cols, dkv_cols, scale, lo, hi, &mut probs,
+                        q, k, i, h, hk, s, dh, dq_cols, dkv_cols, scale, lo, hi, &rm, &mut probs,
                     );
                     let oi = i * dq_cols + h * dh;
                     for j in lo..hi {
@@ -1133,6 +1194,71 @@ mod tests {
             .unwrap();
         assert_eq!(default, explicit);
         assert_eq!(b.impls(), vec!["tiled", "naive", "tiled+scalar", "naive+scalar"]);
+    }
+
+    #[test]
+    fn pattern_impl_strings_select_masks_and_agree_across_kernels() {
+        let b = backend();
+        let params = b.init_params("tiny", "sqa", 4).unwrap();
+        let tokens: Vec<i32> = (0..16).map(|i| (i * 97 % 2048) as i32).collect();
+        let dense = b.forward("tiny", "sqa", &params, &tokens, 1, 16).unwrap();
+        let diff = |a: &[f32], b: &[f32]| {
+            a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0f32, f32::max)
+        };
+        for pat in ["strided:3", "sink:2:4", "window:5", "dilated:2:3"] {
+            let tiled = b
+                .forward_impl(&format!("tiled@{pat}"), "tiny", "sqa", &params, &tokens, 1, 16)
+                .unwrap();
+            let naive = b
+                .forward_impl(&format!("naive+scalar@{pat}"), "tiny", "sqa", &params, &tokens, 1, 16)
+                .unwrap();
+            assert!(diff(&tiled, &naive) < 1e-3, "{pat} diverges by {}", diff(&tiled, &naive));
+            assert!(
+                diff(&tiled, &dense) > 1e-3,
+                "{pat} must actually change the mask"
+            );
+        }
+        // `@dense` is the identity overlay.
+        let explicit = b
+            .forward_impl("tiled@dense", "tiny", "sqa", &params, &tokens, 1, 16)
+            .unwrap();
+        assert_eq!(explicit, dense);
+        // Degenerate and unknown patterns are rejected up front.
+        for bad in ["tiled@strided:0", "tiled@window:0", "tiled@bogus", "tiled@bitmap:999999"] {
+            assert!(
+                b.forward_impl(bad, "tiny", "sqa", &params, &tokens, 1, 16).is_err(),
+                "{bad} must be rejected"
+            );
+        }
+    }
+
+    #[test]
+    fn prefill_impl_pattern_sessions_decode_like_the_pattern_forward() {
+        // A session opened with a pattern must mask its cached positions by
+        // the same rules as a stateless pattern forward — every decode step.
+        let b = backend();
+        let params = b.init_params("tiny", "sqa", 12).unwrap();
+        let tokens: Vec<i32> = (0..12).map(|i| ((i * 53 + 5) % 2048) as i32).collect();
+        let vocab = 2048usize;
+        let diff = |a: &[f32], b: &[f32]| {
+            a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0f32, f32::max)
+        };
+        let imp = "tiled@sink:2:4";
+        let full = b
+            .forward_impl(imp, "tiny", "sqa", &params, &tokens, 1, 12)
+            .unwrap();
+        let (sid, logits) = b
+            .prefill_impl(imp, "tiny", "sqa", &params, &tokens[..4], 32)
+            .unwrap();
+        assert!(diff(&logits, &full[3 * vocab..4 * vocab]) < 1e-4);
+        for i in 4..12 {
+            let l = b.decode_step(sid, &params, tokens[i]).unwrap();
+            assert!(
+                diff(&l, &full[i * vocab..(i + 1) * vocab]) < 1e-4,
+                "pattern decode diverges at position {i}"
+            );
+        }
+        assert!(b.close_session(sid));
     }
 
     #[test]

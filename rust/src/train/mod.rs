@@ -118,12 +118,19 @@ impl Trainer {
 
     /// Execute one fused AdamW step — on the backend's default lowering,
     /// or through [`TrainConfig::kernel`]'s explicit `kernel[+linalg]`
-    /// choice (both the forward and the attention backward switch).
+    /// choice (both the forward and the attention backward switch). A
+    /// [`TrainConfig::pattern`] composes into the same lowering string as
+    /// `kernel[+linalg][@pattern]` — a pattern alone rides on the default
+    /// tiled kernel, so sparse masks train through the streaming backward.
     pub fn step_once(&mut self) -> Result<StepLog> {
         let t0 = Instant::now();
         let batch = self.train_data.next_batch();
         let lr = self.cfg.schedule.lr_at(self.step);
-        let (loss, acc) = match self.cfg.kernel.clone() {
+        let impl_choice = match (&self.cfg.kernel, &self.cfg.pattern) {
+            (k, None) => k.clone(),
+            (k, Some(p)) => Some(format!("{}@{p}", k.as_deref().unwrap_or("tiled"))),
+        };
+        let (loss, acc) = match impl_choice {
             Some(impl_) => self.backend.train_step_impl(
                 &impl_,
                 &self.cfg.family,

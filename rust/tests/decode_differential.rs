@@ -78,6 +78,51 @@ fn incremental_decode_matches_forward_for_ssqa_and_window_variants() {
 }
 
 #[test]
+fn pattern_sessions_decode_like_their_pattern_forward() {
+    // Sparse masks must not drift between prefill and decode: a session
+    // opened through `tiled@<pattern>` has to reproduce the stateless
+    // `forward_impl` rows of the *same* pattern at every position — and
+    // the naive lowering of the same pattern must agree too.
+    let b = NativeBackend::new();
+    let tokens = prompt_tokens(20);
+    let (split, t_len) = (7usize, 20usize);
+    for variant in ["sqa", "gqa"] {
+        let params = b.init_params("tiny", variant, 5).unwrap();
+        for pat in ["window:5", "strided:3", "dilated:2:3", "sink:2:4"] {
+            let tiled = format!("tiled@{pat}");
+            let naive = format!("naive@{pat}");
+            let full = b
+                .forward_impl(&tiled, "tiny", variant, &params, &tokens, 1, t_len)
+                .unwrap();
+            let full_n = b
+                .forward_impl(&naive, "tiny", variant, &params, &tokens, 1, t_len)
+                .unwrap();
+            assert!(max_diff(&full, &full_n) < 1e-4, "{variant}@{pat}: kernels");
+            let (sid, logits) = b
+                .prefill_impl(&tiled, "tiny", variant, &params, &tokens[..split], t_len)
+                .unwrap();
+            let d = max_diff(&logits, &full[(split - 1) * VOCAB..split * VOCAB]);
+            assert!(d < 1e-4, "{variant}@{pat}: prefill logits diverge by {d}");
+            for i in split..t_len {
+                let l = b.decode_step(sid, &params, tokens[i]).unwrap();
+                let d = max_diff(&l, &full[i * VOCAB..(i + 1) * VOCAB]);
+                assert!(d < 1e-4, "{variant}@{pat}: step {i} diverges by {d}");
+            }
+            assert!(b.close_session(sid));
+            // The pattern is load-bearing: it must differ from the dense run
+            // once the context outgrows the local window.
+            let dense = b
+                .forward_impl("tiled", "tiny", variant, &params, &tokens, 1, t_len)
+                .unwrap();
+            assert!(
+                max_diff(&full, &dense) > 1e-3,
+                "{variant}@{pat}: pattern masked nothing"
+            );
+        }
+    }
+}
+
+#[test]
 fn single_token_prompt_decodes_correctly() {
     // The smallest possible prefill: one token, then decode from there.
     let b = NativeBackend::new();

@@ -12,10 +12,9 @@ fn load_case(path: &std::path::Path) -> (Spec, Tensor, Tensor, Tensor, Tensor) {
     let get = |k: &str| j.req(k).unwrap().as_usize().unwrap();
     let (hq, hkv, s, d) = (get("hq"), get("hkv"), get("seq"), get("d"));
     let spec = Spec {
-        hq,
-        hkv,
         causal: j.req("causal").unwrap().as_bool().unwrap(),
         window: j.get("window").and_then(|w| w.as_usize()),
+        ..Spec::full(hq, hkv)
     };
     let arr = |k: &str, shape: &[usize]| {
         let data: Vec<f32> = j

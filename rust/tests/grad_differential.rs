@@ -112,10 +112,9 @@ fn tiled_backward_matches_oracle_across_spec_grid() {
                 for imp in [Impl::Scalar, Impl::Blocked] {
                     seed += 10;
                     let spec = Spec {
-                        hq,
-                        hkv,
                         causal,
                         window,
+                        ..Spec::full(hq, hkv)
                     };
                     let ((dq_t, dk_t, dv_t), (dq_n, dk_n, dv_n)) =
                         both_backwards(hq, hkv, s, 4, spec, imp, seed);
@@ -135,6 +134,96 @@ fn tiled_backward_matches_oracle_across_spec_grid() {
                 }
             }
         }
+    }
+}
+
+#[test]
+fn tiled_backward_matches_oracle_under_sparse_patterns() {
+    // The pattern axis of the gradient grid: the streaming backward's
+    // tile skipping and LSE recompute must reproduce the per-element
+    // oracle's gradients under every sparse built-in, both lowerings.
+    use sqa::attention::MaskPattern;
+    let patterns = [
+        MaskPattern::Window { window: 5 },
+        MaskPattern::Strided { stride: 3 },
+        MaskPattern::Dilated { window: 2, stride: 3 },
+        MaskPattern::SinkLocal { sinks: 2, window: 4 },
+    ];
+    let mut seed = 4000;
+    for &pattern in &patterns {
+        for &(geom, hq, hkv) in GEOMETRIES {
+            for &causal in &[false, true] {
+                for &s in SEQS {
+                    for imp in [Impl::Scalar, Impl::Blocked] {
+                        seed += 10;
+                        let spec = Spec {
+                            causal,
+                            ..Spec::full(hq, hkv)
+                        }
+                        .with_pattern(pattern);
+                        let ((dq_t, dk_t, dv_t), (dq_n, dk_n, dv_n)) =
+                            both_backwards(hq, hkv, s, 4, spec, imp, seed);
+                        for (name, t, n) in [
+                            ("dq", &dq_t, &dq_n),
+                            ("dk", &dk_t, &dk_n),
+                            ("dv", &dv_t, &dv_n),
+                        ] {
+                            let diff = max_diff(t, n);
+                            assert!(
+                                diff < TOL,
+                                "{geom} (Hq={hq} Hkv={hkv}) {pattern:?} causal={causal} \
+                                 s={s} {imp:?}: {name} diff {diff}"
+                            );
+                            assert!(t.iter().all(|x| x.is_finite()));
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn pattern_masked_slices_get_exactly_zero_gradients() {
+    // A bitmap with a fully masked query block (rows [8, 16)) and a key
+    // block nobody can see (keys [8, 16)): both backwards must emit
+    // exactly-zero gradients for those slices — never NaN — while the
+    // live slices still carry gradient and agree between kernels.
+    use sqa::attention::{pattern, BlockBitmap, MaskPattern};
+    let id = pattern::register_bitmap(
+        BlockBitmap::new(
+            TILE,
+            3,
+            3,
+            vec![
+                true, false, false, //
+                false, false, false, // query rows [8, 16): fully masked
+                true, false, true, //  key column [8, 16): never visible
+            ],
+        )
+        .unwrap(),
+    );
+    let (hq, hkv, s, d) = (4usize, 2usize, 3 * TILE, 4usize);
+    let spec = Spec::causal(hq, hkv).with_pattern(MaskPattern::Bitmap(id));
+    let (dq_cols, dkv_cols) = (hq * d, hkv * d);
+    for imp in [Impl::Scalar, Impl::Blocked] {
+        let ((dq_t, dk_t, dv_t), (dq_n, dk_n, dv_n)) =
+            both_backwards(hq, hkv, s, d, spec, imp, 8800);
+        for (name, t, n) in [
+            ("dq", &dq_t, &dq_n),
+            ("dk", &dk_t, &dk_n),
+            ("dv", &dv_t, &dv_n),
+        ] {
+            assert!(max_diff(t, n) < TOL, "{name} {imp:?}");
+            assert!(t.iter().all(|x| x.is_finite()), "{name} {imp:?}");
+        }
+        let masked_q = TILE * dq_cols..2 * TILE * dq_cols;
+        let masked_kv = TILE * dkv_cols..2 * TILE * dkv_cols;
+        assert!(dq_t[masked_q].iter().all(|&x| x == 0.0), "{imp:?}: dq");
+        assert!(dk_t[masked_kv.clone()].iter().all(|&x| x == 0.0), "{imp:?}: dk");
+        assert!(dv_t[masked_kv].iter().all(|&x| x == 0.0), "{imp:?}: dv");
+        assert!(dq_t[..TILE * dq_cols].iter().any(|&x| x != 0.0), "{imp:?}");
+        assert!(dk_t[..TILE * dkv_cols].iter().any(|&x| x != 0.0), "{imp:?}");
     }
 }
 

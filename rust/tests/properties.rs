@@ -5,8 +5,10 @@
 //! GEMM equivalence of `sqa::linalg`.
 
 use sqa::attention::backward::{backward_tiled_slabs, forward_slabs_lse};
-use sqa::attention::tiled::{attention_tiled_cfg, visited_key_tiles, TileConfig};
-use sqa::attention::{attention, tensor::Tensor, Spec};
+use sqa::attention::tiled::{
+    attention_tiled_cfg, attention_tiled_parallel, visited_key_tiles, TileConfig,
+};
+use sqa::attention::{attention, tensor::Tensor, MaskPattern, Spec};
 use sqa::util::threadpool::ThreadPool;
 use sqa::linalg::{self, Impl};
 use sqa::coordinator::batcher::DynamicBatcher;
@@ -39,10 +41,9 @@ fn prop_attention_output_in_value_hull() {
         let k = randn_tensor(&[1, *hkv, *s, 4], &mut rng);
         let v = randn_tensor(&[1, *hkv, *s, 4], &mut rng);
         let spec = Spec {
-            hq,
-            hkv: *hkv,
             causal: window.is_none(), // exercise both mask kinds
             window: *window,
+            ..Spec::full(hq, *hkv)
         };
         let out = attention(&q, &k, &v, spec).map_err(|e| e.to_string())?;
         for h in 0..hq {
@@ -114,10 +115,9 @@ fn prop_tiled_softmax_rows_sum_to_one() {
         let k = randn_tensor(&[1, *hkv, *s, d], &mut rng);
         let v = Tensor::from_vec(&[1, *hkv, *s, d], vec![1.0; *hkv * *s * d]).unwrap();
         let spec = Spec {
-            hq,
-            hkv: *hkv,
             causal: window.is_none(),
             window: *window,
+            ..Spec::full(hq, *hkv)
         };
         let cfg = TileConfig::new(*tile, *tile).map_err(|e| e.to_string())?;
         let out = attention_tiled_cfg(&q, &k, &v, spec, cfg).map_err(|e| e.to_string())?;
@@ -148,10 +148,9 @@ fn prop_tiled_invariant_to_kv_outside_window() {
         let k = randn_tensor(&[1, hkv, *s, d], &mut rng);
         let v = randn_tensor(&[1, hkv, *s, d], &mut rng);
         let spec = Spec {
-            hq,
-            hkv,
             causal: rng.bool(0.5),
             window: Some(*window),
+            ..Spec::full(hq, hkv)
         };
         let cfg = TileConfig::new(*tile, *tile).map_err(|e| e.to_string())?;
         let out1 = attention_tiled_cfg(&q, &k, &v, spec, cfg).map_err(|e| e.to_string())?;
@@ -199,17 +198,16 @@ fn prop_visited_key_tiles_agree_with_visible_range() {
     );
     check(29, 150, &gen, |((s, k_tile), (window, causal))| {
         let spec = Spec {
-            hq: 1,
-            hkv: 1,
             causal: *causal,
             window: *window,
+            ..Spec::full(1, 1)
         };
         let q_tile = 4usize;
         let mut i0 = 0;
         while i0 < *s {
             let i1 = (i0 + q_tile).min(*s);
             let visited: std::collections::BTreeSet<usize> =
-                visited_key_tiles(i0, i1, *s, spec, *k_tile).collect();
+                visited_key_tiles(i0, i1, *s, spec, *k_tile).into_iter().collect();
             let mut expect = std::collections::BTreeSet::new();
             for i in i0..i1 {
                 let (lo, hi) = sqa::attention::visible_range(i, *s, spec);
@@ -253,10 +251,9 @@ fn prop_backward_grads_outside_visible_window_are_exactly_zero() {
         let k = fill(*s * dkv_cols);
         let v = fill(*s * dkv_cols);
         let spec = Spec {
-            hq,
-            hkv,
             causal: *causal,
             window: Some(*window),
+            ..Spec::full(hq, hkv)
         };
         let scale = 1.0 / (d as f32).sqrt();
         let cfg = TileConfig::new(*tile, *tile).map_err(|e| e.to_string())?;
@@ -330,10 +327,9 @@ fn prop_backward_bitwise_deterministic_across_pool_sizes() {
         let v = fill(*s * dkv_cols);
         let dout = fill(*s * dq_cols);
         let spec = Spec {
-            hq,
-            hkv,
             causal: window.is_none(),
             window: *window,
+            ..Spec::full(hq, hkv)
         };
         let scale = 1.0 / (d as f32).sqrt();
         let cfg = TileConfig::new(*tile, *tile).map_err(|e| e.to_string())?;
@@ -356,6 +352,214 @@ fn prop_backward_bitwise_deterministic_across_pool_sizes() {
         }
         if serial != run(Some(&pool5)) {
             return Err("5-worker pool diverged from serial".into());
+        }
+        Ok(())
+    });
+}
+
+/// Sparse patterns keep the visited-tile seam honest: for every pattern the
+/// tiles the kernel visits are exactly the tiles holding at least one
+/// effectively-visible (i, j) pair — per-element brute force as the oracle.
+#[test]
+fn prop_visited_key_tiles_match_elementwise_visibility_under_patterns() {
+    let gen = Pair(
+        Pair(UsizeRange { lo: 1, hi: 40 }, UsizeRange { lo: 1, hi: 7 }), // (s, k_tile)
+        Pair(
+            Choice(vec![
+                MaskPattern::Dense,
+                MaskPattern::Window { window: 5 },
+                MaskPattern::Strided { stride: 3 },
+                MaskPattern::Dilated { window: 2, stride: 3 },
+                MaskPattern::SinkLocal { sinks: 2, window: 4 },
+            ]),
+            Choice(vec![false, true]),
+        ),
+    );
+    check(47, 150, &gen, |((s, k_tile), (pattern, causal))| {
+        let spec = Spec {
+            causal: *causal,
+            ..Spec::full(1, 1)
+        }
+        .with_pattern(*pattern);
+        let rm = spec.resolved();
+        let q_tile = 4usize;
+        let mut i0 = 0;
+        while i0 < *s {
+            let i1 = (i0 + q_tile).min(*s);
+            let visited: std::collections::BTreeSet<usize> =
+                visited_key_tiles(i0, i1, *s, spec, *k_tile).into_iter().collect();
+            let mut expect = std::collections::BTreeSet::new();
+            for i in i0..i1 {
+                for j in 0..*s {
+                    if rm.visible(i, j) {
+                        expect.insert(j / *k_tile);
+                    }
+                }
+            }
+            if visited != expect {
+                return Err(format!(
+                    "{pattern:?} causal={causal} qtile [{i0},{i1}): \
+                     visited {visited:?} != visible {expect:?}"
+                ));
+            }
+            i0 = i1;
+        }
+        Ok(())
+    });
+}
+
+/// The paper-scale sparsity claim, pinned analytically: at S = 4096 with
+/// 64×64 tiles under the causal mask, every sparse built-in visits a
+/// sub-dense — for strided/dilated o(S²/T²) — number of key tiles. The
+/// exact integers double as the bench baseline (`pattern_tiles` in
+/// BENCH_attention.json); if the visibility seam drifts, both fail together.
+#[test]
+fn sparse_patterns_visit_sub_dense_tile_counts_at_scale() {
+    let (s, tile) = (4096usize, 64usize);
+    let count = |pattern: MaskPattern| -> usize {
+        let spec = Spec::causal(1, 1).with_pattern(pattern);
+        let mut total = 0;
+        let mut i0 = 0;
+        while i0 < s {
+            let i1 = (i0 + tile).min(s);
+            total += visited_key_tiles(i0, i1, s, spec, tile).len();
+            i0 = i1;
+        }
+        total
+    };
+    let dense = count(MaskPattern::Dense);
+    assert_eq!(dense, 64 * 65 / 2, "causal dense is the triangle count");
+    // window: ≤ 17 diagonal tile bands (⌈(1024+63)/64⌉) per query tile.
+    assert_eq!(count(MaskPattern::Window { window: 1024 }), 952);
+    // strided: one band every stride/T = 16 tiles — Θ(S²/(T·stride)).
+    assert_eq!(count(MaskPattern::Strided { stride: 1024 }), 160);
+    // dilated: 8 reachable offsets, one band each.
+    assert_eq!(count(MaskPattern::Dilated { window: 8, stride: 512 }), 288);
+    // sink+local: the window bands plus one pinned sink tile column.
+    assert_eq!(count(MaskPattern::SinkLocal { sinks: 64, window: 1024 }), 999);
+}
+
+/// K/V rows outside a query row's *effective* visible set (causal ∧ window
+/// ∧ pattern) must not influence that row's tiled output, for every sparse
+/// pattern — the pattern analogue of the window-invariance property.
+#[test]
+fn prop_tiled_invariant_to_kv_outside_pattern_visible_set() {
+    let gen = Pair(
+        Pair(UsizeRange { lo: 4, hi: 24 }, UsizeRange { lo: 1, hi: 6 }), // (s, tile)
+        Choice(vec![
+            MaskPattern::Window { window: 3 },
+            MaskPattern::Strided { stride: 3 },
+            MaskPattern::Dilated { window: 2, stride: 3 },
+            MaskPattern::SinkLocal { sinks: 2, window: 3 },
+        ]),
+    );
+    let mut rng_seed = 6000u64;
+    check(53, 60, &gen, |((s, tile), pattern)| {
+        rng_seed += 1;
+        let (hq, hkv, d) = (2usize, 1usize, 4usize);
+        let mut rng = Pcg64::new(rng_seed);
+        let q = randn_tensor(&[1, hq, *s, d], &mut rng);
+        let k = randn_tensor(&[1, hkv, *s, d], &mut rng);
+        let v = randn_tensor(&[1, hkv, *s, d], &mut rng);
+        let spec = Spec {
+            causal: rng.bool(0.5),
+            ..Spec::full(hq, hkv)
+        }
+        .with_pattern(*pattern);
+        let rm = spec.resolved();
+        let cfg = TileConfig::new(*tile, *tile).map_err(|e| e.to_string())?;
+        let out1 = attention_tiled_cfg(&q, &k, &v, spec, cfg).map_err(|e| e.to_string())?;
+        // Probe a random row; rotate K/V rows jointly across the positions
+        // it cannot see.
+        let i = rng.range_usize(0, *s);
+        let outside: Vec<usize> = (0..*s).filter(|&j| !rm.visible(i, j)).collect();
+        if outside.is_empty() {
+            return Ok(());
+        }
+        let mut k2 = k.clone();
+        let mut v2 = v.clone();
+        for (a, b) in outside.iter().zip(outside.iter().cycle().skip(1)) {
+            for dd in 0..d {
+                k2.set4(0, 0, *b, dd, k.get4(0, 0, *a, dd));
+                v2.set4(0, 0, *b, dd, v.get4(0, 0, *a, dd));
+            }
+        }
+        let out2 = attention_tiled_cfg(&q, &k2, &v2, spec, cfg).map_err(|e| e.to_string())?;
+        for h in 0..hq {
+            for dd in 0..d {
+                let (a, b) = (out1.get4(0, h, i, dd), out2.get4(0, h, i, dd));
+                if (a - b).abs() > 1e-5 {
+                    return Err(format!("{pattern:?} row {i}: {a} vs {b}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Patterned kernels stay deterministic across scheduling: for every sparse
+/// pattern the pooled forward is bitwise identical to the serial forward,
+/// and the wave-merged backward is bitwise identical across pool sizes.
+#[test]
+fn prop_pattern_kernels_bitwise_deterministic_across_pools() {
+    let pool2 = ThreadPool::new(2, 128);
+    let pool5 = ThreadPool::new(5, 128);
+    let gen = Pair(
+        Pair(UsizeRange { lo: 1, hi: 30 }, UsizeRange { lo: 1, hi: 5 }), // (s, tile)
+        Choice(vec![
+            MaskPattern::Window { window: 4 },
+            MaskPattern::Strided { stride: 3 },
+            MaskPattern::Dilated { window: 2, stride: 3 },
+            MaskPattern::SinkLocal { sinks: 2, window: 4 },
+        ]),
+    );
+    let mut rng_seed = 7000u64;
+    check(59, 30, &gen, |((s, tile), pattern)| {
+        rng_seed += 1;
+        let (hq, hkv, d) = (4usize, 2usize, 4usize);
+        let (dq_cols, dkv_cols) = (hq * d, hkv * d);
+        let mut rng = Pcg64::new(rng_seed);
+        let spec = Spec {
+            causal: rng.bool(0.5),
+            ..Spec::full(hq, hkv)
+        }
+        .with_pattern(*pattern);
+        let cfg = TileConfig::new(*tile, *tile).map_err(|e| e.to_string())?;
+        // Forward: serial vs pooled, bitwise.
+        let q = randn_tensor(&[1, hq, *s, d], &mut rng);
+        let kt = randn_tensor(&[1, hkv, *s, d], &mut rng);
+        let vt = randn_tensor(&[1, hkv, *s, d], &mut rng);
+        let serial = attention_tiled_cfg(&q, &kt, &vt, spec, cfg).map_err(|e| e.to_string())?;
+        let pooled =
+            attention_tiled_parallel(&q, &kt, &vt, spec, cfg, &pool2).map_err(|e| e.to_string())?;
+        if serial.data != pooled.data {
+            return Err(format!("{pattern:?}: pooled forward diverged from serial"));
+        }
+        // Backward: serial vs two pool sizes, bitwise.
+        let mut fill = |n: usize| -> Vec<f32> {
+            (0..n).map(|_| rng.normal_f32(0.0, 0.7)).collect()
+        };
+        let qs = fill(*s * dq_cols);
+        let ks = fill(*s * dkv_cols);
+        let vs = fill(*s * dkv_cols);
+        let dout = fill(*s * dq_cols);
+        let scale = 1.0 / (d as f32).sqrt();
+        let mut o = vec![0.0f32; *s * dq_cols];
+        let mut lse = vec![0.0f32; hq * *s];
+        forward_slabs_lse(&qs, &ks, &vs, &mut o, &mut lse, *s, d, spec, cfg, scale, None);
+        let run = |pool: Option<&ThreadPool>| {
+            let mut dq = vec![0.0f32; *s * dq_cols];
+            let mut dk = vec![0.0f32; *s * dkv_cols];
+            let mut dv = vec![0.0f32; *s * dkv_cols];
+            backward_tiled_slabs(
+                &qs, &ks, &vs, &o, &lse, &dout, &mut dq, &mut dk, &mut dv, *s, d, spec, cfg,
+                scale, pool,
+            );
+            (dq, dk, dv)
+        };
+        let serial_grads = run(None);
+        if serial_grads != run(Some(&pool2)) || serial_grads != run(Some(&pool5)) {
+            return Err(format!("{pattern:?}: pooled backward diverged from serial"));
         }
         Ok(())
     });

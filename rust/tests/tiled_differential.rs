@@ -56,10 +56,9 @@ fn check_grid(run: impl Fn(&Tensor, &Tensor, &Tensor, Spec) -> Tensor, label: &s
                 let k = randn(&[2, hkv, s, d], &mut rng);
                 let v = randn(&[2, hkv, s, d], &mut rng);
                 let spec = Spec {
-                    hq,
-                    hkv,
                     causal,
                     window,
+                    ..Spec::full(hq, hkv)
                 };
                 let want = attention(&q, &k, &v, spec).unwrap();
                 let got = run(&q, &k, &v, spec);
@@ -102,6 +101,108 @@ fn parallel_tiled_matches_oracle_across_spec_grid() {
         |q, k, v, spec| attention_tiled_parallel(q, k, v, spec, cfg, &pool).unwrap(),
         "parallel",
     );
+}
+
+#[test]
+fn tiled_matches_oracle_under_sparse_patterns_across_grid() {
+    // The pattern axis of the differential grid: every sparse built-in ×
+    // every head geometry × tile-straddling S × both linalg lowerings,
+    // causal and bidirectional. The naive oracle applies patterns
+    // per-element; the tiled kernel must agree through its tile skipping.
+    use sqa::attention::MaskPattern;
+    use sqa::linalg;
+    let patterns = [
+        MaskPattern::Window { window: 5 },
+        MaskPattern::Strided { stride: 3 },
+        MaskPattern::Dilated { window: 2, stride: 3 },
+        MaskPattern::SinkLocal { sinks: 2, window: 4 },
+    ];
+    let mut seed = 9000;
+    for &pattern in &patterns {
+        for &(geom, hq, hkv) in GEOMETRIES {
+            for &causal in &[false, true] {
+                for &s in SEQS {
+                    seed += 1;
+                    let mut rng = Pcg64::new(seed);
+                    let d = 4;
+                    let q = randn(&[2, hq, s, d], &mut rng);
+                    let k = randn(&[2, hkv, s, d], &mut rng);
+                    let v = randn(&[2, hkv, s, d], &mut rng);
+                    let spec = Spec {
+                        causal,
+                        ..Spec::full(hq, hkv)
+                    }
+                    .with_pattern(pattern);
+                    let want = attention(&q, &k, &v, spec).unwrap();
+                    for imp in [linalg::Impl::Blocked, linalg::Impl::Scalar] {
+                        let cfg = TileConfig::new(TILE, TILE).unwrap().with_linalg(imp);
+                        let got = attention_tiled_cfg(&q, &k, &v, spec, cfg).unwrap();
+                        let diff = want.max_abs_diff(&got);
+                        assert!(
+                            diff < TOL,
+                            "{geom} (Hq={hq} Hkv={hkv}) {pattern:?} causal={causal} \
+                             s={s} {imp:?}: diff {diff}"
+                        );
+                        assert!(got.data.iter().all(|x| x.is_finite()));
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn fully_masked_rows_stream_to_exact_zeros_across_kernels() {
+    // A bitmap row with no visible key blocks must produce exactly-zero
+    // output rows — not NaN from a 0/0 softmax — in the oracle, the serial
+    // tiled kernel, and the pooled tiled kernel alike.
+    use sqa::attention::{pattern, BlockBitmap, MaskPattern};
+    let id = pattern::register_bitmap(
+        BlockBitmap::new(
+            TILE,
+            3,
+            3,
+            vec![
+                true, false, false, //
+                false, false, false, // query rows [8, 16): fully masked
+                true, false, true,
+            ],
+        )
+        .unwrap(),
+    );
+    let (hq, hkv, s, d) = (4usize, 2usize, 3 * TILE, 4usize);
+    let mut rng = Pcg64::new(77);
+    let q = randn(&[1, hq, s, d], &mut rng);
+    let k = randn(&[1, hkv, s, d], &mut rng);
+    let v = randn(&[1, hkv, s, d], &mut rng);
+    let spec = Spec::causal(hq, hkv).with_pattern(MaskPattern::Bitmap(id));
+    let pool = ThreadPool::new(2, 64);
+    let cfg = TileConfig::new(TILE, TILE).unwrap();
+    let want = attention(&q, &k, &v, spec).unwrap();
+    for (label, got) in [
+        ("oracle", want.clone()),
+        ("serial", attention_tiled_cfg(&q, &k, &v, spec, cfg).unwrap()),
+        (
+            "parallel",
+            attention_tiled_parallel(&q, &k, &v, spec, cfg, &pool).unwrap(),
+        ),
+    ] {
+        assert!(want.max_abs_diff(&got) < TOL, "{label}");
+        for h in 0..hq {
+            for i in TILE..2 * TILE {
+                for dd in 0..d {
+                    assert_eq!(
+                        got.get4(0, h, i, dd),
+                        0.0,
+                        "{label}: masked row {i} h{h} d{dd} must be exactly zero"
+                    );
+                }
+            }
+            // Unmasked rows stay live (row 0 sees key block 0).
+            assert!((0..d).any(|dd| got.get4(0, h, 0, dd) != 0.0), "{label}");
+        }
+        assert!(got.data.iter().all(|x| x.is_finite()), "{label}");
+    }
 }
 
 #[test]

@@ -218,4 +218,65 @@ mod tests {
         assert_eq!(d.len(), 1);
         assert!(d[0].contains("non-finite"));
     }
+
+    fn pattern_row(pattern: &str, seq: f64, visited: f64, dense: f64, ratio: f64) -> Json {
+        Json::obj(vec![
+            ("pattern", Json::str(pattern)),
+            ("seq", Json::num(seq)),
+            ("visited_tiles", Json::num(visited)),
+            ("dense_tiles", Json::num(dense)),
+            ("ratio", Json::num(ratio)),
+        ])
+    }
+
+    #[test]
+    fn pattern_tile_counts_are_identity_but_ratios_are_not() {
+        // `pattern_tiles` rows mix both field classes: visited/dense tile
+        // counts are deterministic functions of the visibility seam (a
+        // drifted count is a mask bug), while the derived ratio carries a
+        // fraction and so is only checked for finiteness.
+        let base = Json::obj(vec![
+            ("bench", Json::str("unit")),
+            (
+                "pattern_tiles",
+                Json::Arr(vec![
+                    pattern_row("dense", 4096.0, 2080.0, 2080.0, 1.0),
+                    pattern_row("strided:1024", 4096.0, 160.0, 2080.0, 0.0769),
+                ]),
+            ),
+        ]);
+        let mut fresh = base.clone();
+        assert!(diffs(&fresh, &base).is_empty());
+        // A seeded visited-tile mismatch (the seam visiting one extra tile)
+        // must surface as a finding naming the drifted field...
+        if let Json::Obj(o) = &mut fresh {
+            o.insert(
+                "pattern_tiles".into(),
+                Json::Arr(vec![
+                    pattern_row("dense", 4096.0, 2080.0, 2080.0, 1.0),
+                    pattern_row("strided:1024", 4096.0, 161.0, 2080.0, 0.0769),
+                ]),
+            );
+        }
+        let d = diffs(&fresh, &base);
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert!(d[0].contains("visited_tiles") && d[0].contains("161"), "{d:?}");
+        // ...while ratio drift (machine-independent but fractional) is not.
+        let ratio_drift = Json::obj(vec![
+            ("bench", Json::str("unit")),
+            (
+                "pattern_tiles",
+                Json::Arr(vec![
+                    pattern_row("dense", 4096.0, 2080.0, 2080.0, 1.0),
+                    pattern_row("strided:1024", 4096.0, 160.0, 2080.0, 0.0770),
+                ]),
+            ),
+        ]);
+        assert!(diffs(&ratio_drift, &base).is_empty());
+        // And a report that silently loses the whole pattern sweep fails.
+        let dropped = Json::obj(vec![("bench", Json::str("unit"))]);
+        assert!(diffs(&dropped, &base)
+            .iter()
+            .any(|d| d.contains("pattern_tiles") && d.contains("missing")));
+    }
 }
