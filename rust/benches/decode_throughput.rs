@@ -3,33 +3,40 @@
 //! prefill + incremental-decode path (per-session KV caches in
 //! `runtime::session`), not the roofline simulator.
 //!
-//! For every (variant, context) cell the bench prefills a `ctx`-token
-//! prompt, runs `--steps` incremental decode steps, and records:
+//! For every (kv dtype, variant, context) cell the bench prefills a
+//! `ctx`-token prompt, runs `--steps` incremental decode steps, and records:
 //!   * measured decode tokens/s (wall clock over the step loop);
 //!   * measured KV bytes/step from the live session
 //!     ([`Backend::session_stats`] — the buffer the step actually streams);
 //!   * the `flops::decode` roofline's predicted cache bytes for the same
-//!     final context, as a cross-check (exact match expected for
-//!     non-windowed variants: both are `2·layers·len·Hkv·dh·4`).
+//!     final context and element width, as a cross-check (exact match
+//!     expected for non-windowed variants: both are
+//!     `2·layers·len·Hkv·dh·dtype_bytes`).
 //!
 //! The §5.2 ordering this makes observable: xSQA's bytes/step equals
-//! GQA's (same Hkv) while sSQA pays 2x — and MQA streams the least.
+//! GQA's (same Hkv) while sSQA pays 2x — and MQA streams the least. The
+//! dtype axis is orthogonal: an f16 cache halves every variant's bytes
+//! without reordering them.
 //!
 //! Flags (after `--`):
 //!   --ctxs 256,1024,4096   context lengths             (default shown)
 //!   --steps N              decode steps per cell       (default 32)
+//!   --kv-dtypes f32,f16    KV-cache storage dtypes     (default shown;
+//!                          any of f32|f16|bf16)
 //!   --json FILE            output JSON                 (default
 //!                          BENCH_decode.json at the repo root, so the
 //!                          decode trajectory persists across PRs)
 //!   --smoke                exit(1) unless measured bytes/step order
-//!                          matches §5.2: xsqa <= gqa and ssqa > gqa
+//!                          matches §5.2 at every swept dtype (xsqa <= gqa
+//!                          and ssqa > gqa), and every half-precision row
+//!                          streams exactly half its f32 twin's bytes
 //!   --quick                fewer/smaller cells
 //!
 //! CI runs: `cargo bench --bench decode_throughput -- --ctxs 256,1024
 //! --steps 16 --smoke --json BENCH_decode.json`
 
-use sqa::flops::decode::{decode_step as roofline_step, Hardware};
-use sqa::runtime::{Backend, NativeBackend};
+use sqa::flops::decode::{decode_step_dtype as roofline_step_dtype, Hardware};
+use sqa::runtime::{Backend, KvDtype, NativeBackend};
 use sqa::util::json::Json;
 use std::time::Instant;
 
@@ -39,6 +46,7 @@ const VARIANTS: &[&str] = &["mha", "gqa", "mqa", "sqa", "ssqa", "xsqa"];
 struct Flags {
     ctxs: Vec<usize>,
     steps: usize,
+    kv_dtypes: Vec<KvDtype>,
     json: Option<String>,
     smoke: bool,
     quick: bool,
@@ -48,6 +56,7 @@ fn parse_flags() -> Flags {
     let mut f = Flags {
         ctxs: vec![256, 1024, 4096],
         steps: 32,
+        kv_dtypes: vec![KvDtype::F32, KvDtype::F16],
         json: Some("BENCH_decode.json".to_string()),
         smoke: false,
         quick: false,
@@ -67,6 +76,13 @@ fn parse_flags() -> Flags {
             }
             ("--steps", Some(v)) => {
                 f.steps = v.parse().expect("--steps");
+                i += 2;
+            }
+            ("--kv-dtypes", Some(v)) => {
+                f.kv_dtypes = v
+                    .split(',')
+                    .map(|s| KvDtype::parse(s.trim()).expect("--kv-dtypes"))
+                    .collect();
                 i += 2;
             }
             ("--json", Some(v)) => {
@@ -93,6 +109,7 @@ fn parse_flags() -> Flags {
 }
 
 struct Row {
+    kv_dtype: &'static str,
     variant: String,
     hq: usize,
     hkv: usize,
@@ -106,8 +123,7 @@ struct Row {
 
 fn main() {
     let flags = parse_flags();
-    let backend = NativeBackend::new();
-    let fam = backend.family(FAMILY).expect("bench family");
+    let fam = NativeBackend::new().family(FAMILY).expect("bench family").clone();
     let dims = fam.dims.clone();
     let vocab = dims.vocab as i32;
     let hw = Hardware::default();
@@ -115,65 +131,74 @@ fn main() {
     let mut rows: Vec<Row> = Vec::new();
     println!("## Decode throughput, family `{FAMILY}` ({} steps per cell)\n", flags.steps);
     println!(
-        "{:6} {:>3} {:>4} {:>6} {:>11} {:>10} {:>14} {:>14} {:>12}",
-        "var", "Hq", "Hkv", "ctx", "prefill ms", "tok/s", "KV B/step", "roofline B", "roofline t/s"
+        "{:4} {:6} {:>3} {:>4} {:>6} {:>11} {:>10} {:>14} {:>14} {:>12}",
+        "kv", "var", "Hq", "Hkv", "ctx", "prefill ms", "tok/s", "KV B/step", "roofline B",
+        "roofline t/s"
     );
-    for &ctx in &flags.ctxs {
-        for &variant in VARIANTS {
-            let cfg = backend.variant(FAMILY, variant).expect("variant").cfg;
-            let params = backend
-                .init_params(FAMILY, variant, 42)
-                .expect("init params");
-            let prompt: Vec<i32> = (0..ctx).map(|i| ((i * 131 + 17) as i32) % vocab).collect();
-            let capacity = ctx + flags.steps;
+    for &dtype in &flags.kv_dtypes {
+        let backend = NativeBackend::new().with_kv_dtype(dtype);
+        for &ctx in &flags.ctxs {
+            for &variant in VARIANTS {
+                let cfg = backend.variant(FAMILY, variant).expect("variant").cfg;
+                let params = backend
+                    .init_params(FAMILY, variant, 42)
+                    .expect("init params");
+                let prompt: Vec<i32> =
+                    (0..ctx).map(|i| ((i * 131 + 17) as i32) % vocab).collect();
+                let capacity = ctx + flags.steps;
 
-            let t0 = Instant::now();
-            let (sid, logits) = backend
-                .prefill(FAMILY, variant, &params, &prompt, capacity)
-                .expect("prefill");
-            let prefill_ms = t0.elapsed().as_secs_f64() * 1e3;
-            assert!(logits.iter().all(|x| x.is_finite()));
+                let t0 = Instant::now();
+                let (sid, logits) = backend
+                    .prefill(FAMILY, variant, &params, &prompt, capacity)
+                    .expect("prefill");
+                let prefill_ms = t0.elapsed().as_secs_f64() * 1e3;
+                assert!(logits.iter().all(|x| x.is_finite()));
 
-            let t1 = Instant::now();
-            for i in 0..flags.steps {
-                let tok = ((ctx + i) as i32 * 7 + 3) % vocab;
-                let l = backend.decode_step(sid, &params, tok).expect("decode step");
-                assert!(l[0].is_finite());
+                let t1 = Instant::now();
+                for i in 0..flags.steps {
+                    let tok = ((ctx + i) as i32 * 7 + 3) % vocab;
+                    let l = backend.decode_step(sid, &params, tok).expect("decode step");
+                    assert!(l[0].is_finite());
+                }
+                let decode_secs = t1.elapsed().as_secs_f64();
+                let tok_per_s = flags.steps as f64 / decode_secs;
+
+                let stats = backend.session_stats(sid).expect("session stats");
+                assert_eq!(stats.len, capacity);
+                backend.close_session(sid);
+
+                // Roofline cross-check at the same final context length and
+                // element width.
+                let pred =
+                    roofline_step_dtype(&dims, &cfg, capacity as u64, hw, dtype.bytes() as u64);
+                println!(
+                    "{:4} {:6} {:>3} {:>4} {:>6} {:>11.1} {:>10.1} {:>14} {:>14} {:>12.1}",
+                    dtype.name(),
+                    variant,
+                    cfg.hq,
+                    cfg.hkv,
+                    ctx,
+                    prefill_ms,
+                    tok_per_s,
+                    stats.kv_bytes,
+                    pred.kv_bytes,
+                    1.0 / pred.time()
+                );
+                rows.push(Row {
+                    kv_dtype: dtype.name(),
+                    variant: variant.to_string(),
+                    hq: cfg.hq,
+                    hkv: cfg.hkv,
+                    ctx,
+                    prefill_ms,
+                    tok_per_s,
+                    measured_bytes_per_step: stats.kv_bytes,
+                    predicted_bytes_per_step: pred.kv_bytes,
+                    roofline_tok_per_s: 1.0 / pred.time(),
+                });
             }
-            let decode_secs = t1.elapsed().as_secs_f64();
-            let tok_per_s = flags.steps as f64 / decode_secs;
-
-            let stats = backend.session_stats(sid).expect("session stats");
-            assert_eq!(stats.len, capacity);
-            backend.close_session(sid);
-
-            // Roofline cross-check at the same final context length.
-            let pred = roofline_step(&dims, &cfg, capacity as u64, hw);
-            println!(
-                "{:6} {:>3} {:>4} {:>6} {:>11.1} {:>10.1} {:>14} {:>14} {:>12.1}",
-                variant,
-                cfg.hq,
-                cfg.hkv,
-                ctx,
-                prefill_ms,
-                tok_per_s,
-                stats.kv_bytes,
-                pred.kv_bytes,
-                1.0 / pred.time()
-            );
-            rows.push(Row {
-                variant: variant.to_string(),
-                hq: cfg.hq,
-                hkv: cfg.hkv,
-                ctx,
-                prefill_ms,
-                tok_per_s,
-                measured_bytes_per_step: stats.kv_bytes,
-                predicted_bytes_per_step: pred.kv_bytes,
-                roofline_tok_per_s: 1.0 / pred.time(),
-            });
+            println!();
         }
-        println!();
     }
 
     // Cross-check: the session's live bytes must equal the analytic
@@ -197,6 +222,7 @@ fn main() {
                 "rows",
                 Json::arr(rows.iter().map(|r| {
                     Json::obj(vec![
+                        ("kv_dtype", Json::str(r.kv_dtype)),
                         ("variant", Json::str(&r.variant)),
                         ("hq", Json::num(r.hq as f64)),
                         ("hkv", Json::num(r.hkv as f64)),
@@ -223,29 +249,63 @@ fn main() {
     if flags.smoke {
         // The paper's §5.2 ordering as a hard guard on *measured* cache
         // traffic: xSQA matches GQA's cache (same Hkv) and sSQA carries
-        // strictly more. Deterministic — the bytes come from buffer sizes,
-        // not timers — so no noise grace is needed.
-        let bytes = |variant: &str, ctx: usize| -> u64 {
+        // strictly more — at every swept dtype, since element width scales
+        // all variants alike. Deterministic — the bytes come from buffer
+        // sizes, not timers — so no noise grace is needed.
+        let bytes = |dt: &str, variant: &str, ctx: usize| -> u64 {
             rows.iter()
-                .find(|r| r.variant == variant && r.ctx == ctx)
-                .unwrap_or_else(|| panic!("smoke needs {variant}@{ctx}"))
+                .find(|r| r.kv_dtype == dt && r.variant == variant && r.ctx == ctx)
+                .unwrap_or_else(|| panic!("smoke needs {dt}/{variant}@{ctx}"))
                 .measured_bytes_per_step
         };
         let mut failed = false;
-        for &ctx in &flags.ctxs {
-            let (gqa, xsqa, ssqa) = (bytes("gqa", ctx), bytes("xsqa", ctx), bytes("ssqa", ctx));
-            if xsqa > gqa {
-                eprintln!("SMOKE FAIL @{ctx}: xsqa bytes/step {xsqa} > gqa {gqa}");
-                failed = true;
+        for &dtype in &flags.kv_dtypes {
+            let dt = dtype.name();
+            for &ctx in &flags.ctxs {
+                let (gqa, xsqa, ssqa) = (
+                    bytes(dt, "gqa", ctx),
+                    bytes(dt, "xsqa", ctx),
+                    bytes(dt, "ssqa", ctx),
+                );
+                if xsqa > gqa {
+                    eprintln!("SMOKE FAIL {dt}@{ctx}: xsqa bytes/step {xsqa} > gqa {gqa}");
+                    failed = true;
+                }
+                if ssqa <= gqa {
+                    eprintln!("SMOKE FAIL {dt}@{ctx}: ssqa bytes/step {ssqa} <= gqa {gqa}");
+                    failed = true;
+                }
             }
-            if ssqa <= gqa {
-                eprintln!("SMOKE FAIL @{ctx}: ssqa bytes/step {ssqa} <= gqa {gqa}");
-                failed = true;
+        }
+        // Half-precision caches must halve the measured traffic exactly —
+        // the point of the dtype axis, and a 2-byte-element invariant the
+        // baseline diff pins as integers.
+        if flags.kv_dtypes.contains(&KvDtype::F32) {
+            for &dtype in &flags.kv_dtypes {
+                if dtype.bytes() != 2 {
+                    continue;
+                }
+                let dt = dtype.name();
+                for &ctx in &flags.ctxs {
+                    for &variant in VARIANTS {
+                        let (full, half) = (bytes("f32", variant, ctx), bytes(dt, variant, ctx));
+                        if half * 2 != full {
+                            eprintln!(
+                                "SMOKE FAIL {dt}/{variant}@{ctx}: bytes/step {half} is not \
+                                 half the f32 row's {full}"
+                            );
+                            failed = true;
+                        }
+                    }
+                }
             }
         }
         if failed {
             std::process::exit(1);
         }
-        println!("decode smoke OK: xsqa <= gqa < ssqa bytes/step at every ctx");
+        println!(
+            "decode smoke OK: xsqa <= gqa < ssqa bytes/step at every (dtype, ctx), \
+             half-precision rows stream half the f32 bytes"
+        );
     }
 }

@@ -1,8 +1,9 @@
 //! Training-throughput bench: fwd/bwd split step time vs sequence length
 //! across the variant zoo — the paper's compute-bound pre-training axis
-//! (§3.2) measured on the *real* fused train step, for both attention
-//! backward implementations (flash-style streaming vs the scalar row-loop
-//! oracle).
+//! (§3.2) measured on the *real* fused train step, across the lowerings:
+//! flash-style streaming on blocked GEMMs (`tiled`), the same on the
+//! intrinsic SIMD tier (`tiled+simd`), and the scalar row-loop oracle
+//! (`naive`).
 //!
 //! For every (variant, seq, impl) cell the bench times, at batch 1:
 //!   * `fwd_secs` — a forward pass through the same lowering
@@ -20,7 +21,10 @@
 //! Flags (after `--`):
 //!   --seqs 1024,4096,8192,16384   sequence lengths        (default shown)
 //!   --variants mha,...,xsqa       variant list            (default zoo)
-//!   --impls tiled,naive           lowerings               (default shown)
+//!   --impls tiled,tiled+simd,naive lowerings              (default shown;
+//!                                 tiled+simd is the intrinsic GEMM tier —
+//!                                 on hosts without AVX2+FMA/NEON it runs
+//!                                 the portable micro-kernel)
 //!   --naive-max-seq N             cap for naive cells     (default 4096)
 //!   --reps N                      timed reps per cell     (default 2)
 //!   --json FILE                   output JSON             (default
@@ -60,7 +64,7 @@ fn parse_flags() -> Flags {
     let mut f = Flags {
         seqs: vec![1024, 4096, 8192, 16384],
         variants: DEFAULT_VARIANTS.iter().map(|s| s.to_string()).collect(),
-        impls: vec!["tiled".to_string(), "naive".to_string()],
+        impls: vec!["tiled".to_string(), "tiled+simd".to_string(), "naive".to_string()],
         naive_max_seq: 4096,
         reps: 2,
         json: Some("BENCH_train.json".to_string()),

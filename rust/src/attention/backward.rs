@@ -44,6 +44,7 @@
 use super::tiled::{self, tile_visible_range, TileConfig};
 use super::{visible_range, ResolvedMask, Spec};
 use crate::linalg;
+use crate::util::simd;
 use crate::util::threadpool::ThreadPool;
 use std::sync::mpsc;
 
@@ -237,6 +238,31 @@ fn backward_qtile(
             }
             let srow = &scores[ti * k_tile..][..tk];
             let dprow = &dp[ti * k_tile..][..tk];
+            // Vectorized fast path (`Impl::Simd`, dense masks only),
+            // mirroring the forward streamer: with every visible score
+            // finite there is no per-key masking, so P and dS for the
+            // segment come from one util::simd pass and the edges outside
+            // [jlo, jhi) are zeroed. Non-finite scores fall back to the
+            // exact scalar loop below.
+            if dense && cfg.linalg == linalg::Impl::Simd {
+                let (a, b) = (jlo - j0, jhi - j0);
+                if simd::row_max_finite(&srow[a..b]).is_some() {
+                    prow[..a].fill(0.0);
+                    prow[b..].fill(0.0);
+                    dsrow[..a].fill(0.0);
+                    dsrow[b..].fill(0.0);
+                    simd::probs_dscores(
+                        &srow[a..b],
+                        &dprow[a..b],
+                        l,
+                        delta[ti],
+                        scale,
+                        &mut prow[a..b],
+                        &mut dsrow[a..b],
+                    );
+                    continue;
+                }
+            }
             for jj in 0..tk {
                 let j = j0 + jj;
                 let sc = srow[jj];
@@ -590,7 +616,7 @@ mod tests {
         let (q, k, v, dout) = slabs(hq, hkv, s, d, 60);
         let spec = Spec::causal(hq, hkv);
         let scale = 1.0 / (d as f32).sqrt();
-        for imp in [Impl::Scalar, Impl::Blocked] {
+        for imp in [Impl::Scalar, Impl::Blocked, Impl::Simd] {
             let cfg = TileConfig::new(8, 8).unwrap().with_linalg(imp);
             let mut o = vec![0.0f32; s * hq * d];
             let mut lse = vec![0.0f32; hq * s];

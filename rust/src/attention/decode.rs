@@ -141,7 +141,7 @@ mod tests {
                 spec,
             )
             .unwrap();
-            for imp in [linalg::Impl::Scalar, linalg::Impl::Blocked] {
+            for imp in [linalg::Impl::Scalar, linalg::Impl::Blocked, linalg::Impl::Simd] {
                 // Prefill the first 6 rows in one chunk, then one row at a
                 // time; each fresh row must match the oracle's.
                 let mut check_rows = |pos0: usize, n_new: usize| {

@@ -47,6 +47,7 @@ use super::pattern;
 use super::tensor::Tensor;
 use super::{check_shapes, visible_range, Spec};
 use crate::linalg;
+use crate::util::simd;
 use crate::util::threadpool::ThreadPool;
 use anyhow::{bail, Result};
 use std::sync::mpsc;
@@ -295,6 +296,32 @@ pub(crate) fn stream_qtile_at_lse(
             if jlo >= jhi {
                 prow.fill(0.0); // row sees nothing in this key tile
                 continue;
+            }
+            // Vectorized fast path (`Impl::Simd`, dense masks only): with
+            // every visible score finite there is no per-key masking and no
+            // poisoning, so the row max, exp + normalizer sum, and output
+            // rescale run through the util::simd helpers (fixed
+            // lane-then-tail reduction order — deterministic for a given
+            // segment length, so pool size still cannot change results).
+            // Any non-finite score sends the row to the exact scalar path
+            // below, which owns the ±inf/NaN semantics.
+            if dense && cfg.linalg == linalg::Impl::Simd {
+                let vis = &srow[jlo - j0..jhi - j0];
+                if let Some(block_max) = simd::row_max_finite(vis) {
+                    let m_new = m[ti].max(block_max);
+                    // exp_approx(-inf) = 0 covers the first block.
+                    let alpha = simd::exp_approx(m[ti] - m_new);
+                    if alpha != 1.0 {
+                        l[ti] *= alpha;
+                        simd::scale(&mut out[ti * out_stride + out_off..][..d], alpha);
+                    }
+                    m[ti] = m_new;
+                    prow[..jlo - j0].fill(0.0);
+                    prow[jhi - j0..].fill(0.0);
+                    l[ti] += simd::exp_sub_into(vis, m_new, &mut prow[jlo - j0..jhi - j0]);
+                    any = true;
+                    continue;
+                }
             }
             let mut block_max = f32::NEG_INFINITY;
             for j in jlo..jhi {
@@ -743,7 +770,7 @@ mod tests {
         let v = randn(&[b, hkv, s, d], 23);
         let spec = Spec::causal(hq, hkv);
         let want = attention(&q, &k, &v, spec).unwrap();
-        for imp in [linalg::Impl::Scalar, linalg::Impl::Blocked] {
+        for imp in [linalg::Impl::Scalar, linalg::Impl::Blocked, linalg::Impl::Simd] {
             let cfg = TileConfig::new(16, 16).unwrap().with_linalg(imp);
             let got = attention_tiled_cfg(&q, &k, &v, spec, cfg).unwrap();
             assert!(

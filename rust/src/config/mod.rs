@@ -297,6 +297,12 @@ pub struct ServeConfig {
     /// the `kernel[+linalg][@pattern]` lowering for encode, prefill, and
     /// the decode steps of prefilling sessions. `None` = dense.
     pub pattern: Option<String>,
+    /// Storage precision of per-session KV caches: "f32" | "f16" | "bf16"
+    /// (see [`crate::runtime::session::KvDtype`]). Narrower dtypes halve
+    /// each session's resident cache and per-step streamed bytes; the
+    /// kernels still compute in f32. `None` = the backend's default (the
+    /// `SQA_KV_DTYPE` env, f32 otherwise).
+    pub kv_dtype: Option<String>,
     /// Max concurrent generation sessions (admission cap; further
     /// generate requests queue for a slot).
     pub max_sessions: usize,
@@ -323,6 +329,7 @@ impl Default for ServeConfig {
             queue_capacity: 64,
             kernel: None,
             pattern: None,
+            kv_dtype: None,
             max_sessions: 4,
             session_timeout_ms: 30_000,
             gen_capacity: 0,
@@ -360,6 +367,10 @@ impl ServeConfig {
         }
         if let Some(p) = v.get("pattern") {
             c.pattern = Some(PatternSpec::from_json(p)?.resolve().context("pattern")?);
+        }
+        if let Some(s) = v.get("kv_dtype").and_then(|x| x.as_str()) {
+            crate::runtime::session::KvDtype::parse(s).context("kv_dtype")?;
+            c.kv_dtype = Some(s.to_string());
         }
         if let Some(n) = v.get("max_sessions").and_then(|x| x.as_usize()) {
             c.max_sessions = n;
@@ -439,8 +450,13 @@ mod tests {
         assert_eq!(c.workers, 1);
         assert_eq!(c.family, "tiny");
         assert_eq!(c.kernel, None);
+        assert_eq!(c.kv_dtype, None);
         assert_eq!(c.max_sessions, 4);
         assert_eq!(c.gen_capacity, 0);
+        let j = Json::parse(r#"{"kv_dtype":"f16"}"#).unwrap();
+        assert_eq!(ServeConfig::from_json(&j).unwrap().kv_dtype.as_deref(), Some("f16"));
+        let j = Json::parse(r#"{"kv_dtype":"f64"}"#).unwrap();
+        assert!(ServeConfig::from_json(&j).is_err(), "kv_dtype is validated up front");
         let j = Json::parse(
             r#"{"kernel":"naive","max_sessions":2,"session_timeout_ms":100,"gen_capacity":64,"conn_threads":3}"#,
         )

@@ -61,7 +61,23 @@ impl DecodeStep {
 /// Model one autoregressive decode step at context length `s`.
 ///
 /// Parameter count is approximated from dims (tied embeddings); f32 cache.
+/// [`decode_step_dtype`] models narrower cache storage.
 pub fn decode_step(dims: &ModelDims, var: &VariantCfg, s: u64, hw: Hardware) -> DecodeStep {
+    decode_step_dtype(dims, var, s, hw, 4)
+}
+
+/// [`decode_step`] with the cache term at `kv_elem_bytes` per element
+/// (4 = f32, 2 = f16/bf16 — [`crate::runtime::session::KvDtype::bytes`]).
+/// Only the KV traffic scales: weights stay f32 and the FLOPs are
+/// unchanged, so halving the element width compresses exactly the §5.2
+/// memory-bound term that separates the variants.
+pub fn decode_step_dtype(
+    dims: &ModelDims,
+    var: &VariantCfg,
+    s: u64,
+    hw: Hardware,
+    kv_elem_bytes: u64,
+) -> DecodeStep {
     let d = dims.d_model as u64;
     let dh = dims.d_head as u64;
     let layers = dims.n_layers as u64;
@@ -72,7 +88,7 @@ pub fn decode_step(dims: &ModelDims, var: &VariantCfg, s: u64, hw: Hardware) -> 
         Some(w) => s.min(w as u64),
         None => s,
     };
-    let kv_bytes = 2 * eff_s * var.hkv as u64 * dh * 4 * layers;
+    let kv_bytes = 2 * eff_s * var.hkv as u64 * dh * kv_elem_bytes * layers;
 
     // Parameters streamed once per step (batch 1: no amortization).
     let attn_params = layers * d * dh * (2 * var.hq as u64 + 2 * var.hkv as u64);
@@ -204,6 +220,24 @@ mod tests {
         assert!(tps["mqa"] > tps["gqa"]);
         assert!(tps["gqa"] > tps["ssqa"]);
         assert!(tps["ssqa"] > tps["mha"]);
+    }
+
+    #[test]
+    fn half_precision_cache_halves_the_kv_term_only() {
+        let hw = Hardware::default();
+        let f32_step = decode_step(&dims(), &var(32, 8), 131_072, hw);
+        let f16_step = decode_step_dtype(&dims(), &var(32, 8), 131_072, hw, 2);
+        assert_eq!(2 * f16_step.kv_bytes, f32_step.kv_bytes);
+        assert_eq!(f16_step.param_bytes, f32_step.param_bytes);
+        assert_eq!(f16_step.flops, f32_step.flops);
+        assert!(f16_step.time() < f32_step.time(), "less traffic, faster step");
+        // The §5 ordering is a ratio of Hkv, so it survives the dtype
+        // change: xSQA == GQA < sSQA bytes at 2 bytes/elem too.
+        let gqa = decode_step_dtype(&dims(), &var(32, 8), 131_072, hw, 2);
+        let xsqa = decode_step_dtype(&dims(), &var(8, 8), 131_072, hw, 2);
+        let ssqa = decode_step_dtype(&dims(), &var(16, 16), 131_072, hw, 2);
+        assert_eq!(gqa.kv_bytes, xsqa.kv_bytes);
+        assert_eq!(ssqa.kv_bytes, 2 * gqa.kv_bytes);
     }
 
     #[test]

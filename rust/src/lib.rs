@@ -95,7 +95,12 @@
 //!   kernel ([`attention::tiled`]'s `stream_qtile_at`);
 //! * [`runtime::session::KvCache`] is the per-session, per-layer
 //!   contiguous K/V append buffer, sized by the variant's `Hkv` — sSQA
-//!   observably allocates and streams 2x a GQA/xSQA session's bytes;
+//!   observably allocates and streams 2x a GQA/xSQA session's bytes —
+//!   storing rows in f32, f16 or bf16 ([`runtime::KvDtype`]; `serve
+//!   --kv-dtype` / `SQA_KV_DTYPE`): appends narrow with IEEE
+//!   round-to-nearest-even, reads widen back to f32 for the math, and
+//!   the half formats halve every byte account at a bounded narrowing
+//!   error — a second, orthogonal lever on the same memory axis;
 //! * [`runtime::Backend`] gains `prefill` (prompt → session + logits),
 //!   `decode_step` (token → logits), `close_session` and `session_stats`;
 //! * the [`coordinator`]'s generation scheduler admits sessions (cap +
@@ -109,12 +114,14 @@
 //!
 //! The invariant suite is `rust/tests/decode_differential.rs`: N-step
 //! incremental decode logits equal a full stateless re-forward to 1e-4
-//! for every variant, both attention kernels and both linalg impls.
+//! for every variant, both attention kernels and all three linalg impls;
+//! the f16/bf16 caches track the f32 logits within the narrowing error
+//! at exactly half the reported bytes.
 //!
 //! ## Compute kernels ([`linalg`])
 //!
 //! Underneath both attention lowerings sits a second, orthogonal switch:
-//! [`linalg::Impl`] (`SQA_LINALG=blocked|scalar`) selects the GEMM
+//! [`linalg::Impl`] (`SQA_LINALG=blocked|scalar|simd`) selects the GEMM
 //! substrate every dense product runs on — Q/K/V/O projections, the tiled
 //! kernel's `[q_tile, k_tile]` score blocks and `probs @ V` accumulation,
 //! the LM head, and the training backward's `xᵀ·dy` / `dy·wᵀ` reductions.
@@ -122,14 +129,26 @@
 //! (`MR×NR` micro-kernel over packed, zero-padded A/B panels; `KC/MC/NC`
 //! cache blocking; strided views cover every orientation and the
 //! head-interleaved attention slabs) written so LLVM auto-vectorizes it;
-//! `scalar` keeps the element-at-a-time PR-2 loops as the differential
-//! oracle and perf baseline. Large products optionally fan row blocks out
-//! over the thread pool via `ThreadPool::run_borrowed` (scoped jobs that
-//! borrow caller buffers — no `Arc` clones, no per-request copies of the
-//! parameter vector). The native backend composes the two switches in its
-//! `forward_impl` strings: `"tiled"`, `"naive"`, `"tiled+scalar"`,
-//! `"naive+scalar"` — and `rust/benches/native_attention.rs` records the
-//! blocked-vs-scalar end-to-end trajectory in `BENCH_attention.json`.
+//! `simd` reuses that packing/blocking verbatim but lowers the inner
+//! `MR×NR` update through hand-written AVX2+FMA (x86-64) or NEON
+//! (aarch64) intrinsics ([`linalg::simd`]) and vectorizes the tiled
+//! kernel's dense online-softmax rows ([`util::simd`]), detecting CPU
+//! features once at runtime and silently degrading to the portable
+//! micro-kernel when they are absent — its scalar tails share the same
+//! exp polynomial as the vector lanes, so results stay bitwise identical
+//! across lane/tail splits and thread-pool sizes; `scalar` keeps the
+//! element-at-a-time PR-2 loops as the differential oracle and perf
+//! baseline. Large products optionally fan row blocks out over the
+//! thread pool via `ThreadPool::run_borrowed` (scoped jobs that borrow
+//! caller buffers — no `Arc` clones, no per-request copies of the
+//! parameter vector), and pack buffers come from a per-worker
+//! thread-local arena, so steady-state GEMMs allocate nothing. The
+//! native backend composes the two switches in its `forward_impl`
+//! strings: `"tiled"`, `"naive"`, `"tiled+scalar"`, `"naive+scalar"`,
+//! `"tiled+simd"`, `"naive+simd"` — and
+//! `rust/benches/native_attention.rs` records the
+//! blocked-vs-scalar-vs-simd end-to-end trajectory in
+//! `BENCH_attention.json`.
 //!
 //! ## Training backward ([`attention::backward`])
 //!
@@ -179,13 +198,17 @@
 //! the in-tree linter (`cargo run -p xtask -- lint`, CI's required
 //! `invariant-lint` job):
 //!
-//! * **Every `unsafe` carries a `// SAFETY:` contract.** The crate has
-//!   exactly three unsafe seams — the lifetime-erased scoped jobs behind
-//!   `ThreadPool::run_borrowed`, and the `Send`/`Sync` impls for the
-//!   pool's shared inner state — and each states the invariant that makes
-//!   it sound. The seams are additionally run under Miri
+//! * **Every `unsafe` carries a `// SAFETY:` contract.** The crate's
+//!   unsafe surface is two seams: the concurrency seam (the
+//!   lifetime-erased scoped jobs behind `ThreadPool::run_borrowed` and
+//!   the `Send`/`Sync` impls for the pool's shared inner state) and the
+//!   intrinsic seam (`#[target_feature]` kernels in [`linalg::simd`] /
+//!   [`util::simd`], guarded by one-time runtime feature detection) —
+//!   and each use states the invariant that makes it sound. The
+//!   concurrency seam is additionally run under Miri
 //!   (`cargo +nightly miri test --test unsafe_seams`) and nightly
-//!   TSan/ASan CI sweeps.
+//!   TSan/ASan CI sweeps; the intrinsic seam is pinned against its
+//!   portable oracle by the differential suites.
 //! * **Lock poisoning is a policy, not a crash.** The serving stack
 //!   acquires locks through the poison-tolerant [`util::sync::lock`] /
 //!   [`util::sync::wait`] helpers (a worker that panicked mid-batch has
@@ -194,12 +217,16 @@
 //!   Bare `.lock().unwrap()` in the concurrent subsystems is a lint
 //!   finding.
 //!
-//! Two more linted invariants keep the measurement story honest: the
+//! Three more linted invariants keep the measurement story honest: the
 //! [`attention`]/[`linalg`] kernels are clock-free (timing lives in the
 //! benches and [`util::bench`], keeping kernels deterministic and
-//! Miri/loom-runnable), and every bench report goes through the schema'd
+//! Miri/loom-runnable); every bench report goes through the schema'd
 //! [`util::bench::write_bench_json`] writer so the committed
-//! `BENCH_*.json` baselines stay diffable by `xtask bench-check`.
+//! `BENCH_*.json` baselines stay diffable by `xtask bench-check`; and
+//! architecture intrinsics (`core::arch`, `#[target_feature]`, feature
+//! detection) are confined to the two seams [`linalg::simd`] and
+//! [`util::simd`] — everything else stays portable and Miri-runnable
+//! (`simd-confinement`).
 //!
 //! ## Modules
 //!

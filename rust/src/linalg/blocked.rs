@@ -4,9 +4,12 @@
 //! models this repo runs:
 //!
 //! * the **micro-kernel** computes an `MR×NR` output tile from packed
-//!   panels, keeping the whole accumulator in registers; it is written as
-//!   plain unrolled-friendly loops over fixed-size arrays so LLVM
-//!   auto-vectorizes it (no intrinsics — the crate stays portable);
+//!   panels, keeping the whole accumulator in registers. Two tiers retire
+//!   the same panels behind the [`Micro`] selector: the portable kernel
+//!   here (plain unrolled-friendly loops over fixed-size arrays that LLVM
+//!   auto-vectorizes — no intrinsics, works everywhere) and the explicit
+//!   AVX2+FMA / NEON kernel in [`super::simd`] (`Impl::Simd`, runtime
+//!   feature-detected with silent fallback to the portable tier);
 //! * **packing** copies an `MR`-row A panel (k-major: `a[p*MR + r]`) and an
 //!   `NR`-column B panel (`b[p*NR + c]`) into contiguous, zero-padded
 //!   buffers, so the micro-kernel sees unit-stride loads regardless of the
@@ -53,11 +56,24 @@ impl MatRef<'_> {
     }
 }
 
+/// Which micro-kernel retires the packed panels. Resolved once per [`gemm`]
+/// call: `Impl::Blocked` always selects `Portable`; `Impl::Simd` goes
+/// through [`super::simd::micro`], which selects `Simd` only after the
+/// runtime feature check passed — so a `Simd` value is a proof the
+/// intrinsics are safe to execute on this host.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum Micro {
+    /// Portable unrolled loops (LLVM auto-vectorized) — runs everywhere.
+    Portable,
+    /// Explicit AVX2+FMA / NEON kernel in [`super::simd`].
+    Simd,
+}
+
 /// `acc[r][c] += Σ_p a_panel[p*MR + r] * b_panel[p*NR + c]` over one packed
 /// panel pair. Fixed-size array refs tell LLVM the trip counts, so the
 /// `c` loop vectorizes and `acc` stays in registers across `p`.
 #[inline(always)]
-fn micro_kernel(ap: &[f32], bp: &[f32], kc: usize, acc: &mut [[f32; NR]; MR]) {
+pub(crate) fn micro_kernel_portable(ap: &[f32], bp: &[f32], kc: usize, acc: &mut [[f32; NR]; MR]) {
     debug_assert!(ap.len() >= kc * MR && bp.len() >= kc * NR);
     for p in 0..kc {
         let ar: &[f32; MR] = ap[p * MR..p * MR + MR].try_into().unwrap();
@@ -76,7 +92,8 @@ fn micro_kernel(ap: &[f32], bp: &[f32], kc: usize, acc: &mut [[f32; NR]; MR]) {
 /// `c[c_off + i*c_rs + j] (+)= alpha * Σ_p a(i, p) * b(p, j)` for
 /// `i < mdim`, `j < ndim`, `p < kdim`. With `accumulate == false` the block
 /// is overwritten (k blocks after the first still add into the partial
-/// result, preserving the plain-sum semantics).
+/// result, preserving the plain-sum semantics). `micro` picks the tier
+/// that retires the packed panels; packing and blocking are shared.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn gemm(
     a: MatRef,
@@ -89,6 +106,7 @@ pub(crate) fn gemm(
     kdim: usize,
     alpha: f32,
     accumulate: bool,
+    micro: Micro,
 ) {
     if mdim == 0 || ndim == 0 {
         return;
@@ -101,21 +119,15 @@ pub(crate) fn gemm(
         }
         return;
     }
-    // Packing scratch is thread-local: the tiled attention kernel calls in
-    // here twice per key-tile step from every pool worker, and a heap
-    // allocation per micro-GEMM would dominate the small-block cases. The
-    // buffers are cleared and re-zeroed per (jc, pc[, ic]) block below, so
-    // reuse never leaks values — only capacity.
-    PACK_SCRATCH.with(|scratch| {
-        let mut scratch = scratch.borrow_mut();
-        let (apack, bpack) = &mut *scratch;
-        gemm_blocks(a, b, c, c_off, c_rs, mdim, ndim, kdim, alpha, accumulate, apack, bpack);
+    // Packing scratch is per worker thread (see `super::scratch`): both
+    // micro-kernel tiers reuse the same arena, so the fan-out over the
+    // ThreadPool never reallocates panels per block.
+    super::scratch::with_pack_arena(|arena| {
+        gemm_blocks(
+            a, b, c, c_off, c_rs, mdim, ndim, kdim, alpha, accumulate, micro, &mut arena.a,
+            &mut arena.b,
+        );
     });
-}
-
-thread_local! {
-    static PACK_SCRATCH: std::cell::RefCell<(Vec<f32>, Vec<f32>)> =
-        const { std::cell::RefCell::new((Vec::new(), Vec::new())) };
 }
 
 /// The blocking loops of [`gemm`], over caller-provided packing scratch.
@@ -131,6 +143,7 @@ fn gemm_blocks(
     kdim: usize,
     alpha: f32,
     accumulate: bool,
+    micro: Micro,
     apack: &mut Vec<f32>,
     bpack: &mut Vec<f32>,
 ) {
@@ -183,7 +196,10 @@ fn gemm_blocks(
                         let cmax = NR.min(nc - c0);
                         let bp = &bpack[pb * kc * NR..][..kc * NR];
                         let mut acc = [[0.0f32; NR]; MR];
-                        micro_kernel(ap, bp, kc, &mut acc);
+                        match micro {
+                            Micro::Portable => micro_kernel_portable(ap, bp, kc, &mut acc),
+                            Micro::Simd => super::simd::micro_kernel(ap, bp, kc, &mut acc),
+                        }
                         for r in 0..rmax {
                             let crow =
                                 &mut c[c_off + (ic + r0 + r) * c_rs + jc + c0..][..cmax];
@@ -257,7 +273,7 @@ mod tests {
             let a = MatRef { data: &ad, off: 0, rs: k, cs: 1 };
             let b = MatRef { data: &bd, off: 0, rs: n, cs: 1 };
             let mut got = vec![0.5f32; m * n];
-            gemm(a, b, &mut got, 0, n, m, n, k, 1.0, false);
+            gemm(a, b, &mut got, 0, n, m, n, k, 1.0, false, Micro::Portable);
             let want = naive(&|i, p| ad[i * k + p], &|p, j| bd[p * n + j], m, n, k, 1.0);
             for (g, w) in got.iter().zip(&want) {
                 assert!((g - w).abs() < 1e-4, "({m},{n},{k}): {g} vs {w}");
@@ -274,7 +290,7 @@ mod tests {
         let a = MatRef { data: &ad, off: 0, rs: 1, cs: m };
         let b = MatRef { data: &bd, off: 0, rs: n, cs: 1 };
         let mut got = vec![0.0f32; m * n];
-        gemm(a, b, &mut got, 0, n, m, n, k, 0.25, true);
+        gemm(a, b, &mut got, 0, n, m, n, k, 0.25, true, Micro::Portable);
         let want = naive(&|i, p| ad[p * m + i], &|p, j| bd[p * n + j], m, n, k, 0.25);
         for (g, w) in got.iter().zip(&want) {
             assert!((g - w).abs() < 1e-5, "{g} vs {w}");
@@ -290,9 +306,9 @@ mod tests {
         let b = MatRef { data: &bd, off: 0, rs: n, cs: 1 };
         let product = naive(&|i, p| ad[i * k + p], &|p, j| bd[p * n + j], m, n, k, 1.0);
         let mut acc = vec![1.0f32; m * n];
-        gemm(a, b, &mut acc, 0, n, m, n, k, 1.0, true);
+        gemm(a, b, &mut acc, 0, n, m, n, k, 1.0, true, Micro::Portable);
         let mut ovw = vec![1.0f32; m * n];
-        gemm(a, b, &mut ovw, 0, n, m, n, k, 1.0, false);
+        gemm(a, b, &mut ovw, 0, n, m, n, k, 1.0, false, Micro::Portable);
         for i in 0..m * n {
             assert!((acc[i] - (1.0 + product[i])).abs() < 1e-5);
             assert!((ovw[i] - product[i]).abs() < 1e-5);
@@ -308,7 +324,7 @@ mod tests {
         let a = MatRef { data: &ad, off: 0, rs: k, cs: 1 };
         let b = MatRef { data: &bd, off: 0, rs: n, cs: 1 };
         let mut c = vec![7.0f32; m * c_rs + 1];
-        gemm(a, b, &mut c, 1, c_rs, m, n, k, 1.0, false);
+        gemm(a, b, &mut c, 1, c_rs, m, n, k, 1.0, false, Micro::Portable);
         let want = naive(&|i, p| ad[i * k + p], &|p, j| bd[p * n + j], m, n, k, 1.0);
         assert_eq!(c[0], 7.0);
         for i in 0..m {
@@ -328,9 +344,9 @@ mod tests {
         let a = MatRef { data: &[], off: 0, rs: 1, cs: 1 };
         let b = MatRef { data: &[], off: 0, rs: 1, cs: 1 };
         let mut c = vec![3.0f32; 6];
-        gemm(a, b, &mut c, 0, 3, 2, 3, 0, 1.0, true);
+        gemm(a, b, &mut c, 0, 3, 2, 3, 0, 1.0, true, Micro::Portable);
         assert!(c.iter().all(|&x| x == 3.0));
-        gemm(a, b, &mut c, 0, 3, 2, 3, 0, 1.0, false);
+        gemm(a, b, &mut c, 0, 3, 2, 3, 0, 1.0, false, Micro::Portable);
         assert!(c.iter().all(|&x| x == 0.0));
     }
 }

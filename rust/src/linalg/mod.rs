@@ -6,22 +6,27 @@
 //! accumulation, the LM head, and the training backward's `xᵀ·dy` /
 //! `dy·wᵀ` reductions — routes through this module. [`Impl`] mirrors
 //! [`crate::attention::Kernel`]: `Blocked` (default) runs the
-//! cache-blocked, register-tiled kernels in [`blocked`]; `Scalar` runs the
-//! element-at-a-time PR-2 loops in [`scalar`], kept as the oracle every
-//! blocked path is differentially tested against
+//! cache-blocked, register-tiled kernels in [`blocked`]; `Simd` runs the
+//! same packing/blocking with the explicit AVX2+FMA / NEON micro-kernel in
+//! [`simd`] (runtime feature-detected, silently degrading to the portable
+//! tier on unsupported hosts — never a compile-time requirement); `Scalar`
+//! runs the element-at-a-time PR-2 loops in [`scalar`], kept as the oracle
+//! every other path is differentially tested against
 //! (`rust/tests/linalg_differential.rs`) and as the end-to-end baseline the
 //! bench regression guard compares throughput with.
 //!
-//! Selection: `SQA_LINALG=blocked|scalar` process-wide, the native
-//! backend's `forward_impl` strings (`tiled+scalar` etc.), or an explicit
-//! `Impl` argument. Large row-major products ([`matmul`],
+//! Selection: `SQA_LINALG=blocked|scalar|simd` process-wide, the native
+//! backend's `forward_impl` strings (`tiled+scalar`, `tiled+simd`, …), or
+//! an explicit `Impl` argument. Large row-major products ([`matmul`],
 //! [`matmul_bias_into`]) optionally fan row blocks out over a
 //! [`ThreadPool`] via [`ThreadPool::run_borrowed`]; the fan-out is applied
-//! identically to both impls so blocked-vs-scalar comparisons measure the
+//! identically to every impl so cross-impl comparisons measure the
 //! kernels, not the thread count.
 
 pub(crate) mod blocked;
 pub mod scalar;
+pub(crate) mod scratch;
+pub(crate) mod simd;
 
 use crate::util::threadpool::ThreadPool;
 use anyhow::{bail, Result};
@@ -36,6 +41,10 @@ pub enum Impl {
     /// Cache-blocked, register-tiled micro-kernels (the default).
     #[default]
     Blocked,
+    /// The blocked path with the explicit AVX2+FMA / NEON micro-kernel and
+    /// vectorized online-softmax inner loops. Availability is detected at
+    /// runtime; unsupported hosts silently run the portable blocked tier.
+    Simd,
 }
 
 impl Impl {
@@ -43,7 +52,8 @@ impl Impl {
         match s {
             "scalar" => Ok(Self::Scalar),
             "blocked" => Ok(Self::Blocked),
-            other => bail!("unknown linalg impl {other:?} (scalar|blocked)"),
+            "simd" => Ok(Self::Simd),
+            other => bail!("unknown linalg impl {other:?} (scalar|blocked|simd)"),
         }
     }
 
@@ -51,7 +61,27 @@ impl Impl {
         match self {
             Self::Scalar => "scalar",
             Self::Blocked => "blocked",
+            Self::Simd => "simd",
         }
+    }
+
+    /// Micro-kernel tier for the blocked GEMM path: `Simd` consults the
+    /// cached runtime feature detection (and so degrades to the portable
+    /// tier on hosts without AVX2+FMA/NEON); everything else is portable.
+    pub(crate) fn micro(self) -> blocked::Micro {
+        match self {
+            Self::Simd => simd::micro(),
+            _ => blocked::Micro::Portable,
+        }
+    }
+
+    /// Whether the explicit-SIMD micro-kernel would actually engage on
+    /// this host (AVX2+FMA on x86-64, NEON on aarch64). When false,
+    /// `Impl::Simd` still runs — on the portable blocked tier. Public so
+    /// benches and CI guards can print a skip notice instead of
+    /// "enforcing" a comparison of two identical kernels.
+    pub fn simd_active() -> bool {
+        simd::available()
     }
 
     /// Impl selected by `SQA_LINALG` (default: blocked). Panics on an
@@ -151,7 +181,7 @@ fn matmul_acc_serial(
 ) {
     match imp {
         Impl::Scalar => scalar::matmul_acc(x, w, out, s, m, n),
-        Impl::Blocked => blocked::gemm(
+        _ => blocked::gemm(
             MatRef { data: x, off: 0, rs: m, cs: 1 },
             MatRef { data: w, off: 0, rs: n, cs: 1 },
             out,
@@ -162,6 +192,7 @@ fn matmul_acc_serial(
             m,
             1.0,
             true,
+            imp.micro(),
         ),
     }
 }
@@ -170,7 +201,7 @@ fn matmul_acc_serial(
 pub fn accum_xt_dy(imp: Impl, g: &mut [f32], x: &[f32], dy: &[f32], s: usize, m: usize, n: usize) {
     match imp {
         Impl::Scalar => scalar::xt_dy(g, x, dy, s, m, n),
-        Impl::Blocked => blocked::gemm(
+        _ => blocked::gemm(
             MatRef { data: x, off: 0, rs: 1, cs: m },
             MatRef { data: dy, off: 0, rs: n, cs: 1 },
             g,
@@ -181,6 +212,7 @@ pub fn accum_xt_dy(imp: Impl, g: &mut [f32], x: &[f32], dy: &[f32], s: usize, m:
             s,
             1.0,
             true,
+            imp.micro(),
         ),
     }
 }
@@ -189,7 +221,7 @@ pub fn accum_xt_dy(imp: Impl, g: &mut [f32], x: &[f32], dy: &[f32], s: usize, m:
 pub fn accum_dy_wt(imp: Impl, dx: &mut [f32], dy: &[f32], w: &[f32], s: usize, m: usize, n: usize) {
     match imp {
         Impl::Scalar => scalar::dy_wt(dx, dy, w, s, m, n),
-        Impl::Blocked => blocked::gemm(
+        _ => blocked::gemm(
             MatRef { data: dy, off: 0, rs: n, cs: 1 },
             MatRef { data: w, off: 0, rs: 1, cs: n },
             dx,
@@ -200,6 +232,7 @@ pub fn accum_dy_wt(imp: Impl, dx: &mut [f32], dy: &[f32], w: &[f32], s: usize, m
             n,
             1.0,
             true,
+            imp.micro(),
         ),
     }
 }
@@ -231,7 +264,7 @@ pub fn score_block(
             q, q_stride, q_off, i0, tq, k, kv_stride, kv_off, j0, tk, d, scale, scores,
             scores_stride,
         ),
-        Impl::Blocked => blocked::gemm(
+        _ => blocked::gemm(
             MatRef { data: q, off: i0 * q_stride + q_off, rs: q_stride, cs: 1 },
             MatRef { data: k, off: j0 * kv_stride + kv_off, rs: 1, cs: kv_stride },
             scores,
@@ -242,6 +275,7 @@ pub fn score_block(
             d,
             scale,
             false,
+            imp.micro(),
         ),
     }
 }
@@ -270,7 +304,7 @@ pub fn pv_block(
         Impl::Scalar => scalar::pv_block(
             probs, probs_stride, tq, tk, v, kv_stride, kv_off, j0, d, out, out_stride, out_off,
         ),
-        Impl::Blocked => blocked::gemm(
+        _ => blocked::gemm(
             MatRef { data: probs, off: 0, rs: probs_stride, cs: 1 },
             MatRef { data: v, off: j0 * kv_stride + kv_off, rs: kv_stride, cs: 1 },
             out,
@@ -281,6 +315,7 @@ pub fn pv_block(
             tk,
             1.0,
             true,
+            imp.micro(),
         ),
     }
 }
@@ -314,7 +349,7 @@ pub fn ptx_block(
             probs, probs_stride, tq, tk, x, x_stride, x_off, row0, d, out, out_stride, out_off,
             j0,
         ),
-        Impl::Blocked => blocked::gemm(
+        _ => blocked::gemm(
             MatRef { data: probs, off: 0, rs: 1, cs: probs_stride },
             MatRef { data: x, off: row0 * x_stride + x_off, rs: x_stride, cs: 1 },
             out,
@@ -325,6 +360,7 @@ pub fn ptx_block(
             tq,
             1.0,
             true,
+            imp.micro(),
         ),
     }
 }
@@ -343,9 +379,11 @@ mod tests {
     fn parse_round_trips() {
         assert_eq!(Impl::parse("scalar").unwrap(), Impl::Scalar);
         assert_eq!(Impl::parse("blocked").unwrap(), Impl::Blocked);
+        assert_eq!(Impl::parse("simd").unwrap(), Impl::Simd);
         assert_eq!(Impl::default(), Impl::Blocked);
         assert_eq!(Impl::Blocked.name(), "blocked");
-        assert!(Impl::parse("simd").is_err());
+        assert_eq!(Impl::Simd.name(), "simd");
+        assert!(Impl::parse("avx2").is_err());
     }
 
     #[test]
@@ -353,7 +391,7 @@ mod tests {
         // [[1,2],[3,4]] @ [[5,6],[7,8]] = [[19,22],[43,50]]
         let x = [1.0, 2.0, 3.0, 4.0];
         let w = [5.0, 6.0, 7.0, 8.0];
-        for imp in [Impl::Scalar, Impl::Blocked] {
+        for imp in [Impl::Scalar, Impl::Blocked, Impl::Simd] {
             let out = matmul(imp, &x, &w, 2, 2, 2, None);
             assert_eq!(out, vec![19.0, 22.0, 43.0, 50.0], "{imp:?}");
         }
@@ -364,7 +402,7 @@ mod tests {
         let x = [2.0f32];
         let w = [3.0, 0.0];
         let bias = [10.0, 20.0];
-        for imp in [Impl::Scalar, Impl::Blocked] {
+        for imp in [Impl::Scalar, Impl::Blocked, Impl::Simd] {
             let mut out = vec![f32::NAN; 2];
             matmul_bias_into(imp, &x, &w, &bias, &mut out, 1, 1, 2, None);
             assert_eq!(out, vec![16.0, 20.0], "{imp:?}");
@@ -378,7 +416,7 @@ mod tests {
         let (s, m, n) = (256usize, 64usize, 160usize);
         let x = randn(s * m, 1);
         let w = randn(m * n, 2);
-        for imp in [Impl::Scalar, Impl::Blocked] {
+        for imp in [Impl::Scalar, Impl::Blocked, Impl::Simd] {
             let serial = matmul(imp, &x, &w, s, m, n, None);
             let par = matmul(imp, &x, &w, s, m, n, Some(&pool));
             // Identical per-row arithmetic, so bitwise equality is expected.
@@ -389,7 +427,7 @@ mod tests {
     #[test]
     fn ptx_block_matches_manual_transpose_product() {
         // out[j0+jj] += Σ_ti probs[ti, jj] · x[row0+ti], strided rows with
-        // head offsets — both impls against a hand-rolled reference.
+        // head offsets — every impl against a hand-rolled reference.
         let (tq, tk, d, stride) = (5usize, 7usize, 4usize, 12usize);
         let (row0, j0, x_off, out_off) = (2usize, 3usize, 4usize, 8usize);
         let probs = randn(tq * tk, 30);
@@ -405,7 +443,7 @@ mod tests {
                 }
             }
         }
-        for imp in [Impl::Scalar, Impl::Blocked] {
+        for imp in [Impl::Scalar, Impl::Blocked, Impl::Simd] {
             let mut out = out0.clone();
             ptx_block(
                 imp, &probs, tk, tq, tk, &x, stride, x_off, row0, d, &mut out, stride,
@@ -425,13 +463,21 @@ mod tests {
         let w = randn(m * n, 5);
         let g0 = randn(m * n, 6);
         let dx0 = randn(s * m, 7);
-        let (mut g_s, mut g_b) = (g0.clone(), g0);
+        let (mut g_s, mut g_b, mut g_v) = (g0.clone(), g0.clone(), g0);
         accum_xt_dy(Impl::Scalar, &mut g_s, &x, &dy, s, m, n);
         accum_xt_dy(Impl::Blocked, &mut g_b, &x, &dy, s, m, n);
-        let (mut dx_s, mut dx_b) = (dx0.clone(), dx0);
+        accum_xt_dy(Impl::Simd, &mut g_v, &x, &dy, s, m, n);
+        let (mut dx_s, mut dx_b, mut dx_v) = (dx0.clone(), dx0.clone(), dx0);
         accum_dy_wt(Impl::Scalar, &mut dx_s, &dy, &w, s, m, n);
         accum_dy_wt(Impl::Blocked, &mut dx_b, &dy, &w, s, m, n);
-        for (a, b) in g_s.iter().zip(&g_b).chain(dx_s.iter().zip(&dx_b)) {
+        accum_dy_wt(Impl::Simd, &mut dx_v, &dy, &w, s, m, n);
+        for (a, b) in g_s
+            .iter()
+            .zip(&g_b)
+            .chain(g_s.iter().zip(&g_v))
+            .chain(dx_s.iter().zip(&dx_b))
+            .chain(dx_s.iter().zip(&dx_v))
+        {
             assert!((a - b).abs() < 1e-5, "{a} vs {b}");
         }
     }

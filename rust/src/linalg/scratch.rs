@@ -1,0 +1,30 @@
+//! Per-worker packing scratch shared by the blocked and SIMD GEMM tiers.
+//!
+//! The tiled attention kernel calls into [`super::blocked::gemm`] twice per
+//! key-tile step from every pool worker, and a heap allocation per
+//! micro-GEMM would dominate the small-block cases. Each worker thread owns
+//! one [`PackArena`] (a pair of A/B panel buffers) that every GEMM on that
+//! thread reuses, whichever micro-kernel tier retires the panels. The
+//! buffers are cleared and re-zeroed per `(jc, pc[, ic])` block inside
+//! `gemm_blocks`, so reuse never leaks values — only capacity.
+
+use std::cell::RefCell;
+
+/// Reusable packed-panel buffers: `a` holds k-major `MR`-row A panels,
+/// `b` holds `NR`-column B panels (see `blocked.rs` for the layouts).
+#[derive(Default)]
+pub(crate) struct PackArena {
+    pub a: Vec<f32>,
+    pub b: Vec<f32>,
+}
+
+thread_local! {
+    static PACK_ARENA: RefCell<PackArena> = RefCell::new(PackArena::default());
+}
+
+/// Run `f` with this worker's packing arena. GEMMs never nest (the blocking
+/// loops call only the micro-kernel), so the `RefCell` borrow cannot
+/// conflict.
+pub(crate) fn with_pack_arena<R>(f: impl FnOnce(&mut PackArena) -> R) -> R {
+    PACK_ARENA.with(|arena| f(&mut arena.borrow_mut()))
+}

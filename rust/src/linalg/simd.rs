@@ -1,0 +1,235 @@
+//! Explicit-SIMD micro-kernel tier (`Impl::Simd`).
+//!
+//! Retires the same packed `MR×NR = 4×16` panels as the portable kernel in
+//! [`super::blocked`], but with vendor intrinsics instead of relying on
+//! LLVM auto-vectorization:
+//!
+//! * **x86-64**: AVX2+FMA — the 4×16 f32 tile is exactly eight 8-lane
+//!   `__m256` accumulators (the blocking constants in `blocked.rs` were
+//!   chosen for this shape), updated with one `vfmadd231ps` per
+//!   (row, half) per k step from a broadcast A element and two B loads;
+//! * **aarch64**: NEON — sixteen 4-lane `float32x4_t` accumulators updated
+//!   with `vfmaq_f32`. NEON is a baseline aarch64 feature, so the tier is
+//!   always available there.
+//!
+//! Availability is a **runtime** property, never a compile-time
+//! requirement: [`micro`] consults [`available`] (cached
+//! `is_x86_feature_detected!` on x86-64, via
+//! [`crate::util::simd::have_avx2_fma`]) and silently degrades to the
+//! portable tier on unsupported hardware and under Miri, which cannot
+//! interpret vendor intrinsics. Numerics: the k-loop accumulates in the
+//! same ascending order as the portable kernel, with FMA contracting each
+//! multiply-add into one rounding — the differential suites pin agreement
+//! with the scalar oracle at 1e-4 over the odd-shape grid.
+//!
+//! Intrinsics are confined to this module and `util::simd` by the
+//! invariant linter (`cargo run -p xtask -- lint`, rule
+//! `simd-confinement`).
+
+use super::blocked::{Micro, MR, NR};
+
+/// True when the explicit-SIMD micro-kernel can run on this host: AVX2+FMA
+/// detected at runtime on x86-64, always on aarch64 (NEON is baseline),
+/// never under Miri or on other architectures.
+pub(crate) fn available() -> bool {
+    #[cfg(all(target_arch = "x86_64", not(miri)))]
+    {
+        crate::util::simd::have_avx2_fma()
+    }
+    #[cfg(all(target_arch = "aarch64", not(miri)))]
+    {
+        true
+    }
+    #[cfg(any(not(any(target_arch = "x86_64", target_arch = "aarch64")), miri))]
+    {
+        false
+    }
+}
+
+/// Resolve the micro-kernel for `Impl::Simd`: the SIMD tier when the host
+/// supports it, otherwise the portable tier — the silent runtime fallback
+/// the CLI/env docs promise.
+pub(crate) fn micro() -> Micro {
+    if available() {
+        Micro::Simd
+    } else {
+        Micro::Portable
+    }
+}
+
+/// `acc[r][c] += Σ_p a_panel[p*MR + r] * b_panel[p*NR + c]` over one packed
+/// panel pair — the SIMD twin of `blocked::micro_kernel_portable`, same
+/// panel layouts, same ascending-k accumulation order.
+#[inline]
+pub(crate) fn micro_kernel(ap: &[f32], bp: &[f32], kc: usize, acc: &mut [[f32; NR]; MR]) {
+    debug_assert!(ap.len() >= kc * MR && bp.len() >= kc * NR);
+    debug_assert!(available());
+    #[cfg(all(target_arch = "x86_64", not(miri)))]
+    // SAFETY: `Micro::Simd` is only constructed by `micro()` after
+    // `available()` confirmed AVX2+FMA via the cached
+    // `is_x86_feature_detected!` guard in `util::simd::have_avx2_fma`,
+    // and the debug_assert above re-states that contract.
+    unsafe {
+        micro_kernel_avx2(ap, bp, kc, acc)
+    }
+    #[cfg(all(target_arch = "aarch64", not(miri)))]
+    // SAFETY: NEON is a baseline feature of every aarch64 target rustc
+    // accepts; `available()` is unconditionally true there.
+    unsafe {
+        micro_kernel_neon(ap, bp, kc, acc)
+    }
+    #[cfg(any(not(any(target_arch = "x86_64", target_arch = "aarch64")), miri))]
+    super::blocked::micro_kernel_portable(ap, bp, kc, acc)
+}
+
+/// AVX2+FMA 4×16 micro-kernel: eight `__m256` accumulators held as
+/// `[[__m256; 2]; MR]` (LLVM fully unrolls the fixed-trip row loop and
+/// keeps them in ymm registers across the k loop).
+#[cfg(all(target_arch = "x86_64", not(miri)))]
+#[target_feature(enable = "avx2", enable = "fma")]
+// SAFETY: `unsafe fn` purely because of `#[target_feature]` — callers must
+// prove AVX2+FMA before the call; the sole call site (`micro_kernel`) is
+// gated on `available()`.
+unsafe fn micro_kernel_avx2(ap: &[f32], bp: &[f32], kc: usize, acc: &mut [[f32; NR]; MR]) {
+    use core::arch::x86_64::*;
+    // SAFETY: the caller (`micro_kernel`) debug_asserts the packed-panel
+    // bounds `ap.len() >= kc*MR` / `bp.len() >= kc*NR` and the packers in
+    // `blocked::gemm_blocks` always hand over exactly-sized, zero-padded
+    // panels, so every raw offset below is in range; `acc` rows are
+    // contiguous `[f32; 16]`, so each half-row load/store covers 8 valid
+    // lanes. AVX2+FMA availability is the `#[target_feature]` contract
+    // discharged at the call site.
+    unsafe {
+        let mut c: [[__m256; 2]; MR] = [[_mm256_setzero_ps(); 2]; MR];
+        for (r, row) in acc.iter().enumerate() {
+            c[r][0] = _mm256_loadu_ps(row.as_ptr());
+            c[r][1] = _mm256_loadu_ps(row.as_ptr().add(8));
+        }
+        for p in 0..kc {
+            let brow = bp.as_ptr().add(p * NR);
+            let b0 = _mm256_loadu_ps(brow);
+            let b1 = _mm256_loadu_ps(brow.add(8));
+            let arow = ap.as_ptr().add(p * MR);
+            for (r, cr) in c.iter_mut().enumerate() {
+                let a = _mm256_set1_ps(*arow.add(r));
+                cr[0] = _mm256_fmadd_ps(a, b0, cr[0]);
+                cr[1] = _mm256_fmadd_ps(a, b1, cr[1]);
+            }
+        }
+        for (r, row) in acc.iter_mut().enumerate() {
+            _mm256_storeu_ps(row.as_mut_ptr(), c[r][0]);
+            _mm256_storeu_ps(row.as_mut_ptr().add(8), c[r][1]);
+        }
+    }
+}
+
+/// NEON 4×16 micro-kernel: sixteen `float32x4_t` accumulators (4 rows × 4
+/// quads), `vfmaq_f32` per quad per k step.
+#[cfg(all(target_arch = "aarch64", not(miri)))]
+#[target_feature(enable = "neon")]
+// SAFETY: `unsafe fn` purely because of `#[target_feature]`; NEON is
+// baseline on every aarch64 target rustc accepts.
+unsafe fn micro_kernel_neon(ap: &[f32], bp: &[f32], kc: usize, acc: &mut [[f32; NR]; MR]) {
+    use core::arch::aarch64::*;
+    // SAFETY: same packed-panel bounds contract as the AVX2 kernel (see
+    // `micro_kernel`); NEON availability is baseline on aarch64.
+    unsafe {
+        let mut c: [[float32x4_t; 4]; MR] = [[vdupq_n_f32(0.0); 4]; MR];
+        for (r, row) in acc.iter().enumerate() {
+            for q in 0..4 {
+                c[r][q] = vld1q_f32(row.as_ptr().add(q * 4));
+            }
+        }
+        for p in 0..kc {
+            let brow = bp.as_ptr().add(p * NR);
+            let b = [
+                vld1q_f32(brow),
+                vld1q_f32(brow.add(4)),
+                vld1q_f32(brow.add(8)),
+                vld1q_f32(brow.add(12)),
+            ];
+            let arow = ap.as_ptr().add(p * MR);
+            for (r, cr) in c.iter_mut().enumerate() {
+                let a = vdupq_n_f32(*arow.add(r));
+                for (q, cq) in cr.iter_mut().enumerate() {
+                    *cq = vfmaq_f32(*cq, a, b[q]);
+                }
+            }
+        }
+        for (r, row) in acc.iter_mut().enumerate() {
+            for q in 0..4 {
+                vst1q_f32(row.as_mut_ptr().add(q * 4), c[r][q]);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::blocked::micro_kernel_portable;
+    use super::*;
+
+    fn panels(kc: usize) -> (Vec<f32>, Vec<f32>) {
+        let gen = |len: usize, seed: u32| -> Vec<f32> {
+            (0..len)
+                .map(|i| {
+                    let x = (i as u32).wrapping_mul(2654435761).wrapping_add(seed);
+                    (x >> 8) as f32 / (1u32 << 23) as f32 - 1.0
+                })
+                .collect()
+        };
+        (gen(kc * MR, 11), gen(kc * NR, 22))
+    }
+
+    #[test]
+    fn micro_resolves_to_a_runnable_tier() {
+        // Whichever tier `micro()` picks must agree with the portable
+        // kernel on a panel pair — on hosts without SIMD support this
+        // degenerates to portable-vs-portable, which is the point of the
+        // silent fallback.
+        for &kc in &[1usize, 7, 64] {
+            let (ap, bp) = panels(kc);
+            let mut want = [[0.25f32; NR]; MR];
+            micro_kernel_portable(&ap, &bp, kc, &mut want);
+            let mut got = [[0.25f32; NR]; MR];
+            match micro() {
+                Micro::Simd => micro_kernel(&ap, &bp, kc, &mut got),
+                Micro::Portable => micro_kernel_portable(&ap, &bp, kc, &mut got),
+            }
+            for (gr, wr) in got.iter().zip(want.iter()) {
+                for (g, w) in gr.iter().zip(wr.iter()) {
+                    assert!((g - w).abs() < 1e-4, "kc={kc}: {g} vs {w}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn simd_matches_portable_when_available() {
+        if !available() {
+            eprintln!("skipping: no SIMD tier on this host");
+            return;
+        }
+        for &kc in &[1usize, 3, 8, 31, 256] {
+            let (ap, bp) = panels(kc);
+            let mut want = [[0.0f32; NR]; MR];
+            micro_kernel_portable(&ap, &bp, kc, &mut want);
+            let mut got = [[0.0f32; NR]; MR];
+            micro_kernel(&ap, &bp, kc, &mut got);
+            for (gr, wr) in got.iter().zip(want.iter()) {
+                for (g, w) in gr.iter().zip(wr.iter()) {
+                    assert!((g - w).abs() < 1e-5, "kc={kc}: {g} vs {w}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn availability_is_stable() {
+        // The OnceLock cache must make repeated queries agree (the Engine
+        // asks once per worker).
+        assert_eq!(available(), available());
+        let m = micro();
+        assert_eq!(m == Micro::Simd, available());
+    }
+}

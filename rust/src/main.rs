@@ -73,6 +73,7 @@ COMMANDS
   serve     --family tiny --variant sqa --addr 127.0.0.1:7433
             [--max-batch 8 --max-wait-ms 5 --workers 2 --kernel tiled|naive]
             [--pattern dense|window:W|strided:T|dilated:W:T|sink:S:W|bitmap:N]
+            [--kv-dtype f32|f16|bf16]
             [--max-sessions 4 --session-timeout-ms 30000 --gen-capacity 0
              --conn-threads 8]
   encode    --addr 127.0.0.1:7433 (--text \"...\" | --tokens 1,2,3 | --metrics)
@@ -87,14 +88,17 @@ COMMANDS
 Backend: native by default; SQA_BACKEND=pjrt (with --features pjrt builds
 and an artifacts/ dir from `make artifacts`) selects the XLA path.
 Kernel:  the native backend runs the tiled streaming attention kernel on
-blocked GEMMs by default; SQA_KERNEL=naive selects the S×S oracle and
-SQA_LINALG=scalar the element-at-a-time GEMM oracle. `serve --kernel` and
-`train --kernel` accept the combined forms (tiled, naive, tiled+scalar,
-naive+scalar); for training the switch selects the attention *backward*
-too — flash-style streaming (LSE reuse, blocked micro-GEMMs) for tiled,
-the scalar row-loop oracle for naive. `bench kernels` sweeps naive vs
-tiled; `cargo bench --bench train_throughput` records the fwd/bwd split
-step times (BENCH_train.json).
+blocked GEMMs by default; SQA_KERNEL=naive selects the S×S oracle,
+SQA_LINALG=scalar the element-at-a-time GEMM oracle, and SQA_LINALG=simd
+the vectorized micro-kernel + online-softmax tier (AVX2+FMA on x86-64,
+NEON on aarch64; hosts without the features silently fall back to the
+blocked portable path at runtime). `serve --kernel` and `train --kernel`
+accept the combined forms (tiled, naive, tiled+scalar, naive+scalar,
+tiled+simd, naive+simd); for training the switch selects the attention
+*backward* too — flash-style streaming (LSE reuse, blocked micro-GEMMs)
+for tiled, the scalar row-loop oracle for naive. `bench kernels` sweeps
+naive vs tiled; `cargo bench --bench train_throughput` records the
+fwd/bwd split step times (BENCH_train.json).
 Pattern: `serve --pattern` and `train --pattern` compose a block-sparse
 mask into the lowering (`kernel[+linalg][@pattern]` — a pattern without
 --kernel rides on tiled): window:W is a local band |i-j|<W, strided:T keeps
@@ -107,7 +111,10 @@ sub-quadratically (see `cargo bench --bench native_attention`).
 Generate: prompts prefill once (compute-bound, where SQA wins) into a
 per-session KV cache sized by the variant's Hkv, then decode token-by-token
 (memory-bound, where the cache size rules); concurrent generations batch
-their decode steps per worker tick. Generation inherits the *server's*
+their decode steps per worker tick. `serve --kv-dtype f16|bf16` (or
+SQA_KV_DTYPE) stores that cache at half width — rows are narrowed on
+write and widened back to f32 on read, halving each session's resident
+bytes and per-step cache traffic while the kernels still compute in f32. Generation inherits the *server's*
 --pattern (sessions keep the mask from prefill through every decode step);
 there is no per-request pattern switch. `cargo bench --bench
 decode_throughput` sweeps measured tokens/s and bytes/step across the zoo.
@@ -172,6 +179,7 @@ fn cmd_serve(mut args: Args) -> Result<()> {
         queue_capacity: args.usize("queue", 64)?,
         kernel: args.str_opt("kernel"),
         pattern: args.str_opt("pattern"),
+        kv_dtype: args.str_opt("kv-dtype"),
         max_sessions: args.usize("max-sessions", 4)?,
         session_timeout_ms: args.usize("session-timeout-ms", 30_000)? as u64,
         gen_capacity: args.usize("gen-capacity", 0)?,
@@ -180,6 +188,13 @@ fn cmd_serve(mut args: Args) -> Result<()> {
     let ckpt = args.str_opt("checkpoint");
     args.finish()?;
 
+    // The backend reads SQA_KV_DTYPE when it opens, so the flag must land
+    // in the environment first (validated here so a typo fails fast with
+    // the flag's name instead of a panic inside the backend).
+    if let Some(dt) = &cfg.kv_dtype {
+        sqa::runtime::KvDtype::parse(dt).context("--kv-dtype")?;
+        std::env::set_var("SQA_KV_DTYPE", dt);
+    }
     let backend = open_backend(&dir)?;
     let params = match ckpt {
         Some(p) => {

@@ -30,12 +30,14 @@ pub struct SessionStats {
     pub len: usize,
     /// Max token rows the session can hold.
     pub capacity: usize,
-    /// K/V bytes one decode step streams: `2·layers·rows·Hkv·dh·4`, where
-    /// a sliding window caps `rows` at `min(len, window)` exactly like the
+    /// K/V bytes one decode step streams:
+    /// `2·layers·rows·Hkv·dh·dtype_bytes` (4 for f32 caches, 2 for
+    /// f16/bf16 — [`crate::runtime::session::KvDtype::bytes`]), where a
+    /// sliding window caps `rows` at `min(len, window)` exactly like the
     /// roofline's `eff_s` (mask-aware tile skipping never reads older
     /// tiles).
     pub kv_bytes: u64,
-    /// Allocated K/V bytes: `2·layers·capacity·Hkv·dh·4`.
+    /// Allocated K/V bytes: `2·layers·capacity·Hkv·dh·dtype_bytes`.
     pub alloc_bytes: u64,
 }
 

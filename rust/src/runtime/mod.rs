@@ -33,6 +33,7 @@ pub use backend::{open_backend, Backend, SessionStats};
 pub use manifest::{Artifact, FamilyEntry, Kind, Manifest, ParamSpec, VariantEntry};
 pub use native::NativeBackend;
 pub use session::KvCache;
+pub use session::KvDtype;
 
 #[cfg(feature = "pjrt")]
 pub use client::Runtime;

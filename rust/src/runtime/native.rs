@@ -43,7 +43,7 @@ use crate::linalg;
 use crate::runtime::backend::{Backend, SessionStats};
 use crate::runtime::catalog::{self, Geometry, Layout};
 use crate::runtime::manifest::FamilyEntry;
-use crate::runtime::session::{KvCache, SessionTable, TakeError};
+use crate::runtime::session::{KvCache, KvDtype, SessionTable, TakeError};
 use crate::util::rng::Pcg64;
 use crate::util::threadpool::ThreadPool;
 use anyhow::{bail, ensure, Context, Result};
@@ -81,6 +81,11 @@ pub struct NativeBackend {
     /// Default GEMM lowering (`SQA_LINALG` env; blocked unless told
     /// otherwise). `forward_impl` strings like `"tiled+scalar"` override it.
     linalg: linalg::Impl,
+    /// Storage precision of new sessions' KV caches (`SQA_KV_DTYPE` env;
+    /// f32 unless told otherwise). The kernels always compute in f32 —
+    /// this narrows only what the cache *stores* (and therefore what a
+    /// decode step streams).
+    kv_dtype: KvDtype,
     /// Live decode sessions. The take/Busy/put-back step protocol (and why
     /// it is safe under concurrent step/close) lives in [`SessionTable`];
     /// the loom suite model-checks it directly.
@@ -136,8 +141,17 @@ impl NativeBackend {
             pool: ThreadPool::new(workers, 256),
             kernel,
             linalg,
+            kv_dtype: KvDtype::from_env(),
             sessions: SessionTable::new(),
         }
+    }
+
+    /// Override the storage precision of subsequently created sessions'
+    /// KV caches (tests and `sqa serve --kv-dtype`; the env default is
+    /// [`KvDtype::from_env`]).
+    pub fn with_kv_dtype(mut self, dtype: KvDtype) -> Self {
+        self.kv_dtype = dtype;
+        self
     }
 
     fn geom(&self, family: &str) -> Result<&Geometry> {
@@ -430,10 +444,11 @@ impl NativeBackend {
             tokens.len()
         );
         self.check_batch(&model, params, tokens, 1, tokens.len())?;
-        let mut kv = KvCache::new(
+        let mut kv = KvCache::new_with_dtype(
             model.lay.n_layers,
             capacity,
             model.lay.hkv * model.lay.d_head,
+            self.kv_dtype,
         );
         let logits = prefill_row(&model, params, tokens, &mut kv, Some(&self.pool))?;
         let id = self.sessions.insert(DecodeSession { model, kv });
@@ -570,8 +585,18 @@ impl Backend for NativeBackend {
     fn impls(&self) -> Vec<&'static str> {
         // `kernel[+linalg]`: the bare names run the blocked GEMMs;
         // `+scalar` swaps in the element-at-a-time oracle loops
-        // ("tiled+scalar" is the PR-2 execution path, the bench baseline).
-        vec!["tiled", "naive", "tiled+scalar", "naive+scalar"]
+        // ("tiled+scalar" is the PR-2 execution path, the bench baseline);
+        // `+simd` engages the vectorized micro-kernel + online-softmax
+        // tier, silently degrading to blocked where the host lacks
+        // AVX2+FMA/NEON.
+        vec![
+            "tiled",
+            "naive",
+            "tiled+scalar",
+            "naive+scalar",
+            "tiled+simd",
+            "naive+simd",
+        ]
     }
 
     fn forward_impl(
@@ -1172,8 +1197,15 @@ mod tests {
         let tiled = b
             .forward_impl("tiled", "tiny", "sqa", &params, &tokens, 1, 16)
             .unwrap();
-        // Every lowering — both kernels x both GEMM impls — must agree.
-        for impl_ in ["naive", "tiled+scalar", "naive+scalar", "tiled+blocked"] {
+        // Every lowering — both kernels x all three GEMM impls — must agree.
+        for impl_ in [
+            "naive",
+            "tiled+scalar",
+            "naive+scalar",
+            "tiled+blocked",
+            "tiled+simd",
+            "naive+simd",
+        ] {
             let other = b
                 .forward_impl(impl_, "tiny", "sqa", &params, &tokens, 1, 16)
                 .unwrap();
@@ -1193,7 +1225,10 @@ mod tests {
             .forward_impl("tiled+blocked", "tiny", "sqa", &params, &tokens, 1, 16)
             .unwrap();
         assert_eq!(default, explicit);
-        assert_eq!(b.impls(), vec!["tiled", "naive", "tiled+scalar", "naive+scalar"]);
+        assert_eq!(
+            b.impls(),
+            vec!["tiled", "naive", "tiled+scalar", "naive+scalar", "tiled+simd", "naive+simd"]
+        );
     }
 
     #[test]
@@ -1294,6 +1329,44 @@ mod tests {
         assert!(!b.close_session(sid), "close is not idempotent-true");
         assert!(b.decode_step(sid, &params, 1).is_err(), "closed session");
         assert!(b.session_stats(sid).is_err());
+    }
+
+    #[test]
+    fn half_precision_kv_sessions_decode_near_f32_at_half_the_bytes() {
+        // The same prefill + decode under f16/bf16 cache storage: logits
+        // stay within the narrowing error of the f32 session while every
+        // session byte account exactly halves (the deeper round-trip
+        // mirror check lives in rust/tests/decode_differential.rs).
+        let f32_backend = backend();
+        let params = f32_backend.init_params("tiny", "sqa", 9).unwrap();
+        let tokens: Vec<i32> = (0..10).map(|i| ((i * 53 + 5) % 2048) as i32).collect();
+        let (rid, _) = f32_backend
+            .prefill("tiny", "sqa", &params, &tokens[..4], 32)
+            .unwrap();
+        let mut ref_logits = Vec::new();
+        for &t in &tokens[4..] {
+            ref_logits.push(f32_backend.decode_step(rid, &params, t).unwrap());
+        }
+        let ref_stats = f32_backend.session_stats(rid).unwrap();
+        for (dtype, tol) in [(KvDtype::F16, 2e-2f32), (KvDtype::Bf16, 1e-1f32)] {
+            let b = backend().with_kv_dtype(dtype);
+            let (sid, _) = b.prefill("tiny", "sqa", &params, &tokens[..4], 32).unwrap();
+            for (i, &t) in tokens[4..].iter().enumerate() {
+                let l = b.decode_step(sid, &params, t).unwrap();
+                let worst = l
+                    .iter()
+                    .zip(&ref_logits[i])
+                    .map(|(a, b)| (a - b).abs())
+                    .fold(0.0f32, f32::max);
+                assert!(worst < tol, "{} step {i} off by {worst}", dtype.name());
+            }
+            let stats = b.session_stats(sid).unwrap();
+            assert_eq!(stats.len, ref_stats.len);
+            assert_eq!(stats.kv_bytes * 2, ref_stats.kv_bytes);
+            assert_eq!(stats.alloc_bytes * 2, ref_stats.alloc_bytes);
+            assert!(b.close_session(sid));
+        }
+        assert!(f32_backend.close_session(rid));
     }
 
     #[test]

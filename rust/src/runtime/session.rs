@@ -16,18 +16,200 @@
 //! readers that pass an explicit row count ([`KvCache::layer_upto`]) can
 //! already see the fresh rows — the decode kernel attends `len + 1` rows
 //! while the step that produced row `len` is still in flight across layers.
+//!
+//! Storage precision is a per-session choice ([`KvDtype`]): rows are
+//! narrowed to f16/bf16 bits on write and widened back to f32 on read, so
+//! the attention kernels never see anything but f32 while the *resident*
+//! cache — and every byte-accounting method, and therefore the §5.2
+//! roofline traffic term — shrinks by [`KvDtype::bytes`]. The conversions
+//! are hand-rolled bit manipulation ([`f32_to_f16_bits`] and friends,
+//! round-to-nearest-even) because the offline image has no `half` crate.
 
 use crate::util::sync::{self, AtomicU64, Mutex, Ordering};
-use anyhow::{ensure, Result};
+use anyhow::{bail, ensure, Result};
 use std::collections::HashMap;
+
+// ---- half-precision conversions ---------------------------------------------
+
+/// Narrow an f32 to IEEE-754 binary16 bits, round-to-nearest-even.
+///
+/// Overflow (|x| ≥ 65520) saturates to ±inf like hardware `vcvtps2ph`;
+/// NaN payload keeps its top 10 mantissa bits and is always quieted so it
+/// survives the round trip as a NaN.
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let abs = bits & 0x7fff_ffff;
+    if abs >= 0x7f80_0000 {
+        // Inf or NaN (quieted, top payload bits preserved).
+        let payload = if abs > 0x7f80_0000 {
+            0x0200 | ((abs >> 13) & 0x03ff) as u16
+        } else {
+            0
+        };
+        return sign | 0x7c00 | payload;
+    }
+    let exp = (abs >> 23) as i32 - 127 + 15; // re-bias 8-bit -> 5-bit
+    if exp >= 0x1f {
+        return sign | 0x7c00; // overflow -> inf
+    }
+    if exp <= 0 {
+        // Subnormal (or zero) in f16: shift the implicit-1 mantissa down.
+        if exp < -10 {
+            return sign; // underflows to ±0
+        }
+        let man = (abs & 0x007f_ffff) | 0x0080_0000;
+        let shift = (14 - exp) as u32; // 14..=24
+        let half = man >> shift;
+        let rem = man & ((1u32 << shift) - 1);
+        let mid = 1u32 << (shift - 1);
+        let up = rem > mid || (rem == mid && half & 1 == 1);
+        return sign | (half + up as u32) as u16;
+    }
+    let man = abs & 0x007f_ffff;
+    let half = ((exp as u32) << 10) | (man >> 13);
+    let rem = man & 0x1fff;
+    let up = rem > 0x1000 || (rem == 0x1000 && half & 1 == 1);
+    // A mantissa carry bumps the exponent; carrying out of exp 30 lands
+    // exactly on the inf encoding, which is the correct rounded result.
+    sign | (half + up as u32) as u16
+}
+
+/// Widen IEEE-754 binary16 bits back to f32 (exact — every f16 value is
+/// representable in f32).
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h as u32) & 0x8000) << 16;
+    let exp = (h >> 10) & 0x1f;
+    let man = (h & 0x03ff) as u32;
+    if exp == 0x1f {
+        return f32::from_bits(sign | 0x7f80_0000 | (man << 13));
+    }
+    if exp == 0 {
+        // ±0 or subnormal: the value is exactly man * 2^-24.
+        let mag = man as f32 * f32::from_bits((127 - 24) << 23);
+        return if sign != 0 { -mag } else { mag };
+    }
+    f32::from_bits(sign | ((exp as u32 + 127 - 15) << 23) | (man << 13))
+}
+
+/// Narrow an f32 to bfloat16 bits (truncated-exponent format),
+/// round-to-nearest-even on the dropped 16 mantissa bits.
+pub fn f32_to_bf16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        // Keep sign + top payload bits, force a non-zero mantissa so the
+        // NaN can't collapse to an inf encoding.
+        return ((bits >> 16) as u16) | 0x0040;
+    }
+    // Round-to-nearest-even in one add: half-ulp plus the parity bit.
+    // Finite overflow carries into the inf encoding, the correct result.
+    (bits.wrapping_add(0x7fff + ((bits >> 16) & 1)) >> 16) as u16
+}
+
+/// Widen bfloat16 bits back to f32 (exact — bf16 is f32's top half).
+pub fn bf16_bits_to_f32(b: u16) -> f32 {
+    f32::from_bits((b as u32) << 16)
+}
+
+/// Element type of a session's resident K/V rows.
+///
+/// The decode kernels always compute in f32; this only selects what the
+/// cache *stores* (and therefore what a step streams — the §5.2 traffic
+/// term scales by [`KvDtype::bytes`]). `F16` keeps ~11 bits of mantissa
+/// but saturates beyond ±65504; `Bf16` keeps f32's full exponent range at
+/// ~8 bits of mantissa — both halve the cache against `F32`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum KvDtype {
+    #[default]
+    F32,
+    F16,
+    Bf16,
+}
+
+impl KvDtype {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "f32" => Ok(Self::F32),
+            "f16" => Ok(Self::F16),
+            "bf16" => Ok(Self::Bf16),
+            other => bail!("unknown kv dtype {other:?} (f32|f16|bf16)"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::F32 => "f32",
+            Self::F16 => "f16",
+            Self::Bf16 => "bf16",
+        }
+    }
+
+    /// Bytes per cached element — the factor every byte-accounting method
+    /// and the decode roofline's cache term scale by.
+    pub fn bytes(self) -> usize {
+        match self {
+            Self::F32 => 4,
+            Self::F16 | Self::Bf16 => 2,
+        }
+    }
+
+    /// `SQA_KV_DTYPE` env (f32 unless told otherwise).
+    pub fn from_env() -> Self {
+        match std::env::var("SQA_KV_DTYPE").ok().as_deref() {
+            Some(s) if !s.is_empty() => {
+                Self::parse(s).unwrap_or_else(|e| panic!("SQA_KV_DTYPE: {e:#}"))
+            }
+            _ => Self::default(),
+        }
+    }
+
+    /// Narrow one element to this dtype's stored bits (f32 rows are
+    /// stored verbatim and never take this path).
+    fn narrow(self, x: f32) -> u16 {
+        match self {
+            Self::F32 => unreachable!("f32 rows are stored verbatim"),
+            Self::F16 => f32_to_f16_bits(x),
+            Self::Bf16 => f32_to_bf16_bits(x),
+        }
+    }
+
+    /// Widen stored bits back to f32.
+    fn widen(self, bits: u16) -> f32 {
+        match self {
+            Self::F32 => unreachable!("f32 rows are stored verbatim"),
+            Self::F16 => f16_bits_to_f32(bits),
+            Self::Bf16 => bf16_bits_to_f32(bits),
+        }
+    }
+}
+
+/// Per-layer K/V slabs at the cache's element type. `F32` rows read back
+/// as zero-copy slab slices; `Half` rows (f16 *or* bf16 bits — the
+/// [`KvCache::dtype`] tag disambiguates) are narrowed on write and widened
+/// into the per-cache scratch slabs on read.
+#[derive(Debug, Clone)]
+enum Store {
+    F32 {
+        k: Vec<Vec<f32>>,
+        v: Vec<Vec<f32>>,
+    },
+    Half {
+        k: Vec<Vec<u16>>,
+        v: Vec<Vec<u16>>,
+        /// Widen targets for [`KvCache::layer_upto`] — one `[capacity, dkv]`
+        /// f32 slab per direction, reused across layers and steps.
+        wide_k: Vec<f32>,
+        wide_v: Vec<f32>,
+    },
+}
 
 /// Contiguous per-layer K/V append buffers for one generation session.
 #[derive(Debug, Clone)]
 pub struct KvCache {
-    /// Per-layer `[capacity, dkv]` key rows (flat, row-major).
-    k: Vec<Vec<f32>>,
-    /// Per-layer `[capacity, dkv]` value rows.
-    v: Vec<Vec<f32>>,
+    /// Per-layer `[capacity, dkv]` K/V slabs (flat, row-major).
+    store: Store,
+    dtype: KvDtype,
+    layers: usize,
     /// Committed token rows (every layer has this many valid rows).
     len: usize,
     capacity: usize,
@@ -36,11 +218,35 @@ pub struct KvCache {
 }
 
 impl KvCache {
+    /// Full-precision cache (the historical default).
     pub fn new(n_layers: usize, capacity: usize, dkv: usize) -> Self {
+        Self::new_with_dtype(n_layers, capacity, dkv, KvDtype::F32)
+    }
+
+    /// Cache whose resident rows are stored at `dtype`: narrowed on write,
+    /// widened back to f32 on read. An f16/bf16 session halves both the
+    /// footprint and the per-step streamed bytes against f32 at the same
+    /// geometry — the decode-side lever the SQA paper's §5 trade-off
+    /// composes with (it shifts *every* variant's cache down 2x without
+    /// touching the Hkv ratios between them).
+    pub fn new_with_dtype(n_layers: usize, capacity: usize, dkv: usize, dtype: KvDtype) -> Self {
         assert!(n_layers > 0 && capacity > 0 && dkv > 0, "empty cache geometry");
+        let store = match dtype {
+            KvDtype::F32 => Store::F32 {
+                k: (0..n_layers).map(|_| vec![0.0; capacity * dkv]).collect(),
+                v: (0..n_layers).map(|_| vec![0.0; capacity * dkv]).collect(),
+            },
+            KvDtype::F16 | KvDtype::Bf16 => Store::Half {
+                k: (0..n_layers).map(|_| vec![0; capacity * dkv]).collect(),
+                v: (0..n_layers).map(|_| vec![0; capacity * dkv]).collect(),
+                wide_k: vec![0.0; capacity * dkv],
+                wide_v: vec![0.0; capacity * dkv],
+            },
+        };
         Self {
-            k: (0..n_layers).map(|_| vec![0.0; capacity * dkv]).collect(),
-            v: (0..n_layers).map(|_| vec![0.0; capacity * dkv]).collect(),
+            store,
+            dtype,
+            layers: n_layers,
             len: 0,
             capacity,
             dkv,
@@ -67,7 +273,7 @@ impl KvCache {
     }
 
     pub fn n_layers(&self) -> usize {
-        self.k.len()
+        self.layers
     }
 
     /// Row width (`Hkv * d_head`).
@@ -75,11 +281,16 @@ impl KvCache {
         self.dkv
     }
 
+    /// Element type the resident rows are stored at.
+    pub fn dtype(&self) -> KvDtype {
+        self.dtype
+    }
+
     /// Write `n` fresh K/V rows for layer `l` at slots `[len, len + n)`
     /// (uncommitted until [`KvCache::advance`]). `k_rows`/`v_rows` are
     /// `[n, dkv]` head-interleaved slabs, `n` inferred from their length.
     pub fn write(&mut self, l: usize, k_rows: &[f32], v_rows: &[f32]) -> Result<()> {
-        ensure!(l < self.k.len(), "layer {l} out of range ({})", self.k.len());
+        ensure!(l < self.layers, "layer {l} out of range ({})", self.layers);
         ensure!(
             k_rows.len() == v_rows.len() && !k_rows.is_empty() && k_rows.len() % self.dkv == 0,
             "kv rows must be equal non-empty multiples of dkv={} (got {}/{})",
@@ -95,8 +306,21 @@ impl KvCache {
             self.capacity
         );
         let at = self.len * self.dkv;
-        self.k[l][at..at + k_rows.len()].copy_from_slice(k_rows);
-        self.v[l][at..at + v_rows.len()].copy_from_slice(v_rows);
+        match &mut self.store {
+            Store::F32 { k, v } => {
+                k[l][at..at + k_rows.len()].copy_from_slice(k_rows);
+                v[l][at..at + v_rows.len()].copy_from_slice(v_rows);
+            }
+            Store::Half { k, v, .. } => {
+                let dt = self.dtype;
+                for (dst, &x) in k[l][at..at + k_rows.len()].iter_mut().zip(k_rows) {
+                    *dst = dt.narrow(x);
+                }
+                for (dst, &x) in v[l][at..at + v_rows.len()].iter_mut().zip(v_rows) {
+                    *dst = dt.narrow(x);
+                }
+            }
+        }
         Ok(())
     }
 
@@ -112,17 +336,34 @@ impl KvCache {
         Ok(())
     }
 
-    /// Layer `l`'s first `rows` K/V rows (may exceed `len` by the
+    /// Layer `l`'s first `rows` K/V rows as f32 (may exceed `len` by the
     /// uncommitted rows a step just wrote).
-    pub fn layer_upto(&self, l: usize, rows: usize) -> (&[f32], &[f32]) {
+    ///
+    /// Zero-copy for f32 caches; half caches widen into the per-cache
+    /// scratch slabs, so the returned slices borrow `&mut self` and the
+    /// next `layer_upto` call overwrites them — read one layer at a time,
+    /// exactly the decode step's access pattern.
+    pub fn layer_upto(&mut self, l: usize, rows: usize) -> (&[f32], &[f32]) {
         let n = rows * self.dkv;
-        (&self.k[l][..n], &self.v[l][..n])
+        match &mut self.store {
+            Store::F32 { k, v } => (&k[l][..n], &v[l][..n]),
+            Store::Half { k, v, wide_k, wide_v } => {
+                let dt = self.dtype;
+                for (dst, &bits) in wide_k[..n].iter_mut().zip(&k[l][..n]) {
+                    *dst = dt.widen(bits);
+                }
+                for (dst, &bits) in wide_v[..n].iter_mut().zip(&v[l][..n]) {
+                    *dst = dt.widen(bits);
+                }
+                (&wide_k[..n], &wide_v[..n])
+            }
+        }
     }
 
     /// Bytes of K/V currently resident in the cache (`len` rows, every
-    /// layer, both directions).
+    /// layer, both directions) at the storage dtype's width.
     pub fn live_bytes(&self) -> usize {
-        2 * self.k.len() * self.len * self.dkv * std::mem::size_of::<f32>()
+        2 * self.layers * self.len * self.dkv * self.dtype.bytes()
     }
 
     /// Bytes of cached K/V one decode step at the current length actually
@@ -135,13 +376,16 @@ impl KvCache {
             Some(w) => self.len.min(w),
             None => self.len,
         };
-        2 * self.k.len() * rows * self.dkv * std::mem::size_of::<f32>()
+        2 * self.layers * rows * self.dkv * self.dtype.bytes()
     }
 
-    /// Allocated cache footprint (capacity, not occupancy) — what a
-    /// session costs in RSS.
+    /// Allocated *cache* footprint (capacity, not occupancy) — what a
+    /// session's resident K/V costs in RSS at the storage dtype's width.
+    /// The half-path widen scratch (one f32 slab pair per cache, not per
+    /// layer) is a reuse buffer, not cache state, and is excluded so this
+    /// stays the roofline-comparable `2·layers·capacity·dkv·bytes` term.
     pub fn alloc_bytes(&self) -> usize {
-        2 * self.k.len() * self.capacity * self.dkv * std::mem::size_of::<f32>()
+        2 * self.layers * self.capacity * self.dkv * self.dtype.bytes()
     }
 }
 
@@ -316,6 +560,118 @@ mod tests {
         assert_eq!(small.step_bytes(None), small.live_bytes());
         assert_eq!(small.step_bytes(Some(3)), 2 * 3 * 3 * 4 * 4);
         assert_eq!(small.step_bytes(Some(100)), small.live_bytes());
+    }
+
+    #[test]
+    fn f16_conversion_is_ieee_round_to_nearest_even() {
+        // Exactly representable values round-trip bit-perfectly.
+        for x in [0.0f32, -0.0, 1.0, -1.0, 0.5, 65504.0, -65504.0, 6.1035156e-5, 5.9604645e-8] {
+            let rt = f16_bits_to_f32(f32_to_f16_bits(x));
+            assert_eq!(rt.to_bits(), x.to_bits(), "round trip of {x}");
+        }
+        // Known bit patterns (cross-checked against numpy float16).
+        assert_eq!(f32_to_f16_bits(1.0), 0x3c00);
+        assert_eq!(f32_to_f16_bits(-2.0), 0xc000);
+        assert_eq!(f32_to_f16_bits(65504.0), 0x7bff);
+        // Ties round to even mantissa: 1 + 2^-11 is exactly between
+        // 1.0 (even) and 1 + 2^-10; 1 + 3*2^-11 between 1 + 2^-10 (odd)
+        // and 1 + 2^-9 (even).
+        assert_eq!(f32_to_f16_bits(1.0 + f32::powi(2.0, -11)), 0x3c00);
+        assert_eq!(f32_to_f16_bits(1.0 + 3.0 * f32::powi(2.0, -11)), 0x3c02);
+        // Overflow saturates to inf; tiny magnitudes flush to signed zero.
+        assert_eq!(f32_to_f16_bits(65520.0), 0x7c00);
+        assert_eq!(f32_to_f16_bits(1e9), 0x7c00);
+        assert_eq!(f16_bits_to_f32(0x7c00), f32::INFINITY);
+        assert_eq!(f32_to_f16_bits(-1e-9), 0x8000, "negative underflow keeps its sign");
+        // NaN survives the round trip as NaN; infinities as infinities.
+        assert!(f16_bits_to_f32(f32_to_f16_bits(f32::NAN)).is_nan());
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(f32::NEG_INFINITY)), f32::NEG_INFINITY);
+        // Subnormal f16s widen exactly (man * 2^-24).
+        assert_eq!(f16_bits_to_f32(0x0001), f32::powi(2.0, -24));
+        assert_eq!(f16_bits_to_f32(0x8001), -f32::powi(2.0, -24));
+    }
+
+    #[test]
+    fn bf16_conversion_truncates_with_round_to_nearest_even() {
+        for x in [0.0f32, 1.0, -1.0, 0.5, 3.0e38, 1.175e-38, 256.0] {
+            let rt = bf16_bits_to_f32(f32_to_bf16_bits(x));
+            let rel = ((rt - x) / if x == 0.0 { 1.0 } else { x }).abs();
+            assert!(rel <= f32::powi(2.0, -8), "bf16({x}) came back {rt}");
+        }
+        // bf16 is f32's top half: values with <= 7 mantissa bits are exact.
+        assert_eq!(bf16_bits_to_f32(f32_to_bf16_bits(1.5)), 1.5);
+        assert_eq!(f32_to_bf16_bits(1.0), 0x3f80);
+        // Tie cases on the dropped 16 bits round to even.
+        assert_eq!(f32_to_bf16_bits(f32::from_bits(0x3f80_8000)), 0x3f80);
+        assert_eq!(f32_to_bf16_bits(f32::from_bits(0x3f81_8000)), 0x3f82);
+        // Full f32 exponent range survives (where f16 would saturate).
+        assert!(bf16_bits_to_f32(f32_to_bf16_bits(1e30)).is_finite());
+        assert!(bf16_bits_to_f32(f32_to_bf16_bits(f32::NAN)).is_nan());
+        assert_eq!(bf16_bits_to_f32(f32_to_bf16_bits(f32::INFINITY)), f32::INFINITY);
+    }
+
+    #[test]
+    fn half_cache_reads_match_the_narrow_widen_mirror() {
+        for dtype in [KvDtype::F16, KvDtype::Bf16] {
+            let mut kv = KvCache::new_with_dtype(2, 4, 3, dtype);
+            let k_rows: Vec<f32> = (0..6).map(|i| 0.1 + i as f32 * 0.7).collect();
+            let v_rows: Vec<f32> = k_rows.iter().map(|x| -x * 3.3).collect();
+            for l in 0..2 {
+                kv.write(l, &k_rows, &v_rows).unwrap();
+            }
+            kv.advance(2).unwrap();
+            let mirror = |xs: &[f32]| -> Vec<f32> {
+                xs.iter()
+                    .map(|&x| match dtype {
+                        KvDtype::F16 => f16_bits_to_f32(f32_to_f16_bits(x)),
+                        KvDtype::Bf16 => bf16_bits_to_f32(f32_to_bf16_bits(x)),
+                        KvDtype::F32 => x,
+                    })
+                    .collect()
+            };
+            let (want_k, want_v) = (mirror(&k_rows), mirror(&v_rows));
+            for l in 0..2 {
+                let (kc, vc) = kv.layer_upto(l, 2);
+                assert_eq!(kc, &want_k[..], "{} keys, layer {l}", dtype.name());
+                assert_eq!(vc, &want_v[..], "{} values, layer {l}", dtype.name());
+            }
+        }
+    }
+
+    #[test]
+    fn half_dtypes_halve_every_byte_account() {
+        let fill = |kv: &mut KvCache| {
+            for l in 0..3 {
+                let w = kv.dkv();
+                kv.write(l, &vec![0.25; 5 * w], &vec![0.5; 5 * w]).unwrap();
+            }
+            kv.advance(5).unwrap();
+        };
+        let mut full = KvCache::new(3, 8, 4);
+        fill(&mut full);
+        for dtype in [KvDtype::F16, KvDtype::Bf16] {
+            let mut half = KvCache::new_with_dtype(3, 8, 4, dtype);
+            fill(&mut half);
+            assert_eq!(half.dtype(), dtype);
+            assert_eq!(half.live_bytes() * 2, full.live_bytes());
+            assert_eq!(half.live_bytes(), 2 * 3 * 5 * 4 * 2);
+            assert_eq!(half.alloc_bytes() * 2, full.alloc_bytes());
+            assert_eq!(half.step_bytes(None) * 2, full.step_bytes(None));
+            assert_eq!(half.step_bytes(Some(3)) * 2, full.step_bytes(Some(3)));
+        }
+    }
+
+    #[test]
+    fn kv_dtype_parses_and_names_round_trip() {
+        for dt in [KvDtype::F32, KvDtype::F16, KvDtype::Bf16] {
+            assert_eq!(KvDtype::parse(dt.name()).unwrap(), dt);
+        }
+        assert_eq!(KvDtype::default(), KvDtype::F32);
+        assert_eq!(KvDtype::F32.bytes(), 4);
+        assert_eq!(KvDtype::F16.bytes(), 2);
+        assert_eq!(KvDtype::Bf16.bytes(), 2);
+        assert!(KvDtype::parse("f64").is_err());
+        assert!(KvDtype::parse("half").is_err());
     }
 
     #[test]

@@ -14,6 +14,7 @@
 //! | [`bench`]    | criterion           |
 //! | [`logging`]  | env_logger          |
 //! | [`sync`]     | std ⇄ loom seam (+ poison-tolerant lock helpers) |
+//! | [`simd`]     | wide / pulp (vectorized softmax primitives) |
 
 pub mod bench;
 pub mod cli;
@@ -21,6 +22,7 @@ pub mod json;
 pub mod logging;
 pub mod prop;
 pub mod rng;
+pub mod simd;
 pub mod stats;
 pub mod sync;
 pub mod threadpool;

@@ -1,0 +1,471 @@
+//! Vectorized online-softmax primitives with scalar fallbacks.
+//!
+//! The tiled forward ([`crate::attention::tiled`]) and the streaming
+//! backward ([`crate::attention::backward`]) spend their non-GEMM time in
+//! three per-row loops: the block row max, the `exp(score − m)`
+//! exponentiation (+ normalizer sum), and the rescale-accumulate of the
+//! running output. Under `Impl::Simd` those loops route through this
+//! module: AVX2+FMA eight-lane bodies on x86-64 (runtime-detected via
+//! [`have_avx2_fma`], the same cached guard the GEMM micro-kernel tier
+//! uses), and scalar mirrors everywhere else — same polynomial, same
+//! per-element operation order, so a host without AVX2 degrades silently
+//! without changing semantics.
+//!
+//! Determinism: every helper reduces in a fixed lane-then-tail order that
+//! depends only on the slice length — never on thread count — so the
+//! parallel tiled kernels stay bitwise identical to their serial runs (the
+//! property `parallel_matches_serial` pins). There is no fast-math
+//! reassociation beyond the documented fixed split into eight lane partial
+//! sums plus a scalar tail.
+//!
+//! `exp` is a Cephes-style degree-5 polynomial over the reduced argument
+//! (`x = n·ln2 + r`, `|r| ≤ ln2/2`), exact at 0 (`exp_approx(0) == 1.0`),
+//! flushed to `0.0` below [`EXP_LO`] (true `exp` is subnormal there), and
+//! within ~3e-7 relative error of `f64` exp for `|x| ≤ 5` (≤ 4e-6 out to
+//! the clamp range, where the probabilities are already vanishing) —
+//! orders below the 1e-4 differential tolerance. Inputs are expected
+//! finite; callers gate rows through [`row_max_finite`] first.
+//!
+//! Intrinsics are confined to this module and `linalg/simd` by the
+//! invariant linter (`cargo run -p xtask -- lint`, rule
+//! `simd-confinement`).
+
+/// Below this the polynomial's `2^n` scaling would go subnormal; real
+/// `exp` is < 1.2e-38 there, so softmax weight is indistinguishable from 0.
+pub const EXP_LO: f32 = -87.336_54;
+/// Above this `2^n` construction would overflow the exponent field; inputs
+/// are clamped (softmax arguments are ≤ 0, so this is never hit in anger).
+const EXP_HI: f32 = 88.02;
+/// 1.5·2²³ — adding and subtracting forces round-to-nearest-even to an
+/// integer for |z| < 2²², the branch-free `rint` both paths share.
+const MAGIC: f32 = 12_582_912.0;
+const LOG2E: f32 = std::f32::consts::LOG2_E;
+/// Cody–Waite split of ln 2 (Cephes constants): `n·LN2_HI` is exact for
+/// the n range above, `LN2_LO` restores the dropped bits.
+const LN2_HI: f32 = 0.693_359_375;
+const LN2_LO: f32 = -2.121_944_4e-4;
+/// Cephes single-precision exp polynomial coefficients (P0 is the leading
+/// term): `exp(r) ≈ ((((((P0·r+P1)·r+P2)·r+P3)·r+P4)·r+P5)·r²) + r + 1`.
+const P0: f32 = 1.987_569_2e-4;
+const P1: f32 = 1.398_199_9e-3;
+const P2: f32 = 8.333_452e-3;
+const P3: f32 = 4.166_579_6e-2;
+const P4: f32 = 1.666_666_5e-1;
+const P5: f32 = 5.000_000_2e-1;
+
+/// Cached AVX2+FMA runtime detection — the single guard every intrinsic
+/// call site in this module and in `linalg::simd` names in its SAFETY
+/// comment. Always false on non-x86-64 targets and under Miri (which
+/// cannot interpret vendor intrinsics).
+pub(crate) fn have_avx2_fma() -> bool {
+    #[cfg(all(target_arch = "x86_64", not(miri)))]
+    {
+        use std::sync::OnceLock;
+        static DETECTED: OnceLock<bool> = OnceLock::new();
+        *DETECTED.get_or_init(|| {
+            std::arch::is_x86_feature_detected!("avx2")
+                && std::arch::is_x86_feature_detected!("fma")
+        })
+    }
+    #[cfg(not(all(target_arch = "x86_64", not(miri))))]
+    {
+        false
+    }
+}
+
+/// Scalar mirror of the vector `exp` pipeline: same constants, same
+/// operation order, single-rounding `mul_add` where the vector body uses
+/// FMA — so lane and tail elements of one row agree bit-for-bit. Finite
+/// inputs only (`-inf` maps to 0, which covers `exp(m_old − m_new)` on the
+/// first block of an online-softmax row).
+#[inline]
+pub fn exp_approx(x: f32) -> f32 {
+    if x < EXP_LO {
+        return 0.0;
+    }
+    let x = x.min(EXP_HI);
+    let z = x * LOG2E;
+    let n = (z + MAGIC) - MAGIC;
+    let r = n.mul_add(-LN2_HI, x);
+    let r = n.mul_add(-LN2_LO, r);
+    let mut p = P0;
+    p = p.mul_add(r, P1);
+    p = p.mul_add(r, P2);
+    p = p.mul_add(r, P3);
+    p = p.mul_add(r, P4);
+    p = p.mul_add(r, P5);
+    let y = (p * r).mul_add(r, r) + 1.0;
+    y * f32::from_bits((((n as i32) + 127) << 23) as u32)
+}
+
+/// Max over `xs` when every element is finite, `None` otherwise — the gate
+/// for the vectorized row fast path. A `None` sends the row to the exact
+/// scalar masking/poisoning path, so `±inf`/NaN semantics never depend on
+/// which tier ran. Returns `Some(-inf)` on an empty slice.
+pub fn row_max_finite(xs: &[f32]) -> Option<f32> {
+    #[cfg(all(target_arch = "x86_64", not(miri)))]
+    if have_avx2_fma() {
+        // SAFETY: AVX2 availability just confirmed by the cached
+        // `have_avx2_fma` detection guard.
+        return unsafe { avx2::row_max_finite(xs) };
+    }
+    let mut m = f32::NEG_INFINITY;
+    for &x in xs {
+        if !x.is_finite() {
+            return None;
+        }
+        m = m.max(x);
+    }
+    Some(m)
+}
+
+/// `xs[i] *= alpha` — the online-softmax rescale of the running output
+/// row. A single IEEE multiply per element on either path, so the result
+/// is bitwise identical to the scalar loop it replaces.
+pub fn scale(xs: &mut [f32], alpha: f32) {
+    #[cfg(all(target_arch = "x86_64", not(miri)))]
+    if have_avx2_fma() {
+        // SAFETY: AVX2 availability just confirmed by the cached
+        // `have_avx2_fma` detection guard.
+        unsafe { avx2::scale(xs, alpha) };
+        return;
+    }
+    for x in xs {
+        *x *= alpha;
+    }
+}
+
+/// `dst[i] = exp_approx(src[i] - m)`, returning the sum of the written
+/// probabilities in the fixed lane-then-tail order. The forward's
+/// exponentiation + normalizer-accumulation step for one visible row
+/// segment; `src` must be all-finite (gate with [`row_max_finite`]).
+pub fn exp_sub_into(src: &[f32], m: f32, dst: &mut [f32]) -> f32 {
+    debug_assert_eq!(src.len(), dst.len());
+    #[cfg(all(target_arch = "x86_64", not(miri)))]
+    if have_avx2_fma() {
+        // SAFETY: AVX2+FMA availability just confirmed by the cached
+        // `have_avx2_fma` detection guard.
+        return unsafe { avx2::exp_sub_into(src, m, dst) };
+    }
+    let mut sum = 0.0f32;
+    for (d, &x) in dst.iter_mut().zip(src) {
+        let p = exp_approx(x - m);
+        *d = p;
+        sum += p;
+    }
+    sum
+}
+
+/// The streaming backward's recompute step for one visible row segment:
+/// `ps[j] = exp_approx(ss[j] - lse)` and
+/// `ds[j] = ps[j] · ((dps[j] − delta) · scale)`, with `ds[j]` forced to
+/// exactly 0 where the probability underflowed to 0 (matching the scalar
+/// path's `p == 0.0` guard). `ss` must be all-finite.
+pub fn probs_dscores(
+    ss: &[f32],
+    dps: &[f32],
+    lse: f32,
+    delta: f32,
+    scale: f32,
+    ps: &mut [f32],
+    ds: &mut [f32],
+) {
+    debug_assert!(ss.len() == dps.len() && ss.len() == ps.len() && ss.len() == ds.len());
+    #[cfg(all(target_arch = "x86_64", not(miri)))]
+    if have_avx2_fma() {
+        // SAFETY: AVX2+FMA availability just confirmed by the cached
+        // `have_avx2_fma` detection guard.
+        unsafe { avx2::probs_dscores(ss, dps, lse, delta, scale, ps, ds) };
+        return;
+    }
+    for jj in 0..ss.len() {
+        let p = exp_approx(ss[jj] - lse);
+        ps[jj] = p;
+        ds[jj] = if p == 0.0 {
+            0.0
+        } else {
+            p * ((dps[jj] - delta) * scale)
+        };
+    }
+}
+
+#[cfg(all(target_arch = "x86_64", not(miri)))]
+mod avx2 {
+    use super::{EXP_HI, EXP_LO, LN2_HI, LN2_LO, LOG2E, MAGIC, P0, P1, P2, P3, P4, P5};
+    use core::arch::x86_64::*;
+
+    /// Eight-lane twin of [`super::exp_approx`]: identical constants and
+    /// operation order, FMA where the scalar mirror uses `mul_add`.
+    #[inline]
+    #[target_feature(enable = "avx2", enable = "fma")]
+    // SAFETY: `unsafe fn` purely because of `#[target_feature]` — every
+    // caller in this module is gated on `have_avx2_fma`.
+    unsafe fn exp_ps(x: __m256) -> __m256 {
+        // SAFETY: pure register arithmetic — no memory access; AVX2+FMA is
+        // the `#[target_feature]` contract discharged by the callers in
+        // this module (all gated on `have_avx2_fma`).
+        unsafe {
+            let under = _mm256_cmp_ps::<_CMP_LT_OQ>(x, _mm256_set1_ps(EXP_LO));
+            let x = _mm256_min_ps(x, _mm256_set1_ps(EXP_HI));
+            let z = _mm256_mul_ps(x, _mm256_set1_ps(LOG2E));
+            let magic = _mm256_set1_ps(MAGIC);
+            let n = _mm256_sub_ps(_mm256_add_ps(z, magic), magic);
+            let r = _mm256_fmadd_ps(n, _mm256_set1_ps(-LN2_HI), x);
+            let r = _mm256_fmadd_ps(n, _mm256_set1_ps(-LN2_LO), r);
+            let mut p = _mm256_set1_ps(P0);
+            p = _mm256_fmadd_ps(p, r, _mm256_set1_ps(P1));
+            p = _mm256_fmadd_ps(p, r, _mm256_set1_ps(P2));
+            p = _mm256_fmadd_ps(p, r, _mm256_set1_ps(P3));
+            p = _mm256_fmadd_ps(p, r, _mm256_set1_ps(P4));
+            p = _mm256_fmadd_ps(p, r, _mm256_set1_ps(P5));
+            let y = _mm256_add_ps(
+                _mm256_fmadd_ps(_mm256_mul_ps(p, r), r, r),
+                _mm256_set1_ps(1.0),
+            );
+            let pow2 = _mm256_castsi256_ps(_mm256_slli_epi32::<23>(_mm256_add_epi32(
+                _mm256_cvttps_epi32(n),
+                _mm256_set1_epi32(127),
+            )));
+            // Underflow lanes computed garbage above; force them to 0.
+            _mm256_andnot_ps(under, _mm256_mul_ps(y, pow2))
+        }
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    // SAFETY: `unsafe fn` purely because of `#[target_feature]` — the
+    // dispatchers in the parent module call in only when `have_avx2_fma`.
+    pub(super) unsafe fn row_max_finite(xs: &[f32]) -> Option<f32> {
+        // SAFETY: every load below reads 8 lanes inside `xs` (the chunk
+        // loop stops at `len - len % 8`); AVX2 is the `#[target_feature]`
+        // contract discharged at the `have_avx2_fma`-gated call site.
+        unsafe {
+            let abs = _mm256_castsi256_ps(_mm256_set1_epi32(0x7fff_ffff));
+            let inf = _mm256_set1_ps(f32::INFINITY);
+            let mut vmax = _mm256_set1_ps(f32::NEG_INFINITY);
+            let mut finite = _mm256_castsi256_ps(_mm256_set1_epi32(-1));
+            let chunks = xs.len() / 8;
+            for c in 0..chunks {
+                let v = _mm256_loadu_ps(xs.as_ptr().add(c * 8));
+                finite =
+                    _mm256_and_ps(finite, _mm256_cmp_ps::<_CMP_LT_OQ>(_mm256_and_ps(v, abs), inf));
+                vmax = _mm256_max_ps(vmax, v);
+            }
+            if _mm256_movemask_ps(finite) != 0xff {
+                return None;
+            }
+            // Max is order-independent over finite lanes: fold the lanes
+            // and the tail with the same scalar max the fallback uses.
+            let mut lanes = [0.0f32; 8];
+            _mm256_storeu_ps(lanes.as_mut_ptr(), vmax);
+            let mut m = lanes.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+            for &x in &xs[chunks * 8..] {
+                if !x.is_finite() {
+                    return None;
+                }
+                m = m.max(x);
+            }
+            Some(m)
+        }
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    // SAFETY: `unsafe fn` purely because of `#[target_feature]` — the
+    // dispatchers in the parent module call in only when `have_avx2_fma`.
+    pub(super) unsafe fn scale(xs: &mut [f32], alpha: f32) {
+        // SAFETY: loads/stores cover 8 in-bounds lanes per chunk as above.
+        unsafe {
+            let va = _mm256_set1_ps(alpha);
+            let chunks = xs.len() / 8;
+            for c in 0..chunks {
+                let p = xs.as_mut_ptr().add(c * 8);
+                _mm256_storeu_ps(p, _mm256_mul_ps(_mm256_loadu_ps(p), va));
+            }
+            for x in &mut xs[chunks * 8..] {
+                *x *= alpha;
+            }
+        }
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    // SAFETY: `unsafe fn` purely because of `#[target_feature]` — the
+    // dispatchers in the parent module call in only when `have_avx2_fma`.
+    pub(super) unsafe fn exp_sub_into(src: &[f32], m: f32, dst: &mut [f32]) -> f32 {
+        // SAFETY: `src.len() == dst.len()` (debug_assert'd by the caller);
+        // chunked loads/stores stay inside both slices.
+        unsafe {
+            let vm = _mm256_set1_ps(m);
+            let mut vsum = _mm256_setzero_ps();
+            let chunks = src.len() / 8;
+            for c in 0..chunks {
+                let p = super::avx2::exp_ps(_mm256_sub_ps(
+                    _mm256_loadu_ps(src.as_ptr().add(c * 8)),
+                    vm,
+                ));
+                _mm256_storeu_ps(dst.as_mut_ptr().add(c * 8), p);
+                vsum = _mm256_add_ps(vsum, p);
+            }
+            // Fixed reduction order: lane partials in lane order, then the
+            // scalar tail — a function of the slice length only.
+            let mut lanes = [0.0f32; 8];
+            _mm256_storeu_ps(lanes.as_mut_ptr(), vsum);
+            let mut sum = lanes.iter().sum::<f32>();
+            for (d, &x) in dst[chunks * 8..].iter_mut().zip(&src[chunks * 8..]) {
+                let p = super::exp_approx(x - m);
+                *d = p;
+                sum += p;
+            }
+            sum
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "avx2", enable = "fma")]
+    // SAFETY: `unsafe fn` purely because of `#[target_feature]` — the
+    // dispatchers in the parent module call in only when `have_avx2_fma`.
+    pub(super) unsafe fn probs_dscores(
+        ss: &[f32],
+        dps: &[f32],
+        lse: f32,
+        delta: f32,
+        scale: f32,
+        ps: &mut [f32],
+        ds: &mut [f32],
+    ) {
+        // SAFETY: all four slices have equal length (debug_assert'd by the
+        // caller); chunked loads/stores stay inside them.
+        unsafe {
+            let vl = _mm256_set1_ps(lse);
+            let vd = _mm256_set1_ps(delta);
+            let vs = _mm256_set1_ps(scale);
+            let zero = _mm256_setzero_ps();
+            let chunks = ss.len() / 8;
+            for c in 0..chunks {
+                let p = super::avx2::exp_ps(_mm256_sub_ps(
+                    _mm256_loadu_ps(ss.as_ptr().add(c * 8)),
+                    vl,
+                ));
+                _mm256_storeu_ps(ps.as_mut_ptr().add(c * 8), p);
+                let t = _mm256_mul_ps(
+                    _mm256_sub_ps(_mm256_loadu_ps(dps.as_ptr().add(c * 8)), vd),
+                    vs,
+                );
+                let d = _mm256_mul_ps(p, t);
+                // p == 0 lanes emit exactly 0 like the scalar guard.
+                let dead = _mm256_cmp_ps::<_CMP_EQ_OQ>(p, zero);
+                _mm256_storeu_ps(ds.as_mut_ptr().add(c * 8), _mm256_andnot_ps(dead, d));
+            }
+            for jj in chunks * 8..ss.len() {
+                let p = super::exp_approx(ss[jj] - lse);
+                ps[jj] = p;
+                ds[jj] = if p == 0.0 {
+                    0.0
+                } else {
+                    p * ((dps[jj] - delta) * scale)
+                };
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn noisy(len: usize, seed: u32, spread: f32) -> Vec<f32> {
+        (0..len)
+            .map(|i| {
+                let x = (i as u32).wrapping_mul(2654435761).wrapping_add(seed);
+                ((x >> 8) as f32 / (1u32 << 23) as f32 - 1.0) * spread
+            })
+            .collect()
+    }
+
+    #[test]
+    fn exp_approx_matches_f64_exp() {
+        assert_eq!(exp_approx(0.0), 1.0, "exp(0) must be exact");
+        assert_eq!(exp_approx(f32::NEG_INFINITY), 0.0);
+        assert_eq!(exp_approx(-1.0e30), 0.0);
+        assert_eq!(exp_approx(EXP_LO - 1.0), 0.0);
+        let mut x = -87.0f32;
+        while x < 10.0 {
+            let got = exp_approx(x) as f64;
+            let want = (x as f64).exp();
+            let rel = (got - want).abs() / want;
+            // Reduction error grows with |x|; the core softmax range is
+            // an order tighter than the far tail (whose absolute
+            // probabilities are vanishing anyway).
+            let tol = if x.abs() <= 5.0 { 5e-7 } else { 5e-6 };
+            assert!(rel < tol, "exp({x}): {got} vs {want} (rel {rel:.3e})");
+            x += 0.0371;
+        }
+    }
+
+    #[test]
+    fn vector_paths_match_scalar_mirrors_exactly() {
+        // On AVX2 hosts the dispatchers take the vector path; compare each
+        // against a hand-run scalar mirror bit-for-bit, tails included.
+        for &len in &[1usize, 7, 8, 9, 16, 23, 64, 101] {
+            let src = noisy(len, 3, 20.0);
+            let m = 4.0f32;
+            let mut dst = vec![0.0f32; len];
+            let sum = exp_sub_into(&src, m, &mut dst);
+            let mirror: Vec<f32> = src.iter().map(|&x| exp_approx(x - m)).collect();
+            for (g, w) in dst.iter().zip(&mirror) {
+                assert_eq!(g.to_bits(), w.to_bits());
+            }
+            assert!(sum.is_finite() && sum >= 0.0);
+
+            let mut xs = noisy(len, 5, 2.0);
+            let want: Vec<f32> = xs.iter().map(|&x| x * 0.37f32).collect();
+            scale(&mut xs, 0.37);
+            for (g, w) in xs.iter().zip(&want) {
+                assert_eq!(g.to_bits(), w.to_bits());
+            }
+
+            let ss = noisy(len, 7, 30.0);
+            let dps = noisy(len, 9, 3.0);
+            let (lse, delta, sc) = (2.5f32, 0.125f32, 0.3f32);
+            let mut ps = vec![0.0f32; len];
+            let mut ds = vec![0.0f32; len];
+            probs_dscores(&ss, &dps, lse, delta, sc, &mut ps, &mut ds);
+            for jj in 0..len {
+                let p = exp_approx(ss[jj] - lse);
+                let d = if p == 0.0 {
+                    0.0
+                } else {
+                    p * ((dps[jj] - delta) * sc)
+                };
+                assert_eq!(ps[jj].to_bits(), p.to_bits());
+                assert_eq!(ds[jj].to_bits(), d.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn row_max_gates_on_finiteness() {
+        for &len in &[1usize, 8, 13, 40] {
+            let xs = noisy(len, 11, 5.0);
+            let want = xs.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+            assert_eq!(row_max_finite(&xs), Some(want));
+            for bad in [f32::INFINITY, f32::NEG_INFINITY, f32::NAN] {
+                let mut poisoned = xs.clone();
+                poisoned[len / 2] = bad;
+                assert_eq!(row_max_finite(&poisoned), None, "len {len}, bad {bad}");
+            }
+        }
+        assert_eq!(row_max_finite(&[]), Some(f32::NEG_INFINITY));
+    }
+
+    #[test]
+    fn exp_sub_sum_is_length_deterministic() {
+        // Same slice, repeated calls: bitwise-identical sums (the fixed
+        // lane-then-tail reduction order does not depend on anything else).
+        let src = noisy(77, 13, 15.0);
+        let mut a = vec![0.0f32; 77];
+        let mut b = vec![0.0f32; 77];
+        let s1 = exp_sub_into(&src, 1.5, &mut a);
+        let s2 = exp_sub_into(&src, 1.5, &mut b);
+        assert_eq!(s1.to_bits(), s2.to_bits());
+        assert_eq!(a, b);
+    }
+}

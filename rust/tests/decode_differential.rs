@@ -2,17 +2,19 @@
 //! incremental decode (prefill + per-token [`Backend::decode_step`]) must
 //! reproduce a full stateless re-forward of the same token sequence at
 //! every position, to 1e-4 — across the variant zoo, both attention
-//! kernels (prefill lowering) and both linalg impls (which the incremental
+//! kernels (prefill lowering) and all three linalg impls (which the incremental
 //! decode kernel also runs on).
 //!
 //! Plus KV-cache bookkeeping edge cases at the backend boundary: prompt
 //! longer than the cache, session at capacity, eviction (close)
 //! mid-generation, single-token prompts, and the §5.2 cache-size ordering
-//! (xSQA == GQA < sSQA) as observable `session_stats` bytes.
+//! (xSQA == GQA < sSQA) as observable `session_stats` bytes — at f32 and
+//! again at half-precision cache storage, where every byte halves but the
+//! Hkv ratios (and hence the ordering) are untouched.
 
 use sqa::attention::Kernel;
 use sqa::linalg;
-use sqa::runtime::{Backend, NativeBackend};
+use sqa::runtime::{Backend, KvDtype, NativeBackend};
 
 const VOCAB: usize = 2048; // tiny family
 
@@ -54,7 +56,7 @@ fn check_decode_matches_forward(
 fn incremental_decode_matches_full_forward_across_variants_and_impls() {
     let tokens = prompt_tokens(20);
     for kernel in [Kernel::Tiled, Kernel::Naive] {
-        for imp in [linalg::Impl::Blocked, linalg::Impl::Scalar] {
+        for imp in [linalg::Impl::Blocked, linalg::Impl::Scalar, linalg::Impl::Simd] {
             let b = NativeBackend::with_impls(kernel, imp);
             let label = format!("{}+{}", kernel.name(), imp.name());
             for variant in ["mha", "gqa", "mqa", "sqa", "xsqa"] {
@@ -186,6 +188,79 @@ fn cache_bytes_follow_hkv_ordering() {
     // And the absolute value is the analytic model's cache term:
     // 2 bytes-dirs * 2 layers * 16 tokens * Hkv * 16 dh * 4 B.
     assert_eq!(gqa, 2 * 2 * 16 * 2 * 16 * 4);
+}
+
+#[test]
+fn half_precision_kv_decode_tracks_f32_within_narrowing_error() {
+    // An f16/bf16-cache session decodes the same tokens as the f32
+    // session to within the narrowing's resolution. Tolerances are
+    // deliberate, not tight: f16 keeps ~11 mantissa bits (rel ~2^-11) and
+    // bf16 ~8 (rel ~2^-8) per cached element, and the error compounds
+    // through 2 layers of attention + projections before the LM head, so
+    // we allow roughly 40x the single-element error on the logits. The
+    // *exactness* contract (cache reads == the narrow-then-widen mirror of
+    // what was written) is pinned elementwise in runtime::session's unit
+    // tests; end-to-end only closeness is meaningful.
+    let f32_b = NativeBackend::new();
+    let tokens = prompt_tokens(16);
+    let (split, t_len) = (6usize, 16usize);
+    for variant in ["sqa", "ssqa"] {
+        let params = f32_b.init_params("tiny", variant, 5).unwrap();
+        let full = f32_b.forward("tiny", variant, &params, &tokens, 1, t_len).unwrap();
+        for (dtype, tol) in [(KvDtype::F16, 2e-2f32), (KvDtype::Bf16, 1.5e-1f32)] {
+            let b = NativeBackend::new().with_kv_dtype(dtype);
+            let (sid, logits) = b
+                .prefill("tiny", variant, &params, &tokens[..split], t_len)
+                .unwrap();
+            let d = max_diff(&logits, &full[(split - 1) * VOCAB..split * VOCAB]);
+            assert!(d < tol, "{variant}/{} prefill diverges by {d}", dtype.name());
+            for i in split..t_len {
+                let l = b.decode_step(sid, &params, tokens[i]).unwrap();
+                let d = max_diff(&l, &full[i * VOCAB..(i + 1) * VOCAB]);
+                assert!(d < tol, "{variant}/{} step {i} diverges by {d}", dtype.name());
+            }
+            let st = b.session_stats(sid).unwrap();
+            assert_eq!(st.len, t_len);
+            assert_eq!(st.kv_bytes % 2, 0);
+            assert!(b.close_session(sid));
+        }
+        // Engagement check: a bf16 cache cannot reproduce the f32 session
+        // bit-for-bit over a 10-step decode (it would imply the cache
+        // never narrowed anything).
+        let b = NativeBackend::new().with_kv_dtype(KvDtype::Bf16);
+        let (sid, _) = b
+            .prefill("tiny", variant, &params, &tokens[..split], t_len)
+            .unwrap();
+        let mut any_diff = false;
+        for i in split..t_len {
+            let l = b.decode_step(sid, &params, tokens[i]).unwrap();
+            any_diff |= l != full[i * VOCAB..(i + 1) * VOCAB];
+        }
+        assert!(any_diff, "{variant}: bf16 cache produced bit-identical logits");
+        assert!(b.close_session(sid));
+    }
+}
+
+#[test]
+fn cache_byte_ordering_survives_half_precision() {
+    // The §5.2 ordering re-checked at 2 bytes/elem: the dtype scales every
+    // variant's cache uniformly, so xSQA == GQA < sSQA < MHA must hold
+    // under f16 exactly as under f32 — at literally half the bytes.
+    let b = NativeBackend::new().with_kv_dtype(KvDtype::F16);
+    let tokens = prompt_tokens(16);
+    let bytes = |variant: &str| -> u64 {
+        let params = b.init_params("tiny", variant, 3).unwrap();
+        let (sid, _) = b.prefill("tiny", variant, &params, &tokens, 16).unwrap();
+        let st = b.session_stats(sid).unwrap();
+        b.close_session(sid);
+        st.kv_bytes
+    };
+    let (mha, gqa, ssqa, xsqa) = (bytes("mha"), bytes("gqa"), bytes("ssqa"), bytes("xsqa"));
+    assert_eq!(xsqa, gqa, "xSQA must still match GQA's cache exactly");
+    assert_eq!(ssqa, 2 * gqa, "sSQA still carries 2x GQA's cache");
+    assert_eq!(mha, 4 * gqa);
+    // Absolute term: 2 dirs * 2 layers * 16 tokens * Hkv=2 * 16 dh * 2 B.
+    assert_eq!(gqa, 2 * 2 * 16 * 2 * 16 * 2);
 }
 
 #[test]

@@ -184,6 +184,43 @@ fn tiled_backward_matches_oracle_under_sparse_patterns() {
 }
 
 #[test]
+fn simd_backward_matches_oracle_on_representative_slice() {
+    // Representative slice of the gradient grid under Impl::Simd: dense
+    // causal/bidirectional masks engage the vectorized probs+dscores fused
+    // pass, the windowed mask its segment clipping (the full mask×pattern
+    // sweep runs on the blocked and scalar axes above). Hosts without
+    // AVX2+FMA/NEON resolve to the portable micro-kernel at runtime.
+    let mut seed = 77000;
+    for &(geom, hq, hkv) in &[("sqa", 4usize, 2usize), ("mha", 8, 8)] {
+        for &(causal, window) in &[(true, None), (false, None), (true, Some(TILE + 3))] {
+            for &s in SEQS {
+                seed += 10;
+                let spec = Spec {
+                    causal,
+                    window,
+                    ..Spec::full(hq, hkv)
+                };
+                let ((dq_t, dk_t, dv_t), (dq_n, dk_n, dv_n)) =
+                    both_backwards(hq, hkv, s, 4, spec, Impl::Simd, seed);
+                for (name, t, n) in [
+                    ("dq", &dq_t, &dq_n),
+                    ("dk", &dk_t, &dk_n),
+                    ("dv", &dv_t, &dv_n),
+                ] {
+                    let diff = max_diff(t, n);
+                    assert!(
+                        diff < TOL,
+                        "{geom} (Hq={hq} Hkv={hkv}) causal={causal} window={window:?} \
+                         s={s} simd: {name} diff {diff}"
+                    );
+                    assert!(t.iter().all(|x| x.is_finite()));
+                }
+            }
+        }
+    }
+}
+
+#[test]
 fn pattern_masked_slices_get_exactly_zero_gradients() {
     // A bitmap with a fully masked query block (rows [8, 16)) and a key
     // block nobody can see (keys [8, 16)): both backwards must emit
@@ -206,7 +243,7 @@ fn pattern_masked_slices_get_exactly_zero_gradients() {
     let (hq, hkv, s, d) = (4usize, 2usize, 3 * TILE, 4usize);
     let spec = Spec::causal(hq, hkv).with_pattern(MaskPattern::Bitmap(id));
     let (dq_cols, dkv_cols) = (hq * d, hkv * d);
-    for imp in [Impl::Scalar, Impl::Blocked] {
+    for imp in [Impl::Scalar, Impl::Blocked, Impl::Simd] {
         let ((dq_t, dk_t, dv_t), (dq_n, dk_n, dv_n)) =
             both_backwards(hq, hkv, s, d, spec, imp, 8800);
         for (name, t, n) in [

@@ -1,12 +1,15 @@
 //! Differential suite for the `linalg` subsystem: the blocked GEMM
-//! micro-kernels vs the scalar oracle loops, from raw products up through
-//! the full attention layer and a whole train step.
+//! micro-kernels and the SIMD tier vs the scalar oracle loops, from raw
+//! products up through the full attention layer and a whole train step.
 //!
 //! Shape grids deliberately straddle every blocking boundary: the MR=4 /
 //! NR=16 micro-tile edges, the KC=256 k-block edge, and the degenerate
-//! s = 1 / n = 1 cases. Tolerance is 1e-4 — the two impls share the
-//! ascending-k summation order, so observed diffs are near-zero; the
-//! tolerance guards against future re-blocking.
+//! s = 1 / n = 1 cases. Tolerance is 1e-4 — all impls share the
+//! ascending-k summation order (the vector tier reassociates only within
+//! an FMA), so observed diffs are near-zero; the tolerance guards against
+//! future re-blocking. `Impl::Simd` runs everywhere: on hosts without
+//! AVX2+FMA/NEON it resolves to the portable micro-kernel at runtime, so
+//! these tests then degenerate to (still valid) blocked-vs-scalar checks.
 
 use sqa::attention::tensor::Tensor;
 use sqa::attention::{sqa_layer_slices, Kernel, Spec};
@@ -43,9 +46,11 @@ fn blocked_matmul_matches_scalar_over_odd_shapes() {
                 let x = randn(s * m, seed, 0.5);
                 let w = randn(m * n, seed + 1000, 0.5);
                 let want = linalg::matmul(Impl::Scalar, &x, &w, s, m, n, None);
-                let got = linalg::matmul(Impl::Blocked, &x, &w, s, m, n, None);
-                let diff = max_diff(&want, &got);
-                assert!(diff < TOL, "matmul {s}x{m}x{n}: diff {diff}");
+                for imp in [Impl::Blocked, Impl::Simd] {
+                    let got = linalg::matmul(imp, &x, &w, s, m, n, None);
+                    let diff = max_diff(&want, &got);
+                    assert!(diff < TOL, "{imp:?} matmul {s}x{m}x{n}: diff {diff}");
+                }
             }
         }
     }
@@ -61,20 +66,24 @@ fn transpose_variants_match_scalar_over_odd_shapes() {
             let x = randn(s * m, seed, 0.5);
             let dy = randn(s * n, seed + 1, 0.5);
             let w = randn(m * n, seed + 2, 0.5);
-            // Nonzero initial accumulators: both variants must *add*.
+            // Nonzero initial accumulators: all variants must *add*.
             let g0 = randn(m * n, seed + 3, 0.5);
-            let (mut g_s, mut g_b) = (g0.clone(), g0);
+            let mut g_s = g0.clone();
             linalg::accum_xt_dy(Impl::Scalar, &mut g_s, &x, &dy, s, m, n);
-            linalg::accum_xt_dy(Impl::Blocked, &mut g_b, &x, &dy, s, m, n);
-            let diff = max_diff(&g_s, &g_b);
-            assert!(diff < TOL, "xt_dy s={s} {m}x{n}: diff {diff}");
-
             let dx0 = randn(s * m, seed + 4, 0.5);
-            let (mut dx_s, mut dx_b) = (dx0.clone(), dx0);
+            let mut dx_s = dx0.clone();
             linalg::accum_dy_wt(Impl::Scalar, &mut dx_s, &dy, &w, s, m, n);
-            linalg::accum_dy_wt(Impl::Blocked, &mut dx_b, &dy, &w, s, m, n);
-            let diff = max_diff(&dx_s, &dx_b);
-            assert!(diff < TOL, "dy_wt s={s} {m}x{n}: diff {diff}");
+            for imp in [Impl::Blocked, Impl::Simd] {
+                let mut g = g0.clone();
+                linalg::accum_xt_dy(imp, &mut g, &x, &dy, s, m, n);
+                let diff = max_diff(&g_s, &g);
+                assert!(diff < TOL, "{imp:?} xt_dy s={s} {m}x{n}: diff {diff}");
+
+                let mut dx = dx0.clone();
+                linalg::accum_dy_wt(imp, &mut dx, &dy, &w, s, m, n);
+                let diff = max_diff(&dx_s, &dx);
+                assert!(diff < TOL, "{imp:?} dy_wt s={s} {m}x{n}: diff {diff}");
+            }
         }
     }
 }
@@ -97,38 +106,40 @@ fn strided_attention_blocks_match_scalar() {
         let q_off = h * d;
         let kv_off = ((h + 1) % heads) * d;
         let mut sc_s = vec![f32::NAN; tq * tk];
-        let mut sc_b = sc_s.clone();
         linalg::score_block(
             Impl::Scalar, &q, stride, q_off, i0, tq, &k, stride, kv_off, j0, tk, d, 0.3,
             &mut sc_s, tk,
         );
-        linalg::score_block(
-            Impl::Blocked, &q, stride, q_off, i0, tq, &k, stride, kv_off, j0, tk, d, 0.3,
-            &mut sc_b, tk,
-        );
-        let diff = max_diff(&sc_s, &sc_b);
-        assert!(diff < TOL, "score_block i0={i0} j0={j0}: diff {diff}");
-        assert!(sc_b.iter().all(|x| x.is_finite()), "score overwrite left NaN");
-
         // probs: reuse |scores| so zeros stay zeros and weights are finite.
         let probs: Vec<f32> = sc_s.iter().map(|x| x.abs()).collect();
         let out0 = randn(tq * stride, 73, 0.2);
-        let (mut out_s, mut out_b) = (out0.clone(), out0);
+        let mut out_s = out0.clone();
         linalg::pv_block(
             Impl::Scalar, &probs, tk, tq, tk, &v, stride, kv_off, j0, d, &mut out_s, stride,
             q_off,
         );
-        linalg::pv_block(
-            Impl::Blocked, &probs, tk, tq, tk, &v, stride, kv_off, j0, d, &mut out_b, stride,
-            q_off,
-        );
-        let diff = max_diff(&out_s, &out_b);
-        assert!(diff < TOL, "pv_block i0={i0} j0={j0}: diff {diff}");
-        // Rows outside the written columns must be untouched by both.
-        for ti in 0..tq {
-            for c in 0..stride {
-                if !(q_off..q_off + d).contains(&c) {
-                    assert_eq!(out_b[ti * stride + c], out_s[ti * stride + c]);
+        for imp in [Impl::Blocked, Impl::Simd] {
+            let mut sc_b = vec![f32::NAN; tq * tk];
+            linalg::score_block(
+                imp, &q, stride, q_off, i0, tq, &k, stride, kv_off, j0, tk, d, 0.3, &mut sc_b,
+                tk,
+            );
+            let diff = max_diff(&sc_s, &sc_b);
+            assert!(diff < TOL, "{imp:?} score_block i0={i0} j0={j0}: diff {diff}");
+            assert!(sc_b.iter().all(|x| x.is_finite()), "score overwrite left NaN");
+
+            let mut out_b = out0.clone();
+            linalg::pv_block(
+                imp, &probs, tk, tq, tk, &v, stride, kv_off, j0, d, &mut out_b, stride, q_off,
+            );
+            let diff = max_diff(&out_s, &out_b);
+            assert!(diff < TOL, "{imp:?} pv_block i0={i0} j0={j0}: diff {diff}");
+            // Rows outside the written columns must be untouched by both.
+            for ti in 0..tq {
+                for c in 0..stride {
+                    if !(q_off..q_off + d).contains(&c) {
+                        assert_eq!(out_b[ti * stride + c], out_s[ti * stride + c]);
+                    }
                 }
             }
         }
@@ -164,42 +175,50 @@ fn sqa_layer_blocked_matches_scalar_across_geometries() {
                     .unwrap()
                 };
                 let scalar = run(Impl::Scalar);
-                let blocked = run(Impl::Blocked);
-                let diff = scalar.max_abs_diff(&blocked);
-                assert!(
-                    diff < TOL,
-                    "{geom} (Hq={hq} Hkv={hkv}) s={s} {kernel:?}: diff {diff}"
-                );
+                for imp in [Impl::Blocked, Impl::Simd] {
+                    let other = run(imp);
+                    let diff = scalar.max_abs_diff(&other);
+                    assert!(
+                        diff < TOL,
+                        "{geom} (Hq={hq} Hkv={hkv}) s={s} {kernel:?} {imp:?}: diff {diff}"
+                    );
+                }
             }
         }
     }
 }
 
 #[test]
-fn forward_impl_blocked_matches_scalar_on_tiny_variants() {
-    // End-to-end logits, blocked vs scalar GEMMs under the same (tiled)
-    // attention kernel, across the catalog's MHA/GQA/MQA/SQA variants.
+fn forward_impl_blocked_and_simd_match_scalar_on_tiny_variants() {
+    // End-to-end logits, blocked and simd vs scalar GEMMs under the same
+    // (tiled) attention kernel, across the catalog's MHA/GQA/MQA/SQA
+    // variants. "tiled+simd" additionally vectorizes the online softmax.
     let b = NativeBackend::new();
     let tokens: Vec<i32> = (0..24).map(|i| ((i * 131 + 17) % 2048) as i32).collect();
     for variant in ["mha", "gqa", "mqa", "sqa"] {
         let params = b.init_params("tiny", variant, 29).unwrap();
-        let blocked = b
-            .forward_impl("tiled", "tiny", variant, &params, &tokens, 1, 24)
-            .unwrap();
         let scalar = b
             .forward_impl("tiled+scalar", "tiny", variant, &params, &tokens, 1, 24)
             .unwrap();
-        let diff = max_diff(&blocked, &scalar);
-        assert!(diff < TOL, "tiny/{variant}: logits diverge by {diff}");
+        for impl_ in ["tiled", "tiled+simd"] {
+            let got = b
+                .forward_impl(impl_, "tiny", variant, &params, &tokens, 1, 24)
+                .unwrap();
+            let diff = max_diff(&got, &scalar);
+            assert!(diff < TOL, "tiny/{variant} {impl_}: logits diverge by {diff}");
+        }
     }
 }
 
 #[test]
 fn train_step_gradients_match_between_impls() {
-    // One fused forward+backward+AdamW step, scalar vs blocked GEMMs end
-    // to end (projections, attention blocks, LM head, xᵀ·dy / dy·wᵀ):
-    // losses and the *updated* parameters must agree to 1e-4.
+    // One fused forward+backward+AdamW step, scalar vs blocked vs simd
+    // GEMMs end to end (projections, attention blocks, LM head,
+    // xᵀ·dy / dy·wᵀ; the simd leg also runs the vectorized softmax
+    // forward *and* backward): losses and the *updated* parameters must
+    // agree to 1e-4.
     let blocked = NativeBackend::with_impls(Kernel::Tiled, Impl::Blocked);
+    let simd = NativeBackend::with_impls(Kernel::Tiled, Impl::Simd);
     let scalar = NativeBackend::with_impls(Kernel::Tiled, Impl::Scalar);
     for variant in ["sqa", "mqa"] {
         let params = blocked.init_params("tiny", variant, 41).unwrap();
@@ -216,14 +235,16 @@ fn train_step_gradients_match_between_impls() {
                 .unwrap();
             (loss, state)
         };
-        let (loss_b, state_b) = run(&blocked);
         let (loss_s, state_s) = run(&scalar);
-        assert!(
-            (loss_b - loss_s).abs() < 1e-4,
-            "tiny/{variant}: loss {loss_b} vs {loss_s}"
-        );
-        let diff = max_diff(&state_b, &state_s);
-        assert!(diff < TOL, "tiny/{variant}: train state diverges by {diff}");
+        for (name, backend) in [("blocked", &blocked), ("simd", &simd)] {
+            let (loss_b, state_b) = run(backend);
+            assert!(
+                (loss_b - loss_s).abs() < 1e-4,
+                "tiny/{variant} {name}: loss {loss_b} vs {loss_s}"
+            );
+            let diff = max_diff(&state_b, &state_s);
+            assert!(diff < TOL, "tiny/{variant} {name}: train state diverges by {diff}");
+        }
     }
 }
 

@@ -152,6 +152,61 @@ fn tiled_matches_oracle_under_sparse_patterns_across_grid() {
 }
 
 #[test]
+fn simd_lowering_matches_oracle_on_representative_slice() {
+    // Representative slice of the grid under Impl::Simd: the dense causal
+    // and windowed masks engage the vectorized online-softmax fast path;
+    // the strided pattern exercises the masked scalar fallback under the
+    // same lowering (the full pattern×geometry sweep runs on the blocked
+    // and scalar axes above). Hosts without AVX2+FMA/NEON degrade to the
+    // portable micro-kernel at runtime, so this stays a valid check there.
+    use sqa::attention::MaskPattern;
+    use sqa::linalg;
+    let pool = ThreadPool::new(4, 128);
+    let mut seed = 31000;
+    for &(geom, hq, hkv) in &[("sqa", 4usize, 2usize), ("mha", 8, 8)] {
+        for &s in SEQS {
+            for &(causal, window, pattern) in &[
+                (true, None, None),
+                (false, None, None),
+                (true, Some(TILE + 3), None),
+                (true, None, Some(MaskPattern::Strided { stride: 3 })),
+            ] {
+                seed += 1;
+                let mut rng = Pcg64::new(seed);
+                let d = 4;
+                let q = randn(&[2, hq, s, d], &mut rng);
+                let k = randn(&[2, hkv, s, d], &mut rng);
+                let v = randn(&[2, hkv, s, d], &mut rng);
+                let mut spec = Spec {
+                    causal,
+                    window,
+                    ..Spec::full(hq, hkv)
+                };
+                if let Some(p) = pattern {
+                    spec = spec.with_pattern(p);
+                }
+                let want = attention(&q, &k, &v, spec).unwrap();
+                let cfg = TileConfig::new(TILE, TILE)
+                    .unwrap()
+                    .with_linalg(linalg::Impl::Simd);
+                let serial = attention_tiled_cfg(&q, &k, &v, spec, cfg).unwrap();
+                let diff = want.max_abs_diff(&serial);
+                assert!(
+                    diff < TOL,
+                    "{geom} s={s} causal={causal} window={window:?} {pattern:?}: diff {diff}"
+                );
+                assert!(serial.data.iter().all(|x| x.is_finite()));
+                // Pool-size independence must stay *bitwise* under the
+                // vectorized softmax: its lane-then-tail reduction order
+                // depends only on the visible segment, never the pool.
+                let parallel = attention_tiled_parallel(&q, &k, &v, spec, cfg, &pool).unwrap();
+                assert_eq!(serial.data, parallel.data, "parallel simd diverges bitwise");
+            }
+        }
+    }
+}
+
+#[test]
 fn fully_masked_rows_stream_to_exact_zeros_across_kernels() {
     // A bitmap row with no visible key blocks must produce exactly-zero
     // output rows — not NaN from a 0/0 softmax — in the oracle, the serial

@@ -1,16 +1,19 @@
 //! The in-tree invariant linter (`cargo run -p xtask -- lint`).
 //!
-//! Four rules, each encoding an invariant the runtime's correctness
+//! Five rules, each encoding an invariant the runtime's correctness
 //! tooling depends on (see `rust/README.md` § Correctness tooling):
 //!
-//! | rule             | invariant                                             |
-//! |------------------|-------------------------------------------------------|
-//! | `safety-comment` | every `unsafe` block/impl carries a `// SAFETY:` note |
-//! | `lock-unwrap`    | no `.lock().unwrap()` in server/coordinator/runtime — |
-//! |                  | use the poison-tolerant `util::sync::lock` helper     |
-//! | `kernel-clock`   | no `Instant::now`/`SystemTime` inside attention/linalg|
-//! |                  | kernels — timing belongs to the bench/driver layer    |
-//! | `bench-writer`   | benches persist JSON only via `write_bench_json`      |
+//! | rule               | invariant                                             |
+//! |--------------------|-------------------------------------------------------|
+//! | `safety-comment`   | every `unsafe` block/impl carries a `// SAFETY:` note |
+//! | `lock-unwrap`      | no `.lock().unwrap()` in server/coordinator/runtime — |
+//! |                    | use the poison-tolerant `util::sync::lock` helper     |
+//! | `kernel-clock`     | no `Instant::now`/`SystemTime` inside attention/linalg|
+//! |                    | kernels — timing belongs to the bench/driver layer    |
+//! | `bench-writer`     | benches persist JSON only via `write_bench_json`      |
+//! | `simd-confinement` | `core::arch`/`#[target_feature]`/feature detection    |
+//! |                    | live only in `linalg/simd.rs` and `util/simd.rs` —    |
+//! |                    | everything else stays portable and Miri-runnable      |
 //!
 //! Rules match against the masked code view ([`crate::scan::mask`]), so
 //! prose in comments or strings never fires them. A finding on line *L*
@@ -226,6 +229,40 @@ pub fn rule_bench_writer(path: &str, src: &str) -> Vec<Finding> {
     out
 }
 
+// ---- rule: simd-confinement ----------------------------------------------
+
+/// Scope: everywhere EXCEPT the two blessed intrinsic modules. Keeping
+/// architecture-specific code behind these two seams is what lets the
+/// Miri/loom suites and the scalar differential oracles cover the rest
+/// of the tree unconditionally.
+pub fn simd_confinement_scope(rel: &str) -> bool {
+    rel != "rust/src/linalg/simd.rs" && rel != "rust/src/util/simd.rs"
+}
+
+pub fn rule_simd_confinement(path: &str, src: &str) -> Vec<Finding> {
+    let m = mask(src);
+    let orig_lines: Vec<&str> = src.lines().collect();
+    let mut out = Vec::new();
+    for needle in ["core::arch", "std::arch", "target_feature", "is_x86_feature_detected"] {
+        for ln in find_normalized(&m.code, needle) {
+            if allowed(&orig_lines, ln, "simd-confinement") {
+                continue;
+            }
+            out.push(Finding {
+                rule: "simd-confinement",
+                path: path.to_string(),
+                line: ln + 1,
+                msg: format!(
+                    "{needle} outside the intrinsic seams — arch-specific code \
+                     belongs in linalg/simd.rs or util/simd.rs behind a \
+                     runtime-detected dispatch"
+                ),
+            });
+        }
+    }
+    out
+}
+
 // ---- driver --------------------------------------------------------------
 
 fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> anyhow::Result<()> {
@@ -272,6 +309,9 @@ pub fn run(root: &Path) -> anyhow::Result<(usize, Vec<Finding>)> {
         }
         if bench_writer_scope(&rel) {
             findings.extend(rule_bench_writer(&rel, &src));
+        }
+        if simd_confinement_scope(&rel) {
+            findings.extend(rule_simd_confinement(&rel, &src));
         }
     }
     Ok((files.len(), findings))
@@ -400,7 +440,42 @@ mod tests {
         assert!(rule_bench_writer("rust/benches/decode_throughput.rs", src).is_empty());
     }
 
-    // ---- the tree itself is the fifth fixture --------------------------
+    // ---- simd-confinement ----------------------------------------------
+
+    #[test]
+    fn simd_confinement_fires_on_stray_intrinsics() {
+        let src = "use core::arch::x86_64::*;\n\
+                   #[target_feature(enable = \"avx2\")]\n\
+                   unsafe fn hot(xs: &[f32]) {}\n\
+                   fn pick() -> bool { std::arch::is_x86_feature_detected!(\"avx2\") }\n";
+        let f = rule_simd_confinement("rust/src/attention/tiled.rs", src);
+        // line 1: core::arch; line 2: target_feature; line 4 matches both
+        // the std::arch and is_x86_feature_detected needles.
+        assert_eq!(f.len(), 4);
+        assert!(f.iter().any(|x| x.line == 1));
+        assert!(f.iter().any(|x| x.line == 2));
+    }
+
+    #[test]
+    fn simd_confinement_ignores_prose_and_honors_waivers() {
+        let src = "// core::arch is only mentioned in this comment.\n\
+                   let s = \"#[target_feature]\";\n";
+        assert!(rule_simd_confinement("rust/src/flops/mod.rs", src).is_empty());
+        let waived = "// lint: allow(simd-confinement) — doc example, not compiled\n\
+                      use core::arch::x86_64::*;\n";
+        assert!(rule_simd_confinement("rust/src/flops/mod.rs", waived).is_empty());
+    }
+
+    #[test]
+    fn simd_confinement_scope_exempts_only_the_two_seams() {
+        assert!(!simd_confinement_scope("rust/src/linalg/simd.rs"));
+        assert!(!simd_confinement_scope("rust/src/util/simd.rs"));
+        assert!(simd_confinement_scope("rust/src/linalg/blocked.rs"));
+        assert!(simd_confinement_scope("rust/src/attention/tiled.rs"));
+        assert!(simd_confinement_scope("rust/benches/native_attention.rs"));
+    }
+
+    // ---- the tree itself is the sixth fixture --------------------------
 
     #[test]
     fn repo_is_lint_clean() {

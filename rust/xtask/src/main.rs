@@ -44,7 +44,10 @@ fn cmd_lint() -> Result<i32> {
         println!("{f}");
     }
     if findings.is_empty() {
-        println!("lint: {files} files clean (safety-comment, lock-unwrap, kernel-clock, bench-writer)");
+        println!(
+            "lint: {files} files clean (safety-comment, lock-unwrap, kernel-clock, \
+             bench-writer, simd-confinement)"
+        );
         Ok(0)
     } else {
         println!("lint: {} finding(s) across {files} files", findings.len());
