@@ -23,20 +23,32 @@
 //!   --steps N              decode steps per cell       (default 32)
 //!   --kv-dtypes f32,f16    KV-cache storage dtypes     (default shown;
 //!                          any of f32|f16|bf16)
+//!   --kv-paged             sweep the paged KV allocator as a second axis
+//!                          (every cell runs twice, `kv_paged` off/on; the
+//!                          paged rows must reproduce the contiguous
+//!                          identity bytes — bytes/step is a pure function
+//!                          of the context, not the storage layout) and
+//!                          append a `prefix_sharing` summary: 64 sessions
+//!                          sharing a 1k-token prefix plus one mid-block
+//!                          divergent session, with the pool's sessions/GB,
+//!                          prefix-hit-rate and allocator counters
+//!                          (alloc/free/COW-split/evict/restore)
 //!   --json FILE            output JSON                 (default
 //!                          BENCH_decode.json at the repo root, so the
 //!                          decode trajectory persists across PRs)
 //!   --smoke                exit(1) unless measured bytes/step order
 //!                          matches §5.2 at every swept dtype (xsqa <= gqa
-//!                          and ssqa > gqa), and every half-precision row
-//!                          streams exactly half its f32 twin's bytes
+//!                          and ssqa > gqa), every half-precision row
+//!                          streams exactly half its f32 twin's bytes, and
+//!                          (with --kv-paged) the prefix-sharing workload
+//!                          hits the trie and beats contiguous sessions/GB
 //!   --quick                fewer/smaller cells
 //!
 //! CI runs: `cargo bench --bench decode_throughput -- --ctxs 256,1024
-//! --steps 16 --smoke --json BENCH_decode.json`
+//! --steps 16 --kv-paged --smoke --json BENCH_decode.json`
 
 use sqa::flops::decode::{decode_step_dtype as roofline_step_dtype, Hardware};
-use sqa::runtime::{Backend, KvDtype, NativeBackend};
+use sqa::runtime::{Backend, KvDtype, NativeBackend, PagedConfig};
 use sqa::util::json::Json;
 use std::time::Instant;
 
@@ -47,6 +59,7 @@ struct Flags {
     ctxs: Vec<usize>,
     steps: usize,
     kv_dtypes: Vec<KvDtype>,
+    kv_paged: bool,
     json: Option<String>,
     smoke: bool,
     quick: bool,
@@ -57,6 +70,7 @@ fn parse_flags() -> Flags {
         ctxs: vec![256, 1024, 4096],
         steps: 32,
         kv_dtypes: vec![KvDtype::F32, KvDtype::F16],
+        kv_paged: false,
         json: Some("BENCH_decode.json".to_string()),
         smoke: false,
         quick: false,
@@ -89,6 +103,10 @@ fn parse_flags() -> Flags {
                 f.json = Some(v);
                 i += 2;
             }
+            ("--kv-paged", _) => {
+                f.kv_paged = true;
+                i += 1;
+            }
             ("--smoke", _) => {
                 f.smoke = true;
                 i += 1;
@@ -110,6 +128,7 @@ fn parse_flags() -> Flags {
 
 struct Row {
     kv_dtype: &'static str,
+    kv_paged: &'static str,
     variant: String,
     hq: usize,
     hkv: usize,
@@ -121,6 +140,156 @@ struct Row {
     roofline_tok_per_s: f64,
 }
 
+/// Result of the `--kv-paged` prefix-sharing workload: the JSON section
+/// plus the numbers the smoke guard asserts on.
+struct Sharing {
+    json: Json,
+    hit_rate: f64,
+    sessions_per_gb_paged: f64,
+    sessions_per_gb_contig: f64,
+}
+
+/// 64 sessions sharing a 1024-token prefix (8-token unique suffixes), plus
+/// one session diverging mid-block at position 1016 (exercising the COW
+/// split), plus one spill → restore round trip on an idle session. Every
+/// non-timing number below is a deterministic function of the geometry:
+///
+/// * session 0 allocates ceil(1032/16) = 65 blocks and publishes the 64
+///   full prefix chunks; sessions 1..63 adopt those 64 blocks and allocate
+///   1 suffix block each; the divergent session adopts 63 full chunks plus
+///   one partially-matched tail block, COW-splits it on first write and
+///   allocates its own tail → allocs 65 + 63 + 2 = 130, blocks in use 130;
+/// * spilling session 63's one exclusive block then restoring it on its
+///   next decode step adds 1 evict, 1 free, 1 restore and 1 realloc
+///   → allocs 131, frees 1, in-use back to 130;
+/// * lookups: 65 queries, 64 hits, 63·1024 + 1016 = 65528 shared tokens.
+///
+/// The contiguous comparison point is a real session on a contiguous
+/// backend at the same capacity ([`Backend::session_stats`] `alloc_bytes`
+/// = `2·layers·capacity·dkv·4`), so sessions/GB compares executed
+/// allocators, not a formula against a measurement.
+fn prefix_sharing_summary(vocab: i32) -> Sharing {
+    const SESSIONS: usize = 64;
+    const PREFIX: usize = 1024;
+    const SUFFIX: usize = 8;
+    const DIVERGE_AT: usize = 1016;
+    const BLOCK_LEN: usize = 16;
+    const CAPACITY: usize = 1040;
+    let spill_dir =
+        std::env::temp_dir().join(format!("sqa-decode-bench-spill-{}", std::process::id()));
+    let backend = NativeBackend::new().with_kv_dtype(KvDtype::F32).with_paged(Some(PagedConfig {
+        block_len: BLOCK_LEN,
+        pool_blocks: 4096,
+        spill_dir: Some(spill_dir.clone()),
+    }));
+    let params = backend.init_params(FAMILY, "gqa", 42).expect("init params");
+    let prefix: Vec<i32> = (0..PREFIX).map(|i| ((i * 131 + 17) as i32) % vocab).collect();
+
+    let t0 = Instant::now();
+    let mut sids = Vec::with_capacity(SESSIONS + 1);
+    for s in 0..SESSIONS {
+        let mut prompt = prefix.clone();
+        // First suffix tokens are pairwise distinct (977 is odd, hence
+        // invertible mod the power-of-two vocab), so no session's unique
+        // tail partially matches another's in the trie.
+        prompt.extend((0..SUFFIX).map(|j| ((s * 977 + j * 7 + 3) as i32) % vocab));
+        let (sid, logits) =
+            backend.prefill(FAMILY, "gqa", &params, &prompt, CAPACITY).expect("shared prefill");
+        assert!(logits.iter().all(|x| x.is_finite()));
+        sids.push(sid);
+    }
+    // Divergence inside chunk 63 (positions 1008..1024): the lookup
+    // partially matches the published chunk for 1016 - 1008 = 8 positions
+    // and the first suffix write COW-splits the adopted tail block.
+    let mut prompt = prefix[..DIVERGE_AT].to_vec();
+    prompt.extend((0..BLOCK_LEN).map(|j| ((j * 7 + 5) as i32) % vocab));
+    let (div_sid, logits) =
+        backend.prefill(FAMILY, "gqa", &params, &prompt, CAPACITY).expect("divergent prefill");
+    assert!(logits.iter().all(|x| x.is_finite()));
+    sids.push(div_sid);
+    let prefill_ms_total = t0.elapsed().as_secs_f64() * 1e3;
+
+    // Evict an idle session's exclusive block, then decode through the
+    // transparent restore.
+    let spilled = backend.spill_session(sids[SESSIONS - 1]).expect("spill idle session");
+    assert_eq!(spilled, 1, "exactly the one exclusive suffix block spills");
+    let l = backend.decode_step(sids[SESSIONS - 1], &params, 7).expect("decode after spill");
+    assert!(l[0].is_finite());
+
+    let st = backend.kv_pool_stats().expect("paged backend pool stats");
+    assert_eq!(st.blocks_in_use(), 130, "64 shared-prefix + 64 suffix + 2 divergent blocks");
+    assert_eq!(
+        (st.allocs, st.frees, st.cow_splits, st.evictions, st.restores),
+        (131, 1, 1, 1, 1)
+    );
+    assert_eq!((st.prefix_queries, st.prefix_hits), (65, 64));
+    assert_eq!(st.prefix_hit_tokens, (63 * PREFIX + DIVERGE_AT) as u64);
+    assert_eq!(st.blocks_spilled, 0, "the restore consumed the spill file");
+
+    // Contiguous twin: one real session at the same capacity (alloc_bytes
+    // is capacity-, not occupancy-, driven, so a 1-token prompt suffices).
+    let contig = NativeBackend::new().with_kv_dtype(KvDtype::F32).with_paged(None);
+    let (csid, _) = contig.prefill(FAMILY, "gqa", &params, &prefix[..1], CAPACITY).expect("contig");
+    let contig_per_session = contig.session_stats(csid).expect("contig stats").alloc_bytes;
+    contig.close_session(csid);
+
+    let sessions = sids.len();
+    let contig_bytes = contig_per_session * sessions as u64;
+    const GIB: f64 = 1024.0 * 1024.0 * 1024.0;
+    let sessions_per_gb_paged = sessions as f64 * GIB / st.resident_bytes() as f64;
+    let sessions_per_gb_contig = sessions as f64 * GIB / contig_bytes as f64;
+    let hit_rate = st.prefix_hit_rate();
+
+    for sid in sids {
+        backend.close_session(sid);
+    }
+    std::fs::remove_dir_all(&spill_dir).ok();
+
+    println!("## Prefix sharing, family `{FAMILY}`/gqa (paged, block_len {BLOCK_LEN})\n");
+    println!(
+        "{sessions} sessions x {PREFIX}-token shared prefix: {} blocks in use \
+         ({} B resident vs {} B contiguous, {:.1}x), {:.1} sessions/GB vs {:.1} contiguous",
+        st.blocks_in_use(),
+        st.resident_bytes(),
+        contig_bytes,
+        contig_bytes as f64 / st.resident_bytes() as f64,
+        sessions_per_gb_paged,
+        sessions_per_gb_contig,
+    );
+    println!(
+        "prefix hit rate {:.4} ({} shared tokens); allocs {} frees {} cow_splits {} \
+         evictions {} restores {}\n",
+        hit_rate, st.prefix_hit_tokens, st.allocs, st.frees, st.cow_splits, st.evictions,
+        st.restores,
+    );
+
+    let json = Json::obj(vec![
+        ("variant", Json::str("gqa")),
+        ("kv_dtype", Json::str("f32")),
+        ("block_len", Json::num(BLOCK_LEN as f64)),
+        ("sessions", Json::num(sessions as f64)),
+        ("shared_prefix_tokens", Json::num(PREFIX as f64)),
+        ("prefill_ms_total", Json::num(prefill_ms_total)),
+        ("blocks_in_use", Json::num(st.blocks_in_use() as f64)),
+        ("block_bytes", Json::num(st.block_bytes as f64)),
+        ("resident_bytes", Json::num(st.resident_bytes() as f64)),
+        ("contig_resident_bytes", Json::num(contig_bytes as f64)),
+        ("bytes_ratio", Json::num(contig_bytes as f64 / st.resident_bytes() as f64)),
+        ("sessions_per_gb_paged", Json::num(sessions_per_gb_paged)),
+        ("sessions_per_gb_contig", Json::num(sessions_per_gb_contig)),
+        ("prefix_hit_rate", Json::num(hit_rate)),
+        ("prefix_queries", Json::num(st.prefix_queries as f64)),
+        ("prefix_hits", Json::num(st.prefix_hits as f64)),
+        ("prefix_hit_tokens", Json::num(st.prefix_hit_tokens as f64)),
+        ("allocs", Json::num(st.allocs as f64)),
+        ("frees", Json::num(st.frees as f64)),
+        ("cow_splits", Json::num(st.cow_splits as f64)),
+        ("evictions", Json::num(st.evictions as f64)),
+        ("restores", Json::num(st.restores as f64)),
+    ]);
+    Sharing { json, hit_rate, sessions_per_gb_paged, sessions_per_gb_contig }
+}
+
 fn main() {
     let flags = parse_flags();
     let fam = NativeBackend::new().family(FAMILY).expect("bench family").clone();
@@ -128,78 +297,102 @@ fn main() {
     let vocab = dims.vocab as i32;
     let hw = Hardware::default();
 
+    let paged_axis: &[bool] = if flags.kv_paged { &[false, true] } else { &[false] };
     let mut rows: Vec<Row> = Vec::new();
     println!("## Decode throughput, family `{FAMILY}` ({} steps per cell)\n", flags.steps);
     println!(
-        "{:4} {:6} {:>3} {:>4} {:>6} {:>11} {:>10} {:>14} {:>14} {:>12}",
-        "kv", "var", "Hq", "Hkv", "ctx", "prefill ms", "tok/s", "KV B/step", "roofline B",
-        "roofline t/s"
+        "{:4} {:5} {:6} {:>3} {:>4} {:>6} {:>11} {:>10} {:>14} {:>14} {:>12}",
+        "kv", "paged", "var", "Hq", "Hkv", "ctx", "prefill ms", "tok/s", "KV B/step",
+        "roofline B", "roofline t/s"
     );
     for &dtype in &flags.kv_dtypes {
-        let backend = NativeBackend::new().with_kv_dtype(dtype);
-        for &ctx in &flags.ctxs {
-            for &variant in VARIANTS {
-                let cfg = backend.variant(FAMILY, variant).expect("variant").cfg;
-                let params = backend
-                    .init_params(FAMILY, variant, 42)
-                    .expect("init params");
-                let prompt: Vec<i32> =
-                    (0..ctx).map(|i| ((i * 131 + 17) as i32) % vocab).collect();
-                let capacity = ctx + flags.steps;
+        for &paged in paged_axis {
+            // `with_paged(None)` pins the off leg even when the ambient
+            // SQA_KV_BLOCK_LEN env would have enabled paging.
+            let backend = NativeBackend::new().with_kv_dtype(dtype).with_paged(
+                paged.then(|| PagedConfig {
+                    block_len: 16,
+                    pool_blocks: 4096,
+                    spill_dir: None,
+                }),
+            );
+            for &ctx in &flags.ctxs {
+                for &variant in VARIANTS {
+                    let cfg = backend.variant(FAMILY, variant).expect("variant").cfg;
+                    let params = backend
+                        .init_params(FAMILY, variant, 42)
+                        .expect("init params");
+                    let prompt: Vec<i32> =
+                        (0..ctx).map(|i| ((i * 131 + 17) as i32) % vocab).collect();
+                    let capacity = ctx + flags.steps;
 
-                let t0 = Instant::now();
-                let (sid, logits) = backend
-                    .prefill(FAMILY, variant, &params, &prompt, capacity)
-                    .expect("prefill");
-                let prefill_ms = t0.elapsed().as_secs_f64() * 1e3;
-                assert!(logits.iter().all(|x| x.is_finite()));
+                    let t0 = Instant::now();
+                    let (sid, logits) = backend
+                        .prefill(FAMILY, variant, &params, &prompt, capacity)
+                        .expect("prefill");
+                    let prefill_ms = t0.elapsed().as_secs_f64() * 1e3;
+                    assert!(logits.iter().all(|x| x.is_finite()));
 
-                let t1 = Instant::now();
-                for i in 0..flags.steps {
-                    let tok = ((ctx + i) as i32 * 7 + 3) % vocab;
-                    let l = backend.decode_step(sid, &params, tok).expect("decode step");
-                    assert!(l[0].is_finite());
+                    let t1 = Instant::now();
+                    for i in 0..flags.steps {
+                        let tok = ((ctx + i) as i32 * 7 + 3) % vocab;
+                        let l =
+                            backend.decode_step(sid, &params, tok).expect("decode step");
+                        assert!(l[0].is_finite());
+                    }
+                    let decode_secs = t1.elapsed().as_secs_f64();
+                    let tok_per_s = flags.steps as f64 / decode_secs;
+
+                    let stats = backend.session_stats(sid).expect("session stats");
+                    assert_eq!(stats.len, capacity);
+                    backend.close_session(sid);
+
+                    // Roofline cross-check at the same final context length
+                    // and element width. Paging relocates rows into pool
+                    // blocks but a step still streams the same
+                    // `2·layers·len·Hkv·dh` elements, so the paged rows must
+                    // reproduce the contiguous identity bytes exactly.
+                    let pred = roofline_step_dtype(
+                        &dims,
+                        &cfg,
+                        capacity as u64,
+                        hw,
+                        dtype.bytes() as u64,
+                    );
+                    println!(
+                        "{:4} {:5} {:6} {:>3} {:>4} {:>6} {:>11.1} {:>10.1} {:>14} {:>14} {:>12.1}",
+                        dtype.name(),
+                        if paged { "on" } else { "off" },
+                        variant,
+                        cfg.hq,
+                        cfg.hkv,
+                        ctx,
+                        prefill_ms,
+                        tok_per_s,
+                        stats.kv_bytes,
+                        pred.kv_bytes,
+                        1.0 / pred.time()
+                    );
+                    rows.push(Row {
+                        kv_dtype: dtype.name(),
+                        kv_paged: if paged { "on" } else { "off" },
+                        variant: variant.to_string(),
+                        hq: cfg.hq,
+                        hkv: cfg.hkv,
+                        ctx,
+                        prefill_ms,
+                        tok_per_s,
+                        measured_bytes_per_step: stats.kv_bytes,
+                        predicted_bytes_per_step: pred.kv_bytes,
+                        roofline_tok_per_s: 1.0 / pred.time(),
+                    });
                 }
-                let decode_secs = t1.elapsed().as_secs_f64();
-                let tok_per_s = flags.steps as f64 / decode_secs;
-
-                let stats = backend.session_stats(sid).expect("session stats");
-                assert_eq!(stats.len, capacity);
-                backend.close_session(sid);
-
-                // Roofline cross-check at the same final context length and
-                // element width.
-                let pred =
-                    roofline_step_dtype(&dims, &cfg, capacity as u64, hw, dtype.bytes() as u64);
-                println!(
-                    "{:4} {:6} {:>3} {:>4} {:>6} {:>11.1} {:>10.1} {:>14} {:>14} {:>12.1}",
-                    dtype.name(),
-                    variant,
-                    cfg.hq,
-                    cfg.hkv,
-                    ctx,
-                    prefill_ms,
-                    tok_per_s,
-                    stats.kv_bytes,
-                    pred.kv_bytes,
-                    1.0 / pred.time()
-                );
-                rows.push(Row {
-                    kv_dtype: dtype.name(),
-                    variant: variant.to_string(),
-                    hq: cfg.hq,
-                    hkv: cfg.hkv,
-                    ctx,
-                    prefill_ms,
-                    tok_per_s,
-                    measured_bytes_per_step: stats.kv_bytes,
-                    predicted_bytes_per_step: pred.kv_bytes,
-                    roofline_tok_per_s: 1.0 / pred.time(),
-                });
+                println!();
             }
-            println!();
         }
     }
+
+    let sharing = flags.kv_paged.then(|| prefix_sharing_summary(vocab));
 
     // Cross-check: the session's live bytes must equal the analytic
     // model's cache term for every non-windowed variant — the bench dies
@@ -214,7 +407,7 @@ fn main() {
     println!("roofline cross-check OK: measured KV bytes/step == flops::decode prediction");
 
     if let Some(path) = &flags.json {
-        let doc = Json::obj(vec![
+        let mut top = vec![
             ("bench", Json::str("decode_throughput")),
             ("family", Json::str(FAMILY)),
             ("steps", Json::num(flags.steps as f64)),
@@ -223,6 +416,7 @@ fn main() {
                 Json::arr(rows.iter().map(|r| {
                     Json::obj(vec![
                         ("kv_dtype", Json::str(r.kv_dtype)),
+                        ("kv_paged", Json::str(r.kv_paged)),
                         ("variant", Json::str(&r.variant)),
                         ("hq", Json::num(r.hq as f64)),
                         ("hkv", Json::num(r.hkv as f64)),
@@ -241,7 +435,11 @@ fn main() {
                     ])
                 })),
             ),
-        ]);
+        ];
+        if let Some(s) = &sharing {
+            top.push(("prefix_sharing", s.json.clone()));
+        }
+        let doc = Json::obj(top);
         sqa::util::bench::write_bench_json(path, &doc).expect("writing bench JSON");
         println!("decode JSON -> {path}");
     }
@@ -252,9 +450,13 @@ fn main() {
         // strictly more — at every swept dtype, since element width scales
         // all variants alike. Deterministic — the bytes come from buffer
         // sizes, not timers — so no noise grace is needed.
+        // The ordering guard reads the contiguous leg; the paged leg is
+        // already pinned to identical bytes by the roofline cross-check.
         let bytes = |dt: &str, variant: &str, ctx: usize| -> u64 {
             rows.iter()
-                .find(|r| r.kv_dtype == dt && r.variant == variant && r.ctx == ctx)
+                .find(|r| {
+                    r.kv_dtype == dt && r.kv_paged == "off" && r.variant == variant && r.ctx == ctx
+                })
                 .unwrap_or_else(|| panic!("smoke needs {dt}/{variant}@{ctx}"))
                 .measured_bytes_per_step
         };
@@ -300,12 +502,33 @@ fn main() {
                 }
             }
         }
+        // Paged-allocator guards: the prefix-sharing workload must actually
+        // hit the trie, and sharing must beat per-session contiguous slabs
+        // on sessions/GB — the tentpole's headline capacity claim.
+        if let Some(s) = &sharing {
+            if s.hit_rate <= 0.0 {
+                eprintln!("SMOKE FAIL prefix_sharing: hit rate {} is not > 0", s.hit_rate);
+                failed = true;
+            }
+            if s.sessions_per_gb_paged <= s.sessions_per_gb_contig {
+                eprintln!(
+                    "SMOKE FAIL prefix_sharing: paged {:.1} sessions/GB <= contiguous {:.1}",
+                    s.sessions_per_gb_paged, s.sessions_per_gb_contig
+                );
+                failed = true;
+            }
+        }
         if failed {
             std::process::exit(1);
         }
         println!(
             "decode smoke OK: xsqa <= gqa < ssqa bytes/step at every (dtype, ctx), \
-             half-precision rows stream half the f32 bytes"
+             half-precision rows stream half the f32 bytes{}",
+            if sharing.is_some() {
+                ", prefix sharing hits the trie and beats contiguous sessions/GB"
+            } else {
+                ""
+            }
         );
     }
 }

@@ -269,6 +269,14 @@ pub(crate) fn stream_qtile_at_lse(
     // exponentiated twin feeding the probs @ V micro-GEMM.
     let mut scores = vec![0.0f32; tq * k_tile];
     let mut probs = vec![0.0f32; tq * k_tile];
+    // Scratch row for the masked SIMD path: the visible segment with
+    // pattern-invisible slots overwritten by -inf (which exp flushes to
+    // exactly 0). Only the `Impl::Simd` + sparse-pattern combination uses it.
+    let mut masked = if !dense && cfg.linalg == linalg::Impl::Simd {
+        vec![0.0f32; k_tile]
+    } else {
+        Vec::new()
+    };
 
     for jt in t_lo / k_tile..t_hi.div_ceil(k_tile) {
         let j0 = jt * k_tile;
@@ -297,8 +305,8 @@ pub(crate) fn stream_qtile_at_lse(
                 prow.fill(0.0); // row sees nothing in this key tile
                 continue;
             }
-            // Vectorized fast path (`Impl::Simd`, dense masks only): with
-            // every visible score finite there is no per-key masking and no
+            // Vectorized fast path (`Impl::Simd`, dense masks): with every
+            // visible score finite there is no per-key masking and no
             // poisoning, so the row max, exp + normalizer sum, and output
             // rescale run through the util::simd helpers (fixed
             // lane-then-tail reduction order — deterministic for a given
@@ -319,6 +327,45 @@ pub(crate) fn stream_qtile_at_lse(
                     prow[..jlo - j0].fill(0.0);
                     prow[jhi - j0..].fill(0.0);
                     l[ti] += simd::exp_sub_into(vis, m_new, &mut prow[jlo - j0..jhi - j0]);
+                    any = true;
+                    continue;
+                }
+            }
+            // Vectorized masked path (`Impl::Simd`, sparse patterns): copy
+            // the visible segment into the scratch row with pattern-invisible
+            // slots forced to -inf — exp flushes them to exactly 0 on both
+            // the AVX2 and scalar-mirror paths (shared `EXP_LO` cutoff), so
+            // masked keys carry weight 0 just like the scalar loop below.
+            // `row_max_masked` treats -inf as legitimate and bails (`None`)
+            // only on NaN/+inf poison, which the scalar path owns; a +inf
+            // hidden behind the pattern never reaches it (masked before the
+            // max, exactly like the oracle).
+            if !dense && cfg.linalg == linalg::Impl::Simd {
+                let mrow = &mut masked[..jhi - jlo];
+                for (jj, slot) in mrow.iter_mut().enumerate() {
+                    let j = jlo + jj;
+                    *slot = if rm.pattern_visible(i, j) {
+                        srow[j - j0]
+                    } else {
+                        f32::NEG_INFINITY
+                    };
+                }
+                if let Some(block_max) = simd::row_max_masked(mrow) {
+                    if block_max == f32::NEG_INFINITY {
+                        // Every visible key is pattern-masked (or -inf).
+                        prow.fill(0.0);
+                        continue;
+                    }
+                    let m_new = m[ti].max(block_max);
+                    let alpha = simd::exp_approx(m[ti] - m_new);
+                    if alpha != 1.0 {
+                        l[ti] *= alpha;
+                        simd::scale(&mut out[ti * out_stride + out_off..][..d], alpha);
+                    }
+                    m[ti] = m_new;
+                    prow[..jlo - j0].fill(0.0);
+                    prow[jhi - j0..].fill(0.0);
+                    l[ti] += simd::exp_sub_into(mrow, m_new, &mut prow[jlo - j0..jhi - j0]);
                     any = true;
                     continue;
                 }
@@ -1044,6 +1091,84 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn sparse_patterns_match_oracle_under_every_linalg_impl() {
+        // The masked SIMD path (scratch row with -inf in invisible slots)
+        // must agree with the oracle exactly like the scalar masking loop.
+        use super::super::MaskPattern;
+        let (b, hq, hkv, s, d) = (1, 2, 1, 37, 8);
+        let q = randn(&[b, hq, s, d], 81);
+        let k = randn(&[b, hkv, s, d], 82);
+        let v = randn(&[b, hkv, s, d], 83);
+        for pat in [
+            MaskPattern::Window { window: 5 },
+            MaskPattern::Strided { stride: 3 },
+            MaskPattern::SinkLocal { sinks: 2, window: 4 },
+        ] {
+            let spec = Spec::causal(hq, hkv).with_pattern(pat);
+            let want = attention(&q, &k, &v, spec).unwrap();
+            for imp in [linalg::Impl::Scalar, linalg::Impl::Blocked, linalg::Impl::Simd] {
+                let cfg = TileConfig::new(8, 8).unwrap().with_linalg(imp);
+                let got = attention_tiled_cfg(&q, &k, &v, spec, cfg).unwrap();
+                assert!(
+                    want.max_abs_diff(&got) < 1e-4,
+                    "{pat:?} under {imp:?}: diff {}",
+                    want.max_abs_diff(&got)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn masked_simd_rows_are_bitwise_deterministic() {
+        use super::super::MaskPattern;
+        let (b, hq, hkv, s, d) = (1, 2, 1, 45, 8);
+        let q = randn(&[b, hq, s, d], 91);
+        let k = randn(&[b, hkv, s, d], 92);
+        let v = randn(&[b, hkv, s, d], 93);
+        let spec = Spec::causal(hq, hkv).with_pattern(MaskPattern::Dilated {
+            window: 2,
+            stride: 3,
+        });
+        let cfg = TileConfig::new(16, 8).unwrap().with_linalg(linalg::Impl::Simd);
+        let a = attention_tiled_cfg(&q, &k, &v, spec, cfg).unwrap();
+        let b2 = attention_tiled_cfg(&q, &k, &v, spec, cfg).unwrap();
+        assert_eq!(a.data, b2.data);
+    }
+
+    #[test]
+    fn masked_simd_handles_poison_scores_like_scalar() {
+        // A +inf score in a *visible* pattern slot must send the row to the
+        // scalar poison path (exact zeros); rows that only see the poison
+        // key through pattern-invisible slots must stay healthy. Compare
+        // the Simd lowering against Scalar: poisoned rows agree exactly,
+        // healthy rows within the usual exp-approximation tolerance.
+        use super::super::MaskPattern;
+        let (hq, hkv, s, d) = (1, 1, 12, 4);
+        let mut k = randn(&[1, hkv, s, d], 94);
+        for dd in 0..d {
+            k.set4(0, 0, 3, dd, f32::MAX); // q·k_3 = Σ MAX -> +inf
+        }
+        let q = Tensor::from_vec(&[1, hq, s, d], vec![1.0; s * d]).unwrap();
+        let v = randn(&[1, hkv, s, d], 95);
+        let spec = Spec::causal(hq, hkv).with_pattern(MaskPattern::Strided { stride: 3 });
+        let scalar_cfg = TileConfig::new(4, 4).unwrap().with_linalg(linalg::Impl::Scalar);
+        let simd_cfg = TileConfig::new(4, 4).unwrap().with_linalg(linalg::Impl::Simd);
+        let want = attention_tiled_cfg(&q, &k, &v, spec, scalar_cfg).unwrap();
+        let got = attention_tiled_cfg(&q, &k, &v, spec, simd_cfg).unwrap();
+        assert!(got.data.iter().all(|x| !x.is_nan()));
+        assert!(want.max_abs_diff(&got) < 1e-5);
+        // Strided:3 rows i >= 3 with i ≡ 0 (mod 3) see key 3: poisoned.
+        for i in [3usize, 6, 9] {
+            for dd in 0..d {
+                assert_eq!(got.get4(0, 0, i, dd), 0.0, "row {i}");
+                assert_eq!(want.get4(0, 0, i, dd), 0.0, "row {i}");
+            }
+        }
+        // Row 4 never sees key 3 ((4-3) % 3 != 0): it must stay non-zero.
+        assert!((0..d).any(|dd| got.get4(0, 0, 4, dd) != 0.0));
     }
 
     #[test]

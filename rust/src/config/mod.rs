@@ -303,6 +303,17 @@ pub struct ServeConfig {
     /// kernels still compute in f32. `None` = the backend's default (the
     /// `SQA_KV_DTYPE` env, f32 otherwise).
     pub kv_dtype: Option<String>,
+    /// Paged KV cache: positions per block (0 = contiguous per-session
+    /// slabs, the default). Enabling paging turns sessions into block
+    /// tables over a shared pool — identical prompt prefixes share
+    /// refcounted blocks (copy-on-write), idle sessions spill to disk
+    /// under pool pressure (see [`crate::runtime::PagedConfig`]).
+    pub kv_block_len: usize,
+    /// Total blocks in the shared pool (paged mode only).
+    pub kv_pool_blocks: usize,
+    /// Directory for LRU-evicted sessions' spill files (paged mode only;
+    /// `None` disables spilling — pool pressure then rejects instead).
+    pub spill_dir: Option<String>,
     /// Max concurrent generation sessions (admission cap; further
     /// generate requests queue for a slot).
     pub max_sessions: usize,
@@ -330,6 +341,9 @@ impl Default for ServeConfig {
             kernel: None,
             pattern: None,
             kv_dtype: None,
+            kv_block_len: 0,
+            kv_pool_blocks: 4096,
+            spill_dir: None,
             max_sessions: 4,
             session_timeout_ms: 30_000,
             gen_capacity: 0,
@@ -371,6 +385,15 @@ impl ServeConfig {
         if let Some(s) = v.get("kv_dtype").and_then(|x| x.as_str()) {
             crate::runtime::session::KvDtype::parse(s).context("kv_dtype")?;
             c.kv_dtype = Some(s.to_string());
+        }
+        if let Some(n) = v.get("kv_block_len").and_then(|x| x.as_usize()) {
+            c.kv_block_len = n;
+        }
+        if let Some(n) = v.get("kv_pool_blocks").and_then(|x| x.as_usize()) {
+            c.kv_pool_blocks = n;
+        }
+        if let Some(s) = v.get("spill_dir").and_then(|x| x.as_str()) {
+            c.spill_dir = Some(s.to_string());
         }
         if let Some(n) = v.get("max_sessions").and_then(|x| x.as_usize()) {
             c.max_sessions = n;
@@ -451,8 +474,19 @@ mod tests {
         assert_eq!(c.family, "tiny");
         assert_eq!(c.kernel, None);
         assert_eq!(c.kv_dtype, None);
+        assert_eq!(c.kv_block_len, 0, "paging defaults off");
+        assert_eq!(c.kv_pool_blocks, 4096);
+        assert_eq!(c.spill_dir, None);
         assert_eq!(c.max_sessions, 4);
         assert_eq!(c.gen_capacity, 0);
+        let j = Json::parse(
+            r#"{"kv_block_len":16,"kv_pool_blocks":512,"spill_dir":"/tmp/kv"}"#,
+        )
+        .unwrap();
+        let c = ServeConfig::from_json(&j).unwrap();
+        assert_eq!(c.kv_block_len, 16);
+        assert_eq!(c.kv_pool_blocks, 512);
+        assert_eq!(c.spill_dir.as_deref(), Some("/tmp/kv"));
         let j = Json::parse(r#"{"kv_dtype":"f16"}"#).unwrap();
         assert_eq!(ServeConfig::from_json(&j).unwrap().kv_dtype.as_deref(), Some("f16"));
         let j = Json::parse(r#"{"kv_dtype":"f64"}"#).unwrap();

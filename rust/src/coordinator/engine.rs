@@ -43,7 +43,7 @@ use crate::coordinator::request::{
 use crate::coordinator::router::Router;
 use crate::data::pad_to;
 use crate::data::tokenizer::EOS;
-use crate::runtime::Backend;
+use crate::runtime::{Backend, KvPoolStats};
 use crate::util::rng::Pcg64;
 use crate::util::sync::{self, AtomicBool, AtomicU64, Condvar, Mutex, Ordering};
 use anyhow::{Context, Result};
@@ -145,6 +145,9 @@ pub struct Engine {
     pub gen_capacity: usize,
     router: Router,
     pub metrics: Arc<Metrics>,
+    /// Backend handle, kept for allocator introspection (`/metrics` merges
+    /// the paged block-pool counters; `None` from contiguous backends).
+    backend: Arc<dyn Backend>,
     next_id: AtomicU64,
     shutdown: Arc<AtomicBool>,
     threads: Vec<std::thread::JoinHandle<()>>,
@@ -319,6 +322,7 @@ impl Engine {
             gen_capacity,
             router,
             metrics,
+            backend: Arc::clone(backend),
             next_id: AtomicU64::new(1),
             shutdown,
             threads,
@@ -329,6 +333,12 @@ impl Engine {
 
     pub fn buckets(&self) -> &[usize] {
         self.router.buckets()
+    }
+
+    /// Paged block-pool snapshot from the backend (`None` when the backend
+    /// serves contiguous per-session caches). Surfaced by `/metrics`.
+    pub fn kv_pool_stats(&self) -> Option<KvPoolStats> {
+        self.backend.kv_pool_stats()
     }
 
     /// Blocking encode. Returns backpressure/too-long rejections directly.
@@ -638,9 +648,12 @@ impl GenScheduler {
                     match result {
                         Err(e) => {
                             // The scheduler gates on capacity, but map the
-                            // backend's own guard anyway — partial output
-                            // beats an opaque failure.
-                            if e.contains("capacity") {
+                            // backend's own guards anyway — partial output
+                            // beats an opaque failure. "block pool" is the
+                            // paged allocator's exhaustion error, reached
+                            // only after the backend already tried evicting
+                            // idle sessions to disk.
+                            if e.contains("capacity") || e.contains("block pool") {
                                 self.finish(gen, FinishReason::CacheFull);
                             } else {
                                 self.fail(gen, e);
@@ -664,10 +677,35 @@ impl GenScheduler {
     /// One scheduling pass: admit, evict, coalesce + dispatch decode steps.
     fn tick(&mut self) {
         // Admit waiting requests into free session slots (prefill jobs).
+        // Under a paged backend, admission is block-granular: a prompt that
+        // can never fit the pool is `TooLong`, while a prompt the pool could
+        // hold but can't *right now* (free + reclaimable headroom, minus
+        // blocks already promised to sessions admitted this tick) is shed
+        // with `Overloaded` — transient pressure, the client should retry.
+        // `CacheFull` stays reserved for sessions that hit their per-session
+        // length limit mid-generation.
+        let pool = self.backend.kv_pool_stats();
+        let mut headroom = pool.map(|ps| ps.blocks_free + ps.blocks_reclaimable);
         while self.active.len() < self.max_sessions {
             let Some((req, reply)) = self.waiting.pop_front() else {
                 break;
             };
+            if let Some(ps) = pool {
+                let free = headroom.get_or_insert(0);
+                match paged_admission(req.tokens.len(), &ps, free) {
+                    Some(r @ Reject::TooLong { .. }) => {
+                        self.metrics.too_long.fetch_add(1, Ordering::Relaxed);
+                        let _ = reply.send(Err(r));
+                        continue;
+                    }
+                    Some(r) => {
+                        self.metrics.shed.fetch_add(1, Ordering::Relaxed);
+                        let _ = reply.send(Err(r));
+                        continue;
+                    }
+                    None => {}
+                }
+            }
             self.admit(req, reply);
         }
         // Evict sessions over the wall-clock budget (only once their
@@ -809,6 +847,30 @@ impl GenScheduler {
         self.metrics.active_sessions.fetch_sub(1, Ordering::Relaxed);
         let _ = s.reply.send(Err(Reject::Failed(msg)));
     }
+}
+
+/// Block-granular admission check for one waiting request under a paged KV
+/// pool: `Some(TooLong)` when the prompt (plus its first decode row) can
+/// never fit the pool, `Some(Overloaded)` when it fits but the current
+/// free + reclaimable headroom can't hold it right now, `None` to admit —
+/// in which case `headroom` is debited so several admissions in one tick
+/// don't all count the same free blocks.
+fn paged_admission(
+    prompt_len: usize,
+    ps: &KvPoolStats,
+    headroom: &mut usize,
+) -> Option<Reject> {
+    let need = (prompt_len + 1).div_ceil(ps.block_len.max(1));
+    if need > ps.blocks_total {
+        return Some(Reject::TooLong {
+            max: ps.blocks_total * ps.block_len,
+        });
+    }
+    if need > *headroom {
+        return Some(Reject::Overloaded);
+    }
+    *headroom -= need;
+    None
 }
 
 /// Append a sampled token; returns the finish reason if generation is done.
@@ -1049,5 +1111,51 @@ mod tests {
     fn sampling_single_logit() {
         let mut rng = Pcg64::new(2);
         assert_eq!(sample_top_k(&[7.0], 5, 1.0, &mut rng), 0);
+    }
+
+    fn pool(blocks_total: usize, blocks_free: usize, blocks_reclaimable: usize) -> KvPoolStats {
+        KvPoolStats {
+            block_len: 4,
+            block_bytes: 128,
+            blocks_total,
+            blocks_free,
+            blocks_reclaimable,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn paged_admission_is_block_granular() {
+        // 7 prompt tokens + 1 decode row = 2 blocks of 4.
+        let ps = pool(8, 3, 0);
+        let mut free = ps.blocks_free + ps.blocks_reclaimable;
+        assert!(paged_admission(7, &ps, &mut free).is_none());
+        assert_eq!(free, 1, "admission debits whole blocks");
+        // The next request this tick sees the debited headroom: 2 > 1.
+        assert!(matches!(
+            paged_admission(7, &ps, &mut free),
+            Some(Reject::Overloaded)
+        ));
+        assert_eq!(free, 1, "a shed request debits nothing");
+    }
+
+    #[test]
+    fn paged_admission_counts_reclaimable_trie_blocks_as_headroom() {
+        let ps = pool(8, 0, 2);
+        let mut free = ps.blocks_free + ps.blocks_reclaimable;
+        assert!(paged_admission(7, &ps, &mut free).is_none());
+    }
+
+    #[test]
+    fn paged_admission_rejects_impossible_prompts_as_too_long() {
+        // 32 rows > 8 blocks × 4 = pool ceiling, regardless of free blocks.
+        let ps = pool(8, 8, 0);
+        let mut free = 8;
+        match paged_admission(32, &ps, &mut free) {
+            Some(Reject::TooLong { max }) => assert_eq!(max, 32),
+            other => panic!("expected TooLong, got {other:?}"),
+        }
+        // Exactly at the ceiling (31 + 1 = 32 rows = 8 blocks) admits.
+        assert!(paged_admission(31, &ps, &mut free).is_none());
     }
 }

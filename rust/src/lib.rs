@@ -101,6 +101,15 @@
 //!   round-to-nearest-even, reads widen back to f32 for the math, and
 //!   the half formats halve every byte account at a bounded narrowing
 //!   error — a second, orthogonal lever on the same memory axis;
+//! * [`runtime::session`]'s **paged allocator** (`serve --kv-block-len` /
+//!   `SQA_KV_BLOCK_LEN`; [`runtime::PagedConfig`]) replaces the
+//!   per-session slab with fixed-size blocks drawn from a global
+//!   per-geometry [`runtime::KvPoolStats`]-instrumented pool: block
+//!   tables allocate lazily, a token-chunk trie shares identical prompt
+//!   prefixes across sessions (refcounted, copy-on-write on divergence —
+//!   a trie hit skips the shared span's prefill compute), and idle
+//!   sessions' exclusive blocks spill to disk under pool pressure (LRU),
+//!   restoring transparently on their next step;
 //! * [`runtime::Backend`] gains `prefill` (prompt → session + logits),
 //!   `decode_step` (token → logits), `close_session` and `session_stats`;
 //! * the [`coordinator`]'s generation scheduler admits sessions (cap +
@@ -116,7 +125,17 @@
 //! incremental decode logits equal a full stateless re-forward to 1e-4
 //! for every variant, both attention kernels and all three linalg impls;
 //! the f16/bf16 caches track the f32 logits within the narrowing error
-//! at exactly half the reported bytes.
+//! at exactly half the reported bytes. The paged allocator adds its own
+//! contracts, pinned by the same suite plus `runtime::session`'s unit
+//! tests: a paged session is *bitwise* identical to its contiguous twin
+//! at every dtype and under every sparse pattern (the allocator changes
+//! layout, never values); block refcounts never underflow and a block
+//! referenced by more than one owner is never written in place — writes
+//! to shared blocks copy first (COW), so an adopted prefix can never be
+//! corrupted by its adopters; resident bytes are exactly
+//! `blocks_in_use × block_bytes` at all times; and an evicted session's
+//! spill/restore round-trip is byte-exact, so post-restore decode is
+//! bitwise indistinguishable from a session that never left the pool.
 //!
 //! ## Compute kernels ([`linalg`])
 //!
@@ -217,16 +236,20 @@
 //!   Bare `.lock().unwrap()` in the concurrent subsystems is a lint
 //!   finding.
 //!
-//! Three more linted invariants keep the measurement story honest: the
+//! Four more linted invariants keep the measurement story honest: the
 //! [`attention`]/[`linalg`] kernels are clock-free (timing lives in the
 //! benches and [`util::bench`], keeping kernels deterministic and
 //! Miri/loom-runnable); every bench report goes through the schema'd
 //! [`util::bench::write_bench_json`] writer so the committed
-//! `BENCH_*.json` baselines stay diffable by `xtask bench-check`; and
+//! `BENCH_*.json` baselines stay diffable by `xtask bench-check`;
 //! architecture intrinsics (`core::arch`, `#[target_feature]`, feature
 //! detection) are confined to the two seams [`linalg::simd`] and
 //! [`util::simd`] — everything else stays portable and Miri-runnable
-//! (`simd-confinement`).
+//! (`simd-confinement`); and the paged-KV allocator's raw block state
+//! (`PoolInner`, block data, the spill sentinel) never leaks outside
+//! `runtime/session.rs` — every other layer goes through the
+//! `PagedKvCache`/`BlockPool` API, so the refcount/COW invariants have
+//! exactly one owner (`kv-block-confinement`).
 //!
 //! ## Modules
 //!

@@ -74,6 +74,7 @@ COMMANDS
             [--max-batch 8 --max-wait-ms 5 --workers 2 --kernel tiled|naive]
             [--pattern dense|window:W|strided:T|dilated:W:T|sink:S:W|bitmap:N]
             [--kv-dtype f32|f16|bf16]
+            [--kv-block-len 0 --kv-pool-blocks 4096 --spill-dir DIR]
             [--max-sessions 4 --session-timeout-ms 30000 --gen-capacity 0
              --conn-threads 8]
   encode    --addr 127.0.0.1:7433 (--text \"...\" | --tokens 1,2,3 | --metrics)
@@ -118,6 +119,16 @@ bytes and per-step cache traffic while the kernels still compute in f32. Generat
 --pattern (sessions keep the mask from prefill through every decode step);
 there is no per-request pattern switch. `cargo bench --bench
 decode_throughput` sweeps measured tokens/s and bytes/step across the zoo.
+Paged KV: `serve --kv-block-len N` (or SQA_KV_BLOCK_LEN; 0 = off) swaps the
+contiguous per-session slabs for a shared block pool of `--kv-pool-blocks`
+fixed-size blocks: sessions map logical positions to blocks through a block
+table, identical prompt prefixes share refcounted blocks copy-on-write (a
+prefix-trie hit skips prefill compute for the shared span), and under pool
+pressure idle sessions' blocks spill to files under `--spill-dir` and
+restore transparently on their next decode step. `/metrics` gains a
+`kv_pool` object (occupancy, alloc/free/COW/evict/restore counters,
+prefix-hit rate); `cargo bench --bench decode_throughput -- --kv-paged`
+adds the paged axis plus a 64-session shared-prefix sessions/GB probe.
 ";
 
 fn cmd_train(mut args: Args) -> Result<()> {
@@ -180,6 +191,9 @@ fn cmd_serve(mut args: Args) -> Result<()> {
         kernel: args.str_opt("kernel"),
         pattern: args.str_opt("pattern"),
         kv_dtype: args.str_opt("kv-dtype"),
+        kv_block_len: args.usize("kv-block-len", 0)?,
+        kv_pool_blocks: args.usize("kv-pool-blocks", 4096)?,
+        spill_dir: args.str_opt("spill-dir"),
         max_sessions: args.usize("max-sessions", 4)?,
         session_timeout_ms: args.usize("session-timeout-ms", 30_000)? as u64,
         gen_capacity: args.usize("gen-capacity", 0)?,
@@ -194,6 +208,16 @@ fn cmd_serve(mut args: Args) -> Result<()> {
     if let Some(dt) = &cfg.kv_dtype {
         sqa::runtime::KvDtype::parse(dt).context("--kv-dtype")?;
         std::env::set_var("SQA_KV_DTYPE", dt);
+    }
+    // Same seam for the paged allocator: the native backend reads the
+    // SQA_KV_* env at open time (see `PagedConfig::from_env`), so the
+    // flags must be exported before `open_backend`.
+    if cfg.kv_block_len > 0 {
+        std::env::set_var("SQA_KV_BLOCK_LEN", cfg.kv_block_len.to_string());
+        std::env::set_var("SQA_KV_POOL_BLOCKS", cfg.kv_pool_blocks.to_string());
+        if let Some(d) = &cfg.spill_dir {
+            std::env::set_var("SQA_KV_SPILL_DIR", d);
+        }
     }
     let backend = open_backend(&dir)?;
     let params = match ckpt {

@@ -13,6 +13,7 @@
 //! Backends are free to keep device-side caches internally.
 
 use crate::runtime::manifest::{FamilyEntry, VariantEntry};
+pub use crate::runtime::session::KvPoolStats;
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -213,6 +214,15 @@ pub trait Backend: Send + Sync {
     /// KV-cache accounting for a live session.
     fn session_stats(&self, session: u64) -> Result<SessionStats> {
         bail!("backend {:?} has no decode session {session}", self.name())
+    }
+
+    /// Merged paged-KV block-pool view (free/used/spilled blocks plus the
+    /// allocator's lifetime counters), or `None` when the backend serves
+    /// contiguous per-session caches. Admission control uses the
+    /// block-granular headroom here; `/metrics` and the decode bench
+    /// surface the counters.
+    fn kv_pool_stats(&self) -> Option<KvPoolStats> {
+        None
     }
 
     // ---- provided lookups ----------------------------------------------

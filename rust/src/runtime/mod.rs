@@ -5,8 +5,10 @@
 //!   picks the implementation for this build.
 //! * [`native`] — the default pure-Rust backend: catalog-defined reference
 //!   models executed on the `attention` oracle; zero external dependencies.
-//! * [`session`] — per-session KV caches ([`KvCache`]) backing the
-//!   stateful prefill/decode generation path.
+//! * [`session`] — per-session KV caches ([`KvCache`]), the paged block
+//!   allocator ([`session::BlockPool`] / [`session::PagedKvCache`]: COW
+//!   prefix sharing, LRU spill/restore), and the [`session::SessionTable`]
+//!   backing the stateful prefill/decode generation path.
 //! * [`catalog`] — built-in model zoo + flat-parameter [`catalog::Layout`].
 //! * [`checkpoint`] — host-side checkpoints shared by all backends.
 //! * [`manifest`] — the `artifacts/manifest.json` contract with the
@@ -34,6 +36,7 @@ pub use manifest::{Artifact, FamilyEntry, Kind, Manifest, ParamSpec, VariantEntr
 pub use native::NativeBackend;
 pub use session::KvCache;
 pub use session::KvDtype;
+pub use session::{KvPoolStats, PagedConfig};
 
 #[cfg(feature = "pjrt")]
 pub use client::Runtime;

@@ -43,12 +43,16 @@ use crate::linalg;
 use crate::runtime::backend::{Backend, SessionStats};
 use crate::runtime::catalog::{self, Geometry, Layout};
 use crate::runtime::manifest::FamilyEntry;
-use crate::runtime::session::{KvCache, KvDtype, SessionTable, TakeError};
-use crate::util::rng::Pcg64;
+use crate::runtime::session::{
+    BlockPool, KvCache, KvDtype, KvPoolStats, PagedConfig, PagedKvCache, SessionCache,
+    SessionTable, TakeError,
+};
+use crate::util::sync::{self, AtomicU64, Mutex, Ordering};
 use crate::util::threadpool::ThreadPool;
+use crate::util::rng::Pcg64;
 use anyhow::{bail, ensure, Context, Result};
-use std::collections::BTreeMap;
-use std::sync::mpsc;
+use std::collections::{BTreeMap, HashMap};
+use std::sync::{mpsc, Arc};
 
 const ADAM_B1: f32 = 0.9;
 const ADAM_B2: f32 = 0.999;
@@ -64,10 +68,62 @@ struct Model {
     linalg: linalg::Impl,
 }
 
-/// A live generation session: model geometry + per-layer KV cache.
+/// A live generation session: model geometry + per-layer KV cache
+/// (contiguous slab or paged block-table view, behind [`SessionCache`]).
 struct DecodeSession {
     model: Model,
-    kv: KvCache,
+    kv: SessionCache,
+}
+
+/// Paged-KV serving state: the configured geometry, one [`BlockPool`] per
+/// (layers, dkv) cache shape, and the LRU stamps driving idle-session
+/// eviction. Present only when paging is enabled (`--kv-block-len` /
+/// `SQA_KV_BLOCK_LEN`).
+struct PagedRuntime {
+    cfg: PagedConfig,
+    pools: Mutex<HashMap<(usize, usize), Arc<BlockPool>>>,
+    /// Monotonic touch clock (Relaxed: stamps are heuristic recency data,
+    /// not a synchronization edge — the session table publishes state).
+    clock: AtomicU64,
+    /// session id -> last-touch stamp.
+    lru: Mutex<HashMap<u64, u64>>,
+}
+
+impl PagedRuntime {
+    fn new(cfg: PagedConfig) -> Self {
+        Self {
+            cfg,
+            pools: Mutex::new(HashMap::new()),
+            clock: AtomicU64::new(0),
+            lru: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// The shared pool for one cache geometry (every variant of one family
+    /// maps to one (layers, Hkv·dh) shape; distinct shapes get their own
+    /// pools and the stats view merges them).
+    fn pool_for(&self, layers: usize, dkv: usize, dtype: KvDtype) -> Result<Arc<BlockPool>> {
+        let mut pools = sync::lock(&self.pools);
+        if let Some(p) = pools.get(&(layers, dkv)) {
+            return Ok(Arc::clone(p));
+        }
+        let p = BlockPool::new(&self.cfg, layers, dkv, dtype)?;
+        pools.insert((layers, dkv), Arc::clone(&p));
+        Ok(p)
+    }
+
+    fn touch(&self, id: u64) {
+        let t = self.clock.fetch_add(1, Ordering::Relaxed) + 1;
+        sync::lock(&self.lru).insert(id, t);
+    }
+
+    fn forget(&self, id: u64) {
+        sync::lock(&self.lru).remove(&id);
+    }
+
+    fn stamps(&self) -> HashMap<u64, u64> {
+        sync::lock(&self.lru).clone()
+    }
 }
 
 /// Pure-Rust implementation of [`Backend`].
@@ -90,6 +146,9 @@ pub struct NativeBackend {
     /// it is safe under concurrent step/close) lives in [`SessionTable`];
     /// the loom suite model-checks it directly.
     sessions: SessionTable<DecodeSession>,
+    /// Paged-KV allocator state (`SQA_KV_BLOCK_LEN` env / `with_paged`);
+    /// `None` keeps the historical contiguous per-session slabs.
+    paged: Option<PagedRuntime>,
 }
 
 impl Default for NativeBackend {
@@ -143,6 +202,7 @@ impl NativeBackend {
             linalg,
             kv_dtype: KvDtype::from_env(),
             sessions: SessionTable::new(),
+            paged: PagedConfig::from_env().map(PagedRuntime::new),
         }
     }
 
@@ -152,6 +212,80 @@ impl NativeBackend {
     pub fn with_kv_dtype(mut self, dtype: KvDtype) -> Self {
         self.kv_dtype = dtype;
         self
+    }
+
+    /// Enable (`Some`) or disable (`None`) the paged KV allocator for
+    /// subsequently created sessions (tests, benches and `sqa serve
+    /// --kv-block-len`; the env default is [`PagedConfig::from_env`]).
+    pub fn with_paged(mut self, cfg: Option<PagedConfig>) -> Self {
+        self.paged = cfg.map(PagedRuntime::new);
+        self
+    }
+
+    /// Whether new sessions go through the paged allocator.
+    pub fn paged_enabled(&self) -> bool {
+        self.paged.is_some()
+    }
+
+    /// Evict (spill to disk) one idle paged session's exclusive blocks.
+    /// Fails on unknown ids and on sessions with a step in flight (the
+    /// `Busy` marker — never spill state a worker is reading). Returns the
+    /// number of blocks spilled; 0 means nothing exclusive/resident.
+    pub fn spill_session(&self, session: u64) -> Result<usize> {
+        let Some(rt) = &self.paged else {
+            bail!("paged kv cache is not enabled")
+        };
+        let Some(dir) = rt.cfg.spill_dir.clone() else {
+            bail!("kv spill disabled: no spill dir configured")
+        };
+        let mut sess = match self.sessions.take(session) {
+            Ok(s) => s,
+            Err(TakeError::Unknown) => bail!("unknown decode session {session}"),
+            Err(TakeError::Busy) => bail!("decode session {session} is mid-step"),
+        };
+        let out = (|| {
+            let Some(kv) = sess.kv.as_paged_mut() else {
+                return Ok(0);
+            };
+            if kv.is_spilled() {
+                return Ok(0);
+            }
+            std::fs::create_dir_all(&dir)
+                .with_context(|| format!("create spill dir {}", dir.display()))?;
+            kv.spill(dir.join(format!("session-{session}.kv")))
+        })();
+        self.sessions.put_back(session, sess);
+        out
+    }
+
+    /// LRU sweep: spill idle paged sessions (oldest touch stamp first,
+    /// skipping `keep` and anything mid-step) until the pool has headroom
+    /// again. Returns the total blocks spilled.
+    fn evict_idle_except(&self, keep: u64) -> Result<usize> {
+        let Some(rt) = &self.paged else { return Ok(0) };
+        if rt.cfg.spill_dir.is_none() {
+            return Ok(0);
+        }
+        let stamps = rt.stamps();
+        let mut ids = self.sessions.ids();
+        ids.sort_by_key(|id| stamps.get(id).copied().unwrap_or(0));
+        let mut spilled = 0usize;
+        for id in ids {
+            if id == keep {
+                continue;
+            }
+            if let Some(ps) = self.kv_pool_stats() {
+                // One decode step needs at most a fresh block + one COW.
+                if spilled > 0 && ps.blocks_free >= 2 {
+                    break;
+                }
+            }
+            // Busy / concurrently-closed sessions are simply not idle.
+            if let Ok(n) = self.spill_session(id) {
+                spilled += n;
+            }
+        }
+        Ok(spilled)
     }
 
     fn geom(&self, family: &str) -> Result<&Geometry> {
@@ -444,14 +578,47 @@ impl NativeBackend {
             tokens.len()
         );
         self.check_batch(&model, params, tokens, 1, tokens.len())?;
-        let mut kv = KvCache::new_with_dtype(
-            model.lay.n_layers,
-            capacity,
-            model.lay.hkv * model.lay.d_head,
-            self.kv_dtype,
-        );
-        let logits = prefill_row(&model, params, tokens, &mut kv, Some(&self.pool))?;
+        let dkv = model.lay.hkv * model.lay.d_head;
+        let (kv, logits) = if let Some(rt) = &self.paged {
+            let pool = rt.pool_for(model.lay.n_layers, dkv, self.kv_dtype)?;
+            // Prefix namespace = params ⊕ full model description (layout,
+            // mask spec, kernel + linalg lowering): reusing a cached block
+            // is only sound between sessions that would have recomputed
+            // bit-comparable K/V rows for those tokens.
+            let ns = fnv1a(format!("{model:?}").as_bytes()) ^ fnv1a_f32(params);
+            let (blocks, hit) = pool.prefix_lookup(ns, tokens);
+            let mut paged = PagedKvCache::new(pool, capacity);
+            if hit > 0 {
+                paged.adopt_prefix(blocks, hit)?;
+            }
+            let mut kv = SessionCache::Paged(paged);
+            let logits = if hit > 0 {
+                // Trie hit: the shared blocks stand in for positions
+                // 0..hit, so the forward runs only over the unshared
+                // suffix — the FLOP saving that rides on top of SQA's
+                // per-token Hq reduction.
+                prefill_suffix(&model, params, tokens, hit, &mut kv, &self.pool)?
+            } else {
+                prefill_row(&model, params, tokens, &mut kv, Some(&self.pool))?
+            };
+            if let Some(p) = kv.as_paged() {
+                p.publish_prefix(ns, tokens);
+            }
+            (kv, logits)
+        } else {
+            let mut kv = SessionCache::Contig(KvCache::new_with_dtype(
+                model.lay.n_layers,
+                capacity,
+                dkv,
+                self.kv_dtype,
+            ));
+            let logits = prefill_row(&model, params, tokens, &mut kv, Some(&self.pool))?;
+            (kv, logits)
+        };
         let id = self.sessions.insert(DecodeSession { model, kv });
+        if let Some(rt) = &self.paged {
+            rt.touch(id);
+        }
         Ok((id, logits))
     }
 }
@@ -663,8 +830,31 @@ impl Backend for NativeBackend {
         };
         let out = (|| {
             self.check_batch(&sess.model, params, &[token], 1, 1)?;
-            decode_step_row(&sess.model, params, token, &mut sess.kv)
+            // Spilled sessions restore transparently before the step; if
+            // the pool is out of blocks (for the restore *or* a fresh
+            // append), one LRU sweep spills idle sessions and the step
+            // retries. Re-running a failed step is sound: nothing was
+            // committed (`advance` never ran), and rewrites of the same
+            // uncommitted rows are idempotent.
+            let mut attempt = || -> Result<Vec<f32>> {
+                sess.kv.ensure_resident()?;
+                decode_step_row(&sess.model, params, token, &mut sess.kv)
+            };
+            match attempt() {
+                Err(e) if e.to_string().contains("block pool exhausted") => {
+                    if self.evict_idle_except(session)? == 0 {
+                        return Err(e);
+                    }
+                    attempt()
+                }
+                r => r,
+            }
         })();
+        if out.is_ok() {
+            if let Some(rt) = &self.paged {
+                rt.touch(session);
+            }
+        }
         // Put the session back — unless it was closed while we computed,
         // in which case put_back drops the state.
         self.sessions.put_back(session, sess);
@@ -672,7 +862,30 @@ impl Backend for NativeBackend {
     }
 
     fn close_session(&self, session: u64) -> bool {
+        if let Some(rt) = &self.paged {
+            rt.forget(session);
+        }
+        // Dropping a paged session's state returns its blocks to the pool
+        // and deletes any spill file (PagedKvCache::drop).
         self.sessions.close(session)
+    }
+
+    fn kv_pool_stats(&self) -> Option<KvPoolStats> {
+        let rt = self.paged.as_ref()?;
+        let pools = sync::lock(&rt.pools);
+        let mut merged = KvPoolStats::default();
+        if pools.is_empty() {
+            // No session yet: report the configured (empty) pool so
+            // admission headroom checks see full capacity, not "no pool".
+            merged.block_len = rt.cfg.block_len;
+            merged.blocks_total = rt.cfg.pool_blocks;
+            merged.blocks_free = rt.cfg.pool_blocks;
+            return Some(merged);
+        }
+        for p in pools.values() {
+            merged.absorb(&p.stats());
+        }
+        Some(merged)
     }
 
     fn session_stats(&self, session: u64) -> Result<SessionStats> {
@@ -693,6 +906,18 @@ fn fnv1a(bytes: &[u8]) -> u64 {
     let mut h = 0xcbf29ce484222325u64;
     for &b in bytes {
         h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// FNV-1a over f32 bit patterns — the parameter half of the prefix-trie
+/// namespace. O(n_params) per prefill, a rounding error next to the
+/// prefill GEMMs it may let us skip.
+fn fnv1a_f32(xs: &[f32]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for &x in xs {
+        h ^= x.to_bits() as u64;
         h = h.wrapping_mul(0x100000001b3);
     }
     h
@@ -851,7 +1076,7 @@ fn prefill_row(
     model: &Model,
     params: &[f32],
     tokens: &[i32],
-    kv: &mut KvCache,
+    kv: &mut SessionCache,
     pool: Option<&ThreadPool>,
 ) -> Result<Vec<f32>> {
     let lay = &model.lay;
@@ -884,6 +1109,59 @@ fn prefill_row(
     Ok(logits)
 }
 
+/// Prefill *from* a shared prefix: positions `0..p` are already resident
+/// (trie-adopted blocks), so only the suffix `tokens[p..]` is embedded,
+/// projected and written; its attention runs against the gathered cache
+/// through [`decode_attend`]'s chunked multi-row path (`pos0 = p`,
+/// `n_new = s - p`) — exactly the incremental decode math, batched. This
+/// is the "hit → skip prefill compute for the shared span" saving: the
+/// shared span costs zero projections, zero attention FLOPs and zero new
+/// cache bytes here.
+fn prefill_suffix(
+    model: &Model,
+    params: &[f32],
+    tokens: &[i32],
+    p: usize,
+    kv: &mut SessionCache,
+    pool: &ThreadPool,
+) -> Result<Vec<f32>> {
+    let lay = &model.lay;
+    let (s, d, dh, vocab) = (tokens.len(), lay.d_model, lay.d_head, lay.vocab);
+    let (dq_cols, dkv_cols) = (lay.hq * dh, lay.hkv * dh);
+    let imp = model.linalg;
+    ensure!(p < s, "shared prefix must leave at least one suffix token");
+    let m = s - p;
+    let pool = Some(pool);
+    let (e_off, _) = lay.embed();
+    let mut x = vec![0.0f32; m * d];
+    for (i, &t) in tokens[p..].iter().enumerate() {
+        x[i * d..(i + 1) * d]
+            .copy_from_slice(&params[e_off + token_index(t, vocab) * d..][..d]);
+    }
+    let mut o = vec![0.0f32; m * dq_cols];
+    for l in 0..lay.n_layers {
+        let q = linalg::matmul(imp, &x, weight_slice(params, lay.wq(l)), m, d, dq_cols, pool);
+        let kf = linalg::matmul(imp, &x, weight_slice(params, lay.wk(l)), m, d, dkv_cols, pool);
+        let vf = linalg::matmul(imp, &x, weight_slice(params, lay.wv(l)), m, d, dkv_cols, pool);
+        kv.write(l, &kf, &vf)?;
+        // Gather the layer's full visible prefix (shared rows + the rows
+        // just written) and attend the suffix against it.
+        let (kc, vc) = kv.layer_upto(l, s)?;
+        o.fill(0.0);
+        decode_attend(&q, kc, vc, &mut o, p, m, s, dh, model.spec, imp);
+        let a = linalg::matmul(imp, &o, weight_slice(params, lay.wo(l)), m, dq_cols, d, pool);
+        for (xv, av) in x.iter_mut().zip(&a) {
+            *xv += av;
+        }
+    }
+    kv.advance(m)?;
+    let head = weight_slice(params, lay.lm_head());
+    let bias = weight_slice(params, lay.lm_bias());
+    let mut logits = vec![0.0f32; vocab];
+    linalg::matmul_bias_into(imp, &x[(m - 1) * d..], head, bias, &mut logits, 1, d, vocab, None);
+    Ok(logits)
+}
+
 /// One incremental decode step: embed `token`, project its single row,
 /// append the K/V row to every layer's cache, attend against the whole
 /// cache via [`decode_attend`], and return the new position's logits.
@@ -897,7 +1175,7 @@ fn decode_step_row(
     model: &Model,
     params: &[f32],
     token: i32,
-    kv: &mut KvCache,
+    kv: &mut SessionCache,
 ) -> Result<Vec<f32>> {
     let lay = &model.lay;
     let (d, dh, vocab) = (lay.d_model, lay.d_head, lay.vocab);
@@ -917,7 +1195,7 @@ fn decode_step_row(
         let kf = linalg::matmul(imp, &x, weight_slice(params, lay.wk(l)), 1, d, dkv_cols, None);
         let vf = linalg::matmul(imp, &x, weight_slice(params, lay.wv(l)), 1, d, dkv_cols, None);
         kv.write(l, &kf, &vf)?;
-        let (kc, vc) = kv.layer_upto(l, pos + 1);
+        let (kc, vc) = kv.layer_upto(l, pos + 1)?;
         decode_attend(&q, kc, vc, &mut o, pos, 1, pos + 1, dh, model.spec, imp);
         let a = linalg::matmul(imp, &o, weight_slice(params, lay.wo(l)), 1, dq_cols, d, None);
         for (xv, av) in x.iter_mut().zip(&a) {
@@ -1410,5 +1688,164 @@ mod tests {
         assert!(b.train_shape("bench", "mha").is_err());
         assert!(b.fwd_buckets("dense_sm", "sqa").is_empty());
         assert!(b.forward_impl("pallas", "tiny", "sqa", &[], &[], 1, 1).is_err());
+    }
+
+    // ---- paged KV cache -------------------------------------------------
+
+    fn paged_cfg(block_len: usize, pool_blocks: usize, dir: Option<&std::path::Path>) -> PagedConfig {
+        PagedConfig {
+            block_len,
+            pool_blocks,
+            spill_dir: dir.map(|d| d.to_path_buf()),
+        }
+    }
+
+    fn tmp_dir(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("sqa-native-{}-{name}", std::process::id()))
+    }
+
+    #[test]
+    fn paged_sessions_decode_identically_to_contiguous() {
+        let contig = backend();
+        let paged = backend().with_paged(Some(paged_cfg(3, 64, None)));
+        assert!(!contig.paged_enabled() && paged.paged_enabled());
+        let params = contig.init_params("tiny", "sqa", 21).unwrap();
+        let tokens: Vec<i32> = (0..10).map(|i| ((i * 41 + 3) % 2048) as i32).collect();
+        // A cold paged prefill runs the exact same compute path as the
+        // contiguous one (write-through is the only difference), so the
+        // logits must agree bitwise — prefill and every decode step.
+        let (cid, cl) = contig.prefill("tiny", "sqa", &params, &tokens[..5], 16).unwrap();
+        let (pid, pl) = paged.prefill("tiny", "sqa", &params, &tokens[..5], 16).unwrap();
+        assert_eq!(cl, pl);
+        for &t in &tokens[5..] {
+            assert_eq!(
+                contig.decode_step(cid, &params, t).unwrap(),
+                paged.decode_step(pid, &params, t).unwrap()
+            );
+        }
+        let cs = contig.session_stats(cid).unwrap();
+        let ps = paged.session_stats(pid).unwrap();
+        assert_eq!((cs.len, cs.kv_bytes), (ps.len, ps.kv_bytes));
+        assert!(contig.kv_pool_stats().is_none());
+        let pool = paged.kv_pool_stats().unwrap();
+        assert_eq!(pool.blocks_in_use(), 10usize.div_ceil(3));
+        assert_eq!(pool.block_len, 3);
+        assert!(contig.close_session(cid) && paged.close_session(pid));
+    }
+
+    #[test]
+    fn shared_prefixes_hit_the_trie_and_match_stateless() {
+        let b = backend().with_paged(Some(paged_cfg(4, 64, None)));
+        let params = b.init_params("tiny", "sqa", 5).unwrap();
+        let tokens: Vec<i32> = (0..12).map(|i| ((i * 53 + 5) % 2048) as i32).collect();
+        let full = b.forward("tiny", "sqa", &params, &tokens, 1, 12).unwrap();
+        let vocab = 2048usize;
+        let diff = |a: &[f32], b: &[f32]| {
+            a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0f32, f32::max)
+        };
+        let (s1, l1) = b.prefill("tiny", "sqa", &params, &tokens, 16).unwrap();
+        assert_eq!(b.kv_pool_stats().unwrap().prefix_hits, 0, "cold trie");
+        let (s2, l2) = b.prefill("tiny", "sqa", &params, &tokens, 16).unwrap();
+        let ps = b.kv_pool_stats().unwrap();
+        assert_eq!(ps.prefix_hits, 1);
+        // 12 tokens, block_len 4, span capped at len-1: two exact chunks
+        // (8) plus a 3-token partial match against the third = 11 shared.
+        assert_eq!(ps.prefix_hit_tokens, 11);
+        assert!(ps.prefix_hit_rate() > 0.0);
+        // Both sessions' prefill logits pin to the stateless forward; the
+        // hit session recomputed only 1 of 12 positions to get there.
+        assert!(diff(&l1, &full[11 * vocab..]) < 1e-4);
+        assert!(diff(&l2, &full[11 * vocab..]) < 1e-4);
+        // Suffix-divergent third prompt: shares, COWs, stays correct.
+        let mut t3 = tokens.clone();
+        t3[9] = 1999;
+        t3[10] = 1998;
+        t3[11] = 1997;
+        let full3 = b.forward("tiny", "sqa", &params, &t3, 1, 12).unwrap();
+        let (s3, l3) = b.prefill("tiny", "sqa", &params, &t3, 16).unwrap();
+        assert!(diff(&l3, &full3[11 * vocab..]) < 1e-4);
+        let ps = b.kv_pool_stats().unwrap();
+        assert_eq!(ps.prefix_hits, 2);
+        assert!(ps.cow_splits >= 1, "divergence inside a shared block COWs");
+        for sid in [s1, s2, s3] {
+            assert!(b.close_session(sid));
+        }
+    }
+
+    #[test]
+    fn spill_refuses_sessions_mid_step_then_restores() {
+        let dir = tmp_dir("busy");
+        let b = backend().with_paged(Some(paged_cfg(4, 32, Some(&dir))));
+        let params = b.init_params("tiny", "sqa", 7).unwrap();
+        let tokens: Vec<i32> = (0..12).map(|i| ((i * 53 + 5) % 2048) as i32).collect();
+        let full = b.forward("tiny", "sqa", &params, &tokens, 1, 12).unwrap();
+        let (sid, _) = b.prefill("tiny", "sqa", &params, &tokens[..5], 16).unwrap();
+        // Simulate a step in flight: the slot holds a Busy marker, so the
+        // eviction policy must refuse to touch this session.
+        let held = b.sessions.take(sid).unwrap();
+        let e = b.spill_session(sid).unwrap_err().to_string();
+        assert!(e.contains("mid-step"), "got: {e}");
+        b.sessions.put_back(sid, held);
+        // Idle now: the exclusive (unpublished tail) block spills...
+        assert!(b.spill_session(sid).unwrap() >= 1);
+        assert_eq!(b.spill_session(sid).unwrap(), 0, "spill is idempotent");
+        assert!(b.kv_pool_stats().unwrap().blocks_spilled >= 1);
+        // ...and the next decode step restores transparently and still
+        // matches the stateless forward.
+        let diff = |a: &[f32], b: &[f32]| {
+            a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0f32, f32::max)
+        };
+        let vocab = 2048usize;
+        for i in 5..8 {
+            let l = b.decode_step(sid, &params, tokens[i]).unwrap();
+            assert!(diff(&l, &full[i * vocab..(i + 1) * vocab]) < 1e-4, "step {i}");
+        }
+        assert_eq!(b.kv_pool_stats().unwrap().blocks_spilled, 0);
+        assert!(b.close_session(sid));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn spilled_and_resident_twins_decode_identically() {
+        let dir = tmp_dir("twin");
+        let mk = || backend().with_paged(Some(paged_cfg(4, 32, Some(&dir))));
+        let (a, b) = (mk(), mk());
+        let params = a.init_params("tiny", "sqa", 8).unwrap();
+        let tokens: Vec<i32> = (0..10).map(|i| ((i * 29 + 1) % 2048) as i32).collect();
+        let (ida, _) = a.prefill("tiny", "sqa", &params, &tokens[..6], 16).unwrap();
+        let (idb, _) = b.prefill("tiny", "sqa", &params, &tokens[..6], 16).unwrap();
+        b.spill_session(idb).unwrap();
+        // evict → restore → decode must be bit-identical to never-evicted.
+        for &t in &tokens[6..] {
+            assert_eq!(
+                a.decode_step(ida, &params, t).unwrap(),
+                b.decode_step(idb, &params, t).unwrap()
+            );
+        }
+        assert!(a.close_session(ida) && b.close_session(idb));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn pool_pressure_evicts_idle_sessions_and_steps_proceed() {
+        let dir = tmp_dir("evict");
+        let b = backend().with_paged(Some(paged_cfg(2, 4, Some(&dir))));
+        let params = b.init_params("tiny", "sqa", 3).unwrap();
+        let (ida, _) = b.prefill("tiny", "sqa", &params, &[1, 2, 3, 4], 8).unwrap();
+        let (idb, _) = b.prefill("tiny", "sqa", &params, &[9, 8, 7, 6], 8).unwrap();
+        assert_eq!(b.kv_pool_stats().unwrap().blocks_free, 0, "pool is full");
+        // B's next step needs a 5th block: trie-only references are
+        // reclaimed, idle A is spilled LRU-first, and the step proceeds.
+        let l = b.decode_step(idb, &params, 5).unwrap();
+        assert!(l.iter().all(|x| x.is_finite()));
+        let ps = b.kv_pool_stats().unwrap();
+        assert!(ps.evictions >= 1, "idle session was spilled: {ps:?}");
+        // A comes back transparently (possibly evicting B in turn).
+        let l = b.decode_step(ida, &params, 5).unwrap();
+        assert!(l.iter().all(|x| x.is_finite()));
+        assert!(b.kv_pool_stats().unwrap().restores >= 1);
+        assert_eq!(b.session_stats(ida).unwrap().len, 5);
+        assert!(b.close_session(ida) && b.close_session(idb));
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -26,8 +26,10 @@
 //! round-to-nearest-even) because the offline image has no `half` crate.
 
 use crate::util::sync::{self, AtomicU64, Mutex, Ordering};
-use anyhow::{bail, ensure, Result};
+use anyhow::{bail, ensure, Context as _, Result};
 use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::Arc;
 
 // ---- half-precision conversions ---------------------------------------------
 
@@ -150,6 +152,15 @@ impl KvDtype {
         match self {
             Self::F32 => 4,
             Self::F16 | Self::Bf16 => 2,
+        }
+    }
+
+    /// Spill-file dtype tag (stable on-disk byte, not `as`-cast ordinal).
+    fn tag(self) -> u8 {
+        match self {
+            Self::F32 => 0,
+            Self::F16 => 1,
+            Self::Bf16 => 2,
         }
     }
 
@@ -389,6 +400,1141 @@ impl KvCache {
     }
 }
 
+// ---- paged KV allocator ------------------------------------------------------
+//
+// The paged tier replaces "one contiguous slab per session" with a global
+// pool of fixed-size blocks (`block_len` positions × all layers × K and V)
+// and per-session block tables. Invariants the whole seam leans on:
+//
+// * refcounts never underflow — every `free_ref_locked` asserts `refs > 0`;
+// * a shared block (`refs > 1`) is never written in place — writers COW
+//   first (`ensure_writable`), so trie-published and cross-session blocks
+//   are immutable;
+// * byte accounting is exact: pool residency is `blocks_in_use ×
+//   block_bytes`, and a session's *streamed* bytes stay the same pure
+//   function of `len` as the contiguous cache (`step_bytes`), which is
+//   what the decode roofline cross-checks.
+//
+// Raw block/slab indexing is confined to this file (enforced by the
+// `kv-block-confinement` xtask lint rule): everything outside goes through
+// [`PagedKvCache`] / [`SessionCache`] / [`BlockPool`] methods.
+
+/// Sentinel in a session's block table for a slot whose block currently
+/// lives in the spill file, not the pool.
+const SPILLED: u32 = u32::MAX;
+
+/// Spill-file magic ("SQKV" little-endian).
+const SPILL_MAGIC: u32 = 0x5651_4b53;
+
+/// Spill-file header: magic u32 | dtype tag u8 | block count u32 |
+/// block_len u32 | layers u32 | dkv u32, all little-endian.
+const SPILL_HEADER: usize = 4 + 1 + 4 + 4 + 4 + 4;
+
+fn read_f32_le(bytes: &[u8], off: usize) -> f32 {
+    f32::from_le_bytes([bytes[off], bytes[off + 1], bytes[off + 2], bytes[off + 3]])
+}
+
+fn read_u16_le(bytes: &[u8], off: usize) -> u16 {
+    u16::from_le_bytes([bytes[off], bytes[off + 1]])
+}
+
+fn read_u32_le(bytes: &[u8], off: usize) -> u32 {
+    u32::from_le_bytes([bytes[off], bytes[off + 1], bytes[off + 2], bytes[off + 3]])
+}
+
+/// Geometry + limits of a [`BlockPool`].
+#[derive(Debug, Clone)]
+pub struct PagedConfig {
+    /// Positions per block (the paging granule).
+    pub block_len: usize,
+    /// Total blocks in the pool — the global KV budget.
+    pub pool_blocks: usize,
+    /// Where idle sessions' blocks spill to; `None` disables eviction.
+    pub spill_dir: Option<PathBuf>,
+}
+
+impl PagedConfig {
+    /// `SQA_KV_BLOCK_LEN` (0/unset = contiguous caches),
+    /// `SQA_KV_POOL_BLOCKS` (default 4096), `SQA_KV_SPILL_DIR` (optional).
+    pub fn from_env() -> Option<Self> {
+        Self::from_vars(
+            std::env::var("SQA_KV_BLOCK_LEN").ok().as_deref(),
+            std::env::var("SQA_KV_POOL_BLOCKS").ok().as_deref(),
+            std::env::var("SQA_KV_SPILL_DIR").ok().as_deref(),
+        )
+    }
+
+    /// Pure parsing half of [`Self::from_env`] (env mutation in tests
+    /// races the concurrent harness; this stays testable without it).
+    fn from_vars(block_len: Option<&str>, pool: Option<&str>, dir: Option<&str>) -> Option<Self> {
+        let block_len: usize = block_len?.parse().ok()?;
+        if block_len == 0 {
+            return None;
+        }
+        let pool_blocks = pool.and_then(|s| s.parse().ok()).unwrap_or(4096);
+        let spill_dir = dir.filter(|s| !s.is_empty()).map(PathBuf::from);
+        Some(Self { block_len, pool_blocks, spill_dir })
+    }
+}
+
+/// One block's K/V payload at the pool dtype: `layers · block_len · dkv`
+/// elements per direction, row `(l·block_len + pos_in_block)·dkv`.
+/// Buffers are sized lazily on first allocation and reused thereafter.
+#[derive(Debug)]
+enum BlockData {
+    F32 { k: Vec<f32>, v: Vec<f32> },
+    Half { k: Vec<u16>, v: Vec<u16> },
+}
+
+impl BlockData {
+    fn empty(dtype: KvDtype) -> Self {
+        match dtype {
+            KvDtype::F32 => Self::F32 { k: Vec::new(), v: Vec::new() },
+            KvDtype::F16 | KvDtype::Bf16 => Self::Half { k: Vec::new(), v: Vec::new() },
+        }
+    }
+
+    fn ensure_sized(&mut self, elems: usize) {
+        match self {
+            Self::F32 { k, v } => {
+                if k.len() != elems {
+                    k.resize(elems, 0.0);
+                    v.resize(elems, 0.0);
+                }
+            }
+            Self::Half { k, v } => {
+                if k.len() != elems {
+                    k.resize(elems, 0);
+                    v.resize(elems, 0);
+                }
+            }
+        }
+    }
+
+    /// Whole-payload copy for COW splits (both sides already sized).
+    fn copy_from(&mut self, src: &BlockData) {
+        match (self, src) {
+            (Self::F32 { k, v }, Self::F32 { k: sk, v: sv }) => {
+                k.copy_from_slice(sk);
+                v.copy_from_slice(sv);
+            }
+            (Self::Half { k, v }, Self::Half { k: sk, v: sv }) => {
+                k.copy_from_slice(sk);
+                v.copy_from_slice(sv);
+            }
+            _ => unreachable!("pool blocks share one dtype"),
+        }
+    }
+}
+
+struct Block {
+    data: BlockData,
+    /// Holders: sessions mapping this block + prefix-trie nodes naming it.
+    refs: u32,
+}
+
+/// Sentinel parent index for trie nodes hanging off a namespace root.
+const NO_NODE: usize = usize::MAX;
+
+/// One prefix-trie node: a full immutable block published under its
+/// `block_len`-token chunk key. `parent`/`key`/`ns` exist so LRU
+/// reclamation can unlink a leaf without a tree walk.
+struct TrieNode {
+    block: u32,
+    children: HashMap<Vec<i32>, usize>,
+    parent: usize,
+    ns: u64,
+    key: Vec<i32>,
+    /// Logical LRU clock stamp, bumped on every hit/insert.
+    stamp: u64,
+}
+
+struct PoolInner {
+    blocks: Vec<Block>,
+    free: Vec<u32>,
+    /// Trie arena (`None` = reclaimed slot, reusable via `node_free`).
+    nodes: Vec<Option<TrieNode>>,
+    node_free: Vec<usize>,
+    /// Per-namespace roots: chunk key → node index. The namespace is an
+    /// opaque caller fingerprint (params + geometry + lowering) so prefix
+    /// hits can never cross models whose K/V projections differ.
+    roots: HashMap<u64, HashMap<Vec<i32>, usize>>,
+    clock: u64,
+}
+
+/// Global block pool: fixed-size refcounted KV blocks shared by every
+/// paged session of one (layers, dkv, dtype) geometry, plus the prefix
+/// trie that lets sessions with a common prompt prefix share blocks and
+/// skip the prefill compute for the shared span.
+pub struct BlockPool {
+    layers: usize,
+    dkv: usize,
+    block_len: usize,
+    dtype: KvDtype,
+    spill_dir: Option<PathBuf>,
+    inner: Mutex<PoolInner>,
+    // Monotonic event counters (Relaxed — same argument as
+    // `coordinator::metrics`: independent counters, no reader derives
+    // correctness from a cross-counter snapshot).
+    allocs: AtomicU64,
+    frees: AtomicU64,
+    cow_splits: AtomicU64,
+    evictions: AtomicU64,
+    restores: AtomicU64,
+    prefix_queries: AtomicU64,
+    prefix_hits: AtomicU64,
+    prefix_hit_tokens: AtomicU64,
+    spilled_blocks: AtomicU64,
+}
+
+/// Point-in-time view of a [`BlockPool`] (plus its lifetime counters) —
+/// what `/metrics`, the engine's admission check and the decode bench
+/// summary read.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct KvPoolStats {
+    pub block_len: usize,
+    /// Bytes of one block: `2 · layers · block_len · dkv · dtype.bytes()`.
+    pub block_bytes: usize,
+    pub blocks_total: usize,
+    pub blocks_free: usize,
+    /// Blocks held *only* by the prefix trie — reclaimable on demand.
+    pub blocks_reclaimable: usize,
+    /// Blocks currently living in spill files instead of the pool.
+    pub blocks_spilled: usize,
+    pub allocs: u64,
+    pub frees: u64,
+    pub cow_splits: u64,
+    pub evictions: u64,
+    pub restores: u64,
+    pub prefix_queries: u64,
+    pub prefix_hits: u64,
+    pub prefix_hit_tokens: u64,
+}
+
+impl KvPoolStats {
+    /// Blocks currently resident and referenced.
+    pub fn blocks_in_use(&self) -> usize {
+        self.blocks_total - self.blocks_free
+    }
+
+    /// Resident pool bytes: the ISSUE invariant
+    /// `blocks_in_use × block_bytes`, exact by construction.
+    pub fn resident_bytes(&self) -> usize {
+        self.blocks_in_use() * self.block_bytes
+    }
+
+    /// Shared-prefix hit rate over all lookups (0.0 when none ran).
+    pub fn prefix_hit_rate(&self) -> f64 {
+        if self.prefix_queries == 0 {
+            return 0.0;
+        }
+        self.prefix_hits as f64 / self.prefix_queries as f64
+    }
+
+    /// Fold another pool's stats in (multi-geometry backends expose one
+    /// merged view; block_len/block_bytes keep the first pool's values).
+    pub fn absorb(&mut self, o: &KvPoolStats) {
+        if self.block_len == 0 {
+            self.block_len = o.block_len;
+            self.block_bytes = o.block_bytes;
+        }
+        self.blocks_total += o.blocks_total;
+        self.blocks_free += o.blocks_free;
+        self.blocks_reclaimable += o.blocks_reclaimable;
+        self.blocks_spilled += o.blocks_spilled;
+        self.allocs += o.allocs;
+        self.frees += o.frees;
+        self.cow_splits += o.cow_splits;
+        self.evictions += o.evictions;
+        self.restores += o.restores;
+        self.prefix_queries += o.prefix_queries;
+        self.prefix_hits += o.prefix_hits;
+        self.prefix_hit_tokens += o.prefix_hit_tokens;
+    }
+}
+
+impl BlockPool {
+    pub fn new(cfg: &PagedConfig, layers: usize, dkv: usize, dtype: KvDtype) -> Result<Arc<Self>> {
+        ensure!(cfg.block_len > 0 && cfg.pool_blocks > 0, "empty paged pool geometry");
+        ensure!(layers > 0 && dkv > 0, "empty cache geometry");
+        ensure!(
+            cfg.pool_blocks < SPILLED as usize,
+            "pool too large for u32 block ids"
+        );
+        let blocks = (0..cfg.pool_blocks)
+            .map(|_| Block { data: BlockData::empty(dtype), refs: 0 })
+            .collect();
+        // Reverse so pops hand out ids 0, 1, 2, … (deterministic tests).
+        let free = (0..cfg.pool_blocks as u32).rev().collect();
+        Ok(Arc::new(Self {
+            layers,
+            dkv,
+            block_len: cfg.block_len,
+            dtype,
+            spill_dir: cfg.spill_dir.clone(),
+            inner: Mutex::new(PoolInner {
+                blocks,
+                free,
+                nodes: Vec::new(),
+                node_free: Vec::new(),
+                roots: HashMap::new(),
+                clock: 0,
+            }),
+            allocs: AtomicU64::new(0),
+            frees: AtomicU64::new(0),
+            cow_splits: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            restores: AtomicU64::new(0),
+            prefix_queries: AtomicU64::new(0),
+            prefix_hits: AtomicU64::new(0),
+            prefix_hit_tokens: AtomicU64::new(0),
+            spilled_blocks: AtomicU64::new(0),
+        }))
+    }
+
+    pub fn block_len(&self) -> usize {
+        self.block_len
+    }
+
+    pub fn dtype(&self) -> KvDtype {
+        self.dtype
+    }
+
+    pub fn spill_dir(&self) -> Option<&PathBuf> {
+        self.spill_dir.as_ref()
+    }
+
+    /// Bytes of one block (both directions, all layers).
+    pub fn block_bytes(&self) -> usize {
+        2 * self.layers * self.block_len * self.dkv * self.dtype.bytes()
+    }
+
+    /// Elements per direction in one block.
+    fn elems(&self) -> usize {
+        self.layers * self.block_len * self.dkv
+    }
+
+    /// Pop a free block (refs = 1), reclaiming LRU trie-only blocks under
+    /// pressure. Errors with the load-bearing "block pool exhausted"
+    /// string when every block is referenced by a live session.
+    fn alloc_locked(&self, inner: &mut PoolInner) -> Result<u32> {
+        loop {
+            if let Some(id) = inner.free.pop() {
+                let b = &mut inner.blocks[id as usize];
+                debug_assert_eq!(b.refs, 0, "free-list block still referenced");
+                b.refs = 1;
+                b.data.ensure_sized(self.elems());
+                self.allocs.fetch_add(1, Ordering::Relaxed);
+                return Ok(id);
+            }
+            if !self.reclaim_lru_locked(inner) {
+                bail!(
+                    "block pool exhausted: all {} blocks referenced by live sessions",
+                    inner.blocks.len()
+                );
+            }
+        }
+    }
+
+    /// Drop one reference; a block hitting zero returns to the free list.
+    fn free_ref_locked(&self, inner: &mut PoolInner, id: u32) {
+        let b = &mut inner.blocks[id as usize];
+        assert!(b.refs > 0, "kv block {id} refcount underflow");
+        b.refs -= 1;
+        if b.refs == 0 {
+            inner.free.push(id);
+            self.frees.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Unlink the least-recently-touched trie *leaf* and drop its block
+    /// reference. Returns false when the trie is empty (nothing left to
+    /// reclaim). Reclaiming leaves-first keeps interior prefixes (which
+    /// more sessions share) cached longest.
+    fn reclaim_lru_locked(&self, inner: &mut PoolInner) -> bool {
+        let mut best: Option<(usize, u64)> = None;
+        for (i, slot) in inner.nodes.iter().enumerate() {
+            if let Some(n) = slot {
+                if n.children.is_empty() && best.map_or(true, |(_, s)| n.stamp < s) {
+                    best = Some((i, n.stamp));
+                }
+            }
+        }
+        let Some((i, _)) = best else {
+            return false;
+        };
+        let node = inner.nodes[i].take().expect("scanned live node");
+        inner.node_free.push(i);
+        if node.parent == NO_NODE {
+            if let Some(root) = inner.roots.get_mut(&node.ns) {
+                root.remove(&node.key);
+            }
+        } else if let Some(p) = inner.nodes[node.parent].as_mut() {
+            p.children.remove(&node.key);
+        }
+        self.free_ref_locked(inner, node.block);
+        true
+    }
+
+    fn alloc_node_locked(inner: &mut PoolInner, node: TrieNode) -> usize {
+        match inner.node_free.pop() {
+            Some(i) => {
+                inner.nodes[i] = Some(node);
+                i
+            }
+            None => {
+                inner.nodes.push(Some(node));
+                inner.nodes.len() - 1
+            }
+        }
+    }
+
+    /// Longest shared prefix of `tokens` already cached under namespace
+    /// `ns`: returns the shared blocks (references already taken — the
+    /// caller must hand them to [`PagedKvCache::adopt_prefix`], whose Drop
+    /// releases them) and the number of positions they cover. Full-chunk
+    /// descent first; a final partial match against one child's key shares
+    /// that immutable block as a partially-valid tail (the COW-on-write
+    /// case). The span is capped at `tokens.len() - 1` so at least one
+    /// suffix row is always computed (the caller needs its logits).
+    pub fn prefix_lookup(&self, ns: u64, tokens: &[i32]) -> (Vec<u32>, usize) {
+        self.prefix_queries.fetch_add(1, Ordering::Relaxed);
+        let bl = self.block_len;
+        let limit = tokens.len().saturating_sub(1);
+        let mut blocks = Vec::new();
+        let mut pos = 0usize;
+        let mut cur: Option<usize> = None;
+        let mut inner = sync::lock(&self.inner);
+        let inner = &mut *inner;
+        loop {
+            let exact: Option<usize> = {
+                let children = match cur {
+                    None => match inner.roots.get(&ns) {
+                        Some(r) => r,
+                        None => break,
+                    },
+                    Some(i) => &inner.nodes[i].as_ref().expect("live trie node").children,
+                };
+                if pos + bl <= limit {
+                    children.get(&tokens[pos..pos + bl]).copied()
+                } else {
+                    None
+                }
+            };
+            if let Some(ni) = exact {
+                inner.clock += 1;
+                let stamp = inner.clock;
+                let node = inner.nodes[ni].as_mut().expect("live trie node");
+                node.stamp = stamp;
+                let b = node.block;
+                inner.blocks[b as usize].refs += 1;
+                blocks.push(b);
+                pos += bl;
+                cur = Some(ni);
+                continue;
+            }
+            // Mid-block divergence: share the child whose chunk key agrees
+            // with our tokens for the longest m ≥ 1 positions. Ties break
+            // by node index — any tied child holds identical rows (same
+            // trie path ⇒ same upstream context), so this is determinism
+            // hygiene, not a correctness choice.
+            let partial: Option<(usize, usize)> = {
+                let children = match cur {
+                    None => match inner.roots.get(&ns) {
+                        Some(r) => r,
+                        None => break,
+                    },
+                    Some(i) => &inner.nodes[i].as_ref().expect("live trie node").children,
+                };
+                let want = &tokens[pos..limit.min(pos + bl)];
+                let mut best: Option<(usize, usize)> = None;
+                for (key, &ni) in children {
+                    let m = key.iter().zip(want).take_while(|(a, b)| a == b).count();
+                    if m >= 1
+                        && best.map_or(true, |(bni, bm)| m > bm || (m == bm && ni < bni))
+                    {
+                        best = Some((ni, m));
+                    }
+                }
+                best
+            };
+            if let Some((ni, m)) = partial {
+                inner.clock += 1;
+                let stamp = inner.clock;
+                let node = inner.nodes[ni].as_mut().expect("live trie node");
+                node.stamp = stamp;
+                let b = node.block;
+                inner.blocks[b as usize].refs += 1;
+                blocks.push(b);
+                pos += m;
+            }
+            break;
+        }
+        drop(inner);
+        if pos > 0 {
+            self.prefix_hits.fetch_add(1, Ordering::Relaxed);
+            self.prefix_hit_tokens.fetch_add(pos as u64, Ordering::Relaxed);
+        }
+        (blocks, pos)
+    }
+
+    /// Publish a freshly prefilled session's *complete* blocks under its
+    /// token chunks. Existing nodes win (their blocks are already shared);
+    /// new nodes take one trie reference on the session's block, which
+    /// outlives the session until LRU reclamation.
+    pub fn prefix_insert(&self, ns: u64, tokens: &[i32], table: &[u32]) {
+        let bl = self.block_len;
+        let nfull = (tokens.len() / bl).min(table.len());
+        let mut inner = sync::lock(&self.inner);
+        let inner = &mut *inner;
+        let mut cur: Option<usize> = None;
+        for b in 0..nfull {
+            if table[b] == SPILLED {
+                return; // never publish a non-resident block
+            }
+            let chunk = &tokens[b * bl..(b + 1) * bl];
+            let existing = match cur {
+                None => inner.roots.get(&ns).and_then(|r| r.get(chunk).copied()),
+                Some(i) => inner.nodes[i]
+                    .as_ref()
+                    .expect("live trie node")
+                    .children
+                    .get(chunk)
+                    .copied(),
+            };
+            inner.clock += 1;
+            let stamp = inner.clock;
+            let ni = match existing {
+                Some(ni) => {
+                    inner.nodes[ni].as_mut().expect("live trie node").stamp = stamp;
+                    ni
+                }
+                None => {
+                    let block = table[b];
+                    inner.blocks[block as usize].refs += 1;
+                    let node = TrieNode {
+                        block,
+                        children: HashMap::new(),
+                        parent: cur.unwrap_or(NO_NODE),
+                        ns,
+                        key: chunk.to_vec(),
+                        stamp,
+                    };
+                    let ni = Self::alloc_node_locked(inner, node);
+                    match cur {
+                        None => {
+                            inner.roots.entry(ns).or_default().insert(chunk.to_vec(), ni);
+                        }
+                        Some(p) => {
+                            inner.nodes[p]
+                                .as_mut()
+                                .expect("live trie node")
+                                .children
+                                .insert(chunk.to_vec(), ni);
+                        }
+                    }
+                    ni
+                }
+            };
+            cur = Some(ni);
+        }
+    }
+
+    pub fn stats(&self) -> KvPoolStats {
+        let inner = sync::lock(&self.inner);
+        let mut trie_refs: HashMap<u32, u32> = HashMap::new();
+        for n in inner.nodes.iter().flatten() {
+            *trie_refs.entry(n.block).or_insert(0) += 1;
+        }
+        let reclaimable = trie_refs
+            .iter()
+            .filter(|(&b, &r)| inner.blocks[b as usize].refs == r)
+            .count();
+        KvPoolStats {
+            block_len: self.block_len,
+            block_bytes: self.block_bytes(),
+            blocks_total: inner.blocks.len(),
+            blocks_free: inner.free.len(),
+            blocks_reclaimable: reclaimable,
+            blocks_spilled: self.spilled_blocks.load(Ordering::Relaxed) as usize,
+            allocs: self.allocs.load(Ordering::Relaxed),
+            frees: self.frees.load(Ordering::Relaxed),
+            cow_splits: self.cow_splits.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            restores: self.restores.load(Ordering::Relaxed),
+            prefix_queries: self.prefix_queries.load(Ordering::Relaxed),
+            prefix_hits: self.prefix_hits.load(Ordering::Relaxed),
+            prefix_hit_tokens: self.prefix_hit_tokens.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Disjoint mutable borrows of two pool blocks (COW source + target).
+fn two_blocks(blocks: &mut [Block], a: usize, b: usize) -> (&mut Block, &mut Block) {
+    debug_assert_ne!(a, b);
+    if a < b {
+        let (lo, hi) = blocks.split_at_mut(b);
+        (&mut lo[a], &mut hi[0])
+    } else {
+        let (lo, hi) = blocks.split_at_mut(a);
+        (&mut hi[0], &mut lo[b])
+    }
+}
+
+/// Table positions + destination file of a spilled session.
+#[derive(Debug)]
+struct SpillState {
+    path: PathBuf,
+    /// Table indices whose blocks live in the file, in file order.
+    ix: Vec<usize>,
+}
+
+/// A session's view of the pool: logical positions → physical blocks.
+///
+/// Mirrors the [`KvCache`] write/advance/`layer_upto` protocol exactly —
+/// same commit semantics, same capacity error strings, same
+/// `step_bytes`/`live_bytes` formulas (pure functions of `len`, so the
+/// roofline's measured-vs-predicted cross-check is dtype- and
+/// layout-agnostic). Only `alloc_bytes` differs: it reports the resident
+/// block footprint (`resident_blocks × block_bytes`) instead of a
+/// contiguous capacity reservation.
+pub struct PagedKvCache {
+    pool: Arc<BlockPool>,
+    table: Vec<u32>,
+    len: usize,
+    capacity: usize,
+    /// Per-layer gather targets for `layer_upto` (f32, reused across
+    /// layers and steps — the paged twin of the Half store's widen slabs).
+    wide_k: Vec<f32>,
+    wide_v: Vec<f32>,
+    spill: Option<SpillState>,
+}
+
+impl PagedKvCache {
+    pub fn new(pool: Arc<BlockPool>, capacity: usize) -> Self {
+        assert!(capacity > 0, "empty cache geometry");
+        Self {
+            pool,
+            table: Vec::new(),
+            len: 0,
+            capacity,
+            wide_k: Vec::new(),
+            wide_v: Vec::new(),
+            spill: None,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.capacity - self.len
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.pool.layers
+    }
+
+    pub fn dkv(&self) -> usize {
+        self.pool.dkv
+    }
+
+    pub fn dtype(&self) -> KvDtype {
+        self.pool.dtype
+    }
+
+    pub fn pool(&self) -> &Arc<BlockPool> {
+        &self.pool
+    }
+
+    /// Whether this session's exclusive blocks live in a spill file.
+    pub fn is_spilled(&self) -> bool {
+        self.spill.is_some()
+    }
+
+    /// Resident blocks mapped by this session (spilled slots excluded).
+    pub fn resident_blocks(&self) -> usize {
+        self.table.iter().filter(|&&id| id != SPILLED).count()
+    }
+
+    /// Seed a fresh cache with trie-shared blocks covering `rows`
+    /// positions (references were taken by [`BlockPool::prefix_lookup`];
+    /// this cache's Drop releases them).
+    pub fn adopt_prefix(&mut self, blocks: Vec<u32>, rows: usize) -> Result<()> {
+        ensure!(
+            self.len == 0 && self.table.is_empty(),
+            "adopt_prefix on a used cache"
+        );
+        ensure!(
+            rows <= self.capacity && rows <= blocks.len() * self.pool.block_len,
+            "adopted prefix of {rows} rows does not fit {} blocks / capacity {}",
+            blocks.len(),
+            self.capacity
+        );
+        self.table = blocks;
+        self.len = rows;
+        Ok(())
+    }
+
+    /// Map block-table slot `b`, COWing a shared block before it is ever
+    /// written in place. Writes are append-only, so `b` is at most one
+    /// past the mapped tail.
+    fn ensure_writable(&mut self, b: usize) -> Result<()> {
+        let mut guard = sync::lock(&self.pool.inner);
+        let inner = &mut *guard;
+        if b == self.table.len() {
+            let id = self.pool.alloc_locked(inner)?;
+            self.table.push(id);
+            return Ok(());
+        }
+        ensure!(b < self.table.len(), "non-append block write");
+        let id = self.table[b];
+        ensure!(id != SPILLED, "write into a spilled block");
+        if inner.blocks[id as usize].refs > 1 {
+            // COW split: this session writes its own copy; the other
+            // holders (trie, sibling sessions) keep the original intact.
+            let nid = self.pool.alloc_locked(inner)?;
+            let (src, dst) = two_blocks(&mut inner.blocks, id as usize, nid as usize);
+            dst.data.copy_from(&src.data);
+            self.pool.free_ref_locked(inner, id);
+            self.table[b] = nid;
+            self.pool.cow_splits.fetch_add(1, Ordering::Relaxed);
+        }
+        Ok(())
+    }
+
+    /// Write `n` fresh K/V rows for layer `l` at slots `[len, len + n)` —
+    /// the [`KvCache::write`] contract, routed through the block table.
+    pub fn write(&mut self, l: usize, k_rows: &[f32], v_rows: &[f32]) -> Result<()> {
+        let (layers, bl, dkv) = (self.pool.layers, self.pool.block_len, self.pool.dkv);
+        ensure!(l < layers, "layer {l} out of range ({layers})");
+        ensure!(
+            k_rows.len() == v_rows.len() && !k_rows.is_empty() && k_rows.len() % dkv == 0,
+            "kv rows must be equal non-empty multiples of dkv={} (got {}/{})",
+            dkv,
+            k_rows.len(),
+            v_rows.len()
+        );
+        let n = k_rows.len() / dkv;
+        ensure!(
+            self.len + n <= self.capacity,
+            "session at capacity: {} cached + {n} new > {}",
+            self.len,
+            self.capacity
+        );
+        self.ensure_resident()?;
+        // Map/COW every touched block up front (layer 0 pays; later
+        // layers of the same step find them exclusively owned already).
+        for b in self.len / bl..=(self.len + n - 1) / bl {
+            self.ensure_writable(b)?;
+        }
+        let dt = self.pool.dtype;
+        let mut inner = sync::lock(&self.pool.inner);
+        for r in 0..n {
+            let pos = self.len + r;
+            let (b, o) = (pos / bl, pos % bl);
+            let base = (l * bl + o) * dkv;
+            let krow = &k_rows[r * dkv..(r + 1) * dkv];
+            let vrow = &v_rows[r * dkv..(r + 1) * dkv];
+            match &mut inner.blocks[self.table[b] as usize].data {
+                BlockData::F32 { k, v } => {
+                    k[base..base + dkv].copy_from_slice(krow);
+                    v[base..base + dkv].copy_from_slice(vrow);
+                }
+                BlockData::Half { k, v } => {
+                    for (dst, &x) in k[base..base + dkv].iter_mut().zip(krow) {
+                        *dst = dt.narrow(x);
+                    }
+                    for (dst, &x) in v[base..base + dkv].iter_mut().zip(vrow) {
+                        *dst = dt.narrow(x);
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Commit `n` rows written to every layer ([`KvCache::advance`]).
+    pub fn advance(&mut self, n: usize) -> Result<()> {
+        ensure!(
+            self.len + n <= self.capacity,
+            "advance past capacity: {} + {n} > {}",
+            self.len,
+            self.capacity
+        );
+        self.len += n;
+        Ok(())
+    }
+
+    /// Layer `l`'s first `rows` K/V rows gathered from the block table
+    /// into the f32 scratch slabs — one layer's visible prefix at a time
+    /// (never the whole multi-layer cache), exactly the
+    /// [`KvCache::layer_upto`] access pattern the decode kernel expects.
+    pub fn layer_upto(&mut self, l: usize, rows: usize) -> Result<(&[f32], &[f32])> {
+        let (bl, dkv) = (self.pool.block_len, self.pool.dkv);
+        ensure!(self.spill.is_none(), "layer_upto on a spilled session");
+        ensure!(
+            rows <= self.table.len() * bl,
+            "read past mapped blocks: {rows} rows > {} mapped",
+            self.table.len() * bl
+        );
+        let n = rows * dkv;
+        if self.wide_k.len() < n {
+            self.wide_k.resize(n, 0.0);
+            self.wide_v.resize(n, 0.0);
+        }
+        let dt = self.pool.dtype;
+        let inner = sync::lock(&self.pool.inner);
+        let mut r0 = 0usize;
+        for (b, &id) in self.table.iter().enumerate() {
+            if r0 >= rows {
+                break;
+            }
+            debug_assert_eq!(r0, b * bl);
+            let rh = bl.min(rows - r0);
+            let base = l * bl * dkv;
+            let span = rh * dkv;
+            match &inner.blocks[id as usize].data {
+                BlockData::F32 { k, v } => {
+                    self.wide_k[r0 * dkv..r0 * dkv + span]
+                        .copy_from_slice(&k[base..base + span]);
+                    self.wide_v[r0 * dkv..r0 * dkv + span]
+                        .copy_from_slice(&v[base..base + span]);
+                }
+                BlockData::Half { k, v } => {
+                    for (dst, &bits) in self.wide_k[r0 * dkv..r0 * dkv + span]
+                        .iter_mut()
+                        .zip(&k[base..base + span])
+                    {
+                        *dst = dt.widen(bits);
+                    }
+                    for (dst, &bits) in self.wide_v[r0 * dkv..r0 * dkv + span]
+                        .iter_mut()
+                        .zip(&v[base..base + span])
+                    {
+                        *dst = dt.widen(bits);
+                    }
+                }
+            }
+            r0 += rh;
+        }
+        drop(inner);
+        Ok((&self.wide_k[..n], &self.wide_v[..n]))
+    }
+
+    /// Publish this session's complete, committed blocks into the prefix
+    /// trie under namespace `ns` so later sessions with the same leading
+    /// tokens share them (and skip that span's prefill compute).
+    pub fn publish_prefix(&self, ns: u64, tokens: &[i32]) {
+        let nfull = self.len / self.pool.block_len;
+        let tok = tokens.len().min(nfull * self.pool.block_len);
+        self.pool.prefix_insert(ns, &tokens[..tok], &self.table);
+    }
+
+    /// Same formula as [`KvCache::live_bytes`] — a pure function of `len`.
+    pub fn live_bytes(&self) -> usize {
+        2 * self.pool.layers * self.len * self.pool.dkv * self.pool.dtype.bytes()
+    }
+
+    /// Same formula as [`KvCache::step_bytes`] — paging changes where
+    /// rows live, not how many a step streams.
+    pub fn step_bytes(&self, window: Option<usize>) -> usize {
+        let rows = match window {
+            Some(w) => self.len.min(w),
+            None => self.len,
+        };
+        2 * self.pool.layers * rows * self.pool.dkv * self.pool.dtype.bytes()
+    }
+
+    /// Resident footprint: mapped blocks × block bytes. Shared blocks
+    /// count fully for each mapping session here; the deduplicated truth
+    /// is the pool-level [`KvPoolStats::resident_bytes`].
+    pub fn alloc_bytes(&self) -> usize {
+        self.resident_blocks() * self.pool.block_bytes()
+    }
+
+    /// Evict this idle session's *exclusively owned* blocks to `path`
+    /// (bit-exact stored payloads) and return them to the pool. Shared
+    /// blocks stay resident — their other holders keep them hot. Returns
+    /// the number of blocks spilled (0 = nothing exclusive to evict).
+    pub fn spill(&mut self, path: PathBuf) -> Result<usize> {
+        ensure!(self.spill.is_none(), "session already spilled");
+        let elems = self.pool.elems();
+        let dtype = self.pool.dtype;
+        let mut ix = Vec::new();
+        let mut buf: Vec<u8>;
+        {
+            let inner = sync::lock(&self.pool.inner);
+            for (i, &id) in self.table.iter().enumerate() {
+                if id != SPILLED && inner.blocks[id as usize].refs == 1 {
+                    ix.push(i);
+                }
+            }
+            if ix.is_empty() {
+                return Ok(0);
+            }
+            buf = Vec::with_capacity(SPILL_HEADER + ix.len() * 2 * elems * dtype.bytes());
+            buf.extend_from_slice(&SPILL_MAGIC.to_le_bytes());
+            buf.push(dtype.tag());
+            buf.extend_from_slice(&(ix.len() as u32).to_le_bytes());
+            buf.extend_from_slice(&(self.pool.block_len as u32).to_le_bytes());
+            buf.extend_from_slice(&(self.pool.layers as u32).to_le_bytes());
+            buf.extend_from_slice(&(self.pool.dkv as u32).to_le_bytes());
+            for &i in &ix {
+                match &inner.blocks[self.table[i] as usize].data {
+                    BlockData::F32 { k, v } => {
+                        for &x in &k[..elems] {
+                            buf.extend_from_slice(&x.to_le_bytes());
+                        }
+                        for &x in &v[..elems] {
+                            buf.extend_from_slice(&x.to_le_bytes());
+                        }
+                    }
+                    BlockData::Half { k, v } => {
+                        for &x in &k[..elems] {
+                            buf.extend_from_slice(&x.to_le_bytes());
+                        }
+                        for &x in &v[..elems] {
+                            buf.extend_from_slice(&x.to_le_bytes());
+                        }
+                    }
+                }
+            }
+        }
+        std::fs::write(&path, &buf).with_context(|| format!("spill to {}", path.display()))?;
+        {
+            let mut inner = sync::lock(&self.pool.inner);
+            for &i in &ix {
+                let id = self.table[i];
+                self.pool.free_ref_locked(&mut inner, id);
+                self.table[i] = SPILLED;
+            }
+        }
+        let n = ix.len();
+        self.pool.evictions.fetch_add(n as u64, Ordering::Relaxed);
+        self.pool.spilled_blocks.fetch_add(n as u64, Ordering::Relaxed);
+        self.spill = Some(SpillState { path, ix });
+        Ok(n)
+    }
+
+    /// Transparent restore: re-allocate the spilled blocks, read the
+    /// payloads back bit-exactly, delete the file. No-op when resident.
+    /// A truncated/corrupt file or an exhausted pool fails loudly and
+    /// leaves the spill state intact (retryable).
+    pub fn ensure_resident(&mut self) -> Result<()> {
+        let Some(sp) = self.spill.take() else {
+            return Ok(());
+        };
+        match self.restore(&sp) {
+            Ok(()) => {
+                let n = sp.ix.len() as u64;
+                self.pool.restores.fetch_add(n, Ordering::Relaxed);
+                self.pool.spilled_blocks.fetch_sub(n, Ordering::Relaxed);
+                let _ = std::fs::remove_file(&sp.path);
+                Ok(())
+            }
+            Err(e) => {
+                self.spill = Some(sp);
+                Err(e)
+            }
+        }
+    }
+
+    fn restore(&mut self, sp: &SpillState) -> Result<()> {
+        let elems = self.pool.elems();
+        let dtype = self.pool.dtype;
+        let bytes = std::fs::read(&sp.path)
+            .with_context(|| format!("restore from {}", sp.path.display()))?;
+        let want = SPILL_HEADER + sp.ix.len() * 2 * elems * dtype.bytes();
+        let header_ok = bytes.len() >= SPILL_HEADER
+            && read_u32_le(&bytes, 0) == SPILL_MAGIC
+            && bytes[4] == dtype.tag()
+            && read_u32_le(&bytes, 5) as usize == sp.ix.len()
+            && read_u32_le(&bytes, 9) as usize == self.pool.block_len
+            && read_u32_le(&bytes, 13) as usize == self.pool.layers
+            && read_u32_le(&bytes, 17) as usize == self.pool.dkv;
+        ensure!(
+            header_ok && bytes.len() == want,
+            "spill file truncated or corrupt: {} ({} bytes, want {want})",
+            sp.path.display(),
+            bytes.len()
+        );
+        let mut guard = sync::lock(&self.pool.inner);
+        let inner = &mut *guard;
+        // All-or-nothing allocation so a mid-restore exhaustion cannot
+        // strand half the session in the pool and half on disk.
+        let mut fresh = Vec::with_capacity(sp.ix.len());
+        for _ in &sp.ix {
+            match self.pool.alloc_locked(inner) {
+                Ok(id) => fresh.push(id),
+                Err(e) => {
+                    for id in fresh {
+                        self.pool.free_ref_locked(inner, id);
+                    }
+                    return Err(e);
+                }
+            }
+        }
+        let mut off = SPILL_HEADER;
+        for (&i, &id) in sp.ix.iter().zip(&fresh) {
+            match &mut inner.blocks[id as usize].data {
+                BlockData::F32 { k, v } => {
+                    for x in k[..elems].iter_mut() {
+                        *x = read_f32_le(&bytes, off);
+                        off += 4;
+                    }
+                    for x in v[..elems].iter_mut() {
+                        *x = read_f32_le(&bytes, off);
+                        off += 4;
+                    }
+                }
+                BlockData::Half { k, v } => {
+                    for x in k[..elems].iter_mut() {
+                        *x = read_u16_le(&bytes, off);
+                        off += 2;
+                    }
+                    for x in v[..elems].iter_mut() {
+                        *x = read_u16_le(&bytes, off);
+                        off += 2;
+                    }
+                }
+            }
+            self.table[i] = id;
+        }
+        Ok(())
+    }
+}
+
+impl Drop for PagedKvCache {
+    fn drop(&mut self) {
+        {
+            let mut inner = sync::lock(&self.pool.inner);
+            for &id in &self.table {
+                if id != SPILLED {
+                    self.pool.free_ref_locked(&mut inner, id);
+                }
+            }
+        }
+        // Close-while-spilled frees both the blocks (above — spilled
+        // entries hold none) and the disk file.
+        if let Some(sp) = self.spill.take() {
+            self.pool
+                .spilled_blocks
+                .fetch_sub(sp.ix.len() as u64, Ordering::Relaxed);
+            let _ = std::fs::remove_file(&sp.path);
+        }
+    }
+}
+
+/// The storage a decode session actually holds: the historical contiguous
+/// slab or a paged block-table view. Every caller outside this file goes
+/// through these delegating methods — the two tiers stay drop-in
+/// interchangeable (pinned by the paged-vs-contiguous differential suite).
+pub enum SessionCache {
+    Contig(KvCache),
+    Paged(PagedKvCache),
+}
+
+impl SessionCache {
+    pub fn len(&self) -> usize {
+        match self {
+            Self::Contig(kv) => kv.len(),
+            Self::Paged(kv) => kv.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        match self {
+            Self::Contig(kv) => kv.capacity(),
+            Self::Paged(kv) => kv.capacity(),
+        }
+    }
+
+    pub fn dtype(&self) -> KvDtype {
+        match self {
+            Self::Contig(kv) => kv.dtype(),
+            Self::Paged(kv) => kv.dtype(),
+        }
+    }
+
+    pub fn write(&mut self, l: usize, k_rows: &[f32], v_rows: &[f32]) -> Result<()> {
+        match self {
+            Self::Contig(kv) => kv.write(l, k_rows, v_rows),
+            Self::Paged(kv) => kv.write(l, k_rows, v_rows),
+        }
+    }
+
+    pub fn advance(&mut self, n: usize) -> Result<()> {
+        match self {
+            Self::Contig(kv) => kv.advance(n),
+            Self::Paged(kv) => kv.advance(n),
+        }
+    }
+
+    pub fn layer_upto(&mut self, l: usize, rows: usize) -> Result<(&[f32], &[f32])> {
+        match self {
+            Self::Contig(kv) => Ok(kv.layer_upto(l, rows)),
+            Self::Paged(kv) => kv.layer_upto(l, rows),
+        }
+    }
+
+    pub fn live_bytes(&self) -> usize {
+        match self {
+            Self::Contig(kv) => kv.live_bytes(),
+            Self::Paged(kv) => kv.live_bytes(),
+        }
+    }
+
+    pub fn step_bytes(&self, window: Option<usize>) -> usize {
+        match self {
+            Self::Contig(kv) => kv.step_bytes(window),
+            Self::Paged(kv) => kv.step_bytes(window),
+        }
+    }
+
+    pub fn alloc_bytes(&self) -> usize {
+        match self {
+            Self::Contig(kv) => kv.alloc_bytes(),
+            Self::Paged(kv) => kv.alloc_bytes(),
+        }
+    }
+
+    /// Restore a spilled paged session; no-op for contiguous caches.
+    pub fn ensure_resident(&mut self) -> Result<()> {
+        match self {
+            Self::Contig(_) => Ok(()),
+            Self::Paged(kv) => kv.ensure_resident(),
+        }
+    }
+
+    pub fn as_paged_mut(&mut self) -> Option<&mut PagedKvCache> {
+        match self {
+            Self::Contig(_) => None,
+            Self::Paged(kv) => Some(kv),
+        }
+    }
+
+    pub fn as_paged(&self) -> Option<&PagedKvCache> {
+        match self {
+            Self::Contig(_) => None,
+            Self::Paged(kv) => Some(kv),
+        }
+    }
+}
+
 // ---- session table ----------------------------------------------------------
 
 /// Why [`SessionTable::take`] (or [`SessionTable::with`]) failed.
@@ -499,6 +1645,14 @@ impl<S> SessionTable<S> {
     /// Number of live entries (ready + busy).
     pub fn len(&self) -> usize {
         sync::lock(&self.slots).len()
+    }
+
+    /// Snapshot of live session ids (ready + busy), ascending — the
+    /// eviction policy's scan order input.
+    pub fn ids(&self) -> Vec<u64> {
+        let mut ids: Vec<u64> = sync::lock(&self.slots).keys().copied().collect();
+        ids.sort_unstable();
+        ids
     }
 
     pub fn is_empty(&self) -> bool {
@@ -718,5 +1872,323 @@ mod tests {
         assert_ne!(a, 0);
         assert_ne!(a, b);
         assert_eq!(tab.len(), 2);
+    }
+
+    #[test]
+    fn table_ids_snapshot_is_sorted() {
+        let tab = SessionTable::new();
+        let a = tab.insert(0u8);
+        let b = tab.insert(1u8);
+        let c = tab.insert(2u8);
+        assert_eq!(tab.ids(), vec![a, b, c]);
+        tab.close(b);
+        assert_eq!(tab.ids(), vec![a, c]);
+    }
+
+    // ---- paged allocator ----
+
+    fn pool(block_len: usize, pool_blocks: usize, dtype: KvDtype) -> Arc<BlockPool> {
+        let cfg = PagedConfig { block_len, pool_blocks, spill_dir: None };
+        BlockPool::new(&cfg, 2, 3, dtype).unwrap()
+    }
+
+    /// Deterministic KV row for (layer, token, dim) — prefix sharing is
+    /// sound exactly because equal tokens produce equal rows.
+    fn row(l: usize, token: i32, dkv: usize, v_side: bool) -> Vec<f32> {
+        (0..dkv)
+            .map(|d| {
+                let s = if v_side { -1.0 } else { 1.0 };
+                s * (0.05 + l as f32 * 1.5 + token as f32 * 0.37 + d as f32 * 0.011)
+            })
+            .collect()
+    }
+
+    fn fill_paged(kv: &mut PagedKvCache, tokens: &[i32], from: usize) {
+        let dkv = kv.dkv();
+        for &t in &tokens[from..] {
+            for l in 0..kv.n_layers() {
+                kv.write(l, &row(l, t, dkv, false), &row(l, t, dkv, true)).unwrap();
+            }
+            kv.advance(1).unwrap();
+        }
+    }
+
+    fn tmp_path(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("sqa-paged-{}-{name}.kv", std::process::id()))
+    }
+
+    #[test]
+    fn paged_reads_match_contiguous_bitwise_per_dtype() {
+        for dtype in [KvDtype::F32, KvDtype::F16, KvDtype::Bf16] {
+            // 7 rows over block_len 3: two full blocks + a partial tail.
+            let tokens: Vec<i32> = (0..7).collect();
+            let p = pool(3, 8, dtype);
+            let mut paged = PagedKvCache::new(Arc::clone(&p), 10);
+            let mut contig = KvCache::new_with_dtype(2, 10, 3, dtype);
+            fill_paged(&mut paged, &tokens, 0);
+            for &t in &tokens {
+                for l in 0..2 {
+                    contig.write(l, &row(l, t, 3, false), &row(l, t, 3, true)).unwrap();
+                }
+                contig.advance(1).unwrap();
+            }
+            assert_eq!(paged.len(), contig.len());
+            assert_eq!(paged.live_bytes(), contig.live_bytes());
+            assert_eq!(paged.step_bytes(Some(4)), contig.step_bytes(Some(4)));
+            for l in 0..2 {
+                for rows in [1, 3, 6, 7] {
+                    let (pk, pv) = paged.layer_upto(l, rows).unwrap();
+                    let (pk, pv) = (pk.to_vec(), pv.to_vec());
+                    let (ck, cv) = contig.layer_upto(l, rows);
+                    assert_eq!(pk, ck, "{} keys l={l} rows={rows}", dtype.name());
+                    assert_eq!(pv, cv, "{} values l={l} rows={rows}", dtype.name());
+                }
+            }
+            // 3 blocks mapped (ceil(7/3)); resident accounting is exact.
+            assert_eq!(paged.resident_blocks(), 3);
+            assert_eq!(paged.alloc_bytes(), 3 * p.block_bytes());
+            let st = p.stats();
+            assert_eq!(st.blocks_in_use(), 3);
+            assert_eq!(st.resident_bytes(), 3 * st.block_bytes);
+        }
+    }
+
+    #[test]
+    fn paged_capacity_errors_match_contiguous_strings() {
+        let p = pool(2, 8, KvDtype::F32);
+        let mut kv = PagedKvCache::new(p, 3);
+        fill_paged(&mut kv, &[0, 1, 2], 0);
+        let e = kv.write(0, &[0.0; 3], &[0.0; 3]).unwrap_err().to_string();
+        assert!(e.contains("session at capacity"), "got: {e}");
+        let e = kv.advance(1).unwrap_err().to_string();
+        assert!(e.contains("advance past capacity"), "got: {e}");
+    }
+
+    #[test]
+    fn exhausted_pool_fails_loudly_then_recovers_on_free() {
+        let p = pool(2, 2, KvDtype::F32);
+        let mut a = PagedKvCache::new(Arc::clone(&p), 8);
+        fill_paged(&mut a, &[0, 1, 2, 3], 0); // both blocks taken
+        let mut b = PagedKvCache::new(Arc::clone(&p), 8);
+        let e = b
+            .write(0, &row(0, 9, 3, false), &row(0, 9, 3, true))
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("block pool exhausted"), "got: {e}");
+        drop(a); // returns both blocks
+        assert_eq!(p.stats().blocks_free, 2);
+        fill_paged(&mut b, &[9, 9], 0);
+        assert_eq!(b.len(), 2);
+    }
+
+    #[test]
+    fn prefix_sharing_cows_on_mid_block_divergence() {
+        let p = pool(4, 16, KvDtype::F32);
+        let ns = 7u64;
+        let a_tokens: Vec<i32> = (0..8).collect();
+        let mut a = PagedKvCache::new(Arc::clone(&p), 16);
+        fill_paged(&mut a, &a_tokens, 0);
+        a.publish_prefix(ns, &a_tokens);
+        assert_eq!(p.stats().blocks_in_use(), 2, "A's 2 blocks, trie shares them");
+
+        // B agrees for 6 tokens, diverging mid-way through A's 2nd block.
+        let b_tokens = vec![0, 1, 2, 3, 4, 5, 9, 9];
+        let (blocks, hit) = p.prefix_lookup(ns, &b_tokens);
+        assert_eq!(hit, 6, "one exact chunk + 2-token partial match");
+        assert_eq!(blocks.len(), 2);
+        let mut b = PagedKvCache::new(Arc::clone(&p), 16);
+        b.adopt_prefix(blocks, hit).unwrap();
+        assert_eq!(p.stats().cow_splits, 0);
+        fill_paged(&mut b, &b_tokens, hit); // writes rows 6,7 -> COW block 1
+        assert_eq!(p.stats().cow_splits, 1, "exactly one split, on first write");
+        assert_eq!(p.stats().blocks_in_use(), 3, "block 0 still shared");
+
+        // Both sessions now read exactly their own token streams; A's
+        // shared block was never written in place.
+        for (kv, toks) in [(&mut a, &a_tokens), (&mut b, &b_tokens)] {
+            for l in 0..2 {
+                let want_k: Vec<f32> = toks.iter().flat_map(|&t| row(l, t, 3, false)).collect();
+                let want_v: Vec<f32> = toks.iter().flat_map(|&t| row(l, t, 3, true)).collect();
+                let (k, v) = kv.layer_upto(l, 8).unwrap();
+                assert_eq!(k, &want_k[..], "layer {l}");
+                assert_eq!(v, &want_v[..], "layer {l}");
+            }
+        }
+        let st = p.stats();
+        assert!(st.prefix_hits >= 1 && st.prefix_hit_tokens >= 6);
+        assert!(st.prefix_hit_rate() > 0.0);
+    }
+
+    #[test]
+    fn trie_only_blocks_are_reclaimed_lru_under_pressure() {
+        let p = pool(2, 2, KvDtype::F32);
+        let ns = 1u64;
+        let a_tokens = vec![10, 11, 12, 13];
+        let mut a = PagedKvCache::new(Arc::clone(&p), 8);
+        fill_paged(&mut a, &a_tokens, 0);
+        a.publish_prefix(ns, &a_tokens);
+        drop(a); // blocks now held only by the trie
+        let st = p.stats();
+        assert_eq!(st.blocks_free, 0);
+        assert_eq!(st.blocks_reclaimable, 2);
+
+        // A different prompt needs blocks: the trie leaf (deepest chunk)
+        // is reclaimed first, then its parent.
+        let mut b = PagedKvCache::new(Arc::clone(&p), 8);
+        fill_paged(&mut b, &[50, 51, 52, 53], 0);
+        assert_eq!(b.len(), 4);
+        let (_, hit) = p.prefix_lookup(ns, &a_tokens);
+        assert_eq!(hit, 0, "reclaimed prefixes are gone from the trie");
+    }
+
+    #[test]
+    fn spill_restore_round_trips_bitwise_and_removes_file() {
+        for dtype in [KvDtype::F32, KvDtype::F16] {
+            let p = pool(2, 8, dtype);
+            let mut kv = PagedKvCache::new(Arc::clone(&p), 8);
+            fill_paged(&mut kv, &[3, 1, 4, 1, 5], 0);
+            let mut want = Vec::new();
+            for l in 0..2 {
+                let (k, v) = kv.layer_upto(l, 5).unwrap();
+                want.push((k.to_vec(), v.to_vec()));
+            }
+            let path = tmp_path(&format!("roundtrip-{}", dtype.name()));
+            let n = kv.spill(path.clone()).unwrap();
+            assert_eq!(n, 3, "all 3 exclusive blocks spill");
+            assert!(kv.is_spilled() && path.exists());
+            assert_eq!(kv.resident_blocks(), 0);
+            assert_eq!(kv.alloc_bytes(), 0);
+            let st = p.stats();
+            assert_eq!((st.blocks_free, st.blocks_spilled, st.evictions), (8, 3, 3));
+            assert!(kv.layer_upto(0, 5).is_err(), "no reads while spilled");
+
+            kv.ensure_resident().unwrap();
+            assert!(!kv.is_spilled() && !path.exists(), "restore consumes the file");
+            for l in 0..2 {
+                let (k, v) = kv.layer_upto(l, 5).unwrap();
+                assert_eq!((k, v), (&want[l].0[..], &want[l].1[..]), "{}", dtype.name());
+            }
+            assert_eq!(p.stats().restores, 3);
+            assert_eq!(p.stats().blocks_spilled, 0);
+            kv.ensure_resident().unwrap(); // idempotent no-op
+        }
+    }
+
+    #[test]
+    fn truncated_spill_file_fails_loudly_and_stays_retryable() {
+        let p = pool(2, 8, KvDtype::F32);
+        let mut kv = PagedKvCache::new(Arc::clone(&p), 8);
+        fill_paged(&mut kv, &[1, 2, 3], 0);
+        let path = tmp_path("truncated");
+        kv.spill(path.clone()).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+        let e = kv.ensure_resident().unwrap_err().to_string();
+        assert!(e.contains("spill file truncated"), "got: {e}");
+        assert!(kv.is_spilled(), "failed restore keeps the spill state");
+        // Repairing the file makes the same restore succeed.
+        std::fs::write(&path, &bytes).unwrap();
+        kv.ensure_resident().unwrap();
+        assert_eq!(kv.layer_upto(0, 3).unwrap().0, &row(0, 1, 3, false)[..3]);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn restore_into_exhausted_pool_leaves_spill_intact() {
+        let p = pool(2, 2, KvDtype::F32);
+        let mut a = PagedKvCache::new(Arc::clone(&p), 4);
+        fill_paged(&mut a, &[1, 2, 3], 0);
+        let path = tmp_path("exhausted-restore");
+        a.spill(path.clone()).unwrap();
+        let mut b = PagedKvCache::new(Arc::clone(&p), 4);
+        fill_paged(&mut b, &[7, 8, 9], 0); // takes both blocks
+        let e = a.ensure_resident().unwrap_err().to_string();
+        assert!(e.contains("block pool exhausted"), "got: {e}");
+        assert!(a.is_spilled() && path.exists());
+        drop(b);
+        a.ensure_resident().unwrap();
+        assert_eq!(a.layer_upto(1, 3).unwrap().1, &[
+            row(1, 1, 3, true),
+            row(1, 2, 3, true),
+            row(1, 3, 3, true)
+        ]
+        .concat()[..]);
+    }
+
+    #[test]
+    fn drop_while_spilled_frees_blocks_and_disk() {
+        let p = pool(2, 4, KvDtype::F32);
+        let mut kv = PagedKvCache::new(Arc::clone(&p), 8);
+        fill_paged(&mut kv, &[1, 2, 3, 4], 0);
+        let path = tmp_path("drop-spilled");
+        kv.spill(path.clone()).unwrap();
+        assert!(path.exists());
+        drop(kv);
+        assert!(!path.exists(), "close-while-spilled removes the spill file");
+        let st = p.stats();
+        assert_eq!((st.blocks_free, st.blocks_spilled), (4, 0));
+    }
+
+    #[test]
+    fn shared_blocks_do_not_spill() {
+        let p = pool(2, 8, KvDtype::F32);
+        let ns = 3u64;
+        let tokens = vec![1, 2, 3, 4];
+        let mut kv = PagedKvCache::new(Arc::clone(&p), 8);
+        fill_paged(&mut kv, &tokens, 0);
+        kv.publish_prefix(ns, &tokens);
+        let path = tmp_path("shared-nospill");
+        // Every block is trie-shared: nothing exclusive, nothing spilled.
+        assert_eq!(kv.spill(path.clone()).unwrap(), 0);
+        assert!(!kv.is_spilled() && !path.exists());
+    }
+
+    #[test]
+    fn pool_stats_absorb_sums_counters() {
+        let a = pool(2, 4, KvDtype::F32);
+        let b = pool(8, 2, KvDtype::F16);
+        let mut kv = PagedKvCache::new(Arc::clone(&a), 4);
+        fill_paged(&mut kv, &[1, 2, 3], 0);
+        let mut merged = a.stats();
+        merged.absorb(&b.stats());
+        assert_eq!(merged.blocks_total, 6);
+        assert_eq!(merged.blocks_free, 2 + 2);
+        assert_eq!(merged.allocs, 2);
+        assert_eq!(merged.block_len, 2, "first pool's geometry wins");
+    }
+
+    #[test]
+    fn paged_config_parsing_gates_on_block_len() {
+        assert!(PagedConfig::from_vars(None, None, None).is_none());
+        assert!(PagedConfig::from_vars(Some("0"), Some("128"), None).is_none());
+        assert!(PagedConfig::from_vars(Some("nope"), None, None).is_none());
+        let cfg = PagedConfig::from_vars(Some("16"), Some("128"), Some("/tmp/sqa-spill")).unwrap();
+        assert_eq!((cfg.block_len, cfg.pool_blocks), (16, 128));
+        assert_eq!(cfg.spill_dir.as_deref(), Some(std::path::Path::new("/tmp/sqa-spill")));
+        let cfg = PagedConfig::from_vars(Some("8"), None, Some("")).unwrap();
+        assert_eq!((cfg.block_len, cfg.pool_blocks), (8, 4096));
+        assert!(cfg.spill_dir.is_none());
+    }
+
+    #[test]
+    fn session_cache_delegates_both_tiers() {
+        let p = pool(2, 4, KvDtype::F32);
+        let mut paged = SessionCache::Paged(PagedKvCache::new(p, 4));
+        let mut contig = SessionCache::Contig(KvCache::new(2, 4, 3));
+        for kv in [&mut paged, &mut contig] {
+            for l in 0..2 {
+                kv.write(l, &row(l, 5, 3, false), &row(l, 5, 3, true)).unwrap();
+            }
+            kv.advance(1).unwrap();
+            kv.ensure_resident().unwrap();
+            assert_eq!(kv.len(), 1);
+            assert_eq!(kv.step_bytes(None), 2 * 2 * 3 * 4);
+        }
+        let (pk, _) = paged.layer_upto(0, 1).unwrap();
+        let pk = pk.to_vec();
+        let (ck, _) = contig.layer_upto(0, 1).unwrap();
+        assert_eq!(pk, ck);
+        assert!(paged.as_paged_mut().is_some());
+        assert!(contig.as_paged_mut().is_none());
     }
 }

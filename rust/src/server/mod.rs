@@ -21,6 +21,7 @@
 
 use crate::coordinator::{Engine, GenParams, Reject};
 use crate::data::Tokenizer;
+use crate::runtime::KvPoolStats;
 use crate::util::json::Json;
 use crate::util::sync::{AtomicBool, Ordering};
 use crate::util::threadpool::ThreadPool;
@@ -193,6 +194,12 @@ fn handle_request(req: &Json, engine: &Engine, tok: &Tokenizer) -> Json {
             "metrics" => {
                 let mut obj = vec![("ok", Json::Bool(true))];
                 obj.push(("metrics", engine.metrics.snapshot()));
+                // Paged-KV allocator counters ride alongside the engine
+                // snapshot (absent entirely on contiguous backends, so
+                // clients can feature-detect paging from the reply).
+                if let Some(ps) = engine.kv_pool_stats() {
+                    obj.push(("kv_pool", kv_pool_json(&ps)));
+                }
                 Json::obj(obj)
             }
             "ping" => Json::obj(vec![("ok", Json::Bool(true)), ("pong", Json::Bool(true))]),
@@ -266,6 +273,32 @@ fn handle_generate(req: &Json, engine: &Engine, tok: &Tokenizer) -> Json {
         ]),
         Err(r) => reject_json(r),
     }
+}
+
+/// Paged block-pool snapshot as a JSON object: occupancy gauges plus the
+/// allocator's lifetime counters (alloc/free/COW-split/evict/restore) and
+/// the derived prefix-hit rate, so cache-reuse regressions show up in
+/// `/metrics` without a profiler.
+fn kv_pool_json(ps: &KvPoolStats) -> Json {
+    Json::obj(vec![
+        ("block_len", Json::num(ps.block_len as f64)),
+        ("block_bytes", Json::num(ps.block_bytes as f64)),
+        ("blocks_total", Json::num(ps.blocks_total as f64)),
+        ("blocks_free", Json::num(ps.blocks_free as f64)),
+        ("blocks_in_use", Json::num(ps.blocks_in_use() as f64)),
+        ("blocks_reclaimable", Json::num(ps.blocks_reclaimable as f64)),
+        ("blocks_spilled", Json::num(ps.blocks_spilled as f64)),
+        ("resident_bytes", Json::num(ps.resident_bytes() as f64)),
+        ("allocs", Json::num(ps.allocs as f64)),
+        ("frees", Json::num(ps.frees as f64)),
+        ("cow_splits", Json::num(ps.cow_splits as f64)),
+        ("evictions", Json::num(ps.evictions as f64)),
+        ("restores", Json::num(ps.restores as f64)),
+        ("prefix_queries", Json::num(ps.prefix_queries as f64)),
+        ("prefix_hits", Json::num(ps.prefix_hits as f64)),
+        ("prefix_hit_tokens", Json::num(ps.prefix_hit_tokens as f64)),
+        ("prefix_hit_rate", Json::num(ps.prefix_hit_rate())),
+    ])
 }
 
 fn reject_json(r: Reject) -> Json {

@@ -24,7 +24,9 @@
 //! within ~3e-7 relative error of `f64` exp for `|x| ≤ 5` (≤ 4e-6 out to
 //! the clamp range, where the probabilities are already vanishing) —
 //! orders below the 1e-4 differential tolerance. Inputs are expected
-//! finite; callers gate rows through [`row_max_finite`] first.
+//! finite — or finite-or-`-inf` for masked rows; callers gate dense rows
+//! through [`row_max_finite`] and pattern-masked rows through
+//! [`row_max_masked`] first.
 //!
 //! Intrinsics are confined to this module and `linalg/simd` by the
 //! invariant linter (`cargo run -p xtask -- lint`, rule
@@ -112,6 +114,33 @@ pub fn row_max_finite(xs: &[f32]) -> Option<f32> {
     let mut m = f32::NEG_INFINITY;
     for &x in xs {
         if !x.is_finite() {
+            return None;
+        }
+        m = m.max(x);
+    }
+    Some(m)
+}
+
+/// Max over `xs` treating `-inf` as a legitimate *masked-out* score:
+/// returns `None` only on NaN or `+inf` (poison — the row must take the
+/// exact scalar path), `Some(max)` otherwise, where an all-masked row
+/// yields `Some(-inf)`. This is the gate for the vectorized
+/// windowed/pattern-masked softmax rows: masked slots carry `-inf`, which
+/// [`exp_approx`]/`exp_ps` flush to exactly `0.0` (both paths share the
+/// [`EXP_LO`] cutoff), so the masked SIMD row stays bitwise identical to
+/// the scalar masking loop. Contrast [`row_max_finite`], which bails on
+/// *any* non-finite value and serves the dense fast path.
+pub fn row_max_masked(xs: &[f32]) -> Option<f32> {
+    #[cfg(all(target_arch = "x86_64", not(miri)))]
+    if have_avx2_fma() {
+        // SAFETY: AVX2 availability just confirmed by the cached
+        // `have_avx2_fma` detection guard.
+        return unsafe { avx2::row_max_masked(xs) };
+    }
+    let mut m = f32::NEG_INFINITY;
+    for &x in xs {
+        // `!(x < inf)` is true exactly for NaN and +inf; -inf passes.
+        if !(x < f32::INFINITY) {
             return None;
         }
         m = m.max(x);
@@ -260,6 +289,41 @@ mod avx2 {
             let mut m = lanes.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
             for &x in &xs[chunks * 8..] {
                 if !x.is_finite() {
+                    return None;
+                }
+                m = m.max(x);
+            }
+            Some(m)
+        }
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    // SAFETY: `unsafe fn` purely because of `#[target_feature]` — the
+    // dispatchers in the parent module call in only when `have_avx2_fma`.
+    pub(super) unsafe fn row_max_masked(xs: &[f32]) -> Option<f32> {
+        // SAFETY: every load below reads 8 lanes inside `xs` (the chunk
+        // loop stops at `len - len % 8`); AVX2 is the `#[target_feature]`
+        // contract discharged at the `have_avx2_fma`-gated call site.
+        unsafe {
+            let inf = _mm256_set1_ps(f32::INFINITY);
+            let mut vmax = _mm256_set1_ps(f32::NEG_INFINITY);
+            let mut ok = _mm256_castsi256_ps(_mm256_set1_epi32(-1));
+            let chunks = xs.len() / 8;
+            for c in 0..chunks {
+                let v = _mm256_loadu_ps(xs.as_ptr().add(c * 8));
+                // `v < +inf` (ordered) is false exactly for NaN and +inf
+                // lanes; -inf-masked lanes pass and fold into the max.
+                ok = _mm256_and_ps(ok, _mm256_cmp_ps::<_CMP_LT_OQ>(v, inf));
+                vmax = _mm256_max_ps(vmax, v);
+            }
+            if _mm256_movemask_ps(ok) != 0xff {
+                return None;
+            }
+            let mut lanes = [0.0f32; 8];
+            _mm256_storeu_ps(lanes.as_mut_ptr(), vmax);
+            let mut m = lanes.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+            for &x in &xs[chunks * 8..] {
+                if !(x < f32::INFINITY) {
                     return None;
                 }
                 m = m.max(x);
@@ -454,6 +518,30 @@ mod tests {
             }
         }
         assert_eq!(row_max_finite(&[]), Some(f32::NEG_INFINITY));
+    }
+
+    #[test]
+    fn masked_row_max_admits_neg_inf_but_rejects_poison() {
+        for &len in &[1usize, 8, 13, 40] {
+            let mut xs = noisy(len, 17, 5.0);
+            let want = xs.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+            assert_eq!(row_max_masked(&xs), Some(want), "dense row, len {len}");
+            // Masked slots carry -inf and must NOT disable the fast path.
+            xs[len / 2] = f32::NEG_INFINITY;
+            let want = xs.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+            assert_eq!(row_max_masked(&xs), Some(want), "masked row, len {len}");
+            for bad in [f32::INFINITY, f32::NAN] {
+                let mut poisoned = xs.clone();
+                poisoned[len - 1] = bad;
+                assert_eq!(row_max_masked(&poisoned), None, "len {len}, bad {bad}");
+            }
+        }
+        // A fully-masked row reduces to -inf (caller emits all-zero probs).
+        assert_eq!(
+            row_max_masked(&[f32::NEG_INFINITY; 11]),
+            Some(f32::NEG_INFINITY)
+        );
+        assert_eq!(row_max_masked(&[]), Some(f32::NEG_INFINITY));
     }
 
     #[test]

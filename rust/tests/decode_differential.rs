@@ -11,10 +11,18 @@
 //! (xSQA == GQA < sSQA) as observable `session_stats` bytes — at f32 and
 //! again at half-precision cache storage, where every byte halves but the
 //! Hkv ratios (and hence the ordering) are untouched.
+//!
+//! The paged-allocator legs pin the storage refactor against the same
+//! oracles: a paged session must be *bitwise* identical to its contiguous
+//! twin at every dtype (the allocator changes layout, never values), a
+//! prefix-trie hit must reproduce the stateless re-forward to 1e-4, sparse
+//! patterns must survive paging bit-for-bit, and an evicted session must
+//! restore from its spill file and keep decoding exactly as if it had
+//! never left the pool.
 
 use sqa::attention::Kernel;
 use sqa::linalg;
-use sqa::runtime::{Backend, KvDtype, NativeBackend};
+use sqa::runtime::{Backend, KvDtype, NativeBackend, PagedConfig};
 
 const VOCAB: usize = 2048; // tiny family
 
@@ -301,4 +309,164 @@ fn sessions_are_isolated() {
     }
     assert!(b.close_session(sa));
     assert!(b.close_session(sb));
+}
+
+// ---- paged KV allocator differentials ------------------------------------
+
+/// A small paging granule so a ~20-token prompt exercises several full
+/// blocks plus a partial tail (the COW/publish boundary cases).
+fn paged_cfg() -> PagedConfig {
+    PagedConfig { block_len: 4, pool_blocks: 512, spill_dir: None }
+}
+
+#[test]
+fn paged_decode_is_bitwise_identical_to_contiguous() {
+    // The paged allocator is a storage-layout refactor, not a numeric one:
+    // writes narrow and reads widen through the same dtype codecs the
+    // contiguous slab uses, and `layer_upto` hands the kernel the same f32
+    // rows in the same order. So at the same KvDtype every logit must be
+    // *bitwise* identical — any tolerance here would hide a gather bug.
+    let tokens = prompt_tokens(21);
+    let (split, t_len) = (9usize, 21usize);
+    for dtype in [KvDtype::F32, KvDtype::F16, KvDtype::Bf16] {
+        let paged = NativeBackend::new().with_kv_dtype(dtype).with_paged(Some(paged_cfg()));
+        let contig = NativeBackend::new().with_kv_dtype(dtype).with_paged(None);
+        for variant in ["mha", "gqa", "mqa", "sqa", "ssqa", "xsqa"] {
+            let label = format!("{variant}/{}", dtype.name());
+            let params = paged.init_params("tiny", variant, 5).unwrap();
+            let (sp, lp) =
+                paged.prefill("tiny", variant, &params, &tokens[..split], t_len).unwrap();
+            let (sc, lc) =
+                contig.prefill("tiny", variant, &params, &tokens[..split], t_len).unwrap();
+            assert_eq!(lp, lc, "{label}: prefill logits differ");
+            // Identity accounting right after prefill: the visible step
+            // bytes are a pure function of the cached length (identical),
+            // while the paged backing is block-lazy — ceil(9/4) = 3 blocks
+            // of 4 positions < the contiguous capacity-21 slab.
+            let (stp, stc) =
+                (paged.session_stats(sp).unwrap(), contig.session_stats(sc).unwrap());
+            assert_eq!(stp.kv_bytes, stc.kv_bytes, "{label}: step bytes");
+            assert!(
+                stp.alloc_bytes < stc.alloc_bytes,
+                "{label}: paged alloc {} not lazier than contiguous {}",
+                stp.alloc_bytes,
+                stc.alloc_bytes
+            );
+            for i in split..t_len {
+                let a = paged.decode_step(sp, &params, tokens[i]).unwrap();
+                let b = contig.decode_step(sc, &params, tokens[i]).unwrap();
+                assert_eq!(a, b, "{label}: step {i} differs");
+            }
+            assert!(paged.close_session(sp));
+            assert!(contig.close_session(sc));
+        }
+        // Closing every session must return all non-trie blocks; what stays
+        // resident is exactly the reclaimable published-prefix set.
+        let ps = paged.kv_pool_stats().unwrap();
+        assert_eq!(ps.blocks_in_use(), ps.blocks_reclaimable, "leak past the trie");
+    }
+}
+
+#[test]
+fn prefix_hit_prefill_matches_stateless_reforward() {
+    // Copy-on-write prefix sharing: a donor session publishes its full
+    // blocks into the trie; re-prefilling the same prompt adopts the
+    // shared span (skipping its compute) and only the tail runs. The
+    // adopted cache must be indistinguishable from recomputing — logits
+    // and every subsequent decode step match the stateless forward.
+    let b = NativeBackend::new().with_paged(Some(paged_cfg()));
+    let tokens = prompt_tokens(20);
+    for variant in ["gqa", "sqa"] {
+        let params = b.init_params("tiny", variant, 7).unwrap();
+        let full = b.forward("tiny", variant, &params, &tokens, 1, 20).unwrap();
+        let (donor, _) = b.prefill("tiny", variant, &params, &tokens[..12], 20).unwrap();
+        // Trie refs outlive the session that published them.
+        assert!(b.close_session(donor));
+        let before = b.kv_pool_stats().unwrap();
+        let (sid, logits) = b.prefill("tiny", variant, &params, &tokens[..12], 20).unwrap();
+        let after = b.kv_pool_stats().unwrap();
+        assert_eq!(after.prefix_queries, before.prefix_queries + 1, "{variant}");
+        assert_eq!(after.prefix_hits, before.prefix_hits + 1, "{variant}: no trie hit");
+        // 12 prompt tokens publish 3 full 4-token chunks. The lookup span
+        // is capped at len-1 = 11, so the hit descends 2 full chunks and
+        // then partially matches the third (m = 3) — 11 adopted tokens,
+        // with position 11 recomputed (and COW'd into the shared tail).
+        assert_eq!(after.prefix_hit_tokens, before.prefix_hit_tokens + 11, "{variant}");
+        let d = max_diff(&logits, &full[11 * VOCAB..12 * VOCAB]);
+        assert!(d < 1e-4, "{variant}: adopted prefill diverges by {d}");
+        for i in 12..20 {
+            let l = b.decode_step(sid, &params, tokens[i]).unwrap();
+            let d = max_diff(&l, &full[i * VOCAB..(i + 1) * VOCAB]);
+            assert!(d < 1e-4, "{variant}: step {i} after adoption diverges by {d}");
+        }
+        assert!(b.close_session(sid));
+    }
+}
+
+#[test]
+fn paged_pattern_sessions_match_contiguous_pattern_decode() {
+    // Sparse masks compose with paging: a `tiled@<pattern>` session on the
+    // block pool must stay bitwise identical to the contiguous session of
+    // the same pattern at every step (masking happens in the kernel, after
+    // the gather — the allocator must not perturb either side).
+    let paged = NativeBackend::new().with_paged(Some(paged_cfg()));
+    let contig = NativeBackend::new();
+    let tokens = prompt_tokens(20);
+    let params = paged.init_params("tiny", "sqa", 5).unwrap();
+    for pat in ["window:5", "sink:2:4"] {
+        let tiled = format!("tiled@{pat}");
+        let (sp, lp) = paged
+            .prefill_impl(&tiled, "tiny", "sqa", &params, &tokens[..7], 20)
+            .unwrap();
+        let (sc, lc) = contig
+            .prefill_impl(&tiled, "tiny", "sqa", &params, &tokens[..7], 20)
+            .unwrap();
+        assert_eq!(lp, lc, "sqa@{pat}: prefill logits differ");
+        for i in 7..20 {
+            let a = paged.decode_step(sp, &params, tokens[i]).unwrap();
+            let b = contig.decode_step(sc, &params, tokens[i]).unwrap();
+            assert_eq!(a, b, "sqa@{pat}: step {i} differs");
+        }
+        assert!(paged.close_session(sp));
+        assert!(contig.close_session(sc));
+    }
+}
+
+#[test]
+fn evict_restore_roundtrip_is_exact() {
+    // LRU eviction round-trip: spill a session's exclusive blocks to disk,
+    // then decode — the first step restores transparently and every logit
+    // must be bitwise identical to a twin that never left the pool. Run at
+    // f32 and f16 so the spill file's raw-byte codec is exercised at both
+    // element widths.
+    let dir = std::env::temp_dir()
+        .join(format!("sqa-decode-diff-spill-{}", std::process::id()));
+    for dtype in [KvDtype::F32, KvDtype::F16] {
+        let cfg = PagedConfig { spill_dir: Some(dir.clone()), ..paged_cfg() };
+        let b = NativeBackend::new().with_kv_dtype(dtype).with_paged(Some(cfg));
+        let twin = NativeBackend::new().with_kv_dtype(dtype).with_paged(Some(paged_cfg()));
+        let tokens = prompt_tokens(18);
+        let params = b.init_params("tiny", "sqa", 3).unwrap();
+        let (sa, la) = b.prefill("tiny", "sqa", &params, &tokens[..10], 18).unwrap();
+        let (st, lt) = twin.prefill("tiny", "sqa", &params, &tokens[..10], 18).unwrap();
+        assert_eq!(la, lt, "{}: prefill twins differ", dtype.name());
+        // 10 tokens = 2 published (trie-shared, pinned resident) chunks +
+        // one exclusive partial block — exactly that block spills.
+        let spilled = b.spill_session(sa).unwrap();
+        assert_eq!(spilled, 1, "{}: spill set", dtype.name());
+        let ps = b.kv_pool_stats().unwrap();
+        assert_eq!(ps.evictions, 1, "{}", dtype.name());
+        assert_eq!(ps.blocks_spilled, 1, "{}", dtype.name());
+        for i in 10..18 {
+            let l = b.decode_step(sa, &params, tokens[i]).unwrap();
+            let l2 = twin.decode_step(st, &params, tokens[i]).unwrap();
+            assert_eq!(l, l2, "{}: step {i} after restore differs", dtype.name());
+        }
+        let ps = b.kv_pool_stats().unwrap();
+        assert_eq!(ps.restores, ps.evictions, "{}: spill never restored", dtype.name());
+        assert_eq!(ps.blocks_spilled, 0, "{}", dtype.name());
+        assert!(b.close_session(sa));
+        assert!(twin.close_session(st));
+    }
+    std::fs::remove_dir_all(&dir).ok();
 }

@@ -1,19 +1,24 @@
 //! The in-tree invariant linter (`cargo run -p xtask -- lint`).
 //!
-//! Five rules, each encoding an invariant the runtime's correctness
+//! Six rules, each encoding an invariant the runtime's correctness
 //! tooling depends on (see `rust/README.md` § Correctness tooling):
 //!
-//! | rule               | invariant                                             |
-//! |--------------------|-------------------------------------------------------|
-//! | `safety-comment`   | every `unsafe` block/impl carries a `// SAFETY:` note |
-//! | `lock-unwrap`      | no `.lock().unwrap()` in server/coordinator/runtime — |
-//! |                    | use the poison-tolerant `util::sync::lock` helper     |
-//! | `kernel-clock`     | no `Instant::now`/`SystemTime` inside attention/linalg|
-//! |                    | kernels — timing belongs to the bench/driver layer    |
-//! | `bench-writer`     | benches persist JSON only via `write_bench_json`      |
-//! | `simd-confinement` | `core::arch`/`#[target_feature]`/feature detection    |
-//! |                    | live only in `linalg/simd.rs` and `util/simd.rs` —    |
-//! |                    | everything else stays portable and Miri-runnable      |
+//! | rule                  | invariant                                             |
+//! |-----------------------|-------------------------------------------------------|
+//! | `safety-comment`      | every `unsafe` block/impl carries a `// SAFETY:` note |
+//! | `lock-unwrap`         | no `.lock().unwrap()` in server/coordinator/runtime — |
+//! |                       | use the poison-tolerant `util::sync::lock` helper     |
+//! | `kernel-clock`        | no `Instant::now`/`SystemTime` inside attention/linalg|
+//! |                       | kernels — timing belongs to the bench/driver layer    |
+//! | `bench-writer`        | benches persist JSON only via `write_bench_json`      |
+//! | `simd-confinement`    | `core::arch`/`#[target_feature]`/feature detection    |
+//! |                       | live only in `linalg/simd.rs` and `util/simd.rs` —    |
+//! |                       | everything else stays portable and Miri-runnable      |
+//! | `kv-block-confinement`| the paged-KV allocator internals (`PoolInner`,        |
+//! |                       | `BlockData`, the `SPILLED` sentinel) stay inside      |
+//! |                       | `runtime/session.rs` — everyone else goes through the |
+//! |                       | `PagedKvCache`/`BlockPool` API so the refcount/COW    |
+//! |                       | invariants have a single enforcement point            |
 //!
 //! Rules match against the masked code view ([`crate::scan::mask`]), so
 //! prose in comments or strings never fires them. A finding on line *L*
@@ -263,6 +268,42 @@ pub fn rule_simd_confinement(path: &str, src: &str) -> Vec<Finding> {
     out
 }
 
+// ---- rule: kv-block-confinement -------------------------------------------
+
+/// Scope: all of `rust/src` EXCEPT the allocator module itself. The block
+/// pool's refcount/COW/spill invariants ("a shared block is never written
+/// in place", "refcounts never underflow", "byte accounting equals
+/// blocks_in_use × block_bytes") are enforced inside `runtime/session.rs`;
+/// code elsewhere touching the pool's internal types would create a second
+/// place those invariants can silently break.
+pub fn kv_block_confinement_scope(rel: &str) -> bool {
+    rel.starts_with("rust/src/") && rel != "rust/src/runtime/session.rs"
+}
+
+pub fn rule_kv_block_confinement(path: &str, src: &str) -> Vec<Finding> {
+    let m = mask(src);
+    let orig_lines: Vec<&str> = src.lines().collect();
+    let mut out = Vec::new();
+    for (ln, cl) in m.code.lines().enumerate() {
+        for word in ["PoolInner", "BlockData", "SPILLED"] {
+            if !has_word(cl, word) || allowed(&orig_lines, ln, "kv-block-confinement") {
+                continue;
+            }
+            out.push(Finding {
+                rule: "kv-block-confinement",
+                path: path.to_string(),
+                line: ln + 1,
+                msg: format!(
+                    "{word} outside runtime/session.rs — go through the \
+                     PagedKvCache/BlockPool API; raw block state has exactly \
+                     one owner"
+                ),
+            });
+        }
+    }
+    out
+}
+
 // ---- driver --------------------------------------------------------------
 
 fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> anyhow::Result<()> {
@@ -312,6 +353,9 @@ pub fn run(root: &Path) -> anyhow::Result<(usize, Vec<Finding>)> {
         }
         if simd_confinement_scope(&rel) {
             findings.extend(rule_simd_confinement(&rel, &src));
+        }
+        if kv_block_confinement_scope(&rel) {
+            findings.extend(rule_kv_block_confinement(&rel, &src));
         }
     }
     Ok((files.len(), findings))
@@ -475,7 +519,45 @@ mod tests {
         assert!(simd_confinement_scope("rust/benches/native_attention.rs"));
     }
 
-    // ---- the tree itself is the sixth fixture --------------------------
+    // ---- kv-block-confinement ------------------------------------------
+
+    #[test]
+    fn kv_block_confinement_fires_on_leaked_allocator_internals() {
+        let src = "use crate::runtime::session::PoolInner;\n\
+                   fn peek(b: &BlockData) {}\n\
+                   let gone = table[i] == SPILLED;\n";
+        let f = rule_kv_block_confinement("rust/src/runtime/native.rs", src);
+        assert_eq!(f.len(), 3, "{:?}", f.iter().map(|x| x.to_string()).collect::<Vec<_>>());
+        assert!(f.iter().all(|x| x.rule == "kv-block-confinement"));
+    }
+
+    #[test]
+    fn kv_block_confinement_ignores_prose_api_types_and_waivers() {
+        // Prose, strings, and the public API types are all fine.
+        let src = "// PoolInner is private to session.rs by design.\n\
+                   let s = \"BlockData\";\n\
+                   let kv = PagedKvCache::new(pool, 8);\n\
+                   let st: KvPoolStats = p.stats();\n";
+        assert!(rule_kv_block_confinement("rust/src/runtime/native.rs", src).is_empty());
+        let waived = "// lint: allow(kv-block-confinement) — doc example\n\
+                      struct PoolInner;\n";
+        assert!(rule_kv_block_confinement("rust/src/server/mod.rs", waived).is_empty());
+    }
+
+    #[test]
+    fn kv_block_confinement_scope_exempts_only_the_allocator() {
+        assert!(!kv_block_confinement_scope("rust/src/runtime/session.rs"));
+        assert!(kv_block_confinement_scope("rust/src/runtime/native.rs"));
+        assert!(kv_block_confinement_scope("rust/src/coordinator/engine.rs"));
+        assert!(kv_block_confinement_scope("rust/src/server/mod.rs"));
+        // Tests and benches may exercise internals through the public API
+        // only, but they are outside rust/src and compile against the crate
+        // surface anyway — the compiler already confines them.
+        assert!(!kv_block_confinement_scope("rust/tests/decode_differential.rs"));
+        assert!(!kv_block_confinement_scope("rust/benches/decode_throughput.rs"));
+    }
+
+    // ---- the tree itself is the seventh fixture ------------------------
 
     #[test]
     fn repo_is_lint_clean() {

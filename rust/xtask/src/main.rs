@@ -46,7 +46,7 @@ fn cmd_lint() -> Result<i32> {
     if findings.is_empty() {
         println!(
             "lint: {files} files clean (safety-comment, lock-unwrap, kernel-clock, \
-             bench-writer, simd-confinement)"
+             bench-writer, simd-confinement, kv-block-confinement)"
         );
         Ok(0)
     } else {
