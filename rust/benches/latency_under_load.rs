@@ -1,0 +1,375 @@
+//! Latency-under-load bench: TTFT and inter-token latency percentiles for
+//! concurrent *streaming* generations across the variant zoo, through the
+//! real serving engine (event-driven scheduler, continuous batching,
+//! credit flow control) — the user-visible axis of the paper's
+//! memory-bound decode regime (§5.2). Where `decode_throughput` measures
+//! raw backend steps, this bench measures what a streaming client
+//! experiences: time to the first token and the gap between consecutive
+//! token frames, pooled across all concurrent sessions per variant.
+//!
+//! A second, single-worker probe guards decode against prefill starvation:
+//! it submits a long prompt and then a short one, and measures the short
+//! request's TTFT with whole-prompt prefill vs 32-token chunked prefill
+//! (`ServeConfig::prefill_chunk`). With chunking, the short request's
+//! prefill overtakes the long prompt after one chunk instead of waiting
+//! out the whole thing, so its TTFT must drop by a wide margin — `--smoke`
+//! turns that margin into a hard guard.
+//!
+//! Flags (after `--`):
+//!   --clients N      concurrent streaming sessions per variant (default 4)
+//!   --prompt-len N   prompt tokens per session              (default 32)
+//!   --max-tokens N   decode budget per session              (default 32)
+//!   --json FILE      output JSON (default BENCH_latency.json at the repo
+//!                    root, so the latency trajectory persists across PRs)
+//!   --smoke          exit(1) unless every variant produced latency
+//!                    samples and the starvation probe's chunked TTFT is
+//!                    < 0.75x its unchunked TTFT
+//!   --quick          fewer clients / tokens
+//!
+//! CI runs: `cargo bench --bench latency_under_load -- --smoke
+//! --json BENCH_latency.fresh.json`
+
+use sqa::config::ServeConfig;
+use sqa::coordinator::{Engine, GenParams, StreamEvent};
+use sqa::runtime::{Backend, NativeBackend};
+use sqa::util::json::Json;
+use std::sync::Arc;
+use std::time::Instant;
+
+const FAMILY: &str = "tiny";
+const VARIANTS: &[&str] = &["mha", "gqa", "mqa", "sqa", "ssqa", "xsqa"];
+/// Starvation probe geometry: the long prompt fills most of the tiny
+/// family's 256-token session capacity; the chunked leg splits it into
+/// 32-token chunks.
+const LONG_PROMPT: usize = 224;
+const SHORT_PROMPT: usize = 8;
+const PREFILL_CHUNK: usize = 32;
+
+struct Flags {
+    clients: usize,
+    prompt_len: usize,
+    max_tokens: usize,
+    json: Option<String>,
+    smoke: bool,
+}
+
+fn parse_flags() -> Flags {
+    let mut f = Flags {
+        clients: 4,
+        prompt_len: 32,
+        max_tokens: 32,
+        json: Some("BENCH_latency.json".to_string()),
+        smoke: false,
+    };
+    let mut quick = false;
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut i = 0;
+    while i < args.len() {
+        let value = if i + 1 < args.len() {
+            Some(args[i + 1].clone())
+        } else {
+            None
+        };
+        match (args[i].as_str(), value) {
+            ("--clients", Some(v)) => {
+                f.clients = v.parse().expect("--clients");
+                i += 2;
+            }
+            ("--prompt-len", Some(v)) => {
+                f.prompt_len = v.parse().expect("--prompt-len");
+                i += 2;
+            }
+            ("--max-tokens", Some(v)) => {
+                f.max_tokens = v.parse().expect("--max-tokens");
+                i += 2;
+            }
+            ("--json", Some(v)) => {
+                f.json = Some(v);
+                i += 2;
+            }
+            ("--smoke", _) => {
+                f.smoke = true;
+                i += 1;
+            }
+            ("--quick", _) => {
+                quick = true;
+                i += 1;
+            }
+            // Ignore unknown flags (the cargo bench runner passes its own).
+            _ => i += 1,
+        }
+    }
+    if quick {
+        f.clients = f.clients.min(2);
+        f.max_tokens = f.max_tokens.min(8);
+    }
+    f
+}
+
+/// q-th percentile of an unsorted sample (nearest-rank); 0.0 on empty —
+/// integer-valued, so the baseline diff treats it as the degenerate case
+/// it is rather than a timing.
+fn percentile(samples: &mut [f64], q: f64) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = ((samples.len() - 1) as f64 * q).round() as usize;
+    samples[idx]
+}
+
+struct Row {
+    variant: String,
+    hq: usize,
+    hkv: usize,
+    ttft_p50_ms: f64,
+    ttft_p99_ms: f64,
+    intertoken_p50_ms: f64,
+    intertoken_p99_ms: f64,
+    tok_per_s: f64,
+    decode_steps_per_batch: f64,
+    samples: usize,
+}
+
+fn serve_cfg(variant: &str) -> ServeConfig {
+    ServeConfig {
+        family: FAMILY.into(),
+        variant: variant.into(),
+        addr: "127.0.0.1:0".into(),
+        max_batch: 8,
+        max_wait_ms: 1,
+        workers: 2,
+        queue_capacity: 64,
+        ..ServeConfig::default()
+    }
+}
+
+/// One variant cell: `clients` concurrent streaming sessions, consumer-side
+/// arrival timestamps pooled into TTFT / inter-token distributions.
+fn run_variant(variant: &str, flags: &Flags) -> Row {
+    let backend: Arc<dyn Backend> = Arc::new(NativeBackend::new());
+    let cfg = backend.variant(FAMILY, variant).expect("variant").cfg;
+    let engine = Arc::new(Engine::start(&backend, &serve_cfg(variant), None).expect("engine"));
+
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..flags.clients {
+        let e = Arc::clone(&engine);
+        let prompt: Vec<u32> = (0..flags.prompt_len)
+            .map(|i| 4 + ((i * 131 + c * 17) % 1000) as u32)
+            .collect();
+        let params = GenParams {
+            max_tokens: flags.max_tokens,
+            top_k: 5,
+            temperature: 1.0,
+            seed: c as u64 + 1,
+        };
+        handles.push(std::thread::spawn(move || {
+            let submitted = Instant::now();
+            let stream = e.generate_stream(prompt, params).expect("stream admission");
+            let mut ttft = None;
+            let mut gaps = Vec::new();
+            let mut last: Option<Instant> = None;
+            let mut tokens = 0usize;
+            for ev in stream {
+                match ev {
+                    StreamEvent::Token(_) => {
+                        let now = Instant::now();
+                        match last {
+                            None => ttft = Some((now - submitted).as_secs_f64() * 1e3),
+                            Some(prev) => gaps.push((now - prev).as_secs_f64() * 1e3),
+                        }
+                        last = Some(now);
+                        tokens += 1;
+                    }
+                    StreamEvent::Done(r) => {
+                        r.expect("stream finished with a rejection");
+                        break;
+                    }
+                }
+            }
+            (ttft, gaps, tokens)
+        }));
+    }
+
+    let mut ttfts = Vec::new();
+    let mut gaps = Vec::new();
+    let mut tokens = 0usize;
+    for h in handles {
+        let (t, g, n) = h.join().expect("client thread");
+        ttfts.extend(t);
+        gaps.extend(g);
+        tokens += n;
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    let samples = ttfts.len() + gaps.len();
+    let steps_per_batch = engine.metrics.decode_steps_per_batch();
+    Row {
+        variant: variant.to_string(),
+        hq: cfg.hq,
+        hkv: cfg.hkv,
+        ttft_p50_ms: percentile(&mut ttfts, 0.50),
+        ttft_p99_ms: percentile(&mut ttfts, 0.99),
+        intertoken_p50_ms: percentile(&mut gaps, 0.50),
+        intertoken_p99_ms: percentile(&mut gaps, 0.99),
+        tok_per_s: tokens as f64 / elapsed.max(1e-9),
+        decode_steps_per_batch: steps_per_batch,
+        samples,
+    }
+}
+
+/// Short-request TTFT behind a long prefill on a single worker. The long
+/// request is submitted first (its prefill job is queued the moment it is
+/// admitted — the poll below waits for exactly that), then the short one;
+/// with one worker the short prefill runs after whatever prefill job is
+/// already queued: the *whole* long prompt unchunked, or just its first
+/// chunk when `prefill_chunk` splits it.
+fn short_ttft_behind_long_prefill(prefill_chunk: usize) -> f64 {
+    let backend: Arc<dyn Backend> = Arc::new(NativeBackend::new());
+    let mut cfg = serve_cfg("sqa");
+    cfg.workers = 1;
+    cfg.prefill_chunk = prefill_chunk;
+    let engine = Arc::new(Engine::start(&backend, &cfg, None).expect("engine"));
+    let greedy = |max_tokens| GenParams {
+        max_tokens,
+        top_k: 1,
+        temperature: 0.0,
+        seed: 0,
+    };
+
+    let e = Arc::clone(&engine);
+    let long = std::thread::spawn(move || {
+        let prompt: Vec<u32> = (0..LONG_PROMPT).map(|i| 4 + ((i * 131) % 1000) as u32).collect();
+        e.generate(prompt, greedy(1)).expect("long generate")
+    });
+    // Wait for the long request's admission — at which point its (first)
+    // prefill job is in the queue ahead of anything submitted next.
+    while engine
+        .metrics
+        .active_sessions
+        .load(std::sync::atomic::Ordering::Relaxed)
+        == 0
+    {
+        std::thread::yield_now();
+    }
+    let prompt: Vec<u32> = (0..SHORT_PROMPT).map(|i| 5 + i as u32).collect();
+    let resp = engine.generate(prompt, greedy(1)).expect("short generate");
+    let _ = long.join().expect("long thread");
+    resp.ttft_ms
+}
+
+/// Median of three probe runs — scheduling noise, not sampling, is the
+/// variance source here.
+fn starvation_probe(prefill_chunk: usize) -> f64 {
+    let mut runs: Vec<f64> = (0..3)
+        .map(|_| short_ttft_behind_long_prefill(prefill_chunk))
+        .collect();
+    runs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    runs[1]
+}
+
+fn main() {
+    let flags = parse_flags();
+    println!(
+        "## Streaming latency under load, family `{FAMILY}` \
+         ({} clients x {} prompt tokens x {} max tokens)\n",
+        flags.clients, flags.prompt_len, flags.max_tokens
+    );
+    println!(
+        "{:6} {:>3} {:>4} {:>10} {:>10} {:>8} {:>8} {:>8} {:>10}",
+        "var", "Hq", "Hkv", "ttft p50", "ttft p99", "itl p50", "itl p99", "tok/s", "steps/bat"
+    );
+    let rows: Vec<Row> = VARIANTS
+        .iter()
+        .map(|v| {
+            let r = run_variant(v, &flags);
+            println!(
+                "{:6} {:>3} {:>4} {:>10.2} {:>10.2} {:>8.2} {:>8.2} {:>8.1} {:>10.2}",
+                r.variant,
+                r.hq,
+                r.hkv,
+                r.ttft_p50_ms,
+                r.ttft_p99_ms,
+                r.intertoken_p50_ms,
+                r.intertoken_p99_ms,
+                r.tok_per_s,
+                r.decode_steps_per_batch
+            );
+            r
+        })
+        .collect();
+
+    println!("\n## Chunked-prefill starvation probe (1 worker, {LONG_PROMPT}-token long prompt)\n");
+    let ttft_unchunked = starvation_probe(0);
+    let ttft_chunked = starvation_probe(PREFILL_CHUNK);
+    println!(
+        "short-request TTFT behind the long prefill: {ttft_unchunked:.2} ms whole-prompt \
+         vs {ttft_chunked:.2} ms with {PREFILL_CHUNK}-token chunks"
+    );
+
+    if let Some(path) = &flags.json {
+        let doc = Json::obj(vec![
+            ("bench", Json::str("latency_under_load")),
+            ("family", Json::str(FAMILY)),
+            ("clients", Json::num(flags.clients as f64)),
+            ("prompt_len", Json::num(flags.prompt_len as f64)),
+            ("max_tokens", Json::num(flags.max_tokens as f64)),
+            (
+                "rows",
+                Json::arr(rows.iter().map(|r| {
+                    Json::obj(vec![
+                        ("variant", Json::str(&r.variant)),
+                        ("hq", Json::num(r.hq as f64)),
+                        ("hkv", Json::num(r.hkv as f64)),
+                        ("ttft_p50_ms", Json::num(r.ttft_p50_ms)),
+                        ("ttft_p99_ms", Json::num(r.ttft_p99_ms)),
+                        ("intertoken_p50_ms", Json::num(r.intertoken_p50_ms)),
+                        ("intertoken_p99_ms", Json::num(r.intertoken_p99_ms)),
+                        ("tok_per_s", Json::num(r.tok_per_s)),
+                        ("decode_steps_per_batch", Json::num(r.decode_steps_per_batch)),
+                    ])
+                })),
+            ),
+            (
+                "starvation",
+                Json::obj(vec![
+                    ("long_prompt_len", Json::num(LONG_PROMPT as f64)),
+                    ("short_prompt_len", Json::num(SHORT_PROMPT as f64)),
+                    ("prefill_chunk", Json::num(PREFILL_CHUNK as f64)),
+                    ("short_ttft_unchunked_ms", Json::num(ttft_unchunked)),
+                    ("short_ttft_chunked_ms", Json::num(ttft_chunked)),
+                ]),
+            ),
+        ]);
+        sqa::util::bench::write_bench_json(path, &doc).expect("writing bench JSON");
+        println!("latency JSON -> {path}");
+    }
+
+    if flags.smoke {
+        let mut failed = false;
+        // Every variant must have produced real latency samples — an empty
+        // distribution means streaming silently broke, not that it is fast.
+        for r in &rows {
+            if r.samples == 0 {
+                eprintln!("SMOKE FAIL {}: no latency samples collected", r.variant);
+                failed = true;
+            }
+        }
+        // The starvation guard: one 32-token chunk is a fraction of the
+        // 224-token prompt's prefill, so the short request's TTFT must
+        // drop by a wide margin — 0.75x leaves plenty of headroom over
+        // the asymptotic chunk/whole ratio while still failing if chunked
+        // prefill stops yielding the worker to short requests.
+        if ttft_chunked >= 0.75 * ttft_unchunked {
+            eprintln!(
+                "SMOKE FAIL starvation probe: chunked TTFT {ttft_chunked:.2} ms is not \
+                 < 0.75x the unchunked {ttft_unchunked:.2} ms"
+            );
+            failed = true;
+        }
+        if failed {
+            std::process::exit(1);
+        }
+        println!("smoke OK: all variants streamed; chunked prefill protects short-request TTFT");
+    }
+}

@@ -317,7 +317,8 @@ pub struct ServeConfig {
     /// Max concurrent generation sessions (admission cap; further
     /// generate requests queue for a slot).
     pub max_sessions: usize,
-    /// Wall-clock budget of one generation; sessions running longer are
+    /// Progress budget of one generation: sessions that make no progress
+    /// (no prefill chunk landed, no token sampled) for this long are
     /// evicted mid-generation and reply with their partial output.
     pub session_timeout_ms: u64,
     /// KV-cache capacity (prompt + generated tokens) per session;
@@ -326,6 +327,18 @@ pub struct ServeConfig {
     /// Connection-handler threads of the TCP front-end (bounded pool so a
     /// long-running generate cannot starve encode/metrics clients).
     pub conn_threads: usize,
+    /// Per-connection idle deadline: a connection that sends no complete
+    /// request line for this long is closed (slow-loris guard — idle
+    /// connections must not pin bounded conn-pool threads forever).
+    pub conn_idle_ms: u64,
+    /// Streaming flow-control window: tokens a `generate_stream` consumer
+    /// may lag before its session's decode pauses (min 1).
+    pub stream_buffer: usize,
+    /// Prompt tokens per prefill job; 0 = whole prompt in one job.
+    /// Chunking interleaves long prefills with decode steps (TTFT
+    /// protection) at the cost of bit-exact parity with the unchunked
+    /// prompt pass (float accumulation order changes).
+    pub prefill_chunk: usize,
 }
 
 impl Default for ServeConfig {
@@ -348,6 +361,9 @@ impl Default for ServeConfig {
             session_timeout_ms: 30_000,
             gen_capacity: 0,
             conn_threads: 8,
+            conn_idle_ms: 30_000,
+            stream_buffer: 32,
+            prefill_chunk: 0,
         }
     }
 }
@@ -406,6 +422,15 @@ impl ServeConfig {
         }
         if let Some(n) = v.get("conn_threads").and_then(|x| x.as_usize()) {
             c.conn_threads = n;
+        }
+        if let Some(n) = v.get("conn_idle_ms").and_then(|x| x.as_usize()) {
+            c.conn_idle_ms = n as u64;
+        }
+        if let Some(n) = v.get("stream_buffer").and_then(|x| x.as_usize()) {
+            c.stream_buffer = n;
+        }
+        if let Some(n) = v.get("prefill_chunk").and_then(|x| x.as_usize()) {
+            c.prefill_chunk = n;
         }
         Ok(c)
     }
@@ -501,6 +526,17 @@ mod tests {
         assert_eq!(c.session_timeout_ms, 100);
         assert_eq!(c.gen_capacity, 64);
         assert_eq!(c.conn_threads, 3);
+        assert_eq!(c.conn_idle_ms, 30_000, "idle deadline defaults to 30s");
+        assert_eq!(c.stream_buffer, 32);
+        assert_eq!(c.prefill_chunk, 0, "chunked prefill defaults off");
+        let j = Json::parse(
+            r#"{"conn_idle_ms":5000,"stream_buffer":4,"prefill_chunk":32}"#,
+        )
+        .unwrap();
+        let c = ServeConfig::from_json(&j).unwrap();
+        assert_eq!(c.conn_idle_ms, 5000);
+        assert_eq!(c.stream_buffer, 4);
+        assert_eq!(c.prefill_chunk, 32);
     }
 
     #[test]

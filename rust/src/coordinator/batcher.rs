@@ -89,8 +89,10 @@ impl DynamicBatcher {
 /// next step here; `take_batches` drains them into chunks of at most
 /// `max_batch` (one worker job each). Unlike [`DynamicBatcher`] there is
 /// no deadline: a decode step is ready the moment its token is sampled,
-/// and the tick cadence itself bounds latency. Pure data structure, same
-/// rationale as above.
+/// and since the scheduler ticks on every completion event (not a fixed
+/// poll interval), ready steps coalesce into batches without adding a
+/// waiting period of their own. Pure data structure, same rationale as
+/// above.
 #[derive(Debug)]
 pub struct TickBatcher<T> {
     ready: Vec<T>,

@@ -8,15 +8,27 @@
 //!                                                │  DynamicBatcher
 //!                                                ▼  (bucket, ≤max_batch)
 //!   clients ──generate()─► event channel ──► gen-scheduler thread
-//!                             ▲                │  sessions + TickBatcher
+//!            generate_stream()▲                │  sessions + TickBatcher
 //!                             │ completions    ▼  (prefill / decode jobs)
 //!                             └───────────  job queue ──► N workers
 //!                                                         (shared params +
 //!                                                          backend handle)
 //! ```
 //!
+//! * Scheduling is **event-driven** — no thread polls on a fixed interval.
+//!   The dispatcher blocks on its ingress channel until a request arrives
+//!   or the oldest pending batch's max-wait deadline expires. The
+//!   generation scheduler blocks on its event channel until the earliest
+//!   deadline it owes anyone: the decode-coalesce defer window or a
+//!   session's progress timeout. Its wake sources are: request arrival,
+//!   prefill / prefill-extend / decode completion, stream credit return
+//!   (ack), stream cancel, the two deadlines above, and shutdown.
 //! * Backpressure: the encode ingress channel and the generation waiting
-//!   queue are bounded; both shed with [`Reject::Overloaded`].
+//!   queue are bounded; both shed with [`Reject::Overloaded`]. Streaming
+//!   consumers are flow-controlled by credits: the scheduler sends at most
+//!   `stream_buffer` tokens ahead of the consumer and queues the rest in a
+//!   per-session outbox, so a slow reader stalls only its own session —
+//!   never a worker, never the scheduler.
 //! * Workers share one immutable host parameter vector (`Arc<Vec<f32>>`)
 //!   and the backend handle; encode batches, prefill jobs and coalesced
 //!   decode batches all drain from the same job queue, so decode steps
@@ -26,8 +38,15 @@
 //!   sessions (each holding a backend KV cache), samples tokens from the
 //!   returned logits (top-k / temperature / seed), coalesces every
 //!   runnable session's next step into one decode job per tick chunk, and
-//!   evicts sessions that exceed the wall-clock budget — replying with
-//!   their partial output.
+//!   evicts sessions that stop making progress for longer than the session
+//!   timeout — replying with their partial output.
+//! * Long prompts can be prefilled in chunks (`prefill_chunk` > 0): the
+//!   scheduler interleaves each chunk with pending decode steps so one
+//!   giant prefill cannot starve other sessions' TTFT / inter-token
+//!   latency — the user-visible axis of the paper's memory-bound decode
+//!   regime (§5.2). Chunking is off by default because splitting the
+//!   prompt pass reorders float accumulation (bit-identical outputs are
+//!   part of the wire contract).
 //! * Requests are padded to the bucket length (encode only; decode steps
 //!   are single rows and need no padding). Padding waste is tracked in
 //!   [`Metrics`] (see `router.rs` for why SQA cares less).
@@ -38,7 +57,7 @@ use crate::coordinator::batcher::{DynamicBatcher, PendingBatch, TickBatcher};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::request::{
     EncodeRequest, EncodeResponse, FinishReason, GenParams, GenerateRequest, GenerateResponse,
-    Reject, TOP_K,
+    Reject, StreamEvent, TOP_K,
 };
 use crate::coordinator::router::Router;
 use crate::data::pad_to;
@@ -63,33 +82,76 @@ struct Job {
     replies: Vec<Reply>,
 }
 
-/// What a worker can be handed: an encode batch, a session prefill, or a
-/// coalesced batch of decode steps (one per session).
+/// What a worker can be handed: an encode batch, a session prefill (first
+/// chunk — creates the backend session), a prefill extension (later chunks
+/// of a chunked prompt), or a coalesced batch of decode steps.
 enum Work {
     Encode(Job),
     Prefill {
-        gen: u64,
+        id: u64,
         tokens: Vec<i32>,
         capacity: usize,
     },
-    /// `(gen id, backend session, token to append)` per item.
+    PrefillExtend {
+        id: u64,
+        sid: u64,
+        tokens: Vec<i32>,
+    },
+    /// `(request id, backend session, token to append)` per item.
     Decode { items: Vec<(u64, u64, i32)> },
 }
 
+/// Where a generation's results go: a blocking caller waiting on one
+/// terminal message, or a streaming consumer receiving every token as it
+/// is sampled (ending in exactly one `Done`).
+enum ReplySink {
+    Blocking(GenReply),
+    Stream(mpsc::Sender<StreamEvent>),
+}
+
+impl ReplySink {
+    /// Deliver the terminal result; send errors (consumer already gone)
+    /// are ignored — the session is being torn down either way.
+    fn send_done(&self, r: Result<GenerateResponse, Reject>) {
+        match self {
+            ReplySink::Blocking(tx) => {
+                let _ = tx.send(r);
+            }
+            ReplySink::Stream(tx) => {
+                let _ = tx.send(StreamEvent::Done(r));
+            }
+        }
+    }
+}
+
 /// Scheduler-bound events: new requests from clients, completions from
-/// workers. Errors travel as strings (already formatted) so the enum stays
-/// `Send` without dragging `anyhow` across threads.
+/// workers, flow-control traffic from streaming consumers, shutdown from
+/// the engine handle. Errors travel as strings (already formatted) so the
+/// enum stays `Send` without dragging `anyhow` across threads.
 enum GenEvent {
-    Request(GenerateRequest, GenReply),
+    Request(GenerateRequest, ReplySink),
     PrefillDone {
-        gen: u64,
+        id: u64,
         result: Result<(u64, Vec<f32>), String>,
+        exec_ms: f64,
+    },
+    ExtendDone {
+        id: u64,
+        result: Result<Vec<f32>, String>,
         exec_ms: f64,
     },
     DecodeDone {
         items: Vec<(u64, Result<Vec<f32>, String>)>,
         exec_ms: f64,
     },
+    /// A streaming consumer consumed one token: return its credit.
+    StreamAck { id: u64 },
+    /// A streaming consumer dropped mid-generation: free the session.
+    Cancel { id: u64 },
+    /// Engine shutdown. Explicit (not just channel disconnection) because
+    /// live [`TokenStream`]s hold sender clones that would keep the
+    /// channel open while `do_shutdown` waits on the join.
+    Shutdown,
 }
 
 struct JobQueue {
@@ -278,9 +340,10 @@ impl Engine {
                 capacity: gen_capacity,
                 max_batch: cfg.max_batch.max(1),
                 queue_cap: cfg.queue_capacity.max(1),
+                stream_credits: cfg.stream_buffer.max(1),
+                prefill_chunk: cfg.prefill_chunk,
                 active: HashMap::new(),
                 waiting: VecDeque::new(),
-                next_gen: 1,
                 defer_until: None,
             };
             threads.push(
@@ -378,19 +441,14 @@ impl Engine {
         Ok(resp)
     }
 
-    /// Blocking generation: prefill the prompt into a session, then decode
-    /// up to `params.max_tokens` tokens with top-k sampling. The engine
-    /// interleaves many sessions' decode steps per worker tick, so
-    /// concurrent `generate` calls batch against each other (and run
-    /// alongside `encode` traffic).
-    pub fn generate(
+    /// Validate a generation request and stamp it with an engine id.
+    fn gen_request(
         &self,
         tokens: Vec<u32>,
-        params: GenParams,
-    ) -> Result<GenerateResponse, Reject> {
+    ) -> Result<(&mpsc::Sender<GenEvent>, u64, Vec<u32>), Reject> {
         // Acquire for the same pairing as `encode`; the dropped generation
-        // sender (`send` → Err → Shutdown below) is the authoritative
-        // signal if this load races the flag.
+        // sender (`send` → Err → Shutdown in the caller) is the
+        // authoritative signal if this load races the flag.
         if self.shutdown.load(Ordering::Acquire) {
             return Err(Reject::Shutdown);
         }
@@ -408,16 +466,64 @@ impl Engine {
                 max: self.gen_capacity,
             });
         }
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        Ok((tx, id, tokens))
+    }
+
+    /// Blocking generation: prefill the prompt into a session, then decode
+    /// up to `params.max_tokens` tokens with top-k sampling. The engine
+    /// interleaves many sessions' decode steps per worker tick, so
+    /// concurrent `generate` calls batch against each other (and run
+    /// alongside `encode` traffic).
+    pub fn generate(
+        &self,
+        tokens: Vec<u32>,
+        params: GenParams,
+    ) -> Result<GenerateResponse, Reject> {
+        let (tx, id, tokens) = self.gen_request(tokens)?;
         let req = GenerateRequest {
-            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            id,
             tokens,
             params,
             submitted: Instant::now(),
         };
         let (rtx, rrx) = mpsc::channel();
-        tx.send(GenEvent::Request(req, rtx))
+        tx.send(GenEvent::Request(req, ReplySink::Blocking(rtx)))
             .map_err(|_| Reject::Shutdown)?;
         rrx.recv().map_err(|_| Reject::Shutdown)?
+    }
+
+    /// Streaming generation: same admission, sampling and determinism
+    /// contract as [`Engine::generate`] (token-for-token identical output
+    /// for the same prompt/params/seed), but every sampled token is
+    /// delivered on the returned [`TokenStream`] as soon as the scheduler
+    /// samples it. Flow control is credit-based: at most `stream_buffer`
+    /// tokens travel ahead of the consumer; beyond that the session's
+    /// tokens queue in the scheduler and its decode steps pause, so a slow
+    /// reader backpressures only itself. A consumer that stops reading for
+    /// longer than the session timeout is evicted; a dropped stream
+    /// cancels the generation and frees its backend session.
+    pub fn generate_stream(
+        &self,
+        tokens: Vec<u32>,
+        params: GenParams,
+    ) -> Result<TokenStream, Reject> {
+        let (tx, id, tokens) = self.gen_request(tokens)?;
+        let req = GenerateRequest {
+            id,
+            tokens,
+            params,
+            submitted: Instant::now(),
+        };
+        let (etx, erx) = mpsc::channel();
+        tx.send(GenEvent::Request(req, ReplySink::Stream(etx)))
+            .map_err(|_| Reject::Shutdown)?;
+        Ok(TokenStream {
+            rx: erx,
+            events: tx.clone(),
+            id,
+            done: false,
+        })
     }
 
     pub fn shutdown(mut self) {
@@ -435,11 +541,16 @@ impl Engine {
             return;
         }
         // Closing ingress ends the dispatcher; it pushes worker sentinels.
-        // Dropping the generation sender (workers drop their clones when
-        // they exit) ends the scheduler, which evicts live sessions.
+        // The scheduler gets an explicit Shutdown event — channel
+        // disconnection alone cannot end it, because any live TokenStream
+        // holds a sender clone for its acks and would deadlock the joins
+        // below. (Disconnection still works as a backup for the no-streams
+        // case.)
         let (closed_tx, _) = mpsc::sync_channel(1);
         let _ = std::mem::replace(&mut self.ingress, closed_tx);
-        self.gen_ingress = None;
+        if let Some(tx) = self.gen_ingress.take() {
+            let _ = tx.send(GenEvent::Shutdown);
+        }
         for t in self.threads.drain(..) {
             let _ = t.join();
         }
@@ -451,6 +562,62 @@ impl Engine {
 impl Drop for Engine {
     fn drop(&mut self) {
         self.do_shutdown();
+    }
+}
+
+/// Consumer half of a streaming generation (see
+/// [`Engine::generate_stream`]): an iterator of [`StreamEvent`]s —
+/// `Token` per sampled token, then exactly one terminal `Done` carrying
+/// the same response the blocking path returns. Each consumed token sends
+/// one flow-control credit back to the scheduler. Dropping the stream
+/// before `Done` cancels the generation and frees its backend session
+/// (KV blocks included).
+pub struct TokenStream {
+    rx: mpsc::Receiver<StreamEvent>,
+    events: mpsc::Sender<GenEvent>,
+    id: u64,
+    done: bool,
+}
+
+impl TokenStream {
+    /// Engine-assigned request id (matches `GenerateResponse::id`).
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+}
+
+impl Iterator for TokenStream {
+    type Item = StreamEvent;
+
+    fn next(&mut self) -> Option<StreamEvent> {
+        if self.done {
+            return None;
+        }
+        match self.rx.recv() {
+            Ok(StreamEvent::Token(t)) => {
+                // Consuming a token is what returns its credit — this is
+                // the entire backpressure mechanism.
+                let _ = self.events.send(GenEvent::StreamAck { id: self.id });
+                Some(StreamEvent::Token(t))
+            }
+            Ok(done @ StreamEvent::Done(_)) => {
+                self.done = true;
+                Some(done)
+            }
+            // Scheduler gone before the terminal frame: engine shutdown.
+            Err(_) => {
+                self.done = true;
+                Some(StreamEvent::Done(Err(Reject::Shutdown)))
+            }
+        }
+    }
+}
+
+impl Drop for TokenStream {
+    fn drop(&mut self) {
+        if !self.done {
+            let _ = self.events.send(GenEvent::Cancel { id: self.id });
+        }
     }
 }
 
@@ -466,9 +633,17 @@ fn dispatcher_loop(
     let mut batcher = DynamicBatcher::new(buckets, max_batch, max_wait);
     let mut replies: std::collections::HashMap<u64, Reply> = std::collections::HashMap::new();
     loop {
-        let now = Instant::now();
-        let timeout = batcher.next_deadline(now).unwrap_or(Duration::from_millis(50));
-        match ingress.recv_timeout(timeout) {
+        // Event-driven: with no batch pending there is no deadline to
+        // keep, so block until a request arrives (or the channel closes);
+        // with batches pending, sleep exactly until the oldest one's
+        // max-wait deadline.
+        let received = match batcher.next_deadline(Instant::now()) {
+            None => ingress
+                .recv()
+                .map_err(|_| mpsc::RecvTimeoutError::Disconnected),
+            Some(wait) => ingress.recv_timeout(wait),
+        };
+        match received {
             Ok((req, reply)) => {
                 // Routing was validated client-side; re-route for the bucket.
                 if let Ok(bucket) = router.route(req.tokens.len()) {
@@ -518,16 +693,32 @@ fn dispatcher_loop(
 /// Per-session generation state tracked by the scheduler.
 struct GenSession {
     req: GenerateRequest,
-    reply: GenReply,
-    /// Backend session id (`None` until prefill completes).
+    reply: ReplySink,
+    /// Backend session id (`None` until the first prefill completes).
     sid: Option<u64>,
     generated: Vec<u32>,
     rng: Pcg64,
     /// Sampled token waiting for its decode step.
     pending: Option<i32>,
-    /// A prefill/decode job for this session is in flight.
+    /// A prefill/extend/decode job for this session is in flight.
     awaiting: bool,
-    admitted: Instant,
+    /// Last time this session moved forward (admission, a prefill chunk
+    /// landing, a token sampled). The eviction clock — a session is evicted
+    /// on time-since-last-progress, NOT total age, so long-lived streams
+    /// that keep producing (or consuming) tokens are never killed mid-run.
+    last_progress: Instant,
+    /// When the previous token was sampled (inter-token latency metric).
+    last_token_at: Option<Instant>,
+    /// Submission → first sampled token, set once.
+    ttft_ms: Option<f64>,
+    /// Tokens streamed-but-unconsumed beyond the consumer's credits.
+    outbox: VecDeque<u32>,
+    /// Flow-control credits left (streaming sinks only).
+    credits: usize,
+    /// Prompt tokens the backend has absorbed so far (chunked prefill).
+    prefilled: usize,
+    /// Prompt tokens handed to an in-flight prefill/extend job.
+    prefill_sent: usize,
     queue_ms: f64,
     prefill_ms: f64,
     decode_ms: f64,
@@ -538,10 +729,13 @@ struct GenSession {
 /// report back before dispatching a smaller batch — the decode analogue of
 /// the encode batcher's max-wait deadline. Keeps staggered sessions
 /// phase-locked into shared batches instead of ping-ponging one-step jobs.
+/// The deferred dispatch is a scheduler wake-up deadline, not a poll: the
+/// run loop sleeps exactly until it (or an earlier event) fires.
 const DECODE_COALESCE_WAIT: Duration = Duration::from_millis(1);
 
 /// The continuous-batching scheduler: admission (session cap), sampling,
-/// per-tick decode coalescing, timeout eviction.
+/// per-tick decode coalescing, progress-timeout eviction, credit-based
+/// stream delivery. Purely event-driven — see the run loop.
 struct GenScheduler {
     jobq: Arc<JobQueue>,
     backend: Arc<dyn Backend>,
@@ -551,85 +745,140 @@ struct GenScheduler {
     capacity: usize,
     max_batch: usize,
     queue_cap: usize,
+    /// Tokens a streaming consumer may lag before its session pauses.
+    stream_credits: usize,
+    /// Prompt tokens per prefill job; 0 = whole prompt in one job.
+    prefill_chunk: usize,
     active: HashMap<u64, GenSession>,
-    waiting: VecDeque<(GenerateRequest, GenReply)>,
-    next_gen: u64,
+    waiting: VecDeque<(GenerateRequest, ReplySink)>,
     /// Deadline of a deferred partial dispatch (see
     /// [`DECODE_COALESCE_WAIT`]).
     defer_until: Option<Instant>,
 }
 
 impl GenScheduler {
+    /// Event loop: block until the next event or owed deadline, drain
+    /// everything queued, then run one scheduling pass. No fixed-interval
+    /// polling — an idle scheduler parks in `recv()` indefinitely.
     fn run(mut self, rx: mpsc::Receiver<GenEvent>) {
         loop {
-            // Block generously when idle; tick fast while work is in
-            // flight so sampled tokens coalesce into the next batch.
-            let idle = self.active.is_empty() && self.waiting.is_empty();
-            let timeout = Duration::from_millis(if idle { 100 } else { 1 });
-            let mut disconnected = false;
-            match rx.recv_timeout(timeout) {
-                Ok(ev) => self.handle(ev),
-                Err(mpsc::RecvTimeoutError::Timeout) => {}
-                Err(mpsc::RecvTimeoutError::Disconnected) => disconnected = true,
+            let mut stop = false;
+            match self.next_deadline() {
+                None => match rx.recv() {
+                    Ok(ev) => stop |= self.handle(ev),
+                    Err(_) => stop = true,
+                },
+                Some(deadline) => {
+                    let now = Instant::now();
+                    if deadline > now {
+                        match rx.recv_timeout(deadline - now) {
+                            Ok(ev) => stop |= self.handle(ev),
+                            Err(mpsc::RecvTimeoutError::Timeout) => {}
+                            Err(mpsc::RecvTimeoutError::Disconnected) => stop = true,
+                        }
+                    }
+                    // Deadline already due: fall through to tick, which
+                    // consumes it (dispatch or evict) — no spinning.
+                }
             }
             while let Ok(ev) = rx.try_recv() {
-                self.handle(ev);
+                stop |= self.handle(ev);
             }
-            if disconnected {
-                // Engine shut down: evict live sessions (partial replies),
-                // reject everything still waiting for a slot.
-                let ids: Vec<u64> = self.active.keys().copied().collect();
-                for id in ids {
-                    self.metrics.evicted_sessions.fetch_add(1, Ordering::Relaxed);
-                    self.finish(id, FinishReason::Evicted);
-                }
-                for (_, reply) in self.waiting.drain(..) {
-                    let _ = reply.send(Err(Reject::Shutdown));
-                }
+            if stop {
+                self.teardown();
                 return;
             }
             self.tick();
         }
     }
 
-    fn handle(&mut self, ev: GenEvent) {
+    /// Earliest instant the scheduler owes anyone an action: the deferred
+    /// decode dispatch and every idle-but-live session's progress timeout.
+    /// `None` = nothing pending, block indefinitely.
+    fn next_deadline(&self) -> Option<Instant> {
+        let mut deadline = self.defer_until;
+        for s in self.active.values() {
+            if s.awaiting || s.sid.is_none() {
+                continue; // in-flight work wakes us by completion event
+            }
+            if let Some(t) = s.last_progress.checked_add(self.timeout) {
+                deadline = Some(match deadline {
+                    Some(d) => d.min(t),
+                    None => t,
+                });
+            }
+        }
+        deadline
+    }
+
+    /// Process one event; returns `true` when the engine is shutting down.
+    fn handle(&mut self, ev: GenEvent) -> bool {
         match ev {
+            GenEvent::Shutdown => return true,
             GenEvent::Request(req, reply) => {
                 self.metrics.gen_requests.fetch_add(1, Ordering::Relaxed);
                 if self.waiting.len() >= self.queue_cap {
                     self.metrics.shed.fetch_add(1, Ordering::Relaxed);
-                    let _ = reply.send(Err(Reject::Overloaded));
+                    reply.send_done(Err(Reject::Overloaded));
                 } else {
                     self.waiting.push_back((req, reply));
                 }
             }
-            GenEvent::PrefillDone { gen, result, exec_ms } => {
-                if !self.active.contains_key(&gen) {
-                    // Session vanished (shutdown race): free the backend
-                    // session the orphaned prefill created.
+            GenEvent::StreamAck { id } => {
+                if let Some(s) = self.active.get_mut(&id) {
+                    s.credits += 1;
+                    if !drain_outbox(s) {
+                        self.abort(id);
+                    }
+                }
+            }
+            GenEvent::Cancel { id } => {
+                let before = self.waiting.len();
+                self.waiting.retain(|(r, _)| r.id != id);
+                if self.waiting.len() != before {
+                    // Never admitted: nothing to free, just count it.
+                    self.metrics
+                        .cancelled_sessions
+                        .fetch_add(1, Ordering::Relaxed);
+                } else {
+                    self.abort(id);
+                }
+            }
+            GenEvent::PrefillDone { id, result, exec_ms } => {
+                if !self.active.contains_key(&id) {
+                    // Session vanished (cancel/shutdown race): free the
+                    // backend session the orphaned prefill created.
                     if let Ok((sid, _)) = result {
                         self.backend.close_session(sid);
                     }
-                    return;
+                    return false;
                 }
                 match result {
-                    Err(e) => self.fail(gen, e),
+                    Err(e) => self.fail(id, e),
                     Ok((sid, logits)) => {
-                        let s = self.active.get_mut(&gen).unwrap();
-                        s.awaiting = false;
-                        s.prefill_ms = exec_ms;
+                        let s = self.active.get_mut(&id).unwrap();
                         s.sid = Some(sid);
-                        self.metrics
-                            .prefill_tokens
-                            .fetch_add(s.req.tokens.len() as u64, Ordering::Relaxed);
-                        if s.req.params.max_tokens == 0 {
-                            self.finish(gen, FinishReason::MaxTokens);
-                            return;
+                        if self.absorb_chunk(id, exec_ms) {
+                            self.sample_and_advance(id, &logits);
                         }
-                        let p = s.req.params;
-                        let t = sample_top_k(&logits, p.top_k, p.temperature, &mut s.rng);
-                        if let Some(reason) = accept_token(s, t) {
-                            self.finish(gen, reason);
+                    }
+                }
+            }
+            GenEvent::ExtendDone { id, result, exec_ms } => {
+                if !self.active.contains_key(&id) {
+                    return false; // cancelled/evicted while in flight
+                }
+                match result {
+                    Err(e) => {
+                        if e.contains("capacity") || e.contains("block pool") {
+                            self.finish(id, FinishReason::CacheFull);
+                        } else {
+                            self.fail(id, e);
+                        }
+                    }
+                    Ok(logits) => {
+                        if self.absorb_chunk(id, exec_ms) {
+                            self.sample_and_advance(id, &logits);
                         }
                     }
                 }
@@ -639,9 +888,9 @@ impl GenScheduler {
                     .decode_busy_us
                     .fetch_add((exec_ms * 1e3) as u64, Ordering::Relaxed);
                 let per_item_ms = exec_ms / items.len().max(1) as f64;
-                for (gen, result) in items {
-                    let Some(s) = self.active.get_mut(&gen) else {
-                        continue; // evicted while the step was in flight
+                for (id, result) in items {
+                    let Some(s) = self.active.get_mut(&id) else {
+                        continue; // cancelled/evicted while the step flew
                     };
                     s.awaiting = false;
                     s.decode_ms += per_item_ms;
@@ -654,36 +903,111 @@ impl GenScheduler {
                             // only after the backend already tried evicting
                             // idle sessions to disk.
                             if e.contains("capacity") || e.contains("block pool") {
-                                self.finish(gen, FinishReason::CacheFull);
+                                self.finish(id, FinishReason::CacheFull);
                             } else {
-                                self.fail(gen, e);
+                                self.fail(id, e);
                             }
                         }
                         Ok(logits) => {
                             self.metrics.decode_tokens.fetch_add(1, Ordering::Relaxed);
                             s.steps += 1;
-                            let p = s.req.params;
-                            let t = sample_top_k(&logits, p.top_k, p.temperature, &mut s.rng);
-                            if let Some(reason) = accept_token(s, t) {
-                                self.finish(gen, reason);
-                            }
+                            self.sample_and_advance(id, &logits);
                         }
                     }
                 }
             }
         }
+        false
     }
 
-    /// One scheduling pass: admit, evict, coalesce + dispatch decode steps.
+    /// Book-keep a landed prefill chunk. Returns `true` when the whole
+    /// prompt is absorbed and the final logits should produce a token;
+    /// `false` while more chunks remain (tick dispatches the next one —
+    /// intermediate logits are never sampled) or when the session finished
+    /// on `max_tokens == 0`.
+    fn absorb_chunk(&mut self, id: u64, exec_ms: f64) -> bool {
+        let s = self.active.get_mut(&id).unwrap();
+        s.awaiting = false;
+        s.prefill_ms += exec_ms;
+        let chunk = s.prefill_sent - s.prefilled;
+        s.prefilled = s.prefill_sent;
+        s.last_progress = Instant::now();
+        self.metrics
+            .prefill_tokens
+            .fetch_add(chunk as u64, Ordering::Relaxed);
+        if s.prefilled < s.req.tokens.len() {
+            return false;
+        }
+        if s.req.params.max_tokens == 0 {
+            self.finish(id, FinishReason::MaxTokens);
+            return false;
+        }
+        true
+    }
+
+    /// Sample the next token from `logits`, stream it to a streaming sink,
+    /// record TTFT / inter-token latency, and finish the session when a
+    /// terminal condition hits.
+    fn sample_and_advance(&mut self, id: u64, logits: &[f32]) {
+        let consumer_gone;
+        let finish_reason;
+        {
+            let Some(s) = self.active.get_mut(&id) else {
+                return;
+            };
+            let p = s.req.params;
+            let t = sample_top_k(logits, p.top_k, p.temperature, &mut s.rng);
+            let now = Instant::now();
+            if s.ttft_ms.is_none() {
+                let ttft = now.duration_since(s.req.submitted).as_secs_f64() * 1e3;
+                s.ttft_ms = Some(ttft);
+                self.metrics.record_ttft(ttft);
+            } else if let Some(prev) = s.last_token_at {
+                self.metrics
+                    .record_intertoken(now.duration_since(prev).as_secs_f64() * 1e3);
+            }
+            s.last_token_at = Some(now);
+            s.last_progress = now;
+            finish_reason = accept_token(s, t);
+            // Stream every kept token (never `<eos>` — it is not part of
+            // the output) the moment it is sampled.
+            if t != EOS && matches!(s.reply, ReplySink::Stream(_)) {
+                s.outbox.push_back(t);
+                consumer_gone = !drain_outbox(s);
+            } else {
+                consumer_gone = false;
+            }
+        }
+        if consumer_gone {
+            // The stream's receiver is gone — no ack will ever come.
+            self.abort(id);
+            return;
+        }
+        if let Some(reason) = finish_reason {
+            self.finish(id, reason);
+        }
+    }
+
+    /// One scheduling pass: admit, evict, finish full sessions, coalesce +
+    /// dispatch decode steps, then dispatch pending prefill chunks (after
+    /// decode, so a long chunked prefill yields the queue to token steps).
     fn tick(&mut self) {
-        // Admit waiting requests into free session slots (prefill jobs).
-        // Under a paged backend, admission is block-granular: a prompt that
-        // can never fit the pool is `TooLong`, while a prompt the pool could
-        // hold but can't *right now* (free + reclaimable headroom, minus
-        // blocks already promised to sessions admitted this tick) is shed
-        // with `Overloaded` — transient pressure, the client should retry.
-        // `CacheFull` stays reserved for sessions that hit their per-session
-        // length limit mid-generation.
+        self.admit_waiting();
+        self.evict_overdue();
+        self.finish_cache_full();
+        self.dispatch_decode();
+        self.dispatch_extends();
+    }
+
+    /// Admit waiting requests into free session slots (prefill jobs).
+    /// Under a paged backend, admission is block-granular: a prompt that
+    /// can never fit the pool is `TooLong`, while a prompt the pool could
+    /// hold but can't *right now* (free + reclaimable headroom, minus
+    /// blocks already promised to sessions admitted this tick) is shed
+    /// with `Overloaded` — transient pressure, the client should retry.
+    /// `CacheFull` stays reserved for sessions that hit their per-session
+    /// length limit mid-generation.
+    fn admit_waiting(&mut self) {
         let pool = self.backend.kv_pool_stats();
         let mut headroom = pool.map(|ps| ps.blocks_free + ps.blocks_reclaimable);
         while self.active.len() < self.max_sessions {
@@ -695,12 +1019,12 @@ impl GenScheduler {
                 match paged_admission(req.tokens.len(), &ps, free) {
                     Some(r @ Reject::TooLong { .. }) => {
                         self.metrics.too_long.fetch_add(1, Ordering::Relaxed);
-                        let _ = reply.send(Err(r));
+                        reply.send_done(Err(r));
                         continue;
                     }
                     Some(r) => {
                         self.metrics.shed.fetch_add(1, Ordering::Relaxed);
-                        let _ = reply.send(Err(r));
+                        reply.send_done(Err(r));
                         continue;
                     }
                     None => {}
@@ -708,20 +1032,31 @@ impl GenScheduler {
             }
             self.admit(req, reply);
         }
-        // Evict sessions over the wall-clock budget (only once their
-        // in-flight step returned — the backend close path handles the
-        // rest). Partial output still flows back to the client.
+    }
+
+    /// Evict sessions that have made no progress for longer than the
+    /// session timeout (only once their in-flight step returned — the
+    /// backend close path handles the rest). Progress = a prefill chunk
+    /// landing or a token being sampled, so a long-running stream that
+    /// keeps producing is never evicted; a stalled one (slow consumer out
+    /// of credits, or a wedged client) is. Partial output still flows back.
+    fn evict_overdue(&mut self) {
         let overdue: Vec<u64> = self
             .active
             .iter()
-            .filter(|(_, s)| !s.awaiting && s.sid.is_some() && s.admitted.elapsed() > self.timeout)
+            .filter(|(_, s)| {
+                !s.awaiting && s.sid.is_some() && s.last_progress.elapsed() > self.timeout
+            })
             .map(|(&id, _)| id)
             .collect();
         for id in overdue {
             self.metrics.evicted_sessions.fetch_add(1, Ordering::Relaxed);
             self.finish(id, FinishReason::Evicted);
         }
-        // Sessions whose next step would overflow the KV cache are done.
+    }
+
+    /// Sessions whose next step would overflow the KV cache are done.
+    fn finish_cache_full(&mut self) {
         let full: Vec<u64> = self
             .active
             .iter()
@@ -736,12 +1071,20 @@ impl GenScheduler {
         for id in full {
             self.finish(id, FinishReason::CacheFull);
         }
-        // Coalesce every runnable session's next step; chunk into at most
-        // max_batch-sized decode jobs so several workers can share a tick.
+    }
+
+    /// Coalesce every runnable session's next step; chunk into at most
+    /// max_batch-sized decode jobs so several workers can share a tick.
+    /// A streaming session with queued-but-unconsumed tokens is not
+    /// runnable — that is the backpressure: its decode pauses until the
+    /// consumer returns credits.
+    fn dispatch_decode(&mut self) {
         let ready: Vec<u64> = self
             .active
             .iter()
-            .filter(|(_, s)| !s.awaiting && s.sid.is_some() && s.pending.is_some())
+            .filter(|(_, s)| {
+                !s.awaiting && s.sid.is_some() && s.pending.is_some() && s.outbox.is_empty()
+            })
             .map(|(&id, _)| id)
             .collect();
         if ready.is_empty() {
@@ -751,7 +1094,8 @@ impl GenScheduler {
         // Partial batch while other sessions are still in flight: hold the
         // dispatch back one short window so their steps can join this
         // batch. Without this, a single worker ping-pongs one-step jobs
-        // and decode never actually batches.
+        // and decode never actually batches. The deferral is a wake-up
+        // deadline for the run loop, not a poll interval.
         if ready.len() < self.active.len() && ready.len() < self.max_batch {
             match self.defer_until {
                 None => {
@@ -775,18 +1119,51 @@ impl GenScheduler {
         }
     }
 
-    fn admit(&mut self, req: GenerateRequest, reply: GenReply) {
-        let gen = self.next_gen;
-        self.next_gen += 1;
+    /// Dispatch the next prompt chunk of every session mid-prefill.
+    /// Runs after `dispatch_decode` pushed its jobs, so with chunking on,
+    /// pending token steps always reach the job queue ahead of the next
+    /// prompt chunk — a giant prefill cannot starve decode TTFT.
+    fn dispatch_extends(&mut self) {
+        let mid_prefill: Vec<u64> = self
+            .active
+            .iter()
+            .filter(|(_, s)| !s.awaiting && s.sid.is_some() && s.prefilled < s.req.tokens.len())
+            .map(|(&id, _)| id)
+            .collect();
+        for id in mid_prefill {
+            let chunk = self.prefill_chunk.max(1);
+            let s = self.active.get_mut(&id).unwrap();
+            let end = (s.prefilled + chunk).min(s.req.tokens.len());
+            let tokens: Vec<i32> = s.req.tokens[s.prefilled..end]
+                .iter()
+                .map(|&t| t as i32)
+                .collect();
+            s.prefill_sent = end;
+            s.awaiting = true;
+            let sid = s.sid.unwrap();
+            self.jobq.push(Some(Work::PrefillExtend { id, sid, tokens }));
+        }
+    }
+
+    fn admit(&mut self, req: GenerateRequest, reply: ReplySink) {
+        let id = req.id;
         self.metrics.active_sessions.fetch_add(1, Ordering::Relaxed);
         let queue_ms = req.submitted.elapsed().as_secs_f64() * 1e3;
-        let tokens: Vec<i32> = req.tokens.iter().map(|&t| t as i32).collect();
+        // First prefill chunk; the rest of a chunked prompt follows via
+        // PrefillExtend jobs interleaved with decode.
+        let first = if self.prefill_chunk > 0 {
+            self.prefill_chunk.min(req.tokens.len())
+        } else {
+            req.tokens.len()
+        };
+        let tokens: Vec<i32> = req.tokens[..first].iter().map(|&t| t as i32).collect();
         // Seeded from the request's own seed only — NOT the engine-global
         // request id — so identical (prompt, params, seed) requests sample
         // identical continuations, as the wire contract promises.
         let rng = Pcg64::new(req.params.seed);
+        let credits = self.stream_credits;
         self.active.insert(
-            gen,
+            id,
             GenSession {
                 req,
                 reply,
@@ -795,7 +1172,13 @@ impl GenScheduler {
                 rng,
                 pending: None,
                 awaiting: true,
-                admitted: Instant::now(),
+                last_progress: Instant::now(),
+                last_token_at: None,
+                ttft_ms: None,
+                outbox: VecDeque::new(),
+                credits,
+                prefilled: 0,
+                prefill_sent: first,
                 queue_ms,
                 prefill_ms: 0.0,
                 decode_ms: 0.0,
@@ -803,15 +1186,17 @@ impl GenScheduler {
             },
         );
         self.jobq.push(Some(Work::Prefill {
-            gen,
+            id,
             tokens,
             capacity: self.capacity,
         }));
     }
 
-    /// Remove a session, free its backend KV cache and reply.
-    fn finish(&mut self, gen: u64, reason: FinishReason) {
-        let Some(s) = self.active.remove(&gen) else {
+    /// Remove a session, free its backend KV cache and reply. For a
+    /// streaming sink the outbox is flushed first, credits or not — the
+    /// closing frames of a finished stream must not wait on further acks.
+    fn finish(&mut self, id: u64, reason: FinishReason) {
+        let Some(mut s) = self.active.remove(&id) else {
             return;
         };
         let kv_bytes = s
@@ -824,7 +1209,12 @@ impl GenScheduler {
         }
         self.metrics.active_sessions.fetch_sub(1, Ordering::Relaxed);
         self.metrics.gen_responses.fetch_add(1, Ordering::Relaxed);
-        let _ = s.reply.send(Ok(GenerateResponse {
+        if let ReplySink::Stream(tx) = &s.reply {
+            while let Some(t) = s.outbox.pop_front() {
+                let _ = tx.send(StreamEvent::Token(t));
+            }
+        }
+        s.reply.send_done(Ok(GenerateResponse {
             id: s.req.id,
             prompt_len: s.req.tokens.len(),
             tokens: s.generated,
@@ -833,20 +1223,69 @@ impl GenScheduler {
             queue_ms: s.queue_ms,
             prefill_ms: s.prefill_ms,
             decode_ms: s.decode_ms,
+            ttft_ms: s.ttft_ms.unwrap_or(0.0),
             kv_bytes,
         }));
     }
 
-    fn fail(&mut self, gen: u64, msg: String) {
-        let Some(s) = self.active.remove(&gen) else {
+    fn fail(&mut self, id: u64, msg: String) {
+        let Some(s) = self.active.remove(&id) else {
             return;
         };
         if let Some(sid) = s.sid {
             self.backend.close_session(sid);
         }
         self.metrics.active_sessions.fetch_sub(1, Ordering::Relaxed);
-        let _ = s.reply.send(Err(Reject::Failed(msg)));
+        s.reply.send_done(Err(Reject::Failed(msg)));
     }
+
+    /// Tear a session down without a terminal reply: the consumer is gone
+    /// (stream dropped / receiver closed), so nobody is listening — but
+    /// the backend session and its KV blocks must still be freed.
+    fn abort(&mut self, id: u64) {
+        let Some(s) = self.active.remove(&id) else {
+            return;
+        };
+        if let Some(sid) = s.sid {
+            self.backend.close_session(sid);
+        }
+        self.metrics.active_sessions.fetch_sub(1, Ordering::Relaxed);
+        self.metrics
+            .cancelled_sessions
+            .fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Engine shutdown: evict live sessions (partial replies), reject
+    /// everything still waiting for a slot.
+    fn teardown(&mut self) {
+        let ids: Vec<u64> = self.active.keys().copied().collect();
+        for id in ids {
+            self.metrics.evicted_sessions.fetch_add(1, Ordering::Relaxed);
+            self.finish(id, FinishReason::Evicted);
+        }
+        for (_, reply) in self.waiting.drain(..) {
+            reply.send_done(Err(Reject::Shutdown));
+        }
+    }
+}
+
+/// Push queued tokens to a streaming consumer while it has credits.
+/// Returns `false` when the consumer's receiver is gone (disconnect) —
+/// the caller should abort the session. Non-streaming sinks are a no-op.
+fn drain_outbox(s: &mut GenSession) -> bool {
+    let ReplySink::Stream(tx) = &s.reply else {
+        return true;
+    };
+    while s.credits > 0 {
+        let Some(t) = s.outbox.pop_front() else {
+            break;
+        };
+        if tx.send(StreamEvent::Token(t)).is_err() {
+            return false;
+        }
+        s.credits -= 1;
+    }
+    true
 }
 
 /// Block-granular admission check for one waiting request under a paged KV
@@ -893,7 +1332,7 @@ fn worker_loop(ctx: WorkerCtx, jobq: Arc<JobQueue>, metrics: Arc<Metrics>) -> Re
         match work {
             Work::Encode(job) => encode_batch(&ctx, job, &metrics)?,
             Work::Prefill {
-                gen,
+                id,
                 tokens,
                 capacity,
             } => {
@@ -920,7 +1359,19 @@ fn worker_loop(ctx: WorkerCtx, jobq: Arc<JobQueue>, metrics: Arc<Metrics>) -> Re
                 }
                 .map_err(|e| format!("{e:#}"));
                 let _ = ctx.gen_tx.send(GenEvent::PrefillDone {
-                    gen,
+                    id,
+                    result,
+                    exec_ms: t0.elapsed().as_secs_f64() * 1e3,
+                });
+            }
+            Work::PrefillExtend { id, sid, tokens } => {
+                let t0 = Instant::now();
+                let result = ctx
+                    .backend
+                    .prefill_extend(sid, &ctx.params, &tokens)
+                    .map_err(|e| format!("{e:#}"));
+                let _ = ctx.gen_tx.send(GenEvent::ExtendDone {
+                    id,
                     result,
                     exec_ms: t0.elapsed().as_secs_f64() * 1e3,
                 });
@@ -929,9 +1380,9 @@ fn worker_loop(ctx: WorkerCtx, jobq: Arc<JobQueue>, metrics: Arc<Metrics>) -> Re
                 let t0 = Instant::now();
                 let results: Vec<(u64, Result<Vec<f32>, String>)> = items
                     .iter()
-                    .map(|&(gen, sid, tok)| {
+                    .map(|&(id, sid, tok)| {
                         (
-                            gen,
+                            id,
                             ctx.backend
                                 .decode_step(sid, &ctx.params, tok)
                                 .map_err(|e| format!("{e:#}")),

@@ -58,12 +58,20 @@ pub struct Metrics {
     /// Live generation sessions (gauge: inc on admit, dec on finish/fail,
     /// both on the single scheduler thread — Relaxed is trivially enough).
     pub active_sessions: AtomicU64,
-    /// Sessions evicted before finishing (timeout / shutdown).
+    /// Sessions evicted before finishing (progress timeout / shutdown).
     pub evicted_sessions: AtomicU64,
+    /// Streaming sessions cancelled by their consumer (stream dropped or
+    /// its receiver disconnected mid-generation).
+    pub cancelled_sessions: AtomicU64,
     /// Microseconds workers spent inside decode jobs (busy time).
     pub decode_busy_us: AtomicU64,
     latency_ms: Mutex<Summary>,
     queue_ms: Mutex<Summary>,
+    /// Submission → first sampled token, per generation (the user-visible
+    /// latency axis of the paper's §5.2 memory-bound decode regime).
+    ttft_ms: Mutex<Summary>,
+    /// Gap between consecutive sampled tokens of one session.
+    intertoken_ms: Mutex<Summary>,
 }
 
 // Manual (not derived) so the struct builds against the loom shim too:
@@ -93,15 +101,31 @@ impl Metrics {
             decode_batches: AtomicU64::new(0),
             active_sessions: AtomicU64::new(0),
             evicted_sessions: AtomicU64::new(0),
+            cancelled_sessions: AtomicU64::new(0),
             decode_busy_us: AtomicU64::new(0),
             latency_ms: Mutex::new(Summary::new()),
             queue_ms: Mutex::new(Summary::new()),
+            ttft_ms: Mutex::new(Summary::new()),
+            intertoken_ms: Mutex::new(Summary::new()),
         }
     }
 
     pub fn record_latency(&self, total_ms: f64, queue_ms: f64) {
         sync::lock(&self.latency_ms).add(total_ms);
         sync::lock(&self.queue_ms).add(queue_ms);
+    }
+
+    /// Record one generation's time-to-first-token (called by the
+    /// scheduler at the moment the first token is sampled — not when the
+    /// response is delivered, so streamed and blocking paths measure the
+    /// same instant).
+    pub fn record_ttft(&self, ms: f64) {
+        sync::lock(&self.ttft_ms).add(ms);
+    }
+
+    /// Record the gap between two consecutive sampled tokens.
+    pub fn record_intertoken(&self, ms: f64) {
+        sync::lock(&self.intertoken_ms).add(ms);
     }
 
     pub fn mean_batch_size(&self) -> f64 {
@@ -143,6 +167,8 @@ impl Metrics {
     pub fn snapshot(&self) -> Json {
         let lat = sync::lock(&self.latency_ms);
         let q = sync::lock(&self.queue_ms);
+        let ttft = sync::lock(&self.ttft_ms);
+        let itl = sync::lock(&self.intertoken_ms);
         let n = |v: &AtomicU64| Json::num(v.load(Ordering::Relaxed) as f64);
         Json::obj(vec![
             ("requests", n(&self.requests)),
@@ -163,8 +189,15 @@ impl Metrics {
             ("decode_batches", n(&self.decode_batches)),
             ("decode_steps_per_batch", Json::num(self.decode_steps_per_batch())),
             ("decode_tok_per_s", Json::num(self.decode_tok_per_s())),
+            // NaN on empty summaries — the serializer degrades non-finite
+            // to `null`, keeping `/metrics` valid JSON before traffic.
+            ("ttft_p50_ms", Json::num(ttft.p50())),
+            ("ttft_p99_ms", Json::num(ttft.p99())),
+            ("intertoken_p50_ms", Json::num(itl.p50())),
+            ("intertoken_p99_ms", Json::num(itl.p99())),
             ("active_sessions", n(&self.active_sessions)),
             ("evicted_sessions", n(&self.evicted_sessions)),
+            ("cancelled_sessions", n(&self.cancelled_sessions)),
         ])
     }
 }
@@ -192,6 +225,22 @@ mod tests {
         let parsed = crate::util::json::Json::parse(&s).unwrap();
         assert_eq!(parsed.get("latency_p50_ms").unwrap().as_f64(), Some(12.0));
         assert_eq!(parsed.get("active_sessions").unwrap().as_f64(), Some(0.0));
+        // No generations yet: the TTFT percentiles are NaN internally but
+        // must reach the wire as null, not as invalid `NaN` literals.
+        assert!(parsed.get("ttft_p50_ms").unwrap().is_null());
+        assert!(parsed.get("intertoken_p99_ms").unwrap().is_null());
+    }
+
+    #[test]
+    fn streaming_latency_summaries_surface_in_snapshot() {
+        let m = Metrics::new();
+        m.record_ttft(8.0);
+        m.record_intertoken(2.0);
+        m.cancelled_sessions.store(3, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert_eq!(s.get("ttft_p50_ms").unwrap().as_f64(), Some(8.0));
+        assert_eq!(s.get("intertoken_p50_ms").unwrap().as_f64(), Some(2.0));
+        assert_eq!(s.get("cancelled_sessions").unwrap().as_f64(), Some(3.0));
     }
 
     #[test]

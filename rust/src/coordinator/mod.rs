@@ -20,10 +20,10 @@ pub mod request;
 pub mod router;
 
 pub use batcher::{DynamicBatcher, PendingBatch, TickBatcher};
-pub use engine::{sample_top_k, top_k, Engine};
+pub use engine::{sample_top_k, top_k, Engine, TokenStream};
 pub use metrics::Metrics;
 pub use request::{
     EncodeRequest, EncodeResponse, FinishReason, GenParams, GenerateRequest, GenerateResponse,
-    Reject,
+    Reject, StreamEvent,
 };
 pub use router::Router;

@@ -105,9 +105,26 @@ pub struct GenerateResponse {
     pub prefill_ms: f64,
     /// Memory-bound token loop (where Hkv / cache size governs).
     pub decode_ms: f64,
+    /// Time-to-first-token: submission → first sampled token (0.0 when no
+    /// token was sampled). The user-visible latency axis of the paper's
+    /// memory-bound decode regime (§5.2).
+    pub ttft_ms: f64,
     /// Live KV bytes of the session at the end — one decode step's cache
     /// traffic, the §5.2 observable.
     pub kv_bytes: u64,
+}
+
+/// One event on a streaming generation: each sampled token as it lands,
+/// then exactly one terminal `Done` carrying the same [`GenerateResponse`]
+/// (or rejection) the blocking path returns. The scheduler never blocks
+/// delivering these — flow control is credit-based (see
+/// `Engine::generate_stream`).
+#[derive(Debug, Clone)]
+pub enum StreamEvent {
+    /// A sampled token (in order; `Done`'s response repeats the full list).
+    Token(u32),
+    /// Terminal event: the generation finished, failed or was rejected.
+    Done(Result<GenerateResponse, Reject>),
 }
 
 /// Why a request was rejected.

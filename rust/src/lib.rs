@@ -113,13 +113,34 @@
 //! * [`runtime::Backend`] gains `prefill` (prompt → session + logits),
 //!   `decode_step` (token → logits), `close_session` and `session_stats`;
 //! * the [`coordinator`]'s generation scheduler admits sessions (cap +
-//!   timeout eviction), samples top-k tokens, and coalesces decode steps
-//!   from many sessions into shared worker ticks (continuous batching)
-//!   alongside encode batches;
-//! * `sqa generate` / the server's `{"cmd":"generate"}` endpoint expose it
-//!   end-to-end, and `rust/benches/decode_throughput.rs` records tokens/s
-//!   and measured KV bytes/step per variant (`BENCH_decode.json`),
-//!   cross-checked against the roofline.
+//!   eviction on time since last progress), samples top-k tokens, and
+//!   coalesces decode steps from many sessions into shared worker ticks
+//!   (continuous batching) alongside encode batches. The scheduler is
+//!   **event-driven**, never a sleep-loop: it blocks on its event channel
+//!   and wakes only on (a) a new request, (b) a worker completion
+//!   (prefill / prefill-extend / decode), (c) a stream consumer ack or
+//!   cancel, (d) shutdown, or (e) the earliest *known* deadline —
+//!   soonest session progress-timeout or batch-defer expiry — computed
+//!   per iteration, so an idle engine burns no CPU and there is no fixed
+//!   polling interval anywhere on the serving path;
+//! * [`Engine::generate_stream`](coordinator::Engine::generate_stream)
+//!   delivers each sampled token as it happens over a credit flow-controlled
+//!   [`coordinator::TokenStream`] (at most `stream_buffer` tokens in
+//!   flight; a stalled consumer pauses only its own session's decode, and
+//!   a dropped stream cancels the generation and frees its KV session),
+//!   token-for-token identical to blocking [`Engine::generate`](coordinator::Engine::generate)
+//!   for the same prompt/params/seed; `serve --prefill-chunk` splits long
+//!   prompt prefills into bounded chunks so they cannot starve running
+//!   decodes or a short request's time-to-first-token on a busy worker;
+//! * `sqa generate [--stream]` / the server's `{"cmd":"generate"}`
+//!   endpoint (`"stream":true` for one frame per token — grammar in
+//!   [`server`]) expose it end-to-end;
+//!   `rust/benches/decode_throughput.rs` records tokens/s and measured
+//!   KV bytes/step per variant (`BENCH_decode.json`), cross-checked
+//!   against the roofline, and `rust/benches/latency_under_load.rs`
+//!   records consumer-side TTFT / inter-token percentiles under
+//!   concurrent streams plus the chunked-prefill starvation guard
+//!   (`BENCH_latency.json`).
 //!
 //! The invariant suite is `rust/tests/decode_differential.rs`: N-step
 //! incremental decode logits equal a full stateless re-forward to 1e-4

@@ -76,10 +76,11 @@ COMMANDS
             [--kv-dtype f32|f16|bf16]
             [--kv-block-len 0 --kv-pool-blocks 4096 --spill-dir DIR]
             [--max-sessions 4 --session-timeout-ms 30000 --gen-capacity 0
-             --conn-threads 8]
+             --conn-threads 8 --conn-idle-ms 30000 --stream-buffer 32
+             --prefill-chunk 0]
   encode    --addr 127.0.0.1:7433 (--text \"...\" | --tokens 1,2,3 | --metrics)
   generate  --addr 127.0.0.1:7433 (--text \"...\" | --tokens 1,2,3)
-            [--max-tokens 32 --top-k 5 --temperature 1.0 --seed 0]
+            [--max-tokens 32 --top-k 5 --temperature 1.0 --seed 0 --stream]
   bench     table1|table2|table3|complexity|ablation|kernels|all
             [--steps N --max-seq S --quick --out FILE.md]
   flops     --family bench --variant sqa --seq 8192 [--batch 1 --decode]
@@ -112,7 +113,16 @@ sub-quadratically (see `cargo bench --bench native_attention`).
 Generate: prompts prefill once (compute-bound, where SQA wins) into a
 per-session KV cache sized by the variant's Hkv, then decode token-by-token
 (memory-bound, where the cache size rules); concurrent generations batch
-their decode steps per worker tick. `serve --kv-dtype f16|bf16` (or
+their decode steps per scheduler wake. `generate --stream` requests one
+JSON frame per sampled token (the terminal frame carries the full summary
+incl. ttft_ms); `serve --stream-buffer N` sizes the per-session flow-control
+window (a reader more than N tokens behind pauses only its own session),
+`serve --prefill-chunk N` splits long prompts into N-token chunks
+interleaved with other sessions' decode steps (0 = whole-prompt prefill,
+bit-exact with the unchunked path), and `serve --conn-idle-ms` closes
+connections that fail to deliver a complete request line in time
+(slow-loris guard). `cargo bench --bench latency_under_load` records
+TTFT/inter-token percentiles across the zoo (BENCH_latency.json). `serve --kv-dtype f16|bf16` (or
 SQA_KV_DTYPE) stores that cache at half width — rows are narrowed on
 write and widened back to f32 on read, halving each session's resident
 bytes and per-step cache traffic while the kernels still compute in f32. Generation inherits the *server's*
@@ -198,6 +208,9 @@ fn cmd_serve(mut args: Args) -> Result<()> {
         session_timeout_ms: args.usize("session-timeout-ms", 30_000)? as u64,
         gen_capacity: args.usize("gen-capacity", 0)?,
         conn_threads: args.usize("conn-threads", 8)?,
+        conn_idle_ms: args.usize("conn-idle-ms", 30_000)? as u64,
+        stream_buffer: args.usize("stream-buffer", 32)?,
+        prefill_chunk: args.usize("prefill-chunk", 0)?,
     };
     let ckpt = args.str_opt("checkpoint");
     args.finish()?;
@@ -243,7 +256,9 @@ fn cmd_serve(mut args: Args) -> Result<()> {
         engine.gen_capacity,
         cfg.addr
     );
-    Server::bind_with(&cfg.addr, engine, cfg.conn_threads)?.serve()
+    Server::bind_with(&cfg.addr, engine, cfg.conn_threads)?
+        .with_idle_deadline(std::time::Duration::from_millis(cfg.conn_idle_ms))
+        .serve()
 }
 
 fn cmd_generate(mut args: Args) -> Result<()> {
@@ -256,15 +271,51 @@ fn cmd_generate(mut args: Args) -> Result<()> {
         temperature: args.f64("temperature", 1.0)? as f32,
         seed: args.usize("seed", 0)? as u64,
     };
+    let stream = args.bool("stream");
     args.finish()?;
     let mut client = Client::connect(&addr)?;
+    let toks: Option<Vec<u32>> = match &tokens {
+        Some(t) => Some(
+            t.split(',')
+                .map(|s| s.trim().parse().context("parsing --tokens"))
+                .collect::<Result<_>>()?,
+        ),
+        None => None,
+    };
+    if stream {
+        // Streamed path: print each token's piece as it arrives, then the
+        // terminal frame's summary line.
+        let frames = if let Some(t) = &text {
+            client.generate_stream_text(t, &params)?
+        } else if let Some(toks) = &toks {
+            client.generate_stream(toks, &params)?
+        } else {
+            bail!("need --text or --tokens");
+        };
+        let mut last = None;
+        for frame in frames {
+            let frame = frame?;
+            if frame.get("done").and_then(|d| d.as_bool()) == Some(true)
+                || frame.get("ok").and_then(|o| o.as_bool()) == Some(false)
+            {
+                last = Some(frame);
+                break;
+            }
+            if let Some(piece) = frame.get("piece").and_then(|p| p.as_str()) {
+                print!("{piece} ");
+                use std::io::Write;
+                let _ = std::io::stdout().flush();
+            }
+        }
+        println!();
+        if let Some(f) = last {
+            println!("{f}");
+        }
+        return Ok(());
+    }
     let resp = if let Some(t) = text {
         client.generate_text(&t, &params)?
-    } else if let Some(t) = tokens {
-        let toks: Vec<u32> = t
-            .split(',')
-            .map(|s| s.trim().parse().context("parsing --tokens"))
-            .collect::<Result<_>>()?;
+    } else if let Some(toks) = toks {
         client.generate_tokens(&toks, &params)?
     } else {
         bail!("need --text or --tokens");

@@ -196,6 +196,17 @@ pub trait Backend: Send + Sync {
         )
     }
 
+    /// Append a further chunk of *prompt* tokens to an existing session's
+    /// KV cache (chunked prefill): runs the chunk through the model at the
+    /// session's current length and returns the chunk's last position's
+    /// logits `[vocab]`. The scheduler uses this to interleave long
+    /// prompts with other sessions' decode steps; only the final chunk's
+    /// logits are ever sampled. Fails — leaving the session alive — when
+    /// the chunk would overflow the cache capacity.
+    fn prefill_extend(&self, _session: u64, _params: &[f32], _tokens: &[i32]) -> Result<Vec<f32>> {
+        bail!("backend {:?} has no chunked prefill path", self.name())
+    }
+
     /// One incremental decode step: append `token` to the session's cache
     /// and return the new position's logits `[vocab]` (memory-bound: the
     /// step streams the whole cache but computes only one query row).

@@ -819,6 +819,45 @@ impl Backend for NativeBackend {
         self.prefill_model(model, family, params, tokens, capacity)
     }
 
+    fn prefill_extend(&self, session: u64, params: &[f32], tokens: &[i32]) -> Result<Vec<f32>> {
+        // Same take/put_back protocol as decode_step: the Busy marker keeps
+        // a concurrent close from racing the compute. Chunks appended here
+        // are not published to the prefix trie — only the session-creating
+        // prefill chunk is (a chunked prompt's later spans depend on the
+        // session's full history, which the trie keys cannot express).
+        let mut sess = match self.sessions.take(session) {
+            Ok(s) => s,
+            Err(TakeError::Unknown) => bail!("unknown decode session {session}"),
+            Err(TakeError::Busy) => bail!("decode session {session} is mid-step"),
+        };
+        let out = (|| {
+            self.check_batch(&sess.model, params, tokens, 1, tokens.len().max(1))?;
+            // Same restore/evict/retry dance as decode_step; re-running a
+            // failed append is sound because `advance` only commits at the
+            // end and rewrites of uncommitted rows are idempotent.
+            let mut attempt = || -> Result<Vec<f32>> {
+                sess.kv.ensure_resident()?;
+                append_rows(&sess.model, params, tokens, &mut sess.kv, &self.pool)
+            };
+            match attempt() {
+                Err(e) if e.to_string().contains("block pool exhausted") => {
+                    if self.evict_idle_except(session)? == 0 {
+                        return Err(e);
+                    }
+                    attempt()
+                }
+                r => r,
+            }
+        })();
+        if out.is_ok() {
+            if let Some(rt) = &self.paged {
+                rt.touch(session);
+            }
+        }
+        self.sessions.put_back(session, sess);
+        out
+    }
+
     fn decode_step(&self, session: u64, params: &[f32], token: i32) -> Result<Vec<f32>> {
         // Take the session out of the table (leaving a Busy marker) so
         // steps for other sessions never serialize on the lock and a
@@ -1110,13 +1149,10 @@ fn prefill_row(
 }
 
 /// Prefill *from* a shared prefix: positions `0..p` are already resident
-/// (trie-adopted blocks), so only the suffix `tokens[p..]` is embedded,
-/// projected and written; its attention runs against the gathered cache
-/// through [`decode_attend`]'s chunked multi-row path (`pos0 = p`,
-/// `n_new = s - p`) — exactly the incremental decode math, batched. This
-/// is the "hit → skip prefill compute for the shared span" saving: the
-/// shared span costs zero projections, zero attention FLOPs and zero new
-/// cache bytes here.
+/// (trie-adopted blocks), so only the suffix `tokens[p..]` runs through
+/// [`append_rows`]. This is the "hit → skip prefill compute for the shared
+/// span" saving: the shared span costs zero projections, zero attention
+/// FLOPs and zero new cache bytes here.
 fn prefill_suffix(
     model: &Model,
     params: &[f32],
@@ -1125,16 +1161,42 @@ fn prefill_suffix(
     kv: &mut SessionCache,
     pool: &ThreadPool,
 ) -> Result<Vec<f32>> {
+    ensure!(p < tokens.len(), "shared prefix must leave at least one suffix token");
+    debug_assert_eq!(kv.len(), p, "cache length must match the shared prefix");
+    append_rows(model, params, &tokens[p..], kv, pool)
+}
+
+/// Run `new_tokens` through the model at the session's current length
+/// (`p = kv.len()`): embed and project only the new rows, write their K/V,
+/// and attend them against the gathered visible prefix through
+/// [`decode_attend`]'s chunked multi-row path (`pos0 = p`, `n_new = m`) —
+/// exactly the incremental decode math, batched. Returns the *last new*
+/// position's logits `[vocab]`. Backs both the trie-hit suffix prefill and
+/// [`Backend::prefill_extend`]'s chunked prompt absorption.
+fn append_rows(
+    model: &Model,
+    params: &[f32],
+    new_tokens: &[i32],
+    kv: &mut SessionCache,
+    pool: &ThreadPool,
+) -> Result<Vec<f32>> {
     let lay = &model.lay;
-    let (s, d, dh, vocab) = (tokens.len(), lay.d_model, lay.d_head, lay.vocab);
+    let (d, dh, vocab) = (lay.d_model, lay.d_head, lay.vocab);
     let (dq_cols, dkv_cols) = (lay.hq * dh, lay.hkv * dh);
     let imp = model.linalg;
-    ensure!(p < s, "shared prefix must leave at least one suffix token");
-    let m = s - p;
+    let p = kv.len();
+    let m = new_tokens.len();
+    ensure!(m > 0, "no tokens to append");
+    let s = p + m;
+    ensure!(
+        s <= kv.capacity(),
+        "appending {m} tokens overflows the session cache capacity {} ({p} resident)",
+        kv.capacity()
+    );
     let pool = Some(pool);
     let (e_off, _) = lay.embed();
     let mut x = vec![0.0f32; m * d];
-    for (i, &t) in tokens[p..].iter().enumerate() {
+    for (i, &t) in new_tokens.iter().enumerate() {
         x[i * d..(i + 1) * d]
             .copy_from_slice(&params[e_off + token_index(t, vocab) * d..][..d]);
     }

@@ -1,0 +1,172 @@
+//! Minimal blocking client for examples/tests/benches — one connection,
+//! newline-delimited JSON, call/response plus streamed generation.
+//!
+//! [`Client::generate_stream`] sends a `"stream":true` generate request and
+//! returns a [`Frames`] iterator over the reply frames (see the module doc
+//! of [`crate::server`] for the frame grammar). Dropping the iterator
+//! mid-stream leaves unread frames on the socket; the next [`Client::call`]
+//! would misparse them, so exhaust the iterator (or drop the whole client,
+//! which closes the connection and cancels the generation server-side).
+
+use crate::coordinator::GenParams;
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+/// Minimal blocking client for examples/tests/benches.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Self> {
+        let stream = TcpStream::connect(addr)?;
+        Ok(Self {
+            reader: BufReader::new(stream.try_clone()?),
+            writer: stream,
+        })
+    }
+
+    pub fn call(&mut self, req: &Json) -> Result<Json> {
+        self.writer.write_all(req.to_string().as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        self.writer.flush()?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        Json::parse(line.trim()).context("parsing server response")
+    }
+
+    pub fn encode_tokens(&mut self, tokens: &[u32]) -> Result<Json> {
+        self.call(&Json::obj(vec![(
+            "tokens",
+            Json::arr(tokens.iter().map(|&t| Json::num(t as f64))),
+        )]))
+    }
+
+    pub fn encode_text(&mut self, text: &str) -> Result<Json> {
+        self.call(&Json::obj(vec![("text", Json::str(text))]))
+    }
+
+    fn generate_req(prompt: (&str, Json), params: &GenParams) -> Json {
+        Json::obj(vec![
+            ("cmd", Json::str("generate")),
+            prompt,
+            ("max_tokens", Json::num(params.max_tokens as f64)),
+            ("top_k", Json::num(params.top_k as f64)),
+            ("temperature", Json::num(params.temperature as f64)),
+            ("seed", Json::num(params.seed as f64)),
+        ])
+    }
+
+    pub fn generate_tokens(&mut self, tokens: &[u32], params: &GenParams) -> Result<Json> {
+        let prompt = (
+            "tokens",
+            Json::arr(tokens.iter().map(|&t| Json::num(t as f64))),
+        );
+        self.call(&Self::generate_req(prompt, params))
+    }
+
+    pub fn generate_text(&mut self, text: &str, params: &GenParams) -> Result<Json> {
+        self.call(&Self::generate_req(("text", Json::str(text)), params))
+    }
+
+    /// Streamed generation from a token prompt: sends the request with
+    /// `"stream":true` and returns an iterator over the reply frames. Per
+    /// the protocol, every frame before the last has `"stream":true` and a
+    /// `token`/`piece` pair; the final frame carries `"done":true` plus the
+    /// full summary (or `"ok":false` on rejection).
+    pub fn generate_stream(
+        &mut self,
+        tokens: &[u32],
+        params: &GenParams,
+    ) -> Result<Frames<'_>> {
+        let prompt = (
+            "tokens",
+            Json::arr(tokens.iter().map(|&t| Json::num(t as f64))),
+        );
+        self.start_stream(Self::generate_req(prompt, params))
+    }
+
+    /// [`Client::generate_stream`] from text through the story tokenizer.
+    pub fn generate_stream_text(&mut self, text: &str, params: &GenParams) -> Result<Frames<'_>> {
+        self.start_stream(Self::generate_req(("text", Json::str(text)), params))
+    }
+
+    fn start_stream(&mut self, mut req: Json) -> Result<Frames<'_>> {
+        if let Json::Obj(m) = &mut req {
+            m.insert("stream".into(), Json::Bool(true));
+        }
+        self.writer.write_all(req.to_string().as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        self.writer.flush()?;
+        Ok(Frames {
+            reader: &mut self.reader,
+            done: false,
+        })
+    }
+
+    pub fn metrics(&mut self) -> Result<Json> {
+        self.call(&Json::obj(vec![("cmd", Json::str("metrics"))]))
+    }
+}
+
+/// Iterator over the frames of one streamed generation. Ends after the
+/// terminal frame (`"done":true` or `"ok":false`), on EOF (server closed
+/// the connection mid-stream), or on a parse error.
+pub struct Frames<'a> {
+    reader: &'a mut BufReader<TcpStream>,
+    done: bool,
+}
+
+impl Iterator for Frames<'_> {
+    type Item = Result<Json>;
+
+    fn next(&mut self) -> Option<Self::Item> {
+        if self.done {
+            return None;
+        }
+        let mut line = String::new();
+        loop {
+            match self.reader.read_line(&mut line) {
+                Ok(0) => {
+                    // EOF mid-stream: the server went away. Surface it as an
+                    // error so callers distinguish this from a clean finish.
+                    self.done = true;
+                    return Some(Err(anyhow::anyhow!("connection closed mid-stream")));
+                }
+                Ok(_) => break,
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                    ) =>
+                {
+                    // Token cadence is backend-paced; a read-timeout tick on
+                    // the client socket just means the next frame isn't here
+                    // yet (partial bytes stay appended across retries).
+                    continue;
+                }
+                Err(e) => {
+                    self.done = true;
+                    return Some(Err(e.into()));
+                }
+            }
+        }
+        match Json::parse(line.trim()).context("parsing stream frame") {
+            Ok(frame) => {
+                let terminal = frame.get("done").and_then(|d| d.as_bool()) == Some(true)
+                    || frame.get("ok").and_then(|o| o.as_bool()) == Some(false);
+                if terminal {
+                    self.done = true;
+                }
+                Some(Ok(frame))
+            }
+            Err(e) => {
+                self.done = true;
+                Some(Err(e))
+            }
+        }
+    }
+}

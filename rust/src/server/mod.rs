@@ -8,18 +8,38 @@
 //!                                -> {"ok":true,"tokens":[..],"text":"...",
 //!                                    "finish":"max_tokens","steps":..,
 //!                                    "prefill_ms":..,"decode_ms":..,
-//!                                    "kv_bytes":..}
+//!                                    "ttft_ms":..,"kv_bytes":..}
 //!   {"cmd": "metrics"}           -> metrics snapshot
 //!   {"cmd": "ping"}              -> {"ok":true,"pong":true}
+//!
+//! Streaming generation (`"stream": true` on a generate request) chunks
+//! the reply over the same newline framing — one frame per sampled token,
+//! then exactly one terminal frame:
+//!   {"cmd":"generate","stream":true, ...}
+//!     -> {"ok":true,"stream":true,"i":0,"token":ID,"piece":"str"}  per token
+//!     -> {"ok":true,"stream":true,"done":true, ...summary...}      terminal
+//!     -> {"ok":false,"stream":true,"done":true,"error":"..."}      rejection
+//! The terminal frame carries the same summary keys as the non-streamed
+//! response (`tokens`/`text`/`finish`/`steps`/timings), so a stream's
+//! output is byte-comparable with the blocking path's. Frames are flushed
+//! per token; engine-side credit flow control means a slow reader stalls
+//! only its own session.
 //!
 //! Connections are handled on a **bounded thread pool** (not a thread per
 //! connection): a long-running `generate` stream occupies one handler
 //! while `encode`/`metrics` clients keep being served on the others, and
 //! a connection flood degrades into shed connections instead of unbounded
 //! thread spawn. Handlers poll a read timeout so a server stop is honoured
-//! even while clients hold idle connections open.
+//! even while clients hold idle connections open, and every connection has
+//! an idle deadline: failing to deliver one complete request line within
+//! it closes the connection (slow-loris guard — see
+//! [`Server::with_idle_deadline`]).
 
-use crate::coordinator::{Engine, GenParams, Reject};
+mod client;
+
+pub use client::{Client, Frames};
+
+use crate::coordinator::{Engine, GenParams, GenerateResponse, Reject, StreamEvent};
 use crate::data::Tokenizer;
 use crate::runtime::KvPoolStats;
 use crate::util::json::Json;
@@ -29,10 +49,13 @@ use anyhow::{Context, Result};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Default connection-handler threads (see [`Server::bind_with`]).
 pub const DEFAULT_CONN_THREADS: usize = 8;
+
+/// Default per-connection idle deadline (see [`Server::with_idle_deadline`]).
+pub const DEFAULT_CONN_IDLE_MS: u64 = 30_000;
 
 pub struct Server {
     listener: TcpListener,
@@ -42,6 +65,8 @@ pub struct Server {
     /// Bounded connection-handler pool; its queue depth bounds how many
     /// accepted-but-unserved connections can wait.
     conns: ThreadPool,
+    /// Per-connection idle deadline (see [`Server::with_idle_deadline`]).
+    idle: Duration,
 }
 
 impl Server {
@@ -62,7 +87,19 @@ impl Server {
             tokenizer: Arc::new(Tokenizer::for_stories()),
             stop: Arc::new(AtomicBool::new(false)),
             conns: ThreadPool::new(conn_threads.max(1), 64),
+            idle: Duration::from_millis(DEFAULT_CONN_IDLE_MS),
         })
+    }
+
+    /// Set the per-connection idle deadline: a connection that fails to
+    /// deliver one complete request line within it is closed with a warn.
+    /// This is what keeps idle or slow-loris clients from pinning the
+    /// bounded handler pool forever — without it, `conn_threads` silent
+    /// connections would permanently shed every later client. Detection
+    /// granularity is the 200 ms read-timeout tick.
+    pub fn with_idle_deadline(mut self, idle: Duration) -> Self {
+        self.idle = idle.max(Duration::from_millis(1));
+        self
     }
 
     pub fn local_addr(&self) -> Result<std::net::SocketAddr> {
@@ -96,8 +133,9 @@ impl Server {
                     let engine = Arc::clone(&self.engine);
                     let tokenizer = Arc::clone(&self.tokenizer);
                     let stop = Arc::clone(&self.stop);
+                    let idle = self.idle;
                     let job = move || {
-                        if let Err(e) = handle_conn(stream, &engine, &tokenizer, &stop) {
+                        if let Err(e) = handle_conn(stream, &engine, &tokenizer, &stop, idle) {
                             log::debug!("connection ended: {e:#}");
                         }
                     };
@@ -133,6 +171,7 @@ fn handle_conn(
     engine: &Engine,
     tok: &Tokenizer,
     stop: &AtomicBool,
+    idle: Duration,
 ) -> Result<()> {
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut writer = stream;
@@ -141,7 +180,11 @@ fn handle_conn(
         line.clear();
         // Read one line, tolerating read-timeout ticks (partial bytes stay
         // appended to `line` across retries) so `stop` is honoured even on
-        // idle connections.
+        // idle connections. Each line gets a fresh idle deadline: a client
+        // that cannot deliver one complete request line within it — idle
+        // or trickling bytes (slow loris) — is disconnected so it stops
+        // pinning a pooled handler thread.
+        let deadline = Instant::now() + idle;
         loop {
             match reader.read_line(&mut line) {
                 Ok(0) => return Ok(()), // client closed
@@ -155,6 +198,12 @@ fn handle_conn(
                     if stop.load(Ordering::Relaxed) {
                         return Ok(());
                     }
+                    if Instant::now() >= deadline {
+                        log::warn!(
+                            "closing connection: no complete request line within {idle:?}"
+                        );
+                        return Ok(());
+                    }
                 }
                 Err(e) => return Err(e.into()),
             }
@@ -164,13 +213,28 @@ fn handle_conn(
             continue;
         }
         let response = match Json::parse(trimmed) {
-            Ok(req) => handle_request(&req, engine, tok),
+            Ok(req) => {
+                if is_stream_generate(&req) {
+                    // Streaming replies write their own frames; a write
+                    // failure propagates, dropping the TokenStream → the
+                    // engine cancels the session and frees its KV cache.
+                    handle_generate_stream(&req, engine, tok, &mut writer)?;
+                    continue;
+                }
+                handle_request(&req, engine, tok)
+            }
             Err(e) => err_json(&format!("bad json: {e}")),
         };
         writer.write_all(response.to_string().as_bytes())?;
         writer.write_all(b"\n")?;
         writer.flush()?;
     }
+}
+
+/// A generate request that asked for chunked per-token frames.
+fn is_stream_generate(req: &Json) -> bool {
+    req.get("cmd").and_then(|c| c.as_str()) == Some("generate")
+        && req.get("stream").and_then(|s| s.as_bool()) == Some(true)
 }
 
 /// Extract the prompt: explicit `tokens` win, else `text` through the
@@ -233,14 +297,9 @@ fn handle_request(req: &Json, engine: &Engine, tok: &Tokenizer) -> Json {
     }
 }
 
-fn handle_generate(req: &Json, engine: &Engine, tok: &Tokenizer) -> Json {
-    let tokens = match parse_tokens(req, tok) {
-        Ok(t) => t,
-        Err(e) => return e,
-    };
-    if tokens.is_empty() {
-        return err_json("empty prompt");
-    }
+/// Sampling knobs from a generate request (shared by the blocking and
+/// streaming paths so both honour identical defaults).
+fn gen_params_from(req: &Json) -> GenParams {
     let mut params = GenParams::default();
     if let Some(n) = req.get("max_tokens").and_then(|x| x.as_usize()) {
         params.max_tokens = n;
@@ -254,25 +313,118 @@ fn handle_generate(req: &Json, engine: &Engine, tok: &Tokenizer) -> Json {
     if let Some(s) = req.get("seed").and_then(|x| x.as_i64()) {
         params.seed = s as u64;
     }
-    match engine.generate(tokens, params) {
-        Ok(resp) => Json::obj(vec![
-            ("ok", Json::Bool(true)),
-            ("id", Json::num(resp.id as f64)),
-            ("prompt_len", Json::num(resp.prompt_len as f64)),
-            (
-                "tokens",
-                Json::arr(resp.tokens.iter().map(|&t| Json::num(t as f64))),
-            ),
-            ("text", Json::str(tok.decode(&resp.tokens))),
-            ("finish", Json::str(resp.finish.name())),
-            ("steps", Json::num(resp.steps as f64)),
-            ("queue_ms", Json::num(resp.queue_ms)),
-            ("prefill_ms", Json::num(resp.prefill_ms)),
-            ("decode_ms", Json::num(resp.decode_ms)),
-            ("kv_bytes", Json::num(resp.kv_bytes as f64)),
-        ]),
+    params
+}
+
+/// Summary keys shared by the blocking generate reply and the stream's
+/// terminal frame — one source, so the two paths cannot drift.
+fn generate_summary(resp: &GenerateResponse, tok: &Tokenizer) -> Vec<(&'static str, Json)> {
+    vec![
+        ("id", Json::num(resp.id as f64)),
+        ("prompt_len", Json::num(resp.prompt_len as f64)),
+        (
+            "tokens",
+            Json::arr(resp.tokens.iter().map(|&t| Json::num(t as f64))),
+        ),
+        ("text", Json::str(tok.decode(&resp.tokens))),
+        ("finish", Json::str(resp.finish.name())),
+        ("steps", Json::num(resp.steps as f64)),
+        ("queue_ms", Json::num(resp.queue_ms)),
+        ("prefill_ms", Json::num(resp.prefill_ms)),
+        ("decode_ms", Json::num(resp.decode_ms)),
+        ("ttft_ms", Json::num(resp.ttft_ms)),
+        ("kv_bytes", Json::num(resp.kv_bytes as f64)),
+    ]
+}
+
+fn handle_generate(req: &Json, engine: &Engine, tok: &Tokenizer) -> Json {
+    let tokens = match parse_tokens(req, tok) {
+        Ok(t) => t,
+        Err(e) => return e,
+    };
+    if tokens.is_empty() {
+        return err_json("empty prompt");
+    }
+    match engine.generate(tokens, gen_params_from(req)) {
+        Ok(resp) => {
+            let mut obj = vec![("ok", Json::Bool(true))];
+            obj.extend(generate_summary(&resp, tok));
+            Json::obj(obj)
+        }
         Err(r) => reject_json(r),
     }
+}
+
+/// Mark an error/rejection object as the terminal frame of a stream.
+fn stream_done_frame(mut obj: Json) -> Json {
+    if let Json::Obj(m) = &mut obj {
+        m.insert("stream".into(), Json::Bool(true));
+        m.insert("done".into(), Json::Bool(true));
+    }
+    obj
+}
+
+/// Streaming generate: one frame per sampled token over the same newline
+/// framing, flushed per frame, then exactly one terminal frame (see the
+/// module doc for the grammar). Returns `Err` only on a write failure —
+/// which drops the engine's [`crate::coordinator::TokenStream`] and with
+/// it cancels the generation, closing the backend session mid-stream.
+fn handle_generate_stream(
+    req: &Json,
+    engine: &Engine,
+    tok: &Tokenizer,
+    writer: &mut TcpStream,
+) -> Result<()> {
+    fn write_frame(writer: &mut TcpStream, frame: &Json) -> Result<()> {
+        writer.write_all(frame.to_string().as_bytes())?;
+        writer.write_all(b"\n")?;
+        // Per-frame flush: a token frame parked in a buffer is latency the
+        // engine already paid to avoid.
+        writer.flush()?;
+        Ok(())
+    }
+    let tokens = match parse_tokens(req, tok) {
+        Ok(t) => t,
+        Err(e) => return write_frame(writer, &stream_done_frame(e)),
+    };
+    if tokens.is_empty() {
+        return write_frame(writer, &stream_done_frame(err_json("empty prompt")));
+    }
+    let stream = match engine.generate_stream(tokens, gen_params_from(req)) {
+        Ok(s) => s,
+        Err(r) => return write_frame(writer, &stream_done_frame(reject_json(r))),
+    };
+    let mut i = 0usize;
+    for ev in stream {
+        match ev {
+            StreamEvent::Token(t) => {
+                write_frame(
+                    writer,
+                    &Json::obj(vec![
+                        ("ok", Json::Bool(true)),
+                        ("stream", Json::Bool(true)),
+                        ("i", Json::num(i as f64)),
+                        ("token", Json::num(t as f64)),
+                        ("piece", Json::str(tok.decode(&[t]))),
+                    ]),
+                )?;
+                i += 1;
+            }
+            StreamEvent::Done(Ok(resp)) => {
+                let mut obj = vec![
+                    ("ok", Json::Bool(true)),
+                    ("stream", Json::Bool(true)),
+                    ("done", Json::Bool(true)),
+                ];
+                obj.extend(generate_summary(&resp, tok));
+                return write_frame(writer, &Json::obj(obj));
+            }
+            StreamEvent::Done(Err(r)) => {
+                return write_frame(writer, &stream_done_frame(reject_json(r)));
+            }
+        }
+    }
+    Ok(())
 }
 
 /// Paged block-pool snapshot as a JSON object: occupancy gauges plus the
@@ -318,67 +470,4 @@ fn err_json(msg: &str) -> Json {
         ("ok", Json::Bool(false)),
         ("error", Json::str(msg)),
     ])
-}
-
-/// Minimal blocking client for examples/tests/benches.
-pub struct Client {
-    reader: BufReader<TcpStream>,
-    writer: TcpStream,
-}
-
-impl Client {
-    pub fn connect(addr: &str) -> Result<Self> {
-        let stream = TcpStream::connect(addr)?;
-        Ok(Self {
-            reader: BufReader::new(stream.try_clone()?),
-            writer: stream,
-        })
-    }
-
-    pub fn call(&mut self, req: &Json) -> Result<Json> {
-        self.writer.write_all(req.to_string().as_bytes())?;
-        self.writer.write_all(b"\n")?;
-        self.writer.flush()?;
-        let mut line = String::new();
-        self.reader.read_line(&mut line)?;
-        Json::parse(line.trim()).context("parsing server response")
-    }
-
-    pub fn encode_tokens(&mut self, tokens: &[u32]) -> Result<Json> {
-        self.call(&Json::obj(vec![(
-            "tokens",
-            Json::arr(tokens.iter().map(|&t| Json::num(t as f64))),
-        )]))
-    }
-
-    pub fn encode_text(&mut self, text: &str) -> Result<Json> {
-        self.call(&Json::obj(vec![("text", Json::str(text))]))
-    }
-
-    fn generate_req(prompt: (&str, Json), params: &GenParams) -> Json {
-        Json::obj(vec![
-            ("cmd", Json::str("generate")),
-            prompt,
-            ("max_tokens", Json::num(params.max_tokens as f64)),
-            ("top_k", Json::num(params.top_k as f64)),
-            ("temperature", Json::num(params.temperature as f64)),
-            ("seed", Json::num(params.seed as f64)),
-        ])
-    }
-
-    pub fn generate_tokens(&mut self, tokens: &[u32], params: &GenParams) -> Result<Json> {
-        let prompt = (
-            "tokens",
-            Json::arr(tokens.iter().map(|&t| Json::num(t as f64))),
-        );
-        self.call(&Self::generate_req(prompt, params))
-    }
-
-    pub fn generate_text(&mut self, text: &str, params: &GenParams) -> Result<Json> {
-        self.call(&Self::generate_req(("text", Json::str(text)), params))
-    }
-
-    pub fn metrics(&mut self) -> Result<Json> {
-        self.call(&Json::obj(vec![("cmd", Json::str("metrics"))]))
-    }
 }

@@ -30,6 +30,14 @@ pub fn write_bench_json(path: impl AsRef<Path>, doc: &Json) -> anyhow::Result<()
          naming the bench (writing {})",
         path.display()
     );
+    if let Some(at) = find_non_finite(doc, name) {
+        anyhow::bail!(
+            "bench report {} carries a non-finite number at {at} — a NaN/inf \
+             measurement is a bench bug (empty summary? zero-division?), not a \
+             baseline candidate",
+            path.display()
+        );
+    }
     if let Some(dir) = path.parent() {
         if !dir.as_os_str().is_empty() {
             std::fs::create_dir_all(dir)
@@ -40,6 +48,25 @@ pub fn write_bench_json(path: impl AsRef<Path>, doc: &Json) -> anyhow::Result<()
     text.push('\n');
     std::fs::write(path, text)
         .map_err(|e| anyhow::anyhow!("writing bench report {}: {e}", path.display()))
+}
+
+/// Depth-first search for a non-finite `Json::Num`; returns the JSON path
+/// of the first offender. The serializer degrades non-finite to `null`
+/// (valid JSON on the wire), but a *report* with a silent null where a
+/// timing belongs would defeat bench-check's finiteness guard — reject it
+/// at the writer instead.
+fn find_non_finite(v: &Json, path: &str) -> Option<String> {
+    match v {
+        Json::Num(n) if !n.is_finite() => Some(path.to_string()),
+        Json::Arr(a) => a
+            .iter()
+            .enumerate()
+            .find_map(|(i, x)| find_non_finite(x, &format!("{path}[{i}]"))),
+        Json::Obj(m) => m
+            .iter()
+            .find_map(|(k, x)| find_non_finite(x, &format!("{path}.{k}"))),
+        _ => None,
+    }
 }
 
 /// Result of one benchmark case.
@@ -199,6 +226,25 @@ mod tests {
         let keyless = Json::obj(vec![("rows", Json::arr(Vec::new()))]);
         assert!(write_bench_json(&path, &keyless).is_err());
         assert!(!path.exists());
+    }
+
+    #[test]
+    fn write_bench_json_rejects_non_finite_measurements() {
+        let path = std::env::temp_dir().join("sqa-bench-nan.json");
+        std::fs::remove_file(&path).ok();
+        let doc = Json::obj(vec![
+            ("bench", Json::str("unit")),
+            (
+                "rows",
+                Json::arr([Json::obj(vec![("p50_ms", Json::Num(f64::NAN))])]),
+            ),
+        ]);
+        let err = write_bench_json(&path, &doc).unwrap_err().to_string();
+        assert!(err.contains("non-finite"), "{err}");
+        assert!(err.contains("rows[0].p50_ms"), "error names the path: {err}");
+        assert!(!path.exists());
+        let inf = Json::obj(vec![("bench", Json::str("unit")), ("t", Json::Num(f64::INFINITY))]);
+        assert!(write_bench_json(&path, &inf).is_err());
     }
 
     #[test]

@@ -123,7 +123,12 @@ impl fmt::Display for Json {
             Json::Null => write!(f, "null"),
             Json::Bool(b) => write!(f, "{b}"),
             Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 1e15 {
+                // JSON has no NaN/Infinity literals — `{n}` would emit
+                // `NaN`/`inf` and corrupt the wire/report. Serialize
+                // non-finite as null (what serde_json does by default).
+                if !n.is_finite() {
+                    write!(f, "null")
+                } else if n.fract() == 0.0 && n.abs() < 1e15 {
                     write!(f, "{}", *n as i64)
                 } else {
                     write!(f, "{n}")
@@ -405,6 +410,23 @@ mod tests {
     fn escaped_output_reparses() {
         let v = Json::Str("quote \" slash \\ nl \n tab \t".into());
         assert_eq!(Json::parse(&v.to_string()).unwrap(), v);
+    }
+
+    #[test]
+    fn non_finite_numbers_serialize_as_null() {
+        // `{n}` on an f64 renders `NaN`/`inf`, which no JSON parser (ours
+        // included) accepts — non-finite must degrade to null on the wire.
+        assert_eq!(Json::Num(f64::NAN).to_string(), "null");
+        assert_eq!(Json::Num(f64::INFINITY).to_string(), "null");
+        assert_eq!(Json::Num(f64::NEG_INFINITY).to_string(), "null");
+        let v = Json::obj(vec![
+            ("p50", Json::Num(f64::NAN)),
+            ("p99", Json::num(2.5)),
+        ]);
+        let out = v.to_string();
+        let back = Json::parse(&out).expect("snapshot with NaN must stay valid JSON");
+        assert!(back.get("p50").unwrap().is_null());
+        assert_eq!(back.get("p99").unwrap().as_f64(), Some(2.5));
     }
 
     #[test]

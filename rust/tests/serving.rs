@@ -390,6 +390,322 @@ fn long_generate_does_not_block_other_connections() {
     let _ = handle.join();
 }
 
+// ---- streaming generation ---------------------------------------------------
+
+/// Drain a [`TokenStream`]: the per-token events plus the terminal summary.
+fn collect_stream(
+    stream: sqa::coordinator::TokenStream,
+) -> (Vec<u32>, sqa::coordinator::GenerateResponse) {
+    use sqa::coordinator::StreamEvent;
+    let mut toks = Vec::new();
+    let mut done = None;
+    for ev in stream {
+        match ev {
+            StreamEvent::Token(t) => toks.push(t),
+            StreamEvent::Done(r) => done = Some(r.expect("stream rejected")),
+        }
+    }
+    (toks, done.expect("stream must end with a Done event"))
+}
+
+#[test]
+fn streamed_generation_matches_blocking_token_for_token() {
+    // Streaming changes delivery, never sampling: same prompt + params +
+    // seed must produce the identical token sequence on both paths, and
+    // the per-token events must equal the terminal summary's tokens.
+    let engine = Engine::start(rt(), &cfg(), None).unwrap();
+    for (prompt, seed) in [(vec![5u32, 6, 7], 3u64), (vec![9, 10, 11, 12], 9)] {
+        let want = engine.generate(prompt.clone(), gen_params(12, seed)).unwrap();
+        let (toks, resp) = collect_stream(
+            engine.generate_stream(prompt.clone(), gen_params(12, seed)).unwrap(),
+        );
+        assert_eq!(toks, want.tokens, "streamed tokens diverge (seed {seed})");
+        assert_eq!(resp.tokens, want.tokens);
+        assert_eq!(resp.finish, want.finish);
+        assert_eq!(resp.steps, want.steps);
+        if !resp.tokens.is_empty() {
+            assert!(resp.ttft_ms > 0.0, "first token implies a TTFT sample");
+        }
+    }
+    engine.shutdown();
+}
+
+#[test]
+fn streamed_matches_blocking_across_variants() {
+    for variant in ["gqa", "xsqa"] {
+        let mut c = cfg();
+        c.variant = variant.into();
+        let engine = Engine::start(rt(), &c, None).unwrap();
+        let want = engine.generate(vec![5, 6, 7, 8], gen_params(10, 4)).unwrap();
+        let (toks, resp) = collect_stream(
+            engine.generate_stream(vec![5, 6, 7, 8], gen_params(10, 4)).unwrap(),
+        );
+        assert_eq!(toks, want.tokens, "{variant}: streamed diverges from blocking");
+        assert_eq!(resp.finish, want.finish);
+        engine.shutdown();
+    }
+}
+
+#[test]
+fn interleaved_streams_are_isolated() {
+    use sqa::coordinator::TokenStream;
+    // Two concurrent streams share scheduler wakes and decode batches but
+    // must each reproduce their solo (blocking) run exactly.
+    let mut c = cfg();
+    c.workers = 2;
+    let engine = Arc::new(Engine::start(rt(), &c, None).unwrap());
+    let want_a = engine.generate(vec![4; 8], gen_params(12, 1)).unwrap();
+    let want_b = engine.generate(vec![9; 8], gen_params(12, 2)).unwrap();
+    let spawn = |e: Arc<Engine>, prompt: Vec<u32>, seed: u64| {
+        std::thread::spawn(move || {
+            let s: TokenStream = e.generate_stream(prompt, gen_params(12, seed)).unwrap();
+            collect_stream(s)
+        })
+    };
+    let ha = spawn(Arc::clone(&engine), vec![4; 8], 1);
+    let hb = spawn(Arc::clone(&engine), vec![9; 8], 2);
+    let (ta, ra) = ha.join().unwrap();
+    let (tb, rb) = hb.join().unwrap();
+    assert_eq!(ta, want_a.tokens, "stream A leaked another session's tokens");
+    assert_eq!(tb, want_b.tokens, "stream B leaked another session's tokens");
+    assert_eq!(ra.finish, want_a.finish);
+    assert_eq!(rb.finish, want_b.finish);
+    engine.shutdown();
+}
+
+#[test]
+fn dropping_a_stream_cancels_and_frees_the_session() {
+    use sqa::coordinator::StreamEvent;
+    let ord = std::sync::atomic::Ordering::Relaxed;
+    let mut c = cfg();
+    c.max_sessions = 1;
+    c.stream_buffer = 1; // tiny credit window: the engine pauses quickly
+    let engine = Engine::start(rt(), &c, None).unwrap();
+    let drain = |e: &Engine| {
+        let t0 = std::time::Instant::now();
+        while e.metrics.active_sessions.load(ord) != 0 {
+            assert!(
+                t0.elapsed() < std::time::Duration::from_secs(10),
+                "session never freed after stream drop"
+            );
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+    };
+    // A seed whose first sample is EOS finishes instead of cancelling; try
+    // a few (deterministic per build) so one exercises mid-stream drop.
+    let mut exercised = false;
+    for seed in 1..6u64 {
+        let mut stream = engine
+            .generate_stream(vec![4, 5, 6, 7], gen_params(200, seed))
+            .unwrap();
+        let first = stream.next();
+        let mid_stream = matches!(first, Some(StreamEvent::Token(_)));
+        drop(stream); // Cancel is sent for any unfinished stream
+        drain(&engine);
+        if mid_stream {
+            assert!(
+                engine.metrics.cancelled_sessions.load(ord) >= 1,
+                "mid-stream drop must count as a cancellation"
+            );
+            exercised = true;
+            break;
+        }
+    }
+    assert!(exercised, "every seed sampled EOS first-token; cannot test cancel");
+    // With max_sessions=1 the freed slot must be immediately reusable.
+    let resp = engine.generate(vec![7, 8], gen_params(4, 2)).unwrap();
+    assert!(resp.tokens.len() <= 4);
+    engine.shutdown();
+}
+
+#[test]
+fn stream_drop_frees_paged_kv_blocks() {
+    use sqa::coordinator::StreamEvent;
+    use sqa::runtime::{NativeBackend, PagedConfig};
+    let ord = std::sync::atomic::Ordering::Relaxed;
+    let backend: Arc<dyn Backend> = Arc::new(NativeBackend::new().with_paged(Some(PagedConfig {
+        block_len: 16,
+        pool_blocks: 256,
+        spill_dir: None,
+    })));
+    let mut c = cfg();
+    c.stream_buffer = 1;
+    let engine = Engine::start(&backend, &c, None).unwrap();
+    let mut stream = engine
+        .generate_stream(vec![4, 5, 6, 7, 8, 9], gen_params(200, 1))
+        .unwrap();
+    let _ = matches!(stream.next(), Some(StreamEvent::Token(_)));
+    drop(stream);
+    let t0 = std::time::Instant::now();
+    while engine.metrics.active_sessions.load(ord) != 0 {
+        assert!(
+            t0.elapsed() < std::time::Duration::from_secs(10),
+            "paged session never freed after stream drop"
+        );
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+    // Every block is back in the pool; only trie-held (reclaimable) blocks
+    // may stay resident.
+    let ps = engine.kv_pool_stats().expect("paged backend exposes pool stats");
+    assert_eq!(
+        ps.blocks_in_use(),
+        ps.blocks_reclaimable,
+        "stream drop leaked session-held KV blocks"
+    );
+    engine.shutdown();
+}
+
+#[test]
+fn mid_stream_eviction_flushes_partial_tokens_then_done() {
+    let mut c = cfg();
+    c.session_timeout_ms = 0; // instantly over the progress budget
+    let engine = Engine::start(rt(), &c, None).unwrap();
+    let (toks, resp) = collect_stream(
+        engine.generate_stream(vec![8, 9, 10], gen_params(50, 2)).unwrap(),
+    );
+    assert!(matches!(resp.finish, FinishReason::Evicted | FinishReason::Eos));
+    assert_eq!(toks, resp.tokens, "eviction must flush the outbox before Done");
+    assert!(resp.tokens.len() <= 2, "evicted almost immediately: {resp:?}");
+    assert_eq!(
+        engine.metrics.active_sessions.load(std::sync::atomic::Ordering::Relaxed),
+        0
+    );
+    engine.shutdown();
+}
+
+#[test]
+fn stalled_stream_is_evicted_on_progress_timeout() {
+    // A reader that stops consuming exhausts its credit window; the session
+    // stops making progress and the progress budget evicts it — delivering
+    // whatever was generated instead of pinning the slot forever.
+    let mut c = cfg();
+    c.session_timeout_ms = 150;
+    c.stream_buffer = 1;
+    let engine = Engine::start(rt(), &c, None).unwrap();
+    let stream = engine.generate_stream(vec![4, 5, 6], gen_params(200, 1)).unwrap();
+    std::thread::sleep(std::time::Duration::from_millis(600));
+    let (toks, resp) = collect_stream(stream);
+    assert!(
+        matches!(resp.finish, FinishReason::Evicted | FinishReason::Eos),
+        "stalled stream should be evicted, got {:?}",
+        resp.finish
+    );
+    assert_eq!(toks, resp.tokens);
+    engine.shutdown();
+}
+
+#[test]
+fn chunked_prefill_generates_and_is_deterministic() {
+    let mut c = cfg();
+    c.prefill_chunk = 8;
+    let engine = Engine::start(rt(), &c, None).unwrap();
+    let prompt: Vec<u32> = (0..40).map(|i| 4 + (i % 50) as u32).collect();
+    let a = engine.generate(prompt.clone(), gen_params(6, 5)).unwrap();
+    assert_eq!(a.prompt_len, 40);
+    assert!(a.tokens.len() <= 6);
+    assert!(a.prefill_ms > 0.0);
+    // All 40 prompt tokens were prefilled across the 8-token chunks.
+    assert!(
+        engine.metrics.prefill_tokens.load(std::sync::atomic::Ordering::Relaxed) >= 40
+    );
+    let b = engine.generate(prompt, gen_params(6, 5)).unwrap();
+    assert_eq!(a.tokens, b.tokens, "chunked prefill must stay deterministic");
+    // A prompt no longer than one chunk takes the whole-prompt path and is
+    // bit-exact with prefill_chunk = 0.
+    let small = engine.generate(vec![5, 6, 7], gen_params(8, 3)).unwrap();
+    let unchunked = Engine::start(rt(), &cfg(), None).unwrap();
+    let want = unchunked.generate(vec![5, 6, 7], gen_params(8, 3)).unwrap();
+    assert_eq!(small.tokens, want.tokens);
+    unchunked.shutdown();
+    engine.shutdown();
+}
+
+#[test]
+fn server_streams_tokens_and_matches_blocking_reply() {
+    let engine = Engine::start(rt(), &cfg(), None).unwrap();
+    let server = Server::bind("127.0.0.1:0", engine).unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let (stop, handle) = server.serve_background();
+
+    let mut client = Client::connect(&addr).unwrap();
+    let params = gen_params(8, 7);
+    let blocking = client.generate_tokens(&[4, 5, 6], &params).unwrap();
+    assert_eq!(blocking.get("ok").unwrap().as_bool(), Some(true), "{blocking}");
+    assert!(blocking.get("ttft_ms").unwrap().as_f64().is_some());
+
+    let mut frame_toks: Vec<u32> = Vec::new();
+    let mut terminal = None;
+    for frame in client.generate_stream(&[4, 5, 6], &params).unwrap() {
+        let f = frame.unwrap();
+        assert_eq!(f.get("stream").unwrap().as_bool(), Some(true), "{f}");
+        if f.get("done").and_then(|d| d.as_bool()) == Some(true) {
+            terminal = Some(f);
+        } else {
+            assert!(f.get("piece").unwrap().as_str().is_some());
+            frame_toks.push(f.get("token").unwrap().as_f64().unwrap() as u32);
+        }
+    }
+    let term = terminal.expect("stream must end with a done frame");
+    assert_eq!(term.get("ok").unwrap().as_bool(), Some(true), "{term}");
+    let summary_toks: Vec<u32> = term
+        .get("tokens").unwrap().as_arr().unwrap()
+        .iter().map(|t| t.as_f64().unwrap() as u32).collect();
+    let blocking_toks: Vec<u32> = blocking
+        .get("tokens").unwrap().as_arr().unwrap()
+        .iter().map(|t| t.as_f64().unwrap() as u32).collect();
+    assert_eq!(frame_toks, summary_toks, "token frames diverge from the summary");
+    assert_eq!(summary_toks, blocking_toks, "streamed and blocking wire paths diverge");
+    assert!(term.get("ttft_ms").unwrap().as_f64().is_some());
+
+    // The connection is still usable for ordinary calls after a stream.
+    let pong = client.call(&Json::parse(r#"{"cmd":"ping"}"#).unwrap()).unwrap();
+    assert_eq!(pong.get("pong").unwrap().as_bool(), Some(true));
+    // A rejected stream still produces exactly one terminal frame.
+    let frames: Vec<_> = client
+        .generate_stream(&[], &params)
+        .unwrap()
+        .collect::<Result<Vec<_>, _>>()
+        .unwrap();
+    assert_eq!(frames.len(), 1, "{frames:?}");
+    assert_eq!(frames[0].get("ok").unwrap().as_bool(), Some(false));
+    assert_eq!(frames[0].get("done").unwrap().as_bool(), Some(true));
+
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    let _ = handle.join();
+}
+
+#[test]
+fn idle_connections_are_closed_at_the_deadline() {
+    let engine = Engine::start(rt(), &cfg(), None).unwrap();
+    let server = Server::bind("127.0.0.1:0", engine)
+        .unwrap()
+        .with_idle_deadline(std::time::Duration::from_millis(300));
+    let addr = server.local_addr().unwrap().to_string();
+    let (stop, handle) = server.serve_background();
+
+    use std::io::{Read, Write};
+    // Trickle half a request line and stall (slow loris): the server must
+    // close the connection at the idle deadline instead of pinning one of
+    // its pooled handler threads forever.
+    let mut loris = std::net::TcpStream::connect(&addr).unwrap();
+    loris.write_all(b"{\"cmd\":").unwrap();
+    loris.flush().unwrap();
+    loris
+        .set_read_timeout(Some(std::time::Duration::from_secs(10)))
+        .unwrap();
+    let mut buf = [0u8; 16];
+    let n = loris.read(&mut buf).unwrap();
+    assert_eq!(n, 0, "expected EOF from the idle deadline, got {n} bytes");
+
+    // A well-behaved client on the same server is unaffected.
+    let mut client = Client::connect(&addr).unwrap();
+    let pong = client.call(&Json::parse(r#"{"cmd":"ping"}"#).unwrap()).unwrap();
+    assert_eq!(pong.get("pong").unwrap().as_bool(), Some(true));
+
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    let _ = handle.join();
+}
+
 #[test]
 fn trained_params_can_be_served() {
     // Wire a trained parameter vector into the engine (the deploy path).
